@@ -1,0 +1,62 @@
+//! Quickstart: the paper's running example, end to end.
+//!
+//! Builds the University database (12 professors x 19 students, RA
+//! tuples exactly matching the paper's Table 3), computes the complete
+//! ct-table for the `Capa(P,S), RA(P,S), Salary(P,S)` pattern with the
+//! HYBRID strategy, prints it next to the paper's numbers, and scores
+//! the paper's example family `RA, Capa -> Salary` with BDeu.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use relcount::db::fixtures::{university_db, TABLE3_NEGATIVE, TABLE3_POSITIVE};
+use relcount::learn::score::bdeu_from_ct;
+use relcount::meta::rvar::RVar;
+use relcount::strategies::traits::StrategyConfig;
+use relcount::strategies::StrategyKind;
+
+fn main() -> relcount::Result<()> {
+    let db = university_db();
+    println!(
+        "University database: {} professors, {} students, {} courses, {} RA tuples\n",
+        db.population(0),
+        db.population(1),
+        db.population(2),
+        db.rels[0].len()
+    );
+
+    // The pattern of the paper's Table 3.
+    let vars = vec![
+        RVar::RelAttr { rel: 0, attr: 0 }, // Capa(P,S)
+        RVar::RelInd { rel: 0 },           // RA(P,S)
+        RVar::RelAttr { rel: 0, attr: 1 }, // Salary(P,S)
+    ];
+
+    let mut hybrid = StrategyKind::Hybrid.build(&db, StrategyConfig::default())?;
+    hybrid.prepare()?; // Algorithm 3 lines 1-3: positive pre-count
+    let ct = hybrid.ct_for_family(&vars, &[0, 1])?; // lines 5-6: Möbius
+
+    println!("complete ct-table (cf. paper Table 3):");
+    println!("{}", ct.render(&db.schema));
+
+    // Verify against the published counts.
+    assert_eq!(ct.get(&[0, 0, 0])?, TABLE3_NEGATIVE as i128);
+    for &(capa, sal, count) in TABLE3_POSITIVE {
+        assert_eq!(ct.get(&[capa, 1, sal + 1])?, count as i128);
+    }
+    println!("all 10 rows match the paper's Table 3 ✓\n");
+
+    // The paper's example family: RA(P,S), Capa(P,S) -> Salary(P,S).
+    let salary = RVar::RelAttr { rel: 0, attr: 1 };
+    let score = bdeu_from_ct(&ct, &salary, 1.0)?;
+    println!("BDeu(salary(P,S) <- RA(P,S), capability(P,S)) = {score:.4}");
+
+    let report = hybrid.report();
+    println!(
+        "\nstrategy report: {} chain JOINs, {} ct rows generated, \
+         {:.1} KiB peak ct memory",
+        report.join_stats.chain_queries,
+        report.ct_rows_generated,
+        report.peak_ct_bytes as f64 / 1024.0
+    );
+    Ok(())
+}

@@ -1,0 +1,153 @@
+//! End-to-end validation driver (DESIGN.md §5, deliverable (b)/E2E).
+//!
+//! Regenerates the paper's whole evaluation on scaled presets: for each
+//! benchmark database and each counting strategy it runs full structure
+//! learning, collects the Figure-3 timing breakdown, the Figure-4 memory
+//! peaks and the Table-5 ct-size columns, verifies that all strategies
+//! produced identical models (the Table-2 interchangeability), and prints
+//! the headline comparison.
+//!
+//! Run: `cargo run --release --example strategy_comparison`
+//! Env: RELCOUNT_SCALE (default 0.1), RELCOUNT_BUDGET_S (default 120),
+//!      RELCOUNT_PRESETS (default: the five small/medium presets; pass
+//!      `all` for the full 8 including imdb and visual_genome).
+
+use std::time::Duration;
+
+use relcount::bench::driver::{run_strategy, Workload};
+use relcount::bench::experiments::paper_rows;
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::learn::search::SearchConfig;
+use relcount::metrics::report::{
+    render_fig3, render_fig4, render_table5, RunRow, Table5Row,
+};
+use relcount::strategies::StrategyKind;
+
+fn main() -> relcount::Result<()> {
+    let scale: f64 = std::env::var("RELCOUNT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let budget = Duration::from_secs(
+        std::env::var("RELCOUNT_BUDGET_S")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(120),
+    );
+    let presets: Vec<String> = match std::env::var("RELCOUNT_PRESETS").as_deref() {
+        Ok("all") => relcount::datagen::presets::PRESET_NAMES
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+        Ok(list) => list.split(',').map(|s| s.trim().to_string()).collect(),
+        Err(_) => ["uw", "mondial", "hepatitis", "mutagenesis", "movielens"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    };
+    println!(
+        "strategy comparison: scale={scale}, budget={budget:?}, presets={presets:?}\n"
+    );
+
+    let search = SearchConfig::default();
+    let mut fig_rows: Vec<RunRow> = Vec::new();
+    let mut t5_rows: Vec<Table5Row> = Vec::new();
+
+    for name in &presets {
+        let cfg = preset(name, scale, 0)?;
+        let db = generate(&cfg)?;
+        println!(
+            "-- {name}: {} rows ({} at paper scale), {} relationships",
+            db.total_rows(),
+            paper_rows(name).unwrap_or(0),
+            db.n_relationships()
+        );
+
+        let mut models = Vec::new();
+        let mut hybrid_family_rows = 0;
+        for kind in StrategyKind::ALL {
+            let out = run_strategy(&db, name, kind, Workload::Learn(search), Some(budget))?;
+            println!(
+                "   {:<9} total {:>8.3}s  (meta {:.3} + ct+ {:.3} + ct- {:.3})  \
+                 joins {:>6}  peak {:>8.1} KiB{}",
+                kind.name(),
+                out.row.total().as_secs_f64(),
+                out.row.metadata.as_secs_f64(),
+                out.row.positive.as_secs_f64(),
+                out.row.negative.as_secs_f64(),
+                out.report.join_stats.chain_queries,
+                out.row.peak_ct_bytes as f64 / 1024.0,
+                if out.row.timed_out { "  ** TIMEOUT **" } else { "" }
+            );
+            if kind == StrategyKind::Hybrid {
+                hybrid_family_rows = out.report.ct_rows_generated;
+            }
+            if let Some(m) = out.model {
+                models.push((kind, m));
+            }
+            fig_rows.push(out.row);
+        }
+
+        // Table-2 interchangeability: identical learned models.
+        if models.len() >= 2 {
+            let (_, first) = &models[0];
+            for (kind, m) in &models[1..] {
+                assert_eq!(
+                    m.bn.parents, first.bn.parents,
+                    "{name}: {} disagrees with {}",
+                    kind.name(),
+                    models[0].0.name()
+                );
+            }
+            println!(
+                "   models identical across strategies ✓ (MP/N {:.2}, score {:.1})",
+                first.bn.mean_parents_per_node(),
+                first.total_score
+            );
+        }
+
+        // Table 5 columns.
+        let pre = run_strategy(
+            &db,
+            name,
+            StrategyKind::Precount,
+            Workload::PrepareOnly,
+            Some(budget),
+        )?;
+        t5_rows.push(Table5Row {
+            database: name.clone(),
+            ct_family_rows: hybrid_family_rows,
+            ct_database_rows: pre.report.ct_rows_generated,
+        });
+        println!();
+    }
+
+    println!("\n== Figure 3 (time breakdown) ==");
+    print!("{}", render_fig3(&fig_rows));
+    println!("\n== Figure 4 (peak ct memory) ==");
+    print!("{}", render_fig4(&fig_rows));
+    println!("\n== Table 5 (ct rows) ==");
+    print!("{}", render_table5(&t5_rows));
+
+    // Headline: HYBRID vs the others, on totals over all presets.
+    let total_of = |s: &str| -> f64 {
+        fig_rows
+            .iter()
+            .filter(|r| r.strategy == s && !r.timed_out)
+            .map(|r| r.total().as_secs_f64())
+            .sum()
+    };
+    println!("\n== headline ==");
+    for kind in StrategyKind::ALL {
+        let timeouts = fig_rows
+            .iter()
+            .filter(|r| r.strategy == kind.name() && r.timed_out)
+            .count();
+        println!(
+            "{:<9} total {:>9.3}s over completed cells, {timeouts} timeouts",
+            kind.name(),
+            total_of(kind.name())
+        );
+    }
+    Ok(())
+}

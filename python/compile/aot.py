@@ -1,0 +1,152 @@
+"""AOT lowering: JAX -> HLO *text* artifacts + manifest for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()`` / ``.serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly.  See
+/opt/xla-example/load_hlo and its README.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits one ``<name>.hlo.txt`` per entry point plus ``manifest.json``
+describing input/output shapes+dtypes, which ``rust/src/runtime`` reads at
+startup.  Python runs ONLY here; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import bdeu as bdeu_k  # noqa: E402
+from .kernels import mobius as mobius_k  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _desc(shape, dtype):
+    return {"shape": list(shape), "dtype": str(jnp.dtype(dtype).name)}
+
+
+def build_artifacts():
+    """Returns {name: (lowered, inputs_desc, outputs_desc, meta)}."""
+    d, k, e = mobius_k.D_PAD, mobius_k.K_REL, mobius_k.E_PAD
+    b, q, r = bdeu_k.B_PAD, bdeu_k.Q_PAD, bdeu_k.R_PAD
+    f64, i32 = jnp.float64, jnp.int32
+    g_shape = (d,) * k + (e,)
+    cells = d**k * e
+
+    arts = {}
+
+    # 1. Mobius Join over the dense family tensor.
+    low = jax.jit(model.complete_ct).lower(_spec(g_shape, f64))
+    arts["mobius"] = (
+        low,
+        [("g", _desc(g_shape, f64))],
+        [("complete", _desc(g_shape, f64))],
+        {"d_pad": d, "k_rel": k, "e_pad": e},
+    )
+
+    # 2. Batched BDeu (the structure-search hot path).
+    low = jax.jit(model.bdeu_scores).lower(
+        _spec((b, q, r), f64), _spec((b,), f64), _spec((b,), f64)
+    )
+    arts["bdeu_batch"] = (
+        low,
+        [
+            ("counts", _desc((b, q, r), f64)),
+            ("alpha_row", _desc((b,), f64)),
+            ("alpha_cell", _desc((b,), f64)),
+        ],
+        [("scores", _desc((b,), f64))],
+        {"b_pad": b, "q_pad": q, "r_pad": r},
+    )
+
+    # 3. Single-family BDeu (no batching latency for interactive paths).
+    low = jax.jit(model.bdeu_scores).lower(
+        _spec((1, q, r), f64), _spec((1,), f64), _spec((1,), f64)
+    )
+    arts["bdeu_one"] = (
+        low,
+        [
+            ("counts", _desc((1, q, r), f64)),
+            ("alpha_row", _desc((1,), f64)),
+            ("alpha_cell", _desc((1,), f64)),
+        ],
+        [("scores", _desc((1,), f64))],
+        {"b_pad": 1, "q_pad": q, "r_pad": r},
+    )
+
+    # 4. Fused Mobius + projection + BDeu for one family.
+    low = jax.jit(model.family_score).lower(
+        _spec(g_shape, f64),
+        _spec((cells,), i32),
+        _spec((1,), f64),
+        _spec((1,), f64),
+    )
+    arts["family_score"] = (
+        low,
+        [
+            ("g", _desc(g_shape, f64)),
+            ("seg", _desc((cells,), i32)),
+            ("alpha_row", _desc((1,), f64)),
+            ("alpha_cell", _desc((1,), f64)),
+        ],
+        [("score", _desc((1,), f64)), ("complete", _desc(g_shape, f64))],
+        {"d_pad": d, "k_rel": k, "e_pad": e, "q_pad": q, "r_pad": r},
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "artifacts": {}}
+    for name, (lowered, ins, outs, meta) in build_artifacts().items():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "inputs": [{"name": n, **d} for n, d in ins],
+            "outputs": [{"name": n, **d} for n, d in outs],
+            "meta": meta,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+# L1 Pallas kernels for relcount: the fast-Mobius butterfly and the
+# batched BDeu lgamma reduction.  Each kernel has a pure-jnp oracle in
+# ref.py; pytest/hypothesis compares them (the core correctness signal).
+from . import bdeu, mobius, ref  # noqa: F401

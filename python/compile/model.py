@@ -1,0 +1,69 @@
+"""L2: the build-time JAX compute graphs, composing the L1 kernels.
+
+Three entry points, each AOT-lowered to an HLO-text artifact by
+``aot.py`` and executed from the Rust coordinator via PJRT:
+
+- ``complete_ct``  : positive/unconstrained family tensor -> complete
+                     ct-tensor (the Mobius Join, L1 butterfly kernel).
+- ``bdeu_scores``  : batched family count matrices -> BDeu scores
+                     (L1 lgamma kernel).  This is the structure-search
+                     hot path; the Rust micro-batcher fills the B axis.
+- ``family_score`` : the fused path — Mobius Join, then projection onto
+                     a (parent-config, child-value) contingency matrix
+                     expressed as a segment-sum with a Rust-precomputed
+                     cell->segment map, then BDeu.  One PJRT round trip
+                     per family instead of two.
+
+Everything is float64: counts are exact integers up to 2^53, which covers
+the cross-product totals of the largest preset (Visual Genome) with many
+orders of magnitude to spare.  Python never runs at request time; these
+functions exist only to be lowered.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bdeu as bdeu_k
+from .kernels import mobius as mobius_k
+
+jax.config.update("jax_enable_x64", True)
+
+
+def complete_ct(g: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Mobius Join over the dense padded family tensor (see kernels.ref)."""
+    return (mobius_k.mobius_pallas(g),)
+
+
+def bdeu_scores(
+    counts: jnp.ndarray, alpha_row: jnp.ndarray, alpha_cell: jnp.ndarray
+) -> tuple[jnp.ndarray]:
+    """Batched BDeu family scores (structure prior added in Rust)."""
+    return (bdeu_k.bdeu_pallas(counts, alpha_row, alpha_cell),)
+
+
+def family_score(
+    g: jnp.ndarray,
+    seg: jnp.ndarray,
+    alpha_row: jnp.ndarray,
+    alpha_cell: jnp.ndarray,
+    *,
+    q_pad: int = bdeu_k.Q_PAD,
+    r_pad: int = bdeu_k.R_PAD,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Mobius Join + projection + BDeu for one family.
+
+    g         : [D,..,D,E] float64 positive/unconstrained tensor
+    seg       : [prod(g.shape)] int32 — for each cell of the *complete*
+                tensor, its flattened (j*r_pad + k) contingency slot, or
+                q_pad*r_pad for cells outside the family (padding).
+    alpha_row : [1] float64, alpha_cell : [1] float64
+    returns   : (score [1], complete ct-tensor [D,..,D,E])
+    """
+    complete = mobius_k.mobius_pallas(g)
+    flat = complete.reshape(-1)
+    qr = jax.ops.segment_sum(flat, seg, num_segments=q_pad * r_pad + 1)
+    counts = qr[: q_pad * r_pad].reshape(1, q_pad, r_pad)
+    score = bdeu_k.bdeu_pallas(counts, alpha_row, alpha_cell)
+    return (score, complete)

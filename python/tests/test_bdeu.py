@@ -1,0 +1,132 @@
+"""BDeu Pallas kernel vs references (Equation 1 of the paper)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import bdeu, ref
+
+
+def rand_family(rng, q, r, max_count=60, sparsity=0.3):
+    c = rng.integers(0, max_count, size=(q, r)).astype(np.float64)
+    mask = rng.random(size=(q, r)) < sparsity
+    c[mask] = 0.0
+    return c
+
+
+# ---------------------------------------------------------------------------
+# kernel vs references
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,q,r", [(1, 4, 2), (3, 8, 3), (8, 16, 5), (64, 256, 16)])
+def test_pallas_matches_refs(b, q, r):
+    rng = np.random.default_rng(0)
+    counts = np.stack([rand_family(rng, q, r) for _ in range(b)])
+    ar = rng.uniform(0.05, 3.0, b)
+    ac = ar / r
+    got = np.asarray(bdeu.bdeu_pallas(jnp.asarray(counts), jnp.asarray(ar), jnp.asarray(ac)))
+    want = np.asarray(ref.bdeu_ref(counts, ar, ac))
+    scalar = np.array(
+        [ref.bdeu_scalar_ref(counts[i], ar[i], ac[i]) for i in range(b)]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+    np.testing.assert_allclose(got, scalar, rtol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31),
+    b=st.integers(1, 6),
+    q=st.integers(1, 20),
+    r=st.integers(2, 8),
+    n_prime=st.floats(0.5, 10.0),
+)
+def test_hypothesis_sweep(seed, b, q, r, n_prime):
+    rng = np.random.default_rng(seed)
+    counts = np.stack([rand_family(rng, q, r) for _ in range(b)])
+    ar = np.full(b, n_prime / q)
+    ac = np.full(b, n_prime / (q * r))
+    got = np.asarray(bdeu.bdeu_pallas(jnp.asarray(counts), jnp.asarray(ar), jnp.asarray(ac)))
+    scalar = np.array(
+        [ref.bdeu_scalar_ref(counts[i], ar[i], ac[i]) for i in range(b)]
+    )
+    np.testing.assert_allclose(got, scalar, rtol=1e-9, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# padding exactness — what lets Rust use fixed [Q_PAD, R_PAD] artifacts
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31), q=st.integers(1, 10), r=st.integers(2, 6))
+def test_padding_is_exact(seed, q, r):
+    """Zero-padding Q and R must not change the score: the true q_i, r_i
+    enter only through the alpha scalars."""
+    rng = np.random.default_rng(seed)
+    c = rand_family(rng, q, r)
+    ar = np.array([1.0 / q])
+    ac = np.array([1.0 / (q * r)])
+    base = np.asarray(
+        bdeu.bdeu_pallas(jnp.asarray(c[None]), jnp.asarray(ar), jnp.asarray(ac))
+    )[0]
+    qp, rp = q + 7, r + 5
+    cp = np.zeros((1, qp, rp))
+    cp[0, :q, :r] = c
+    padded = np.asarray(
+        bdeu.bdeu_pallas(jnp.asarray(cp), jnp.asarray(ar), jnp.asarray(ac))
+    )[0]
+    assert padded == pytest.approx(base, rel=1e-12)
+
+
+def test_known_value_uniform():
+    """Hand-derivable case: one parent config (q=1), r=2, N' = 1,
+    counts [a, b].  Score = lgamma(1) - lgamma(a+b+1)
+    + lgamma(a+0.5) - lgamma(0.5) + lgamma(b+0.5) - lgamma(0.5)."""
+    a, b_ = 3.0, 2.0
+    want = (
+        math.lgamma(1.0)
+        - math.lgamma(a + b_ + 1.0)
+        + math.lgamma(a + 0.5)
+        - math.lgamma(0.5)
+        + math.lgamma(b_ + 0.5)
+        - math.lgamma(0.5)
+    )
+    got = np.asarray(
+        bdeu.bdeu_pallas(
+            jnp.asarray([[[a, b_]]]), jnp.asarray([1.0]), jnp.asarray([0.5])
+        )
+    )[0]
+    assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_empty_family_scores_zero():
+    got = np.asarray(
+        bdeu.bdeu_pallas(
+            jnp.zeros((1, 8, 4)), jnp.asarray([0.25]), jnp.asarray([0.0625])
+        )
+    )[0]
+    assert got == 0.0
+
+
+def test_score_decreases_with_data():
+    """More data -> lower (more negative) raw log marginal likelihood."""
+    c1 = jnp.asarray([[[5.0, 5.0]]])
+    c2 = jnp.asarray([[[50.0, 50.0]]])
+    ar = jnp.asarray([1.0])
+    ac = jnp.asarray([0.5])
+    s1 = float(bdeu.bdeu_pallas(c1, ar, ac)[0])
+    s2 = float(bdeu.bdeu_pallas(c2, ar, ac)[0])
+    assert s2 < s1 < 0.0
+
+
+def test_alphas_for():
+    ar, ac = bdeu.alphas_for(jnp.asarray([4.0]), jnp.asarray([2.0]), n_prime=8.0)
+    assert float(ar[0]) == pytest.approx(2.0)
+    assert float(ac[0]) == pytest.approx(1.0)

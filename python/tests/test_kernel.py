@@ -1,0 +1,131 @@
+"""Model-level (L2) and artifact-level (AOT) tests.
+
+test_mobius.py / test_bdeu.py validate the L1 kernels against oracles;
+here we validate the composed graphs that actually get lowered, and the
+manifest contract the Rust runtime depends on.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import bdeu as bdeu_k
+from compile.kernels import mobius as mobius_k
+from compile.kernels import ref
+
+
+def small_family():
+    """A tiny family in the full artifact layout: 1 real rel axis with 2
+    attr slots, 2 entity-attr configs; rest padding."""
+    d, k, e = mobius_k.D_PAD, mobius_k.K_REL, mobius_k.E_PAD
+    g = np.zeros((d,) * k + (e,))
+    rng = np.random.default_rng(0)
+    g[0, 0, 0, :2] = rng.integers(20, 40, 2)  # unconstrained totals
+    g[1:3, 0, 0, :2] = rng.integers(0, 10, (2, 2))  # true counts
+    return jnp.asarray(g)
+
+
+def test_complete_ct_composition():
+    g = small_family()
+    (got,) = model.complete_ct(g)
+    want = ref.mobius_ref(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=0)
+
+
+def test_family_score_fused_matches_pieces():
+    """family_score == mobius -> segment projection -> bdeu, done by hand."""
+    g = small_family()
+    d, k, e = mobius_k.D_PAD, mobius_k.K_REL, mobius_k.E_PAD
+    q_pad, r_pad = bdeu_k.Q_PAD, bdeu_k.R_PAD
+    cells = d**k * e
+
+    # family: parent = rel indicator (F/T -> j in {0,1}), child = entity
+    # attr (2 values -> k in {0,1}); everything else -> dump slot.
+    seg = np.full(cells, q_pad * r_pad, dtype=np.int32)
+    gshape = (d,) * k + (e,)
+    for d0 in range(3):  # slot 0 = false, slots 1,2 = true
+        j = 0 if d0 == 0 else 1
+        for ev in range(2):
+            flat_idx = np.ravel_multi_index((d0, 0, 0, ev), gshape)
+            seg[flat_idx] = j * r_pad + ev
+
+    ar = jnp.asarray([0.5])  # N'=1, q=2
+    ac = jnp.asarray([0.25])
+    score, complete = model.family_score(g, jnp.asarray(seg), ar, ac)
+
+    # by hand
+    comp = np.asarray(ref.mobius_ref(g))
+    counts = np.zeros((2, 2))
+    for d0 in range(3):
+        j = 0 if d0 == 0 else 1
+        for ev in range(2):
+            counts[j, ev] += comp[d0, 0, 0, ev]
+    want = ref.bdeu_scalar_ref(counts, 0.5, 0.25)
+    assert float(score[0]) == pytest.approx(want, rel=1e-12)
+    np.testing.assert_allclose(np.asarray(complete), comp, rtol=0)
+
+
+def test_family_score_dump_slot_discards_padding():
+    """Cells mapped to the dump segment must not affect the score."""
+    g = small_family()
+    d, k, e = mobius_k.D_PAD, mobius_k.K_REL, mobius_k.E_PAD
+    cells = d**k * e
+    seg = np.full(cells, bdeu_k.Q_PAD * bdeu_k.R_PAD, dtype=np.int32)
+    score, _ = model.family_score(
+        g, jnp.asarray(seg), jnp.asarray([1.0]), jnp.asarray([0.5])
+    )
+    assert float(score[0]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# AOT artifacts
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_text_lowering_roundtrip():
+    """Every artifact lowers to parseable-looking HLO text with an ENTRY."""
+    arts = aot.build_artifacts()
+    assert set(arts) == {"mobius", "bdeu_batch", "bdeu_one", "family_score"}
+    for name, (lowered, ins, outs, meta) in arts.items():
+        text = aot.to_hlo_text(lowered)
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        assert len(ins) >= 1 and len(outs) >= 1
+
+
+def test_lowering_is_deterministic():
+    a1 = aot.build_artifacts()
+    a2 = aot.build_artifacts()
+    for name in a1:
+        t1 = aot.to_hlo_text(a1[name][0])
+        t2 = aot.to_hlo_text(a2[name][0])
+        assert t1 == t2, f"{name} lowering not deterministic"
+
+
+def test_manifest_matches_checked_in_artifacts():
+    """If `make artifacts` has run, the manifest must describe the files."""
+    art_dir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(art_dir, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == "hlo-text"
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(art_dir, entry["file"])
+        assert os.path.exists(path), name
+        for io in entry["inputs"] + entry["outputs"]:
+            assert io["dtype"] in ("float64", "int32")
+            assert all(s > 0 for s in io["shape"])
+
+
+def test_x64_enabled():
+    """Counts must be f64: f32 loses exactness beyond 2^24 groundings."""
+    assert jax.config.jax_enable_x64
+    assert jnp.asarray(1.0).dtype == jnp.float64

@@ -1,0 +1,75 @@
+//! Figure 3: ct-table construction time for PRECOUNT / ONDEMAND / HYBRID
+//! on all 8 benchmark presets, broken into the MetaData / positive ct /
+//! negative ct components, under a wall-clock budget per cell (the
+//! paper's 100-minute Slurm limit, scaled).
+//!
+//! Environment knobs: RELCOUNT_SCALE (default 0.1), RELCOUNT_BUDGET_S
+//! (default 120), RELCOUNT_PRESETS (comma list, default all 8),
+//! RELCOUNT_SEED.
+
+use relcount::bench::experiments::{fig3_fig4_rows, ExpConfig};
+use relcount::datagen::presets::PRESET_NAMES;
+use relcount::learn::search::SearchConfig;
+use relcount::metrics::report::render_fig3;
+use std::time::Duration;
+
+pub fn config_from_env() -> ExpConfig {
+    let scale = std::env::var("RELCOUNT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1);
+    let budget = std::env::var("RELCOUNT_BUDGET_S")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120u64);
+    let seed = std::env::var("RELCOUNT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0u64);
+    let presets: &'static [&'static str] = match std::env::var("RELCOUNT_PRESETS") {
+        Ok(list) => Box::leak(
+            list.split(',')
+                .map(|s| &*Box::leak(s.trim().to_string().into_boxed_str()))
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+        ),
+        Err(_) => &PRESET_NAMES,
+    };
+    ExpConfig {
+        scale,
+        budget: Some(Duration::from_secs(budget)),
+        seed,
+        search: SearchConfig::default(),
+        presets,
+    }
+}
+
+#[allow(dead_code)]
+fn main() {
+    let cfg = config_from_env();
+    eprintln!(
+        "fig3: scale={} budget={:?} presets={:?}",
+        cfg.scale, cfg.budget, cfg.presets
+    );
+    let rows = fig3_fig4_rows(&cfg).expect("fig3 rows");
+    println!("== Figure 3: ct-table construction time breakdown ==");
+    print!("{}", render_fig3(&rows));
+    // the paper's qualitative claims, as machine-checked notes
+    let slowest_per_db = |db: &str| {
+        rows.iter()
+            .filter(|r| r.database == db && !r.timed_out)
+            .max_by_key(|r| r.total())
+            .map(|r| r.strategy.clone())
+    };
+    for p in cfg.presets {
+        if let Some(s) = slowest_per_db(p) {
+            println!("# slowest on {p}: {s}");
+        }
+        for r in rows.iter().filter(|r| r.database == *p && r.timed_out) {
+            println!(
+                "# {} timed out on {p} (the paper's ONDEMAND failure mode)",
+                r.strategy
+            );
+        }
+    }
+}

@@ -1,0 +1,34 @@
+//! Figure 4: peak ct-table memory for the three strategies on all
+//! presets (exact byte accounting of live ct-tables/caches, plus VmHWM
+//! for an end-to-end number).  Same env knobs as fig3.
+
+#[path = "fig3.rs"]
+mod fig3_cfg;
+
+use relcount::bench::experiments::fig3_fig4_rows;
+use relcount::metrics::memory::vm_hwm_kb;
+use relcount::metrics::report::render_fig4;
+
+fn main() {
+    let cfg = fig3_cfg::config_from_env();
+    eprintln!(
+        "fig4: scale={} budget={:?} presets={:?}",
+        cfg.scale, cfg.budget, cfg.presets
+    );
+    let rows = fig3_fig4_rows(&cfg).expect("fig4 rows");
+    println!("== Figure 4: peak ct-table memory ==");
+    print!("{}", render_fig4(&rows));
+    // paper claim: PRECOUNT is generally the most memory-intensive
+    for p in cfg.presets {
+        let max = rows
+            .iter()
+            .filter(|r| r.database == *p && !r.timed_out)
+            .max_by_key(|r| r.peak_ct_bytes);
+        if let Some(r) = max {
+            println!("# most memory on {p}: {}", r.strategy);
+        }
+    }
+    if let Some(kb) = vm_hwm_kb() {
+        println!("# process VmHWM: {:.1} MiB", kb as f64 / 1024.0);
+    }
+}

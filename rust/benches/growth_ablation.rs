@@ -1,0 +1,80 @@
+//! Equations 3 & 4: ct-table growth rates.
+//!
+//! Eq. 3 (PRECOUNT): the global ct-table grows as O(V^C) in the number
+//! of columns C.  Eq. 4 (ONDEMAND/HYBRID): the family tables grow only
+//! with the family size k.  We sweep the number of entity attributes and
+//! report the complete-lattice rows (PRECOUNT side) vs the sum of family
+//! table rows for a fixed max-parents search workload (HYBRID side).
+
+use relcount::bench::driver::{run_strategy, Workload};
+use relcount::datagen::config::{EntitySpec, GenConfig, RelSpec};
+use relcount::datagen::generator::generate;
+use relcount::learn::search::SearchConfig;
+use relcount::strategies::StrategyKind;
+
+fn db_with_columns(n_attrs: usize, seed: u64) -> relcount::db::Database {
+    let attrs = |prefix: &str| {
+        (0..n_attrs)
+            .map(|i| (format!("{prefix}{i}"), 3u32))
+            .collect::<Vec<_>>()
+    };
+    let cfg = GenConfig {
+        name: format!("cols{n_attrs}"),
+        entities: vec![
+            EntitySpec { name: "A".into(), n: 300, attrs: attrs("a") },
+            EntitySpec { name: "B".into(), n: 300, attrs: attrs("b") },
+        ],
+        rels: vec![RelSpec {
+            name: "R".into(),
+            from: 0,
+            to: 1,
+            attrs: vec![("u".into(), 3)],
+            n_links: 1200,
+        }],
+        seed,
+        correlated: false,
+    };
+    generate(&cfg).unwrap()
+}
+
+fn main() {
+    println!("== Eq. 3/4 ablation: ct rows vs number of columns ==");
+    println!(
+        "{:<8} {:>20} {:>22} {:>10}",
+        "attrs", "precount_ct_rows", "hybrid_family_rows", "ratio"
+    );
+    for n_attrs in [1usize, 2, 3, 4, 5] {
+        let db = db_with_columns(n_attrs, n_attrs as u64);
+        let pre = run_strategy(
+            &db,
+            "ablation",
+            StrategyKind::Precount,
+            Workload::PrepareOnly,
+            None,
+        )
+        .unwrap();
+        let hyb = run_strategy(
+            &db,
+            "ablation",
+            StrategyKind::Hybrid,
+            Workload::Learn(SearchConfig {
+                max_parents: 3,
+                max_ops_per_point: 60,
+                ..Default::default()
+            }),
+            None,
+        )
+        .unwrap();
+        let p = pre.report.ct_rows_generated.max(1);
+        let h = hyb.report.ct_rows_generated.max(1);
+        println!(
+            "{:<8} {:>20} {:>22} {:>10.2}",
+            2 * n_attrs,
+            p,
+            h,
+            p as f64 / h as f64
+        );
+    }
+    println!("# Eq. 3: the PRECOUNT column grows exponentially with attrs;");
+    println!("# Eq. 4: the family-table column grows with family size only.");
+}

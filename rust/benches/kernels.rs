@@ -1,0 +1,96 @@
+//! Hot-path kernel ablation: the Pallas/XLA artifacts vs the pure-Rust
+//! twins, and the value of micro-batching BDeu dispatches.
+//!
+//! - mobius: dense butterfly, Rust loop vs `mobius` XLA artifact
+//! - bdeu:   per-family dispatch (`bdeu_one`-shaped) vs batched
+//!           (`bdeu_batch` with B families per PJRT call) vs pure Rust
+//!
+//! Requires `make artifacts` (skips with a notice otherwise).
+
+use relcount::ct::dense::mobius_dense;
+use relcount::learn::score::ln_gamma;
+use relcount::runtime::batcher::{FamilyCounts, ScoreBatcher};
+use relcount::runtime::client::Runtime;
+use relcount::util::bench::{bench, render};
+use relcount::util::rng::Rng;
+
+fn main() {
+    let dir = relcount::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("kernels bench skipped: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    let mut ms = Vec::new();
+
+    // ---- mobius ---------------------------------------------------------
+    let spec = rt.manifest.artifact("mobius").unwrap();
+    let d = spec.meta_dim("d_pad").unwrap();
+    let k = spec.meta_dim("k_rel").unwrap();
+    let e = spec.meta_dim("e_pad").unwrap();
+    let len = d.pow(k as u32) * e;
+    let mut rng = Rng::new(1);
+    let g: Vec<f64> = (0..len).map(|_| rng.gen_range(1000) as f64).collect();
+
+    ms.push(bench("mobius_rust_dense", 2, 20, || {
+        let mut t = g.clone();
+        mobius_dense(&mut t, d, k, e);
+        t
+    }));
+    ms.push(bench("mobius_xla_artifact", 2, 20, || rt.mobius(&g).unwrap()));
+
+    // ---- bdeu -----------------------------------------------------------
+    let mut batcher = ScoreBatcher::new(&rt).unwrap();
+    let b = batcher.batch_size();
+    let reqs: Vec<FamilyCounts> = (0..b)
+        .map(|i| {
+            let q = 24;
+            let r = 6;
+            let mut rng = Rng::new(i as u64);
+            FamilyCounts {
+                counts: (0..q * r).map(|_| rng.gen_range(60) as f64).collect(),
+                q,
+                r,
+                n_prime: 1.0,
+            }
+        })
+        .collect();
+
+    ms.push(bench(&format!("bdeu_rust_scalar_x{b}"), 2, 30, || {
+        let mut total = 0.0;
+        for req in &reqs {
+            let ar = req.alpha_row();
+            let ac = req.alpha_cell();
+            for j in 0..req.q {
+                let row = &req.counts[j * req.r..(j + 1) * req.r];
+                let nij: f64 = row.iter().sum();
+                if nij > 0.0 {
+                    total += ln_gamma(ar) - ln_gamma(nij + ar);
+                    for &c in row {
+                        if c > 0.0 {
+                            total += ln_gamma(c + ac) - ln_gamma(ac);
+                        }
+                    }
+                }
+            }
+        }
+        total
+    }));
+    ms.push(bench(&format!("bdeu_xla_batched_x{b}"), 2, 30, || {
+        batcher.score_all(&reqs).unwrap()
+    }));
+    // one-at-a-time dispatches (what a naive integration would do)
+    let one = &reqs[..1];
+    ms.push(bench("bdeu_xla_one_dispatch", 2, 30, || {
+        batcher.score_all(one).unwrap()
+    }));
+
+    print!("{}", render("kernels", &ms));
+    let batched = ms.iter().find(|m| m.name.starts_with("bdeu_xla_batched")).unwrap();
+    let single = ms.iter().find(|m| m.name == "bdeu_xla_one_dispatch").unwrap();
+    println!(
+        "# batching amortization: {b} families cost {:.1}x one dispatch \
+         (ideal {b}x smaller means perfect amortization)",
+        batched.mean_s() / single.mean_s()
+    );
+}

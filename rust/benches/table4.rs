@@ -1,0 +1,30 @@
+//! Table 4: database sizes, relationship counts, and the MP/N (mean
+//! parents per node) of the learned first-order BN, side-by-side with
+//! the paper's published values.
+
+#[path = "fig3.rs"]
+mod fig3_cfg;
+
+use relcount::bench::experiments::{paper_rows, table4_rows};
+use relcount::metrics::report::render_table4;
+
+fn main() {
+    let cfg = fig3_cfg::config_from_env();
+    eprintln!("table4: scale={} presets={:?}", cfg.scale, cfg.presets);
+    let rows = table4_rows(&cfg).expect("table4 rows");
+    println!("== Table 4: databases and learned-model MP/N ==");
+    print!("{}", render_table4(&rows));
+    println!("# paper row counts at scale 1.0 (ours scale with RELCOUNT_SCALE):");
+    for r in &rows {
+        if let Some(paper) = paper_rows(&r.database) {
+            println!(
+                "#   {:<16} paper {:>10}   ours {:>10}  (x{:.3})",
+                r.database,
+                paper,
+                r.row_count,
+                r.row_count as f64 / paper as f64
+            );
+        }
+    }
+    println!("# paper MP/N range: 0.5 (visual genome) .. 3.4 (imdb)");
+}

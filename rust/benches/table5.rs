@@ -1,0 +1,26 @@
+//! Table 5: total ct-table rows generated per database — the family
+//! ct-tables of HYBRID/ONDEMAND vs the complete lattice ("database")
+//! ct-tables of PRECOUNT.  The paper's explanation of Figure 3's
+//! exceptions rests on which column is larger per database.
+
+#[path = "fig3.rs"]
+mod fig3_cfg;
+
+use relcount::bench::experiments::table5_rows;
+use relcount::metrics::report::render_table5;
+
+fn main() {
+    let cfg = fig3_cfg::config_from_env();
+    eprintln!("table5: scale={} presets={:?}", cfg.scale, cfg.presets);
+    let rows = table5_rows(&cfg).expect("table5 rows");
+    println!("== Table 5: ct(family) vs ct(database) total rows ==");
+    print!("{}", render_table5(&rows));
+    for r in &rows {
+        let winner = if r.ct_family_rows < r.ct_database_rows {
+            "family tables smaller -> HYBRID favoured"
+        } else {
+            "global tables smaller -> PRECOUNT favoured (paper's exception case)"
+        };
+        println!("# {:<16} {}", r.database, winner);
+    }
+}

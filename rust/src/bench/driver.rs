@@ -1,0 +1,134 @@
+//! One experimental cell: run one strategy on one database under a
+//! wall-clock budget, measuring the paper's three runtime components and
+//! peak ct-memory.  A blown budget is recorded as a timeout row, exactly
+//! like the paper's "ONDEMAND failed to complete" entries.
+
+use std::time::Duration;
+
+use crate::db::catalog::Database;
+use crate::error::Result;
+use crate::learn::search::{learn, LearnedModel, SearchConfig};
+use crate::metrics::report::RunRow;
+use crate::strategies::traits::{StrategyConfig, StrategyReport};
+use crate::strategies::StrategyKind;
+
+/// The counting workload driven through a strategy.
+#[derive(Clone, Copy, Debug)]
+pub enum Workload {
+    /// Prepare only (the pre-count phases; ONDEMAND does nothing).
+    PrepareOnly,
+    /// Full structure learning — the workload of Figures 3 and 4.
+    Learn(SearchConfig),
+}
+
+/// Result of one cell.
+pub struct RunOutcome {
+    pub row: RunRow,
+    pub report: StrategyReport,
+    pub model: Option<LearnedModel>,
+}
+
+/// Run `kind` on `db` with the given budget.
+pub fn run_strategy(
+    db: &Database,
+    db_name: &str,
+    kind: StrategyKind,
+    workload: Workload,
+    budget: Option<Duration>,
+) -> Result<RunOutcome> {
+    let scfg = StrategyConfig {
+        budget,
+        max_chain_length: match workload {
+            Workload::Learn(s) => s.max_chain_length,
+            Workload::PrepareOnly => StrategyConfig::default().max_chain_length,
+        },
+        ..Default::default()
+    };
+    let mut strategy = kind.build(db, scfg)?;
+
+    let (timed_out, model) = match workload {
+        Workload::PrepareOnly => match strategy.prepare() {
+            Ok(()) => (false, None),
+            Err(e) if e.is_timeout() => (true, None),
+            Err(e) => return Err(e),
+        },
+        Workload::Learn(search_cfg) => match learn(db, strategy.as_mut(), search_cfg) {
+            Ok(m) => (false, Some(m)),
+            Err(e) if e.is_timeout() => (true, None),
+            Err(e) => return Err(e),
+        },
+    };
+
+    let report = strategy.report();
+    let row = RunRow {
+        database: db_name.to_string(),
+        strategy: kind.name().to_string(),
+        metadata: report.timing.metadata,
+        positive: report.timing.positive,
+        negative: report.timing.negative,
+        peak_ct_bytes: report.peak_ct_bytes,
+        ct_rows_generated: report.ct_rows_generated,
+        families_scored: report.families_served,
+        chain_queries: report.join_stats.chain_queries,
+        timed_out,
+    };
+    Ok(RunOutcome { row, report, model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+
+    #[test]
+    fn all_strategies_run_the_learn_workload() {
+        let db = university_db();
+        for kind in StrategyKind::ALL {
+            let out = run_strategy(
+                &db,
+                "university",
+                kind,
+                Workload::Learn(SearchConfig::default()),
+                None,
+            )
+            .unwrap();
+            assert!(!out.row.timed_out, "{kind:?}");
+            assert!(out.model.is_some());
+            assert!(out.row.families_scored > 0);
+            assert!(out.row.total() > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn budget_zero_times_out_precount() {
+        let db = university_db();
+        let out = run_strategy(
+            &db,
+            "university",
+            StrategyKind::Precount,
+            Workload::PrepareOnly,
+            Some(Duration::ZERO),
+        )
+        .unwrap();
+        assert!(out.row.timed_out);
+    }
+
+    #[test]
+    fn identical_models_across_strategies() {
+        let db = university_db();
+        let cfg = SearchConfig::default();
+        let models: Vec<_> = StrategyKind::ALL
+            .iter()
+            .map(|&k| {
+                run_strategy(&db, "u", k, Workload::Learn(cfg), None)
+                    .unwrap()
+                    .model
+                    .unwrap()
+            })
+            .collect();
+        for m in &models[1..] {
+            assert_eq!(m.bn.nodes, models[0].bn.nodes);
+            assert_eq!(m.bn.parents, models[0].bn.parents);
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Row generators for every table and figure of the paper's evaluation
+//! (the per-experiment index is DESIGN.md §4).  Shared by the `cargo
+//! bench` targets, the CLI `exp` subcommand and the end-to-end example.
+
+use std::time::Duration;
+
+use crate::bench::driver::{run_strategy, RunOutcome, Workload};
+use crate::datagen::generator::generate;
+use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
+use crate::error::Result;
+use crate::learn::search::SearchConfig;
+use crate::metrics::report::{RunRow, Table4Row, Table5Row};
+use crate::strategies::StrategyKind;
+
+/// Experiment-wide options.
+#[derive(Clone, Copy, Debug)]
+pub struct ExpConfig {
+    /// Dataset scale factor in (0, 1] (the paper runs at 1.0; scaled
+    /// runs preserve who-wins ordering at laptop budgets).
+    pub scale: f64,
+    /// Per-cell wall-clock budget (the paper's Slurm limit was 100 min).
+    pub budget: Option<Duration>,
+    pub seed: u64,
+    pub search: SearchConfig,
+    /// Presets to include (defaults to all 8).
+    pub presets: &'static [&'static str],
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        ExpConfig {
+            scale: 0.05,
+            budget: Some(Duration::from_secs(120)),
+            seed: 0,
+            search: SearchConfig::default(),
+            presets: &PRESET_NAMES,
+        }
+    }
+}
+
+/// Figures 3 & 4 share the same runs: every strategy on every preset,
+/// full learn workload, timing breakdown + peak memory per cell.
+pub fn fig3_fig4_rows(cfg: &ExpConfig) -> Result<Vec<RunRow>> {
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        for kind in StrategyKind::ALL {
+            let out = run_strategy(
+                &db,
+                name,
+                kind,
+                Workload::Learn(cfg.search),
+                cfg.budget,
+            )?;
+            rows.push(out.row);
+        }
+    }
+    Ok(rows)
+}
+
+/// Table 5: Σ rows over family ct-tables (HYBRID) vs the complete lattice
+/// ct-tables (PRECOUNT), per database.
+pub fn table5_rows(cfg: &ExpConfig) -> Result<Vec<Table5Row>> {
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        let hybrid = run_strategy(
+            &db,
+            name,
+            StrategyKind::Hybrid,
+            Workload::Learn(cfg.search),
+            cfg.budget,
+        )?;
+        let pre = run_strategy(
+            &db,
+            name,
+            StrategyKind::Precount,
+            Workload::PrepareOnly,
+            cfg.budget,
+        )?;
+        rows.push(Table5Row {
+            database: name.to_string(),
+            ct_family_rows: hybrid.report.ct_rows_generated,
+            ct_database_rows: pre.report.ct_rows_generated,
+        });
+    }
+    Ok(rows)
+}
+
+/// Table 4: row count, #relationships, and the MP/N of the learned BN.
+pub fn table4_rows(cfg: &ExpConfig) -> Result<Vec<Table4Row>> {
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        let out: RunOutcome = run_strategy(
+            &db,
+            name,
+            StrategyKind::Hybrid,
+            Workload::Learn(cfg.search),
+            cfg.budget,
+        )?;
+        let mpn = out
+            .model
+            .as_ref()
+            .map(|m| m.bn.mean_parents_per_node())
+            .unwrap_or(f64::NAN);
+        rows.push(Table4Row {
+            database: name.to_string(),
+            row_count: db.total_rows(),
+            n_relationships: db.n_relationships(),
+            mean_parents_per_node: mpn,
+        });
+    }
+    Ok(rows)
+}
+
+/// The paper's Table 4 row counts for side-by-side reporting.
+pub fn paper_rows(name: &str) -> Option<u64> {
+    paper_row_count(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpConfig {
+        ExpConfig {
+            scale: 0.02,
+            budget: Some(Duration::from_secs(60)),
+            seed: 1,
+            search: SearchConfig { max_ops_per_point: 20, ..Default::default() },
+            presets: &["uw", "mondial"],
+        }
+    }
+
+    #[test]
+    fn fig3_rows_cover_grid() {
+        let rows = fig3_fig4_rows(&tiny()).unwrap();
+        assert_eq!(rows.len(), 2 * 3);
+        assert!(rows.iter().all(|r| r.total() > Duration::ZERO));
+        let dbs: Vec<_> = rows.iter().map(|r| r.database.as_str()).collect();
+        assert!(dbs.contains(&"uw") && dbs.contains(&"mondial"));
+    }
+
+    #[test]
+    fn table5_shapes() {
+        let rows = table5_rows(&tiny()).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.ct_family_rows > 0);
+            assert!(r.ct_database_rows > 0);
+        }
+    }
+
+    #[test]
+    fn table4_shapes() {
+        let rows = table4_rows(&tiny()).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.row_count > 0);
+            assert!(r.mean_parents_per_node.is_finite());
+        }
+        assert_eq!(paper_rows("uw"), Some(712));
+    }
+}

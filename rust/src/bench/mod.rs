@@ -1,0 +1,9 @@
+//! The experiment harness regenerating the paper's evaluation
+//! (DESIGN.md §4): end-to-end strategy runs with the 3-component timing
+//! breakdown and memory accounting, plus per-table/figure row generators.
+
+pub mod driver;
+pub mod experiments;
+
+pub use driver::{run_strategy, RunOutcome, Workload};
+pub use experiments::{fig3_fig4_rows, table4_rows, table5_rows};

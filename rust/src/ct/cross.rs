@@ -1,0 +1,93 @@
+//! Cross-product extension of ct-tables.
+//!
+//! When a sub-chain's positive counts must be interpreted over a larger
+//! population context (a lattice point with more entity types, or a
+//! disconnected relationship subset), the missing populations enter as a
+//! cross product: every grounding of the sub-chain pairs with every
+//! member of each unconstrained population.  With entity attributes in
+//! play this is the outer product with the entity *marginal* ct-tables;
+//! without them it is multiplication by the population size.
+
+use crate::ct::cttable::CtTable;
+use crate::error::{Error, Result};
+
+/// Outer product of two ct-tables over disjoint variable lists.
+pub fn outer(a: &CtTable, b: &CtTable) -> Result<CtTable> {
+    for v in &b.vars {
+        if a.vars.contains(v) {
+            return Err(Error::Ct(format!("outer(): shared variable {v:?}")));
+        }
+    }
+    let mut vars = a.vars.clone();
+    vars.extend(b.vars.iter().copied());
+    let mut dims = a.dims.clone();
+    dims.extend(b.dims.iter().copied());
+    let mut out = CtTable::with_dims(vars, dims)?;
+    // With a's columns first, the combined key is a_key + a_cells * b_key.
+    let a_cells = a.cells();
+    for (bk, bc) in b.iter_keys() {
+        for (ak, ac) in a.iter_keys() {
+            let c = ac
+                .checked_mul(bc)
+                .ok_or_else(|| Error::Ct("outer() count overflow".into()))?;
+            out.add_key(ak + a_cells * bk, c)?;
+        }
+    }
+    Ok(out)
+}
+
+/// Outer-extend `t` by a scalar population factor.
+pub fn extend_scalar(t: &CtTable, factor: i128) -> Result<CtTable> {
+    let mut out = t.clone();
+    out.scale(factor)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+    use crate::meta::rvar::RVar;
+
+    #[test]
+    fn outer_product_counts() {
+        let s = university_schema();
+        let x = RVar::EntityAttr { et: 0, attr: 0 };
+        let y = RVar::EntityAttr { et: 1, attr: 0 };
+        let mut a = CtTable::new(&s, vec![x]).unwrap();
+        a.add(&[0], 2).unwrap();
+        a.add(&[2], 3).unwrap();
+        let mut b = CtTable::new(&s, vec![y]).unwrap();
+        b.add(&[1], 5).unwrap();
+        b.add(&[2], 7).unwrap();
+        let o = outer(&a, &b).unwrap();
+        assert_eq!(o.vars, vec![x, y]);
+        assert_eq!(o.get(&[0, 1]).unwrap(), 10);
+        assert_eq!(o.get(&[2, 2]).unwrap(), 21);
+        assert_eq!(
+            o.total().unwrap(),
+            a.total().unwrap() * b.total().unwrap()
+        );
+    }
+
+    #[test]
+    fn outer_with_scalar_is_scale() {
+        let s = university_schema();
+        let x = RVar::EntityAttr { et: 0, attr: 0 };
+        let mut a = CtTable::new(&s, vec![x]).unwrap();
+        a.add(&[1], 4).unwrap();
+        let o = outer(&a, &CtTable::scalar(6)).unwrap();
+        assert_eq!(o.get(&[1]).unwrap(), 24);
+        let e = extend_scalar(&a, 6).unwrap();
+        assert_eq!(e.get(&[1]).unwrap(), 24);
+    }
+
+    #[test]
+    fn outer_rejects_shared_vars() {
+        let s = university_schema();
+        let x = RVar::EntityAttr { et: 0, attr: 0 };
+        let a = CtTable::new(&s, vec![x]).unwrap();
+        let b = CtTable::new(&s, vec![x]).unwrap();
+        assert!(outer(&a, &b).is_err());
+    }
+}

@@ -1,0 +1,348 @@
+//! The sparse contingency table.
+//!
+//! Rows are stored in a hash map from a mixed-radix flat key (u128) to an
+//! i64 count.  u128 keys keep hashing fast (no per-row allocation) while
+//! supporting value spaces up to 2^127 cells — ample for lattice points
+//! with dozens of attribute columns; construction fails loudly if the
+//! value space would overflow.
+//!
+//! Counts are i128: cross products over several large populations
+//! exceed i64 (e.g. 4-population contexts at IMDb scale); intermediate
+//! Möbius values are differences of counts
+//! and the arithmetic is checked, so overflow surfaces as an error rather
+//! than silent wraparound.
+
+use rustc_hash::FxHashMap;
+
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::meta::rvar::RVar;
+
+/// A sparse contingency table over an ordered list of variables.
+#[derive(Clone, Debug)]
+pub struct CtTable {
+    /// Column variables, in key order.
+    pub vars: Vec<RVar>,
+    /// Dimension (number of value codes) per column.
+    pub dims: Vec<u32>,
+    /// Mixed-radix strides: `key = sum(v[i] * strides[i])`.
+    strides: Vec<u128>,
+    /// Flat key -> count.  Zero-count rows are not stored.
+    counts: FxHashMap<u128, i128>,
+}
+
+impl CtTable {
+    /// Empty table over `vars` (dims from the schema conventions).
+    pub fn new(schema: &Schema, vars: Vec<RVar>) -> Result<Self> {
+        let dims: Vec<u32> = vars.iter().map(|v| v.dim(schema)).collect();
+        Self::with_dims(vars, dims)
+    }
+
+    /// Empty table with explicit dims (used by tests and dense packing).
+    pub fn with_dims(vars: Vec<RVar>, dims: Vec<u32>) -> Result<Self> {
+        if vars.len() != dims.len() {
+            return Err(Error::Ct("vars/dims length mismatch".into()));
+        }
+        let mut strides = Vec::with_capacity(dims.len());
+        let mut acc: u128 = 1;
+        for (i, &d) in dims.iter().enumerate() {
+            if d == 0 {
+                return Err(Error::Ct(format!("column {i} has dimension 0")));
+            }
+            strides.push(acc);
+            acc = acc.checked_mul(d as u128).ok_or_else(|| {
+                Error::Ct("value space overflows u128 flat keys".into())
+            })?;
+        }
+        Ok(CtTable { vars, dims, strides, counts: FxHashMap::default() })
+    }
+
+    /// A 0-column table holding a single scalar count (the ct-table of an
+    /// empty variable list — used for cross-product seeds).
+    pub fn scalar(count: i128) -> Self {
+        let mut t = CtTable {
+            vars: Vec::new(),
+            dims: Vec::new(),
+            strides: Vec::new(),
+            counts: FxHashMap::default(),
+        };
+        if count != 0 {
+            t.counts.insert(0, count);
+        }
+        t
+    }
+
+    /// Total number of cells in the (dense) value space.
+    pub fn cells(&self) -> u128 {
+        self.dims.iter().map(|&d| d as u128).product()
+    }
+
+    /// Number of stored (nonzero) rows — the paper's ct-table size metric.
+    pub fn n_rows(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counts.is_empty()
+    }
+
+    /// Sum of all counts (checked).
+    pub fn total(&self) -> Result<i128> {
+        let mut acc: i128 = 0;
+        for &c in self.counts.values() {
+            acc = acc
+                .checked_add(c)
+                .ok_or_else(|| Error::Ct("total() overflow".into()))?;
+        }
+        Ok(acc)
+    }
+
+    /// Encode a value tuple into a flat key.
+    #[inline]
+    pub fn encode(&self, values: &[u32]) -> Result<u128> {
+        if values.len() != self.dims.len() {
+            return Err(Error::Ct(format!(
+                "key arity {} != {}",
+                values.len(),
+                self.dims.len()
+            )));
+        }
+        let mut key: u128 = 0;
+        for ((&v, &d), &s) in values.iter().zip(&self.dims).zip(&self.strides) {
+            if v >= d {
+                return Err(Error::Ct(format!("value {v} out of range 0..{d}")));
+            }
+            key += v as u128 * s;
+        }
+        Ok(key)
+    }
+
+    /// Decode a flat key into a value tuple.
+    pub fn decode(&self, key: u128) -> Vec<u32> {
+        self.dims
+            .iter()
+            .zip(&self.strides)
+            .map(|(&d, &s)| ((key / s) % d as u128) as u32)
+            .collect()
+    }
+
+    /// Add `count` to a row (removing it if it reaches zero).
+    pub fn add(&mut self, values: &[u32], count: i128) -> Result<()> {
+        let key = self.encode(values)?;
+        self.add_key(key, count)
+    }
+
+    /// Add by pre-encoded key (hot path).
+    #[inline]
+    pub fn add_key(&mut self, key: u128, count: i128) -> Result<()> {
+        if count == 0 {
+            return Ok(());
+        }
+        let slot = self.counts.entry(key).or_insert(0);
+        *slot = slot
+            .checked_add(count)
+            .ok_or_else(|| Error::Ct("count overflow".into()))?;
+        if *slot == 0 {
+            self.counts.remove(&key);
+        }
+        Ok(())
+    }
+
+    /// Count for a value tuple (0 if absent).
+    pub fn get(&self, values: &[u32]) -> Result<i128> {
+        Ok(self.counts.get(&self.encode(values)?).copied().unwrap_or(0))
+    }
+
+    #[inline]
+    pub fn get_key(&self, key: u128) -> i128 {
+        self.counts.get(&key).copied().unwrap_or(0)
+    }
+
+    /// Iterate rows as (flat key, count).
+    pub fn iter_keys(&self) -> impl Iterator<Item = (u128, i128)> + '_ {
+        self.counts.iter().map(|(&k, &c)| (k, c))
+    }
+
+    /// Iterate rows as (decoded values, count).
+    pub fn iter_rows(&self) -> impl Iterator<Item = (Vec<u32>, i128)> + '_ {
+        self.counts.iter().map(|(&k, &c)| (self.decode(k), c))
+    }
+
+    /// Position of a variable in the column list.
+    pub fn var_pos(&self, var: &RVar) -> Result<usize> {
+        self.vars
+            .iter()
+            .position(|v| v == var)
+            .ok_or_else(|| Error::Ct(format!("variable {var:?} not in table")))
+    }
+
+    /// Stride of column `i` (used by projection / dense packing).
+    #[inline]
+    pub fn stride(&self, i: usize) -> u128 {
+        self.strides[i]
+    }
+
+    /// Multiply every count by a scalar (checked).
+    pub fn scale(&mut self, factor: i128) -> Result<()> {
+        if factor == 0 {
+            self.counts.clear();
+            return Ok(());
+        }
+        for c in self.counts.values_mut() {
+            *c = c
+                .checked_mul(factor)
+                .ok_or_else(|| Error::Ct("scale overflow".into()))?;
+        }
+        Ok(())
+    }
+
+    /// Divide every count exactly by `factor` (used to narrow a wider
+    /// population context; counts are exact multiples by construction).
+    pub fn divide_exact(&mut self, factor: i128) -> Result<()> {
+        if factor <= 0 {
+            return Err(Error::Ct(format!("divide_exact by {factor}")));
+        }
+        if factor == 1 {
+            return Ok(());
+        }
+        for (k, c) in self.counts.iter_mut() {
+            if *c % factor != 0 {
+                return Err(Error::Ct(format!(
+                    "count {c} at key {k} not divisible by {factor}"
+                )));
+            }
+            *c /= factor;
+        }
+        Ok(())
+    }
+
+    /// Verify all counts are strictly positive (complete ct-tables of
+    /// real databases must be — a negative count means a Möbius bug).
+    pub fn assert_counts_nonnegative(&self) -> Result<()> {
+        for (&k, &c) in &self.counts {
+            if c < 0 {
+                return Err(Error::Ct(format!(
+                    "negative count {c} at {:?}",
+                    self.decode(k)
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Approximate heap footprint in bytes (the Figure 4 metric).
+    pub fn bytes(&self) -> usize {
+        // key (16) + count (16) + hashbrown ctrl/overhead
+        48 + self.vars.capacity() * std::mem::size_of::<RVar>()
+            + self.dims.capacity() * 4
+            + self.strides.capacity() * 16
+            + self.counts.capacity() * 40
+    }
+
+    /// Render as an aligned text table (quickstart / debugging).
+    pub fn render(&self, schema: &Schema) -> String {
+        let mut out = String::new();
+        let names: Vec<String> = self.vars.iter().map(|v| v.name(schema)).collect();
+        out.push_str(&format!("count\t{}\n", names.join("\t")));
+        let mut rows: Vec<(Vec<u32>, i128)> = self.iter_rows().collect();
+        rows.sort();
+        for (vals, c) in rows {
+            let vs: Vec<String> = vals.iter().map(|v| v.to_string()).collect();
+            out.push_str(&format!("{c}\t{}\n", vs.join("\t")));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    fn table() -> CtTable {
+        let s = university_schema();
+        CtTable::new(
+            &s,
+            vec![
+                RVar::RelInd { rel: 0 },
+                RVar::RelAttr { rel: 0, attr: 1 },
+                RVar::EntityAttr { et: 1, attr: 0 },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dims_follow_schema() {
+        let t = table();
+        assert_eq!(t.dims, vec![2, 4, 3]);
+        assert_eq!(t.cells(), 24);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = table();
+        for ind in 0..2 {
+            for sal in 0..4 {
+                for intel in 0..3 {
+                    let vals = vec![ind, sal, intel];
+                    let k = t.encode(&vals).unwrap();
+                    assert_eq!(t.decode(k), vals);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn add_get_remove() {
+        let mut t = table();
+        t.add(&[1, 2, 0], 5).unwrap();
+        t.add(&[1, 2, 0], 3).unwrap();
+        assert_eq!(t.get(&[1, 2, 0]).unwrap(), 8);
+        assert_eq!(t.get(&[0, 0, 0]).unwrap(), 0);
+        t.add(&[1, 2, 0], -8).unwrap();
+        assert_eq!(t.n_rows(), 0); // zero rows dropped
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut t = table();
+        assert!(t.add(&[2, 0, 0], 1).is_err());
+        assert!(t.add(&[0, 0], 1).is_err());
+    }
+
+    #[test]
+    fn totals_and_scale() {
+        let mut t = table();
+        t.add(&[0, 0, 0], 10).unwrap();
+        t.add(&[1, 3, 2], 7).unwrap();
+        assert_eq!(t.total().unwrap(), 17);
+        t.scale(3).unwrap();
+        assert_eq!(t.total().unwrap(), 51);
+        t.scale(0).unwrap();
+        assert_eq!(t.n_rows(), 0);
+    }
+
+    #[test]
+    fn scalar_table() {
+        let t = CtTable::scalar(42);
+        assert_eq!(t.n_rows(), 1);
+        assert_eq!(t.total().unwrap(), 42);
+        assert_eq!(t.cells(), 1);
+    }
+
+    #[test]
+    fn negative_detection() {
+        let mut t = table();
+        t.add(&[0, 0, 0], -1).unwrap();
+        assert!(t.assert_counts_nonnegative().is_err());
+    }
+
+    #[test]
+    fn overflow_value_space_rejected() {
+        // 40 columns of dim 2^32-1 overflows u128
+        let vars = vec![RVar::RelInd { rel: 0 }; 40];
+        let dims = vec![u32::MAX; 40];
+        assert!(CtTable::with_dims(vars, dims).is_err());
+    }
+}

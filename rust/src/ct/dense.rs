@@ -1,0 +1,453 @@
+//! Dense padded family tensors — the interchange layout shared with the
+//! Pallas kernels (see `python/compile/kernels/ref.py` for the full
+//! convention).
+//!
+//! A family's relationship axes are packed into `k_rel` padded axes of
+//! size `d_pad`; coordinate 0 is the ⊥ slot (indicator F / attrs N/A) and
+//! coordinates `1..` enumerate the *true* states (the cartesian product
+//! of the rel's attribute values present in the family).  All entity
+//! attributes flatten into a trailing axis padded to `e_pad`.  Zero
+//! padding is neutral for the Möbius butterfly (proved in
+//! `python/tests/test_mobius.py` and re-checked here).
+//!
+//! Families whose axes exceed the padded dims simply don't get a layout
+//! ([`DenseLayout::fits`] returns `None`) and take the exact sparse path.
+
+use crate::ct::cttable::CtTable;
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::meta::rvar::RVar;
+
+/// Default padded dims — must match `python/compile/kernels/{mobius,bdeu}.py`
+/// (the runtime re-reads the authoritative values from the manifest).
+pub const D_PAD: usize = 8;
+pub const K_REL: usize = 3;
+pub const E_PAD: usize = 1024;
+pub const Q_PAD: usize = 256;
+pub const R_PAD: usize = 16;
+pub const B_PAD: usize = 64;
+
+/// How a family's variables map onto the dense tensor.
+#[derive(Clone, Debug)]
+pub struct DenseLayout {
+    /// The variable order this layout was built for.
+    pub vars: Vec<RVar>,
+    /// Relationship ids, one per used rel axis (sorted).
+    pub rels: Vec<usize>,
+    /// Per rel axis: positions (into `vars`) of the indicator column, if
+    /// present.
+    pub ind_col: Vec<Option<usize>>,
+    /// Per rel axis: positions of the rel-attr columns (with their dims).
+    pub attr_cols: Vec<Vec<(usize, u32)>>,
+    /// Positions of entity-attr columns (with their dims).
+    pub ent_cols: Vec<(usize, u32)>,
+    /// Padded dims.
+    pub d_pad: usize,
+    pub k_rel: usize,
+    pub e_pad: usize,
+}
+
+impl DenseLayout {
+    /// Build a layout for `vars` if the family fits the padded dims.
+    pub fn fits(
+        schema: &Schema,
+        vars: &[RVar],
+        d_pad: usize,
+        k_rel: usize,
+        e_pad: usize,
+    ) -> Option<DenseLayout> {
+        let mut rels: Vec<usize> = vars.iter().filter_map(|v| v.rel()).collect();
+        rels.sort_unstable();
+        rels.dedup();
+        if rels.len() > k_rel {
+            return None;
+        }
+        let mut ind_col = Vec::new();
+        let mut attr_cols = Vec::new();
+        for &rel in &rels {
+            let ind =
+                vars.iter().position(|v| matches!(v, RVar::RelInd { rel: r } if *r == rel));
+            let attrs: Vec<(usize, u32)> = vars
+                .iter()
+                .enumerate()
+                .filter(|(_, v)| {
+                    matches!(v, RVar::RelAttr { rel: r, .. } if *r == rel)
+                })
+                .map(|(i, v)| (i, v.dim(schema) - 1)) // true-value count
+                .collect();
+            // slot dim = 1 (⊥) + product of true-value counts
+            let truth_states: u64 =
+                attrs.iter().map(|&(_, c)| c as u64).product::<u64>().max(1);
+            if 1 + truth_states > d_pad as u64 {
+                return None;
+            }
+            ind_col.push(ind);
+            attr_cols.push(attrs);
+        }
+        let ent_cols: Vec<(usize, u32)> = vars
+            .iter()
+            .enumerate()
+            .filter(|(_, v)| matches!(v, RVar::EntityAttr { .. }))
+            .map(|(i, v)| (i, v.dim(schema)))
+            .collect();
+        let e_size: u64 = ent_cols.iter().map(|&(_, d)| d as u64).product();
+        if e_size > e_pad as u64 {
+            return None;
+        }
+        Some(DenseLayout {
+            vars: vars.to_vec(),
+            rels,
+            ind_col,
+            attr_cols,
+            ent_cols,
+            d_pad,
+            k_rel,
+            e_pad,
+        })
+    }
+
+    /// Total dense tensor length.
+    pub fn len(&self) -> usize {
+        self.d_pad.pow(self.k_rel as u32) * self.e_pad
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Slot coordinate of rel axis `i` for a sparse row, or `None` if the
+    /// row is in an invalid mixed state (e.g. indicator F with a real
+    /// attribute value), which cannot occur in well-formed tables.
+    fn slot_of(&self, i: usize, row: &[u32]) -> Option<usize> {
+        let ind_true = self.ind_col[i].map(|c| row[c] == 1);
+        let attrs = &self.attr_cols[i];
+        let any_attr_real = attrs.iter().any(|&(c, _)| row[c] != 0);
+        let all_attr_real = attrs.iter().all(|&(c, _)| row[c] != 0);
+        match (ind_true, any_attr_real, all_attr_real) {
+            // ⊥: indicator F (or absent) and all attrs N/A
+            (Some(false) | None, false, _) => Some(0),
+            // true state: indicator T (or absent) and all attrs real
+            (Some(true), _, true) => Some(1 + self.flat_attrs(i, row)),
+            (None, true, true) => Some(1 + self.flat_attrs(i, row)),
+            _ => None,
+        }
+    }
+
+    fn flat_attrs(&self, i: usize, row: &[u32]) -> usize {
+        let mut flat = 0usize;
+        let mut stride = 1usize;
+        for &(c, card) in &self.attr_cols[i] {
+            flat += (row[c] as usize - 1) * stride;
+            stride *= card as usize;
+        }
+        flat
+    }
+
+    /// Inverse of `slot_of`: write the rel-axis state into a row.
+    fn write_slot(&self, i: usize, slot: usize, row: &mut [u32]) {
+        if slot == 0 {
+            if let Some(c) = self.ind_col[i] {
+                row[c] = 0;
+            }
+            for &(c, _) in &self.attr_cols[i] {
+                row[c] = 0;
+            }
+        } else {
+            if let Some(c) = self.ind_col[i] {
+                row[c] = 1;
+            }
+            let mut rest = slot - 1;
+            for &(c, card) in &self.attr_cols[i] {
+                row[c] = (rest % card as usize) as u32 + 1;
+                rest /= card as usize;
+            }
+        }
+    }
+
+    /// Number of valid slots on rel axis `i` (1 + true states).
+    fn slot_dim(&self, i: usize) -> usize {
+        1 + self
+            .attr_cols[i]
+            .iter()
+            .map(|&(_, c)| c as usize)
+            .product::<usize>()
+            .max(1)
+    }
+
+    /// Entity flat coordinate of a sparse row.
+    fn e_of(&self, row: &[u32]) -> usize {
+        let mut flat = 0usize;
+        let mut stride = 1usize;
+        for &(c, d) in &self.ent_cols {
+            flat += row[c] as usize * stride;
+            stride *= d as usize;
+        }
+        flat
+    }
+
+    fn write_e(&self, e: usize, row: &mut [u32]) {
+        let mut rest = e;
+        for &(c, d) in &self.ent_cols {
+            row[c] = (rest % d as usize) as u32;
+            rest /= d as usize;
+        }
+    }
+
+    /// Dense linear index from rel slots + entity coordinate.  The layout
+    /// is row-major `[D_1, ..., D_k, E]` (C order), matching jnp.
+    fn dense_index(&self, slots: &[usize], e: usize) -> usize {
+        let mut idx = 0usize;
+        for i in 0..self.k_rel {
+            let s = if i < slots.len() { slots[i] } else { 0 };
+            idx = idx * self.d_pad + s;
+        }
+        idx * self.e_pad + e
+    }
+
+    /// Pack a sparse table (in this layout's variable order) into a dense
+    /// f64 tensor.
+    pub fn pack(&self, t: &CtTable) -> Result<Vec<f64>> {
+        if t.vars != self.vars {
+            return Err(Error::Ct("pack(): variable order mismatch".into()));
+        }
+        let mut dense = vec![0f64; self.len()];
+        let k = self.rels.len();
+        let mut slots = vec![0usize; k];
+        for (key, count) in t.iter_keys() {
+            let row = t.decode(key);
+            for i in 0..k {
+                slots[i] = self.slot_of(i, &row).ok_or_else(|| {
+                    Error::Ct(format!("invalid mixed state in row {row:?}"))
+                })?;
+            }
+            let e = self.e_of(&row);
+            dense[self.dense_index(&slots, e)] += count as f64;
+        }
+        Ok(dense)
+    }
+
+    /// Unpack a dense tensor into a sparse table over this layout's vars.
+    /// Cells outside the valid (unpadded) region must be zero.
+    pub fn unpack(&self, schema: &Schema, dense: &[f64]) -> Result<CtTable> {
+        if dense.len() != self.len() {
+            return Err(Error::Ct("unpack(): length mismatch".into()));
+        }
+        let mut out = CtTable::new(schema, self.vars.clone())?;
+        let k = self.rels.len();
+        let e_size: usize =
+            self.ent_cols.iter().map(|&(_, d)| d as usize).product::<usize>().max(1);
+        let mut row = vec![0u32; self.vars.len()];
+        let mut slots = vec![0usize; k.max(1)];
+        // iterate only the valid region
+        let mut total_valid = e_size;
+        for i in 0..k {
+            total_valid *= self.slot_dim(i);
+        }
+        for flat in 0..total_valid {
+            let mut rest = flat;
+            let e = rest % e_size;
+            rest /= e_size;
+            for i in 0..k {
+                slots[i] = rest % self.slot_dim(i);
+                rest /= self.slot_dim(i);
+            }
+            let v = dense[self.dense_index(&slots[..k], e)];
+            if v == 0.0 {
+                continue;
+            }
+            if v.fract() != 0.0 || v.abs() > 9.007_199_254_740_992e15 {
+                return Err(Error::Ct(format!("non-integral dense count {v}")));
+            }
+            for i in 0..k {
+                self.write_slot(i, slots[i], &mut row);
+            }
+            self.write_e(e, &mut row);
+            out.add(&row, v as i128)?;
+        }
+        Ok(out)
+    }
+
+    /// Segment map for the fused `family_score` artifact: dense cell ->
+    /// `q * r_pad + r` slot of the (parent-config, child-value) matrix,
+    /// or `q_pad * r_pad` (the dump slot) for padding cells.
+    ///
+    /// `parent_cols`/`child_col` index into `self.vars`; q is the mixed-
+    /// radix index over the parents' *full ct dims* (N/A included), as
+    /// used by the Rust scorer.
+    pub fn seg_map(
+        &self,
+        schema: &Schema,
+        parent_cols: &[usize],
+        child_col: usize,
+        q_pad: usize,
+        r_pad: usize,
+    ) -> Result<Vec<i32>> {
+        let dims: Vec<u32> = self.vars.iter().map(|v| v.dim(schema)).collect();
+        let q: usize = parent_cols.iter().map(|&c| dims[c] as usize).product();
+        let r = dims[child_col] as usize;
+        if q > q_pad || r > r_pad {
+            return Err(Error::Ct(format!(
+                "family q={q} r={r} exceeds padded ({q_pad},{r_pad})"
+            )));
+        }
+        let dump = (q_pad * r_pad) as i32;
+        let mut seg = vec![dump; self.len()];
+        let k = self.rels.len();
+        let e_size: usize =
+            self.ent_cols.iter().map(|&(_, d)| d as usize).product::<usize>().max(1);
+        let mut row = vec![0u32; self.vars.len()];
+        let mut slots = vec![0usize; k.max(1)];
+        let mut total_valid = e_size;
+        for i in 0..k {
+            total_valid *= self.slot_dim(i);
+        }
+        for flat in 0..total_valid {
+            let mut rest = flat;
+            let e = rest % e_size;
+            rest /= e_size;
+            for i in 0..k {
+                slots[i] = rest % self.slot_dim(i);
+                rest /= self.slot_dim(i);
+            }
+            for i in 0..k {
+                self.write_slot(i, slots[i], &mut row);
+            }
+            self.write_e(e, &mut row);
+            let mut qi = 0usize;
+            for &c in parent_cols {
+                qi = qi * dims[c] as usize + row[c] as usize;
+            }
+            let ri = row[child_col] as usize;
+            seg[self.dense_index(&slots[..k], e)] = (qi * r_pad + ri) as i32;
+        }
+        Ok(seg)
+    }
+}
+
+/// Pure-Rust dense Möbius butterfly over `[d; k] + [e]` (row-major) —
+/// the fallback/ablation twin of the Pallas kernel.
+pub fn mobius_dense(t: &mut [f64], d: usize, k: usize, e: usize) {
+    assert_eq!(t.len(), d.pow(k as u32) * e);
+    for axis in 0..k {
+        // outer = product of dims before `axis`; inner = after (incl. e)
+        let outer = d.pow(axis as u32);
+        let inner = d.pow((k - axis - 1) as u32) * e;
+        for o in 0..outer {
+            let base = o * d * inner;
+            for v in 1..d {
+                let (bot, rest) = t.split_at_mut(base + v * inner);
+                let bot = &mut bot[base..base + inner];
+                let tru = &rest[..inner];
+                for j in 0..inner {
+                    bot[j] -= tru[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::{brute_force_complete, mobius_complete};
+    use crate::db::fixtures::university_db;
+    use crate::db::query::DirectSource;
+
+    fn family_vars() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    #[test]
+    fn layout_fits_and_sizes() {
+        let db = university_db();
+        let l = DenseLayout::fits(&db.schema, &family_vars(), D_PAD, K_REL, E_PAD)
+            .expect("fits");
+        assert_eq!(l.rels, vec![0]);
+        assert_eq!(l.slot_dim(0), 4); // ⊥ + 3 salary values
+        assert_eq!(l.len(), D_PAD.pow(3) * E_PAD);
+    }
+
+    #[test]
+    fn too_big_family_rejected() {
+        let db = university_db();
+        // capability (5) x salary (3) -> 15 true states + ⊥ > 8
+        let vars = vec![
+            RVar::RelAttr { rel: 0, attr: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+        ];
+        assert!(DenseLayout::fits(&db.schema, &vars, 8, 3, 64).is_none());
+        assert!(DenseLayout::fits(&db.schema, &vars, 32, 3, 64).is_some());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let db = university_db();
+        let ct = brute_force_complete(&db, &family_vars(), &[0, 1]).unwrap();
+        let l = DenseLayout::fits(&db.schema, &family_vars(), D_PAD, K_REL, E_PAD)
+            .unwrap();
+        let dense = l.pack(&ct).unwrap();
+        let back = l.unpack(&db.schema, &dense).unwrap();
+        assert_eq!(back.n_rows(), ct.n_rows());
+        for (vals, c) in ct.iter_rows() {
+            assert_eq!(back.get(&vals).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn dense_butterfly_matches_sparse_mobius() {
+        let db = university_db();
+        let vars = family_vars();
+        let l = DenseLayout::fits(&db.schema, &vars, D_PAD, K_REL, 64).unwrap();
+
+        // Build the *unconstrained* g table sparsely via the same scatter
+        // the sparse Möbius uses, then compare butterfly outputs.
+        let mut src = DirectSource::new(&db);
+        let complete_sparse = mobius_complete(&mut src, &vars, &[0, 1]).unwrap();
+
+        // dense path: pack g by inverting the butterfly on the complete
+        // table (zeta transform), then re-apply the dense butterfly.
+        let mut dense = l.pack(&complete_sparse).unwrap();
+        // zeta transform: bot += sum(true)
+        let k = l.rels.len();
+        for axis in 0..k {
+            let outer = l.d_pad.pow(axis as u32);
+            let inner = l.d_pad.pow((K_REL - axis - 1) as u32) * l.e_pad;
+            for o in 0..outer {
+                let base = o * l.d_pad * inner;
+                for v in 1..l.d_pad {
+                    for j in 0..inner {
+                        let add = dense[base + v * inner + j];
+                        dense[base + j] += add;
+                    }
+                }
+            }
+        }
+        mobius_dense(&mut dense, l.d_pad, K_REL, l.e_pad);
+        let back = l.unpack(&db.schema, &dense).unwrap();
+        for (vals, c) in complete_sparse.iter_rows() {
+            assert_eq!(back.get(&vals).unwrap(), c, "at {vals:?}");
+        }
+        assert_eq!(back.n_rows(), complete_sparse.n_rows());
+    }
+
+    #[test]
+    fn seg_map_covers_family_cells() {
+        let db = university_db();
+        let vars = family_vars();
+        let l = DenseLayout::fits(&db.schema, &vars, D_PAD, K_REL, E_PAD).unwrap();
+        // parents = [RA, salary], child = intelligence
+        let seg = l.seg_map(&db.schema, &[0, 1], 2, Q_PAD, R_PAD).unwrap();
+        assert_eq!(seg.len(), l.len());
+        let dump = (Q_PAD * R_PAD) as i32;
+        let n_valid = seg.iter().filter(|&&s| s != dump).count();
+        // valid cells = slot_dim(rel0) * e_size = 4 * 3
+        assert_eq!(n_valid, 12);
+        for &s in &seg {
+            assert!(s <= dump);
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! Contingency tables (ct-tables) and their algebra.
+//!
+//! A ct-table records, for a list of first-order variables, how many
+//! groundings take each value combination (paper Table 3).  The module
+//! provides:
+//!
+//! - [`cttable::CtTable`] — the sparse representation (flat u128 keys),
+//! - [`project`] — summing out columns (the PRECOUNT/HYBRID projection),
+//! - [`cross`] — cross-product extension by entity marginals (needed to
+//!   extend sub-chain counts to a lattice point's full population),
+//! - [`mobius`] — the Möbius Join: extending positive ct-tables to
+//!   complete ones (positive *and negative* relationships) with no
+//!   further data access, and
+//! - [`dense`] — packing families into the padded dense tensor layout
+//!   shared with the Pallas kernels (see `python/compile/kernels/ref.py`).
+
+pub mod cross;
+pub mod cttable;
+pub mod dense;
+pub mod mobius;
+pub mod project;
+
+pub use cttable::CtTable;

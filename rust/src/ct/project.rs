@@ -1,0 +1,132 @@
+//! Projection: summing out unwanted columns of a ct-table.
+//!
+//! This is the cheap operation PRECOUNT and HYBRID substitute for table
+//! JOINs during structure search (Algorithm 1 line 6, Algorithm 3 line 5):
+//! given a large cached ct-table, the ct-table for any subset of its
+//! columns is obtained by summation, with no data access.
+
+use crate::ct::cttable::CtTable;
+use crate::error::Result;
+use crate::meta::rvar::RVar;
+
+/// Project onto `keep` (in the given order), summing out all other
+/// columns.  Every kept variable must be a column of `t`.
+pub fn project(t: &CtTable, keep: &[RVar]) -> Result<CtTable> {
+    let mut out = CtTable::with_dims(
+        keep.to_vec(),
+        keep.iter()
+            .map(|v| t.var_pos(v).map(|p| t.dims[p]))
+            .collect::<Result<Vec<u32>>>()?,
+    )?;
+    // Precompute (old stride, old dim, new stride) per kept column.
+    let mut maps = Vec::with_capacity(keep.len());
+    for (new_pos, v) in keep.iter().enumerate() {
+        let old_pos = t.var_pos(v)?;
+        maps.push((t.stride(old_pos), t.dims[old_pos] as u128, out.stride(new_pos)));
+    }
+    for (key, count) in t.iter_keys() {
+        let mut new_key: u128 = 0;
+        for &(os, od, ns) in &maps {
+            new_key += ((key / os) % od) * ns;
+        }
+        out.add_key(new_key, count)?;
+    }
+    Ok(out)
+}
+
+/// Condition: keep only rows where `var == value`, then drop the column.
+/// Used to slice positive ct-tables out of complete ones in tests.
+pub fn condition(t: &CtTable, var: &RVar, value: u32) -> Result<CtTable> {
+    let pos = t.var_pos(var)?;
+    let keep: Vec<RVar> =
+        t.vars.iter().copied().filter(|v| v != var).collect();
+    let mut out = CtTable::with_dims(
+        keep.clone(),
+        keep.iter()
+            .map(|v| t.var_pos(v).map(|p| t.dims[p]))
+            .collect::<Result<Vec<u32>>>()?,
+    )?;
+    let vs = t.stride(pos);
+    let vd = t.dims[pos] as u128;
+    let mut maps = Vec::with_capacity(keep.len());
+    for (new_pos, v) in keep.iter().enumerate() {
+        let old_pos = t.var_pos(v)?;
+        maps.push((t.stride(old_pos), t.dims[old_pos] as u128, out.stride(new_pos)));
+    }
+    for (key, count) in t.iter_keys() {
+        if ((key / vs) % vd) as u32 != value {
+            continue;
+        }
+        let mut new_key: u128 = 0;
+        for &(os, od, ns) in &maps {
+            new_key += ((key / os) % od) * ns;
+        }
+        out.add_key(new_key, count)?;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    fn filled() -> (CtTable, RVar, RVar, RVar) {
+        let s = university_schema();
+        let a = RVar::RelInd { rel: 0 };
+        let b = RVar::RelAttr { rel: 0, attr: 1 };
+        let c = RVar::EntityAttr { et: 1, attr: 0 };
+        let mut t = CtTable::new(&s, vec![a, b, c]).unwrap();
+        t.add(&[0, 0, 0], 10).unwrap();
+        t.add(&[0, 0, 1], 20).unwrap();
+        t.add(&[1, 2, 0], 5).unwrap();
+        t.add(&[1, 3, 1], 7).unwrap();
+        (t, a, b, c)
+    }
+
+    #[test]
+    fn project_sums_out() {
+        let (t, a, _b, c) = filled();
+        let p = project(&t, &[a]).unwrap();
+        assert_eq!(p.get(&[0]).unwrap(), 30);
+        assert_eq!(p.get(&[1]).unwrap(), 12);
+        let p2 = project(&t, &[c, a]).unwrap(); // order respected
+        assert_eq!(p2.vars, vec![c, a]);
+        assert_eq!(p2.get(&[0, 1]).unwrap(), 5);
+    }
+
+    #[test]
+    fn project_preserves_total() {
+        let (t, a, b, c) = filled();
+        for keep in [vec![a], vec![b], vec![c], vec![a, b], vec![b, c]] {
+            let p = project(&t, &keep).unwrap();
+            assert_eq!(p.total().unwrap(), t.total().unwrap());
+        }
+    }
+
+    #[test]
+    fn project_identity() {
+        let (t, a, b, c) = filled();
+        let p = project(&t, &[a, b, c]).unwrap();
+        assert_eq!(p.n_rows(), t.n_rows());
+        for (vals, c_) in t.iter_rows() {
+            assert_eq!(p.get(&vals).unwrap(), c_);
+        }
+    }
+
+    #[test]
+    fn project_unknown_var_errors() {
+        let (t, _, _, _) = filled();
+        let ghost = RVar::EntityAttr { et: 0, attr: 0 };
+        assert!(project(&t, &[ghost]).is_err());
+    }
+
+    #[test]
+    fn condition_slices() {
+        let (t, a, b, c) = filled();
+        let pos = condition(&t, &a, 1).unwrap();
+        assert_eq!(pos.vars, vec![b, c]);
+        assert_eq!(pos.total().unwrap(), 12);
+        assert_eq!(pos.get(&[2, 0]).unwrap(), 5);
+    }
+}

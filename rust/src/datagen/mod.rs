@@ -1,0 +1,17 @@
+//! Synthetic relational database generation.
+//!
+//! The paper evaluates on 8 real databases (Table 4) that are not
+//! redistributable here, so — per DESIGN.md §1 — each benchmark gets a
+//! seeded synthetic *preset* pinning the evaluation's independent
+//! variables to the published values: total row count, number of
+//! relationship tables, attribute counts/cardinalities and link
+//! densities.  Attribute values carry injected dependencies so structure
+//! learning has real signal (Table 4's MP/N column).
+
+pub mod config;
+pub mod generator;
+pub mod presets;
+
+pub use config::{EntitySpec, GenConfig, RelSpec};
+pub use generator::generate;
+pub use presets::{preset, PRESET_NAMES};

@@ -1,0 +1,248 @@
+//! One preset per benchmark database of the paper's Table 4.
+//!
+//! Each preset pins: the total data-row count (entity rows + link rows,
+//! exactly the paper's "Row Count" at scale 1.0), the number of
+//! relationship tables, and a schema shaped like the original database.
+//! Visual Genome mirrors the paper's star-schema conversion: the ternary
+//! (subject, predicate, object) relation becomes a RelNode entity with
+//! binary links.  Mondial's country-borders-country self-relationship is
+//! role-split (the same technique the language bias requires).
+
+use crate::datagen::config::{EntitySpec, GenConfig, RelSpec};
+use crate::error::{Error, Result};
+
+/// The 8 benchmark names, in the paper's Table 4 order.
+pub const PRESET_NAMES: [&str; 8] = [
+    "uw",
+    "mondial",
+    "hepatitis",
+    "mutagenesis",
+    "movielens",
+    "financial",
+    "imdb",
+    "visual_genome",
+];
+
+fn e(name: &str, n: u64, attrs: &[(&str, u32)]) -> EntitySpec {
+    EntitySpec {
+        name: name.into(),
+        n,
+        attrs: attrs.iter().map(|&(a, c)| (a.into(), c)).collect(),
+    }
+}
+
+fn r(
+    name: &str,
+    from: usize,
+    to: usize,
+    attrs: &[(&str, u32)],
+    n_links: u64,
+) -> RelSpec {
+    RelSpec {
+        name: name.into(),
+        from,
+        to,
+        attrs: attrs.iter().map(|&(a, c)| (a.into(), c)).collect(),
+        n_links,
+    }
+}
+
+/// Build a preset by name, scaled by `scale` in (0, 1].
+pub fn preset(name: &str, scale: f64, seed: u64) -> Result<GenConfig> {
+    let cfg = match name {
+        // 712 rows, 2 relationships (UW-CSE)
+        "uw" => GenConfig {
+            name: "uw".into(),
+            entities: vec![
+                e("Professor", 60, &[("position", 3), ("popularity", 3)]),
+                e("Student", 150, &[("intelligence", 3), ("phase", 3)]),
+                e("Course", 100, &[("level", 2), ("difficulty", 3)]),
+            ],
+            rels: vec![
+                r("RA", 0, 1, &[("capability", 4), ("salary", 3)], 120),
+                r("Registered", 1, 2, &[("grade", 4)], 282),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 870 rows, 2 relationships
+        "mondial" => GenConfig {
+            name: "mondial".into(),
+            entities: vec![
+                e("Country", 180, &[("continent", 5), ("govform", 4), ("gdp", 3)]),
+                e("Org", 120, &[("kind", 3), ("established", 3)]),
+                e("City", 170, &[("size", 3), ("coastal", 2)]),
+            ],
+            rels: vec![
+                r("Member", 0, 1, &[("mtype", 3)], 250),
+                r("Located", 1, 2, &[], 150),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 12,927 rows, 3 relationships
+        "hepatitis" => GenConfig {
+            name: "hepatitis".into(),
+            entities: vec![
+                e("Patient", 500, &[("sex", 2), ("age", 4), ("type", 3)]),
+                e("Exam", 700, &[("fibros", 4), ("activity", 4)]),
+                e("Bio", 300, &[("got", 3), ("gpt", 3)]),
+            ],
+            rels: vec![
+                r("Took", 0, 1, &[("dur", 3)], 6000),
+                r("BioOf", 0, 2, &[], 2427),
+                r("ExamBio", 1, 2, &[("rel", 2)], 3000),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 14,540 rows, 2 relationships
+        "mutagenesis" => GenConfig {
+            name: "mutagenesis".into(),
+            entities: vec![
+                e(
+                    "Molecule",
+                    230,
+                    &[("mutagenic", 2), ("logp", 4), ("lumo", 4), ("ind1", 2)],
+                ),
+                e("Atom", 4500, &[("element", 7), ("charge", 4)]),
+            ],
+            rels: vec![
+                r("Contains", 0, 1, &[("atype", 5)], 4500),
+                r("Functional", 0, 1, &[("group", 4)], 5310),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 74,402 rows, 1 relationship
+        "movielens" => GenConfig {
+            name: "movielens".into(),
+            entities: vec![
+                e("User", 941, &[("age", 4), ("gender", 2), ("occupation", 5)]),
+                e("Movie", 1500, &[("genre", 6), ("year", 4)]),
+            ],
+            rels: vec![r("Rated", 0, 1, &[("rating", 5)], 71_961)],
+            seed,
+            correlated: true,
+        },
+        // 225,887 rows, 3 relationships
+        "financial" => GenConfig {
+            name: "financial".into(),
+            entities: vec![
+                e("Client", 5369, &[("sex", 2), ("agegrp", 4)]),
+                e("Account", 4500, &[("frequency", 3), ("avgbal", 4)]),
+                e("District", 77, &[("region", 4), ("urban", 3), ("crime", 3)]),
+            ],
+            rels: vec![
+                r("Disp", 0, 1, &[("dtype", 2)], 6471),
+                r("TransAt", 1, 2, &[("ttype", 4)], 150_000),
+                r("ClientIn", 0, 2, &[], 59_470),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 1,063,559 rows, 3 relationships
+        "imdb" => GenConfig {
+            name: "imdb".into(),
+            entities: vec![
+                e("Movie", 30_000, &[("genre", 6), ("decade", 4), ("runtime", 3)]),
+                e("Actor", 60_000, &[("gender", 2), ("quality", 4)]),
+                e("Director", 8_000, &[("quality", 4)]),
+                e("User", 10_000, &[("age", 4), ("gender", 2)]),
+            ],
+            rels: vec![
+                r("ActsIn", 1, 0, &[("role", 3)], 650_000),
+                r("Directs", 2, 0, &[], 65_559),
+                r("Rates", 3, 0, &[("rating", 5)], 240_000),
+            ],
+            seed,
+            correlated: true,
+        },
+        // 15,833,273 rows, 8 relationships (ternary -> star schema)
+        "visual_genome" => GenConfig {
+            name: "visual_genome".into(),
+            entities: vec![
+                e("Image", 100_000, &[("setting", 3), ("quality", 3)]),
+                e("Object", 1_000_000, &[("category", 8), ("size", 3)]),
+                e("RelNode", 1_500_000, &[("predicate", 8)]),
+                e("Region", 800_000, &[("area", 3)]),
+            ],
+            rels: vec![
+                r("ObjInImg", 1, 0, &[], 1_000_000),
+                r("RelSubj", 2, 1, &[], 1_500_000),
+                r("RelObj", 2, 1, &[("order", 2)], 1_500_000),
+                r("RelInImg", 2, 0, &[], 1_500_000),
+                r("RegionInImg", 3, 0, &[], 800_000),
+                r("ObjInRegion", 1, 3, &[], 2_000_000),
+                r("RegionRel", 3, 2, &[], 1_600_000),
+                r("AttrIn", 1, 0, &[("attr", 6)], 2_533_273),
+            ],
+            seed,
+            correlated: true,
+        },
+        other => {
+            return Err(Error::Data(format!(
+                "unknown preset {other:?} (expected one of {PRESET_NAMES:?})"
+            )))
+        }
+    };
+    cfg.scaled(scale)
+}
+
+/// The paper's Table 4 row counts, for validation and reporting.
+pub fn paper_row_count(name: &str) -> Option<u64> {
+    Some(match name {
+        "uw" => 712,
+        "mondial" => 870,
+        "hepatitis" => 12_927,
+        "mutagenesis" => 14_540,
+        "movielens" => 74_402,
+        "financial" => 225_887,
+        "imdb" => 1_063_559,
+        "visual_genome" => 15_833_273,
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::generator::generate;
+
+    #[test]
+    fn all_presets_match_paper_row_counts() {
+        for name in PRESET_NAMES {
+            let cfg = preset(name, 1.0, 0).unwrap();
+            assert_eq!(
+                cfg.total_rows(),
+                paper_row_count(name).unwrap(),
+                "preset {name}"
+            );
+            cfg.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn relationship_counts_match_table4() {
+        let expected = [2usize, 2, 3, 2, 1, 3, 3, 8];
+        for (name, want) in PRESET_NAMES.iter().zip(expected) {
+            let cfg = preset(name, 1.0, 0).unwrap();
+            assert_eq!(cfg.rels.len(), want, "preset {name}");
+        }
+    }
+
+    #[test]
+    fn small_scale_generates() {
+        for name in PRESET_NAMES {
+            let cfg = preset(name, 0.01, 7).unwrap();
+            let db = generate(&cfg).unwrap();
+            assert!(db.total_rows() > 0, "preset {name}");
+            assert_eq!(db.n_relationships(), cfg.rels.len());
+        }
+    }
+
+    #[test]
+    fn unknown_preset_rejected() {
+        assert!(preset("nope", 1.0, 0).is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! The database: schema + tables + indexes.
+
+use crate::db::index::RelIndex;
+use crate::db::schema::Schema;
+use crate::db::table::{EntityTable, RelTable};
+use crate::error::{Error, Result};
+
+/// An in-memory relational database.  Indexes are built explicitly with
+/// [`Database::build_indexes`]; mutation invalidates them.
+#[derive(Clone, Debug)]
+pub struct Database {
+    pub schema: Schema,
+    pub entities: Vec<EntityTable>,
+    pub rels: Vec<RelTable>,
+    indexes: Option<Vec<RelIndex>>,
+}
+
+impl Database {
+    /// Empty database over a schema.
+    pub fn empty(schema: Schema) -> Self {
+        let entities =
+            schema.entities.iter().map(|e| EntityTable::new(e.attrs.len())).collect();
+        let rels =
+            schema.relationships.iter().map(|r| RelTable::new(r.attrs.len())).collect();
+        Database { schema, entities, rels, indexes: None }
+    }
+
+    /// Construct from parts, validate, and build indexes.
+    pub fn new(
+        schema: Schema,
+        entities: Vec<EntityTable>,
+        rels: Vec<RelTable>,
+    ) -> Result<Self> {
+        let mut db = Database { schema, entities, rels, indexes: None };
+        db.validate()?;
+        db.build_indexes()?;
+        Ok(db)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.schema.validate()?;
+        if self.entities.len() != self.schema.entities.len()
+            || self.rels.len() != self.schema.relationships.len()
+        {
+            return Err(Error::Data("table count != schema type count".into()));
+        }
+        for (et, t) in self.entities.iter().enumerate() {
+            t.validate(&self.schema, et)?;
+        }
+        for (rt, t) in self.rels.iter().enumerate() {
+            t.validate(&self.schema, rt)?;
+        }
+        Ok(())
+    }
+
+    /// (Re)build all relationship indexes.
+    pub fn build_indexes(&mut self) -> Result<()> {
+        let mut ixs = Vec::with_capacity(self.rels.len());
+        for (rt, t) in self.rels.iter().enumerate() {
+            let (f, o) = self.schema.rel_endpoints(rt);
+            ixs.push(RelIndex::build(t, self.entities[f].len(), self.entities[o].len())?);
+        }
+        self.indexes = Some(ixs);
+        Ok(())
+    }
+
+    /// Index for a relationship; requires [`Database::build_indexes`].
+    pub fn index(&self, rel: usize) -> Result<&RelIndex> {
+        self.indexes
+            .as_ref()
+            .and_then(|v| v.get(rel))
+            .ok_or_else(|| Error::Data("indexes not built (call build_indexes)".into()))
+    }
+
+    pub fn has_indexes(&self) -> bool {
+        self.indexes.is_some()
+    }
+
+    /// Invalidate indexes (call after mutating tables).
+    pub fn invalidate_indexes(&mut self) {
+        self.indexes = None;
+    }
+
+    /// Population size of an entity type.
+    pub fn population(&self, et: usize) -> u64 {
+        self.entities[et].len() as u64
+    }
+
+    /// Product of population sizes over a set of entity types.
+    pub fn population_product(&self, ets: &[usize]) -> u64 {
+        ets.iter().map(|&e| self.population(e).max(0)).product()
+    }
+
+    /// Total data rows (entity rows + relationship rows) — the paper's
+    /// Table 4 "Row Count".
+    pub fn total_rows(&self) -> u64 {
+        self.entities.iter().map(|t| t.len() as u64).sum::<u64>()
+            + self.rels.iter().map(|t| t.len() as u64).sum::<u64>()
+    }
+
+    /// Number of relationship tables (Table 4 "# Relationships").
+    pub fn n_relationships(&self) -> usize {
+        self.rels.len()
+    }
+
+    /// Approximate heap footprint in bytes (tables + indexes).
+    pub fn bytes(&self) -> usize {
+        self.entities.iter().map(|t| t.bytes()).sum::<usize>()
+            + self.rels.iter().map(|t| t.bytes()).sum::<usize>()
+            + self
+                .indexes
+                .as_ref()
+                .map(|v| v.iter().map(|i| i.bytes()).sum())
+                .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures;
+
+    #[test]
+    fn university_fixture_valid() {
+        let db = fixtures::university_db();
+        assert!(db.has_indexes());
+        assert_eq!(db.n_relationships(), 2);
+        assert!(db.total_rows() > 0);
+        assert_eq!(
+            db.population_product(&[0, 1]),
+            db.population(0) * db.population(1)
+        );
+    }
+
+    #[test]
+    fn index_lookup_matches_data() {
+        let db = fixtures::university_db();
+        let ix = db.index(0).unwrap();
+        let t = &db.rels[0];
+        for i in 0..t.len() {
+            assert_eq!(ix.lookup(t.from[i as usize], t.to[i as usize]), Some(i));
+        }
+    }
+
+    #[test]
+    fn invalidate_then_error() {
+        let mut db = fixtures::university_db();
+        db.invalidate_indexes();
+        assert!(db.index(0).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! FK hash indexes over relationship tables: adjacency lists in both
+//! directions plus a unique `(from, to) -> tuple` map used for indicator
+//! lookups and bound-bound join steps.
+
+use rustc_hash::FxHashMap;
+
+use crate::db::table::RelTable;
+use crate::error::{Error, Result};
+
+/// Index over one relationship table.
+#[derive(Clone, Debug, Default)]
+pub struct RelIndex {
+    /// `by_from[f]` = tuple ids with `from == f`.
+    pub by_from: Vec<Vec<u32>>,
+    /// `by_to[t]` = tuple ids with `to == t`.
+    pub by_to: Vec<Vec<u32>>,
+    /// `(from << 32 | to)` -> tuple id.
+    pub pair: FxHashMap<u64, u32>,
+}
+
+#[inline]
+pub fn pair_key(from: u32, to: u32) -> u64 {
+    ((from as u64) << 32) | to as u64
+}
+
+impl RelIndex {
+    /// Build from a table given the endpoint population sizes.
+    pub fn build(table: &RelTable, n_from: u32, n_to: u32) -> Result<Self> {
+        let mut by_from = vec![Vec::new(); n_from as usize];
+        let mut by_to = vec![Vec::new(); n_to as usize];
+        let mut pair = FxHashMap::default();
+        pair.reserve(table.len() as usize);
+        for t in 0..table.len() {
+            let f = table.from[t as usize];
+            let o = table.to[t as usize];
+            if f >= n_from || o >= n_to {
+                return Err(Error::Data(format!(
+                    "rel tuple ({f},{o}) out of population range ({n_from},{n_to})"
+                )));
+            }
+            if pair.insert(pair_key(f, o), t).is_some() {
+                return Err(Error::Data(format!(
+                    "duplicate relationship pair ({f},{o})"
+                )));
+            }
+            by_from[f as usize].push(t);
+            by_to[o as usize].push(t);
+        }
+        Ok(RelIndex { by_from, by_to, pair })
+    }
+
+    /// Tuple id for a fully-bound pair, if the relationship holds.
+    #[inline]
+    pub fn lookup(&self, from: u32, to: u32) -> Option<u32> {
+        self.pair.get(&pair_key(from, to)).copied()
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        let adj: usize = self
+            .by_from
+            .iter()
+            .chain(self.by_to.iter())
+            .map(|v| v.capacity() * 4 + 24)
+            .sum();
+        adj + self.pair.capacity() * 16
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_adjacency_and_pairs() {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 2, &[]).unwrap();
+        t.push(1, 1, &[]).unwrap();
+        let ix = RelIndex::build(&t, 2, 3).unwrap();
+        assert_eq!(ix.by_from[0], vec![0, 1]);
+        assert_eq!(ix.by_to[1], vec![0, 2]);
+        assert_eq!(ix.lookup(0, 2), Some(1));
+        assert_eq!(ix.lookup(1, 2), None);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_out_of_range() {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 1, &[]).unwrap();
+        assert!(RelIndex::build(&t, 2, 2).is_err());
+
+        let mut t2 = RelTable::new(0);
+        t2.push(5, 0, &[]).unwrap();
+        assert!(RelIndex::build(&t2, 2, 2).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! Load/save databases as a directory of `schema.json` + CSV files.
+//!
+//! Format:
+//! - `schema.json`  — serde-serialized [`Schema`]
+//! - `entity_<Name>.csv` — one row per entity, columns = attribute codes
+//! - `rel_<Name>.csv`    — columns `from,to,<attr codes...>`
+//!
+//! Values are the raw u32 codes; a header line names the columns.
+
+use std::fs;
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::db::catalog::Database;
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Save a database to a directory (created if absent).
+pub fn save(db: &Database, dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join("schema.json"), db.schema.to_json().dump())?;
+
+    for (et, t) in db.entities.iter().enumerate() {
+        let ety = &db.schema.entities[et];
+        let mut f = fs::File::create(dir.join(format!("entity_{}.csv", ety.name)))?;
+        // explicit id column so attribute-less entity tables still have rows
+        let mut header = vec!["id".to_string()];
+        header.extend(ety.attrs.iter().map(|a| a.name.clone()));
+        writeln!(f, "{}", header.join(","))?;
+        for i in 0..t.len() {
+            let mut row = vec![i.to_string()];
+            row.extend((0..t.cols.len()).map(|a| t.value(a, i).to_string()));
+            writeln!(f, "{}", row.join(","))?;
+        }
+    }
+    for (rt, t) in db.rels.iter().enumerate() {
+        let rty = &db.schema.relationships[rt];
+        let mut f = fs::File::create(dir.join(format!("rel_{}.csv", rty.name)))?;
+        let mut header = vec!["from".to_string(), "to".to_string()];
+        header.extend(rty.attrs.iter().map(|a| a.name.clone()));
+        writeln!(f, "{}", header.join(","))?;
+        for i in 0..t.len() {
+            let mut row =
+                vec![t.from[i as usize].to_string(), t.to[i as usize].to_string()];
+            row.extend((0..t.cols.len()).map(|a| t.value(a, i).to_string()));
+            writeln!(f, "{}", row.join(","))?;
+        }
+    }
+    Ok(())
+}
+
+fn parse_codes(line: &str, path: &Path, lineno: usize) -> Result<Vec<u32>> {
+    line.split(',')
+        .map(|s| {
+            s.trim().parse::<u32>().map_err(|_| {
+                Error::Data(format!("{}:{}: bad code {s:?}", path.display(), lineno))
+            })
+        })
+        .collect()
+}
+
+/// Load a database from a directory written by [`save`].
+pub fn load(dir: &Path) -> Result<Database> {
+    let schema_json = fs::read_to_string(dir.join("schema.json"))?;
+    let schema = Schema::from_json(&Json::parse(&schema_json)?)?;
+    schema.validate()?;
+    let mut db = Database::empty(schema.clone());
+
+    for (et, ety) in schema.entities.iter().enumerate() {
+        let path = dir.join(format!("entity_{}.csv", ety.name));
+        let f = fs::File::open(&path)?;
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            if lineno == 0 || line.trim().is_empty() {
+                continue; // header
+            }
+            let codes = parse_codes(&line, &path, lineno)?;
+            if codes.len() != 1 + ety.attrs.len() {
+                return Err(Error::Data(format!(
+                    "{}:{}: expected {} fields",
+                    path.display(),
+                    lineno,
+                    1 + ety.attrs.len()
+                )));
+            }
+            if codes[0] as u32 != db.entities[et].len() {
+                return Err(Error::Data(format!(
+                    "{}:{}: non-contiguous entity id {}",
+                    path.display(),
+                    lineno,
+                    codes[0]
+                )));
+            }
+            db.entities[et].push(&codes[1..])?;
+        }
+    }
+    for (rt, rty) in schema.relationships.iter().enumerate() {
+        let path = dir.join(format!("rel_{}.csv", rty.name));
+        let f = fs::File::open(&path)?;
+        for (lineno, line) in BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            if lineno == 0 || line.trim().is_empty() {
+                continue;
+            }
+            let codes = parse_codes(&line, &path, lineno)?;
+            if codes.len() != 2 + rty.attrs.len() {
+                return Err(Error::Data(format!(
+                    "{}:{}: expected {} fields",
+                    path.display(),
+                    lineno,
+                    2 + rty.attrs.len()
+                )));
+            }
+            db.rels[rt].push(codes[0], codes[1], &codes[2..])?;
+        }
+    }
+    db.validate()?;
+    db.build_indexes()?;
+    Ok(db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures;
+
+    #[test]
+    fn roundtrip_university() {
+        let db = fixtures::university_db();
+        let dir = std::env::temp_dir().join("relcount_loader_test");
+        let _ = fs::remove_dir_all(&dir);
+        save(&db, &dir).unwrap();
+        let back = load(&dir).unwrap();
+        assert_eq!(back.schema, db.schema);
+        assert_eq!(back.total_rows(), db.total_rows());
+        for (a, b) in db.rels.iter().zip(back.rels.iter()) {
+            assert_eq!(a.from, b.from);
+            assert_eq!(a.to, b.to);
+            assert_eq!(a.cols, b.cols);
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(load(Path::new("/nonexistent/relcount")).is_err());
+    }
+}

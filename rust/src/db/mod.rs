@@ -1,0 +1,23 @@
+//! The in-memory columnar relational database engine.
+//!
+//! This is the substrate that replaces MariaDB in the paper's setup (see
+//! DESIGN.md §1): typed entity/relationship schemas, columnar tables with
+//! u32-coded categorical values, FK hash indexes and the two counting
+//! queries FACTORBASE issues — GROUP-BY counts over entity tables and
+//! GROUP-BY counts over INNER-JOIN chains of relationship tables (the
+//! paper's *JOIN problem*).
+
+pub mod catalog;
+pub mod fixtures;
+pub mod index;
+pub mod loader;
+pub mod query;
+pub mod schema;
+pub mod table;
+pub mod value;
+
+pub use catalog::Database;
+pub use index::RelIndex;
+pub use schema::{Attribute, EntityType, RelationshipType, Schema};
+pub use table::{EntityTable, RelTable};
+pub use value::Code;

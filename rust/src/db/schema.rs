@@ -1,0 +1,410 @@
+//! Relational schema: entity types, binary relationship types, and
+//! categorical attributes.
+//!
+//! Following the paper's language bias, relationships are binary between
+//! two *distinct* entity types (the Visual Genome preset mirrors the
+//! paper's star-schema conversion of ternary relations into binary ones).
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A categorical attribute with values `0..card`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Attribute {
+    pub name: String,
+    /// Number of distinct values; must be >= 1.
+    pub card: u32,
+}
+
+impl Attribute {
+    pub fn new(name: impl Into<String>, card: u32) -> Self {
+        Attribute { name: name.into(), card }
+    }
+}
+
+/// An entity type (a population), e.g. `Student`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EntityType {
+    pub name: String,
+    pub attrs: Vec<Attribute>,
+}
+
+/// A binary relationship type, e.g. `Registered(Student, Course)`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RelationshipType {
+    pub name: String,
+    /// Index of the first endpoint entity type in [`Schema::entities`].
+    pub from: usize,
+    /// Index of the second endpoint entity type.
+    pub to: usize,
+    pub attrs: Vec<Attribute>,
+}
+
+/// A full relational schema.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schema {
+    pub entities: Vec<EntityType>,
+    pub relationships: Vec<RelationshipType>,
+}
+
+impl Schema {
+    pub fn new(
+        entities: Vec<EntityType>,
+        relationships: Vec<RelationshipType>,
+    ) -> Result<Self> {
+        let s = Schema { entities, relationships };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Structural validation: endpoint ids in range, distinct endpoints,
+    /// unique names, nonzero cardinalities.
+    pub fn validate(&self) -> Result<()> {
+        let mut names: Vec<&str> = Vec::new();
+        for e in &self.entities {
+            names.push(&e.name);
+            for a in &e.attrs {
+                if a.card == 0 {
+                    return Err(Error::Schema(format!(
+                        "attribute {}.{} has cardinality 0",
+                        e.name, a.name
+                    )));
+                }
+            }
+        }
+        for r in &self.relationships {
+            names.push(&r.name);
+            if r.from >= self.entities.len() || r.to >= self.entities.len() {
+                return Err(Error::Schema(format!(
+                    "relationship {} references unknown entity type",
+                    r.name
+                )));
+            }
+            if r.from == r.to {
+                return Err(Error::Schema(format!(
+                    "relationship {} is a self-relationship; model it with \
+                     a role-split star schema (see datagen::presets)",
+                    r.name
+                )));
+            }
+            for a in &r.attrs {
+                if a.card == 0 {
+                    return Err(Error::Schema(format!(
+                        "attribute {}.{} has cardinality 0",
+                        r.name, a.name
+                    )));
+                }
+            }
+        }
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != names.len() {
+            return Err(Error::Schema("duplicate type names".into()));
+        }
+        Ok(())
+    }
+
+    pub fn entity_id(&self, name: &str) -> Result<usize> {
+        self.entities
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| Error::Schema(format!("unknown entity type {name}")))
+    }
+
+    pub fn rel_id(&self, name: &str) -> Result<usize> {
+        self.relationships
+            .iter()
+            .position(|r| r.name == name)
+            .ok_or_else(|| Error::Schema(format!("unknown relationship {name}")))
+    }
+
+    /// Entity types touched by a relationship.
+    pub fn rel_endpoints(&self, rel: usize) -> (usize, usize) {
+        let r = &self.relationships[rel];
+        (r.from, r.to)
+    }
+
+    /// Entity types touched by a set of relationships, sorted, deduped.
+    pub fn populations_of(&self, rels: &[usize]) -> Vec<usize> {
+        let mut pops: Vec<usize> = rels
+            .iter()
+            .flat_map(|&r| {
+                let (a, b) = self.rel_endpoints(r);
+                [a, b]
+            })
+            .collect();
+        pops.sort_unstable();
+        pops.dedup();
+        pops
+    }
+
+    /// Is the relationship set connected in the entity-type graph?
+    /// (Singleton and empty sets count as connected.)
+    pub fn is_connected(&self, rels: &[usize]) -> bool {
+        if rels.len() <= 1 {
+            return true;
+        }
+        let mut joined: Vec<usize> = vec![rels[0]];
+        let mut pops = {
+            let (a, b) = self.rel_endpoints(rels[0]);
+            vec![a, b]
+        };
+        let mut rest: Vec<usize> = rels[1..].to_vec();
+        loop {
+            let before = rest.len();
+            rest.retain(|&r| {
+                let (a, b) = self.rel_endpoints(r);
+                if pops.contains(&a) || pops.contains(&b) {
+                    pops.push(a);
+                    pops.push(b);
+                    joined.push(r);
+                    false
+                } else {
+                    true
+                }
+            });
+            if rest.is_empty() {
+                return true;
+            }
+            if rest.len() == before {
+                return false;
+            }
+        }
+    }
+
+    /// Serialize to JSON (for `db::loader`).
+    pub fn to_json(&self) -> Json {
+        let attrs = |xs: &Vec<Attribute>| {
+            Json::Arr(
+                xs.iter()
+                    .map(|a| {
+                        Json::obj(vec![
+                            ("name", Json::str(a.name.clone())),
+                            ("card", Json::num(a.card as f64)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        Json::obj(vec![
+            (
+                "entities",
+                Json::Arr(
+                    self.entities
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("name", Json::str(e.name.clone())),
+                                ("attrs", attrs(&e.attrs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "relationships",
+                Json::Arr(
+                    self.relationships
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("name", Json::str(r.name.clone())),
+                                ("from", Json::num(r.from as f64)),
+                                ("to", Json::num(r.to as f64)),
+                                ("attrs", attrs(&r.attrs)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse from JSON (inverse of [`Schema::to_json`]).
+    pub fn from_json(j: &Json) -> Result<Schema> {
+        let bad = |m: &str| Error::Schema(format!("schema json: {m}"));
+        let attrs = |j: &Json| -> Result<Vec<Attribute>> {
+            j.as_arr()
+                .ok_or_else(|| bad("attrs not an array"))?
+                .iter()
+                .map(|a| {
+                    Ok(Attribute {
+                        name: a
+                            .get("name")
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| bad("attr name"))?
+                            .to_string(),
+                        card: a
+                            .get("card")
+                            .and_then(Json::as_usize)
+                            .ok_or_else(|| bad("attr card"))?
+                            as u32,
+                    })
+                })
+                .collect()
+        };
+        let entities = j
+            .get("entities")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("entities"))?
+            .iter()
+            .map(|e| {
+                Ok(EntityType {
+                    name: e
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad("entity name"))?
+                        .to_string(),
+                    attrs: attrs(e.get("attrs").ok_or_else(|| bad("entity attrs"))?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let relationships = j
+            .get("relationships")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| bad("relationships"))?
+            .iter()
+            .map(|r| {
+                Ok(RelationshipType {
+                    name: r
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| bad("rel name"))?
+                        .to_string(),
+                    from: r.get("from").and_then(Json::as_usize).ok_or_else(|| bad("rel from"))?,
+                    to: r.get("to").and_then(Json::as_usize).ok_or_else(|| bad("rel to"))?,
+                    attrs: attrs(r.get("attrs").ok_or_else(|| bad("rel attrs"))?)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Schema::new(entities, relationships)
+    }
+
+    /// Split a relationship set into connected components.
+    pub fn connected_components(&self, rels: &[usize]) -> Vec<Vec<usize>> {
+        let mut remaining: Vec<usize> = rels.to_vec();
+        let mut comps = Vec::new();
+        while let Some(seed) = remaining.pop() {
+            let mut comp = vec![seed];
+            let mut pops = {
+                let (a, b) = self.rel_endpoints(seed);
+                vec![a, b]
+            };
+            loop {
+                let before = remaining.len();
+                remaining.retain(|&r| {
+                    let (a, b) = self.rel_endpoints(r);
+                    if pops.contains(&a) || pops.contains(&b) {
+                        pops.push(a);
+                        pops.push(b);
+                        comp.push(r);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                if remaining.len() == before {
+                    break;
+                }
+            }
+            comp.sort_unstable();
+            comps.push(comp);
+        }
+        comps.sort();
+        comps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn university() -> Schema {
+        Schema::new(
+            vec![
+                EntityType {
+                    name: "Professor".into(),
+                    attrs: vec![Attribute::new("popularity", 3)],
+                },
+                EntityType {
+                    name: "Student".into(),
+                    attrs: vec![Attribute::new("intelligence", 3)],
+                },
+                EntityType {
+                    name: "Course".into(),
+                    attrs: vec![Attribute::new("difficulty", 2)],
+                },
+            ],
+            vec![
+                RelationshipType {
+                    name: "RA".into(),
+                    from: 0,
+                    to: 1,
+                    attrs: vec![
+                        Attribute::new("capability", 5),
+                        Attribute::new("salary", 3),
+                    ],
+                },
+                RelationshipType {
+                    name: "Registered".into(),
+                    from: 1,
+                    to: 2,
+                    attrs: vec![Attribute::new("grade", 4)],
+                },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn builds_and_looks_up() {
+        let s = university();
+        assert_eq!(s.entity_id("Student").unwrap(), 1);
+        assert_eq!(s.rel_id("Registered").unwrap(), 1);
+        assert!(s.entity_id("Nope").is_err());
+    }
+
+    #[test]
+    fn rejects_self_relationship() {
+        let r = Schema::new(
+            vec![EntityType { name: "U".into(), attrs: vec![] }],
+            vec![RelationshipType {
+                name: "Friend".into(),
+                from: 0,
+                to: 0,
+                attrs: vec![],
+            }],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_duplicate_names() {
+        let r = Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![] },
+                EntityType { name: "A".into(), attrs: vec![] },
+            ],
+            vec![],
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn connectivity() {
+        let s = university();
+        assert!(s.is_connected(&[0]));
+        assert!(s.is_connected(&[0, 1])); // share Student
+        assert!(s.is_connected(&[]));
+        let comps = s.connected_components(&[0, 1]);
+        assert_eq!(comps, vec![vec![0, 1]]);
+    }
+
+    #[test]
+    fn populations() {
+        let s = university();
+        assert_eq!(s.populations_of(&[0, 1]), vec![0, 1, 2]);
+        assert_eq!(s.populations_of(&[1]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,229 @@
+//! Columnar entity and relationship tables.
+
+use crate::db::schema::Schema;
+use crate::db::value::Code;
+use crate::error::{Error, Result};
+
+/// A columnar entity table: row id is the entity id (`0..n`), one value
+/// column per schema attribute.
+#[derive(Clone, Debug, Default)]
+pub struct EntityTable {
+    /// Number of entities.
+    pub n: u32,
+    /// `cols[a][i]` = value of attribute `a` for entity `i`.
+    pub cols: Vec<Vec<Code>>,
+}
+
+impl EntityTable {
+    pub fn new(n_attrs: usize) -> Self {
+        EntityTable { n: 0, cols: vec![Vec::new(); n_attrs] }
+    }
+
+    /// Append one entity; returns its id.
+    pub fn push(&mut self, values: &[Code]) -> Result<u32> {
+        if values.len() != self.cols.len() {
+            return Err(Error::Data(format!(
+                "entity row arity {} != {}",
+                values.len(),
+                self.cols.len()
+            )));
+        }
+        for (c, &v) in self.cols.iter_mut().zip(values) {
+            c.push(v);
+        }
+        let id = self.n;
+        self.n += 1;
+        Ok(id)
+    }
+
+    pub fn len(&self) -> u32 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Value of attribute `a` for entity `i`.
+    #[inline]
+    pub fn value(&self, a: usize, i: u32) -> Code {
+        self.cols[a][i as usize]
+    }
+
+    pub fn validate(&self, schema: &Schema, et: usize) -> Result<()> {
+        let ety = &schema.entities[et];
+        if self.cols.len() != ety.attrs.len() {
+            return Err(Error::Data(format!(
+                "entity table {} has {} columns, schema says {}",
+                ety.name,
+                self.cols.len(),
+                ety.attrs.len()
+            )));
+        }
+        for (a, col) in self.cols.iter().enumerate() {
+            if col.len() != self.n as usize {
+                return Err(Error::Data(format!(
+                    "{}.{} column length mismatch",
+                    ety.name, ety.attrs[a].name
+                )));
+            }
+            let card = ety.attrs[a].card;
+            if let Some(&bad) = col.iter().find(|&&v| v >= card) {
+                return Err(Error::Data(format!(
+                    "{}.{} value {} out of range 0..{}",
+                    ety.name, ety.attrs[a].name, bad, card
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.cols.iter().map(|c| c.capacity() * 4).sum()
+    }
+}
+
+/// A columnar relationship table: tuples `(from, to)` with attribute
+/// columns.  At most one tuple per `(from, to)` pair (set semantics with
+/// attributes), matching the paper's relational model.
+#[derive(Clone, Debug, Default)]
+pub struct RelTable {
+    pub from: Vec<u32>,
+    pub to: Vec<u32>,
+    /// `cols[a][t]` = raw value (`0..card`) of rel attribute `a` for
+    /// tuple `t`.
+    pub cols: Vec<Vec<Code>>,
+}
+
+impl RelTable {
+    pub fn new(n_attrs: usize) -> Self {
+        RelTable { from: Vec::new(), to: Vec::new(), cols: vec![Vec::new(); n_attrs] }
+    }
+
+    /// Append one tuple; duplicate-pair checking happens at index build.
+    pub fn push(&mut self, from: u32, to: u32, values: &[Code]) -> Result<u32> {
+        if values.len() != self.cols.len() {
+            return Err(Error::Data(format!(
+                "rel row arity {} != {}",
+                values.len(),
+                self.cols.len()
+            )));
+        }
+        self.from.push(from);
+        self.to.push(to);
+        for (c, &v) in self.cols.iter_mut().zip(values) {
+            c.push(v);
+        }
+        Ok(self.from.len() as u32 - 1)
+    }
+
+    pub fn len(&self) -> u32 {
+        self.from.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.from.is_empty()
+    }
+
+    #[inline]
+    pub fn value(&self, a: usize, t: u32) -> Code {
+        self.cols[a][t as usize]
+    }
+
+    pub fn validate(&self, schema: &Schema, rt: usize) -> Result<()> {
+        let rty = &schema.relationships[rt];
+        if self.cols.len() != rty.attrs.len() {
+            return Err(Error::Data(format!(
+                "rel table {} has {} columns, schema says {}",
+                rty.name,
+                self.cols.len(),
+                rty.attrs.len()
+            )));
+        }
+        if self.to.len() != self.from.len() {
+            return Err(Error::Data(format!("{} from/to length mismatch", rty.name)));
+        }
+        for (a, col) in self.cols.iter().enumerate() {
+            if col.len() != self.from.len() {
+                return Err(Error::Data(format!(
+                    "{}.{} column length mismatch",
+                    rty.name, rty.attrs[a].name
+                )));
+            }
+            let card = rty.attrs[a].card;
+            if let Some(&bad) = col.iter().find(|&&v| v >= card) {
+                return Err(Error::Data(format!(
+                    "{}.{} value {} out of range 0..{}",
+                    rty.name, rty.attrs[a].name, bad, card
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn bytes(&self) -> usize {
+        (self.from.capacity() + self.to.capacity()) * 4
+            + self.cols.iter().map(|c| c.capacity() * 4).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::schema::{Attribute, EntityType, RelationshipType};
+
+    fn schema() -> Schema {
+        Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![Attribute::new("x", 2)] },
+                EntityType { name: "B".into(), attrs: vec![] },
+            ],
+            vec![RelationshipType {
+                name: "R".into(),
+                from: 0,
+                to: 1,
+                attrs: vec![Attribute::new("w", 3)],
+            }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn entity_push_and_validate() {
+        let s = schema();
+        let mut t = EntityTable::new(1);
+        assert_eq!(t.push(&[0]).unwrap(), 0);
+        assert_eq!(t.push(&[1]).unwrap(), 1);
+        assert!(t.push(&[0, 1]).is_err()); // arity
+        t.validate(&s, 0).unwrap();
+        assert_eq!(t.value(0, 1), 1);
+    }
+
+    #[test]
+    fn entity_rejects_out_of_range() {
+        let s = schema();
+        let mut t = EntityTable::new(1);
+        t.push(&[5]).unwrap();
+        assert!(t.validate(&s, 0).is_err());
+    }
+
+    #[test]
+    fn rel_push_and_validate() {
+        let s = schema();
+        let mut t = RelTable::new(1);
+        t.push(0, 0, &[2]).unwrap();
+        t.push(1, 0, &[0]).unwrap();
+        t.validate(&s, 0).unwrap();
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.value(0, 0), 2);
+    }
+
+    #[test]
+    fn rel_rejects_bad_value() {
+        let s = schema();
+        let mut t = RelTable::new(1);
+        t.push(0, 0, &[3]).unwrap();
+        assert!(t.validate(&s, 0).is_err());
+    }
+}

@@ -1,0 +1,50 @@
+//! Categorical value coding conventions.
+//!
+//! All attribute values are dense u32 codes.  The conventions used across
+//! the whole stack (Rust sparse ct-tables, the dense Pallas layout, and
+//! the synthetic generators) are:
+//!
+//! - **Entity attributes**: raw codes `0..card`, ct-table dimension =
+//!   `card`.
+//! - **Relationship attributes**: ct-table dimension = `card + 1`; code
+//!   `0` is the distinguished **N/A** value taken exactly when the
+//!   relationship indicator is false (paper Table 3: `Capa(P,S) = N/A`
+//!   whenever `RA(P,S) = F`), and codes `1..=card` are the real values
+//!   shifted by one.  Raw table storage keeps unshifted `0..card`.
+//! - **Relationship indicators**: dimension 2, `0 = F`, `1 = T`.
+
+/// A dense categorical value code.
+pub type Code = u32;
+
+/// The N/A code for relationship attributes *in ct-table coordinates*.
+pub const NA: Code = 0;
+
+/// Shift a raw relationship-attribute value into ct-table coordinates.
+#[inline]
+pub fn rel_attr_to_ct(raw: Code) -> Code {
+    raw + 1
+}
+
+/// Unshift a ct-table relationship-attribute code into a raw value.
+/// Returns `None` for N/A.
+#[inline]
+pub fn rel_attr_from_ct(ct: Code) -> Option<Code> {
+    ct.checked_sub(1)
+}
+
+/// Indicator codes.
+pub const IND_FALSE: Code = 0;
+pub const IND_TRUE: Code = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shifts_roundtrip() {
+        for raw in 0..10 {
+            assert_eq!(rel_attr_from_ct(rel_attr_to_ct(raw)), Some(raw));
+        }
+        assert_eq!(rel_attr_from_ct(NA), None);
+    }
+}

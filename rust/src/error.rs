@@ -1,0 +1,78 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the relcount library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A schema reference (entity/relationship/attribute id) is invalid.
+    #[error("schema error: {0}")]
+    Schema(String),
+
+    /// Data violates the schema (bad code, out-of-range id, ...).
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// A contingency-table operation was applied to incompatible tables
+    /// or the value space overflows the flat-key width.
+    #[error("ct-table error: {0}")]
+    Ct(String),
+
+    /// A counting strategy could not serve a family (e.g. no covering
+    /// lattice point).
+    #[error("strategy error: {0}")]
+    Strategy(String),
+
+    /// Structure-learning error.
+    #[error("learn error: {0}")]
+    Learn(String),
+
+    /// PJRT / XLA runtime error.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact manifest problems.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// The streaming pipeline failed (channel closed, shard mismatch...).
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+
+    /// Wall-clock budget exceeded (mirrors the paper's 100-minute Slurm
+    /// limit that ONDEMAND blows on IMDb / Visual Genome).
+    #[error("timeout after {elapsed_ms} ms during {phase}")]
+    Timeout { phase: String, elapsed_ms: u64 },
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// True if this error is the bench-harness timeout.
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, Error::Timeout { .. })
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeout_detection() {
+        let e = Error::Timeout { phase: "positive".into(), elapsed_ms: 12 };
+        assert!(e.is_timeout());
+        assert!(!Error::Schema("x".into()).is_timeout());
+        assert!(e.to_string().contains("positive"));
+    }
+
+    #[test]
+    fn io_conversion() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,228 @@
+//! The relationship lattice (paper Figure 2).
+//!
+//! Chains of relationships form a lattice that structures both the
+//! pre-counting phase (one positive ct-table per lattice point) and the
+//! learn-and-join model search.  Points are *connected* relationship
+//! subsets up to a maximum chain length (default 3, matching FACTORBASE).
+
+use rustc_hash::FxHashMap;
+
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::meta::extract::vars_for_chain;
+use crate::meta::rvar::RVar;
+
+/// One lattice point: a connected relationship chain.
+#[derive(Clone, Debug)]
+pub struct LatticePoint {
+    pub id: usize,
+    /// Sorted relationship ids.
+    pub rels: Vec<usize>,
+    /// Sorted entity types touched by the chain.
+    pub pops: Vec<usize>,
+    /// Non-indicator variables of the chain (entity attrs of `pops` +
+    /// rel attrs of `rels`).
+    pub attr_vars: Vec<RVar>,
+    /// Chain length = number of relationships.
+    pub length: usize,
+    /// Ids of the points directly below (one relationship removed).
+    pub below: Vec<usize>,
+}
+
+impl LatticePoint {
+    /// All variables of the point's *complete* ct-table: indicators of
+    /// its rels plus its attribute variables.
+    pub fn all_vars(&self) -> Vec<RVar> {
+        let mut vs: Vec<RVar> =
+            self.rels.iter().map(|&rel| RVar::RelInd { rel }).collect();
+        vs.extend(self.attr_vars.iter().copied());
+        vs
+    }
+}
+
+/// The relationship lattice.
+#[derive(Clone, Debug)]
+pub struct Lattice {
+    /// Points sorted by (length, rels).
+    pub points: Vec<LatticePoint>,
+    by_rels: FxHashMap<Vec<usize>, usize>,
+    pub max_length: usize,
+}
+
+impl Lattice {
+    /// Build all connected chains up to `max_length` relationships.
+    pub fn build(schema: &Schema, max_length: usize) -> Result<Self> {
+        if max_length == 0 {
+            return Err(Error::Schema("max_length must be >= 1".into()));
+        }
+        let n_rels = schema.relationships.len();
+        let mut chains: Vec<Vec<usize>> = Vec::new();
+        let mut seen: FxHashMap<Vec<usize>, ()> = FxHashMap::default();
+        // length 1
+        for r in 0..n_rels {
+            chains.push(vec![r]);
+            seen.insert(vec![r], ());
+        }
+        // extend
+        let mut frontier: Vec<Vec<usize>> = chains.clone();
+        for _len in 2..=max_length {
+            let mut next = Vec::new();
+            for chain in &frontier {
+                let pops = schema.populations_of(chain);
+                for r in 0..n_rels {
+                    if chain.contains(&r) {
+                        continue;
+                    }
+                    let (a, b) = schema.rel_endpoints(r);
+                    if !pops.contains(&a) && !pops.contains(&b) {
+                        continue; // stay connected
+                    }
+                    let mut ext = chain.clone();
+                    ext.push(r);
+                    ext.sort_unstable();
+                    if seen.insert(ext.clone(), ()).is_none() {
+                        chains.push(ext.clone());
+                        next.push(ext);
+                    }
+                }
+            }
+            if next.is_empty() {
+                break;
+            }
+            frontier = next;
+        }
+        chains.sort_by_key(|c| (c.len(), c.clone()));
+
+        let mut by_rels = FxHashMap::default();
+        let mut points = Vec::with_capacity(chains.len());
+        for (id, rels) in chains.into_iter().enumerate() {
+            by_rels.insert(rels.clone(), id);
+            points.push(LatticePoint {
+                id,
+                pops: schema.populations_of(&rels),
+                attr_vars: vars_for_chain(schema, &rels),
+                length: rels.len(),
+                below: Vec::new(),
+                rels,
+            });
+        }
+        // subset links (one rel removed)
+        let below_of = |rels: &[usize], by: &FxHashMap<Vec<usize>, usize>| {
+            let mut out = Vec::new();
+            if rels.len() > 1 {
+                for skip in 0..rels.len() {
+                    let sub: Vec<usize> = rels
+                        .iter()
+                        .enumerate()
+                        .filter(|&(i, _)| i != skip)
+                        .map(|(_, &r)| r)
+                        .collect();
+                    if let Some(&id) = by.get(&sub) {
+                        out.push(id);
+                    }
+                }
+            }
+            out
+        };
+        for p in &mut points {
+            p.below = below_of(&p.rels, &by_rels);
+        }
+        Ok(Lattice { points, by_rels, max_length })
+    }
+
+    /// Look up a point by its (sorted) relationship set.
+    pub fn point(&self, rels: &[usize]) -> Option<&LatticePoint> {
+        let mut key = rels.to_vec();
+        key.sort_unstable();
+        self.by_rels.get(&key).map(|&id| &self.points[id])
+    }
+
+    /// Smallest lattice point whose relationship set covers `rels` and
+    /// whose populations cover `pops`.  Points are stored by ascending
+    /// length, so the first hit is minimal.
+    pub fn covering_point(&self, rels: &[usize], pops: &[usize]) -> Option<&LatticePoint> {
+        self.points.iter().find(|p| {
+            rels.iter().all(|r| p.rels.contains(r))
+                && pops.iter().all(|e| p.pops.contains(e))
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+    use crate::db::schema::{Attribute, EntityType, RelationshipType};
+
+    #[test]
+    fn university_lattice() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 3).unwrap();
+        // chains: {RA}, {Registered}, {RA, Registered}
+        assert_eq!(l.len(), 3);
+        assert_eq!(l.points[0].length, 1);
+        assert_eq!(l.points[2].rels, vec![0, 1]);
+        assert_eq!(l.points[2].pops, vec![0, 1, 2]);
+        assert_eq!(l.points[2].below.len(), 2);
+    }
+
+    #[test]
+    fn covering_point_minimal() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 3).unwrap();
+        let p = l.covering_point(&[0], &[0, 1]).unwrap();
+        assert_eq!(p.rels, vec![0]);
+        // needs Course population too -> the 2-chain
+        let p2 = l.covering_point(&[0], &[0, 1, 2]).unwrap();
+        assert_eq!(p2.rels, vec![0, 1]);
+        assert!(l.covering_point(&[5], &[]).is_none());
+    }
+
+    #[test]
+    fn max_length_respected() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 1).unwrap();
+        assert_eq!(l.len(), 2);
+        assert!(l.point(&[0, 1]).is_none());
+    }
+
+    #[test]
+    fn disconnected_rels_not_chained() {
+        // two relationships with no shared entity type
+        let s = Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![] },
+                EntityType { name: "B".into(), attrs: vec![] },
+                EntityType { name: "C".into(), attrs: vec![] },
+                EntityType { name: "D".into(), attrs: vec![Attribute::new("x", 2)] },
+            ],
+            vec![
+                RelationshipType { name: "R1".into(), from: 0, to: 1, attrs: vec![] },
+                RelationshipType { name: "R2".into(), from: 2, to: 3, attrs: vec![] },
+            ],
+        )
+        .unwrap();
+        let l = Lattice::build(&s, 3).unwrap();
+        assert_eq!(l.len(), 2); // no {R1, R2} point
+        assert!(l.point(&[0, 1]).is_none());
+    }
+
+    #[test]
+    fn all_vars_include_indicators() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 3).unwrap();
+        let top = l.point(&[0, 1]).unwrap();
+        let vars = top.all_vars();
+        assert!(vars.contains(&RVar::RelInd { rel: 0 }));
+        assert!(vars.contains(&RVar::RelInd { rel: 1 }));
+        assert_eq!(vars.len(), 2 + top.attr_vars.len());
+    }
+}

@@ -1,0 +1,147 @@
+//! Scoring backends: where BDeu family scores are computed.
+//!
+//! The search evaluates whole hill-climb neighborhoods at once, so the
+//! backend receives *batches* of family count matrices:
+//!
+//! - [`RustBackend`] — the in-process scalar scorer (`ln_gamma` loops).
+//! - [`XlaBackend`]  — the AOT-compiled Pallas kernel via PJRT, dispatched
+//!   through the micro-batcher (`bdeu_batch` artifact, 64 families per
+//!   dispatch).  Families exceeding the artifact's padded (q, r) fall
+//!   back to the Rust scalar path transparently.
+//!
+//! Both backends are cross-checked to 1e-9 in `rust/tests/
+//! runtime_artifacts.rs`; the `kernels` bench measures the tradeoff
+//! (on CPU-PJRT the dispatch overhead dominates; on a real accelerator
+//! the batched path is the point — see DESIGN.md §Perf).
+
+use crate::error::Result;
+use crate::learn::score::ln_gamma;
+use crate::runtime::batcher::{FamilyCounts, ScoreBatcher};
+use crate::runtime::client::Runtime;
+
+/// A batched BDeu scorer.
+pub trait ScoreBackend {
+    fn name(&self) -> &'static str;
+    /// Scores for a batch of family count matrices (Eq. 1 without the
+    /// structure prior).
+    fn scores(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>>;
+}
+
+/// Scalar BDeu on a dense (q, r) matrix.
+pub fn bdeu_matrix(req: &FamilyCounts) -> f64 {
+    let ar = req.alpha_row();
+    let ac = req.alpha_cell();
+    let lg_ar = ln_gamma(ar);
+    let lg_ac = ln_gamma(ac);
+    let mut s = 0.0;
+    for j in 0..req.q {
+        let row = &req.counts[j * req.r..(j + 1) * req.r];
+        let nij: f64 = row.iter().sum();
+        if nij > 0.0 {
+            s += lg_ar - ln_gamma(nij + ar);
+            for &c in row {
+                if c > 0.0 {
+                    s += ln_gamma(c + ac) - lg_ac;
+                }
+            }
+        }
+    }
+    s
+}
+
+/// The in-process scorer.
+#[derive(Default)]
+pub struct RustBackend;
+
+impl ScoreBackend for RustBackend {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn scores(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>> {
+        Ok(reqs.iter().map(bdeu_matrix).collect())
+    }
+}
+
+/// The PJRT-backed scorer (owns its runtime; not `Send`).
+pub struct XlaBackend {
+    rt: Runtime,
+    /// Families scored through the artifact vs via scalar fallback.
+    pub xla_scored: u64,
+    pub fallback_scored: u64,
+    pub dispatches: u64,
+}
+
+impl XlaBackend {
+    /// Load artifacts from the default directory (`RELCOUNT_ARTIFACTS`
+    /// or `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&crate::runtime::default_artifact_dir())
+    }
+
+    pub fn load(dir: &std::path::Path) -> Result<Self> {
+        Ok(XlaBackend {
+            rt: Runtime::load(dir)?,
+            xla_scored: 0,
+            fallback_scored: 0,
+            dispatches: 0,
+        })
+    }
+}
+
+impl ScoreBackend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn scores(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>> {
+        let mut batcher = ScoreBatcher::new(&self.rt)?;
+        let mut out = vec![0.0; reqs.len()];
+        // split: artifact-sized families go through PJRT, the rest scalar
+        let mut xla_idx = Vec::new();
+        let mut xla_reqs = Vec::new();
+        for (i, req) in reqs.iter().enumerate() {
+            if batcher.fits(req.q, req.r) {
+                xla_idx.push(i);
+                xla_reqs.push(req.clone());
+            } else {
+                out[i] = bdeu_matrix(req);
+                self.fallback_scored += 1;
+            }
+        }
+        if !xla_reqs.is_empty() {
+            let scores = batcher.score_all(&xla_reqs)?;
+            for (i, s) in xla_idx.into_iter().zip(scores) {
+                out[i] = s;
+            }
+            self.xla_scored += xla_reqs.len() as u64;
+            self.dispatches += batcher.dispatches;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_backend_matches_scalar() {
+        let req = FamilyCounts {
+            counts: vec![3.0, 0.0, 5.0, 2.0, 1.0, 0.0],
+            q: 3,
+            r: 2,
+            n_prime: 1.0,
+        };
+        let mut b = RustBackend;
+        let got = b.scores(std::slice::from_ref(&req)).unwrap()[0];
+        assert!((got - bdeu_matrix(&req)).abs() < 1e-15);
+        assert_eq!(b.name(), "rust");
+    }
+
+    #[test]
+    fn bdeu_matrix_zero_counts() {
+        let req = FamilyCounts { counts: vec![0.0; 8], q: 4, r: 2, n_prime: 2.0 };
+        assert_eq!(bdeu_matrix(&req), 0.0);
+    }
+}

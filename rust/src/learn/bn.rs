@@ -1,0 +1,183 @@
+//! First-order Bayesian networks: a DAG over first-order random
+//! variables, with the MP/N statistic of the paper's Table 4.
+
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::meta::family::Family;
+use crate::meta::rvar::RVar;
+
+/// A directed graphical model over first-order variables.
+#[derive(Clone, Debug, Default)]
+pub struct Bn {
+    /// Node variables (stable order).
+    pub nodes: Vec<RVar>,
+    /// `parents[i]` = indexes into `nodes` (sorted).
+    pub parents: Vec<Vec<usize>>,
+}
+
+impl Bn {
+    pub fn new(nodes: Vec<RVar>) -> Self {
+        let n = nodes.len();
+        Bn { nodes, parents: vec![Vec::new(); n] }
+    }
+
+    pub fn node_pos(&self, v: &RVar) -> Option<usize> {
+        self.nodes.iter().position(|n| n == v)
+    }
+
+    /// Add a node if not present; returns its index.
+    pub fn ensure_node(&mut self, v: RVar) -> usize {
+        if let Some(i) = self.node_pos(&v) {
+            return i;
+        }
+        self.nodes.push(v);
+        self.parents.push(Vec::new());
+        self.nodes.len() - 1
+    }
+
+    pub fn has_edge(&self, parent: usize, child: usize) -> bool {
+        self.parents[child].contains(&parent)
+    }
+
+    /// Add `parent -> child`; fails on self-loops, duplicates, cycles.
+    pub fn add_edge(&mut self, parent: usize, child: usize) -> Result<()> {
+        if parent == child {
+            return Err(Error::Learn("self-loop".into()));
+        }
+        if self.has_edge(parent, child) {
+            return Err(Error::Learn("duplicate edge".into()));
+        }
+        if self.reaches(child, parent) {
+            return Err(Error::Learn("edge would create a cycle".into()));
+        }
+        self.parents[child].push(parent);
+        self.parents[child].sort_unstable();
+        Ok(())
+    }
+
+    pub fn remove_edge(&mut self, parent: usize, child: usize) -> Result<()> {
+        let before = self.parents[child].len();
+        self.parents[child].retain(|&p| p != parent);
+        if self.parents[child].len() == before {
+            return Err(Error::Learn("no such edge".into()));
+        }
+        Ok(())
+    }
+
+    /// Is `to` reachable from `from` along directed edges
+    /// (parent -> child direction)?
+    pub fn reaches(&self, from: usize, to: usize) -> bool {
+        if from == to {
+            return true;
+        }
+        // children adjacency on the fly (graphs here are small)
+        let mut stack = vec![from];
+        let mut seen = vec![false; self.nodes.len()];
+        seen[from] = true;
+        while let Some(x) = stack.pop() {
+            for (c, ps) in self.parents.iter().enumerate() {
+                if ps.contains(&x) && !seen[c] {
+                    if c == to {
+                        return true;
+                    }
+                    seen[c] = true;
+                    stack.push(c);
+                }
+            }
+        }
+        false
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.parents.iter().map(|p| p.len()).sum()
+    }
+
+    /// Mean number of parents per node — Table 4's MP/N.
+    pub fn mean_parents_per_node(&self) -> f64 {
+        if self.nodes.is_empty() {
+            return 0.0;
+        }
+        self.n_edges() as f64 / self.nodes.len() as f64
+    }
+
+    /// The family of a node (child + its parents).
+    pub fn family(&self, child: usize) -> Family {
+        Family::new(
+            self.nodes[child],
+            self.parents[child].iter().map(|&p| self.nodes[p]).collect(),
+        )
+    }
+
+    /// All families.
+    pub fn families(&self) -> Vec<Family> {
+        (0..self.nodes.len()).map(|i| self.family(i)).collect()
+    }
+
+    /// Human-readable listing.
+    pub fn display(&self, schema: &Schema) -> String {
+        let mut out = String::new();
+        for i in 0..self.nodes.len() {
+            out.push_str(&self.family(i).display(schema));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    fn nodes() -> Vec<RVar> {
+        vec![
+            RVar::EntityAttr { et: 0, attr: 0 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+            RVar::RelInd { rel: 0 },
+        ]
+    }
+
+    #[test]
+    fn edges_and_cycles() {
+        let mut bn = Bn::new(nodes());
+        bn.add_edge(0, 1).unwrap();
+        bn.add_edge(1, 2).unwrap();
+        assert!(bn.add_edge(2, 0).is_err()); // cycle
+        assert!(bn.add_edge(0, 0).is_err());
+        assert!(bn.add_edge(0, 1).is_err()); // dup
+        assert_eq!(bn.n_edges(), 2);
+        bn.remove_edge(0, 1).unwrap();
+        assert!(bn.remove_edge(0, 1).is_err());
+        assert_eq!(bn.n_edges(), 1);
+    }
+
+    #[test]
+    fn mpn() {
+        let mut bn = Bn::new(nodes());
+        assert_eq!(bn.mean_parents_per_node(), 0.0);
+        bn.add_edge(0, 2).unwrap();
+        bn.add_edge(1, 2).unwrap();
+        assert!((bn.mean_parents_per_node() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn families_and_display() {
+        let s = university_schema();
+        let mut bn = Bn::new(nodes());
+        bn.add_edge(0, 2).unwrap();
+        let fam = bn.family(2);
+        assert_eq!(fam.child, RVar::RelInd { rel: 0 });
+        assert_eq!(fam.parents.len(), 1);
+        let d = bn.display(&s);
+        assert!(d.contains("RA(P,S) <- popularity(P)"));
+    }
+
+    #[test]
+    fn ensure_node_idempotent() {
+        let mut bn = Bn::new(vec![]);
+        let a = bn.ensure_node(RVar::RelInd { rel: 0 });
+        let b = bn.ensure_node(RVar::RelInd { rel: 0 });
+        assert_eq!(a, b);
+        assert_eq!(bn.nodes.len(), 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! First-order Bayesian-network structure learning: the BDeu score
+//! (Equation 1 of the paper) computed from ct-tables, and the
+//! learn-and-join lattice search (Schulte & Khosravi 2012) that generates
+//! the family-counting workload the three strategies serve.
+
+pub mod backend;
+pub mod bn;
+pub mod score;
+pub mod search;
+
+pub use backend::{RustBackend, ScoreBackend, XlaBackend};
+pub use bn::Bn;
+pub use score::{bdeu_from_ct, ln_gamma};
+pub use search::{learn, learn_with_backend, LearnedModel, SearchConfig};

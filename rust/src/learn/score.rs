@@ -1,0 +1,258 @@
+//! BDeu scoring from ct-tables (paper Equation 1, Table 1), plus the
+//! `ln Γ` implementation it rests on.
+//!
+//! The same score has two other implementations in this stack: the
+//! pure-jnp reference (`python/compile/kernels/ref.py`) and the Pallas
+//! kernel behind the `bdeu_batch` XLA artifact; `rust/tests/
+//! runtime_artifacts.rs` cross-checks all three.
+
+use rustc_hash::FxHashMap;
+
+use crate::ct::cttable::CtTable;
+use crate::error::{Error, Result};
+use crate::meta::rvar::RVar;
+
+/// `ln Γ(x)` for `x > 0` via the Lanczos approximation (g = 7, n = 9),
+/// accurate to ~1e-13 relative — matching `jax.lax.lgamma` well within
+/// the 1e-9 tolerance used by the cross-layer tests.
+pub fn ln_gamma(x: f64) -> f64 {
+    const G: f64 = 7.0;
+    const C: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_59,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    debug_assert!(x > 0.0, "ln_gamma({x})");
+    if x < 0.5 {
+        // reflection: Γ(x) Γ(1-x) = π / sin(πx)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = C[0];
+    let t = x + G + 0.5;
+    for (i, &c) in C.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// BDeu family score from a complete family ct-table.
+///
+/// `child` must be a column of `ct`; all other columns are the parents.
+/// `n_prime` is the equivalent sample size N'.  The structure prior
+/// `log P(B)` is *not* included (the search adds it).
+///
+/// q_i is the full parent configuration space (product of parent dims,
+/// N/A values included), exactly as in the paper's Table 1.
+pub fn bdeu_from_ct(ct: &CtTable, child: &RVar, n_prime: f64) -> Result<f64> {
+    let child_pos = ct.var_pos(child)?;
+    let r = ct.dims[child_pos] as f64;
+    let q: f64 = ct
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != child_pos)
+        .map(|(_, &d)| d as f64)
+        .product();
+    if n_prime <= 0.0 {
+        return Err(Error::Learn(format!("n_prime must be positive, got {n_prime}")));
+    }
+    let alpha_row = n_prime / q;
+    let alpha_cell = n_prime / (q * r);
+
+    // Single pass: cell terms directly, parent-config sums N_ij for the
+    // row terms.  Parent key: strip the child column out of the flat key.
+    let child_stride = ct.stride(child_pos);
+    let child_dim = ct.dims[child_pos] as u128;
+    let mut nij: FxHashMap<u128, i128> = FxHashMap::default();
+    let mut score = 0.0;
+    let lg_ac = ln_gamma(alpha_cell);
+    for (key, count) in ct.iter_keys() {
+        if count < 0 {
+            return Err(Error::Learn("negative count in family ct".into()));
+        }
+        if count == 0 {
+            continue;
+        }
+        score += ln_gamma(count as f64 + alpha_cell) - lg_ac;
+        // remove the child digit from the mixed-radix key
+        let low = key % child_stride;
+        let high = key / (child_stride * child_dim);
+        *nij.entry(high * child_stride + low).or_insert(0) += count;
+    }
+    let lg_ar = ln_gamma(alpha_row);
+    for (_, n) in nij {
+        score += lg_ar - ln_gamma(n as f64 + alpha_row);
+    }
+    Ok(score)
+}
+
+/// Largest dense (q x r) matrix worth materializing for the batched
+/// backends; families beyond this stay on the sparse scalar path.
+pub const MAX_MATRIX_CELLS: usize = 1 << 20;
+
+/// Densify a family ct-table into the (parent-config, child-value) count
+/// matrix consumed by the batched score backends, or `None` when the
+/// parent configuration space is too large to materialize.
+pub fn family_matrix(
+    ct: &CtTable,
+    child: &RVar,
+    n_prime: f64,
+) -> Result<Option<crate::runtime::batcher::FamilyCounts>> {
+    let child_pos = ct.var_pos(child)?;
+    let r = ct.dims[child_pos] as usize;
+    let mut q: usize = 1;
+    for (i, &d) in ct.dims.iter().enumerate() {
+        if i != child_pos {
+            q = match q.checked_mul(d as usize) {
+                Some(v) if v * r <= MAX_MATRIX_CELLS => v,
+                _ => return Ok(None),
+            };
+        }
+    }
+    let mut counts = vec![0.0; q * r];
+    for (vals, c) in ct.iter_rows() {
+        let mut j = 0usize;
+        for (i, v) in vals.iter().enumerate() {
+            if i != child_pos {
+                j = j * ct.dims[i] as usize + *v as usize;
+            }
+        }
+        counts[j * r + vals[child_pos] as usize] += c as f64;
+    }
+    Ok(Some(crate::runtime::batcher::FamilyCounts { counts, q, r, n_prime }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    #[test]
+    fn family_matrix_agrees_with_sparse_scorer() {
+        let db = university_db();
+        let vars = vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ];
+        let ct = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+        let child = RVar::EntityAttr { et: 1, attr: 0 };
+        let m = family_matrix(&ct, &child, 1.0).unwrap().unwrap();
+        assert_eq!(m.q, 2 * 4);
+        assert_eq!(m.r, 3);
+        let via_matrix = crate::learn::backend::bdeu_matrix(&m);
+        let via_sparse = bdeu_from_ct(&ct, &child, 1.0).unwrap();
+        assert!((via_matrix - via_sparse).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1) = Γ(2) = 1, Γ(5) = 24, Γ(0.5) = sqrt(π)
+        assert!((ln_gamma(1.0)).abs() < 1e-12);
+        assert!((ln_gamma(2.0)).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-11);
+        let sqrt_pi = std::f64::consts::PI.sqrt();
+        assert!((ln_gamma(0.5) - sqrt_pi.ln()).abs() < 1e-12);
+        // recurrence Γ(x+1) = x Γ(x) across magnitudes
+        for &x in &[0.1, 0.7, 1.3, 4.5, 20.0, 123.456, 1e6] {
+            let lhs = ln_gamma(x + 1.0);
+            let rhs = x.ln() + ln_gamma(x);
+            assert!((lhs - rhs).abs() < 1e-9 * lhs.abs().max(1.0), "x={x}");
+        }
+    }
+
+    /// Transparent scalar re-derivation (mirrors ref.bdeu_scalar_ref).
+    fn bdeu_scalar(counts: &[Vec<i128>], ar: f64, ac: f64) -> f64 {
+        let mut total = 0.0;
+        for row in counts {
+            let nij: i128 = row.iter().sum();
+            if nij <= 0 {
+                continue;
+            }
+            total += ln_gamma(ar) - ln_gamma(nij as f64 + ar);
+            for &c in row {
+                if c > 0 {
+                    total += ln_gamma(c as f64 + ac) - ln_gamma(ac);
+                }
+            }
+        }
+        total
+    }
+
+    #[test]
+    fn matches_scalar_reference_on_family() {
+        let db = university_db();
+        let vars = vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 }, // salary = child
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ];
+        let ct = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+        let child = RVar::RelAttr { rel: 0, attr: 1 };
+        let n_prime = 1.0;
+        let got = bdeu_from_ct(&ct, &child, n_prime).unwrap();
+
+        // rebuild the (q, r) matrix by hand: parents = {RA, intelligence}
+        let q = 2 * 3;
+        let r = 4;
+        let mut m = vec![vec![0i128; r]; q];
+        for (v, c) in ct.iter_rows() {
+            let j = (v[0] * 3 + v[2]) as usize;
+            m[j][v[1] as usize] += c;
+        }
+        let want = bdeu_scalar(&m, n_prime / q as f64, n_prime / (q * r) as f64);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+    }
+
+    #[test]
+    fn empty_table_scores_zero() {
+        let db = university_db();
+        let ct = CtTable::new(
+            &db.schema,
+            vec![RVar::RelInd { rel: 0 }, RVar::EntityAttr { et: 0, attr: 0 }],
+        )
+        .unwrap();
+        let s = bdeu_from_ct(&ct, &RVar::RelInd { rel: 0 }, 1.0).unwrap();
+        assert_eq!(s, 0.0);
+    }
+
+    #[test]
+    fn more_parents_can_lower_score() {
+        // adding an independent random parent should not raise the score
+        let db = university_db();
+        let child = RVar::EntityAttr { et: 1, attr: 0 };
+        let small = brute_force_complete(&db, &[child], &[1]).unwrap();
+        let s_small = bdeu_from_ct(&small, &child, 1.0).unwrap();
+        let big = brute_force_complete(
+            &db,
+            &[child, RVar::EntityAttr { et: 0, attr: 0 }],
+            &[0, 1],
+        )
+        .unwrap();
+        let s_big = bdeu_from_ct(&big, &child, 1.0).unwrap();
+        // counts in `big` are over P x S (larger grounding), so compare
+        // against the same child marginal recomputed in that context
+        let small_ctx =
+            brute_force_complete(&db, &[child], &[0, 1]).unwrap();
+        let s_small_ctx = bdeu_from_ct(&small_ctx, &child, 1.0).unwrap();
+        assert!(s_big <= s_small_ctx + 1e-9);
+        let _ = s_small;
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let db = university_db();
+        let ct = CtTable::new(&db.schema, vec![RVar::RelInd { rel: 0 }]).unwrap();
+        assert!(bdeu_from_ct(&ct, &RVar::RelInd { rel: 1 }, 1.0).is_err());
+        assert!(bdeu_from_ct(&ct, &RVar::RelInd { rel: 0 }, 0.0).is_err());
+    }
+}

@@ -1,0 +1,52 @@
+//! # relcount
+//!
+//! A reproduction of *"Pre and Post Counting for Scalable
+//! Statistical-Relational Model Discovery"* (Mar & Schulte, 2021) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! The library provides, from scratch:
+//!
+//! - an in-memory columnar **relational database engine** ([`db`]) with
+//!   GROUP-BY counting and k-way INNER-JOIN chain counting (the paper's
+//!   *JOIN problem*),
+//! - **first-order metadata** extraction ([`meta`]) and the
+//!   **relationship lattice** ([`lattice`]) of FACTORBASE,
+//! - **contingency tables** ([`ct`]) with projection, cross-product
+//!   extension and the **Möbius Join** (the paper's *negation problem*),
+//!   in both an exact sparse form and a dense padded form matching the
+//!   Pallas kernel layout,
+//! - the three **count-caching strategies** ([`strategies`]):
+//!   `PRECOUNT` (Algorithm 1), `ONDEMAND` (Algorithm 2) and the paper's
+//!   contribution `HYBRID` (Algorithm 3),
+//! - **BDeu-scored structure learning** ([`learn`]) with the
+//!   learn-and-join lattice search,
+//! - a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled XLA
+//!   artifacts produced by `python/compile/aot.py` (Pallas kernels for
+//!   the Möbius butterfly and batched BDeu) and a score micro-batcher,
+//! - a **streaming ingestion pipeline** ([`pipeline`]) with sharded
+//!   builders, backpressure, and incremental positive-count maintenance,
+//! - seeded **synthetic dataset generators** ([`datagen`]) with one
+//!   preset per benchmark database of the paper's Table 4,
+//! - **metrics** ([`metrics`]) reproducing the paper's runtime breakdown
+//!   (MetaData / positive ct / negative ct) and memory profiling, and
+//! - the **experiment harness** ([`bench`]) regenerating every table and
+//!   figure of the paper's evaluation.
+//!
+//! See `DESIGN.md` for the architecture and the experiment index, and
+//! `EXPERIMENTS.md` for measured results.
+
+pub mod bench;
+pub mod ct;
+pub mod datagen;
+pub mod db;
+pub mod error;
+pub mod lattice;
+pub mod learn;
+pub mod meta;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod strategies;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,246 @@
+//! `relcount` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   gen        --preset <name> --scale <f> --seed <n> --out <dir>
+//!   count      --preset <name>|--db <dir> --strategy <pre|post|hybrid>
+//!   learn      --preset <name>|--db <dir> --strategy <...> [--xla]
+//!   exp        fig3|fig4|table4|table5  --scale <f> --budget-s <n>
+//!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
+//!
+//! Examples:
+//!   relcount learn --preset uw --strategy hybrid
+//!   relcount exp fig3 --scale 0.05 --budget-s 120
+//!   relcount gen --preset imdb --scale 0.1 --out /tmp/imdb
+
+use std::path::Path;
+use std::process::ExitCode;
+use std::time::Duration;
+
+use relcount::bench::driver::{run_strategy, Workload};
+use relcount::bench::experiments::{
+    fig3_fig4_rows, table4_rows, table5_rows, ExpConfig,
+};
+use relcount::datagen::generator::generate;
+use relcount::datagen::presets::{preset, PRESET_NAMES};
+use relcount::db::catalog::Database;
+use relcount::db::loader;
+use relcount::error::{Error, Result};
+use relcount::learn::search::{learn, SearchConfig};
+use relcount::metrics::report::{render_fig3, render_fig4, render_table4, render_table5};
+use relcount::runtime::client::Runtime;
+use relcount::strategies::StrategyKind;
+use relcount::util::cli::Args;
+
+const USAGE: &str = "\
+relcount — pre/post/hybrid count caching for SRL model discovery
+
+USAGE:
+  relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
+  relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
+  relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F] [--xla]
+  relcount exp <fig3|fig4|table4|table5> [--scale F] [--budget-s N] [--presets a,b]
+  relcount artifacts [--dir <artifacts>]
+  relcount presets
+
+  strategies: precount | ondemand | hybrid      presets: uw mondial hepatitis
+  mutagenesis movielens financial imdb visual_genome
+";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn load_db(args: &Args) -> Result<(String, Database)> {
+    if let Some(dir) = args.get("db") {
+        let db = loader::load(Path::new(dir))?;
+        return Ok((dir.to_string(), db));
+    }
+    let name = args
+        .get("preset")
+        .ok_or_else(|| Error::Data("need --preset <name> or --db <dir>".into()))?;
+    let scale = args.get_f64("scale", 0.05)?;
+    let seed = args.get_usize("seed", 0)? as u64;
+    let cfg = preset(name, scale, seed)?;
+    eprintln!(
+        "generating preset {} (scale {scale}, ~{} rows)...",
+        cfg.name,
+        cfg.total_rows()
+    );
+    Ok((cfg.name.clone(), generate(&cfg)?))
+}
+
+fn strategy_kind(args: &Args) -> Result<StrategyKind> {
+    let s = args.get_or("strategy", "hybrid");
+    StrategyKind::parse(s)
+        .ok_or_else(|| Error::Data(format!("unknown strategy {s:?} (pre|post|hybrid)")))
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command.as_deref() {
+        Some("gen") => {
+            let name = args
+                .get("preset")
+                .ok_or_else(|| Error::Data("need --preset".into()))?;
+            let out = args.get("out").ok_or_else(|| Error::Data("need --out".into()))?;
+            let scale = args.get_f64("scale", 1.0)?;
+            let seed = args.get_usize("seed", 0)? as u64;
+            let cfg = preset(name, scale, seed)?;
+            let db = generate(&cfg)?;
+            loader::save(&db, Path::new(out))?;
+            println!(
+                "wrote {} ({} rows, {} relationships) to {out}",
+                cfg.name,
+                db.total_rows(),
+                db.n_relationships()
+            );
+            Ok(())
+        }
+        Some("count") => {
+            let (name, db) = load_db(&args)?;
+            let kind = strategy_kind(&args)?;
+            let budget = budget_of(&args)?;
+            let out = run_strategy(&db, &name, kind, Workload::PrepareOnly, budget)?;
+            print!("{}", render_fig3(&[out.row.clone()]));
+            print!("{}", render_fig4(&[out.row]));
+            println!(
+                "joins: {} chain queries, {} rows enumerated; ct rows generated: {}",
+                out.report.join_stats.chain_queries,
+                out.report.join_stats.rows_enumerated,
+                out.report.ct_rows_generated
+            );
+            Ok(())
+        }
+        Some("learn") => {
+            let (name, db) = load_db(&args)?;
+            let kind = strategy_kind(&args)?;
+            let cfg = SearchConfig {
+                max_parents: args.get_usize("max-parents", 4)?,
+                n_prime: args.get_f64("n-prime", 1.0)?,
+                ..Default::default()
+            };
+            let mut strategy = kind.build(
+                &db,
+                relcount::strategies::traits::StrategyConfig {
+                    budget: budget_of(&args)?,
+                    ..Default::default()
+                },
+            )?;
+            let model = if args.has("xla") {
+                // score through the AOT-compiled Pallas kernel (batched)
+                let mut backend = relcount::learn::backend::XlaBackend::load_default()?;
+                let m = relcount::learn::search::learn_with_backend(
+                    &db,
+                    strategy.as_mut(),
+                    &mut backend,
+                    cfg,
+                )?;
+                println!(
+                    "scored via XLA: {} families / {} PJRT dispatches \
+                     ({} scalar fallbacks)",
+                    backend.xla_scored, backend.dispatches, backend.fallback_scored
+                );
+                m
+            } else {
+                learn(&db, strategy.as_mut(), cfg)?
+            };
+            println!("learned first-order BN for {name} with {}:", kind.name());
+            print!("{}", model.bn.display(&db.schema));
+            println!(
+                "score: {:.3}  MP/N: {:.2}  families scored: {} (cache hits {})",
+                model.total_score,
+                model.bn.mean_parents_per_node(),
+                model.families_scored,
+                model.score_cache_hits
+            );
+            Ok(())
+        }
+        Some("exp") => {
+            let which = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .ok_or_else(|| Error::Data("exp needs fig3|fig4|table4|table5".into()))?;
+            let cfg = exp_config(&args)?;
+            match which {
+                "fig3" => print!("{}", render_fig3(&fig3_fig4_rows(&cfg)?)),
+                "fig4" => print!("{}", render_fig4(&fig3_fig4_rows(&cfg)?)),
+                "table4" => print!("{}", render_table4(&table4_rows(&cfg)?)),
+                "table5" => print!("{}", render_table5(&table5_rows(&cfg)?)),
+                other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
+            }
+            Ok(())
+        }
+        Some("artifacts") => {
+            let dir = args.get_or("dir", "artifacts").to_string();
+            let rt = Runtime::load(Path::new(&dir))?;
+            println!("loaded {} artifacts from {dir}:", rt.manifest.artifacts.len());
+            for (name, spec) in &rt.manifest.artifacts {
+                println!(
+                    "  {name}: {} -> {} ({} inputs)",
+                    spec.file,
+                    spec.outputs[0].name,
+                    spec.inputs.len()
+                );
+            }
+            // smoke: empty batch scores zero
+            let spec = rt.manifest.artifact("bdeu_batch")?;
+            let b = spec.meta_dim("b_pad")?;
+            let q = spec.meta_dim("q_pad")?;
+            let r = spec.meta_dim("r_pad")?;
+            let scores =
+                rt.bdeu_batch(&vec![0.0; b * q * r], &vec![1.0; b], &vec![0.5; b])?;
+            if scores.iter().any(|&s| s != 0.0) {
+                return Err(Error::Runtime("smoke test failed: nonzero scores".into()));
+            }
+            println!("bdeu_batch smoke test ok ({} slots, all-zero batch -> 0.0)", b);
+            Ok(())
+        }
+        Some("presets") => {
+            for p in PRESET_NAMES {
+                let cfg = preset(p, 1.0, 0)?;
+                println!(
+                    "{p:<16} rows {:>10}  relationships {}",
+                    cfg.total_rows(),
+                    cfg.rels.len()
+                );
+            }
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn budget_of(args: &Args) -> Result<Option<Duration>> {
+    Ok(match args.get_usize("budget-s", 0)? {
+        0 => None,
+        s => Some(Duration::from_secs(s as u64)),
+    })
+}
+
+fn exp_config(args: &Args) -> Result<ExpConfig> {
+    let mut cfg = ExpConfig {
+        scale: args.get_f64("scale", 0.05)?,
+        budget: budget_of(args)?.or(Some(Duration::from_secs(120))),
+        seed: args.get_usize("seed", 0)? as u64,
+        ..Default::default()
+    };
+    if let Some(list) = args.get("presets") {
+        // leak: tiny, once-per-process, keeps ExpConfig Copy-friendly
+        let names: Vec<&'static str> = list
+            .split(',')
+            .map(|s| &*Box::leak(s.trim().to_string().into_boxed_str()))
+            .collect();
+        cfg.presets = Box::leak(names.into_boxed_slice());
+    }
+    Ok(cfg)
+}

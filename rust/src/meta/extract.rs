@@ -1,0 +1,181 @@
+//! Metadata extraction — the paper's "MetaData" runtime component.
+//!
+//! FACTORBASE's first stage extracts the first-order-logic view of the
+//! database (the 1rvs), generates the relationship lattice, and generates
+//! the *metaqueries* that drive the dynamic SQL.  Our equivalent builds
+//! [`Metadata`]: the variable universe, per-chain variable lists, and a
+//! [`QueryPlan`] (join order) per lattice chain.  The wall-clock cost of
+//! this stage is what Figure 3 reports as "MetaData".
+
+use crate::db::catalog::Database;
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::meta::rvar::RVar;
+
+/// A join plan for one relationship chain: the order in which the
+/// backtracking join enumerates relationship tables, chosen greedily
+/// smallest-table-first subject to connectivity (each step shares an
+/// entity variable with the already-joined prefix, so every step can use
+/// an FK index instead of a cross product).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueryPlan {
+    /// The chain (sorted relationship ids).
+    pub chain: Vec<usize>,
+    /// Join order (a permutation of `chain`).
+    pub join_order: Vec<usize>,
+    /// All variables of the chain's ct-table (entity attrs of the chain's
+    /// populations + rel attrs of the chain's rels), in canonical order.
+    pub vars: Vec<RVar>,
+    /// The chain's populations (sorted entity type ids).
+    pub pops: Vec<usize>,
+}
+
+/// Extracted first-order metadata for a database.
+#[derive(Clone, Debug, Default)]
+pub struct Metadata {
+    /// Every 1rv of the schema.
+    pub all_vars: Vec<RVar>,
+    /// Per entity type: its attribute variables.
+    pub entity_vars: Vec<Vec<RVar>>,
+    /// Per relationship: its attribute variables (not the indicator).
+    pub rel_attr_vars: Vec<Vec<RVar>>,
+}
+
+/// All non-indicator variables associated with a chain: entity attributes
+/// of the chain's populations plus rel attributes of the chain's rels.
+pub fn vars_for_chain(schema: &Schema, rels: &[usize]) -> Vec<RVar> {
+    let mut vars = Vec::new();
+    for &et in &schema.populations_of(rels) {
+        for attr in 0..schema.entities[et].attrs.len() {
+            vars.push(RVar::EntityAttr { et, attr });
+        }
+    }
+    for &rel in rels {
+        for attr in 0..schema.relationships[rel].attrs.len() {
+            vars.push(RVar::RelAttr { rel, attr });
+        }
+    }
+    vars.sort_unstable();
+    vars
+}
+
+/// Attribute variables of a single entity type.
+pub fn vars_for_entity(schema: &Schema, et: usize) -> Vec<RVar> {
+    (0..schema.entities[et].attrs.len())
+        .map(|attr| RVar::EntityAttr { et, attr })
+        .collect()
+}
+
+/// Greedy join order: repeatedly pick the smallest not-yet-joined rel
+/// table that connects to the joined prefix (first pick = smallest).
+pub fn plan_chain(db: &Database, chain: &[usize]) -> Result<QueryPlan> {
+    if chain.is_empty() {
+        return Err(Error::Schema("cannot plan an empty chain".into()));
+    }
+    if !db.schema.is_connected(chain) {
+        return Err(Error::Schema(format!("chain {chain:?} is not connected")));
+    }
+    let mut remaining: Vec<usize> = chain.to_vec();
+    let mut order = Vec::with_capacity(chain.len());
+    let mut pops: Vec<usize> = Vec::new();
+    while !remaining.is_empty() {
+        let pick = remaining
+            .iter()
+            .copied()
+            .filter(|&r| {
+                if order.is_empty() {
+                    true
+                } else {
+                    let (a, b) = db.schema.rel_endpoints(r);
+                    pops.contains(&a) || pops.contains(&b)
+                }
+            })
+            .min_by_key(|&r| db.rels[r].len())
+            .expect("connected chain always has a connectable next rel");
+        let (a, b) = db.schema.rel_endpoints(pick);
+        if !pops.contains(&a) {
+            pops.push(a);
+        }
+        if !pops.contains(&b) {
+            pops.push(b);
+        }
+        order.push(pick);
+        remaining.retain(|&r| r != pick);
+    }
+    pops.sort_unstable();
+    let mut chain_sorted = chain.to_vec();
+    chain_sorted.sort_unstable();
+    Ok(QueryPlan {
+        chain: chain_sorted,
+        join_order: order,
+        vars: vars_for_chain(&db.schema, chain),
+        pops,
+    })
+}
+
+impl Metadata {
+    /// Extract all 1rvs from the schema.
+    pub fn extract(db: &Database) -> Self {
+        let schema = &db.schema;
+        let mut all_vars = Vec::new();
+        let mut entity_vars = Vec::new();
+        for et in 0..schema.entities.len() {
+            let vs = vars_for_entity(schema, et);
+            all_vars.extend(vs.iter().copied());
+            entity_vars.push(vs);
+        }
+        let mut rel_attr_vars = Vec::new();
+        for rel in 0..schema.relationships.len() {
+            let mut vs = Vec::new();
+            for attr in 0..schema.relationships[rel].attrs.len() {
+                vs.push(RVar::RelAttr { rel, attr });
+            }
+            all_vars.extend(vs.iter().copied());
+            all_vars.push(RVar::RelInd { rel });
+            rel_attr_vars.push(vs);
+        }
+        all_vars.sort_unstable();
+        Metadata { all_vars, entity_vars, rel_attr_vars }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+
+    #[test]
+    fn extracts_all_vars() {
+        let db = university_db();
+        let md = Metadata::extract(&db);
+        // 3 entity attrs + 3 rel attrs + 2 indicators
+        assert_eq!(md.all_vars.len(), 8);
+        assert_eq!(md.entity_vars.len(), 3);
+        assert_eq!(md.rel_attr_vars[0].len(), 2);
+    }
+
+    #[test]
+    fn chain_vars_cover_populations() {
+        let db = university_db();
+        let vars = vars_for_chain(&db.schema, &[0, 1]);
+        // all 3 entity attrs + 3 rel attrs
+        assert_eq!(vars.len(), 6);
+    }
+
+    #[test]
+    fn plans_are_connected_orders() {
+        let db = university_db();
+        let plan = plan_chain(&db, &[0, 1]).unwrap();
+        assert_eq!(plan.join_order.len(), 2);
+        assert_eq!(plan.pops, vec![0, 1, 2]);
+        // Registered (rel 1) has more tuples than RA? pick smallest first
+        let first = plan.join_order[0];
+        assert!(db.rels[first].len() <= db.rels[plan.join_order[1]].len());
+    }
+
+    #[test]
+    fn empty_chain_rejected() {
+        let db = university_db();
+        assert!(plan_chain(&db, &[]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Families: a child variable plus its parent set — the unit the model
+//! search scores and therefore the unit of post-counting.
+
+use crate::db::schema::Schema;
+use crate::meta::rvar::RVar;
+
+/// A model family (child + parents), the paper's "local pattern".
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Family {
+    pub child: RVar,
+    /// Parents in canonical (sorted) order.
+    pub parents: Vec<RVar>,
+}
+
+/// Canonical cache key for a family (order-insensitive in the parents).
+pub type FamilyKey = (RVar, Vec<RVar>);
+
+impl Family {
+    pub fn new(child: RVar, mut parents: Vec<RVar>) -> Self {
+        parents.sort_unstable();
+        parents.dedup();
+        Family { child, parents }
+    }
+
+    /// All variables, parents first then child — the ct-table column
+    /// order used throughout.
+    pub fn vars(&self) -> Vec<RVar> {
+        let mut v = self.parents.clone();
+        v.push(self.child);
+        v
+    }
+
+    /// Cache key.
+    pub fn key(&self) -> FamilyKey {
+        (self.child, self.parents.clone())
+    }
+
+    /// Relationships referenced by any variable (indicator or attribute),
+    /// sorted and deduplicated.  These are the axes of the Möbius Join.
+    pub fn rels(&self) -> Vec<usize> {
+        let mut rels: Vec<usize> = self.vars().iter().filter_map(|v| v.rel()).collect();
+        rels.sort_unstable();
+        rels.dedup();
+        rels
+    }
+
+    /// Entity types whose populations ground this family (before
+    /// extension to a context lattice point).
+    pub fn populations(&self, schema: &Schema) -> Vec<usize> {
+        let mut pops: Vec<usize> =
+            self.vars().iter().flat_map(|v| v.populations(schema)).collect();
+        pops.sort_unstable();
+        pops.dedup();
+        pops
+    }
+
+    /// Number of parent configurations q_i = prod of parent dims.
+    pub fn q(&self, schema: &Schema) -> u64 {
+        self.parents.iter().map(|p| p.dim(schema) as u64).product()
+    }
+
+    /// Number of child values r_i.
+    pub fn r(&self, schema: &Schema) -> u64 {
+        self.child.dim(schema) as u64
+    }
+
+    /// Human-readable form, e.g. `salary(P,S) <- RA(P,S), capability(P,S)`.
+    pub fn display(&self, schema: &Schema) -> String {
+        if self.parents.is_empty() {
+            format!("{} <- ()", self.child.name(schema))
+        } else {
+            let ps: Vec<String> =
+                self.parents.iter().map(|p| p.name(schema)).collect();
+            format!("{} <- {}", self.child.name(schema), ps.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    #[test]
+    fn canonical_parent_order() {
+        let a = Family::new(
+            RVar::RelAttr { rel: 0, attr: 1 },
+            vec![RVar::RelInd { rel: 0 }, RVar::RelAttr { rel: 0, attr: 0 }],
+        );
+        let b = Family::new(
+            RVar::RelAttr { rel: 0, attr: 1 },
+            vec![RVar::RelAttr { rel: 0, attr: 0 }, RVar::RelInd { rel: 0 }],
+        );
+        assert_eq!(a, b);
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn paper_example_family() {
+        // Salary(P,S) <- RA(P,S), Capa(P,S): q = 2 * 6, r = 4 (3 + N/A)
+        let s = university_schema();
+        let f = Family::new(
+            RVar::RelAttr { rel: 0, attr: 1 },
+            vec![RVar::RelInd { rel: 0 }, RVar::RelAttr { rel: 0, attr: 0 }],
+        );
+        assert_eq!(f.q(&s), 12);
+        assert_eq!(f.r(&s), 4);
+        assert_eq!(f.rels(), vec![0]);
+        assert_eq!(f.populations(&s), vec![0, 1]);
+        assert!(f.display(&s).starts_with("salary(P,S) <- "));
+    }
+
+    #[test]
+    fn cross_rel_family() {
+        let s = university_schema();
+        let f = Family::new(
+            RVar::EntityAttr { et: 1, attr: 0 },
+            vec![RVar::RelInd { rel: 0 }, RVar::RelInd { rel: 1 }],
+        );
+        assert_eq!(f.rels(), vec![0, 1]);
+        assert_eq!(f.populations(&s), vec![0, 1, 2]);
+        assert_eq!(f.q(&s), 4);
+    }
+}

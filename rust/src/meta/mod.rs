@@ -1,0 +1,11 @@
+//! First-order metadata: random variables (1rvs), families, and the
+//! metadata-extraction phase whose wall-clock time is the paper's
+//! "MetaData" runtime component.
+
+pub mod extract;
+pub mod family;
+pub mod rvar;
+
+pub use extract::{Metadata, QueryPlan};
+pub use family::{Family, FamilyKey};
+pub use rvar::RVar;

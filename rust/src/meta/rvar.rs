@@ -1,0 +1,124 @@
+//! First-order random variables (functor nodes).
+//!
+//! Following the paper's language bias, variables range over *types* of
+//! individuals, never specific individuals: `gender(U)`, `grade(S, C)`,
+//! `Registered(S, C)`.  Three kinds exist:
+//!
+//! - [`RVar::EntityAttr`] — an attribute of an entity type,
+//! - [`RVar::RelAttr`]    — an attribute of a relationship; its ct-table
+//!   dimension includes the distinguished N/A value (code 0) taken when
+//!   the relationship is false,
+//! - [`RVar::RelInd`]     — a relationship indicator with values F/T.
+
+use crate::db::schema::Schema;
+
+/// A first-order random variable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum RVar {
+    /// `attrs[attr]` of entity type `et`, e.g. `intelligence(S)`.
+    EntityAttr { et: usize, attr: usize },
+    /// `attrs[attr]` of relationship `rel`, e.g. `grade(S, C)`.
+    RelAttr { rel: usize, attr: usize },
+    /// The indicator of relationship `rel`, e.g. `Registered(S, C)`.
+    RelInd { rel: usize },
+}
+
+impl RVar {
+    /// ct-table dimension (number of value codes) of this variable.
+    pub fn dim(&self, schema: &Schema) -> u32 {
+        match *self {
+            RVar::EntityAttr { et, attr } => schema.entities[et].attrs[attr].card,
+            // +1 for the N/A code 0
+            RVar::RelAttr { rel, attr } => schema.relationships[rel].attrs[attr].card + 1,
+            RVar::RelInd { .. } => 2,
+        }
+    }
+
+    /// Human-readable functor name, e.g. `grade(S,C)`.
+    pub fn name(&self, schema: &Schema) -> String {
+        match *self {
+            RVar::EntityAttr { et, attr } => {
+                let e = &schema.entities[et];
+                format!("{}({})", e.attrs[attr].name, initial(&e.name))
+            }
+            RVar::RelAttr { rel, attr } => {
+                let r = &schema.relationships[rel];
+                format!(
+                    "{}({},{})",
+                    r.attrs[attr].name,
+                    initial(&schema.entities[r.from].name),
+                    initial(&schema.entities[r.to].name)
+                )
+            }
+            RVar::RelInd { rel } => {
+                let r = &schema.relationships[rel];
+                format!(
+                    "{}({},{})",
+                    r.name,
+                    initial(&schema.entities[r.from].name),
+                    initial(&schema.entities[r.to].name)
+                )
+            }
+        }
+    }
+
+    /// The relationship this variable belongs to, if any.
+    pub fn rel(&self) -> Option<usize> {
+        match *self {
+            RVar::RelAttr { rel, .. } | RVar::RelInd { rel } => Some(rel),
+            RVar::EntityAttr { .. } => None,
+        }
+    }
+
+    /// Entity types whose populations this variable's groundings range
+    /// over.
+    pub fn populations(&self, schema: &Schema) -> Vec<usize> {
+        match *self {
+            RVar::EntityAttr { et, .. } => vec![et],
+            RVar::RelAttr { rel, .. } | RVar::RelInd { rel } => {
+                let (a, b) = schema.rel_endpoints(rel);
+                vec![a, b]
+            }
+        }
+    }
+
+    /// True for indicator variables.
+    pub fn is_indicator(&self) -> bool {
+        matches!(self, RVar::RelInd { .. })
+    }
+}
+
+fn initial(name: &str) -> String {
+    name.chars().next().map(|c| c.to_string()).unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    #[test]
+    fn dims_follow_conventions() {
+        let s = university_schema();
+        assert_eq!(RVar::EntityAttr { et: 1, attr: 0 }.dim(&s), 3);
+        // capability card 5 -> dim 6 with N/A
+        assert_eq!(RVar::RelAttr { rel: 0, attr: 0 }.dim(&s), 6);
+        assert_eq!(RVar::RelInd { rel: 0 }.dim(&s), 2);
+    }
+
+    #[test]
+    fn names_are_readable() {
+        let s = university_schema();
+        assert_eq!(RVar::RelAttr { rel: 0, attr: 1 }.name(&s), "salary(P,S)");
+        assert_eq!(RVar::RelInd { rel: 1 }.name(&s), "Registered(S,C)");
+        assert_eq!(RVar::EntityAttr { et: 1, attr: 0 }.name(&s), "intelligence(S)");
+    }
+
+    #[test]
+    fn populations_and_rel() {
+        let s = university_schema();
+        assert_eq!(RVar::RelInd { rel: 0 }.populations(&s), vec![0, 1]);
+        assert_eq!(RVar::RelInd { rel: 0 }.rel(), Some(0));
+        assert_eq!(RVar::EntityAttr { et: 2, attr: 0 }.rel(), None);
+    }
+}

@@ -1,0 +1,73 @@
+//! Memory accounting for Figure 4.
+//!
+//! The paper reports the peak resident set of the counting process.  The
+//! quantity that actually differs between strategies is the bytes held in
+//! ct-tables and caches, so we track those exactly (allocator- and
+//! GC-independent), and additionally sample Linux `VmHWM` for an
+//! end-to-end sanity number.
+
+/// Exact byte accounting of live ct-table/cache memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MemTracker {
+    pub current_bytes: usize,
+    pub peak_bytes: usize,
+}
+
+impl MemTracker {
+    pub fn add(&mut self, bytes: usize) {
+        self.current_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes);
+    }
+
+    pub fn sub(&mut self, bytes: usize) {
+        self.current_bytes = self.current_bytes.saturating_sub(bytes);
+    }
+
+    /// Record a transient allocation that lives only within one
+    /// operation (counts toward the peak, not the current level).
+    pub fn observe_transient(&mut self, bytes: usize) {
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes + bytes);
+    }
+
+    pub fn merge_peak(&mut self, other: &MemTracker) {
+        self.peak_bytes = self.peak_bytes.max(other.peak_bytes);
+    }
+}
+
+/// Linux `VmHWM` (peak RSS) in kilobytes, if available.
+pub fn vm_hwm_kb() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches(" kB").trim().parse().ok()?;
+            return Some(kb);
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_peak() {
+        let mut m = MemTracker::default();
+        m.add(100);
+        m.add(50);
+        m.sub(120);
+        assert_eq!(m.current_bytes, 30);
+        assert_eq!(m.peak_bytes, 150);
+        m.observe_transient(1000);
+        assert_eq!(m.peak_bytes, 1030);
+        assert_eq!(m.current_bytes, 30);
+    }
+
+    #[test]
+    fn vm_hwm_readable_on_linux() {
+        // present on the CI image; tolerate absence elsewhere
+        if cfg!(target_os = "linux") {
+            assert!(vm_hwm_kb().unwrap_or(0) > 0);
+        }
+    }
+}

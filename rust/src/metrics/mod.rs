@@ -1,0 +1,10 @@
+//! Measurement infrastructure for the paper's evaluation: the 3-component
+//! runtime breakdown of Figure 3 (MetaData / positive ct / negative ct),
+//! the memory profiling of Figure 4, and report rendering.
+
+pub mod memory;
+pub mod report;
+pub mod timing;
+
+pub use memory::MemTracker;
+pub use timing::{Deadline, Phase, PhaseTimer};

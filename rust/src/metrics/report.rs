@@ -1,0 +1,171 @@
+//! Rendering of experiment rows in the shape of the paper's tables and
+//! figures (consumed by the benches, the CLI `exp` subcommand and the
+//! examples).
+
+use std::time::Duration;
+
+/// One bar of Figure 3 / Figure 4: a (strategy, database) cell.
+#[derive(Clone, Debug)]
+pub struct RunRow {
+    pub database: String,
+    pub strategy: String,
+    pub metadata: Duration,
+    pub positive: Duration,
+    pub negative: Duration,
+    /// Exact ct-table/cache peak bytes (Figure 4).
+    pub peak_ct_bytes: usize,
+    /// Total rows over all ct-tables generated (Table 5).
+    pub ct_rows_generated: u64,
+    pub families_scored: u64,
+    /// INNER-JOIN chain queries executed — the scale-free witness of the
+    /// JOIN problem (ONDEMAND's is 10-100x the others').
+    pub chain_queries: u64,
+    pub timed_out: bool,
+}
+
+impl RunRow {
+    pub fn total(&self) -> Duration {
+        self.metadata + self.positive + self.negative
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+/// Figure-3-shaped table: stacked time components per (db, strategy).
+pub fn render_fig3(rows: &[RunRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:<9} {:>10} {:>10} {:>10} {:>10} {:>8}  {}\n",
+        "database", "strategy", "metadata_s", "ct+_s", "ct-_s", "total_s", "joins", "status"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:<9} {:>10} {:>10} {:>10} {:>10} {:>8}  {}\n",
+            r.database,
+            r.strategy,
+            fmt_dur(r.metadata),
+            fmt_dur(r.positive),
+            fmt_dur(r.negative),
+            fmt_dur(r.total()),
+            r.chain_queries,
+            if r.timed_out { "TIMEOUT" } else { "ok" }
+        ));
+    }
+    out
+}
+
+/// Figure-4-shaped table: peak ct memory per (db, strategy).
+pub fn render_fig4(rows: &[RunRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:<9} {:>14}  {}\n",
+        "database", "strategy", "peak_ct_MiB", "status"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:<9} {:>14.3}  {}\n",
+            r.database,
+            r.strategy,
+            r.peak_ct_bytes as f64 / (1024.0 * 1024.0),
+            if r.timed_out { "TIMEOUT" } else { "ok" }
+        ));
+    }
+    out
+}
+
+/// Table-5-shaped rows: ct(family) totals (ONDEMAND/HYBRID) vs
+/// ct(database) totals (PRECOUNT).
+#[derive(Clone, Debug)]
+pub struct Table5Row {
+    pub database: String,
+    pub ct_family_rows: u64,
+    pub ct_database_rows: u64,
+}
+
+pub fn render_table5(rows: &[Table5Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>22} {:>24}\n",
+        "database", "ct(family)_total_rows", "ct(database)_total_rows"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>22} {:>24}\n",
+            r.database, r.ct_family_rows, r.ct_database_rows
+        ));
+    }
+    out
+}
+
+/// Table-4-shaped rows.
+#[derive(Clone, Debug)]
+pub struct Table4Row {
+    pub database: String,
+    pub row_count: u64,
+    pub n_relationships: usize,
+    pub mean_parents_per_node: f64,
+}
+
+pub fn render_table4(rows: &[Table4Row]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>16} {:>6}\n",
+        "database", "row_count", "#relationships", "MP/N"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>12} {:>16} {:>6.1}\n",
+            r.database, r.row_count, r.n_relationships, r.mean_parents_per_node
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row() -> RunRow {
+        RunRow {
+            database: "uw".into(),
+            strategy: "HYBRID".into(),
+            metadata: Duration::from_millis(12),
+            positive: Duration::from_millis(34),
+            negative: Duration::from_millis(56),
+            peak_ct_bytes: 2 * 1024 * 1024,
+            ct_rows_generated: 1234,
+            families_scored: 10,
+            chain_queries: 7,
+            timed_out: false,
+        }
+    }
+
+    #[test]
+    fn renders_all_tables() {
+        let rows = vec![row()];
+        let f3 = render_fig3(&rows);
+        assert!(f3.contains("uw") && f3.contains("HYBRID") && f3.contains("0.056"));
+        let f4 = render_fig4(&rows);
+        assert!(f4.contains("2.000"));
+        let t5 = render_table5(&[Table5Row {
+            database: "uw".into(),
+            ct_family_rows: 15318,
+            ct_database_rows: 2828,
+        }]);
+        assert!(t5.contains("15318"));
+        let t4 = render_table4(&[Table4Row {
+            database: "uw".into(),
+            row_count: 712,
+            n_relationships: 2,
+            mean_parents_per_node: 1.6,
+        }]);
+        assert!(t4.contains("1.6"));
+    }
+
+    #[test]
+    fn total_sums_phases() {
+        assert_eq!(row().total(), Duration::from_millis(102));
+    }
+}

@@ -1,0 +1,139 @@
+//! Phase timing: the paper breaks ct-table construction time into
+//! MetaData, positive ct-table and negative ct-table components
+//! (Figure 3).  [`PhaseTimer`] accumulates wall-clock per phase;
+//! [`Deadline`] reproduces the 100-minute Slurm limit that ONDEMAND
+//! exceeds on the large databases.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+
+/// The paper's three runtime components.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Schema/1rv extraction, lattice generation, metaquery planning.
+    Metadata,
+    /// Positive ct-tables: entity GROUP BYs, chain JOINs, projections.
+    Positive,
+    /// Negative ct-tables: the Möbius Join.
+    Negative,
+}
+
+/// Accumulated wall-clock per phase.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseTimer {
+    pub metadata: Duration,
+    pub positive: Duration,
+    pub negative: Duration,
+}
+
+impl PhaseTimer {
+    /// Run `f`, attributing its wall time to `phase`.
+    pub fn time<T>(&mut self, phase: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(phase, t0.elapsed());
+        out
+    }
+
+    pub fn add(&mut self, phase: Phase, d: Duration) {
+        match phase {
+            Phase::Metadata => self.metadata += d,
+            Phase::Positive => self.positive += d,
+            Phase::Negative => self.negative += d,
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> Duration {
+        match phase {
+            Phase::Metadata => self.metadata,
+            Phase::Positive => self.positive,
+            Phase::Negative => self.negative,
+        }
+    }
+
+    pub fn total(&self) -> Duration {
+        self.metadata + self.positive + self.negative
+    }
+
+    /// Merge another timer into this one.
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        self.metadata += other.metadata;
+        self.positive += other.positive;
+        self.negative += other.negative;
+    }
+}
+
+/// A wall-clock budget.  `check` returns the paper-shaped timeout error
+/// once exceeded.
+#[derive(Clone, Copy, Debug)]
+pub struct Deadline {
+    start: Instant,
+    budget: Option<Duration>,
+}
+
+impl Deadline {
+    pub fn new(budget: Option<Duration>) -> Self {
+        Deadline { start: Instant::now(), budget }
+    }
+
+    pub fn unlimited() -> Self {
+        Deadline::new(None)
+    }
+
+    pub fn check(&self, phase: &str) -> Result<()> {
+        if let Some(b) = self.budget {
+            let elapsed = self.start.elapsed();
+            if elapsed > b {
+                return Err(Error::Timeout {
+                    phase: phase.to_string(),
+                    elapsed_ms: elapsed.as_millis() as u64,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let mut t = PhaseTimer::default();
+        let x = t.time(Phase::Positive, || {
+            std::thread::sleep(Duration::from_millis(5));
+            42
+        });
+        assert_eq!(x, 42);
+        assert!(t.positive >= Duration::from_millis(5));
+        assert_eq!(t.metadata, Duration::ZERO);
+        assert_eq!(t.total(), t.positive);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = PhaseTimer::default();
+        a.add(Phase::Metadata, Duration::from_millis(3));
+        let mut b = PhaseTimer::default();
+        b.add(Phase::Metadata, Duration::from_millis(4));
+        b.add(Phase::Negative, Duration::from_millis(1));
+        a.merge(&b);
+        assert_eq!(a.metadata, Duration::from_millis(7));
+        assert_eq!(a.negative, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn deadline_fires() {
+        let d = Deadline::new(Some(Duration::from_millis(1)));
+        std::thread::sleep(Duration::from_millis(3));
+        let e = d.check("positive").unwrap_err();
+        assert!(e.is_timeout());
+        assert!(Deadline::unlimited().check("x").is_ok());
+    }
+}

@@ -1,0 +1,163 @@
+//! The ingestion orchestrator: producer thread -> bounded channel
+//! (backpressure) -> router applying facts to shard builders and the
+//! incremental counters.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::db::catalog::Database;
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::pipeline::incremental::IncrementalCounts;
+use crate::pipeline::shard::ShardSet;
+use crate::pipeline::source::Fact;
+
+/// Ingestion tuning.
+#[derive(Clone, Copy, Debug)]
+pub struct IngestorConfig {
+    /// Facts per batch message.
+    pub batch_size: usize,
+    /// Bounded channel capacity in batches — the backpressure knob: a
+    /// slow consumer blocks the producer once this many batches queue up.
+    pub channel_batches: usize,
+    /// Maintain incremental counts during ingest.
+    pub incremental_counts: bool,
+}
+
+impl Default for IngestorConfig {
+    fn default() -> Self {
+        IngestorConfig { batch_size: 1024, channel_batches: 8, incremental_counts: true }
+    }
+}
+
+/// What came out of an ingestion run.
+pub struct IngestReport {
+    pub db: Database,
+    pub incremental: Option<IncrementalCounts>,
+    pub facts: u64,
+    pub batches: u64,
+    pub elapsed: std::time::Duration,
+    /// Seconds the producer spent blocked on the full channel.
+    pub producer_blocked: std::time::Duration,
+}
+
+/// Run the pipeline: `producer` yields facts on its own thread; the
+/// calling thread routes them into shard builders (entities must precede
+/// the links that reference them, as in [`crate::pipeline::source::db_to_facts`]).
+pub fn ingest<I>(schema: Schema, producer: I, cfg: IngestorConfig) -> Result<IngestReport>
+where
+    I: IntoIterator<Item = Fact> + Send + 'static,
+    I::IntoIter: Send,
+{
+    if cfg.batch_size == 0 || cfg.channel_batches == 0 {
+        return Err(Error::Pipeline("batch_size/channel_batches must be > 0".into()));
+    }
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::sync_channel::<Vec<Fact>>(cfg.channel_batches);
+    let batch_size = cfg.batch_size;
+    let producer_handle = std::thread::Builder::new()
+        .name("relcount-ingest-producer".into())
+        .spawn(move || -> std::time::Duration {
+            let mut blocked = std::time::Duration::ZERO;
+            let mut batch = Vec::with_capacity(batch_size);
+            for fact in producer {
+                batch.push(fact);
+                if batch.len() == batch_size {
+                    let full = std::mem::replace(&mut batch, Vec::with_capacity(batch_size));
+                    match tx.try_send(full) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(b)) => {
+                            let w0 = Instant::now();
+                            if tx.send(b).is_err() {
+                                return blocked; // consumer died
+                            }
+                            blocked += w0.elapsed();
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => return blocked,
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                let _ = tx.send(batch);
+            }
+            blocked
+        })
+        .map_err(|e| Error::Pipeline(format!("spawn: {e}")))?;
+
+    let mut shards = ShardSet::new(schema.clone());
+    let mut inc = if cfg.incremental_counts {
+        Some(IncrementalCounts::new(schema)?)
+    } else {
+        None
+    };
+    let mut batches = 0u64;
+    for batch in rx {
+        batches += 1;
+        for fact in &batch {
+            shards.apply(fact)?;
+            if let Some(inc) = inc.as_mut() {
+                inc.apply(fact)?;
+            }
+        }
+    }
+    let producer_blocked = producer_handle
+        .join()
+        .map_err(|_| Error::Pipeline("producer panicked".into()))?;
+    let facts = shards.facts_applied;
+    let db = shards.finish()?;
+    Ok(IngestReport {
+        db,
+        incremental: inc,
+        facts,
+        batches,
+        elapsed: t0.elapsed(),
+        producer_blocked,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::{university_db, university_schema};
+    use crate::pipeline::source::db_to_facts;
+
+    #[test]
+    fn end_to_end_rebuild() {
+        let db = university_db();
+        let facts = db_to_facts(&db);
+        let n = facts.len() as u64;
+        let rep = ingest(
+            university_schema(),
+            facts,
+            IngestorConfig { batch_size: 7, channel_batches: 2, incremental_counts: true },
+        )
+        .unwrap();
+        assert_eq!(rep.facts, n);
+        assert!(rep.batches >= n / 7);
+        assert_eq!(rep.db.total_rows(), db.total_rows());
+        assert!(rep.incremental.is_some());
+        assert!(rep.db.has_indexes());
+    }
+
+    #[test]
+    fn zero_config_rejected() {
+        let r = ingest(
+            university_schema(),
+            Vec::<Fact>::new(),
+            IngestorConfig { batch_size: 0, channel_batches: 1, incremental_counts: false },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_db() {
+        let rep = ingest(
+            university_schema(),
+            Vec::<Fact>::new(),
+            IngestorConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(rep.facts, 0);
+        assert_eq!(rep.db.total_rows(), 0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Streaming ingestion pipeline — the L3 data-pipeline coordinator.
+//!
+//! Data facts arrive as a stream (from a generator, a file, or a test
+//! vector), are batched by a producer, pushed through a *bounded* channel
+//! (backpressure), routed by shard to per-table builders, and finalized
+//! into a [`Database`](crate::db::Database).  Positive counts for
+//! single-relationship chains and entity marginals are maintained
+//! *incrementally* during ingestion ([`incremental`]), so a HYBRID
+//! pre-count after ingest starts warm.
+
+pub mod incremental;
+pub mod ingest;
+pub mod shard;
+pub mod source;
+
+pub use incremental::IncrementalCounts;
+pub use ingest::{ingest, IngestReport, IngestorConfig};
+pub use source::{db_to_facts, Fact};

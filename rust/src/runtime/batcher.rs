@@ -1,0 +1,258 @@
+//! The score micro-batcher — the L3 coordinator feature that amortizes
+//! PJRT dispatch cost over many families.
+//!
+//! [`ScoreBatcher`] is the synchronous core: it packs up to `b_pad`
+//! (q, r) count matrices into the `bdeu_batch` artifact's fixed batch
+//! axis per dispatch.  [`ScoreService`] runs a batcher on a dedicated
+//! thread behind an mpsc channel (the PJRT client is not `Send`), giving
+//! the rest of the system a `Send + Clone` scoring handle with dynamic
+//! batching: it drains whatever requests are queued (up to the batch
+//! size) before dispatching.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::runtime::client::Runtime;
+
+/// One family's padded-ready counts.
+#[derive(Clone, Debug)]
+pub struct FamilyCounts {
+    /// Row-major `[q][r]` counts (true dims, unpadded).
+    pub counts: Vec<f64>,
+    pub q: usize,
+    pub r: usize,
+    /// BDeu equivalent sample size N'.
+    pub n_prime: f64,
+}
+
+impl FamilyCounts {
+    pub fn alpha_row(&self) -> f64 {
+        self.n_prime / self.q as f64
+    }
+
+    pub fn alpha_cell(&self) -> f64 {
+        self.n_prime / (self.q * self.r) as f64
+    }
+}
+
+/// Synchronous micro-batcher over a [`Runtime`].
+pub struct ScoreBatcher<'r> {
+    rt: &'r Runtime,
+    b_pad: usize,
+    q_pad: usize,
+    r_pad: usize,
+    /// Batches dispatched (perf accounting).
+    pub dispatches: u64,
+}
+
+impl<'r> ScoreBatcher<'r> {
+    pub fn new(rt: &'r Runtime) -> Result<Self> {
+        let spec = rt.manifest.artifact("bdeu_batch")?;
+        Ok(ScoreBatcher {
+            rt,
+            b_pad: spec.meta_dim("b_pad")?,
+            q_pad: spec.meta_dim("q_pad")?,
+            r_pad: spec.meta_dim("r_pad")?,
+            dispatches: 0,
+        })
+    }
+
+    /// Max families per dispatch.
+    pub fn batch_size(&self) -> usize {
+        self.b_pad
+    }
+
+    /// True if a family fits the artifact's padded dims.
+    pub fn fits(&self, q: usize, r: usize) -> bool {
+        q <= self.q_pad && r <= self.r_pad
+    }
+
+    /// Score many families; chunks into artifact batches, zero-padding
+    /// the tail.  Every family must satisfy [`ScoreBatcher::fits`].
+    pub fn score_all(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(self.b_pad) {
+            out.extend(self.score_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn score_chunk(&mut self, chunk: &[FamilyCounts]) -> Result<Vec<f64>> {
+        debug_assert!(chunk.len() <= self.b_pad);
+        let mut counts = vec![0.0; self.b_pad * self.q_pad * self.r_pad];
+        // padding batches with alpha=1 avoids lgamma(0) while scoring 0
+        let mut ar = vec![1.0; self.b_pad];
+        let mut ac = vec![1.0; self.b_pad];
+        for (b, req) in chunk.iter().enumerate() {
+            if !self.fits(req.q, req.r) {
+                return Err(Error::Runtime(format!(
+                    "family (q={}, r={}) exceeds padded ({}, {})",
+                    req.q, req.r, self.q_pad, self.r_pad
+                )));
+            }
+            if req.counts.len() != req.q * req.r {
+                return Err(Error::Runtime("counts length != q*r".into()));
+            }
+            let base = b * self.q_pad * self.r_pad;
+            for j in 0..req.q {
+                let src = j * req.r;
+                let dst = base + j * self.r_pad;
+                counts[dst..dst + req.r].copy_from_slice(&req.counts[src..src + req.r]);
+            }
+            ar[b] = req.alpha_row();
+            ac[b] = req.alpha_cell();
+        }
+        self.dispatches += 1;
+        let scores = self.rt.bdeu_batch(&counts, &ar, &ac)?;
+        Ok(scores[..chunk.len()].to_vec())
+    }
+}
+
+enum Msg {
+    Score(FamilyCounts, mpsc::Sender<Result<f64>>),
+    Shutdown,
+}
+
+/// A `Send + Clone` scoring handle backed by a dedicated runtime thread
+/// with dynamic batching.
+pub struct ScoreService {
+    tx: mpsc::Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ScoreService {
+    /// Spawn the service; the thread loads its own [`Runtime`] from
+    /// `artifact_dir` (PJRT clients cannot cross threads).
+    pub fn spawn(artifact_dir: PathBuf) -> Result<ScoreService> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let handle = std::thread::Builder::new()
+            .name("relcount-score".into())
+            .spawn(move || {
+                let rt = match Runtime::load(&artifact_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut batcher = match ScoreBatcher::new(&rt) {
+                    Ok(b) => b,
+                    Err(_) => return,
+                };
+                let mut pending: Vec<(FamilyCounts, mpsc::Sender<Result<f64>>)> =
+                    Vec::new();
+                loop {
+                    // block for the first request
+                    match rx.recv() {
+                        Ok(Msg::Score(fc, reply)) => pending.push((fc, reply)),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                    // dynamic batching: drain whatever else is queued
+                    let mut shutdown = false;
+                    while pending.len() < batcher.batch_size() {
+                        match rx.try_recv() {
+                            Ok(Msg::Score(fc, reply)) => pending.push((fc, reply)),
+                            Ok(Msg::Shutdown) => {
+                                shutdown = true;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                    let reqs: Vec<FamilyCounts> =
+                        pending.iter().map(|(fc, _)| fc.clone()).collect();
+                    match batcher.score_all(&reqs) {
+                        Ok(scores) => {
+                            for ((_, reply), s) in pending.drain(..).zip(scores) {
+                                let _ = reply.send(Ok(s));
+                            }
+                        }
+                        Err(e) => {
+                            let msg = e.to_string();
+                            for (_, reply) in pending.drain(..) {
+                                let _ = reply.send(Err(Error::Runtime(msg.clone())));
+                            }
+                        }
+                    }
+                    if shutdown {
+                        break;
+                    }
+                }
+            })
+            .map_err(|e| Error::Runtime(format!("spawn: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("score service died during startup".into()))??;
+        Ok(ScoreService { tx, handle: Some(handle) })
+    }
+
+    /// Score one family (blocks until the batch containing it returns).
+    pub fn score(&self, fc: FamilyCounts) -> Result<f64> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Score(fc, reply_tx))
+            .map_err(|_| Error::Runtime("score service is down".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("score service dropped the request".into()))?
+    }
+
+    /// A cloneable sender for concurrent producers.
+    pub fn sender(&self) -> ScoreSender {
+        ScoreSender { tx: self.tx.clone() }
+    }
+}
+
+/// Cloneable, `Send` handle for submitting score requests.
+#[derive(Clone)]
+pub struct ScoreSender {
+    tx: mpsc::Sender<Msg>,
+}
+
+impl ScoreSender {
+    pub fn score(&self, fc: FamilyCounts) -> Result<f64> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Score(fc, reply_tx))
+            .map_err(|_| Error::Runtime("score service is down".into()))?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("score service dropped the request".into()))?
+    }
+}
+
+impl Drop for ScoreService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alphas() {
+        let fc = FamilyCounts { counts: vec![0.0; 6], q: 3, r: 2, n_prime: 6.0 };
+        assert_eq!(fc.alpha_row(), 2.0);
+        assert_eq!(fc.alpha_cell(), 1.0);
+    }
+
+    #[test]
+    fn service_startup_failure_is_reported() {
+        let e = match ScoreService::spawn(PathBuf::from("/nonexistent/arts")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(e.to_string().contains("manifest"));
+    }
+}

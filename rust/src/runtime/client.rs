@@ -1,0 +1,218 @@
+//! PJRT CPU client + compiled-artifact registry.
+//!
+//! HLO *text* is the interchange format (see `/opt/xla-example/README.md`
+//! and `python/compile/aot.py`): jax >= 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids.  Each artifact is compiled once at load; execution is a
+//! buffer pack / dispatch / tuple unpack.
+
+use std::path::{Path, PathBuf};
+
+use rustc_hash::FxHashMap;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{ArtifactSpec, Dtype, Manifest};
+
+/// Typed input buffer for artifact execution.
+pub enum InputBuf<'a> {
+    F64(&'a [f64]),
+    I32(&'a [i32]),
+}
+
+impl InputBuf<'_> {
+    fn len(&self) -> usize {
+        match self {
+            InputBuf::F64(s) => s.len(),
+            InputBuf::I32(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            InputBuf::F64(_) => Dtype::F64,
+            InputBuf::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+fn xe(e: xla::Error) -> Error {
+    Error::Runtime(e.to_string())
+}
+
+/// A compiled artifact.
+pub struct Artifact {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime (not `Send`: the client is `Rc`-based; use
+/// [`crate::runtime::batcher::ScoreService`] for cross-thread scoring).
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    artifacts: FxHashMap<String, Artifact>,
+    pub dir: PathBuf,
+    /// Number of artifact executions (for perf accounting).
+    pub dispatches: std::cell::Cell<u64>,
+}
+
+impl Runtime {
+    /// Load the manifest and compile every artifact on the CPU client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        let mut artifacts = FxHashMap::default();
+        for (name, spec) in &manifest.artifacts {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Runtime("non-utf8 artifact path".into()))?,
+            )
+            .map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xe)?;
+            artifacts.insert(name.clone(), Artifact { spec: spec.clone(), exe });
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            artifacts,
+            dir: dir.to_path_buf(),
+            dispatches: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("artifact {name:?} not loaded")))
+    }
+
+    /// Execute an artifact.  Inputs are validated against the manifest;
+    /// outputs are returned as f64 vectors (all our artifact outputs are
+    /// f64).
+    pub fn exec(&self, name: &str, inputs: &[InputBuf]) -> Result<Vec<Vec<f64>>> {
+        let art = self.artifact(name)?;
+        let spec = &art.spec;
+        if inputs.len() != spec.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} inputs given, {} expected",
+                inputs.len(),
+                spec.inputs.len()
+            )));
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (buf, ispec) in inputs.iter().zip(&spec.inputs) {
+            if buf.len() != ispec.len() {
+                return Err(Error::Runtime(format!(
+                    "{name}.{}: {} elements given, {} expected",
+                    ispec.name,
+                    buf.len(),
+                    ispec.len()
+                )));
+            }
+            if buf.dtype() != ispec.dtype {
+                return Err(Error::Runtime(format!(
+                    "{name}.{}: dtype mismatch ({} expected)",
+                    ispec.name,
+                    ispec.dtype.name()
+                )));
+            }
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match buf {
+                InputBuf::F64(s) => xla::Literal::vec1(s),
+                InputBuf::I32(s) => xla::Literal::vec1(s),
+            };
+            lits.push(lit.reshape(&dims).map_err(xe)?);
+        }
+        self.dispatches.set(self.dispatches.get() + 1);
+        let result = art.exe.execute::<xla::Literal>(&lits).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        // aot.py lowers with return_tuple=True
+        let parts = result.to_tuple().map_err(xe)?;
+        if parts.len() != spec.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{name}: {} outputs returned, {} expected",
+                parts.len(),
+                spec.outputs.len()
+            )));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            let v = lit.to_vec::<f64>().map_err(xe)?;
+            if v.len() != ospec.len() {
+                return Err(Error::Runtime(format!(
+                    "{name}.{}: output length {} != {}",
+                    ospec.name,
+                    v.len(),
+                    ospec.len()
+                )));
+            }
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    // ---- high-level entry points --------------------------------------
+
+    /// Batched BDeu scores via the `bdeu_batch` artifact.
+    pub fn bdeu_batch(
+        &self,
+        counts: &[f64],
+        alpha_row: &[f64],
+        alpha_cell: &[f64],
+    ) -> Result<Vec<f64>> {
+        let out = self.exec(
+            "bdeu_batch",
+            &[InputBuf::F64(counts), InputBuf::F64(alpha_row), InputBuf::F64(alpha_cell)],
+        )?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Möbius Join over a dense padded family tensor via the `mobius`
+    /// artifact.
+    pub fn mobius(&self, g: &[f64]) -> Result<Vec<f64>> {
+        let out = self.exec("mobius", &[InputBuf::F64(g)])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Fused Möbius + projection + BDeu for one family.
+    pub fn family_score(
+        &self,
+        g: &[f64],
+        seg: &[i32],
+        alpha_row: f64,
+        alpha_cell: f64,
+    ) -> Result<(f64, Vec<f64>)> {
+        let ar = [alpha_row];
+        let ac = [alpha_cell];
+        let mut out = self.exec(
+            "family_score",
+            &[InputBuf::F64(g), InputBuf::I32(seg), InputBuf::F64(&ar), InputBuf::F64(&ac)],
+        )?;
+        let complete = out.pop().unwrap();
+        let score = out.pop().unwrap()[0];
+        Ok((score, complete))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need built artifacts live in
+    // rust/tests/runtime_artifacts.rs (integration), since `cargo test`
+    // may run before `make artifacts` in some workflows.  Here we only
+    // test error paths that need no artifacts.
+    use super::*;
+
+    #[test]
+    fn missing_dir_is_a_manifest_error() {
+        let e = match Runtime::load(Path::new("/nonexistent/relcount-artifacts")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(matches!(e, Error::Manifest(_)), "{e}");
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

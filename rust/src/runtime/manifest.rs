@@ -1,0 +1,200 @@
+//! The artifact manifest contract between `python/compile/aot.py` and the
+//! Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F64,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "float64" => Ok(Dtype::F64),
+            "int32" => Ok(Dtype::I32),
+            other => Err(Error::Manifest(format!("unsupported dtype {other:?}"))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F64 => "float64",
+            Dtype::I32 => "int32",
+        }
+    }
+}
+
+/// One input or output tensor.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl IoSpec {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Padded dims (d_pad, e_pad, q_pad, r_pad, b_pad, k_rel ... as
+    /// emitted by aot.py).
+    pub meta: BTreeMap<String, usize>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_dim(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("{}: missing meta {key:?}", self.name)))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn io_specs(j: &Json, what: &str) -> Result<Vec<IoSpec>> {
+    j.as_arr()
+        .ok_or_else(|| Error::Manifest(format!("{what} not an array")))?
+        .iter()
+        .map(|io| {
+            let name = io
+                .req("name")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest(format!("{what}: name")))?
+                .to_string();
+            let shape = io
+                .req("shape")?
+                .as_arr()
+                .ok_or_else(|| Error::Manifest(format!("{what}: shape")))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| Error::Manifest(format!("{what}: bad dim")))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let dtype = Dtype::parse(
+                io.req("dtype")?
+                    .as_str()
+                    .ok_or_else(|| Error::Manifest(format!("{what}: dtype")))?,
+            )?;
+            Ok(IoSpec { name, shape, dtype })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let format = j.req("format")?.as_str().unwrap_or("");
+        if format != "hlo-text" {
+            return Err(Error::Manifest(format!("unsupported format {format:?}")));
+        }
+        let arts = j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| Error::Manifest("artifacts not an object".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in arts {
+            let file = a
+                .req("file")?
+                .as_str()
+                .ok_or_else(|| Error::Manifest("file".into()))?
+                .to_string();
+            let inputs = io_specs(a.req("inputs")?, "inputs")?;
+            let outputs = io_specs(a.req("outputs")?, "outputs")?;
+            let mut meta = BTreeMap::new();
+            if let Some(m) = a.get("meta").and_then(Json::as_obj) {
+                for (k, v) in m {
+                    if let Some(n) = v.as_usize() {
+                        meta.insert(k.clone(), n);
+                    }
+                }
+            }
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { name: name.clone(), file, inputs, outputs, meta },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json")).map_err(|e| {
+            Error::Manifest(format!(
+                "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        Manifest::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Manifest(format!("unknown artifact {name:?}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "format": "hlo-text",
+      "artifacts": {
+        "bdeu_batch": {
+          "file": "bdeu_batch.hlo.txt",
+          "sha256": "abc",
+          "inputs": [
+            {"name": "counts", "shape": [64, 256, 16], "dtype": "float64"},
+            {"name": "alpha_row", "shape": [64], "dtype": "float64"},
+            {"name": "alpha_cell", "shape": [64], "dtype": "float64"}
+          ],
+          "outputs": [{"name": "scores", "shape": [64], "dtype": "float64"}],
+          "meta": {"b_pad": 64, "q_pad": 256, "r_pad": 16}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_specs() {
+        let m = Manifest::parse(DOC).unwrap();
+        let a = m.artifact("bdeu_batch").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].len(), 64 * 256 * 16);
+        assert_eq!(a.inputs[0].dtype, Dtype::F64);
+        assert_eq!(a.meta_dim("q_pad").unwrap(), 256);
+        assert!(a.meta_dim("nope").is_err());
+        assert!(m.artifact("ghost").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse(r#"{"format": "proto", "artifacts": {}}"#).is_err());
+        assert!(Manifest::parse("[]").is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! The PJRT runtime: loads the AOT-compiled XLA artifacts produced by
+//! `python/compile/aot.py` (HLO text + `manifest.json`) and executes them
+//! from the Rust hot path.  Python never runs here.
+//!
+//! - [`manifest`] — parses `artifacts/manifest.json` (shapes, dtypes,
+//!   padded dims) with the in-tree JSON parser.
+//! - [`client`]   — PJRT CPU client, artifact compilation, typed
+//!   execution, and the high-level `bdeu_batch` / `mobius` /
+//!   `family_score` entry points.
+//! - [`batcher`]  — the score micro-batcher: packs many family count
+//!   matrices into the artifact's fixed batch axis per PJRT dispatch,
+//!   plus a threaded scoring service with a request channel (the PJRT
+//!   client is not `Send`, so the service thread owns its own runtime).
+
+pub mod batcher;
+pub mod client;
+pub mod manifest;
+
+pub use batcher::{FamilyCounts, ScoreBatcher, ScoreService};
+pub use client::Runtime;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$RELCOUNT_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("RELCOUNT_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

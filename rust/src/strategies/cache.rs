@@ -1,0 +1,101 @@
+//! Count caches with exact byte accounting and hit statistics.
+
+use rustc_hash::FxHashMap;
+
+use crate::ct::cttable::CtTable;
+use crate::meta::rvar::RVar;
+use crate::metrics::memory::MemTracker;
+
+/// Cache key: (variables in canonical order, population context).
+pub type CacheKey = (Vec<RVar>, Vec<usize>);
+
+/// A ct-table cache.
+#[derive(Debug, Default)]
+pub struct CtCache {
+    map: FxHashMap<CacheKey, CtTable>,
+    pub mem: MemTracker,
+    pub hits: u64,
+    pub misses: u64,
+    /// Total rows over all tables ever inserted (Table 5 metric).
+    pub rows_inserted: u64,
+}
+
+impl CtCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn key(vars: &[RVar], ctx: &[usize]) -> CacheKey {
+        (vars.to_vec(), ctx.to_vec())
+    }
+
+    pub fn get(&mut self, key: &CacheKey) -> Option<&CtTable> {
+        if self.map.contains_key(key) {
+            self.hits += 1;
+            self.map.get(key)
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Peek without touching hit statistics.
+    pub fn peek(&self, key: &CacheKey) -> Option<&CtTable> {
+        self.map.get(key)
+    }
+
+    pub fn insert(&mut self, key: CacheKey, table: CtTable) {
+        self.rows_inserted += table.n_rows() as u64;
+        self.mem.add(table.bytes());
+        if let Some(old) = self.map.insert(key, table) {
+            self.mem.sub(old.bytes());
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.mem.current_bytes
+    }
+
+    pub fn clear(&mut self) {
+        self.map.clear();
+        self.mem.current_bytes = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_schema;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let s = university_schema();
+        let v = RVar::EntityAttr { et: 0, attr: 0 };
+        let mut c = CtCache::new();
+        let key = CtCache::key(&[v], &[0]);
+        assert!(c.get(&key).is_none());
+        assert_eq!(c.misses, 1);
+
+        let mut t = CtTable::new(&s, vec![v]).unwrap();
+        t.add(&[1], 3).unwrap();
+        let bytes = t.bytes();
+        c.insert(key.clone(), t);
+        assert!(c.get(&key).is_some());
+        assert_eq!(c.hits, 1);
+        assert_eq!(c.bytes(), bytes);
+        assert_eq!(c.rows_inserted, 1);
+        assert!(c.mem.peak_bytes >= bytes);
+
+        c.clear();
+        assert_eq!(c.bytes(), 0);
+        assert!(c.mem.peak_bytes >= bytes); // peak survives clears
+    }
+}

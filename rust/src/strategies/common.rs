@@ -1,0 +1,261 @@
+//! Shared strategy machinery: the timed metadata context, the
+//! lattice-cache [`ChainSource`] (projection instead of JOINs), and the
+//! timing wrapper that attributes positive-vs-negative work inside a
+//! Möbius Join.
+
+use std::time::{Duration, Instant};
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::ChainSource;
+use crate::ct::project::project;
+use crate::db::catalog::Database;
+use crate::db::query::{groupby_entity, positive_chain_ct, JoinStats};
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::lattice::Lattice;
+use crate::meta::extract::{plan_chain, vars_for_entity, Metadata, QueryPlan};
+use crate::meta::rvar::RVar;
+use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
+use crate::strategies::cache::{CtCache, CacheKey};
+
+/// Metadata + lattice + query plans, built during the MetaData phase.
+pub struct LatticeCtx {
+    pub metadata: Metadata,
+    pub lattice: Lattice,
+    pub plans: Vec<QueryPlan>,
+}
+
+impl LatticeCtx {
+    /// Build, attributing wall time to the MetaData phase.
+    pub fn build(
+        db: &Database,
+        max_chain_length: usize,
+        timer: &mut PhaseTimer,
+    ) -> Result<Self> {
+        timer.time(Phase::Metadata, || {
+            let metadata = Metadata::extract(db);
+            let lattice = Lattice::build(&db.schema, max_chain_length)?;
+            let mut plans = Vec::with_capacity(lattice.len());
+            for p in &lattice.points {
+                plans.push(plan_chain(db, &p.rels)?);
+            }
+            Ok(LatticeCtx { metadata, lattice, plans })
+        })
+    }
+}
+
+/// Key for a lattice point's positive ct-table in a [`CtCache`].
+///
+/// The key must identify the *chain*, not just the variable list: two
+/// chains can share `(attr_vars, pops)` when a relationship has no
+/// attributes (e.g. hepatitis' `{Took, ExamBio}` vs `{Took, BioOf,
+/// ExamBio}` — `BioOf` is attribute-less), so the indicator variables of
+/// the chain's rels are prepended to disambiguate.
+pub fn lp_key(rels: &[usize], attr_vars: &[RVar], pops: &[usize]) -> CacheKey {
+    let mut vars: Vec<RVar> = rels.iter().map(|&rel| RVar::RelInd { rel }).collect();
+    vars.extend(attr_vars.iter().copied());
+    CtCache::key(&vars, pops)
+}
+
+/// Key for an entity type's full marginal.
+pub fn entity_key(et: usize) -> CacheKey {
+    (Vec::new(), vec![et])
+}
+
+/// Fill `cache` with the positive ct-table of every lattice point and the
+/// full marginal of every entity type — the pre-counting positive phase
+/// shared by PRECOUNT and HYBRID (Algorithms 1 & 3, lines 1-3).
+pub fn fill_positive_cache(
+    db: &Database,
+    ctx: &LatticeCtx,
+    cache: &mut CtCache,
+    timer: &mut PhaseTimer,
+    deadline: &Deadline,
+    stats: &mut JoinStats,
+) -> Result<()> {
+    // entity marginals (GROUP BY, no JOINs)
+    for et in 0..db.schema.entities.len() {
+        deadline.check("positive ct (entity)")?;
+        let vars = vars_for_entity(&db.schema, et);
+        let t = timer.time(Phase::Positive, || {
+            stats.entity_queries += 1;
+            groupby_entity(db, et, &vars)
+        })?;
+        cache.insert(entity_key(et), t);
+    }
+    // lattice point positives (INNER JOIN GROUP BY)
+    for p in &ctx.lattice.points {
+        deadline.check("positive ct (lattice)")?;
+        let t = timer.time(Phase::Positive, || {
+            positive_chain_ct(db, &p.rels, &p.attr_vars, stats)
+        })?;
+        cache.insert(lp_key(&p.rels, &p.attr_vars, &p.pops), t);
+    }
+    Ok(())
+}
+
+/// A [`ChainSource`] that serves positive counts by *projection from the
+/// lattice cache* — no table JOINs (the pre-counting trick PRECOUNT and
+/// HYBRID share).
+pub struct LatticeCacheSource<'a> {
+    pub db: &'a Database,
+    pub lattice: &'a Lattice,
+    pub cache: &'a mut CtCache,
+}
+
+impl ChainSource for LatticeCacheSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        let p = self.lattice.point(chain).ok_or_else(|| {
+            Error::Strategy(format!(
+                "chain {chain:?} exceeds the lattice (max length {}); \
+                 ONDEMAND must be used",
+                self.lattice.max_length
+            ))
+        })?;
+        let key = lp_key(&p.rels, &p.attr_vars, &p.pops);
+        let full = self
+            .cache
+            .get(&key)
+            .ok_or_else(|| Error::Strategy(format!("positive ct missing for {chain:?}")))?;
+        project(full, vars)
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        let key = entity_key(et);
+        let full = self
+            .cache
+            .get(&key)
+            .ok_or_else(|| Error::Strategy(format!("entity marginal missing for {et}")))?;
+        project(full, vars)
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.db.schema
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.db.population(et) as i128
+    }
+}
+
+/// Wraps a [`ChainSource`], accumulating the wall time spent inside its
+/// positive-count calls, so a Möbius Join's total time can be split into
+/// positive (data access / projection) and negative (inclusion-exclusion)
+/// components.
+pub struct TimedSource<'s> {
+    pub inner: &'s mut dyn ChainSource,
+    pub positive_elapsed: Duration,
+}
+
+impl<'s> TimedSource<'s> {
+    pub fn new(inner: &'s mut dyn ChainSource) -> Self {
+        TimedSource { inner, positive_elapsed: Duration::ZERO }
+    }
+}
+
+impl ChainSource for TimedSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        let t0 = Instant::now();
+        let r = self.inner.positive_chain_ct(chain, vars);
+        self.positive_elapsed += t0.elapsed();
+        r
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        let t0 = Instant::now();
+        let r = self.inner.entity_marginal(et, vars);
+        self.positive_elapsed += t0.elapsed();
+        r
+    }
+
+    fn schema(&self) -> &Schema {
+        self.inner.schema()
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.inner.population(et)
+    }
+}
+
+/// Union of the populations referenced by `vars`.
+pub fn var_pops(schema: &Schema, vars: &[RVar]) -> Vec<usize> {
+    let mut pops: Vec<usize> =
+        vars.iter().flat_map(|v| v.populations(schema)).collect();
+    pops.sort_unstable();
+    pops.dedup();
+    pops
+}
+
+/// Relationships referenced by `vars`.
+pub fn var_rels(vars: &[RVar]) -> Vec<usize> {
+    let mut rels: Vec<usize> = vars.iter().filter_map(|v| v.rel()).collect();
+    rels.sort_unstable();
+    rels.dedup();
+    rels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::{brute_force_complete, mobius_complete};
+    use crate::db::fixtures::university_db;
+
+    #[test]
+    fn lattice_cache_source_matches_direct() {
+        let db = university_db();
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(&db, 3, &mut timer).unwrap();
+        assert!(timer.metadata > Duration::ZERO);
+
+        let mut cache = CtCache::new();
+        let mut stats = JoinStats::default();
+        fill_positive_cache(
+            &db,
+            &ctx,
+            &mut cache,
+            &mut timer,
+            &Deadline::unlimited(),
+            &mut stats,
+        )
+        .unwrap();
+        // 3 entity marginals + 3 lattice points
+        assert_eq!(cache.len(), 6);
+        assert_eq!(stats.chain_queries, 3);
+
+        let vars = vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ];
+        let mut src =
+            LatticeCacheSource { db: &db, lattice: &ctx.lattice, cache: &mut cache };
+        let fast = mobius_complete(&mut src, &vars, &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+        assert_eq!(fast.n_rows(), brute.n_rows());
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(fast.get(&v).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn chain_beyond_lattice_errors() {
+        let db = university_db();
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(&db, 1, &mut timer).unwrap();
+        let mut cache = CtCache::new();
+        let mut stats = JoinStats::default();
+        fill_positive_cache(
+            &db,
+            &ctx,
+            &mut cache,
+            &mut timer,
+            &Deadline::unlimited(),
+            &mut stats,
+        )
+        .unwrap();
+        let mut src =
+            LatticeCacheSource { db: &db, lattice: &ctx.lattice, cache: &mut cache };
+        let e = src.positive_chain_ct(&[0, 1], &[]).unwrap_err();
+        assert!(matches!(e, Error::Strategy(_)));
+    }
+}

@@ -1,0 +1,222 @@
+//! HYBRID (Algorithm 3) — the paper's contribution.
+//!
+//! Pre-counting for the JOIN problem: like PRECOUNT, one positive
+//! ct-table per lattice point is built before search, so scoring never
+//! JOINs (positives come from projections, Alg. 3 line 5).
+//!
+//! Post-counting for the negation problem: like ONDEMAND, the Möbius
+//! Join runs per *family* (Alg. 3 line 6), so the huge complete lattice
+//! tables of PRECOUNT are never materialized.  Assuming small families,
+//! this is the sweet spot that scales to millions of facts.
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::mobius_complete;
+use crate::db::catalog::Database;
+use crate::db::query::JoinStats;
+use crate::error::Result;
+use crate::meta::rvar::RVar;
+use crate::metrics::memory::MemTracker;
+use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
+use crate::strategies::cache::CtCache;
+use crate::strategies::common::{
+    fill_positive_cache, LatticeCacheSource, LatticeCtx, TimedSource,
+};
+use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
+
+/// The HYBRID strategy.
+pub struct Hybrid<'a> {
+    db: &'a Database,
+    cfg: StrategyConfig,
+    ctx: LatticeCtx,
+    /// Positive lattice ct-tables + entity marginals (the pre-count).
+    positive: CtCache,
+    /// Post-counting cache of family ct-tables.
+    family_cache: CtCache,
+    timer: PhaseTimer,
+    deadline: Deadline,
+    join_stats: JoinStats,
+    mem: MemTracker,
+    families_served: u64,
+    rows_generated: u64,
+    prepared: bool,
+}
+
+impl<'a> Hybrid<'a> {
+    pub fn new(db: &'a Database, cfg: StrategyConfig) -> Result<Self> {
+        let deadline = Deadline::new(cfg.budget);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(db, cfg.max_chain_length, &mut timer)?;
+        Ok(Hybrid {
+            db,
+            cfg,
+            ctx,
+            positive: CtCache::new(),
+            family_cache: CtCache::new(),
+            timer,
+            deadline,
+            join_stats: JoinStats::default(),
+            mem: MemTracker::default(),
+            families_served: 0,
+            rows_generated: 0,
+            prepared: false,
+        })
+    }
+}
+
+impl CountingStrategy for Hybrid<'_> {
+    fn name(&self) -> &'static str {
+        "HYBRID"
+    }
+
+    /// Positive phase only (Alg. 3 lines 1-3): JOIN once per lattice
+    /// point, **no** Möbius here.
+    fn prepare(&mut self) -> Result<()> {
+        if self.prepared {
+            return Ok(());
+        }
+        fill_positive_cache(
+            self.db,
+            &self.ctx,
+            &mut self.positive,
+            &mut self.timer,
+            &self.deadline,
+            &mut self.join_stats,
+        )?;
+        self.prepared = true;
+        Ok(())
+    }
+
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        if !self.prepared {
+            self.prepare()?;
+        }
+        self.deadline.check("family count (hybrid)")?;
+        self.families_served += 1;
+        let key = CtCache::key(vars, ctx_pops);
+        if self.cfg.family_cache {
+            if let Some(hit) = self.family_cache.get(&key) {
+                return Ok(hit.clone());
+            }
+        }
+        // Projection for positives (Alg. 3 line 5) + family Möbius
+        // (line 6).  TimedSource splits the two components.
+        let t0 = std::time::Instant::now();
+        let mut lattice_src = LatticeCacheSource {
+            db: self.db,
+            lattice: &self.ctx.lattice,
+            cache: &mut self.positive,
+        };
+        let ct = {
+            let mut timed = TimedSource::new(&mut lattice_src);
+            let ct = mobius_complete(&mut timed, vars, ctx_pops)?;
+            self.timer.add(Phase::Positive, timed.positive_elapsed);
+            self.timer
+                .add(Phase::Negative, t0.elapsed().saturating_sub(timed.positive_elapsed));
+            ct
+        };
+        self.rows_generated += ct.n_rows() as u64;
+        self.mem.observe_transient(ct.bytes());
+        if self.cfg.family_cache {
+            self.family_cache.insert(key, ct.clone());
+        }
+        Ok(ct)
+    }
+
+    fn report(&self) -> StrategyReport {
+        let mut peak = self.mem;
+        peak.merge_peak(&self.positive.mem);
+        peak.peak_bytes = peak
+            .peak_bytes
+            .max(self.positive.mem.current_bytes + self.family_cache.mem.peak_bytes);
+        StrategyReport {
+            name: self.name().into(),
+            timing: self.timer,
+            join_stats: self.join_stats,
+            cache_bytes: self.positive.bytes() + self.family_cache.bytes(),
+            peak_ct_bytes: peak.peak_bytes,
+            ct_rows_generated: self.rows_generated,
+            families_served: self.families_served,
+            cache_hits: self.family_cache.hits,
+            cache_misses: self.family_cache.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    #[test]
+    fn counts_match_brute_force() {
+        let db = university_db();
+        let mut s = Hybrid::new(&db, StrategyConfig::default()).unwrap();
+        s.prepare().unwrap();
+        let ct = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        assert_eq!(ct.n_rows(), brute.n_rows());
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn no_joins_during_search() {
+        let db = university_db();
+        let mut s = Hybrid::new(&db, StrategyConfig::default()).unwrap();
+        s.prepare().unwrap();
+        let joins_after_prepare = s.join_stats.chain_queries;
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let vars2 = vec![RVar::RelInd { rel: 1 }, RVar::EntityAttr { et: 2, attr: 0 }];
+        s.ct_for_family(&vars2, &[1, 2]).unwrap();
+        // the pre-count is the only JOIN work — that's the whole point
+        assert_eq!(s.join_stats.chain_queries, joins_after_prepare);
+    }
+
+    #[test]
+    fn cross_lattice_family() {
+        // family spanning both relationships
+        let db = university_db();
+        let mut s = Hybrid::new(&db, StrategyConfig::default()).unwrap();
+        let vars = vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelInd { rel: 1 },
+            RVar::RelAttr { rel: 1, attr: 0 },
+        ];
+        let ct = s.ct_for_family(&vars, &[0, 1, 2]).unwrap();
+        let brute = brute_force_complete(&db, &vars, &[0, 1, 2]).unwrap();
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn family_cache_hits() {
+        let db = university_db();
+        let mut s = Hybrid::new(&db, StrategyConfig::default()).unwrap();
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(s.report().cache_hits, 1);
+    }
+
+    #[test]
+    fn timing_components_populated() {
+        let db = university_db();
+        let mut s = Hybrid::new(&db, StrategyConfig::default()).unwrap();
+        s.prepare().unwrap();
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let t = s.report().timing;
+        assert!(t.metadata > std::time::Duration::ZERO);
+        assert!(t.positive > std::time::Duration::ZERO);
+        assert!(t.negative > std::time::Duration::ZERO);
+    }
+}

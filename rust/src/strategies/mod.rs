@@ -1,0 +1,90 @@
+//! The paper's contribution: three count-caching strategies for serving
+//! complete ct-tables to the model search (paper Table 2):
+//!
+//! | strategy   | positive ct input | negative ct input | algorithm |
+//! |------------|-------------------|-------------------|-----------|
+//! | [`precount::Precount`] | lattice point | lattice point | Alg. 1 |
+//! | [`ondemand::OnDemand`] | family        | family        | Alg. 2 |
+//! | [`hybrid::Hybrid`]     | lattice point | family        | Alg. 3 |
+//!
+//! (The fourth cell of Table 2 — negative ct per lattice point with
+//! positive ct per family — is labelled IMPOSSIBLE by the paper: the
+//! Möbius Join cannot produce a wider table than its positive input.)
+//!
+//! All three implement [`traits::CountingStrategy`] and are verified to
+//! produce **identical** family ct-tables (see
+//! `rust/tests/strategy_equivalence.rs`).
+
+pub mod cache;
+pub mod common;
+pub mod hybrid;
+pub mod ondemand;
+pub mod precount;
+pub mod traits;
+
+pub use hybrid::Hybrid;
+pub use ondemand::OnDemand;
+pub use precount::Precount;
+pub use traits::{CountingStrategy, StrategyConfig, StrategyReport};
+
+use crate::db::catalog::Database;
+use crate::error::Result;
+
+/// Strategy selector for CLIs and benches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    Precount,
+    OnDemand,
+    Hybrid,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 3] =
+        [StrategyKind::Precount, StrategyKind::OnDemand, StrategyKind::Hybrid];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Precount => "PRECOUNT",
+            StrategyKind::OnDemand => "ONDEMAND",
+            StrategyKind::Hybrid => "HYBRID",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StrategyKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "precount" | "pre" | "p" => Some(StrategyKind::Precount),
+            "ondemand" | "post" | "o" => Some(StrategyKind::OnDemand),
+            "hybrid" | "h" => Some(StrategyKind::Hybrid),
+            _ => None,
+        }
+    }
+
+    /// Instantiate (metadata phase runs inside).
+    pub fn build<'a>(
+        &self,
+        db: &'a Database,
+        cfg: StrategyConfig,
+    ) -> Result<Box<dyn CountingStrategy + 'a>> {
+        Ok(match self {
+            StrategyKind::Precount => Box::new(Precount::new(db, cfg)?),
+            StrategyKind::OnDemand => Box::new(OnDemand::new(db, cfg)?),
+            StrategyKind::Hybrid => Box::new(Hybrid::new(db, cfg)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parsing() {
+        assert_eq!(StrategyKind::parse("hybrid"), Some(StrategyKind::Hybrid));
+        assert_eq!(StrategyKind::parse("PRE"), Some(StrategyKind::Precount));
+        assert_eq!(StrategyKind::parse("post"), Some(StrategyKind::OnDemand));
+        assert_eq!(StrategyKind::parse("nope"), None);
+        for k in StrategyKind::ALL {
+            assert!(!k.name().is_empty());
+        }
+    }
+}

@@ -1,0 +1,272 @@
+//! PRECOUNT (Algorithm 1): pre-compute a *complete* ct-table for every
+//! lattice point before model search; serve families by projection only.
+//!
+//! The strength: one JOIN pass over the data, no counting work during
+//! search.  The weakness (the paper's negation problem at scale): the
+//! complete lattice tables include every negative-relationship
+//! configuration, so they can dwarf the data itself (Table 5's
+//! ct(database) column, Equation 3 growth).
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::mobius_complete;
+use crate::ct::project::project;
+use crate::db::catalog::Database;
+use crate::db::query::JoinStats;
+use crate::error::{Error, Result};
+use crate::meta::rvar::RVar;
+use crate::metrics::memory::MemTracker;
+use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
+use crate::strategies::cache::CtCache;
+use crate::strategies::common::{
+    fill_positive_cache, var_pops, var_rels, LatticeCacheSource, LatticeCtx,
+};
+use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
+
+/// The PRECOUNT strategy.
+pub struct Precount<'a> {
+    db: &'a Database,
+    #[allow(dead_code)]
+    cfg: StrategyConfig,
+    ctx: LatticeCtx,
+    /// Positive ct-tables per lattice point + entity marginals.
+    positive: CtCache,
+    /// Complete (positive *and negative*) ct-tables per lattice point.
+    complete: CtCache,
+    timer: PhaseTimer,
+    deadline: Deadline,
+    join_stats: JoinStats,
+    mem: MemTracker,
+    families_served: u64,
+    rows_generated: u64,
+    prepared: bool,
+}
+
+impl<'a> Precount<'a> {
+    /// Metadata phase runs here.
+    pub fn new(db: &'a Database, cfg: StrategyConfig) -> Result<Self> {
+        let deadline = Deadline::new(cfg.budget);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(db, cfg.max_chain_length, &mut timer)?;
+        Ok(Precount {
+            db,
+            cfg,
+            ctx,
+            positive: CtCache::new(),
+            complete: CtCache::new(),
+            timer,
+            deadline,
+            join_stats: JoinStats::default(),
+            mem: MemTracker::default(),
+            families_served: 0,
+            rows_generated: 0,
+            prepared: false,
+        })
+    }
+
+    /// Complete-table cache key for a lattice point.
+    fn complete_key(p: &crate::lattice::LatticePoint) -> crate::strategies::cache::CacheKey {
+        CtCache::key(&p.all_vars(), &p.pops)
+    }
+}
+
+impl CountingStrategy for Precount<'_> {
+    fn name(&self) -> &'static str {
+        "PRECOUNT"
+    }
+
+    fn prepare(&mut self) -> Result<()> {
+        if self.prepared {
+            return Ok(());
+        }
+        // Positive phase: one JOIN per lattice point (Alg. 1 line 2).
+        fill_positive_cache(
+            self.db,
+            &self.ctx,
+            &mut self.positive,
+            &mut self.timer,
+            &self.deadline,
+            &mut self.join_stats,
+        )?;
+        // Negative phase: Möbius Join per lattice point (Alg. 1 line 3).
+        for i in 0..self.ctx.lattice.points.len() {
+            self.deadline.check("negative ct (lattice)")?;
+            let p = self.ctx.lattice.points[i].clone();
+            let vars = p.all_vars();
+            let complete = self.timer.time(Phase::Negative, || {
+                let mut src = LatticeCacheSource {
+                    db: self.db,
+                    lattice: &self.ctx.lattice,
+                    cache: &mut self.positive,
+                };
+                mobius_complete(&mut src, &vars, &p.pops)
+            })?;
+            self.rows_generated += complete.n_rows() as u64;
+            self.complete.insert(Self::complete_key(&p), complete);
+        }
+        self.prepared = true;
+        Ok(())
+    }
+
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        if !self.prepared {
+            self.prepare()?;
+        }
+        self.deadline.check("family projection")?;
+        self.families_served += 1;
+        let rels = var_rels(vars);
+        let vpops = var_pops(&self.db.schema, vars);
+
+        // Attribute-only family: cross product of cached marginals
+        // (re-projected so the column order matches the request).
+        if rels.is_empty() {
+            let ct = self.timer.time(Phase::Positive, || {
+                let mut src = LatticeCacheSource {
+                    db: self.db,
+                    lattice: &self.ctx.lattice,
+                    cache: &mut self.positive,
+                };
+                let raw = crate::ct::mobius::g_subset(&mut src, &[], vars, ctx_pops)?;
+                project(&raw, vars)
+            })?;
+            self.mem.observe_transient(ct.bytes());
+            return Ok(ct);
+        }
+
+        let Some(p) = self.ctx.lattice.covering_point(&rels, &vpops).cloned() else {
+            // No lattice point covers this family (its relationship set is
+            // disconnected across chains).  The paper's PRECOUNT has no
+            // answer here; we fall back to a family-level Möbius Join over
+            // the *positive* cache — exactly the HYBRID move — so the
+            // strategies stay interchangeable.  Counted as negative-ct
+            // work since it is inclusion-exclusion at serve time.
+            let ct = self.timer.time(Phase::Negative, || {
+                let mut src = LatticeCacheSource {
+                    db: self.db,
+                    lattice: &self.ctx.lattice,
+                    cache: &mut self.positive,
+                };
+                mobius_complete(&mut src, vars, ctx_pops)
+            })?;
+            self.rows_generated += ct.n_rows() as u64;
+            self.mem.observe_transient(ct.bytes());
+            return Ok(ct);
+        };
+        let key = Self::complete_key(&p);
+        let full = self
+            .complete
+            .get(&key)
+            .ok_or_else(|| Error::Strategy("complete ct missing (prepare?)".into()))?;
+
+        // Projection only — Alg. 1 line 6.
+        let mut ct = self.timer.time(Phase::Positive, || project(full, vars))?;
+
+        // Context adjustment: the cached table counts over p.pops.
+        let extra: i128 = p
+            .pops
+            .iter()
+            .filter(|e| !ctx_pops.contains(e))
+            .map(|&e| self.db.population(e) as i128)
+            .product();
+        let missing: i128 = ctx_pops
+            .iter()
+            .filter(|e| !p.pops.contains(e))
+            .map(|&e| self.db.population(e) as i128)
+            .product();
+        ct.divide_exact(extra).map_err(|e| {
+            Error::Strategy(format!(
+                "context narrowing failed for family {vars:?} ctx {ctx_pops:?} \
+                 via LP {:?} (pops {:?}): {e}",
+                p.rels, p.pops
+            ))
+        })?;
+        ct.scale(missing)?;
+        self.mem.observe_transient(ct.bytes());
+        Ok(ct)
+    }
+
+    fn report(&self) -> StrategyReport {
+        let mut peak = self.mem;
+        peak.merge_peak(&self.positive.mem);
+        // complete tables live alongside the positives
+        peak.peak_bytes = peak
+            .peak_bytes
+            .max(self.positive.mem.current_bytes + self.complete.mem.peak_bytes);
+        StrategyReport {
+            name: self.name().into(),
+            timing: self.timer,
+            join_stats: self.join_stats,
+            cache_bytes: self.positive.bytes() + self.complete.bytes(),
+            peak_ct_bytes: peak.peak_bytes,
+            ct_rows_generated: self.rows_generated,
+            families_served: self.families_served,
+            cache_hits: self.complete.hits,
+            cache_misses: self.complete.misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    #[test]
+    fn serves_families_after_prepare() {
+        let db = university_db();
+        let mut s = Precount::new(&db, StrategyConfig::default()).unwrap();
+        s.prepare().unwrap();
+        let ct = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+        let rep = s.report();
+        assert_eq!(rep.families_served, 1);
+        assert!(rep.timing.negative > std::time::Duration::ZERO);
+        assert!(rep.ct_rows_generated > 0);
+        assert!(rep.peak_ct_bytes > 0);
+    }
+
+    #[test]
+    fn wider_context_scaling() {
+        // family over (P,S) asked in the (P,S,C) context
+        let db = university_db();
+        let mut s = Precount::new(&db, StrategyConfig::default()).unwrap();
+        let narrow = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let wide = s.ct_for_family(&family(), &[0, 1, 2]).unwrap();
+        let c = db.population(2) as i128;
+        for (v, n) in narrow.iter_rows() {
+            assert_eq!(wide.get(&v).unwrap(), n * c);
+        }
+    }
+
+    #[test]
+    fn attr_only_family() {
+        let db = university_db();
+        let mut s = Precount::new(&db, StrategyConfig::default()).unwrap();
+        let vars = vec![RVar::EntityAttr { et: 0, attr: 0 }];
+        let ct = s.ct_for_family(&vars, &[0, 1]).unwrap();
+        // 12 professors x 19 students; popularity p%3 -> 4 each x 19
+        assert_eq!(ct.get(&[0]).unwrap(), 4 * 19);
+        assert_eq!(ct.total().unwrap() as u64, db.population_product(&[0, 1]));
+    }
+
+    #[test]
+    fn uncoverable_family_errors() {
+        let db = university_db();
+        let cfg = StrategyConfig { max_chain_length: 1, ..Default::default() };
+        let mut s = Precount::new(&db, cfg).unwrap();
+        // needs both rels -> chain length 2 > max 1
+        let vars = vec![RVar::RelInd { rel: 0 }, RVar::RelInd { rel: 1 }];
+        assert!(s.ct_for_family(&vars, &[0, 1, 2]).is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! The strategy interface and its configuration/report types.
+
+use std::time::Duration;
+
+use crate::ct::cttable::CtTable;
+use crate::db::query::JoinStats;
+use crate::error::Result;
+use crate::meta::rvar::RVar;
+use crate::metrics::timing::PhaseTimer;
+
+/// Configuration shared by all strategies.
+#[derive(Clone, Copy, Debug)]
+pub struct StrategyConfig {
+    /// Maximum relationship-chain length in the lattice (FACTORBASE
+    /// default: 3).
+    pub max_chain_length: usize,
+    /// Optional wall-clock budget; exceeded -> `Error::Timeout` (the
+    /// paper's 100-minute Slurm limit).
+    pub budget: Option<Duration>,
+    /// Cache family-level ct-tables on first use (post-counting caching).
+    pub family_cache: bool,
+}
+
+impl Default for StrategyConfig {
+    fn default() -> Self {
+        StrategyConfig { max_chain_length: 3, budget: None, family_cache: true }
+    }
+}
+
+/// Cumulative counters a strategy reports after serving a workload.
+#[derive(Clone, Debug, Default)]
+pub struct StrategyReport {
+    pub name: String,
+    pub timing: PhaseTimer,
+    pub join_stats: JoinStats,
+    /// Exact bytes currently held in caches.
+    pub cache_bytes: usize,
+    /// Peak of (cache + transient ct) bytes — the Figure 4 metric.
+    pub peak_ct_bytes: usize,
+    /// Total rows over all ct-tables generated — the Table 5 metric.
+    pub ct_rows_generated: u64,
+    /// Families served.
+    pub families_served: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// A count-caching strategy: serves complete ct-tables for families.
+pub trait CountingStrategy {
+    /// Strategy name (PRECOUNT / ONDEMAND / HYBRID).
+    fn name(&self) -> &'static str;
+
+    /// Pre-model-search preparation.  PRECOUNT builds complete lattice
+    /// ct-tables here; HYBRID builds positive ones; ONDEMAND does
+    /// nothing.
+    fn prepare(&mut self) -> Result<()>;
+
+    /// Complete ct-table over `vars` with grounding population
+    /// `ctx_pops` (the lattice point's populations during search).
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable>;
+
+    /// Metrics snapshot.
+    fn report(&self) -> StrategyReport;
+}

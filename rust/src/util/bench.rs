@@ -1,0 +1,92 @@
+//! A micro-benchmark harness (criterion is not available offline):
+//! warmup + timed iterations with mean / stddev / min, and a tabular
+//! reporter shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `iters` timed runs.
+pub fn bench<T>(
+    name: &str,
+    warmup: u32,
+    iters: u32,
+    mut f: impl FnMut() -> T,
+) -> Measurement {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    Measurement {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: Duration::from_secs_f64(min),
+    }
+}
+
+/// Render measurements as an aligned table.
+pub fn render(title: &str, ms: &[Measurement]) -> String {
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:<44} {:>6} {:>12} {:>12} {:>12}\n",
+        "benchmark", "iters", "mean_s", "stddev_s", "min_s"
+    ));
+    for m in ms {
+        out.push_str(&format!(
+            "{:<44} {:>6} {:>12.6} {:>12.6} {:>12.6}\n",
+            m.name,
+            m.iters,
+            m.mean.as_secs_f64(),
+            m.stddev.as_secs_f64(),
+            m.min.as_secs_f64()
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let m = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(m.mean > Duration::ZERO);
+        assert!(m.min <= m.mean);
+        assert_eq!(m.iters, 5);
+        let r = render("t", &[m]);
+        assert!(r.contains("spin"));
+    }
+}

@@ -1,0 +1,8 @@
+//! In-tree substrates that would normally come from crates.io (this
+//! image builds offline): a JSON parser/writer, a seeded PRNG, a CLI
+//! argument parser, and a micro-benchmark harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

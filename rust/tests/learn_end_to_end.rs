@@ -1,0 +1,110 @@
+//! End-to-end structure learning over scaled benchmark presets: the full
+//! pipeline (generate -> count -> score -> search) with every strategy,
+//! checking model agreement, MP/N plausibility (paper Table 4) and the
+//! timeout machinery.
+
+use std::time::Duration;
+
+use relcount::bench::driver::{run_strategy, Workload};
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::learn::search::{learn, SearchConfig};
+use relcount::strategies::traits::StrategyConfig;
+use relcount::strategies::StrategyKind;
+
+#[test]
+fn learn_on_scaled_presets_all_strategies_agree() {
+    for name in ["uw", "mondial", "movielens"] {
+        let cfg = preset(name, 0.05, 3).unwrap();
+        let db = generate(&cfg).unwrap();
+        let search = SearchConfig { max_ops_per_point: 60, ..Default::default() };
+        let mut models = Vec::new();
+        for kind in StrategyKind::ALL {
+            let mut s = kind.build(&db, StrategyConfig::default()).unwrap();
+            models.push(learn(&db, s.as_mut(), search).unwrap());
+        }
+        for m in &models[1..] {
+            assert_eq!(m.bn.nodes, models[0].bn.nodes, "{name}");
+            assert_eq!(m.bn.parents, models[0].bn.parents, "{name}");
+        }
+        let mpn = models[0].bn.mean_parents_per_node();
+        // paper Table 4: MP/N between 0.5 and 3.4 across benchmarks
+        assert!(mpn >= 0.0 && mpn <= 4.0, "{name} MP/N {mpn}");
+    }
+}
+
+#[test]
+fn learned_model_finds_injected_dependencies() {
+    // the generator injects rel-attr <- endpoint-attr dependencies; the
+    // search should recover edges (nonzero MP/N) at a usable scale
+    let cfg = preset("uw", 0.3, 5).unwrap();
+    let db = generate(&cfg).unwrap();
+    let mut s = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    let model = learn(&db, s.as_mut(), SearchConfig::default()).unwrap();
+    assert!(
+        model.bn.n_edges() > 0,
+        "expected edges:\n{}",
+        model.bn.display(&db.schema)
+    );
+    assert!(model.total_score.is_finite());
+    assert!(model.families_scored > 10);
+}
+
+#[test]
+fn timeout_surfaces_as_timeout_row() {
+    let cfg = preset("hepatitis", 0.2, 1).unwrap();
+    let db = generate(&cfg).unwrap();
+    let out = run_strategy(
+        &db,
+        "hepatitis",
+        StrategyKind::OnDemand,
+        Workload::Learn(SearchConfig::default()),
+        Some(Duration::from_millis(1)),
+    )
+    .unwrap();
+    assert!(out.row.timed_out);
+    assert!(out.model.is_none());
+}
+
+#[test]
+fn max_parents_respected_end_to_end() {
+    let cfg = preset("mondial", 0.1, 2).unwrap();
+    let db = generate(&cfg).unwrap();
+    let search = SearchConfig { max_parents: 2, ..Default::default() };
+    let mut s = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    let model = learn(&db, s.as_mut(), search).unwrap();
+    for ps in &model.bn.parents {
+        assert!(ps.len() <= 2);
+    }
+}
+
+#[test]
+fn report_metrics_are_consistent() {
+    let cfg = preset("uw", 0.2, 4).unwrap();
+    let db = generate(&cfg).unwrap();
+    for kind in StrategyKind::ALL {
+        let out = run_strategy(
+            &db,
+            "uw",
+            kind,
+            Workload::Learn(SearchConfig::default()),
+            None,
+        )
+        .unwrap();
+        let rep = &out.report;
+        assert_eq!(rep.name, kind.name());
+        assert!(rep.families_served > 0, "{}", kind.name());
+        assert!(rep.peak_ct_bytes > 0, "{}", kind.name());
+        assert!(rep.ct_rows_generated > 0, "{}", kind.name());
+        // pre-counting strategies must not JOIN during search beyond the
+        // lattice fill; ONDEMAND must JOIN plenty
+        match kind {
+            StrategyKind::OnDemand => {
+                assert!(rep.join_stats.chain_queries > 10, "{}", kind.name())
+            }
+            _ => {
+                // 7 entity/lattice queries at most for uw's 2-rel schema
+                assert!(rep.join_stats.chain_queries <= 3, "{}", kind.name())
+            }
+        }
+    }
+}

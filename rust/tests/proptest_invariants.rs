@@ -1,0 +1,301 @@
+//! Property-based tests over randomly generated schemas and databases
+//! (in-tree generator; the proptest crate is unavailable offline).
+//! Each property runs against many seeded random cases; failures print
+//! the seed for deterministic reproduction.
+
+use relcount::ct::cross::outer;
+use relcount::ct::dense::{DenseLayout, D_PAD, E_PAD, K_REL};
+use relcount::ct::mobius::{brute_force_complete, mobius_complete};
+use relcount::ct::project::project;
+use relcount::db::catalog::Database;
+use relcount::db::query::DirectSource;
+use relcount::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+use relcount::meta::rvar::RVar;
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
+use relcount::strategies::StrategyKind;
+use relcount::util::json::Json;
+use relcount::util::rng::Rng;
+
+/// A random small schema: 2-3 entity types with 0-2 attrs, 1-3 distinct
+/// relationships over distinct endpoint pairs.
+fn random_schema(rng: &mut Rng) -> Schema {
+    let n_ets = 2 + rng.gen_range(2) as usize;
+    let entities: Vec<EntityType> = (0..n_ets)
+        .map(|i| EntityType {
+            name: format!("E{i}"),
+            attrs: (0..rng.gen_range(3))
+                .map(|a| Attribute::new(format!("a{a}"), 2 + rng.gen_u32(2)))
+                .collect(),
+        })
+        .collect();
+    // candidate endpoint pairs
+    let mut pairs = Vec::new();
+    for i in 0..n_ets {
+        for j in 0..n_ets {
+            if i != j {
+                pairs.push((i, j));
+            }
+        }
+    }
+    rng.shuffle(&mut pairs);
+    let n_rels = 1 + rng.gen_range(pairs.len().min(3) as u64) as usize;
+    let relationships: Vec<RelationshipType> = pairs[..n_rels]
+        .iter()
+        .enumerate()
+        .map(|(k, &(f, t))| RelationshipType {
+            name: format!("R{k}"),
+            from: f,
+            to: t,
+            attrs: (0..rng.gen_range(2))
+                .map(|a| Attribute::new(format!("w{a}"), 2 + rng.gen_u32(2)))
+                .collect(),
+        })
+        .collect();
+    Schema::new(entities, relationships).unwrap()
+}
+
+/// A random small database over a random schema.
+fn random_db(rng: &mut Rng) -> Database {
+    let schema = random_schema(rng);
+    let mut db = Database::empty(schema.clone());
+    for (et, e) in schema.entities.iter().enumerate() {
+        let n = 1 + rng.gen_range(6) as u32;
+        for _ in 0..n {
+            let row: Vec<u32> = e.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+            db.entities[et].push(&row).unwrap();
+        }
+    }
+    for (rt, r) in schema.relationships.iter().enumerate() {
+        let nf = db.entities[r.from].len();
+        let nt = db.entities[r.to].len();
+        for f in 0..nf {
+            for t in 0..nt {
+                if rng.gen_bool(0.35) {
+                    let row: Vec<u32> =
+                        r.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+                    db.rels[rt].push(f, t, &row).unwrap();
+                }
+            }
+        }
+    }
+    db.build_indexes().unwrap();
+    db
+}
+
+/// A random family over the schema (vars + covering context).
+fn random_family(rng: &mut Rng, db: &Database) -> (Vec<RVar>, Vec<usize>) {
+    let schema = &db.schema;
+    let mut pool: Vec<RVar> = Vec::new();
+    for (et, e) in schema.entities.iter().enumerate() {
+        for attr in 0..e.attrs.len() {
+            pool.push(RVar::EntityAttr { et, attr });
+        }
+    }
+    for (rel, r) in schema.relationships.iter().enumerate() {
+        pool.push(RVar::RelInd { rel });
+        for attr in 0..r.attrs.len() {
+            pool.push(RVar::RelAttr { rel, attr });
+        }
+    }
+    rng.shuffle(&mut pool);
+    let n = 1 + rng.gen_range(3.min(pool.len() as u64));
+    let vars: Vec<RVar> = pool[..n as usize].to_vec();
+    // context = all populations (covers everything)
+    let ctx: Vec<usize> = (0..schema.entities.len()).collect();
+    (vars, ctx)
+}
+
+const CASES: u64 = 60;
+
+#[test]
+fn prop_mobius_equals_brute_force() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let mut src = DirectSource::new(&db);
+        let fast = mobius_complete(&mut src, &vars, &ctx)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let brute = brute_force_complete(&db, &vars, &ctx).unwrap();
+        assert_eq!(fast.n_rows(), brute.n_rows(), "seed {seed}");
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(fast.get(&v).unwrap(), c, "seed {seed} at {v:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_strategies_are_interchangeable() {
+    for seed in 100..100 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let mut tables = Vec::new();
+        for kind in StrategyKind::ALL {
+            let mut s = kind.build(&db, StrategyConfig::default()).unwrap();
+            tables.push(s.ct_for_family(&vars, &ctx).unwrap_or_else(|e| {
+                panic!("seed {seed} {kind:?}: {e}")
+            }));
+        }
+        for t in &tables[1..] {
+            assert_eq!(t.n_rows(), tables[0].n_rows(), "seed {seed}");
+            for (v, c) in tables[0].iter_rows() {
+                assert_eq!(t.get(&v).unwrap(), c, "seed {seed} at {v:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_total_mass_is_population_product() {
+    for seed in 200..200 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let mut src = DirectSource::new(&db);
+        let ct = mobius_complete(&mut src, &vars, &ctx).unwrap();
+        assert_eq!(
+            ct.total().unwrap() as u64,
+            db.population_product(&ctx),
+            "seed {seed}"
+        );
+        ct.assert_counts_nonnegative().unwrap();
+    }
+}
+
+#[test]
+fn prop_projection_commutes_with_mobius() {
+    // projecting an attribute column out of the complete table equals
+    // completing the family without that column
+    for seed in 300..300 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        if vars.len() < 2 {
+            continue;
+        }
+        let keep: Vec<RVar> = vars[..vars.len() - 1].to_vec();
+        // only drop attribute columns: dropping an *indicator* changes the
+        // Möbius axes for rel attrs that remain, which is a different op
+        if vars[vars.len() - 1].is_indicator() {
+            continue;
+        }
+        let mut src = DirectSource::new(&db);
+        let full = mobius_complete(&mut src, &vars, &ctx).unwrap();
+        let projected = project(&full, &keep).unwrap();
+        let mut src2 = DirectSource::new(&db);
+        let direct = mobius_complete(&mut src2, &keep, &ctx).unwrap();
+        assert_eq!(projected.n_rows(), direct.n_rows(), "seed {seed}");
+        for (v, c) in direct.iter_rows() {
+            assert_eq!(projected.get(&v).unwrap(), c, "seed {seed} {v:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_dense_roundtrip_when_fits() {
+    for seed in 400..400 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let layout = match DenseLayout::fits(&db.schema, &vars, D_PAD, K_REL, E_PAD) {
+            Some(l) => l,
+            None => continue,
+        };
+        let ct = brute_force_complete(&db, &vars, &ctx).unwrap();
+        let dense = layout.pack(&ct).unwrap();
+        let back = layout.unpack(&db.schema, &dense).unwrap();
+        assert_eq!(back.n_rows(), ct.n_rows(), "seed {seed}");
+        for (v, c) in ct.iter_rows() {
+            assert_eq!(back.get(&v).unwrap(), c, "seed {seed} {v:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_outer_product_total() {
+    for seed in 500..500 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        if db.schema.entities.len() < 2
+            || db.schema.entities[0].attrs.is_empty()
+            || db.schema.entities[1].attrs.is_empty()
+        {
+            continue;
+        }
+        let a = relcount::db::query::groupby_entity(
+            &db,
+            0,
+            &[RVar::EntityAttr { et: 0, attr: 0 }],
+        )
+        .unwrap();
+        let b = relcount::db::query::groupby_entity(
+            &db,
+            1,
+            &[RVar::EntityAttr { et: 1, attr: 0 }],
+        )
+        .unwrap();
+        let o = outer(&a, &b).unwrap();
+        assert_eq!(
+            o.total().unwrap(),
+            a.total().unwrap() * b.total().unwrap(),
+            "seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn prop_family_cache_returns_identical_tables() {
+    for seed in 600..620 {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let mut s = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+        let first = s.ct_for_family(&vars, &ctx).unwrap();
+        let second = s.ct_for_family(&vars, &ctx).unwrap(); // cache hit
+        assert_eq!(first.n_rows(), second.n_rows());
+        for (v, c) in first.iter_rows() {
+            assert_eq!(second.get(&v).unwrap(), c, "seed {seed}");
+        }
+        assert!(s.report().cache_hits >= 1);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.gen_range(4) } else { rng.gen_range(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.gen_bool(0.5)),
+            2 => Json::Num((rng.gen_range(2_000_001) as f64) - 1_000_000.0),
+            3 => {
+                let n = rng.gen_range(12);
+                Json::Str((0..n).map(|_| (32 + rng.gen_u32(90)) as u8 as char).collect())
+            }
+            4 => Json::Arr((0..rng.gen_range(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.gen_range(4))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 700..700 + 2 * CASES {
+        let mut rng = Rng::new(seed);
+        let j = random_json(&mut rng, 3);
+        let s = j.dump();
+        let back = Json::parse(&s).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{s}"));
+        assert_eq!(back, j, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_schema_json_roundtrip() {
+    for seed in 900..900 + CASES {
+        let mut rng = Rng::new(seed);
+        let schema = random_schema(&mut rng);
+        let j = schema.to_json().dump();
+        let back = Schema::from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back, schema, "seed {seed}");
+    }
+}

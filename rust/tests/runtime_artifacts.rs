@@ -1,0 +1,320 @@
+//! Cross-layer numerics: the Rust implementations vs the AOT-compiled
+//! XLA artifacts (Pallas kernels lowered by `python/compile/aot.py`).
+//!
+//! Requires `make artifacts`; tests skip (with a notice) if the artifact
+//! directory is absent so `cargo test` stays runnable in isolation.
+
+use std::path::PathBuf;
+
+use relcount::ct::dense::{mobius_dense, DenseLayout, Q_PAD, R_PAD};
+use relcount::ct::mobius::brute_force_complete;
+use relcount::db::fixtures::university_db;
+use relcount::learn::score::{bdeu_from_ct, ln_gamma};
+use relcount::meta::rvar::RVar;
+use relcount::runtime::batcher::{FamilyCounts, ScoreBatcher, ScoreService};
+use relcount::runtime::client::Runtime;
+use relcount::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = relcount::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn family_vars() -> Vec<RVar> {
+    vec![
+        RVar::RelInd { rel: 0 },
+        RVar::RelAttr { rel: 0, attr: 1 },
+        RVar::EntityAttr { et: 1, attr: 0 },
+    ]
+}
+
+#[test]
+fn mobius_artifact_matches_rust_dense_and_sparse() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let spec = rt.manifest.artifact("mobius").unwrap();
+    let d = spec.meta_dim("d_pad").unwrap();
+    let k = spec.meta_dim("k_rel").unwrap();
+    let e = spec.meta_dim("e_pad").unwrap();
+
+    let db = university_db();
+    let vars = family_vars();
+    let layout = DenseLayout::fits(&db.schema, &vars, d, k, e).unwrap();
+
+    // build the unconstrained g tensor from the complete table by inverse
+    // butterfly (zeta), as in the unit test for mobius_dense
+    let complete = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+    let mut g = layout.pack(&complete).unwrap();
+    for axis in 0..k {
+        let outer = d.pow(axis as u32);
+        let inner = d.pow((k - axis - 1) as u32) * e;
+        for o in 0..outer {
+            let base = o * d * inner;
+            for v in 1..d {
+                for j in 0..inner {
+                    let add = g[base + v * inner + j];
+                    g[base + j] += add;
+                }
+            }
+        }
+    }
+
+    // XLA path
+    let xla_out = rt.mobius(&g).unwrap();
+    // Rust dense path
+    let mut rust_out = g.clone();
+    mobius_dense(&mut rust_out, d, k, e);
+
+    assert_eq!(xla_out.len(), rust_out.len());
+    for (i, (a, b)) in xla_out.iter().zip(&rust_out).enumerate() {
+        assert_eq!(a, b, "cell {i}");
+    }
+    // and the sparse truth
+    let back = layout.unpack(&db.schema, &xla_out).unwrap();
+    assert_eq!(back.n_rows(), complete.n_rows());
+    for (v, c) in complete.iter_rows() {
+        assert_eq!(back.get(&v).unwrap(), c, "{v:?}");
+    }
+}
+
+#[test]
+fn bdeu_artifact_matches_rust_scorer() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut batcher = ScoreBatcher::new(&rt).unwrap();
+
+    let db = university_db();
+    let vars = family_vars();
+    let ct = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+    let child = RVar::EntityAttr { et: 1, attr: 0 };
+    let n_prime = 1.0;
+    let rust_score = bdeu_from_ct(&ct, &child, n_prime).unwrap();
+
+    // pack (q, r) matrix: parents = RA, salary; child = intelligence
+    let child_pos = ct.var_pos(&child).unwrap();
+    let q: usize = ct
+        .dims
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| i != child_pos)
+        .map(|(_, &d)| d as usize)
+        .product();
+    let r = ct.dims[child_pos] as usize;
+    let mut counts = vec![0.0; q * r];
+    for (vals, c) in ct.iter_rows() {
+        let mut j = 0usize;
+        for (i, v) in vals.iter().enumerate() {
+            if i != child_pos {
+                j = j * ct.dims[i] as usize + *v as usize;
+            }
+        }
+        counts[j * r + vals[child_pos] as usize] += c as f64;
+    }
+    let xla_score = batcher
+        .score_all(&[FamilyCounts { counts, q, r, n_prime }])
+        .unwrap()[0];
+    assert!(
+        (xla_score - rust_score).abs() < 1e-9 * rust_score.abs().max(1.0),
+        "xla {xla_score} vs rust {rust_score}"
+    );
+}
+
+#[test]
+fn bdeu_batch_random_families_match() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let mut batcher = ScoreBatcher::new(&rt).unwrap();
+    let mut rng = Rng::new(17);
+    // more families than one batch to exercise chunking
+    let n = batcher.batch_size() + 13;
+    let mut reqs = Vec::new();
+    let mut want = Vec::new();
+    for _ in 0..n {
+        let q = 1 + rng.gen_range(12) as usize;
+        let r = 2 + rng.gen_range(5) as usize;
+        let counts: Vec<f64> =
+            (0..q * r).map(|_| rng.gen_range(40) as f64).collect();
+        let n_prime = 1.0 + rng.gen_range(4) as f64;
+        // scalar reference
+        let ar = n_prime / q as f64;
+        let ac = n_prime / (q * r) as f64;
+        let mut s = 0.0;
+        for j in 0..q {
+            let row = &counts[j * r..(j + 1) * r];
+            let nij: f64 = row.iter().sum();
+            if nij > 0.0 {
+                s += ln_gamma(ar) - ln_gamma(nij + ar);
+                for &c in row {
+                    if c > 0.0 {
+                        s += ln_gamma(c + ac) - ln_gamma(ac);
+                    }
+                }
+            }
+        }
+        want.push(s);
+        reqs.push(FamilyCounts { counts, q, r, n_prime });
+    }
+    let got = batcher.score_all(&reqs).unwrap();
+    assert_eq!(got.len(), want.len());
+    assert!(batcher.dispatches >= 2, "chunking exercised");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-9 * w.abs().max(1.0), "family {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn fused_family_score_matches_composition() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::load(&dir).unwrap();
+    let spec = rt.manifest.artifact("family_score").unwrap();
+    let d = spec.meta_dim("d_pad").unwrap();
+    let k = spec.meta_dim("k_rel").unwrap();
+    let e = spec.meta_dim("e_pad").unwrap();
+
+    let db = university_db();
+    let vars = family_vars();
+    let layout = DenseLayout::fits(&db.schema, &vars, d, k, e).unwrap();
+    let complete = brute_force_complete(&db, &vars, &[0, 1]).unwrap();
+    let mut g = layout.pack(&complete).unwrap();
+    for axis in 0..k {
+        let outer = d.pow(axis as u32);
+        let inner = d.pow((k - axis - 1) as u32) * e;
+        for o in 0..outer {
+            let base = o * d * inner;
+            for v in 1..d {
+                for j in 0..inner {
+                    let add = g[base + v * inner + j];
+                    g[base + j] += add;
+                }
+            }
+        }
+    }
+    // family: parents = {RA, salary} (cols 0,1), child = intelligence (2)
+    let seg = layout.seg_map(&db.schema, &[0, 1], 2, Q_PAD, R_PAD).unwrap();
+    let q = 2 * 4;
+    let r = 3;
+    let n_prime = 1.0;
+    let (score, complete_dense) = rt
+        .family_score(&g, &seg, n_prime / q as f64, n_prime / (q * r) as f64)
+        .unwrap();
+    let child = RVar::EntityAttr { et: 1, attr: 0 };
+    let want = bdeu_from_ct(&complete, &child, n_prime).unwrap();
+    assert!((score - want).abs() < 1e-9 * want.abs().max(1.0), "{score} vs {want}");
+    // fused path also returns the complete tensor
+    let back = layout.unpack(&db.schema, &complete_dense).unwrap();
+    for (v, c) in complete.iter_rows() {
+        assert_eq!(back.get(&v).unwrap(), c);
+    }
+}
+
+#[test]
+fn xla_backend_end_to_end_learning() {
+    // End-to-end: structure learning with the batched XLA scorer.  The
+    // greedy search may break exact score ties differently than the Rust
+    // scorer (lgamma implementations differ at ~1e-12), so we do not
+    // demand identical structures; we demand (a) the XLA path is really
+    // exercised, (b) every family of BOTH learned models scores
+    // identically (1e-9) under both backends, and (c) both models are
+    // local optima of comparable quality.
+    let Some(dir) = artifact_dir() else { return };
+    use relcount::learn::backend::{bdeu_matrix, XlaBackend};
+    use relcount::learn::score::{bdeu_from_ct, family_matrix};
+    use relcount::learn::search::{learn, learn_with_backend, SearchConfig};
+    use relcount::strategies::traits::StrategyConfig;
+    use relcount::strategies::StrategyKind;
+
+    let db = university_db();
+    let cfg = SearchConfig::default();
+
+    let mut s1 = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    let rust_model = learn(&db, s1.as_mut(), cfg).unwrap();
+
+    let mut s2 = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    let mut backend = XlaBackend::load(&dir).unwrap();
+    let xla_model = learn_with_backend(&db, s2.as_mut(), &mut backend, cfg).unwrap();
+
+    assert!(backend.xla_scored > 0, "XLA path must actually be exercised");
+    assert!(backend.dispatches > 0);
+    assert_eq!(xla_model.bn.nodes, rust_model.bn.nodes);
+
+    // per-family score parity across backends, for both learned models
+    let mut s3 = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    for model in [&rust_model, &xla_model] {
+        for fam in model.bn.families() {
+            let rels = fam.rels();
+            let ctx = if rels.is_empty() {
+                fam.populations(&db.schema)
+            } else {
+                db.schema.populations_of(&rels)
+            };
+            let ct = s3.ct_for_family(&fam.vars(), &ctx).unwrap();
+            let sparse = bdeu_from_ct(&ct, &fam.child, cfg.n_prime).unwrap();
+            if let Some(req) = family_matrix(&ct, &fam.child, cfg.n_prime).unwrap() {
+                let dense = bdeu_matrix(&req);
+                assert!(
+                    (dense - sparse).abs() < 1e-9 * sparse.abs().max(1.0),
+                    "{}",
+                    fam.display(&db.schema)
+                );
+            }
+        }
+    }
+    // comparable quality (same landscape, possibly different local optimum)
+    let rel_gap = (xla_model.total_score - rust_model.total_score).abs()
+        / rust_model.total_score.abs();
+    assert!(rel_gap < 0.01, "score gap {rel_gap}");
+    eprintln!(
+        "xla backend: {} families over {} dispatches ({} scalar fallbacks)",
+        backend.xla_scored, backend.dispatches, backend.fallback_scored
+    );
+}
+
+#[test]
+fn score_service_concurrent_producers() {
+    let Some(dir) = artifact_dir() else { return };
+    let service = ScoreService::spawn(dir).unwrap();
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let sender = service.sender();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let mut out = Vec::new();
+            for _ in 0..25 {
+                let q = 1 + rng.gen_range(6) as usize;
+                let r = 2 + rng.gen_range(4) as usize;
+                let counts: Vec<f64> =
+                    (0..q * r).map(|_| rng.gen_range(20) as f64).collect();
+                let fc = FamilyCounts { counts: counts.clone(), q, r, n_prime: 1.0 };
+                let score = sender.score(fc).unwrap();
+                // sequential scalar reference
+                let ar = 1.0 / q as f64;
+                let ac = 1.0 / (q * r) as f64;
+                let mut want = 0.0;
+                for j in 0..q {
+                    let row = &counts[j * r..(j + 1) * r];
+                    let nij: f64 = row.iter().sum();
+                    if nij > 0.0 {
+                        want += ln_gamma(ar) - ln_gamma(nij + ar);
+                        for &c in row {
+                            if c > 0.0 {
+                                want += ln_gamma(c + ac) - ln_gamma(ac);
+                            }
+                        }
+                    }
+                }
+                out.push((score, want));
+            }
+            out
+        }));
+    }
+    for h in handles {
+        for (got, want) in h.join().unwrap() {
+            assert!((got - want).abs() < 1e-9 * want.abs().max(1.0));
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! The central correctness invariant of the paper's Table 2: all three
+//! count-caching strategies are *interchangeable* — for every family and
+//! context they must return bit-identical complete ct-tables, equal to
+//! brute-force grounding enumeration.
+
+use relcount::ct::cttable::CtTable;
+use relcount::ct::mobius::brute_force_complete;
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::db::catalog::Database;
+use relcount::db::fixtures::university_db;
+use relcount::lattice::Lattice;
+use relcount::meta::rvar::RVar;
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
+use relcount::strategies::StrategyKind;
+
+/// Every family with <= 3 variables drawn from a lattice point's var set.
+fn families_of(db: &Database, max_vars: usize) -> Vec<(Vec<RVar>, Vec<usize>)> {
+    let lattice = Lattice::build(&db.schema, 3).unwrap();
+    let mut out = Vec::new();
+    for p in &lattice.points {
+        let vars = p.all_vars();
+        let n = vars.len();
+        // singletons, pairs, triples (bounded for test time)
+        for i in 0..n {
+            out.push((vec![vars[i]], p.pops.clone()));
+            for j in (i + 1)..n {
+                out.push((vec![vars[i], vars[j]], p.pops.clone()));
+                if max_vars >= 3 {
+                    for k in (j + 1)..n.min(j + 4) {
+                        out.push((vec![vars[i], vars[j], vars[k]], p.pops.clone()));
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn assert_tables_equal(a: &CtTable, b: &CtTable, what: &str) {
+    assert_eq!(a.n_rows(), b.n_rows(), "{what}: row count");
+    for (vals, c) in b.iter_rows() {
+        assert_eq!(a.get(&vals).unwrap(), c, "{what} at {vals:?}");
+    }
+}
+
+#[test]
+fn all_strategies_agree_on_university() {
+    let db = university_db();
+    let fams = families_of(&db, 3);
+    assert!(fams.len() > 50);
+    let mut strategies: Vec<Box<dyn CountingStrategy>> = StrategyKind::ALL
+        .iter()
+        .map(|k| k.build(&db, StrategyConfig::default()).unwrap())
+        .collect();
+    for (vars, ctx) in &fams {
+        let reference = strategies[0].ct_for_family(vars, ctx).unwrap();
+        for s in strategies.iter_mut().skip(1) {
+            let ct = s.ct_for_family(vars, ctx).unwrap();
+            assert_tables_equal(&ct, &reference, &format!("{vars:?}"));
+        }
+    }
+}
+
+#[test]
+fn strategies_match_brute_force_on_university() {
+    let db = university_db();
+    let mut hybrid = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    for (vars, ctx) in families_of(&db, 3) {
+        let ct = hybrid.ct_for_family(&vars, &ctx).unwrap();
+        let brute = brute_force_complete(&db, &vars, &ctx).unwrap();
+        assert_tables_equal(&ct, &brute, &format!("{vars:?}"));
+    }
+}
+
+#[test]
+fn all_strategies_agree_on_scaled_presets() {
+    // triangle-shaped schemas (hepatitis, financial) are the regression
+    // zone for lattice-cache key collisions and disconnected subsets
+    for name in ["uw", "hepatitis", "financial", "mutagenesis"] {
+        let cfg = preset(name, 0.02, 42).unwrap();
+        let db = generate(&cfg).unwrap();
+        let fams = families_of(&db, 2);
+        let mut strategies: Vec<Box<dyn CountingStrategy>> = StrategyKind::ALL
+            .iter()
+            .map(|k| k.build(&db, StrategyConfig::default()).unwrap())
+            .collect();
+        for (vars, ctx) in &fams {
+            let reference = strategies[0].ct_for_family(vars, ctx).unwrap();
+            for s in strategies.iter_mut().skip(1) {
+                let ct = s.ct_for_family(vars, ctx).unwrap();
+                assert_tables_equal(&ct, &reference, &format!("{name} {vars:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn complete_tables_conserve_population_product() {
+    let db = university_db();
+    for kind in StrategyKind::ALL {
+        let mut s = kind.build(&db, StrategyConfig::default()).unwrap();
+        for (vars, ctx) in families_of(&db, 2) {
+            let ct = s.ct_for_family(&vars, &ctx).unwrap();
+            assert_eq!(
+                ct.total().unwrap() as u64,
+                db.population_product(&ctx),
+                "{} {vars:?} ctx {ctx:?}",
+                kind.name()
+            );
+            ct.assert_counts_nonnegative().unwrap();
+        }
+    }
+}
+
+#[test]
+fn precount_serves_everything_by_projection_after_prepare() {
+    let db = university_db();
+    let mut s = StrategyKind::Precount.build(&db, StrategyConfig::default()).unwrap();
+    s.prepare().unwrap();
+    let joins_after_prepare = s.report().join_stats.chain_queries;
+    for (vars, ctx) in families_of(&db, 3) {
+        s.ct_for_family(&vars, &ctx).unwrap();
+    }
+    // no further joins: the definition of pre-counting
+    assert_eq!(s.report().join_stats.chain_queries, joins_after_prepare);
+}
+
+#[test]
+fn ondemand_join_counts_dwarf_hybrid() {
+    // the paper's JOIN problem, as a counted (scale-free) invariant
+    let cfg = preset("hepatitis", 0.05, 7).unwrap();
+    let db = generate(&cfg).unwrap();
+    let fams = families_of(&db, 2);
+    let mut hybrid = StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+    let mut ondemand =
+        StrategyKind::OnDemand.build(&db, StrategyConfig::default()).unwrap();
+    hybrid.prepare().unwrap();
+    for (vars, ctx) in &fams {
+        hybrid.ct_for_family(vars, ctx).unwrap();
+        ondemand.ct_for_family(vars, ctx).unwrap();
+    }
+    let h = hybrid.report().join_stats.chain_queries;
+    let o = ondemand.report().join_stats.chain_queries;
+    assert!(
+        o > 10 * h,
+        "ONDEMAND should JOIN far more than HYBRID (o={o}, h={h})"
+    );
+}
