@@ -1,0 +1,64 @@
+//! The coordinator worker-scaling sweep (EXPERIMENTS.md §E8).
+//!
+//! Runs the full learn workload for every strategy on Table-4 presets
+//! through the L3 [`relcount::coordinator::ParallelCoordinator`], once
+//! per worker count, and reports wall clock, speedup over the 1-worker
+//! baseline, and pool efficiency.  Counts and learned models are
+//! bit-identical across worker counts (asserted by
+//! `rust/tests/coordinator_parallel.rs`); this bench only measures time.
+//!
+//! Run: `cargo bench --bench coordinator_scaling`
+//! Env: RELCOUNT_SCALE (default 0.05), RELCOUNT_PRESETS (default
+//!      "uw,hepatitis"), RELCOUNT_WORKERS (default "1,2,4,auto"),
+//!      RELCOUNT_BUDGET_S (default 300).
+
+use std::time::Duration;
+
+use relcount::bench::experiments::{coordinator_scaling_rows, ExpConfig};
+use relcount::metrics::report::render_scaling;
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() -> relcount::Result<()> {
+    let scale: f64 = env_or("RELCOUNT_SCALE", "0.05").parse().unwrap_or(0.05);
+    let budget_s: u64 = env_or("RELCOUNT_BUDGET_S", "300").parse().unwrap_or(300);
+    let presets: Vec<&'static str> = env_or("RELCOUNT_PRESETS", "uw,hepatitis")
+        .split(',')
+        .map(|s| &*Box::leak(s.trim().to_string().into_boxed_str()))
+        .collect();
+    let workers: Vec<usize> = env_or("RELCOUNT_WORKERS", "1,2,4,auto")
+        .split(',')
+        .map(|t| match t.trim() {
+            "auto" => 0,
+            t => t.parse().expect("RELCOUNT_WORKERS: integer or `auto`"),
+        })
+        .collect();
+
+    let cfg = ExpConfig {
+        scale,
+        budget: Some(Duration::from_secs(budget_s)),
+        presets: Box::leak(presets.into_boxed_slice()),
+        ..Default::default()
+    };
+    println!(
+        "== coordinator scaling: scale={scale}, presets={:?}, workers={workers:?} ==",
+        cfg.presets
+    );
+
+    let rows = coordinator_scaling_rows(&cfg, &workers)?;
+    print!("{}", render_scaling(&rows));
+
+    // Headline: best speedup per strategy across presets.
+    for strat in ["PRECOUNT", "ONDEMAND", "HYBRID"] {
+        let best = rows
+            .iter()
+            .filter(|r| r.strategy == strat && !r.timed_out)
+            .map(|r| (r.speedup, r.workers))
+            .fold((1.0f64, 1usize), |a, b| if b.0 > a.0 { b } else { a });
+        println!("# {strat}: best {:.2}x at {} workers", best.0, best.1);
+    }
+    println!("# pre-count phases parallelize per lattice point, post-count per family");
+    Ok(())
+}

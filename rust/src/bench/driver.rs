@@ -5,11 +5,12 @@
 
 use std::time::Duration;
 
+use crate::coordinator::{CoordinatorConfig, CoordinatorReport, ParallelCoordinator};
 use crate::db::catalog::Database;
 use crate::error::Result;
 use crate::learn::search::{learn, LearnedModel, SearchConfig};
 use crate::metrics::report::RunRow;
-use crate::strategies::traits::{StrategyConfig, StrategyReport};
+use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
 use crate::strategies::StrategyKind;
 
 /// The counting workload driven through a strategy.
@@ -60,7 +61,17 @@ pub fn run_strategy(
     };
 
     let report = strategy.report();
-    let row = RunRow {
+    let row = row_from_report(db_name, kind, &report, timed_out);
+    Ok(RunOutcome { row, report, model })
+}
+
+fn row_from_report(
+    db_name: &str,
+    kind: StrategyKind,
+    report: &StrategyReport,
+    timed_out: bool,
+) -> RunRow {
+    RunRow {
         database: db_name.to_string(),
         strategy: kind.name().to_string(),
         metadata: report.timing.metadata,
@@ -71,8 +82,65 @@ pub fn run_strategy(
         families_scored: report.families_served,
         chain_queries: report.join_stats.chain_queries,
         timed_out,
+    }
+}
+
+/// Result of one coordinated (parallel) cell.
+pub struct CoordinatedOutcome {
+    pub row: RunRow,
+    pub report: StrategyReport,
+    /// Per-worker breakdown of the run.
+    pub coordinator: CoordinatorReport,
+    pub model: Option<LearnedModel>,
+}
+
+/// Run `kind` on `db` through the [`ParallelCoordinator`] with `workers`
+/// workers (0 = all cores).  The counts, the learned model and the row's
+/// count metrics are bit-identical to [`run_strategy`]; only the wall
+/// clock (and its per-worker decomposition) differs.
+pub fn run_coordinated(
+    db: &Database,
+    db_name: &str,
+    kind: StrategyKind,
+    workload: Workload,
+    budget: Option<Duration>,
+    workers: usize,
+) -> Result<CoordinatedOutcome> {
+    let scfg = StrategyConfig {
+        budget,
+        max_chain_length: match workload {
+            Workload::Learn(s) => s.max_chain_length,
+            Workload::PrepareOnly => StrategyConfig::default().max_chain_length,
+        },
+        ..Default::default()
     };
-    Ok(RunOutcome { row, report, model })
+    let mut coord = ParallelCoordinator::new(
+        db,
+        kind,
+        CoordinatorConfig { workers, strategy: scfg },
+    )?;
+
+    let (timed_out, model) = match workload {
+        Workload::PrepareOnly => match coord.prepare() {
+            Ok(()) => (false, None),
+            Err(e) if e.is_timeout() => (true, None),
+            Err(e) => return Err(e),
+        },
+        Workload::Learn(search_cfg) => match learn(db, &mut coord, search_cfg) {
+            Ok(m) => (false, Some(m)),
+            Err(e) if e.is_timeout() => (true, None),
+            Err(e) => return Err(e),
+        },
+    };
+
+    let report = coord.report();
+    let row = row_from_report(db_name, kind, &report, timed_out);
+    Ok(CoordinatedOutcome {
+        row,
+        report,
+        coordinator: coord.coordinator_report(),
+        model,
+    })
 }
 
 #[cfg(test)]
@@ -111,6 +179,26 @@ mod tests {
         )
         .unwrap();
         assert!(out.row.timed_out);
+    }
+
+    #[test]
+    fn coordinated_matches_sequential_models() {
+        let db = university_db();
+        let cfg = SearchConfig::default();
+        for kind in StrategyKind::ALL {
+            let seq = run_strategy(&db, "u", kind, Workload::Learn(cfg), None)
+                .unwrap()
+                .model
+                .unwrap();
+            let par =
+                run_coordinated(&db, "u", kind, Workload::Learn(cfg), None, 3)
+                    .unwrap();
+            assert_eq!(par.coordinator.workers, 3);
+            let m = par.model.unwrap();
+            assert_eq!(m.bn.nodes, seq.bn.nodes, "{kind:?}");
+            assert_eq!(m.bn.parents, seq.bn.parents, "{kind:?}");
+            assert!((m.total_score - seq.total_score).abs() < 1e-9, "{kind:?}");
+        }
     }
 
     #[test]

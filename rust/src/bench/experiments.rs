@@ -2,14 +2,14 @@
 //! (the per-experiment index is DESIGN.md §4).  Shared by the `cargo
 //! bench` targets, the CLI `exp` subcommand and the end-to-end example.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::bench::driver::{run_strategy, RunOutcome, Workload};
+use crate::bench::driver::{run_coordinated, run_strategy, RunOutcome, Workload};
 use crate::datagen::generator::generate;
 use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
 use crate::error::Result;
 use crate::learn::search::SearchConfig;
-use crate::metrics::report::{RunRow, Table4Row, Table5Row};
+use crate::metrics::report::{RunRow, ScalingRow, Table4Row, Table5Row};
 use crate::strategies::StrategyKind;
 
 /// Experiment-wide options.
@@ -122,6 +122,67 @@ pub fn paper_rows(name: &str) -> Option<u64> {
     paper_row_count(name)
 }
 
+/// The coordinator worker-scaling sweep: every strategy on every preset
+/// of `cfg`, full learn workload through the
+/// [`crate::coordinator::ParallelCoordinator`], once per worker count.
+///
+/// A 1-worker cell always runs first as the speedup baseline (whether or
+/// not `1` appears in `worker_counts`).  The learned models and count
+/// metrics are identical across cells by construction — the sweep
+/// measures wall clock only.
+pub fn coordinator_scaling_rows(
+    cfg: &ExpConfig,
+    worker_counts: &[usize],
+) -> Result<Vec<ScalingRow>> {
+    let mut counts: Vec<usize> = worker_counts
+        .iter()
+        .copied()
+        .map(|w| crate::coordinator::resolve_workers(w))
+        .filter(|&w| w != 1)
+        .collect();
+    counts.sort_unstable();
+    counts.dedup();
+
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        for kind in StrategyKind::ALL {
+            let mut baseline = Duration::ZERO;
+            for (i, &w) in std::iter::once(&1usize).chain(&counts).enumerate() {
+                let t0 = Instant::now();
+                let out = run_coordinated(
+                    &db,
+                    name,
+                    kind,
+                    Workload::Learn(cfg.search),
+                    cfg.budget,
+                    w,
+                )?;
+                let wall = t0.elapsed();
+                if i == 0 {
+                    baseline = wall;
+                }
+                let cpu_timer = out.coordinator.cpu_view().timing;
+                rows.push(ScalingRow {
+                    database: name.to_string(),
+                    strategy: kind.name().to_string(),
+                    workers: w,
+                    wall,
+                    speedup: if wall.is_zero() {
+                        1.0
+                    } else {
+                        baseline.as_secs_f64() / wall.as_secs_f64()
+                    },
+                    cpu: cpu_timer.total(),
+                    timed_out: out.row.timed_out,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -153,6 +214,21 @@ mod tests {
             assert!(r.ct_family_rows > 0);
             assert!(r.ct_database_rows > 0);
         }
+    }
+
+    #[test]
+    fn scaling_rows_cover_grid() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = coordinator_scaling_rows(&cfg, &[1, 2]).unwrap();
+        // 1 preset x 3 strategies x {1, 2} workers
+        assert_eq!(rows.len(), 3 * 2);
+        for r in &rows {
+            assert!(!r.timed_out, "{r:?}");
+            assert!(r.wall > Duration::ZERO);
+            assert!(r.speedup > 0.0);
+        }
+        // baseline rows report exactly 1.0
+        assert!(rows.iter().filter(|r| r.workers == 1).all(|r| r.speedup == 1.0));
     }
 
     #[test]

@@ -1,1 +1,37 @@
-// paper's L3 coordination contribution
+//! The L3 counting coordinator: work-sharded parallel execution of the
+//! counting strategies.
+//!
+//! The paper's bottleneck is computing instantiation counts over the
+//! relationship lattice, and its workload is embarrassingly parallel:
+//! the positive pre-count is independent per lattice point, the PRECOUNT
+//! negative phase is independent per lattice point, and the HYBRID /
+//! ONDEMAND post-count is independent per family.  This module exploits
+//! that without touching the learner or the strategies' algorithms:
+//!
+//! - [`shard`] assigns work to workers deterministically (LPT by cost
+//!   for pre-count tasks, stable hash routing for family cache keys);
+//! - [`pool`] runs a shard assignment on scoped threads and hands the
+//!   results back **in task order**;
+//! - [`parallel::ParallelCoordinator`] wraps a
+//!   [`crate::strategies::StrategyKind`] behind the standard
+//!   [`crate::strategies::CountingStrategy`] interface, owning the
+//!   shared positive/complete caches and one family-cache shard per
+//!   worker, and merging per-worker metrics into a single deterministic
+//!   [`crate::strategies::StrategyReport`].
+//!
+//! Counts are exact integer arithmetic over content-addressed tables, so
+//! ct-tables, learned structures and BDeu scores are bit-identical for
+//! every worker count — `rust/tests/coordinator_parallel.rs` holds that
+//! invariant, and `rust/benches/coordinator_scaling.rs` measures the
+//! wall-clock speedup (see `EXPERIMENTS.md`).
+//!
+//! Select it from the CLI with `--workers N` (`N = 0` or `auto` uses all
+//! cores): `relcount learn --preset uw --strategy hybrid --workers 4`.
+
+pub mod parallel;
+pub mod pool;
+pub mod shard;
+
+pub use parallel::{
+    resolve_workers, CoordinatorConfig, CoordinatorReport, ParallelCoordinator,
+};

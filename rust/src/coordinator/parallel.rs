@@ -1,0 +1,810 @@
+//! The [`ParallelCoordinator`]: a [`CountingStrategy`] whose count
+//! phases run on a worker pool.
+//!
+//! The coordinator wraps one of the three strategy *modes* (PRECOUNT /
+//! ONDEMAND / HYBRID) and re-executes their algorithms with the lattice
+//! sharded across workers:
+//!
+//! - **positive pre-count** (PRECOUNT, HYBRID): one task per entity
+//!   marginal and per lattice point ([`PositiveTask`]), LPT-balanced by
+//!   estimated join cost;
+//! - **negative pre-count** (PRECOUNT): one Möbius Join task per lattice
+//!   point, sharded by chain length
+//!   ([`crate::lattice::Lattice::partition_by_length`]) over the frozen
+//!   positive cache;
+//! - **post-count** ([`CountingStrategy::ct_for_families`]): one task per
+//!   family, routed by cache-key hash so each worker owns a disjoint
+//!   shard of the family cache.
+//!
+//! Results are merged in task order, so ct-tables, learned structures and
+//! BDeu scores are **bit-identical** to the sequential strategies for
+//! every worker count (`rust/tests/coordinator_parallel.rs` asserts
+//! this).  Only the wall clock and the per-worker timer breakdown change.
+
+use std::time::{Duration, Instant};
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::{g_subset, mobius_complete};
+use crate::ct::project::project;
+use crate::db::catalog::Database;
+use crate::db::query::{DirectSource, JoinStats};
+use crate::error::{Error, Result};
+use crate::lattice::Lattice;
+use crate::meta::rvar::RVar;
+use crate::metrics::memory::MemTracker;
+use crate::metrics::timing::{Deadline, Phase, PhaseTimer, WorkerTimers};
+use crate::strategies::cache::{CacheKey, CtCache};
+use crate::strategies::common::{
+    narrow_to_ctx, positive_tasks, run_positive_task, var_pops, var_rels,
+    LatticeCtx, PositiveTask, SharedLatticeSource, TimedSource,
+};
+use crate::strategies::precount::Precount;
+use crate::strategies::traits::{
+    CountingStrategy, FamilyRequest, StrategyConfig, StrategyReport,
+};
+use crate::strategies::StrategyKind;
+
+use super::pool;
+use super::shard::{lpt_partition, shard_of};
+
+/// Configuration of a [`ParallelCoordinator`].
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    /// Worker count; `0` resolves to [`std::thread::available_parallelism`].
+    pub workers: usize,
+    /// The wrapped strategy's configuration (chain length, budget, family
+    /// caching), interpreted exactly as the sequential strategies do.
+    pub strategy: StrategyConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 0, strategy: StrategyConfig::default() }
+    }
+}
+
+/// Resolve a `--workers` value: `0` means "all available cores".
+pub fn resolve_workers(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        n
+    }
+}
+
+/// Metrics of a coordinated run, beyond the merged [`StrategyReport`].
+#[derive(Clone, Debug)]
+pub struct CoordinatorReport {
+    /// Worker count the run executed with.
+    pub workers: usize,
+    /// The merged, deterministic-order report ([`CountingStrategy::report`]
+    /// returns the same object).  Its timings are wall clock, so parallel
+    /// speedup is visible in Figure-3-shaped tables.
+    pub merged: StrategyReport,
+    /// One report per worker shard (CPU view): that worker's phase
+    /// timers, query counters, fresh ct rows, serves executed, and its
+    /// family-cache shard's bytes/hit statistics.
+    pub per_worker: Vec<StrategyReport>,
+    /// Tasks executed per worker across all phases.
+    pub tasks_per_worker: Vec<u64>,
+}
+
+impl CoordinatorReport {
+    /// Fold the per-worker shard reports into one CPU-time view via
+    /// [`StrategyReport::merge`]: busy time sums per phase (compare with
+    /// `merged.timing`, the wall clock, for parallel efficiency), and
+    /// cache bytes/peaks sum because the shards are disjoint.
+    pub fn cpu_view(&self) -> StrategyReport {
+        let mut out = StrategyReport::default();
+        for r in &self.per_worker {
+            out.merge(r);
+        }
+        out
+    }
+}
+
+/// One family count served by a worker (or inline), with its timing and
+/// cost attribution — the unit merged back into the coordinator's state.
+struct ServedFamily {
+    ct: CtTable,
+    /// Wall time inside positive-count calls (projection / joins).
+    positive: Duration,
+    /// Remaining wall time (inclusion–exclusion).
+    negative: Duration,
+    stats: JoinStats,
+    /// Rows to add to the Table-5 `ct_rows_generated` counter (zero for
+    /// PRECOUNT projections, matching the sequential strategy).
+    fresh_rows: u64,
+    /// True when served by projection from a complete lattice table
+    /// (PRECOUNT's cache-hit path).
+    projected: bool,
+}
+
+/// A work-sharded execution layer serving complete ct-tables with the
+/// same interface — and bit-identical results — as the sequential
+/// [`StrategyKind`] it wraps.
+///
+/// ```no_run
+/// use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
+/// use relcount::db::fixtures::university_db;
+/// use relcount::strategies::{CountingStrategy, StrategyKind};
+///
+/// let db = university_db();
+/// let cfg = CoordinatorConfig { workers: 4, ..Default::default() };
+/// let mut c = ParallelCoordinator::new(&db, StrategyKind::Hybrid, cfg).unwrap();
+/// c.prepare().unwrap(); // positive pre-count on 4 workers
+/// ```
+pub struct ParallelCoordinator<'a> {
+    db: &'a Database,
+    kind: StrategyKind,
+    workers: usize,
+    cfg: StrategyConfig,
+    ctx: LatticeCtx,
+    /// Positive lattice ct-tables + entity marginals, frozen after the
+    /// positive phase; workers read it concurrently via
+    /// [`SharedLatticeSource`].
+    positive: CtCache,
+    /// Complete per-lattice-point tables (PRECOUNT mode only).
+    complete: CtCache,
+    /// Per-shard family caches; a family's key routes to one shard via
+    /// [`shard_of`], so shards hold disjoint key sets.
+    shards: Vec<CtCache>,
+    /// Wall-clock phase timer (the merged report's view).
+    timer: PhaseTimer,
+    /// Per-worker CPU phase timers (inline serves count toward worker 0).
+    worker_timers: WorkerTimers,
+    /// Per-worker query counters.
+    worker_stats: Vec<JoinStats>,
+    /// Per-worker fresh ct rows (Table-5 metric, attributed).
+    worker_rows: Vec<u64>,
+    /// Families computed per worker (cache hits are not attributed).
+    worker_families: Vec<u64>,
+    tasks_per_worker: Vec<u64>,
+    deadline: Deadline,
+    join_stats: JoinStats,
+    mem: MemTracker,
+    families_served: u64,
+    rows_generated: u64,
+    complete_hits: u64,
+    prepared: bool,
+}
+
+impl<'a> ParallelCoordinator<'a> {
+    /// Build the coordinator; the metadata phase (schema extraction,
+    /// lattice, query plans) runs here, exactly as in the sequential
+    /// strategies.
+    pub fn new(
+        db: &'a Database,
+        kind: StrategyKind,
+        cfg: CoordinatorConfig,
+    ) -> Result<Self> {
+        let workers = resolve_workers(cfg.workers);
+        let deadline = Deadline::new(cfg.strategy.budget);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(db, cfg.strategy.max_chain_length, &mut timer)?;
+        Ok(ParallelCoordinator {
+            db,
+            kind,
+            workers,
+            cfg: cfg.strategy,
+            ctx,
+            positive: CtCache::new(),
+            complete: CtCache::new(),
+            shards: (0..workers).map(|_| CtCache::new()).collect(),
+            timer,
+            worker_timers: WorkerTimers::new(workers),
+            worker_stats: vec![JoinStats::default(); workers],
+            worker_rows: vec![0; workers],
+            worker_families: vec![0; workers],
+            tasks_per_worker: vec![0; workers],
+            deadline,
+            join_stats: JoinStats::default(),
+            mem: MemTracker::default(),
+            families_served: 0,
+            rows_generated: 0,
+            complete_hits: 0,
+            prepared: false,
+        })
+    }
+
+    /// Resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The wrapped strategy mode.
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    /// Full coordinated-run metrics (the merged report plus the
+    /// per-worker breakdown).
+    pub fn coordinator_report(&self) -> CoordinatorReport {
+        CoordinatorReport {
+            workers: self.workers,
+            merged: self.report(),
+            per_worker: self.per_worker_reports(),
+            tasks_per_worker: self.tasks_per_worker.clone(),
+        }
+    }
+
+    /// One [`StrategyReport`] per worker shard: the worker's CPU phase
+    /// timers and attributed counters, plus its family-cache shard's
+    /// bytes and hit statistics.  Fold with
+    /// [`CoordinatorReport::cpu_view`] / [`StrategyReport::merge`].
+    pub fn per_worker_reports(&self) -> Vec<StrategyReport> {
+        (0..self.workers)
+            .map(|w| StrategyReport {
+                name: format!("{}/w{w}", self.kind.name()),
+                timing: self
+                    .worker_timers
+                    .workers
+                    .get(w)
+                    .copied()
+                    .unwrap_or_default(),
+                join_stats: self.worker_stats[w],
+                cache_bytes: self.shards[w].bytes(),
+                peak_ct_bytes: self.shards[w].mem.peak_bytes,
+                ct_rows_generated: self.worker_rows[w],
+                families_served: self.worker_families[w],
+                cache_hits: self.shards[w].hits,
+                cache_misses: self.shards[w].misses,
+            })
+            .collect()
+    }
+
+    /// Positive pre-count, sharded: one task per entity marginal and per
+    /// lattice point, LPT-balanced by estimated query cost (entity rows,
+    /// or the product of the chain's relationship table sizes).
+    fn fill_positive_parallel(&mut self) -> Result<()> {
+        let tasks = positive_tasks(self.db, &self.ctx);
+        let costs: Vec<u64> = tasks
+            .iter()
+            .map(|t| match *t {
+                PositiveTask::Entity(et) => self.db.entities[et].len() as u64,
+                PositiveTask::Point(id) => self.ctx.lattice.points[id]
+                    .rels
+                    .iter()
+                    .map(|&r| self.db.rels[r].len() as u64)
+                    .fold(1u64, |a, b| a.saturating_mul(b.max(1))),
+            })
+            .collect();
+        let assignment = lpt_partition(&costs, self.workers);
+
+        let db = self.db;
+        let ctx = &self.ctx;
+        let deadline = self.deadline;
+        let run = pool::run_shards(&tasks, &assignment, |_, &task| {
+            deadline.check(match task {
+                PositiveTask::Entity(_) => "positive ct (entity)",
+                PositiveTask::Point(_) => "positive ct (lattice)",
+            })?;
+            let mut stats = JoinStats::default();
+            let (key, table) = run_positive_task(db, ctx, task, &mut stats)?;
+            Ok((key, table, stats))
+        });
+
+        self.timer.add(Phase::Positive, run.wall);
+        let worker_of = worker_of_task(tasks.len(), &assignment);
+        for (w, d) in run.busy.iter().enumerate() {
+            self.worker_timers.add(w, Phase::Positive, *d);
+            self.tasks_per_worker[w] += run.tasks_run[w];
+        }
+        // Merge in task order: identical cache content (and byte/row
+        // accounting) to the sequential fill_positive_cache.
+        for (i, r) in run.results.into_iter().enumerate() {
+            let (key, table, stats) = r?;
+            self.worker_stats[worker_of[i]].merge(&stats);
+            self.join_stats.merge(&stats);
+            self.positive.insert(key, table);
+        }
+        Ok(())
+    }
+
+    /// Negative pre-count (PRECOUNT only), sharded by chain length: one
+    /// Möbius Join per lattice point over the frozen positive cache.
+    fn fill_complete_parallel(&mut self) -> Result<()> {
+        let ids: Vec<usize> = (0..self.ctx.lattice.points.len()).collect();
+        let assignment = self.ctx.lattice.partition_by_length(self.workers);
+
+        let db = self.db;
+        let lattice = &self.ctx.lattice;
+        let positive = &self.positive;
+        let deadline = self.deadline;
+        let run = pool::run_shards(&ids, &assignment, |_, &id| {
+            deadline.check("negative ct (lattice)")?;
+            let p = &lattice.points[id];
+            let vars = p.all_vars();
+            let mut src = SharedLatticeSource { db, lattice, cache: positive };
+            let ct = mobius_complete(&mut src, &vars, &p.pops)?;
+            Ok((Precount::complete_key(p), ct))
+        });
+
+        self.timer.add(Phase::Negative, run.wall);
+        let worker_of = worker_of_task(ids.len(), &assignment);
+        for (w, d) in run.busy.iter().enumerate() {
+            self.worker_timers.add(w, Phase::Negative, *d);
+            self.tasks_per_worker[w] += run.tasks_run[w];
+        }
+        for (i, r) in run.results.into_iter().enumerate() {
+            let (key, table) = r?;
+            self.worker_rows[worker_of[i]] += table.n_rows() as u64;
+            self.rows_generated += table.n_rows() as u64;
+            self.complete.insert(key, table);
+        }
+        Ok(())
+    }
+
+    /// Serve one family inline on the calling thread (the sequential
+    /// path of `ct_for_family`); attributed to worker 0.
+    fn serve_inline(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        let served = serve_one(
+            self.db,
+            &self.ctx.lattice,
+            &self.positive,
+            &self.complete,
+            self.kind,
+            vars,
+            ctx_pops,
+        )?;
+        self.merge_served(&served, 0, true);
+        self.tasks_per_worker[0] += 1;
+        Ok(served.ct)
+    }
+
+    /// Fold one served family's metrics into the coordinator state,
+    /// attributing its CPU to `worker`.  `count_wall` is set for inline
+    /// serves, whose durations are also the wall clock; the batch path
+    /// attributes wall time from the pool run instead.
+    fn merge_served(&mut self, s: &ServedFamily, worker: usize, count_wall: bool) {
+        if count_wall {
+            self.timer.add(Phase::Positive, s.positive);
+            self.timer.add(Phase::Negative, s.negative);
+        }
+        self.worker_timers.add(worker, Phase::Positive, s.positive);
+        self.worker_timers.add(worker, Phase::Negative, s.negative);
+        self.worker_stats[worker].merge(&s.stats);
+        self.worker_rows[worker] += s.fresh_rows;
+        self.worker_families[worker] += 1;
+        self.join_stats.merge(&s.stats);
+        self.rows_generated += s.fresh_rows;
+        self.complete_hits += s.projected as u64;
+        self.mem.observe_transient(s.ct.bytes());
+    }
+
+    /// Whether serve results are memoized in the per-shard family caches
+    /// (PRECOUNT projects from its complete tables instead, matching the
+    /// sequential strategy).
+    fn uses_family_cache(&self) -> bool {
+        self.cfg.family_cache && self.kind != StrategyKind::Precount
+    }
+}
+
+/// Invert a shard assignment: for each task index, the worker that ran it.
+fn worker_of_task(n_tasks: usize, assignment: &[Vec<usize>]) -> Vec<usize> {
+    let mut of = vec![0usize; n_tasks];
+    for (w, list) in assignment.iter().enumerate() {
+        for &i in list {
+            of[i] = w;
+        }
+    }
+    of
+}
+
+/// Compute one family's complete ct-table in `kind`'s serving mode, from
+/// shared read-only state.  This is the worker-side function: it is the
+/// single code path for both the inline (sequential) and the sharded
+/// (parallel) serve, which is what makes worker counts interchangeable.
+fn serve_one(
+    db: &Database,
+    lattice: &Lattice,
+    positive: &CtCache,
+    complete: &CtCache,
+    kind: StrategyKind,
+    vars: &[RVar],
+    ctx_pops: &[usize],
+) -> Result<ServedFamily> {
+    let t0 = Instant::now();
+    match kind {
+        // Fresh joins + family Möbius (Algorithm 2).
+        StrategyKind::OnDemand => {
+            let mut direct = DirectSource::new(db);
+            let (ct, positive) = {
+                let mut timed = TimedSource::new(&mut direct);
+                let ct = mobius_complete(&mut timed, vars, ctx_pops)?;
+                (ct, timed.positive_elapsed)
+            };
+            Ok(ServedFamily {
+                fresh_rows: ct.n_rows() as u64,
+                negative: t0.elapsed().saturating_sub(positive),
+                positive,
+                stats: direct.stats,
+                projected: false,
+                ct,
+            })
+        }
+        // Projections from the positive cache + family Möbius (Alg. 3).
+        StrategyKind::Hybrid => {
+            let mut src = SharedLatticeSource { db, lattice, cache: positive };
+            let (ct, positive) = {
+                let mut timed = TimedSource::new(&mut src);
+                let ct = mobius_complete(&mut timed, vars, ctx_pops)?;
+                (ct, timed.positive_elapsed)
+            };
+            Ok(ServedFamily {
+                fresh_rows: ct.n_rows() as u64,
+                negative: t0.elapsed().saturating_sub(positive),
+                positive,
+                stats: JoinStats::default(),
+                projected: false,
+                ct,
+            })
+        }
+        // Projection from the complete tables (Algorithm 1), with
+        // PRECOUNT's two special cases kept intact.
+        StrategyKind::Precount => {
+            let rels = var_rels(vars);
+            let vpops = var_pops(&db.schema, vars);
+            if rels.is_empty() {
+                // Attribute-only family: cross product of marginals.
+                let mut src = SharedLatticeSource { db, lattice, cache: positive };
+                let raw = g_subset(&mut src, &[], vars, ctx_pops)?;
+                let ct = project(&raw, vars)?;
+                return Ok(ServedFamily {
+                    positive: t0.elapsed(),
+                    negative: Duration::ZERO,
+                    stats: JoinStats::default(),
+                    fresh_rows: 0,
+                    projected: false,
+                    ct,
+                });
+            }
+            let Some(p) = lattice.covering_point(&rels, &vpops) else {
+                // Disconnected relationship set: family-level Möbius over
+                // the positive cache (the HYBRID move; see precount.rs).
+                let mut src = SharedLatticeSource { db, lattice, cache: positive };
+                let ct = mobius_complete(&mut src, vars, ctx_pops)?;
+                return Ok(ServedFamily {
+                    positive: Duration::ZERO,
+                    negative: t0.elapsed(),
+                    stats: JoinStats::default(),
+                    fresh_rows: ct.n_rows() as u64,
+                    projected: false,
+                    ct,
+                });
+            };
+            let full = complete
+                .peek(&Precount::complete_key(p))
+                .ok_or_else(|| Error::Strategy("complete ct missing (prepare?)".into()))?;
+            let mut ct = project(full, vars)?;
+            narrow_to_ctx(db, &mut ct, &p.pops, ctx_pops, vars)?;
+            Ok(ServedFamily {
+                positive: t0.elapsed(),
+                negative: Duration::ZERO,
+                stats: JoinStats::default(),
+                fresh_rows: 0,
+                projected: true,
+                ct,
+            })
+        }
+    }
+}
+
+impl CountingStrategy for ParallelCoordinator<'_> {
+    fn name(&self) -> &'static str {
+        self.kind.name()
+    }
+
+    /// Run the wrapped mode's pre-count phases on the worker pool:
+    /// positive fill for PRECOUNT/HYBRID, plus the per-point Möbius for
+    /// PRECOUNT.  ONDEMAND has no pre-phase.
+    fn prepare(&mut self) -> Result<()> {
+        if self.prepared {
+            return Ok(());
+        }
+        if matches!(self.kind, StrategyKind::Precount | StrategyKind::Hybrid) {
+            self.fill_positive_parallel()?;
+        }
+        if self.kind == StrategyKind::Precount {
+            self.fill_complete_parallel()?;
+        }
+        self.prepared = true;
+        Ok(())
+    }
+
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        if !self.prepared {
+            self.prepare()?;
+        }
+        self.deadline.check("family count (coordinator)")?;
+        self.families_served += 1;
+        if !self.uses_family_cache() {
+            return self.serve_inline(vars, ctx_pops);
+        }
+        let key = CtCache::key(vars, ctx_pops);
+        let shard = shard_of(&key, self.workers);
+        if let Some(hit) = self.shards[shard].get(&key) {
+            return Ok(hit.clone());
+        }
+        let ct = self.serve_inline(vars, ctx_pops)?;
+        self.shards[shard].insert(key, ct.clone());
+        Ok(ct)
+    }
+
+    /// The parallel post-count: cache hits are served inline, then the
+    /// distinct misses fan out across workers (routed by cache-key hash,
+    /// so each worker fills its own shard of the family cache) and merge
+    /// back in request order.
+    fn ct_for_families(&mut self, reqs: &[FamilyRequest]) -> Result<Vec<CtTable>> {
+        if self.workers <= 1 || reqs.len() <= 1 {
+            // Sequential fallback — identical to the default trait body.
+            return reqs.iter().map(|r| self.ct_for_family(&r.vars, &r.ctx_pops)).collect();
+        }
+        if !self.prepared {
+            self.prepare()?;
+        }
+        self.deadline.check("family batch (coordinator)")?;
+
+        let use_cache = self.uses_family_cache();
+        let mut out: Vec<Option<CtTable>> = vec![None; reqs.len()];
+        // Distinct misses, preserving first-seen order; duplicates within
+        // the batch reuse the first computation.
+        let mut miss_keys: Vec<CacheKey> = Vec::new();
+        let mut miss_req: Vec<usize> = Vec::new();
+        let mut dups: Vec<(usize, usize)> = Vec::new(); // (req idx, miss idx)
+        for (i, r) in reqs.iter().enumerate() {
+            self.families_served += 1;
+            self.deadline.check("family count (coordinator)")?;
+            let key = CtCache::key(&r.vars, &r.ctx_pops);
+            if use_cache {
+                let shard = shard_of(&key, self.workers);
+                if let Some(hit) = self.shards[shard].get(&key) {
+                    out[i] = Some(hit.clone());
+                    continue;
+                }
+            }
+            match miss_keys.iter().position(|k| *k == key) {
+                Some(j) => {
+                    if use_cache {
+                        // Sequentially this lookup would land after the
+                        // first copy's insert and hit; reclassify the
+                        // miss just recorded so hit/miss statistics stay
+                        // identical across worker counts.
+                        let shard = shard_of(&key, self.workers);
+                        self.shards[shard].misses -= 1;
+                        self.shards[shard].hits += 1;
+                    }
+                    dups.push((i, j));
+                }
+                None => {
+                    miss_keys.push(key);
+                    miss_req.push(i);
+                }
+            }
+        }
+
+        if !miss_req.is_empty() {
+            // Shard assignment: each miss goes to the worker owning its
+            // cache key, so shards stay disjoint.
+            let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); self.workers];
+            let mut worker_of = vec![0usize; miss_keys.len()];
+            for (j, key) in miss_keys.iter().enumerate() {
+                let w = shard_of(key, self.workers);
+                worker_of[j] = w;
+                assignment[w].push(j);
+            }
+            let tasks: Vec<&FamilyRequest> =
+                miss_req.iter().map(|&i| &reqs[i]).collect();
+
+            let db = self.db;
+            let lattice = &self.ctx.lattice;
+            let positive = &self.positive;
+            let complete = &self.complete;
+            let kind = self.kind;
+            let deadline = self.deadline;
+            let run = pool::run_shards(&tasks, &assignment, |_, r| {
+                deadline.check("family count (coordinator)")?;
+                serve_one(db, lattice, positive, complete, kind, &r.vars, &r.ctx_pops)
+            });
+
+            // Wall-clock attribution: the pool's wall time, split across
+            // phases proportionally to the served families' CPU mix.
+            let mut served: Vec<ServedFamily> = Vec::with_capacity(run.results.len());
+            for r in run.results {
+                served.push(r?);
+            }
+            for (w, &n) in run.tasks_run.iter().enumerate() {
+                self.tasks_per_worker[w] += n;
+            }
+            let cpu_pos: Duration = served.iter().map(|s| s.positive).sum();
+            let cpu_neg: Duration = served.iter().map(|s| s.negative).sum();
+            let cpu = cpu_pos + cpu_neg;
+            let wall_pos = if cpu.is_zero() {
+                Duration::ZERO
+            } else {
+                run.wall.mul_f64(cpu_pos.as_secs_f64() / cpu.as_secs_f64())
+            };
+            self.timer.add(Phase::Positive, wall_pos);
+            self.timer.add(Phase::Negative, run.wall.saturating_sub(wall_pos));
+
+            // Merge in miss order (deterministic across worker counts).
+            for (j, s) in served.into_iter().enumerate() {
+                self.merge_served(&s, worker_of[j], false);
+                if use_cache {
+                    let key = miss_keys[j].clone();
+                    self.shards[worker_of[j]].insert(key, s.ct.clone());
+                }
+                out[miss_req[j]] = Some(s.ct);
+            }
+        }
+
+        for (i, j) in dups {
+            out[i] = Some(
+                out[miss_req[j]].clone().expect("duplicate resolved before its source"),
+            );
+        }
+        Ok(out
+            .into_iter()
+            .map(|t| t.expect("every request served or failed loudly"))
+            .collect())
+    }
+
+    /// The merged, deterministic-order report.  Timings are wall clock
+    /// (speedup shows up here); the CPU view per worker is in
+    /// [`ParallelCoordinator::coordinator_report`].
+    fn report(&self) -> StrategyReport {
+        let mut peak = self.mem;
+        peak.merge_peak(&self.positive.mem);
+        let shard_bytes: usize = self.shards.iter().map(|s| s.bytes()).sum();
+        let shard_peak: usize = self.shards.iter().map(|s| s.mem.peak_bytes).sum();
+        peak.peak_bytes = peak.peak_bytes.max(
+            self.positive.mem.current_bytes + self.complete.mem.peak_bytes + shard_peak,
+        );
+        let (hits, misses) = match self.kind {
+            StrategyKind::Precount => {
+                (self.complete_hits, self.complete.misses)
+            }
+            _ => (
+                self.shards.iter().map(|s| s.hits).sum(),
+                self.shards.iter().map(|s| s.misses).sum(),
+            ),
+        };
+        StrategyReport {
+            name: self.kind.name().into(),
+            timing: self.timer,
+            join_stats: self.join_stats,
+            cache_bytes: self.positive.bytes() + self.complete.bytes() + shard_bytes,
+            peak_ct_bytes: peak.peak_bytes,
+            ct_rows_generated: self.rows_generated,
+            families_served: self.families_served,
+            cache_hits: hits,
+            cache_misses: misses,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    fn coordinator(
+        db: &Database,
+        kind: StrategyKind,
+        workers: usize,
+    ) -> ParallelCoordinator<'_> {
+        let cfg = CoordinatorConfig { workers, ..Default::default() };
+        ParallelCoordinator::new(db, kind, cfg).unwrap()
+    }
+
+    #[test]
+    fn matches_brute_force_for_all_modes() {
+        let db = university_db();
+        for kind in StrategyKind::ALL {
+            for workers in [1usize, 3] {
+                let mut c = coordinator(&db, kind, workers);
+                c.prepare().unwrap();
+                let ct = c.ct_for_family(&family(), &[0, 1]).unwrap();
+                let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+                assert_eq!(ct.n_rows(), brute.n_rows(), "{kind:?} w={workers}");
+                for (v, n) in brute.iter_rows() {
+                    assert_eq!(ct.get(&v).unwrap(), n, "{kind:?} w={workers} {v:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_equals_singles() {
+        let db = university_db();
+        let reqs = vec![
+            FamilyRequest::new(&family(), &[0, 1]),
+            FamilyRequest::new(
+                &[RVar::RelInd { rel: 1 }, RVar::EntityAttr { et: 2, attr: 0 }],
+                &[1, 2],
+            ),
+            FamilyRequest::new(&family(), &[0, 1]), // duplicate in-batch
+        ];
+        let mut par = coordinator(&db, StrategyKind::Hybrid, 4);
+        let batch = par.ct_for_families(&reqs).unwrap();
+        let mut seq = coordinator(&db, StrategyKind::Hybrid, 1);
+        for (r, b) in reqs.iter().zip(&batch) {
+            let one = seq.ct_for_family(&r.vars, &r.ctx_pops).unwrap();
+            assert_eq!(one.n_rows(), b.n_rows());
+            for (v, n) in one.iter_rows() {
+                assert_eq!(b.get(&v).unwrap(), n);
+            }
+        }
+        assert_eq!(par.report().families_served, 3);
+    }
+
+    #[test]
+    fn hybrid_family_cache_hits_on_revisit() {
+        let db = university_db();
+        let mut c = coordinator(&db, StrategyKind::Hybrid, 2);
+        c.ct_for_family(&family(), &[0, 1]).unwrap();
+        c.ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(c.report().cache_hits, 1);
+        assert_eq!(c.report().families_served, 2);
+    }
+
+    #[test]
+    fn no_joins_during_hybrid_serving() {
+        let db = university_db();
+        let mut c = coordinator(&db, StrategyKind::Hybrid, 2);
+        c.prepare().unwrap();
+        let joins = c.report().join_stats.chain_queries;
+        assert!(joins > 0, "positive phase JOINs");
+        c.ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(c.report().join_stats.chain_queries, joins);
+    }
+
+    #[test]
+    fn budget_zero_times_out() {
+        let db = university_db();
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            strategy: StrategyConfig {
+                budget: Some(Duration::ZERO),
+                ..Default::default()
+            },
+        };
+        let mut c =
+            ParallelCoordinator::new(&db, StrategyKind::Precount, cfg).unwrap();
+        assert!(c.prepare().unwrap_err().is_timeout());
+    }
+
+    #[test]
+    fn coordinator_report_shapes() {
+        let db = university_db();
+        let mut c = coordinator(&db, StrategyKind::Precount, 3);
+        c.prepare().unwrap();
+        c.ct_for_family(&family(), &[0, 1]).unwrap();
+        let rep = c.coordinator_report();
+        assert_eq!(rep.workers, 3);
+        assert_eq!(rep.per_worker.len(), 3);
+        assert_eq!(rep.tasks_per_worker.len(), 3);
+        assert!(rep.tasks_per_worker.iter().sum::<u64>() > 0);
+        assert!(rep.merged.timing.total() > Duration::ZERO);
+        assert_eq!(rep.merged.cache_hits, 1); // served by projection
+        let cpu = rep.cpu_view();
+        assert!(cpu.timing.positive + cpu.timing.negative > Duration::ZERO);
+        // the inline serve is attributed to worker 0
+        assert_eq!(rep.per_worker[0].families_served, 1);
+        // attributed counters fold to the merged totals
+        assert_eq!(cpu.ct_rows_generated, rep.merged.ct_rows_generated);
+        assert_eq!(
+            cpu.join_stats.chain_queries,
+            rep.merged.join_stats.chain_queries
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! The worker pool: chunked static sharding over scoped threads.
+//!
+//! A pool run takes an indexed task list plus a *shard assignment* (which
+//! task indices each worker owns, produced by the deterministic
+//! partitioners in [`crate::coordinator::shard`] and
+//! [`crate::lattice::Lattice::partition_by_length`]), spawns one scoped
+//! thread per non-empty shard, and streams `(task, result)` pairs back
+//! over an mpsc channel.  Results are returned **in task order**, so a
+//! caller that folds them left-to-right observes the same merge order no
+//! matter how many workers ran or how their execution interleaved — the
+//! cornerstone of the coordinator's determinism guarantee.
+//!
+//! With one live shard (or one task) the pool degenerates to a plain
+//! sequential loop on the calling thread: a 1-worker coordinator run has
+//! no threading overhead and exactly mirrors the sequential strategies.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::error::Result;
+
+/// Outcome of one [`run_shards`] call.
+#[derive(Debug)]
+pub struct PoolRun<R> {
+    /// Per-task results, indexed exactly like the caller's task list
+    /// (i.e. independent of shard assignment and scheduling).
+    pub results: Vec<Result<R>>,
+    /// Per-worker busy time: the sum of task durations each shard ran.
+    pub busy: Vec<Duration>,
+    /// Per-worker executed-task counts.
+    pub tasks_run: Vec<u64>,
+    /// Wall-clock time of the whole parallel section.
+    pub wall: Duration,
+}
+
+/// Execute `tasks` under the shard assignment `shards` (worker `w` runs
+/// the task indices in `shards[w]`, in order) and gather the results in
+/// task order.
+///
+/// `f` is called as `f(task_index, &tasks[task_index])` and must be safe
+/// to call concurrently from several threads (it only gets shared
+/// references).  Worker panics propagate to the caller via
+/// [`std::thread::scope`].
+///
+/// # Invariant
+///
+/// Every task index in `0..tasks.len()` must appear in exactly one shard;
+/// the function panics (never silently drops work) if the assignment
+/// leaves a task uncovered.
+pub fn run_shards<T, R, F>(tasks: &[T], shards: &[Vec<usize>], f: F) -> PoolRun<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> Result<R> + Sync,
+{
+    let t0 = Instant::now();
+    let n = shards.len().max(1);
+    let mut busy = vec![Duration::ZERO; n];
+    let mut tasks_run = vec![0u64; n];
+    let mut slots: Vec<Option<Result<R>>> = Vec::with_capacity(tasks.len());
+    slots.resize_with(tasks.len(), || None);
+
+    let live = shards.iter().filter(|s| !s.is_empty()).count();
+    if live <= 1 || tasks.len() <= 1 {
+        // Sequential fast path: no threads, no channel.
+        for (w, shard) in shards.iter().enumerate() {
+            for &i in shard {
+                let task_t0 = Instant::now();
+                slots[i] = Some(f(i, &tasks[i]));
+                busy[w] += task_t0.elapsed();
+                tasks_run[w] += 1;
+            }
+        }
+    } else {
+        let (tx, rx) = mpsc::channel::<(usize, usize, Duration, Result<R>)>();
+        std::thread::scope(|scope| {
+            for (w, shard) in shards.iter().enumerate() {
+                if shard.is_empty() {
+                    continue;
+                }
+                let tx = tx.clone();
+                let f = &f;
+                scope.spawn(move || {
+                    for &i in shard {
+                        let task_t0 = Instant::now();
+                        let r = f(i, &tasks[i]);
+                        if tx.send((i, w, task_t0.elapsed(), r)).is_err() {
+                            return; // receiver gone: abandon quietly
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            for (i, w, d, r) in rx {
+                slots[i] = Some(r);
+                busy[w] += d;
+                tasks_run[w] += 1;
+            }
+        });
+    }
+
+    PoolRun {
+        results: slots
+            .into_iter()
+            .map(|s| s.expect("pool: shard assignment left a task uncovered"))
+            .collect(),
+        busy,
+        tasks_run,
+        wall: t0.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+
+    fn even_shards(n_tasks: usize, n_shards: usize) -> Vec<Vec<usize>> {
+        let mut shards = vec![Vec::new(); n_shards];
+        for i in 0..n_tasks {
+            shards[i % n_shards].push(i);
+        }
+        shards
+    }
+
+    #[test]
+    fn results_in_task_order() {
+        let tasks: Vec<u64> = (0..40).collect();
+        for n in [1usize, 2, 4] {
+            let run = run_shards(&tasks, &even_shards(tasks.len(), n), |i, &t| {
+                assert_eq!(i as u64, t);
+                Ok(t * t)
+            });
+            let vals: Vec<u64> = run.results.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(vals, tasks.iter().map(|t| t * t).collect::<Vec<_>>());
+            assert_eq!(run.tasks_run.iter().sum::<u64>(), 40);
+            assert!(run.wall > Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn errors_stay_on_their_task() {
+        let tasks: Vec<u64> = (0..10).collect();
+        let run = run_shards(&tasks, &even_shards(10, 3), |_, &t| {
+            if t == 7 {
+                Err(Error::Strategy("boom".into()))
+            } else {
+                Ok(t)
+            }
+        });
+        for (i, r) in run.results.iter().enumerate() {
+            assert_eq!(r.is_err(), i == 7, "slot {i}");
+        }
+    }
+
+    #[test]
+    fn empty_shards_and_empty_tasks() {
+        let run = run_shards::<u64, u64, _>(&[], &[Vec::new(), Vec::new()], |_, &t| Ok(t));
+        assert!(run.results.is_empty());
+        let tasks = [5u64];
+        let run = run_shards(&tasks, &[vec![0], Vec::new()], |_, &t| Ok(t + 1));
+        assert_eq!(run.results.len(), 1);
+        assert_eq!(*run.results[0].as_ref().unwrap(), 6);
+        assert_eq!(run.tasks_run[0], 1);
+        assert_eq!(run.tasks_run[1], 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "uncovered")]
+    fn uncovered_task_panics() {
+        let tasks = [1u64, 2];
+        run_shards(&tasks, &[vec![0]], |_, &t| Ok(t));
+    }
+}

@@ -1,0 +1,103 @@
+//! Deterministic shard assignment.
+//!
+//! Two flavors, matching the coordinator's two parallel workloads:
+//!
+//! - [`lpt_partition`] — cost-balanced chunked sharding for *known* task
+//!   lists (the positive pre-count phase, where per-task cost is
+//!   estimated from table sizes).  Longest-processing-time greedy:
+//!   costliest task first, each to the currently lightest shard.
+//! - [`shard_of`] — stable hash routing for *cache-affine* work (the
+//!   per-family post-count phase): a family's cache key always routes to
+//!   the same shard, so each worker owns a disjoint slice of the family
+//!   cache and lookups never cross shards.
+//!
+//! Both are pure functions of their inputs — no randomness, no timing —
+//! so a re-run with the same worker count shards identically, and the
+//! merged results are bit-identical across *any* worker count (results
+//! are merged in task order, see [`crate::coordinator::pool`]).
+
+use std::hash::{Hash, Hasher};
+
+use rustc_hash::FxHasher;
+
+/// Owning shard of a cache key: stable FxHash routing into `n_shards`
+/// buckets.  FxHash is unseeded, so the route is reproducible across
+/// processes and runs.
+pub fn shard_of<K: Hash>(key: &K, n_shards: usize) -> usize {
+    let n = n_shards.max(1);
+    let mut h = FxHasher::default();
+    key.hash(&mut h);
+    (h.finish() % n as u64) as usize
+}
+
+/// Longest-processing-time partition of task indices `0..costs.len()`
+/// into `n_shards` disjoint lists, balanced by `costs`.
+///
+/// Ties break toward the lower task id (for ordering) and the lower
+/// shard id (for placement), making the assignment fully deterministic.
+/// Within each shard, indices are returned ascending so a sequential
+/// fallback walks them in task order.
+pub fn lpt_partition(costs: &[u64], n_shards: usize) -> Vec<Vec<usize>> {
+    let n = n_shards.max(1);
+    let mut order: Vec<usize> = (0..costs.len()).collect();
+    order.sort_by(|&a, &b| costs[b].cmp(&costs[a]).then(a.cmp(&b)));
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut loads = vec![0u64; n];
+    for id in order {
+        let s = (0..n).min_by_key(|&s| (loads[s], s)).unwrap();
+        loads[s] = loads[s].saturating_add(costs[id].max(1));
+        shards[s].push(id);
+    }
+    for shard in &mut shards {
+        shard.sort_unstable();
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_is_stable_and_in_range() {
+        let key = (vec![1usize, 2, 3], vec![0usize, 1]);
+        for n in [1usize, 2, 4, 16] {
+            let s = shard_of(&key, n);
+            assert!(s < n);
+            assert_eq!(s, shard_of(&key, n), "same key, same shard");
+        }
+        assert_eq!(shard_of(&key, 0), 0); // degenerate count clamps to 1
+    }
+
+    #[test]
+    fn lpt_covers_and_balances() {
+        let costs = vec![8u64, 1, 1, 1, 1, 8, 1, 1];
+        let shards = lpt_partition(&costs, 2);
+        let mut all: Vec<usize> = shards.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        // each heavy task (ids 0 and 5) lands on a different shard
+        let heavy_home =
+            |id: usize| shards.iter().position(|s| s.contains(&id)).unwrap();
+        assert_ne!(heavy_home(0), heavy_home(5));
+        // deterministic
+        assert_eq!(shards, lpt_partition(&costs, 2));
+    }
+
+    #[test]
+    fn lpt_degenerate_shapes() {
+        assert_eq!(lpt_partition(&[], 3), vec![Vec::<usize>::new(); 3]);
+        let one = lpt_partition(&[5, 2, 9], 1);
+        assert_eq!(one, vec![vec![0, 1, 2]]);
+        // more shards than tasks: extras stay empty
+        let wide = lpt_partition(&[3, 3], 4);
+        assert_eq!(wide.iter().filter(|s| !s.is_empty()).count(), 2);
+    }
+
+    #[test]
+    fn zero_cost_tasks_still_spread() {
+        // all-zero costs must not pile every task onto shard 0
+        let shards = lpt_partition(&[0, 0, 0, 0], 2);
+        assert!(!shards[0].is_empty() && !shards[1].is_empty(), "{shards:?}");
+    }
+}

@@ -26,6 +26,16 @@ pub struct JoinStats {
     pub entity_queries: u64,
 }
 
+impl JoinStats {
+    /// Fold another counter set into this one (per-worker shard merge).
+    pub fn merge(&mut self, other: &JoinStats) {
+        self.chain_queries += other.chain_queries;
+        self.join_steps += other.join_steps;
+        self.rows_enumerated += other.rows_enumerated;
+        self.entity_queries += other.entity_queries;
+    }
+}
+
 /// GROUP-BY counts over one entity table.  `vars` must all be
 /// `EntityAttr` of `et`.
 pub fn groupby_entity(db: &Database, et: usize, vars: &[RVar]) -> Result<CtTable> {

@@ -154,6 +154,25 @@ impl Lattice {
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }
+
+    /// Per-point cost estimate for shard balancing.  Both the chain JOIN
+    /// and the per-point Möbius Join grow exponentially with chain
+    /// length (more subsets, wider tables), so length dominates any
+    /// finer-grained estimate.
+    pub fn point_costs(&self) -> Vec<u64> {
+        self.points.iter().map(|p| 1u64 << (2 * p.length.min(30))).collect()
+    }
+
+    /// Deterministically partition the point ids into `n_shards` disjoint
+    /// lists, balanced by chain length (longest-processing-time greedy,
+    /// [`crate::coordinator::shard::lpt_partition`]).  Every point
+    /// appears in exactly one shard; within a shard, ids are ascending.
+    /// The partition depends only on the lattice shape and `n_shards`,
+    /// never on timing or hashing, so parallel runs shard identically
+    /// across executions.
+    pub fn partition_by_length(&self, n_shards: usize) -> Vec<Vec<usize>> {
+        crate::coordinator::shard::lpt_partition(&self.point_costs(), n_shards)
+    }
 }
 
 #[cfg(test)]
@@ -213,6 +232,38 @@ mod tests {
         let l = Lattice::build(&s, 3).unwrap();
         assert_eq!(l.len(), 2); // no {R1, R2} point
         assert!(l.point(&[0, 1]).is_none());
+    }
+
+    #[test]
+    fn partition_covers_points_exactly_once() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 3).unwrap();
+        for n in [1usize, 2, 4, 7] {
+            let shards = l.partition_by_length(n);
+            assert_eq!(shards.len(), n);
+            let mut seen: Vec<usize> = shards.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..l.len()).collect::<Vec<_>>(), "n={n}");
+            // deterministic: same call, same answer
+            assert_eq!(shards, l.partition_by_length(n));
+        }
+    }
+
+    #[test]
+    fn partition_spreads_long_chains() {
+        let s = university_schema();
+        let l = Lattice::build(&s, 3).unwrap();
+        // 3 points (two 1-chains + one 2-chain) over 2 shards: the costly
+        // 2-chain must sit alone against the two cheap 1-chains.
+        let shards = l.partition_by_length(2);
+        let len_of = |ids: &Vec<usize>| -> usize {
+            ids.iter().map(|&i| l.points[i].length).max().unwrap_or(0)
+        };
+        assert_eq!(len_of(&shards[0]).max(len_of(&shards[1])), 2);
+        let two_chain_shard =
+            shards.iter().position(|ids| ids.iter().any(|&i| l.points[i].length == 2));
+        let solo = &shards[two_chain_shard.unwrap()];
+        assert_eq!(solo.len(), 1, "the 2-chain should not share a shard: {shards:?}");
     }
 
     #[test]

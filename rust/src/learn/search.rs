@@ -18,7 +18,7 @@ use crate::learn::bn::Bn;
 use crate::learn::score::{bdeu_from_ct, family_matrix};
 use crate::meta::family::Family;
 use crate::meta::rvar::RVar;
-use crate::strategies::traits::CountingStrategy;
+use crate::strategies::traits::{CountingStrategy, FamilyRequest};
 
 /// Structure-search configuration.
 #[derive(Clone, Copy, Debug)]
@@ -95,16 +95,18 @@ impl Scorer<'_, '_> {
         Ok(self.score_batch(std::slice::from_ref(family))?[0])
     }
 
-    /// Score a batch of families.  Cache hits are served directly; for
-    /// the misses, ct-tables come from the counting strategy and the
-    /// BDeu evaluation goes through the batched score backend (one PJRT
+    /// Score a batch of families.  Cache hits are served directly; the
+    /// misses' ct-tables come from the counting strategy in one
+    /// [`CountingStrategy::ct_for_families`] batch (which the parallel
+    /// coordinator fans out across worker shards), and the BDeu
+    /// evaluation goes through the batched score backend (one PJRT
     /// dispatch per 64 families on the XLA backend).  Families whose
     /// parent-configuration space is too large to densify use the sparse
     /// scalar path.
     fn score_batch(&mut self, families: &[Family]) -> Result<Vec<f64>> {
         let mut out = vec![0.0; families.len()];
-        let mut miss_idx = Vec::new();
-        let mut miss_reqs = Vec::new();
+        let mut ct_idx: Vec<(usize, (RVar, Vec<RVar>))> = Vec::new();
+        let mut ct_reqs: Vec<FamilyRequest> = Vec::new();
         for (i, family) in families.iter().enumerate() {
             let key = (family.child, family.parents.clone());
             if let Some(&s) = self.cache.get(&key) {
@@ -114,7 +116,20 @@ impl Scorer<'_, '_> {
             }
             self.families_scored += 1;
             let ctx = widest_ctx(self.db, self.lattice, family);
-            let ct = self.strategy.ct_for_family(&family.vars(), &ctx)?;
+            ct_idx.push((i, key));
+            ct_reqs.push(FamilyRequest { vars: family.vars(), ctx_pops: ctx });
+        }
+        // The whole miss batch is materialized at once so the coordinator
+        // can fan it out; residency is bounded by the neighborhood size
+        // times a *family* table (small by the paper's Eq. 4 — the
+        // complete lattice tables never pass through here).  Strategies'
+        // peak_ct_bytes keeps its per-serve meaning and does not include
+        // this learner-held batch.
+        let cts = self.strategy.ct_for_families(&ct_reqs)?;
+        let mut miss_idx = Vec::new();
+        let mut miss_reqs = Vec::new();
+        for ((i, key), ct) in ct_idx.into_iter().zip(cts) {
+            let family = &families[i];
             let penalty = self.cfg.edge_penalty * family.parents.len() as f64;
             match family_matrix(&ct, &family.child, self.cfg.n_prime)? {
                 Some(req) => {

@@ -18,6 +18,10 @@
 //! - the three **count-caching strategies** ([`strategies`]):
 //!   `PRECOUNT` (Algorithm 1), `ONDEMAND` (Algorithm 2) and the paper's
 //!   contribution `HYBRID` (Algorithm 3),
+//! - the **parallel counting coordinator** ([`coordinator`]): a
+//!   work-sharded execution layer that partitions the lattice across a
+//!   worker pool and serves bit-identical counts through the same
+//!   strategy interface (`--workers N`),
 //! - **BDeu-scored structure learning** ([`learn`]) with the
 //!   learn-and-join lattice search,
 //! - a **PJRT runtime** ([`runtime`]) that loads the AOT-compiled XLA
@@ -36,6 +40,7 @@
 //! `EXPERIMENTS.md` for measured results.
 
 pub mod bench;
+pub mod coordinator;
 pub mod ct;
 pub mod datagen;
 pub mod db;

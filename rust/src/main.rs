@@ -3,31 +3,41 @@
 //! Subcommands:
 //!   gen        --preset <name> --scale <f> --seed <n> --out <dir>
 //!   count      --preset <name>|--db <dir> --strategy <pre|post|hybrid>
-//!   learn      --preset <name>|--db <dir> --strategy <...> [--xla]
-//!   exp        fig3|fig4|table4|table5  --scale <f> --budget-s <n>
+//!              [--workers N|auto]
+//!   learn      --preset <name>|--db <dir> --strategy <...>
+//!              [--workers N|auto] [--xla]
+//!   exp        fig3|fig4|table4|table5|scaling  --scale <f> --budget-s <n>
 //!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
 //!
+//! `--workers` routes the counting phases through the L3 parallel
+//! coordinator (`relcount::coordinator`); counts stay bit-identical.
+//!
 //! Examples:
-//!   relcount learn --preset uw --strategy hybrid
+//!   relcount learn --preset uw --strategy hybrid --workers auto
 //!   relcount exp fig3 --scale 0.05 --budget-s 120
+//!   relcount exp scaling --workers-list 1,2,4 --presets uw
 //!   relcount gen --preset imdb --scale 0.1 --out /tmp/imdb
 
 use std::path::Path;
 use std::process::ExitCode;
 use std::time::Duration;
 
-use relcount::bench::driver::{run_strategy, Workload};
+use relcount::bench::driver::{run_coordinated, run_strategy, Workload};
 use relcount::bench::experiments::{
-    fig3_fig4_rows, table4_rows, table5_rows, ExpConfig,
+    coordinator_scaling_rows, fig3_fig4_rows, table4_rows, table5_rows, ExpConfig,
 };
+use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
 use relcount::datagen::presets::{preset, PRESET_NAMES};
 use relcount::db::catalog::Database;
 use relcount::db::loader;
 use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
-use relcount::metrics::report::{render_fig3, render_fig4, render_table4, render_table5};
+use relcount::metrics::report::{
+    render_fig3, render_fig4, render_scaling, render_table4, render_table5,
+};
 use relcount::runtime::client::Runtime;
+use relcount::strategies::traits::CountingStrategy;
 use relcount::strategies::StrategyKind;
 use relcount::util::cli::Args;
 
@@ -37,13 +47,18 @@ relcount — pre/post/hybrid count caching for SRL model discovery
 USAGE:
   relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
   relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
-  relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F] [--xla]
-  relcount exp <fig3|fig4|table4|table5> [--scale F] [--budget-s N] [--presets a,b]
+                     [--workers N|auto]
+  relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
+                     [--workers N|auto] [--xla]
+  relcount exp <fig3|fig4|table4|table5|scaling> [--scale F] [--budget-s N]
+                     [--presets a,b] [--workers-list 1,2,4]
   relcount artifacts [--dir <artifacts>]
   relcount presets
 
   strategies: precount | ondemand | hybrid      presets: uw mondial hepatitis
   mutagenesis movielens financial imdb visual_genome
+  --workers N shards the counting phases over N threads (auto = all cores)
+  via the L3 parallel coordinator; counts stay bit-identical.
 ";
 
 fn main() -> ExitCode {
@@ -106,14 +121,37 @@ fn run() -> Result<()> {
             let (name, db) = load_db(&args)?;
             let kind = strategy_kind(&args)?;
             let budget = budget_of(&args)?;
-            let out = run_strategy(&db, &name, kind, Workload::PrepareOnly, budget)?;
-            print!("{}", render_fig3(&[out.row.clone()]));
-            print!("{}", render_fig4(&[out.row]));
+            let workers = args.workers()?;
+            let (row, report) = if workers == 1 {
+                let out = run_strategy(&db, &name, kind, Workload::PrepareOnly, budget)?;
+                (out.row, out.report)
+            } else {
+                let out = run_coordinated(
+                    &db,
+                    &name,
+                    kind,
+                    Workload::PrepareOnly,
+                    budget,
+                    workers,
+                )?;
+                let cpu = out.coordinator.cpu_view().timing;
+                println!(
+                    "coordinator: {} workers, cpu {:.3}s over wall {:.3}s \
+                     (tasks/worker: {:?})",
+                    out.coordinator.workers,
+                    cpu.total().as_secs_f64(),
+                    out.row.total().as_secs_f64(),
+                    out.coordinator.tasks_per_worker
+                );
+                (out.row, out.report)
+            };
+            print!("{}", render_fig3(&[row.clone()]));
+            print!("{}", render_fig4(&[row]));
             println!(
                 "joins: {} chain queries, {} rows enumerated; ct rows generated: {}",
-                out.report.join_stats.chain_queries,
-                out.report.join_stats.rows_enumerated,
-                out.report.ct_rows_generated
+                report.join_stats.chain_queries,
+                report.join_stats.rows_enumerated,
+                report.ct_rows_generated
             );
             Ok(())
         }
@@ -125,13 +163,20 @@ fn run() -> Result<()> {
                 n_prime: args.get_f64("n-prime", 1.0)?,
                 ..Default::default()
             };
-            let mut strategy = kind.build(
-                &db,
-                relcount::strategies::traits::StrategyConfig {
-                    budget: budget_of(&args)?,
-                    ..Default::default()
-                },
-            )?;
+            let scfg = relcount::strategies::traits::StrategyConfig {
+                budget: budget_of(&args)?,
+                ..Default::default()
+            };
+            let workers = args.workers()?;
+            let mut strategy: Box<dyn CountingStrategy + '_> = if workers == 1 {
+                kind.build(&db, scfg)?
+            } else {
+                Box::new(ParallelCoordinator::new(
+                    &db,
+                    kind,
+                    CoordinatorConfig { workers, strategy: scfg },
+                )?)
+            };
             let model = if args.has("xla") {
                 // score through the AOT-compiled Pallas kernel (batched)
                 let mut backend = relcount::learn::backend::XlaBackend::load_default()?;
@@ -166,13 +211,22 @@ fn run() -> Result<()> {
                 .positional
                 .first()
                 .map(|s| s.as_str())
-                .ok_or_else(|| Error::Data("exp needs fig3|fig4|table4|table5".into()))?;
+                .ok_or_else(|| {
+                    Error::Data("exp needs fig3|fig4|table4|table5|scaling".into())
+                })?;
             let cfg = exp_config(&args)?;
             match which {
                 "fig3" => print!("{}", render_fig3(&fig3_fig4_rows(&cfg)?)),
                 "fig4" => print!("{}", render_fig4(&fig3_fig4_rows(&cfg)?)),
                 "table4" => print!("{}", render_table4(&table4_rows(&cfg)?)),
                 "table5" => print!("{}", render_table5(&table5_rows(&cfg)?)),
+                "scaling" => {
+                    let counts = workers_list(&args)?;
+                    print!(
+                        "{}",
+                        render_scaling(&coordinator_scaling_rows(&cfg, &counts)?)
+                    );
+                }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }
             Ok(())
@@ -218,6 +272,19 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Parse `--workers-list 1,2,4` (`auto` entries resolve to all cores).
+fn workers_list(args: &Args) -> Result<Vec<usize>> {
+    let raw = args.get_or("workers-list", "1,2,4");
+    raw.split(',')
+        .map(|tok| match tok.trim() {
+            "auto" => Ok(0),
+            t => t.parse::<usize>().map_err(|_| {
+                Error::Data(format!("--workers-list expects integers or `auto`, got {t:?}"))
+            }),
+        })
+        .collect()
 }
 
 fn budget_of(args: &Args) -> Result<Option<Duration>> {

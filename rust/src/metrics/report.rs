@@ -99,6 +99,53 @@ pub fn render_table5(rows: &[Table5Row]) -> String {
     out
 }
 
+/// One cell of the coordinator worker-scaling sweep: a (database,
+/// strategy, worker-count) run with its wall clock and the speedup
+/// against the same cell at 1 worker.
+#[derive(Clone, Debug)]
+pub struct ScalingRow {
+    pub database: String,
+    pub strategy: String,
+    pub workers: usize,
+    /// Wall-clock of the whole workload (prepare + serving).
+    pub wall: Duration,
+    /// `wall(1 worker) / wall(workers)`; 1.0 for the baseline row.
+    pub speedup: f64,
+    /// Summed per-worker CPU time, for an efficiency readout
+    /// (`cpu / (workers * wall)`).
+    pub cpu: Duration,
+    pub timed_out: bool,
+}
+
+/// Render the worker-scaling sweep (the `coordinator_scaling` bench and
+/// the CLI `exp scaling`).
+pub fn render_scaling(rows: &[ScalingRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:<9} {:>8} {:>10} {:>9} {:>8} {:>11}  {}\n",
+        "database", "strategy", "workers", "wall_s", "speedup", "cpu_s", "efficiency", "status"
+    ));
+    for r in rows {
+        let eff = if r.workers > 0 && !r.wall.is_zero() {
+            r.cpu.as_secs_f64() / (r.workers as f64 * r.wall.as_secs_f64())
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "{:<16} {:<9} {:>8} {:>10} {:>8.2}x {:>8} {:>10.0}%  {}\n",
+            r.database,
+            r.strategy,
+            r.workers,
+            fmt_dur(r.wall),
+            r.speedup,
+            fmt_dur(r.cpu),
+            100.0 * eff,
+            if r.timed_out { "TIMEOUT" } else { "ok" }
+        ));
+    }
+    out
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -162,6 +209,21 @@ mod tests {
             mean_parents_per_node: 1.6,
         }]);
         assert!(t4.contains("1.6"));
+    }
+
+    #[test]
+    fn renders_scaling() {
+        let s = render_scaling(&[ScalingRow {
+            database: "uw".into(),
+            strategy: "HYBRID".into(),
+            workers: 4,
+            wall: Duration::from_millis(250),
+            speedup: 3.2,
+            cpu: Duration::from_millis(800),
+            timed_out: false,
+        }]);
+        assert!(s.contains("3.20x"));
+        assert!(s.contains("80%")); // 0.8 / (4 * 0.25)
     }
 
     #[test]

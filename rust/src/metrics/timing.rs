@@ -64,6 +64,59 @@ impl PhaseTimer {
     }
 }
 
+/// Per-worker phase timers of a parallel counting run.
+///
+/// Each worker shard of the coordinator accumulates its own
+/// [`PhaseTimer`]; this collection aggregates them two ways:
+/// [`WorkerTimers::cpu_total`] (the summed CPU view, comparable to a
+/// sequential run's timer) and [`WorkerTimers::critical_path`] (the
+/// slowest worker per phase — the lower bound on parallel wall time).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerTimers {
+    pub workers: Vec<PhaseTimer>,
+}
+
+impl WorkerTimers {
+    /// Timers for `n` workers, all zero.
+    pub fn new(n: usize) -> Self {
+        WorkerTimers { workers: vec![PhaseTimer::default(); n] }
+    }
+
+    /// Grow to at least `n` workers (keeps existing accumulations).
+    pub fn ensure(&mut self, n: usize) {
+        if self.workers.len() < n {
+            self.workers.resize(n, PhaseTimer::default());
+        }
+    }
+
+    /// Attribute `d` of `phase` to `worker`.
+    pub fn add(&mut self, worker: usize, phase: Phase, d: Duration) {
+        self.ensure(worker + 1);
+        self.workers[worker].add(phase, d);
+    }
+
+    /// Summed CPU time per phase over all workers.
+    pub fn cpu_total(&self) -> PhaseTimer {
+        let mut t = PhaseTimer::default();
+        for w in &self.workers {
+            t.merge(w);
+        }
+        t
+    }
+
+    /// Per-phase maximum over workers: the busiest shard's time, i.e. the
+    /// critical path of a perfectly overlapped parallel phase.
+    pub fn critical_path(&self) -> PhaseTimer {
+        let mut t = PhaseTimer::default();
+        for w in &self.workers {
+            t.metadata = t.metadata.max(w.metadata);
+            t.positive = t.positive.max(w.positive);
+            t.negative = t.negative.max(w.negative);
+        }
+        t
+    }
+}
+
 /// A wall-clock budget.  `check` returns the paper-shaped timeout error
 /// once exceeded.
 #[derive(Clone, Copy, Debug)]
@@ -126,6 +179,22 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.metadata, Duration::from_millis(7));
         assert_eq!(a.negative, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn worker_timers_aggregate() {
+        let mut wt = WorkerTimers::new(2);
+        wt.add(0, Phase::Positive, Duration::from_millis(10));
+        wt.add(1, Phase::Positive, Duration::from_millis(4));
+        wt.add(3, Phase::Negative, Duration::from_millis(6)); // auto-grow
+        assert_eq!(wt.workers.len(), 4);
+        let cpu = wt.cpu_total();
+        assert_eq!(cpu.positive, Duration::from_millis(14));
+        assert_eq!(cpu.negative, Duration::from_millis(6));
+        let crit = wt.critical_path();
+        assert_eq!(crit.positive, Duration::from_millis(10));
+        assert_eq!(crit.negative, Duration::from_millis(6));
+        assert_eq!(crit.metadata, Duration::ZERO);
     }
 
     #[test]

@@ -62,6 +62,53 @@ pub fn entity_key(et: usize) -> CacheKey {
     (Vec::new(), vec![et])
 }
 
+/// One independent unit of positive pre-count work.
+///
+/// The pre-counting positive phase decomposes into embarrassingly
+/// parallel tasks — one GROUP BY per entity type, one chain JOIN per
+/// lattice point.  Each task reads only the (shared, immutable) database
+/// and writes one ct-table, so shards can execute disjoint task subsets
+/// with no coordination; the coordinator merges the resulting
+/// `(key, table)` pairs in task order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PositiveTask {
+    /// Full marginal of one entity type (GROUP BY, no JOINs).
+    Entity(usize),
+    /// Positive ct-table of one lattice point (INNER JOIN GROUP BY).
+    Point(usize),
+}
+
+/// The full positive-phase task list, in the canonical (deterministic)
+/// order: entity marginals first, then lattice points by ascending id.
+pub fn positive_tasks(db: &Database, ctx: &LatticeCtx) -> Vec<PositiveTask> {
+    let mut tasks: Vec<PositiveTask> =
+        (0..db.schema.entities.len()).map(PositiveTask::Entity).collect();
+    tasks.extend((0..ctx.lattice.points.len()).map(PositiveTask::Point));
+    tasks
+}
+
+/// Execute one positive task, returning the cache key and table it
+/// produces.  `stats` receives the task's query counters.
+pub fn run_positive_task(
+    db: &Database,
+    ctx: &LatticeCtx,
+    task: PositiveTask,
+    stats: &mut JoinStats,
+) -> Result<(CacheKey, CtTable)> {
+    match task {
+        PositiveTask::Entity(et) => {
+            let vars = vars_for_entity(&db.schema, et);
+            stats.entity_queries += 1;
+            Ok((entity_key(et), groupby_entity(db, et, &vars)?))
+        }
+        PositiveTask::Point(id) => {
+            let p = &ctx.lattice.points[id];
+            let t = positive_chain_ct(db, &p.rels, &p.attr_vars, stats)?;
+            Ok((lp_key(&p.rels, &p.attr_vars, &p.pops), t))
+        }
+    }
+}
+
 /// Fill `cache` with the positive ct-table of every lattice point and the
 /// full marginal of every entity type — the pre-counting positive phase
 /// shared by PRECOUNT and HYBRID (Algorithms 1 & 3, lines 1-3).
@@ -73,23 +120,15 @@ pub fn fill_positive_cache(
     deadline: &Deadline,
     stats: &mut JoinStats,
 ) -> Result<()> {
-    // entity marginals (GROUP BY, no JOINs)
-    for et in 0..db.schema.entities.len() {
-        deadline.check("positive ct (entity)")?;
-        let vars = vars_for_entity(&db.schema, et);
-        let t = timer.time(Phase::Positive, || {
-            stats.entity_queries += 1;
-            groupby_entity(db, et, &vars)
+    for task in positive_tasks(db, ctx) {
+        deadline.check(match task {
+            PositiveTask::Entity(_) => "positive ct (entity)",
+            PositiveTask::Point(_) => "positive ct (lattice)",
         })?;
-        cache.insert(entity_key(et), t);
-    }
-    // lattice point positives (INNER JOIN GROUP BY)
-    for p in &ctx.lattice.points {
-        deadline.check("positive ct (lattice)")?;
-        let t = timer.time(Phase::Positive, || {
-            positive_chain_ct(db, &p.rels, &p.attr_vars, stats)
+        let (key, t) = timer.time(Phase::Positive, || {
+            run_positive_task(db, ctx, task, stats)
         })?;
-        cache.insert(lp_key(&p.rels, &p.attr_vars, &p.pops), t);
+        cache.insert(key, t);
     }
     Ok(())
 }
@@ -136,6 +175,86 @@ impl ChainSource for LatticeCacheSource<'_> {
     fn population(&self, et: usize) -> i128 {
         self.db.population(et) as i128
     }
+}
+
+/// A read-only [`ChainSource`] over a *shared* lattice cache.
+///
+/// [`LatticeCacheSource`] needs `&mut CtCache` because lookups maintain
+/// hit/miss counters.  Worker shards of the parallel coordinator instead
+/// read the positive cache concurrently through an immutable borrow
+/// ([`CtCache::peek`]), which makes the source `Send`-able into scoped
+/// threads: the cache is frozen after the positive phase, so shared reads
+/// are race-free by construction.  Hit accounting, when wanted, is the
+/// coordinator's job.
+pub struct SharedLatticeSource<'a> {
+    pub db: &'a Database,
+    pub lattice: &'a Lattice,
+    pub cache: &'a CtCache,
+}
+
+impl ChainSource for SharedLatticeSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        let p = self.lattice.point(chain).ok_or_else(|| {
+            Error::Strategy(format!(
+                "chain {chain:?} exceeds the lattice (max length {}); \
+                 ONDEMAND must be used",
+                self.lattice.max_length
+            ))
+        })?;
+        let key = lp_key(&p.rels, &p.attr_vars, &p.pops);
+        let full = self
+            .cache
+            .peek(&key)
+            .ok_or_else(|| Error::Strategy(format!("positive ct missing for {chain:?}")))?;
+        project(full, vars)
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        let full = self
+            .cache
+            .peek(&entity_key(et))
+            .ok_or_else(|| Error::Strategy(format!("entity marginal missing for {et}")))?;
+        project(full, vars)
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.db.schema
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.db.population(et) as i128
+    }
+}
+
+/// Re-base a ct-table counted over a lattice point's populations
+/// `point_pops` onto the requested context `ctx_pops`: divide out the
+/// point's extra populations (every count is a multiple of their product)
+/// and multiply in the context's missing ones.  Extracted from PRECOUNT's
+/// serve path so the parallel coordinator shares the exact arithmetic.
+pub fn narrow_to_ctx(
+    db: &Database,
+    ct: &mut CtTable,
+    point_pops: &[usize],
+    ctx_pops: &[usize],
+    vars: &[RVar],
+) -> Result<()> {
+    let extra: i128 = point_pops
+        .iter()
+        .filter(|e| !ctx_pops.contains(e))
+        .map(|&e| db.population(e) as i128)
+        .product();
+    let missing: i128 = ctx_pops
+        .iter()
+        .filter(|e| !point_pops.contains(e))
+        .map(|&e| db.population(e) as i128)
+        .product();
+    ct.divide_exact(extra).map_err(|e| {
+        Error::Strategy(format!(
+            "context narrowing failed for family {vars:?} ctx {ctx_pops:?} \
+             (point pops {point_pops:?}): {e}"
+        ))
+    })?;
+    ct.scale(missing)
 }
 
 /// Wraps a [`ChainSource`], accumulating the wall time spent inside its

@@ -88,10 +88,7 @@ impl CountingStrategy for OnDemand<'_> {
                 .add(Phase::Negative, t0.elapsed().saturating_sub(timed.positive_elapsed));
             ct
         };
-        self.join_stats.chain_queries += direct.stats.chain_queries;
-        self.join_stats.join_steps += direct.stats.join_steps;
-        self.join_stats.rows_enumerated += direct.stats.rows_enumerated;
-        self.join_stats.entity_queries += direct.stats.entity_queries;
+        self.join_stats.merge(&direct.stats);
         self.rows_generated += ct.n_rows() as u64;
         self.mem.observe_transient(ct.bytes());
         if self.cfg.family_cache {

@@ -18,7 +18,8 @@ use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
 use crate::strategies::cache::CtCache;
 use crate::strategies::common::{
-    fill_positive_cache, var_pops, var_rels, LatticeCacheSource, LatticeCtx,
+    fill_positive_cache, narrow_to_ctx, var_pops, var_rels, LatticeCacheSource,
+    LatticeCtx,
 };
 use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
 
@@ -63,8 +64,12 @@ impl<'a> Precount<'a> {
         })
     }
 
-    /// Complete-table cache key for a lattice point.
-    fn complete_key(p: &crate::lattice::LatticePoint) -> crate::strategies::cache::CacheKey {
+    /// Complete-table cache key for a lattice point (shared with the
+    /// parallel coordinator's PRECOUNT mode, which must generate the
+    /// identical keys for its sharded complete cache).
+    pub(crate) fn complete_key(
+        p: &crate::lattice::LatticePoint,
+    ) -> crate::strategies::cache::CacheKey {
         CtCache::key(&p.all_vars(), &p.pops)
     }
 }
@@ -157,29 +162,10 @@ impl CountingStrategy for Precount<'_> {
             .get(&key)
             .ok_or_else(|| Error::Strategy("complete ct missing (prepare?)".into()))?;
 
-        // Projection only — Alg. 1 line 6.
+        // Projection only — Alg. 1 line 6 — then re-base the counts from
+        // the point's populations onto the requested context.
         let mut ct = self.timer.time(Phase::Positive, || project(full, vars))?;
-
-        // Context adjustment: the cached table counts over p.pops.
-        let extra: i128 = p
-            .pops
-            .iter()
-            .filter(|e| !ctx_pops.contains(e))
-            .map(|&e| self.db.population(e) as i128)
-            .product();
-        let missing: i128 = ctx_pops
-            .iter()
-            .filter(|e| !p.pops.contains(e))
-            .map(|&e| self.db.population(e) as i128)
-            .product();
-        ct.divide_exact(extra).map_err(|e| {
-            Error::Strategy(format!(
-                "context narrowing failed for family {vars:?} ctx {ctx_pops:?} \
-                 via LP {:?} (pops {:?}): {e}",
-                p.rels, p.pops
-            ))
-        })?;
-        ct.scale(missing)?;
+        narrow_to_ctx(self.db, &mut ct, &p.pops, ctx_pops, vars)?;
         self.mem.observe_transient(ct.bytes());
         Ok(ct)
     }

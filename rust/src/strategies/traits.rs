@@ -45,6 +45,30 @@ pub struct StrategyReport {
     pub cache_misses: u64,
 }
 
+impl StrategyReport {
+    /// Merge another report into this one (used by the parallel
+    /// coordinator to fold per-worker shard reports into a single view).
+    ///
+    /// Additive counters sum; timings sum (giving a CPU-time view when
+    /// the inputs ran concurrently); cache byte levels sum because shards
+    /// hold disjoint tables; peaks sum for the same reason — the shards'
+    /// caches coexist in one process, so the worst case is their
+    /// simultaneous residency.
+    pub fn merge(&mut self, other: &StrategyReport) {
+        if self.name.is_empty() {
+            self.name = other.name.clone();
+        }
+        self.timing.merge(&other.timing);
+        self.join_stats.merge(&other.join_stats);
+        self.cache_bytes += other.cache_bytes;
+        self.peak_ct_bytes += other.peak_ct_bytes;
+        self.ct_rows_generated += other.ct_rows_generated;
+        self.families_served += other.families_served;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+    }
+}
+
 /// A count-caching strategy: serves complete ct-tables for families.
 pub trait CountingStrategy {
     /// Strategy name (PRECOUNT / ONDEMAND / HYBRID).
@@ -59,6 +83,32 @@ pub trait CountingStrategy {
     /// `ctx_pops` (the lattice point's populations during search).
     fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable>;
 
+    /// Complete ct-tables for a batch of families, in request order.
+    ///
+    /// The default implementation serves the batch sequentially through
+    /// [`CountingStrategy::ct_for_family`]; the parallel coordinator
+    /// overrides it to fan the batch out across worker shards.  Callers
+    /// with several independent requests (the hill climb's candidate
+    /// neighborhood) should prefer this entry point.
+    fn ct_for_families(&mut self, reqs: &[FamilyRequest]) -> Result<Vec<CtTable>> {
+        reqs.iter().map(|r| self.ct_for_family(&r.vars, &r.ctx_pops)).collect()
+    }
+
     /// Metrics snapshot.
     fn report(&self) -> StrategyReport;
+}
+
+/// One family-count request: the family's variables plus the population
+/// context its counts must range over.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct FamilyRequest {
+    pub vars: Vec<RVar>,
+    pub ctx_pops: Vec<usize>,
+}
+
+impl FamilyRequest {
+    /// Build a request from borrowed slices.
+    pub fn new(vars: &[RVar], ctx_pops: &[usize]) -> Self {
+        FamilyRequest { vars: vars.to_vec(), ctx_pops: ctx_pops.to_vec() }
+    }
 }

@@ -76,6 +76,22 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.options.contains_key(key)
     }
+
+    /// The `--workers` option: absent -> 1 (sequential), `auto` or `0`
+    /// -> 0 (the coordinator resolves 0 to all available cores), else a
+    /// positive integer.
+    pub fn workers(&self) -> Result<usize> {
+        match self.get("workers") {
+            None => Ok(1),
+            Some("auto") | Some("0") => Ok(0),
+            Some(v) => match v.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(Error::Data(format!(
+                    "--workers expects a positive integer or `auto`, got {v:?}"
+                ))),
+            },
+        }
+    }
 }
 
 #[cfg(test)]
@@ -109,5 +125,14 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --fast");
         assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn workers_parsing() {
+        assert_eq!(parse("learn").workers().unwrap(), 1);
+        assert_eq!(parse("learn --workers 4").workers().unwrap(), 4);
+        assert_eq!(parse("learn --workers auto").workers().unwrap(), 0);
+        assert_eq!(parse("learn --workers 0").workers().unwrap(), 0);
+        assert!(parse("learn --workers nope").workers().is_err());
     }
 }

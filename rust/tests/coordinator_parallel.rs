@@ -1,0 +1,175 @@
+//! The coordinator's central invariant: worker counts are
+//! interchangeable.  A 1-worker and a 4-worker run of every strategy
+//! mode must produce bit-identical ct-tables, and structure learning
+//! through the coordinator must reproduce the sequential strategies'
+//! models and BDeu scores exactly.
+
+use relcount::bench::driver::{run_coordinated, run_strategy, Workload};
+use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
+use relcount::ct::cttable::CtTable;
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::db::catalog::Database;
+use relcount::lattice::Lattice;
+use relcount::learn::search::SearchConfig;
+use relcount::meta::rvar::RVar;
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
+use relcount::strategies::StrategyKind;
+
+/// Seeded preset shared by every test in this file.
+fn seeded_db() -> Database {
+    let cfg = preset("uw", 0.02, 42).unwrap();
+    generate(&cfg).unwrap()
+}
+
+fn coordinator(
+    db: &Database,
+    kind: StrategyKind,
+    workers: usize,
+) -> ParallelCoordinator<'_> {
+    ParallelCoordinator::new(
+        db,
+        kind,
+        CoordinatorConfig { workers, strategy: StrategyConfig::default() },
+    )
+    .unwrap()
+}
+
+/// Singleton and pair families over each lattice point's variable set
+/// (the same enumeration strategy_equivalence.rs uses, bounded for time).
+fn families_of(db: &Database) -> Vec<(Vec<RVar>, Vec<usize>)> {
+    let lattice = Lattice::build(&db.schema, 3).unwrap();
+    let mut out = Vec::new();
+    for p in &lattice.points {
+        let vars = p.all_vars();
+        for i in 0..vars.len() {
+            out.push((vec![vars[i]], p.pops.clone()));
+            for j in (i + 1)..vars.len() {
+                out.push((vec![vars[i], vars[j]], p.pops.clone()));
+            }
+        }
+    }
+    out
+}
+
+fn assert_tables_equal(a: &CtTable, b: &CtTable, what: &str) {
+    assert_eq!(a.n_rows(), b.n_rows(), "{what}: row count");
+    for (vals, c) in b.iter_rows() {
+        assert_eq!(a.get(&vals).unwrap(), c, "{what} at {vals:?}");
+    }
+}
+
+#[test]
+fn one_and_four_workers_serve_identical_tables() {
+    let db = seeded_db();
+    let fams = families_of(&db);
+    assert!(fams.len() > 20);
+    for kind in StrategyKind::ALL {
+        let mut w1 = coordinator(&db, kind, 1);
+        let mut w4 = coordinator(&db, kind, 4);
+        for (vars, ctx) in &fams {
+            let a = w1.ct_for_family(vars, ctx).unwrap();
+            let b = w4.ct_for_family(vars, ctx).unwrap();
+            assert_tables_equal(&a, &b, &format!("{kind:?} {vars:?}"));
+        }
+    }
+}
+
+#[test]
+fn coordinator_matches_sequential_strategies() {
+    let db = seeded_db();
+    let fams = families_of(&db);
+    for kind in StrategyKind::ALL {
+        let mut seq = kind.build(&db, StrategyConfig::default()).unwrap();
+        let mut par = coordinator(&db, kind, 4);
+        for (vars, ctx) in &fams {
+            let a = seq.ct_for_family(vars, ctx).unwrap();
+            let b = par.ct_for_family(vars, ctx).unwrap();
+            assert_tables_equal(&b, &a, &format!("{kind:?} {vars:?}"));
+        }
+    }
+}
+
+#[test]
+fn batched_serving_matches_single_requests() {
+    use relcount::strategies::traits::FamilyRequest;
+    let db = seeded_db();
+    let reqs: Vec<FamilyRequest> = families_of(&db)
+        .into_iter()
+        .map(|(vars, ctx)| FamilyRequest { vars, ctx_pops: ctx })
+        .collect();
+    for kind in StrategyKind::ALL {
+        let mut batch = coordinator(&db, kind, 4);
+        let tables = batch.ct_for_families(&reqs).unwrap();
+        assert_eq!(tables.len(), reqs.len());
+        let mut single = coordinator(&db, kind, 1);
+        for (r, t) in reqs.iter().zip(&tables) {
+            let one = single.ct_for_family(&r.vars, &r.ctx_pops).unwrap();
+            assert_tables_equal(t, &one, &format!("{kind:?} {:?}", r.vars));
+        }
+    }
+}
+
+#[test]
+fn learned_models_and_bdeu_scores_identical_across_workers() {
+    let db = seeded_db();
+    let cfg = SearchConfig::default();
+    for kind in StrategyKind::ALL {
+        let seq = run_strategy(&db, "uw", kind, Workload::Learn(cfg), None)
+            .unwrap()
+            .model
+            .unwrap();
+        for workers in [1usize, 4] {
+            let par = run_coordinated(
+                &db,
+                "uw",
+                kind,
+                Workload::Learn(cfg),
+                None,
+                workers,
+            )
+            .unwrap()
+            .model
+            .unwrap();
+            assert_eq!(par.bn.nodes, seq.bn.nodes, "{kind:?} w={workers}");
+            assert_eq!(par.bn.parents, seq.bn.parents, "{kind:?} w={workers}");
+            // identical ct-tables -> identical BDeu arithmetic
+            assert_eq!(
+                par.total_score.to_bits(),
+                seq.total_score.to_bits(),
+                "{kind:?} w={workers}: {} vs {}",
+                par.total_score,
+                seq.total_score
+            );
+        }
+    }
+}
+
+#[test]
+fn prepare_metrics_match_sequential_counts() {
+    // The parallel pre-count executes the same queries and generates the
+    // same rows/bytes as the sequential fill, whatever the worker count.
+    let db = seeded_db();
+    for kind in [StrategyKind::Precount, StrategyKind::Hybrid] {
+        let mut seq = kind.build(&db, StrategyConfig::default()).unwrap();
+        seq.prepare().unwrap();
+        let s = seq.report();
+        for workers in [1usize, 4] {
+            let mut par = coordinator(&db, kind, workers);
+            par.prepare().unwrap();
+            let p = par.report();
+            assert_eq!(
+                p.join_stats.chain_queries, s.join_stats.chain_queries,
+                "{kind:?} w={workers}"
+            );
+            assert_eq!(
+                p.join_stats.rows_enumerated, s.join_stats.rows_enumerated,
+                "{kind:?} w={workers}"
+            );
+            assert_eq!(
+                p.ct_rows_generated, s.ct_rows_generated,
+                "{kind:?} w={workers}"
+            );
+            assert_eq!(p.cache_bytes, s.cache_bytes, "{kind:?} w={workers}");
+        }
+    }
+}

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Lint gate: run before the tier-1 suite (see EXPERIMENTS.md).
+#
+#   scripts/check.sh            # fmt --check + clippy -D warnings
+#   scripts/check.sh --fix      # apply rustfmt instead of checking
+#
+# The workspace root is rust/; doc builds must stay warning-free for the
+# coordinator module (rustdoc is part of its acceptance criteria).
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+if [[ "${1:-}" == "--fix" ]]; then
+    cargo fmt
+else
+    cargo fmt --check
+fi
+
+cargo clippy --all-targets -- -D warnings
+
+# rustdoc warnings fail the gate too (dangling intra-doc links etc.)
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "check.sh: fmt + clippy + rustdoc clean"
