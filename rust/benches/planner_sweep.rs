@@ -1,0 +1,70 @@
+//! The ADAPTIVE planner sweep (EXPERIMENTS.md §E9).
+//!
+//! Runs the full learn workload through the ADAPTIVE strategy at a
+//! ladder of memory budgets, tracing the pre-count fraction from 0
+//! (pure ONDEMAND) through HYBRID's operating point to 1 (pure
+//! PRECOUNT) on Table-4 presets.  Counts and learned models are
+//! bit-identical at every rung (`rust/tests/strategy_equivalence.rs`);
+//! the sweep measures where the time goes and what stays resident.
+//!
+//! Run: `cargo bench --bench planner_sweep`
+//! Env: RELCOUNT_SCALE (default 0.05), RELCOUNT_PRESETS (default
+//!      "uw,hepatitis"), RELCOUNT_WORKERS (default 1),
+//!      RELCOUNT_BUDGET_S (default 300), RELCOUNT_JSON (optional output
+//!      path for machine-readable rows).
+
+use std::time::Duration;
+
+use relcount::bench::experiments::{planner_sweep_rows, ExpConfig};
+use relcount::metrics::report::{planner_rows_to_json, render_planner};
+
+fn env_or(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+fn main() -> relcount::Result<()> {
+    let scale: f64 = env_or("RELCOUNT_SCALE", "0.05").parse().unwrap_or(0.05);
+    let budget_s: u64 = env_or("RELCOUNT_BUDGET_S", "300").parse().unwrap_or(300);
+    let workers: usize = env_or("RELCOUNT_WORKERS", "1").parse().unwrap_or(1);
+    let presets: Vec<&'static str> = env_or("RELCOUNT_PRESETS", "uw,hepatitis")
+        .split(',')
+        .map(|s| &*Box::leak(s.trim().to_string().into_boxed_str()))
+        .collect();
+
+    let cfg = ExpConfig {
+        scale,
+        budget: Some(Duration::from_secs(budget_s)),
+        presets: Box::leak(presets.into_boxed_slice()),
+        ..Default::default()
+    };
+    println!(
+        "== planner sweep: scale={scale}, presets={:?}, workers={workers} ==",
+        cfg.presets
+    );
+
+    let rows = planner_sweep_rows(&cfg, workers)?;
+    print!("{}", render_planner(&rows));
+
+    if let Ok(path) = std::env::var("RELCOUNT_JSON") {
+        std::fs::write(&path, planner_rows_to_json(&rows).dump() + "\n")?;
+        println!("# wrote {path}");
+    }
+
+    // Headline: where along the spectrum does each preset run fastest?
+    for preset in cfg.presets {
+        let best = rows
+            .iter()
+            .filter(|r| r.database == *preset && !r.timed_out)
+            .min_by(|a, b| a.total().cmp(&b.total()));
+        if let Some(b) = best {
+            println!(
+                "# {preset}: fastest at pre-fraction {:.3} ({:.3}s, {} joins)",
+                b.pre_fraction,
+                b.total().as_secs_f64(),
+                b.chain_queries
+            );
+        }
+    }
+    println!("# budget 0 = pure post-counting; inf = complete tables resident");
+    Ok(())
+}

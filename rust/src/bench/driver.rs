@@ -29,6 +29,18 @@ pub struct RunOutcome {
     pub model: Option<LearnedModel>,
 }
 
+/// Build the strategy configuration for a workload cell.
+fn cell_config(workload: Workload, budget: Option<Duration>) -> StrategyConfig {
+    StrategyConfig {
+        budget,
+        max_chain_length: match workload {
+            Workload::Learn(s) => s.max_chain_length,
+            Workload::PrepareOnly => StrategyConfig::default().max_chain_length,
+        },
+        ..Default::default()
+    }
+}
+
 /// Run `kind` on `db` with the given budget.
 pub fn run_strategy(
     db: &Database,
@@ -37,14 +49,18 @@ pub fn run_strategy(
     workload: Workload,
     budget: Option<Duration>,
 ) -> Result<RunOutcome> {
-    let scfg = StrategyConfig {
-        budget,
-        max_chain_length: match workload {
-            Workload::Learn(s) => s.max_chain_length,
-            Workload::PrepareOnly => StrategyConfig::default().max_chain_length,
-        },
-        ..Default::default()
-    };
+    run_strategy_with(db, db_name, kind, workload, cell_config(workload, budget))
+}
+
+/// Run `kind` on `db` with a fully explicit [`StrategyConfig`] (the
+/// ADAPTIVE planner sweep sets `mem_budget`/`estimator` here).
+pub fn run_strategy_with(
+    db: &Database,
+    db_name: &str,
+    kind: StrategyKind,
+    workload: Workload,
+    scfg: StrategyConfig,
+) -> Result<RunOutcome> {
     let mut strategy = kind.build(db, scfg)?;
 
     let (timed_out, model) = match workload {
@@ -106,14 +122,18 @@ pub fn run_coordinated(
     budget: Option<Duration>,
     workers: usize,
 ) -> Result<CoordinatedOutcome> {
-    let scfg = StrategyConfig {
-        budget,
-        max_chain_length: match workload {
-            Workload::Learn(s) => s.max_chain_length,
-            Workload::PrepareOnly => StrategyConfig::default().max_chain_length,
-        },
-        ..Default::default()
-    };
+    run_coordinated_with(db, db_name, kind, workload, cell_config(workload, budget), workers)
+}
+
+/// [`run_coordinated`] with a fully explicit [`StrategyConfig`].
+pub fn run_coordinated_with(
+    db: &Database,
+    db_name: &str,
+    kind: StrategyKind,
+    workload: Workload,
+    scfg: StrategyConfig,
+    workers: usize,
+) -> Result<CoordinatedOutcome> {
     let mut coord = ParallelCoordinator::new(
         db,
         kind,

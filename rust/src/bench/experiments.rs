@@ -4,12 +4,17 @@
 
 use std::time::{Duration, Instant};
 
-use crate::bench::driver::{run_coordinated, run_strategy, RunOutcome, Workload};
+use crate::bench::driver::{
+    run_coordinated, run_coordinated_with, run_strategy, run_strategy_with,
+    RunOutcome, Workload,
+};
 use crate::datagen::generator::generate;
 use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
 use crate::error::Result;
 use crate::learn::search::SearchConfig;
-use crate::metrics::report::{RunRow, ScalingRow, Table4Row, Table5Row};
+use crate::metrics::report::{PlannerRow, RunRow, ScalingRow, Table4Row, Table5Row};
+use crate::strategies::adaptive::Adaptive;
+use crate::strategies::traits::StrategyConfig;
 use crate::strategies::StrategyKind;
 
 /// Experiment-wide options.
@@ -183,6 +188,93 @@ pub fn coordinator_scaling_rows(
     Ok(rows)
 }
 
+/// The ADAPTIVE planner sweep: on every preset of `cfg`, run the full
+/// learn workload at a ladder of memory budgets tracing the pre-count
+/// fraction from 0 (pure ONDEMAND) through HYBRID's operating point
+/// (marginals + all positives) to 1 (pure PRECOUNT, complete tables
+/// resident).  Counts and learned models are bit-identical at every rung
+/// (`rust/tests/strategy_equivalence.rs`); the sweep measures where the
+/// time goes and what stays resident.
+///
+/// `workers > 1` routes every cell through the parallel coordinator
+/// (`0` = all cores).
+pub fn planner_sweep_rows(cfg: &ExpConfig, workers: usize) -> Result<Vec<PlannerRow>> {
+    let workers = crate::coordinator::resolve_workers(workers);
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        let base = StrategyConfig {
+            budget: cfg.budget,
+            max_chain_length: cfg.search.max_chain_length,
+            ..Default::default()
+        };
+        // Probe plan (unlimited budget): yields the budget ladder's
+        // anchor points.  Estimation is seeded, so the sweep cells see
+        // the identical estimates.
+        let (hybrid_budget, full_bytes, lattice_points) = {
+            let probe = Adaptive::new(&db, base)?;
+            (
+                probe.plan().hybrid_budget(),
+                probe.plan().est_all_complete_bytes,
+                probe.plan().levels.len() as u64,
+            )
+        };
+        let budgets: Vec<Option<u64>> = vec![
+            Some(0),
+            Some(hybrid_budget / 2),
+            Some(hybrid_budget),
+            Some(hybrid_budget + (full_bytes - hybrid_budget) / 2),
+            None,
+        ];
+        for budget in budgets {
+            let scfg = StrategyConfig { mem_budget: budget, ..base };
+            let (row, report) = if workers <= 1 {
+                let o = run_strategy_with(
+                    &db,
+                    name,
+                    StrategyKind::Adaptive,
+                    Workload::Learn(cfg.search),
+                    scfg,
+                )?;
+                (o.row, o.report)
+            } else {
+                let o = run_coordinated_with(
+                    &db,
+                    name,
+                    StrategyKind::Adaptive,
+                    Workload::Learn(cfg.search),
+                    scfg,
+                    workers,
+                )?;
+                (o.row, o.report)
+            };
+            rows.push(PlannerRow {
+                database: name.to_string(),
+                budget_bytes: budget,
+                pre_fraction: if full_bytes == 0 {
+                    1.0
+                } else {
+                    report.plan_est_bytes as f64 / full_bytes as f64
+                },
+                planned_positive: report.planned_positive,
+                planned_complete: report.planned_complete,
+                lattice_points,
+                metadata: row.metadata,
+                positive: row.positive,
+                negative: row.negative,
+                peak_ct_bytes: row.peak_ct_bytes,
+                chain_queries: row.chain_queries,
+                ct_rows_generated: row.ct_rows_generated,
+                estimator_walks: report.estimator_walks,
+                workers,
+                timed_out: row.timed_out,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -229,6 +321,50 @@ mod tests {
         }
         // baseline rows report exactly 1.0
         assert!(rows.iter().filter(|r| r.workers == 1).all(|r| r.speedup == 1.0));
+    }
+
+    #[test]
+    fn planner_sweep_traces_the_spectrum() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = planner_sweep_rows(&cfg, 1).unwrap();
+        assert_eq!(rows.len(), 5);
+        // endpoint budgets: nothing planned vs everything planned
+        assert_eq!(rows[0].budget_bytes, Some(0));
+        assert_eq!(rows[0].planned_positive, 0);
+        assert_eq!(rows[0].pre_fraction, 0.0);
+        let last = rows.last().unwrap();
+        assert_eq!(last.budget_bytes, None);
+        assert_eq!(last.planned_complete, last.lattice_points);
+        assert!((last.pre_fraction - 1.0).abs() < 1e-9);
+        // the HYBRID rung plans all positives, no completes
+        let hybrid = &rows[2];
+        assert_eq!(hybrid.planned_positive, hybrid.lattice_points);
+        assert_eq!(hybrid.planned_complete, 0);
+        // pre_fraction is monotone along the ladder
+        for w in rows.windows(2) {
+            assert!(w[0].pre_fraction <= w[1].pre_fraction + 1e-12);
+        }
+        // post-counting joins disappear as the plan grows
+        assert!(rows[0].chain_queries >= last.chain_queries);
+        for r in &rows {
+            assert!(!r.timed_out, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn planner_sweep_through_coordinator() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let seq = planner_sweep_rows(&cfg, 1).unwrap();
+        let par = planner_sweep_rows(&cfg, 2).unwrap();
+        assert_eq!(seq.len(), par.len());
+        for (s, p) in seq.iter().zip(&par) {
+            // identical plans and count metrics; only wall clock differs
+            assert_eq!(s.planned_positive, p.planned_positive);
+            assert_eq!(s.planned_complete, p.planned_complete);
+            assert_eq!(s.chain_queries, p.chain_queries);
+            assert_eq!(s.ct_rows_generated, p.ct_rows_generated);
+            assert_eq!(p.workers, 2);
+        }
     }
 
     #[test]

@@ -5,5 +5,5 @@
 pub mod driver;
 pub mod experiments;
 
-pub use driver::{run_strategy, RunOutcome, Workload};
-pub use experiments::{fig3_fig4_rows, table4_rows, table5_rows};
+pub use driver::{run_strategy, run_strategy_with, RunOutcome, Workload};
+pub use experiments::{fig3_fig4_rows, planner_sweep_rows, table4_rows, table5_rows};

@@ -5,16 +5,21 @@
 //! ONDEMAND / HYBRID) and re-executes their algorithms with the lattice
 //! sharded across workers:
 //!
-//! - **positive pre-count** (PRECOUNT, HYBRID): one task per entity
-//!   marginal and per lattice point ([`PositiveTask`]), LPT-balanced by
-//!   estimated join cost;
-//! - **negative pre-count** (PRECOUNT): one Möbius Join task per lattice
-//!   point, sharded by chain length
-//!   ([`crate::lattice::Lattice::partition_by_length`]) over the frozen
+//! - **positive pre-count** (PRECOUNT, HYBRID, ADAPTIVE's planned
+//!   subset): one task per entity marginal and per lattice point
+//!   ([`PositiveTask`]), LPT-balanced by estimated join cost;
+//! - **negative pre-count** (PRECOUNT, ADAPTIVE's complete-planned
+//!   subset): one Möbius Join task per listed lattice point,
+//!   LPT-balanced by the lattice's per-point cost estimate
+//!   ([`crate::lattice::Lattice::point_costs`]) over the frozen
 //!   positive cache;
 //! - **post-count** ([`CountingStrategy::ct_for_families`]): one task per
 //!   family, routed by cache-key hash so each worker owns a disjoint
 //!   shard of the family cache.
+//!
+//! ADAPTIVE's [`CountPlan`] is built inline in [`ParallelCoordinator::new`]
+//! — a pure function of the database, lattice, estimator seed and
+//! budget — so every worker count executes the identical plan.
 //!
 //! Results are merged in task order, so ct-tables, learned structures and
 //! BDeu scores are **bit-identical** to the sequential strategies for
@@ -29,10 +34,12 @@ use crate::ct::project::project;
 use crate::db::catalog::Database;
 use crate::db::query::{DirectSource, JoinStats};
 use crate::error::{Error, Result};
+use crate::estimate::plan::CountPlan;
 use crate::lattice::Lattice;
 use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer, WorkerTimers};
+use crate::strategies::adaptive::{Adaptive, PlannedSource};
 use crate::strategies::cache::{CacheKey, CtCache};
 use crate::strategies::common::{
     narrow_to_ctx, positive_tasks, run_positive_task, var_pops, var_rels,
@@ -140,6 +147,10 @@ pub struct ParallelCoordinator<'a> {
     workers: usize,
     cfg: StrategyConfig,
     ctx: LatticeCtx,
+    /// ADAPTIVE's pre-counting plan (None for the fixed modes).  Built
+    /// inline in `new` from seeded estimates, so it is identical across
+    /// worker counts.
+    plan: Option<CountPlan>,
     /// Positive lattice ct-tables + entity marginals, frozen after the
     /// positive phase; workers read it concurrently via
     /// [`SharedLatticeSource`].
@@ -182,12 +193,24 @@ impl<'a> ParallelCoordinator<'a> {
         let deadline = Deadline::new(cfg.strategy.budget);
         let mut timer = PhaseTimer::default();
         let ctx = LatticeCtx::build(db, cfg.strategy.max_chain_length, &mut timer)?;
+        let plan = match kind {
+            StrategyKind::Adaptive => Some(timer.time(Phase::Metadata, || {
+                CountPlan::build(
+                    db,
+                    &ctx.lattice,
+                    cfg.strategy.estimator,
+                    cfg.strategy.mem_budget,
+                )
+            })?),
+            _ => None,
+        };
         Ok(ParallelCoordinator {
             db,
             kind,
             workers,
             cfg: cfg.strategy,
             ctx,
+            plan,
             positive: CtCache::new(),
             complete: CtCache::new(),
             shards: (0..workers).map(|_| CtCache::new()).collect(),
@@ -249,15 +272,17 @@ impl<'a> ParallelCoordinator<'a> {
                 families_served: self.worker_families[w],
                 cache_hits: self.shards[w].hits,
                 cache_misses: self.shards[w].misses,
+                ..Default::default()
             })
             .collect()
     }
 
     /// Positive pre-count, sharded: one task per entity marginal and per
     /// lattice point, LPT-balanced by estimated query cost (entity rows,
-    /// or the product of the chain's relationship table sizes).
-    fn fill_positive_parallel(&mut self) -> Result<()> {
-        let tasks = positive_tasks(self.db, &self.ctx);
+    /// or the product of the chain's relationship table sizes).  The
+    /// task list is the full lattice for PRECOUNT/HYBRID and the planned
+    /// subset for ADAPTIVE.
+    fn fill_positive_parallel(&mut self, tasks: Vec<PositiveTask>) -> Result<()> {
         let costs: Vec<u64> = tasks
             .iter()
             .map(|t| match *t {
@@ -301,23 +326,47 @@ impl<'a> ParallelCoordinator<'a> {
         Ok(())
     }
 
-    /// Negative pre-count (PRECOUNT only), sharded by chain length: one
-    /// Möbius Join per lattice point over the frozen positive cache.
-    fn fill_complete_parallel(&mut self) -> Result<()> {
-        let ids: Vec<usize> = (0..self.ctx.lattice.points.len()).collect();
-        let assignment = self.ctx.lattice.partition_by_length(self.workers);
+    /// Negative pre-count (PRECOUNT and ADAPTIVE's complete-planned
+    /// subset), cost-sharded: one Möbius Join per listed lattice point
+    /// over the frozen positive cache.  ADAPTIVE workers read through a
+    /// [`PlannedSource`], so subsets missing from the plan fall back to
+    /// fresh joins (whose stats are attributed per worker).
+    fn fill_complete_parallel(&mut self, ids: Vec<usize>) -> Result<()> {
+        let costs: Vec<u64> = {
+            let all = self.ctx.lattice.point_costs();
+            ids.iter().map(|&id| all[id]).collect()
+        };
+        let assignment = lpt_partition(&costs, self.workers);
 
         let db = self.db;
         let lattice = &self.ctx.lattice;
         let positive = &self.positive;
+        let plan = self.plan.as_ref();
         let deadline = self.deadline;
         let run = pool::run_shards(&ids, &assignment, |_, &id| {
             deadline.check("negative ct (lattice)")?;
             let p = &lattice.points[id];
             let vars = p.all_vars();
-            let mut src = SharedLatticeSource { db, lattice, cache: positive };
-            let ct = mobius_complete(&mut src, &vars, &p.pops)?;
-            Ok((Precount::complete_key(p), ct))
+            let mut stats = JoinStats::default();
+            let ct = match plan {
+                None => {
+                    let mut src = SharedLatticeSource { db, lattice, cache: positive };
+                    mobius_complete(&mut src, &vars, &p.pops)?
+                }
+                Some(plan) => {
+                    let mut src = PlannedSource {
+                        db,
+                        lattice,
+                        plan,
+                        cache: positive,
+                        stats: JoinStats::default(),
+                    };
+                    let ct = mobius_complete(&mut src, &vars, &p.pops)?;
+                    stats = src.stats;
+                    ct
+                }
+            };
+            Ok((Precount::complete_key(p), ct, stats))
         });
 
         self.timer.add(Phase::Negative, run.wall);
@@ -327,7 +376,9 @@ impl<'a> ParallelCoordinator<'a> {
             self.tasks_per_worker[w] += run.tasks_run[w];
         }
         for (i, r) in run.results.into_iter().enumerate() {
-            let (key, table) = r?;
+            let (key, table, stats) = r?;
+            self.worker_stats[worker_of[i]].merge(&stats);
+            self.join_stats.merge(&stats);
             self.worker_rows[worker_of[i]] += table.n_rows() as u64;
             self.rows_generated += table.n_rows() as u64;
             self.complete.insert(key, table);
@@ -344,12 +395,36 @@ impl<'a> ParallelCoordinator<'a> {
             &self.positive,
             &self.complete,
             self.kind,
+            self.plan.as_ref(),
             vars,
             ctx_pops,
         )?;
         self.merge_served(&served, 0, true);
         self.tasks_per_worker[0] += 1;
         Ok(served.ct)
+    }
+
+    /// True when ADAPTIVE serves this family by projection from a
+    /// complete-planned lattice table — the sequential strategy bypasses
+    /// the family cache on that path, so the coordinator must too.
+    ///
+    /// Must mirror the routing in `serve_one`'s `Adaptive` arm exactly:
+    /// this gate decides cache bypass, that arm decides the serve path,
+    /// and a divergence would cache projected serves (or vice versa).
+    fn adaptive_complete_shortcut(&self, vars: &[RVar]) -> bool {
+        let Some(plan) = self.plan.as_ref() else {
+            return false;
+        };
+        let rels = var_rels(vars);
+        if rels.is_empty() {
+            return false;
+        }
+        let vpops = var_pops(&self.db.schema, vars);
+        self.ctx
+            .lattice
+            .covering_point(&rels, &vpops)
+            .map(|p| plan.complete_planned(p.id))
+            .unwrap_or(false)
     }
 
     /// Fold one served family's metrics into the coordinator state,
@@ -395,12 +470,15 @@ fn worker_of_task(n_tasks: usize, assignment: &[Vec<usize>]) -> Vec<usize> {
 /// shared read-only state.  This is the worker-side function: it is the
 /// single code path for both the inline (sequential) and the sharded
 /// (parallel) serve, which is what makes worker counts interchangeable.
+/// `plan` is `Some` exactly for ADAPTIVE.
+#[allow(clippy::too_many_arguments)]
 fn serve_one(
     db: &Database,
     lattice: &Lattice,
     positive: &CtCache,
     complete: &CtCache,
     kind: StrategyKind,
+    plan: Option<&CountPlan>,
     vars: &[RVar],
     ctx_pops: &[usize],
 ) -> Result<ServedFamily> {
@@ -419,6 +497,54 @@ fn serve_one(
                 negative: t0.elapsed().saturating_sub(positive),
                 positive,
                 stats: direct.stats,
+                projected: false,
+                ct,
+            })
+        }
+        // Planned projections with fresh-join fallback + family Möbius,
+        // or a complete-table projection when the covering point is
+        // complete-planned (the ADAPTIVE spectrum).
+        StrategyKind::Adaptive => {
+            let plan = plan.expect("adaptive serve needs its plan");
+            let rels = var_rels(vars);
+            if !rels.is_empty() {
+                let vpops = var_pops(&db.schema, vars);
+                if let Some(p) = lattice.covering_point(&rels, &vpops) {
+                    if plan.complete_planned(p.id) {
+                        let full =
+                            complete.peek(&Precount::complete_key(p)).ok_or_else(|| {
+                                Error::Strategy("complete ct missing (prepare?)".into())
+                            })?;
+                        let mut ct = project(full, vars)?;
+                        narrow_to_ctx(db, &mut ct, &p.pops, ctx_pops, vars)?;
+                        return Ok(ServedFamily {
+                            positive: t0.elapsed(),
+                            negative: Duration::ZERO,
+                            stats: JoinStats::default(),
+                            fresh_rows: 0,
+                            projected: true,
+                            ct,
+                        });
+                    }
+                }
+            }
+            let mut src = PlannedSource {
+                db,
+                lattice,
+                plan,
+                cache: positive,
+                stats: JoinStats::default(),
+            };
+            let (ct, positive) = {
+                let mut timed = TimedSource::new(&mut src);
+                let ct = mobius_complete(&mut timed, vars, ctx_pops)?;
+                (ct, timed.positive_elapsed)
+            };
+            Ok(ServedFamily {
+                fresh_rows: ct.n_rows() as u64,
+                negative: t0.elapsed().saturating_sub(positive),
+                positive,
+                stats: src.stats,
                 projected: false,
                 ct,
             })
@@ -496,17 +622,39 @@ impl CountingStrategy for ParallelCoordinator<'_> {
     }
 
     /// Run the wrapped mode's pre-count phases on the worker pool:
-    /// positive fill for PRECOUNT/HYBRID, plus the per-point Möbius for
-    /// PRECOUNT.  ONDEMAND has no pre-phase.
+    /// positive fill for PRECOUNT/HYBRID (and ADAPTIVE's planned
+    /// subset), plus the per-point Möbius for PRECOUNT (and ADAPTIVE's
+    /// complete-planned subset).  ONDEMAND has no pre-phase.
     fn prepare(&mut self) -> Result<()> {
         if self.prepared {
             return Ok(());
         }
-        if matches!(self.kind, StrategyKind::Precount | StrategyKind::Hybrid) {
-            self.fill_positive_parallel()?;
+        match self.kind {
+            StrategyKind::Precount | StrategyKind::Hybrid => {
+                self.fill_positive_parallel(positive_tasks(self.db, &self.ctx))?;
+            }
+            StrategyKind::Adaptive => {
+                let plan = self.plan.as_ref().expect("adaptive has a plan");
+                let tasks = Adaptive::planned_positive_tasks(self.db, plan);
+                if !tasks.is_empty() {
+                    self.fill_positive_parallel(tasks)?;
+                }
+            }
+            StrategyKind::OnDemand => {}
         }
-        if self.kind == StrategyKind::Precount {
-            self.fill_complete_parallel()?;
+        match self.kind {
+            StrategyKind::Precount => {
+                let ids: Vec<usize> = (0..self.ctx.lattice.points.len()).collect();
+                self.fill_complete_parallel(ids)?;
+            }
+            StrategyKind::Adaptive => {
+                let plan = self.plan.as_ref().expect("adaptive has a plan");
+                let ids = Adaptive::planned_complete_points(plan);
+                if !ids.is_empty() {
+                    self.fill_complete_parallel(ids)?;
+                }
+            }
+            _ => {}
         }
         self.prepared = true;
         Ok(())
@@ -518,7 +666,7 @@ impl CountingStrategy for ParallelCoordinator<'_> {
         }
         self.deadline.check("family count (coordinator)")?;
         self.families_served += 1;
-        if !self.uses_family_cache() {
+        if !self.uses_family_cache() || self.adaptive_complete_shortcut(vars) {
             return self.serve_inline(vars, ctx_pops);
         }
         let key = CtCache::key(vars, ctx_pops);
@@ -556,7 +704,10 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             self.families_served += 1;
             self.deadline.check("family count (coordinator)")?;
             let key = CtCache::key(&r.vars, &r.ctx_pops);
-            if use_cache {
+            // Complete-planned ADAPTIVE families bypass the family cache
+            // (served by projection), mirroring the sequential strategy.
+            let cached = use_cache && !self.adaptive_complete_shortcut(&r.vars);
+            if cached {
                 let shard = shard_of(&key, self.workers);
                 if let Some(hit) = self.shards[shard].get(&key) {
                     out[i] = Some(hit.clone());
@@ -565,7 +716,7 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             }
             match miss_keys.iter().position(|k| *k == key) {
                 Some(j) => {
-                    if use_cache {
+                    if cached {
                         // Sequentially this lookup would land after the
                         // first copy's insert and hit; reclassify the
                         // miss just recorded so hit/miss statistics stay
@@ -601,10 +752,11 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             let positive = &self.positive;
             let complete = &self.complete;
             let kind = self.kind;
+            let plan = self.plan.as_ref();
             let deadline = self.deadline;
             let run = pool::run_shards(&tasks, &assignment, |_, r| {
                 deadline.check("family count (coordinator)")?;
-                serve_one(db, lattice, positive, complete, kind, &r.vars, &r.ctx_pops)
+                serve_one(db, lattice, positive, complete, kind, plan, &r.vars, &r.ctx_pops)
             });
 
             // Wall-clock attribution: the pool's wall time, split across
@@ -630,7 +782,7 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             // Merge in miss order (deterministic across worker counts).
             for (j, s) in served.into_iter().enumerate() {
                 self.merge_served(&s, worker_of[j], false);
-                if use_cache {
+                if use_cache && !s.projected {
                     let key = miss_keys[j].clone();
                     self.shards[worker_of[j]].insert(key, s.ct.clone());
                 }
@@ -664,6 +816,12 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             StrategyKind::Precount => {
                 (self.complete_hits, self.complete.misses)
             }
+            // ADAPTIVE counts both family-cache hits and complete-table
+            // projections, mirroring the sequential strategy's report.
+            StrategyKind::Adaptive => (
+                self.shards.iter().map(|s| s.hits).sum::<u64>() + self.complete_hits,
+                self.shards.iter().map(|s| s.misses).sum(),
+            ),
             _ => (
                 self.shards.iter().map(|s| s.hits).sum(),
                 self.shards.iter().map(|s| s.misses).sum(),
@@ -679,6 +837,18 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             families_served: self.families_served,
             cache_hits: hits,
             cache_misses: misses,
+            planned_positive: self
+                .plan
+                .as_ref()
+                .map(|p| p.planned_positive_count())
+                .unwrap_or(0),
+            planned_complete: self
+                .plan
+                .as_ref()
+                .map(|p| p.planned_complete_count())
+                .unwrap_or(0),
+            plan_est_bytes: self.plan.as_ref().map(|p| p.est_spent_bytes).unwrap_or(0),
+            estimator_walks: self.plan.as_ref().map(|p| p.walks).unwrap_or(0),
         }
     }
 }
@@ -766,6 +936,42 @@ mod tests {
         assert!(joins > 0, "positive phase JOINs");
         c.ct_for_family(&family(), &[0, 1]).unwrap();
         assert_eq!(c.report().join_stats.chain_queries, joins);
+    }
+
+    #[test]
+    fn adaptive_budgets_match_brute_force_across_workers() {
+        let db = university_db();
+        let hb = Adaptive::new(&db, StrategyConfig::default())
+            .unwrap()
+            .plan()
+            .hybrid_budget();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        for budget in [Some(0u64), Some(hb), None] {
+            for workers in [1usize, 3] {
+                let cfg = CoordinatorConfig {
+                    workers,
+                    strategy: StrategyConfig { mem_budget: budget, ..Default::default() },
+                };
+                let mut c =
+                    ParallelCoordinator::new(&db, StrategyKind::Adaptive, cfg).unwrap();
+                c.prepare().unwrap();
+                let ct = c.ct_for_family(&family(), &[0, 1]).unwrap();
+                assert_eq!(ct.n_rows(), brute.n_rows(), "{budget:?} w={workers}");
+                for (v, n) in brute.iter_rows() {
+                    assert_eq!(ct.get(&v).unwrap(), n, "{budget:?} w={workers} {v:?}");
+                }
+                // the shared plan surfaces in the merged report
+                let rep = c.report();
+                match budget {
+                    Some(0) => assert_eq!(rep.planned_positive, 0),
+                    Some(_) => {
+                        assert!(rep.planned_positive > 0);
+                        assert_eq!(rep.planned_complete, 0);
+                    }
+                    None => assert!(rep.planned_complete > 0),
+                }
+            }
+        }
     }
 
     #[test]

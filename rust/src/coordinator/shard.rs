@@ -18,7 +18,7 @@
 
 use std::hash::{Hash, Hasher};
 
-use rustc_hash::FxHasher;
+use crate::util::fxhash::FxHasher;
 
 /// Owning shard of a cache key: stable FxHash routing into `n_shards`
 /// buckets.  FxHash is unseeded, so the route is reproducible across

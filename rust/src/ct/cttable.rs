@@ -12,7 +12,7 @@
 //! and the arithmetic is checked, so overflow surfaces as an error rather
 //! than silent wraparound.
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::db::schema::Schema;
 use crate::error::{Error, Result};

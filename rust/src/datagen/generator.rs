@@ -8,7 +8,7 @@
 //! entity attributes.  This gives BDeu real structure to find without
 //! hand-coding a ground-truth BN per preset.
 
-use rustc_hash::FxHashSet;
+use crate::util::fxhash::FxHashSet;
 
 use crate::datagen::config::GenConfig;
 use crate::db::catalog::Database;

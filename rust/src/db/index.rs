@@ -2,7 +2,7 @@
 //! directions plus a unique `(from, to) -> tuple` map used for indicator
 //! lookups and bound-bound join steps.
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::db::table::RelTable;
 use crate::error::{Error, Result};

@@ -1,51 +1,76 @@
-//! Library-wide error type.
+//! Library-wide error type (hand-rolled `Display`/`Error` impls — the
+//! crate builds with zero external dependencies, so no derive macros).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the relcount library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A schema reference (entity/relationship/attribute id) is invalid.
-    #[error("schema error: {0}")]
     Schema(String),
 
     /// Data violates the schema (bad code, out-of-range id, ...).
-    #[error("data error: {0}")]
     Data(String),
 
     /// A contingency-table operation was applied to incompatible tables
     /// or the value space overflows the flat-key width.
-    #[error("ct-table error: {0}")]
     Ct(String),
 
     /// A counting strategy could not serve a family (e.g. no covering
     /// lattice point).
-    #[error("strategy error: {0}")]
     Strategy(String),
 
     /// Structure-learning error.
-    #[error("learn error: {0}")]
     Learn(String),
 
     /// PJRT / XLA runtime error.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact manifest problems.
-    #[error("manifest error: {0}")]
     Manifest(String),
 
     /// The streaming pipeline failed (channel closed, shard mismatch...).
-    #[error("pipeline error: {0}")]
     Pipeline(String),
 
     /// Wall-clock budget exceeded (mirrors the paper's 100-minute Slurm
     /// limit that ONDEMAND blows on IMDb / Visual Genome).
-    #[error("timeout after {elapsed_ms} ms during {phase}")]
     Timeout { phase: String, elapsed_ms: u64 },
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Schema(m) => write!(f, "schema error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Ct(m) => write!(f, "ct-table error: {m}"),
+            Error::Strategy(m) => write!(f, "strategy error: {m}"),
+            Error::Learn(m) => write!(f, "learn error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Timeout { phase, elapsed_ms } => {
+                write!(f, "timeout after {elapsed_ms} ms during {phase}")
+            }
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {
@@ -74,5 +99,8 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+        assert!(e.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(e.source().is_some());
     }
 }

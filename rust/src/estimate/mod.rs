@@ -1,0 +1,32 @@
+//! Cheap, deterministic cardinality estimation for the ADAPTIVE counting
+//! planner.
+//!
+//! The paper's HYBRID strategy hard-codes one global answer to the
+//! pre-vs-post counting trade-off (pre-count positives, post-count
+//! negatives).  Karan et al. (2018) observe that the optimal counting
+//! method varies *per query* with data characteristics; acting on that
+//! requires knowing — before any table is built — roughly how large each
+//! lattice point's join result and ct-tables will be.  This module
+//! supplies those numbers:
+//!
+//! - [`sampler`] — wander-join-style random walks over the relationship
+//!   FK indexes ([`crate::db::index::RelIndex`]), giving unbiased
+//!   join-chain cardinality estimates with declared error bounds, seeded
+//!   via [`crate::util::rng::Rng`] for bit-reproducible plans.  Chains
+//!   cheap enough to enumerate outright are counted exactly.
+//! - [`plan`] — the [`plan::CountPlan`]: per-lattice-point estimates of
+//!   join cost, ct-table rows and resident bytes, folded into a greedy
+//!   knapsack fill of an explicit `--mem-budget`.  Each point is planned
+//!   at one of three levels (on-demand / positive pre-count / complete
+//!   pre-count), spanning the whole ONDEMAND → HYBRID → PRECOUNT
+//!   spectrum from a single strategy.
+//!
+//! Estimation never touches counting correctness: the ADAPTIVE strategy
+//! (`strategies::adaptive`) produces bit-identical ct-tables at every
+//! plan — estimates only decide *where* counts are computed.
+
+pub mod plan;
+pub mod sampler;
+
+pub use plan::{CountPlan, PlanLevel, PointEstimate};
+pub use sampler::{Estimate, EstimatorConfig, JoinSampler};

@@ -1,0 +1,362 @@
+//! The [`CountPlan`]: a budgeted, cost-ranked pre-counting plan over the
+//! relationship lattice.
+//!
+//! For every lattice point the planner estimates
+//!
+//! - the **join cost** of building its positive ct-table (the estimated
+//!   INNER-JOIN cardinality, from [`crate::estimate::sampler`]),
+//! - the **rows and resident bytes** of its positive and complete
+//!   ct-tables (value-space caps intersected with the join estimate),
+//! - its **reuse frequency** — how many lattice points' Möbius Joins
+//!   project from it (the number of superset chains, itself included;
+//!   every family on a superset chain requests this point's positives).
+//!
+//! Points are then ranked by `reuse × join-cost / bytes` — the benefit
+//! of never re-joining, per byte held resident — and a greedy knapsack
+//! fill admits them into the plan until the `--mem-budget` is spent.
+//! Two passes run over the same budget: first **positive** pre-counts
+//! (the HYBRID axis), then **complete** pre-counts (the PRECOUNT axis,
+//! only for points whose positives were admitted).  The resulting plan
+//! spans the whole spectrum:
+//!
+//! | budget            | plan                            | behaves like |
+//! |-------------------|---------------------------------|--------------|
+//! | `0`               | nothing pre-counted             | ONDEMAND     |
+//! | [`CountPlan::hybrid_budget`] | marginals + all positives | HYBRID  |
+//! | unlimited         | everything, complete included   | PRECOUNT     |
+//!
+//! Plans are pure functions of `(database, lattice, estimator config,
+//! budget)` — estimation is seeded — so sequential and parallel runs of
+//! the ADAPTIVE strategy share the identical plan.
+
+use crate::db::catalog::Database;
+use crate::error::Result;
+use crate::estimate::sampler::{EstimatorConfig, JoinSampler};
+use crate::lattice::Lattice;
+use crate::meta::rvar::RVar;
+
+/// Pre-count level assigned to one lattice point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanLevel {
+    /// Nothing cached; positives come from fresh joins at serve time.
+    OnDemand,
+    /// Positive ct-table built before search (HYBRID-style).
+    Positive,
+    /// Positive and complete ct-tables built before search
+    /// (PRECOUNT-style; families covered by this point are served by
+    /// projection).
+    Complete,
+}
+
+/// Estimates backing one lattice point's plan decision.
+#[derive(Clone, Copy, Debug)]
+pub struct PointEstimate {
+    pub point: usize,
+    /// Estimated INNER-JOIN cardinality of the point's chain.
+    pub est_join_rows: f64,
+    pub est_positive_rows: f64,
+    pub est_positive_bytes: u64,
+    pub est_complete_rows: f64,
+    pub est_complete_bytes: u64,
+    /// Superset chains (itself included) whose Möbius Joins project from
+    /// this point.
+    pub reuse: u64,
+    /// Random walks the join estimate consumed (0 when exact).
+    pub walks: u64,
+}
+
+/// A budgeted pre-counting plan over one lattice.
+#[derive(Clone, Debug)]
+pub struct CountPlan {
+    /// Per-point level, indexed by lattice point id.
+    pub levels: Vec<PlanLevel>,
+    /// Whether entity marginals are pre-counted (first item admitted:
+    /// they are tiny and every Möbius family serve wants them).
+    pub marginals: bool,
+    /// The estimates the fill ranked on, in point-id order.
+    pub estimates: Vec<PointEstimate>,
+    /// Estimated resident bytes of all entity marginals.
+    pub marginal_bytes: u64,
+    /// The budget the plan was filled against (`None` = unlimited).
+    pub budget: Option<u64>,
+    /// Estimated bytes the admitted items hold resident.
+    pub est_spent_bytes: u64,
+    /// Estimated bytes of the HYBRID-equivalent plan (marginals + every
+    /// positive table) — see [`CountPlan::hybrid_budget`].
+    pub est_all_positive_bytes: u64,
+    /// Estimated bytes of the everything plan (PRECOUNT-equivalent).
+    pub est_all_complete_bytes: u64,
+    /// Total random walks consumed by the estimators.
+    pub walks: u64,
+}
+
+/// Mirror of [`crate::ct::cttable::CtTable::bytes`] for a hypothetical
+/// table: fixed header + per-var metadata + per-row map entry.
+fn ct_bytes_estimate(n_vars: usize, rows: f64) -> u64 {
+    let per_var = std::mem::size_of::<RVar>() + 4 + 16;
+    48 + (n_vars * per_var) as u64 + (rows.max(0.0) * 40.0).round() as u64
+}
+
+impl CountPlan {
+    /// Estimate every lattice point and greedily fill `budget`.
+    pub fn build(
+        db: &Database,
+        lattice: &Lattice,
+        cfg: EstimatorConfig,
+        budget: Option<u64>,
+    ) -> Result<CountPlan> {
+        let sampler = JoinSampler::new(db, cfg);
+        let schema = &db.schema;
+
+        // Entity marginals: one ct-table per entity type.
+        let mut marginal_bytes = 0u64;
+        for (et, e) in schema.entities.iter().enumerate() {
+            let cells: f64 = e.attrs.iter().map(|a| a.card as f64).product();
+            let rows = cells.min(db.population(et) as f64);
+            marginal_bytes += ct_bytes_estimate(e.attrs.len(), rows);
+        }
+
+        let mut estimates = Vec::with_capacity(lattice.len());
+        let mut walks = 0u64;
+        for p in &lattice.points {
+            let join = sampler.chain_cardinality(&p.rels)?;
+            walks += join.walks;
+
+            // Positive table: one row per distinct attribute combination
+            // present in the join result.  Rel-attr dims include the N/A
+            // slot, which positives never occupy.
+            let pos_cells: f64 = p
+                .attr_vars
+                .iter()
+                .map(|v| match v {
+                    RVar::RelAttr { .. } => (v.dim(schema) - 1) as f64,
+                    _ => v.dim(schema) as f64,
+                })
+                .product();
+            let est_positive_rows = join.value.min(pos_cells);
+            let est_positive_bytes =
+                ct_bytes_estimate(p.attr_vars.len(), est_positive_rows);
+
+            // Complete table: per relationship axis, every true attribute
+            // combination plus the single ⊥ state (indicator F, attrs
+            // N/A); entity attributes multiply in fully.
+            let mut complete_rows = 1.0f64;
+            for &rel in &p.rels {
+                let true_states: f64 = p
+                    .attr_vars
+                    .iter()
+                    .filter(|v| v.rel() == Some(rel))
+                    .map(|v| (v.dim(schema) - 1) as f64)
+                    .product();
+                complete_rows *= true_states + 1.0;
+            }
+            for v in &p.attr_vars {
+                if v.rel().is_none() {
+                    complete_rows *= v.dim(schema) as f64;
+                }
+            }
+            let est_complete_bytes = ct_bytes_estimate(
+                p.rels.len() + p.attr_vars.len(),
+                complete_rows,
+            );
+
+            let reuse = lattice
+                .points
+                .iter()
+                .filter(|q| p.rels.iter().all(|r| q.rels.contains(r)))
+                .count() as u64;
+
+            estimates.push(PointEstimate {
+                point: p.id,
+                est_join_rows: join.value,
+                est_positive_rows,
+                est_positive_bytes,
+                est_complete_rows: complete_rows,
+                est_complete_bytes,
+                reuse,
+                walks: join.walks,
+            });
+        }
+
+        let est_all_positive_bytes = marginal_bytes
+            + estimates.iter().map(|e| e.est_positive_bytes).sum::<u64>();
+        let est_all_complete_bytes = est_all_positive_bytes
+            + estimates.iter().map(|e| e.est_complete_bytes).sum::<u64>();
+
+        // Greedy knapsack fill.
+        let fits = |spent: u64, add: u64| match budget {
+            None => true,
+            Some(b) => spent.saturating_add(add) <= b,
+        };
+        let mut levels = vec![PlanLevel::OnDemand; lattice.len()];
+        let mut spent = 0u64;
+        let mut marginals = false;
+        if fits(spent, marginal_bytes.max(1)) {
+            marginals = true;
+            spent += marginal_bytes;
+        }
+
+        // Pass 1 — positives, ranked by reuse × join cost per byte (the
+        // joins a resident positive table saves, per byte it holds).
+        let mut order: Vec<usize> = (0..estimates.len()).collect();
+        let score_pos = |e: &PointEstimate| {
+            e.reuse as f64 * e.est_join_rows / e.est_positive_bytes.max(1) as f64
+        };
+        order.sort_by(|&a, &b| {
+            score_pos(&estimates[b])
+                .partial_cmp(&score_pos(&estimates[a]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        if marginals {
+            for &i in &order {
+                let e = &estimates[i];
+                if fits(spent, e.est_positive_bytes) {
+                    levels[e.point] = PlanLevel::Positive;
+                    spent += e.est_positive_bytes;
+                }
+            }
+        }
+
+        // Pass 2 — completes, ranked by the Möbius work a resident
+        // complete table saves per byte (only points whose positives are
+        // already in the plan; the Möbius re-runs per serve otherwise).
+        let score_cmp = |e: &PointEstimate| {
+            e.reuse as f64 * e.est_complete_rows / e.est_complete_bytes.max(1) as f64
+        };
+        order.sort_by(|&a, &b| {
+            score_cmp(&estimates[b])
+                .partial_cmp(&score_cmp(&estimates[a]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        for &i in &order {
+            let e = &estimates[i];
+            if levels[e.point] == PlanLevel::Positive
+                && fits(spent, e.est_complete_bytes.max(1))
+            {
+                levels[e.point] = PlanLevel::Complete;
+                spent += e.est_complete_bytes;
+            }
+        }
+
+        Ok(CountPlan {
+            levels,
+            marginals,
+            estimates,
+            marginal_bytes,
+            budget,
+            est_spent_bytes: spent,
+            est_all_positive_bytes,
+            est_all_complete_bytes,
+            walks,
+        })
+    }
+
+    /// The budget at which the plan is exactly HYBRID: marginals plus
+    /// every positive table fit, and no complete table does (each costs
+    /// at least one further byte).
+    pub fn hybrid_budget(&self) -> u64 {
+        self.est_all_positive_bytes
+    }
+
+    /// True when `point`'s positive ct-table is pre-counted.
+    pub fn positive_planned(&self, point: usize) -> bool {
+        matches!(self.levels[point], PlanLevel::Positive | PlanLevel::Complete)
+    }
+
+    /// True when `point`'s complete ct-table is pre-counted.
+    pub fn complete_planned(&self, point: usize) -> bool {
+        self.levels[point] == PlanLevel::Complete
+    }
+
+    /// Points planned at least to the positive level.
+    pub fn planned_positive_count(&self) -> u64 {
+        self.levels.iter().filter(|l| **l != PlanLevel::OnDemand).count() as u64
+    }
+
+    /// Points planned to the complete level.
+    pub fn planned_complete_count(&self) -> u64 {
+        self.levels.iter().filter(|l| **l == PlanLevel::Complete).count() as u64
+    }
+
+    /// Fraction of the full (PRECOUNT-equivalent) pre-count this plan
+    /// holds resident, by estimated bytes — the planner sweep's x-axis.
+    pub fn pre_fraction(&self) -> f64 {
+        if self.est_all_complete_bytes == 0 {
+            return 1.0;
+        }
+        self.est_spent_bytes as f64 / self.est_all_complete_bytes as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+
+    fn plan_with(budget: Option<u64>) -> CountPlan {
+        let db = university_db();
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        CountPlan::build(&db, &lattice, EstimatorConfig::default(), budget).unwrap()
+    }
+
+    #[test]
+    fn zero_budget_plans_nothing() {
+        let p = plan_with(Some(0));
+        assert!(!p.marginals);
+        assert!(p.levels.iter().all(|l| *l == PlanLevel::OnDemand));
+        assert_eq!(p.est_spent_bytes, 0);
+        assert_eq!(p.pre_fraction(), 0.0);
+    }
+
+    #[test]
+    fn unlimited_budget_plans_everything() {
+        let p = plan_with(None);
+        assert!(p.marginals);
+        assert!(p.levels.iter().all(|l| *l == PlanLevel::Complete));
+        assert_eq!(p.est_spent_bytes, p.est_all_complete_bytes);
+        assert!((p.pre_fraction() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hybrid_budget_plans_exactly_all_positives() {
+        let unbounded = plan_with(None);
+        let p = plan_with(Some(unbounded.hybrid_budget()));
+        assert!(p.marginals);
+        assert!(p.levels.iter().all(|l| *l == PlanLevel::Positive), "{:?}", p.levels);
+        assert_eq!(p.est_spent_bytes, p.est_all_positive_bytes);
+        assert_eq!(p.planned_complete_count(), 0);
+    }
+
+    #[test]
+    fn intermediate_budget_is_monotone() {
+        let full = plan_with(None);
+        let half = plan_with(Some(full.est_all_complete_bytes / 2));
+        assert!(half.est_spent_bytes <= full.est_all_complete_bytes / 2);
+        assert!(half.pre_fraction() < 1.0);
+        // a planned Complete point always implies Positive machinery
+        for (i, l) in half.levels.iter().enumerate() {
+            if *l == PlanLevel::Complete {
+                assert!(half.positive_planned(i));
+            }
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let a = plan_with(Some(10_000));
+        let b = plan_with(Some(10_000));
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(a.est_spent_bytes, b.est_spent_bytes);
+    }
+
+    #[test]
+    fn reuse_counts_supersets() {
+        let p = plan_with(None);
+        // university lattice: {0}, {1}, {0,1} -> the singletons are reused
+        // by the 2-chain, the 2-chain only by itself
+        let by_point: Vec<u64> = p.estimates.iter().map(|e| e.reuse).collect();
+        assert_eq!(by_point, vec![2, 2, 1]);
+    }
+}

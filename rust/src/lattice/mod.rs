@@ -5,7 +5,7 @@
 //! learn-and-join model search.  Points are *connected* relationship
 //! subsets up to a maximum chain length (default 3, matching FACTORBASE).
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::db::schema::Schema;
 use crate::error::{Error, Result};

@@ -6,7 +6,7 @@
 //! kernel behind the `bdeu_batch` XLA artifact; `rust/tests/
 //! runtime_artifacts.rs` cross-checks all three.
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::ct::cttable::CtTable;
 use crate::error::{Error, Result};

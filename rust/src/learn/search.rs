@@ -8,7 +8,7 @@
 //! families with BDeu over ct-tables served by a [`CountingStrategy`] —
 //! this is exactly where PRECOUNT / ONDEMAND / HYBRID differ.
 
-use rustc_hash::{FxHashMap, FxHashSet};
+use crate::util::fxhash::{FxHashMap, FxHashSet};
 
 use crate::db::catalog::Database;
 use crate::error::Result;

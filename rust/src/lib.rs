@@ -17,7 +17,13 @@
 //!   Pallas kernel layout,
 //! - the three **count-caching strategies** ([`strategies`]):
 //!   `PRECOUNT` (Algorithm 1), `ONDEMAND` (Algorithm 2) and the paper's
-//!   contribution `HYBRID` (Algorithm 3),
+//!   contribution `HYBRID` (Algorithm 3), plus `ADAPTIVE` — a
+//!   generalization that *chooses* pre or post counting per lattice
+//!   point from estimated costs under an explicit memory budget
+//!   (`--mem-budget`),
+//! - **sampling-based cardinality estimation** ([`estimate`]):
+//!   wander-join random walks over the relationship indexes and the
+//!   budgeted [`estimate::CountPlan`] that drives ADAPTIVE,
 //! - the **parallel counting coordinator** ([`coordinator`]): a
 //!   work-sharded execution layer that partitions the lattice across a
 //!   worker pool and serves bit-identical counts through the same
@@ -45,6 +51,7 @@ pub mod ct;
 pub mod datagen;
 pub mod db;
 pub mod error;
+pub mod estimate;
 pub mod lattice;
 pub mod learn;
 pub mod meta;

@@ -22,9 +22,12 @@ use std::path::Path;
 use std::process::ExitCode;
 use std::time::Duration;
 
-use relcount::bench::driver::{run_coordinated, run_strategy, Workload};
+use relcount::bench::driver::{
+    run_coordinated_with, run_strategy_with, Workload,
+};
 use relcount::bench::experiments::{
-    coordinator_scaling_rows, fig3_fig4_rows, table4_rows, table5_rows, ExpConfig,
+    coordinator_scaling_rows, fig3_fig4_rows, planner_sweep_rows, table4_rows,
+    table5_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -34,31 +37,38 @@ use relcount::db::loader;
 use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
 use relcount::metrics::report::{
-    render_fig3, render_fig4, render_scaling, render_table4, render_table5,
+    planner_rows_to_json, render_fig3, render_fig4, render_planner, render_scaling,
+    render_table4, render_table5, scaling_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
-use relcount::strategies::traits::CountingStrategy;
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
 use relcount::util::cli::Args;
+use relcount::util::json::Json;
 
 const USAGE: &str = "\
-relcount — pre/post/hybrid count caching for SRL model discovery
+relcount — pre/post/hybrid/adaptive count caching for SRL model discovery
 
 USAGE:
   relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
   relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
-                     [--workers N|auto]
+                     [--workers N|auto] [--mem-budget BYTES[k|m|g]|inf]
   relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
-                     [--workers N|auto] [--xla]
-  relcount exp <fig3|fig4|table4|table5|scaling> [--scale F] [--budget-s N]
-                     [--presets a,b] [--workers-list 1,2,4]
+                     [--workers N|auto] [--mem-budget ...] [--xla]
+  relcount exp <fig3|fig4|table4|table5|scaling|planner> [--scale F]
+                     [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
+                     [--workers N] [--json FILE]
   relcount artifacts [--dir <artifacts>]
   relcount presets
 
-  strategies: precount | ondemand | hybrid      presets: uw mondial hepatitis
-  mutagenesis movielens financial imdb visual_genome
+  strategies: precount | ondemand | hybrid | adaptive
+  presets: uw mondial hepatitis mutagenesis movielens financial imdb
+  visual_genome
   --workers N shards the counting phases over N threads (auto = all cores)
   via the L3 parallel coordinator; counts stay bit-identical.
+  --mem-budget caps ADAPTIVE's pre-count plan (0 = pure post-counting,
+  inf = pre-count everything); `exp planner` sweeps the whole spectrum
+  and --json writes machine-readable rows (BENCH_planner.json).
 ";
 
 fn main() -> ExitCode {
@@ -120,18 +130,23 @@ fn run() -> Result<()> {
         Some("count") => {
             let (name, db) = load_db(&args)?;
             let kind = strategy_kind(&args)?;
-            let budget = budget_of(&args)?;
+            let scfg = StrategyConfig {
+                budget: budget_of(&args)?,
+                mem_budget: args.mem_budget()?,
+                ..Default::default()
+            };
             let workers = args.workers()?;
             let (row, report) = if workers == 1 {
-                let out = run_strategy(&db, &name, kind, Workload::PrepareOnly, budget)?;
+                let out =
+                    run_strategy_with(&db, &name, kind, Workload::PrepareOnly, scfg)?;
                 (out.row, out.report)
             } else {
-                let out = run_coordinated(
+                let out = run_coordinated_with(
                     &db,
                     &name,
                     kind,
                     Workload::PrepareOnly,
-                    budget,
+                    scfg,
                     workers,
                 )?;
                 let cpu = out.coordinator.cpu_view().timing;
@@ -153,6 +168,16 @@ fn run() -> Result<()> {
                 report.join_stats.rows_enumerated,
                 report.ct_rows_generated
             );
+            if kind == StrategyKind::Adaptive {
+                println!(
+                    "plan: {} points positive-planned, {} complete-planned, \
+                     ~{} est bytes resident ({} estimator walks)",
+                    report.planned_positive,
+                    report.planned_complete,
+                    report.plan_est_bytes,
+                    report.estimator_walks
+                );
+            }
             Ok(())
         }
         Some("learn") => {
@@ -163,8 +188,9 @@ fn run() -> Result<()> {
                 n_prime: args.get_f64("n-prime", 1.0)?,
                 ..Default::default()
             };
-            let scfg = relcount::strategies::traits::StrategyConfig {
+            let scfg = StrategyConfig {
                 budget: budget_of(&args)?,
+                mem_budget: args.mem_budget()?,
                 ..Default::default()
             };
             let workers = args.workers()?;
@@ -212,7 +238,9 @@ fn run() -> Result<()> {
                 .first()
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
-                    Error::Data("exp needs fig3|fig4|table4|table5|scaling".into())
+                    Error::Data(
+                        "exp needs fig3|fig4|table4|table5|scaling|planner".into(),
+                    )
                 })?;
             let cfg = exp_config(&args)?;
             match which {
@@ -222,10 +250,15 @@ fn run() -> Result<()> {
                 "table5" => print!("{}", render_table5(&table5_rows(&cfg)?)),
                 "scaling" => {
                     let counts = workers_list(&args)?;
-                    print!(
-                        "{}",
-                        render_scaling(&coordinator_scaling_rows(&cfg, &counts)?)
-                    );
+                    let rows = coordinator_scaling_rows(&cfg, &counts)?;
+                    print!("{}", render_scaling(&rows));
+                    write_json(&args, scaling_rows_to_json(&rows))?;
+                }
+                "planner" => {
+                    let workers = args.workers()?;
+                    let rows = planner_sweep_rows(&cfg, workers)?;
+                    print!("{}", render_planner(&rows));
+                    write_json(&args, planner_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }
@@ -272,6 +305,15 @@ fn run() -> Result<()> {
             Ok(())
         }
     }
+}
+
+/// Write experiment rows to `--json FILE` (no-op when absent).
+fn write_json(args: &Args, rows: Json) -> Result<()> {
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, rows.dump() + "\n")?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
 }
 
 /// Parse `--workers-list 1,2,4` (`auto` entries resolve to all cores).

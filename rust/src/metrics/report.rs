@@ -1,8 +1,12 @@
 //! Rendering of experiment rows in the shape of the paper's tables and
 //! figures (consumed by the benches, the CLI `exp` subcommand and the
-//! examples).
+//! examples), plus machine-readable JSON emission for the bench
+//! trajectory files (`BENCH_planner.json`, `BENCH_scaling.json`).
 
+use std::collections::BTreeMap;
 use std::time::Duration;
+
+use crate::util::json::Json;
 
 /// One bar of Figure 3 / Figure 4: a (strategy, database) cell.
 #[derive(Clone, Debug)]
@@ -146,6 +150,133 @@ pub fn render_scaling(rows: &[ScalingRow]) -> String {
     out
 }
 
+/// One cell of the ADAPTIVE planner sweep: a (database, memory-budget)
+/// run tracing the pre-count fraction from 0 (pure ONDEMAND) through
+/// HYBRID's operating point to 1 (pure PRECOUNT).
+#[derive(Clone, Debug)]
+pub struct PlannerRow {
+    pub database: String,
+    /// The `--mem-budget` the plan was filled against (`None` =
+    /// unlimited).
+    pub budget_bytes: Option<u64>,
+    /// Estimated fraction of the full pre-count held resident — the
+    /// sweep's x-axis.
+    pub pre_fraction: f64,
+    pub planned_positive: u64,
+    pub planned_complete: u64,
+    pub lattice_points: u64,
+    pub metadata: Duration,
+    pub positive: Duration,
+    pub negative: Duration,
+    pub peak_ct_bytes: usize,
+    pub chain_queries: u64,
+    pub ct_rows_generated: u64,
+    pub estimator_walks: u64,
+    pub workers: usize,
+    pub timed_out: bool,
+}
+
+impl PlannerRow {
+    pub fn total(&self) -> Duration {
+        self.metadata + self.positive + self.negative
+    }
+}
+
+/// Render the planner sweep (the `planner_sweep` bench and the CLI
+/// `exp planner`).
+pub fn render_planner(rows: &[PlannerRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>12} {:>8} {:>9} {:>10} {:>10} {:>10} {:>12} {:>8}  {}\n",
+        "database",
+        "budget",
+        "pre_frac",
+        "plan_p/c",
+        "ct+_s",
+        "ct-_s",
+        "total_s",
+        "peak_ct_MiB",
+        "joins",
+        "status"
+    ));
+    for r in rows {
+        let budget = match r.budget_bytes {
+            None => "inf".to_string(),
+            Some(b) => b.to_string(),
+        };
+        out.push_str(&format!(
+            "{:<16} {:>12} {:>8.3} {:>9} {:>10} {:>10} {:>10} {:>12.3} {:>8}  {}\n",
+            r.database,
+            budget,
+            r.pre_fraction,
+            format!("{}/{}", r.planned_positive, r.planned_complete),
+            fmt_dur(r.positive),
+            fmt_dur(r.negative),
+            fmt_dur(r.total()),
+            r.peak_ct_bytes as f64 / (1024.0 * 1024.0),
+            r.chain_queries,
+            if r.timed_out { "TIMEOUT" } else { "ok" }
+        ));
+    }
+    out
+}
+
+fn obj(entries: Vec<(&str, Json)>) -> Json {
+    Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+/// Machine-readable planner sweep (written to `BENCH_planner.json` by
+/// `scripts/bench.sh`).
+pub fn planner_rows_to_json(rows: &[PlannerRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    (
+                        "budget_bytes",
+                        r.budget_bytes.map(|b| Json::Num(b as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("pre_fraction", Json::Num(r.pre_fraction)),
+                    ("planned_positive", Json::Num(r.planned_positive as f64)),
+                    ("planned_complete", Json::Num(r.planned_complete as f64)),
+                    ("lattice_points", Json::Num(r.lattice_points as f64)),
+                    ("metadata_s", Json::Num(r.metadata.as_secs_f64())),
+                    ("positive_s", Json::Num(r.positive.as_secs_f64())),
+                    ("negative_s", Json::Num(r.negative.as_secs_f64())),
+                    ("total_s", Json::Num(r.total().as_secs_f64())),
+                    ("peak_ct_bytes", Json::Num(r.peak_ct_bytes as f64)),
+                    ("chain_queries", Json::Num(r.chain_queries as f64)),
+                    ("ct_rows_generated", Json::Num(r.ct_rows_generated as f64)),
+                    ("estimator_walks", Json::Num(r.estimator_walks as f64)),
+                    ("workers", Json::Num(r.workers as f64)),
+                    ("timed_out", Json::Bool(r.timed_out)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Machine-readable scaling sweep (written to `BENCH_scaling.json` by
+/// `scripts/bench.sh`).
+pub fn scaling_rows_to_json(rows: &[ScalingRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("strategy", Json::Str(r.strategy.clone())),
+                    ("workers", Json::Num(r.workers as f64)),
+                    ("wall_s", Json::Num(r.wall.as_secs_f64())),
+                    ("speedup", Json::Num(r.speedup)),
+                    ("cpu_s", Json::Num(r.cpu.as_secs_f64())),
+                    ("timed_out", Json::Bool(r.timed_out)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -229,5 +360,67 @@ mod tests {
     #[test]
     fn total_sums_phases() {
         assert_eq!(row().total(), Duration::from_millis(102));
+    }
+
+    fn planner_row() -> PlannerRow {
+        PlannerRow {
+            database: "uw".into(),
+            budget_bytes: Some(4096),
+            pre_fraction: 0.375,
+            planned_positive: 2,
+            planned_complete: 1,
+            lattice_points: 3,
+            metadata: Duration::from_millis(2),
+            positive: Duration::from_millis(10),
+            negative: Duration::from_millis(5),
+            peak_ct_bytes: 1024 * 1024,
+            chain_queries: 4,
+            ct_rows_generated: 99,
+            estimator_walks: 256,
+            workers: 1,
+            timed_out: false,
+        }
+    }
+
+    #[test]
+    fn renders_planner() {
+        let s = render_planner(&[planner_row()]);
+        assert!(s.contains("uw") && s.contains("0.375") && s.contains("2/1"));
+        let mut unlimited = planner_row();
+        unlimited.budget_bytes = None;
+        assert!(render_planner(&[unlimited]).contains("inf"));
+    }
+
+    #[test]
+    fn planner_json_roundtrips() {
+        let j = planner_rows_to_json(&[planner_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("database").unwrap().as_str(), Some("uw"));
+        assert_eq!(row.get("budget_bytes").unwrap().as_f64(), Some(4096.0));
+        assert_eq!(row.get("planned_complete").unwrap().as_f64(), Some(1.0));
+        // unlimited budget serializes as null
+        let mut unlimited = planner_row();
+        unlimited.budget_bytes = None;
+        let j2 = planner_rows_to_json(&[unlimited]);
+        assert!(j2.dump().contains("\"budget_bytes\":null"));
+    }
+
+    #[test]
+    fn scaling_json_shapes() {
+        let j = scaling_rows_to_json(&[ScalingRow {
+            database: "uw".into(),
+            strategy: "ADAPTIVE".into(),
+            workers: 2,
+            wall: Duration::from_millis(100),
+            speedup: 1.7,
+            cpu: Duration::from_millis(150),
+            timed_out: false,
+        }]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("speedup").unwrap().as_f64(),
+            Some(1.7)
+        );
     }
 }

@@ -8,7 +8,7 @@
 
 use std::path::{Path, PathBuf};
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::error::{Error, Result};
 use crate::runtime::manifest::{ArtifactSpec, Dtype, Manifest};

@@ -1,0 +1,430 @@
+//! ADAPTIVE — Algorithm 3 generalized into a cost-model-driven planner.
+//!
+//! Where HYBRID hard-codes one global answer to the pre-vs-post counting
+//! trade-off, ADAPTIVE decides **per lattice point** from estimated
+//! costs, under an explicit memory budget
+//! ([`StrategyConfig::mem_budget`]):
+//!
+//! 1. a [`CountPlan`] ranks lattice points by estimated
+//!    `reuse × join-cost / bytes` (sampling-based cardinality
+//!    estimation, [`crate::estimate`]) and greedily fills the budget —
+//!    first with positive pre-counts (the HYBRID axis), then with
+//!    complete pre-counts (the PRECOUNT axis);
+//! 2. `prepare` builds exactly the planned tables;
+//! 3. serving projects from whatever is planned and **falls back to
+//!    fresh joins** (plus family-level Möbius) for the rest, so every
+//!    budget point — 0 (pure ONDEMAND) through HYBRID's operating point
+//!    to unlimited (pure PRECOUNT) — serves **bit-identical** counts.
+//!    Only *where* counts are computed changes; `exp planner` sweeps the
+//!    spectrum.
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::{mobius_complete, ChainSource};
+use crate::ct::project::project;
+use crate::db::catalog::Database;
+use crate::db::query::{groupby_entity, positive_chain_ct, JoinStats};
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::estimate::plan::CountPlan;
+use crate::lattice::Lattice;
+use crate::meta::rvar::RVar;
+use crate::metrics::memory::MemTracker;
+use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
+use crate::strategies::cache::CtCache;
+use crate::strategies::common::{
+    entity_key, lp_key, narrow_to_ctx, run_positive_task, var_pops, var_rels,
+    LatticeCtx, PositiveTask, TimedSource,
+};
+use crate::strategies::precount::Precount;
+use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
+
+/// A [`ChainSource`] that serves positive counts by projection from the
+/// planned pre-count cache and silently falls back to fresh joins for
+/// unplanned (or out-of-lattice) chains — the serving half of ADAPTIVE.
+///
+/// Reads the cache through [`CtCache::peek`] (the cache is frozen after
+/// `prepare`), so the same source type works for the sequential strategy
+/// and the parallel coordinator's worker shards.
+pub struct PlannedSource<'a> {
+    pub db: &'a Database,
+    pub lattice: &'a Lattice,
+    pub plan: &'a CountPlan,
+    pub cache: &'a CtCache,
+    /// Fallback-join counters (merged into the strategy's totals).
+    pub stats: JoinStats,
+}
+
+impl ChainSource for PlannedSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        if let Some(p) = self.lattice.point(chain) {
+            if self.plan.positive_planned(p.id) {
+                let key = lp_key(&p.rels, &p.attr_vars, &p.pops);
+                if let Some(full) = self.cache.peek(&key) {
+                    return project(full, vars);
+                }
+            }
+        }
+        // Unplanned chain (or beyond the lattice): post-count it.
+        positive_chain_ct(self.db, chain, vars, &mut self.stats)
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        if self.plan.marginals {
+            if let Some(full) = self.cache.peek(&entity_key(et)) {
+                return project(full, vars);
+            }
+        }
+        self.stats.entity_queries += 1;
+        groupby_entity(self.db, et, vars)
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.db.schema
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.db.population(et) as i128
+    }
+}
+
+/// The ADAPTIVE strategy.
+pub struct Adaptive<'a> {
+    db: &'a Database,
+    cfg: StrategyConfig,
+    ctx: LatticeCtx,
+    plan: CountPlan,
+    /// Planned positive lattice ct-tables + entity marginals.
+    positive: CtCache,
+    /// Planned complete lattice ct-tables.
+    complete: CtCache,
+    /// Post-counting cache of family ct-tables.
+    family_cache: CtCache,
+    timer: PhaseTimer,
+    deadline: Deadline,
+    join_stats: JoinStats,
+    mem: MemTracker,
+    families_served: u64,
+    rows_generated: u64,
+    complete_hits: u64,
+    prepared: bool,
+}
+
+impl<'a> Adaptive<'a> {
+    /// Metadata phase *and* planning run here: the plan is a pure
+    /// function of (database, lattice, estimator config, budget), so a
+    /// parallel coordinator building the same inputs gets the same plan.
+    pub fn new(db: &'a Database, cfg: StrategyConfig) -> Result<Self> {
+        let deadline = Deadline::new(cfg.budget);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(db, cfg.max_chain_length, &mut timer)?;
+        let plan = timer.time(Phase::Metadata, || {
+            CountPlan::build(db, &ctx.lattice, cfg.estimator, cfg.mem_budget)
+        })?;
+        Ok(Adaptive {
+            db,
+            cfg,
+            ctx,
+            plan,
+            positive: CtCache::new(),
+            complete: CtCache::new(),
+            family_cache: CtCache::new(),
+            timer,
+            deadline,
+            join_stats: JoinStats::default(),
+            mem: MemTracker::default(),
+            families_served: 0,
+            rows_generated: 0,
+            complete_hits: 0,
+            prepared: false,
+        })
+    }
+
+    /// The plan driving this instance (inspection / the planner sweep).
+    pub fn plan(&self) -> &CountPlan {
+        &self.plan
+    }
+
+    /// The planned subset of the positive-phase task list, in canonical
+    /// order (entity marginals first iff planned, then planned points by
+    /// ascending id) — shared with the parallel coordinator so both fill
+    /// identical caches.
+    pub(crate) fn planned_positive_tasks(
+        db: &Database,
+        plan: &CountPlan,
+    ) -> Vec<PositiveTask> {
+        let mut tasks = Vec::new();
+        if plan.marginals {
+            tasks.extend((0..db.schema.entities.len()).map(PositiveTask::Entity));
+        }
+        tasks.extend(
+            (0..plan.levels.len())
+                .filter(|&id| plan.positive_planned(id))
+                .map(PositiveTask::Point),
+        );
+        tasks
+    }
+
+    /// The planned complete-phase point ids, ascending.
+    pub(crate) fn planned_complete_points(plan: &CountPlan) -> Vec<usize> {
+        (0..plan.levels.len()).filter(|&id| plan.complete_planned(id)).collect()
+    }
+}
+
+impl CountingStrategy for Adaptive<'_> {
+    fn name(&self) -> &'static str {
+        "ADAPTIVE"
+    }
+
+    /// Build exactly the planned tables: positive fill for planned
+    /// points (+ marginals), then complete tables for the
+    /// complete-planned points.
+    fn prepare(&mut self) -> Result<()> {
+        if self.prepared {
+            return Ok(());
+        }
+        for task in Self::planned_positive_tasks(self.db, &self.plan) {
+            self.deadline.check(match task {
+                PositiveTask::Entity(_) => "positive ct (entity)",
+                PositiveTask::Point(_) => "positive ct (lattice)",
+            })?;
+            let (key, t) = self.timer.time(Phase::Positive, || {
+                run_positive_task(self.db, &self.ctx, task, &mut self.join_stats)
+            })?;
+            self.positive.insert(key, t);
+        }
+        for id in Self::planned_complete_points(&self.plan) {
+            self.deadline.check("negative ct (lattice)")?;
+            let p = self.ctx.lattice.points[id].clone();
+            let vars = p.all_vars();
+            let (complete, stats) = {
+                let mut src = PlannedSource {
+                    db: self.db,
+                    lattice: &self.ctx.lattice,
+                    plan: &self.plan,
+                    cache: &self.positive,
+                    stats: JoinStats::default(),
+                };
+                let ct = self.timer.time(Phase::Negative, || {
+                    mobius_complete(&mut src, &vars, &p.pops)
+                })?;
+                (ct, src.stats)
+            };
+            self.join_stats.merge(&stats);
+            self.rows_generated += complete.n_rows() as u64;
+            self.complete.insert(Precount::complete_key(&p), complete);
+        }
+        self.prepared = true;
+        Ok(())
+    }
+
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        if !self.prepared {
+            self.prepare()?;
+        }
+        self.deadline.check("family count (adaptive)")?;
+        self.families_served += 1;
+
+        // Complete-planned covering point: serve by projection, exactly
+        // PRECOUNT's path (no family cache — the projection is cheaper
+        // than a lookup-plus-clone of a cached copy).
+        let rels = var_rels(vars);
+        if !rels.is_empty() {
+            let vpops = var_pops(&self.db.schema, vars);
+            if let Some(p) = self.ctx.lattice.covering_point(&rels, &vpops) {
+                if self.plan.complete_planned(p.id) {
+                    let p = p.clone();
+                    let key = Precount::complete_key(&p);
+                    let full = self
+                        .complete
+                        .get(&key)
+                        .ok_or_else(|| {
+                            Error::Strategy("complete ct missing (prepare?)".into())
+                        })?;
+                    let mut ct =
+                        self.timer.time(Phase::Positive, || project(full, vars))?;
+                    narrow_to_ctx(self.db, &mut ct, &p.pops, ctx_pops, vars)?;
+                    self.complete_hits += 1;
+                    self.mem.observe_transient(ct.bytes());
+                    return Ok(ct);
+                }
+            }
+        }
+
+        // Otherwise: family-level Möbius over planned positives with
+        // fresh-join fallback (the HYBRID/ONDEMAND axis).
+        let key = CtCache::key(vars, ctx_pops);
+        if self.cfg.family_cache {
+            if let Some(hit) = self.family_cache.get(&key) {
+                return Ok(hit.clone());
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let mut src = PlannedSource {
+            db: self.db,
+            lattice: &self.ctx.lattice,
+            plan: &self.plan,
+            cache: &self.positive,
+            stats: JoinStats::default(),
+        };
+        let ct = {
+            let mut timed = TimedSource::new(&mut src);
+            let ct = mobius_complete(&mut timed, vars, ctx_pops)?;
+            self.timer.add(Phase::Positive, timed.positive_elapsed);
+            self.timer
+                .add(Phase::Negative, t0.elapsed().saturating_sub(timed.positive_elapsed));
+            ct
+        };
+        self.join_stats.merge(&src.stats);
+        self.rows_generated += ct.n_rows() as u64;
+        self.mem.observe_transient(ct.bytes());
+        if self.cfg.family_cache {
+            self.family_cache.insert(key, ct.clone());
+        }
+        Ok(ct)
+    }
+
+    fn report(&self) -> StrategyReport {
+        let mut peak = self.mem;
+        peak.merge_peak(&self.positive.mem);
+        peak.peak_bytes = peak.peak_bytes.max(
+            self.positive.mem.current_bytes
+                + self.complete.mem.peak_bytes
+                + self.family_cache.mem.peak_bytes,
+        );
+        StrategyReport {
+            name: self.name().into(),
+            timing: self.timer,
+            join_stats: self.join_stats,
+            cache_bytes: self.positive.bytes()
+                + self.complete.bytes()
+                + self.family_cache.bytes(),
+            peak_ct_bytes: peak.peak_bytes,
+            ct_rows_generated: self.rows_generated,
+            families_served: self.families_served,
+            cache_hits: self.family_cache.hits + self.complete_hits,
+            cache_misses: self.family_cache.misses,
+            planned_positive: self.plan.planned_positive_count(),
+            planned_complete: self.plan.planned_complete_count(),
+            plan_est_bytes: self.plan.est_spent_bytes,
+            estimator_walks: self.plan.walks,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    fn adaptive(db: &Database, budget: Option<u64>) -> Adaptive<'_> {
+        let cfg = StrategyConfig { mem_budget: budget, ..Default::default() };
+        Adaptive::new(db, cfg).unwrap()
+    }
+
+    #[test]
+    fn zero_budget_counts_match_brute_force() {
+        let db = university_db();
+        let mut s = adaptive(&db, Some(0));
+        s.prepare().unwrap();
+        assert_eq!(s.report().planned_positive, 0);
+        let ct = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        assert_eq!(ct.n_rows(), brute.n_rows());
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+        // pure post-counting: the serve executed fresh joins
+        assert!(s.report().join_stats.chain_queries > 0);
+    }
+
+    #[test]
+    fn unlimited_budget_counts_match_brute_force() {
+        let db = university_db();
+        let mut s = adaptive(&db, None);
+        s.prepare().unwrap();
+        let rep = s.report();
+        assert_eq!(rep.planned_complete as usize, s.ctx.lattice.len());
+        let joins_after_prepare = s.join_stats.chain_queries;
+        let ct = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+        // fully pre-counted: serving never joins
+        assert_eq!(s.join_stats.chain_queries, joins_after_prepare);
+        assert_eq!(s.report().cache_hits, 1); // served by projection
+    }
+
+    #[test]
+    fn hybrid_budget_prepares_positives_only() {
+        let db = university_db();
+        let probe = adaptive(&db, None);
+        let hb = probe.plan().hybrid_budget();
+        let mut s = adaptive(&db, Some(hb));
+        s.prepare().unwrap();
+        let rep = s.report();
+        assert_eq!(rep.planned_positive as usize, s.ctx.lattice.len());
+        assert_eq!(rep.planned_complete, 0);
+        let joins_after_prepare = s.join_stats.chain_queries;
+        let ct = s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+        // HYBRID-equivalent: projections only during search
+        assert_eq!(s.join_stats.chain_queries, joins_after_prepare);
+    }
+
+    #[test]
+    fn partial_budget_mixes_pre_and_post() {
+        let db = university_db();
+        let probe = adaptive(&db, None);
+        let half = probe.plan().hybrid_budget() / 2;
+        let mut s = adaptive(&db, Some(half));
+        s.prepare().unwrap();
+        let rep = s.report();
+        assert!(rep.planned_positive > 0, "half the hybrid budget plans something");
+        assert!((rep.planned_positive as usize) < s.ctx.lattice.len());
+        // counts stay exact regardless
+        for vars in [family(), vec![RVar::RelInd { rel: 0 }, RVar::RelInd { rel: 1 }]] {
+            let ctx: Vec<usize> = if vars.len() == 2 { vec![0, 1, 2] } else { vec![0, 1] };
+            let ct = s.ct_for_family(&vars, &ctx).unwrap();
+            let brute = brute_force_complete(&db, &vars, &ctx).unwrap();
+            for (v, c) in brute.iter_rows() {
+                assert_eq!(ct.get(&v).unwrap(), c, "{vars:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn family_cache_hits_on_revisit() {
+        let db = university_db();
+        let mut s = adaptive(&db, Some(0));
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        let joins = s.join_stats.chain_queries;
+        s.ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(s.join_stats.chain_queries, joins);
+        assert_eq!(s.report().cache_hits, 1);
+    }
+
+    #[test]
+    fn report_carries_plan_accounting() {
+        let db = university_db();
+        let mut s = adaptive(&db, None);
+        s.prepare().unwrap();
+        let rep = s.report();
+        assert_eq!(rep.name, "ADAPTIVE");
+        assert!(rep.plan_est_bytes > 0);
+        assert_eq!(rep.planned_positive, rep.planned_complete);
+        assert!(rep.timing.metadata > std::time::Duration::ZERO);
+    }
+}

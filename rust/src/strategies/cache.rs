@@ -1,6 +1,6 @@
 //! Count caches with exact byte accounting and hit statistics.
 
-use rustc_hash::FxHashMap;
+use crate::util::fxhash::FxHashMap;
 
 use crate::ct::cttable::CtTable;
 use crate::meta::rvar::RVar;

@@ -138,6 +138,7 @@ impl CountingStrategy for Hybrid<'_> {
             families_served: self.families_served,
             cache_hits: self.family_cache.hits,
             cache_misses: self.family_cache.misses,
+            ..Default::default()
         }
     }
 }

@@ -11,10 +11,17 @@
 //! positive ct per family — is labelled IMPOSSIBLE by the paper: the
 //! Möbius Join cannot produce a wider table than its positive input.)
 //!
-//! All three implement [`traits::CountingStrategy`] and are verified to
-//! produce **identical** family ct-tables (see
+//! A fourth strategy, [`adaptive::Adaptive`], generalizes the table into
+//! a *planner*: per lattice point it chooses pre or post counting from
+//! sampling-based cost estimates under an explicit memory budget
+//! ([`traits::StrategyConfig::mem_budget`]), spanning the whole
+//! ONDEMAND → HYBRID → PRECOUNT spectrum.
+//!
+//! All strategies implement [`traits::CountingStrategy`] and are
+//! verified to produce **identical** family ct-tables (see
 //! `rust/tests/strategy_equivalence.rs`).
 
+pub mod adaptive;
 pub mod cache;
 pub mod common;
 pub mod hybrid;
@@ -22,6 +29,7 @@ pub mod ondemand;
 pub mod precount;
 pub mod traits;
 
+pub use adaptive::Adaptive;
 pub use hybrid::Hybrid;
 pub use ondemand::OnDemand;
 pub use precount::Precount;
@@ -36,17 +44,32 @@ pub enum StrategyKind {
     Precount,
     OnDemand,
     Hybrid,
+    /// The planner-driven strategy; honors
+    /// [`StrategyConfig::mem_budget`] and
+    /// [`StrategyConfig::estimator`].
+    Adaptive,
 }
 
 impl StrategyKind {
+    /// The paper's three fixed strategies (Table 2) — the grid every
+    /// figure/table experiment sweeps.
     pub const ALL: [StrategyKind; 3] =
         [StrategyKind::Precount, StrategyKind::OnDemand, StrategyKind::Hybrid];
+
+    /// All strategies including the ADAPTIVE planner.
+    pub const ALL_WITH_ADAPTIVE: [StrategyKind; 4] = [
+        StrategyKind::Precount,
+        StrategyKind::OnDemand,
+        StrategyKind::Hybrid,
+        StrategyKind::Adaptive,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             StrategyKind::Precount => "PRECOUNT",
             StrategyKind::OnDemand => "ONDEMAND",
             StrategyKind::Hybrid => "HYBRID",
+            StrategyKind::Adaptive => "ADAPTIVE",
         }
     }
 
@@ -55,6 +78,7 @@ impl StrategyKind {
             "precount" | "pre" | "p" => Some(StrategyKind::Precount),
             "ondemand" | "post" | "o" => Some(StrategyKind::OnDemand),
             "hybrid" | "h" => Some(StrategyKind::Hybrid),
+            "adaptive" | "a" => Some(StrategyKind::Adaptive),
             _ => None,
         }
     }
@@ -69,6 +93,7 @@ impl StrategyKind {
             StrategyKind::Precount => Box::new(Precount::new(db, cfg)?),
             StrategyKind::OnDemand => Box::new(OnDemand::new(db, cfg)?),
             StrategyKind::Hybrid => Box::new(Hybrid::new(db, cfg)?),
+            StrategyKind::Adaptive => Box::new(Adaptive::new(db, cfg)?),
         })
     }
 }
@@ -82,9 +107,11 @@ mod tests {
         assert_eq!(StrategyKind::parse("hybrid"), Some(StrategyKind::Hybrid));
         assert_eq!(StrategyKind::parse("PRE"), Some(StrategyKind::Precount));
         assert_eq!(StrategyKind::parse("post"), Some(StrategyKind::OnDemand));
+        assert_eq!(StrategyKind::parse("adaptive"), Some(StrategyKind::Adaptive));
         assert_eq!(StrategyKind::parse("nope"), None);
-        for k in StrategyKind::ALL {
+        for k in StrategyKind::ALL_WITH_ADAPTIVE {
             assert!(!k.name().is_empty());
         }
+        assert!(!StrategyKind::ALL.contains(&StrategyKind::Adaptive));
     }
 }

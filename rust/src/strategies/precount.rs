@@ -187,6 +187,7 @@ impl CountingStrategy for Precount<'_> {
             families_served: self.families_served,
             cache_hits: self.complete.hits,
             cache_misses: self.complete.misses,
+            ..Default::default()
         }
     }
 }

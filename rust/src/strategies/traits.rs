@@ -5,6 +5,7 @@ use std::time::Duration;
 use crate::ct::cttable::CtTable;
 use crate::db::query::JoinStats;
 use crate::error::Result;
+use crate::estimate::sampler::EstimatorConfig;
 use crate::meta::rvar::RVar;
 use crate::metrics::timing::PhaseTimer;
 
@@ -19,11 +20,25 @@ pub struct StrategyConfig {
     pub budget: Option<Duration>,
     /// Cache family-level ct-tables on first use (post-counting caching).
     pub family_cache: bool,
+    /// ADAPTIVE only: cap (in bytes) on the estimated resident size of
+    /// pre-counted ct-tables.  `None` = unlimited (plan everything,
+    /// PRECOUNT-equivalent); `Some(0)` = pre-count nothing
+    /// (ONDEMAND-equivalent).  The fixed strategies ignore it.
+    pub mem_budget: Option<u64>,
+    /// ADAPTIVE only: the cardinality estimator's seed/walks/exhaustive
+    /// settings (see [`crate::estimate::EstimatorConfig`]).
+    pub estimator: EstimatorConfig,
 }
 
 impl Default for StrategyConfig {
     fn default() -> Self {
-        StrategyConfig { max_chain_length: 3, budget: None, family_cache: true }
+        StrategyConfig {
+            max_chain_length: 3,
+            budget: None,
+            family_cache: true,
+            mem_budget: None,
+            estimator: EstimatorConfig::default(),
+        }
     }
 }
 
@@ -43,6 +58,16 @@ pub struct StrategyReport {
     pub families_served: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// ADAPTIVE plan accounting: lattice points planned for positive
+    /// pre-counting (0 for the fixed strategies).
+    pub planned_positive: u64,
+    /// Lattice points planned for complete (negative-included)
+    /// pre-counting.
+    pub planned_complete: u64,
+    /// The plan's estimated resident-cache bytes.
+    pub plan_est_bytes: u64,
+    /// Random walks the plan's cardinality estimators consumed.
+    pub estimator_walks: u64,
 }
 
 impl StrategyReport {
@@ -66,6 +91,12 @@ impl StrategyReport {
         self.families_served += other.families_served;
         self.cache_hits += other.cache_hits;
         self.cache_misses += other.cache_misses;
+        // Plan accounting describes the one shared plan, not per-shard
+        // work, so folding reports takes the maximum instead of summing.
+        self.planned_positive = self.planned_positive.max(other.planned_positive);
+        self.planned_complete = self.planned_complete.max(other.planned_complete);
+        self.plan_est_bytes = self.plan_est_bytes.max(other.plan_est_bytes);
+        self.estimator_walks = self.estimator_walks.max(other.estimator_walks);
     }
 }
 

@@ -92,6 +92,47 @@ impl Args {
             },
         }
     }
+
+    /// The `--mem-budget` option (ADAPTIVE): bytes with an optional
+    /// `k`/`m`/`g` suffix (powers of 1024).  Absent, `inf` or
+    /// `unlimited` -> `None` (plan everything); `0` -> `Some(0)`
+    /// (pre-count nothing).
+    pub fn mem_budget(&self) -> Result<Option<u64>> {
+        match self.get("mem-budget") {
+            None => Ok(None),
+            Some(v) => parse_bytes(v),
+        }
+    }
+}
+
+/// Parse a byte count with an optional binary-unit suffix.
+pub fn parse_bytes(v: &str) -> Result<Option<u64>> {
+    let t = v.trim().to_ascii_lowercase();
+    if t == "inf" || t == "unlimited" || t == "none" {
+        return Ok(None);
+    }
+    let (digits, mult) = match t.strip_suffix(&['k', 'm', 'g'][..]) {
+        Some(d) => {
+            let mult = match t.as_bytes()[t.len() - 1] {
+                b'k' => 1u64 << 10,
+                b'm' => 1u64 << 20,
+                _ => 1u64 << 30,
+            };
+            (d, mult)
+        }
+        None => (t.as_str(), 1u64),
+    };
+    digits
+        .trim()
+        .parse::<u64>()
+        .ok()
+        .and_then(|n| n.checked_mul(mult))
+        .map(Some)
+        .ok_or_else(|| {
+            Error::Data(format!(
+                "--mem-budget expects BYTES[k|m|g] or `inf`, got {v:?}"
+            ))
+        })
 }
 
 #[cfg(test)]
@@ -134,5 +175,23 @@ mod tests {
         assert_eq!(parse("learn --workers auto").workers().unwrap(), 0);
         assert_eq!(parse("learn --workers 0").workers().unwrap(), 0);
         assert!(parse("learn --workers nope").workers().is_err());
+    }
+
+    #[test]
+    fn mem_budget_parsing() {
+        assert_eq!(parse("count").mem_budget().unwrap(), None);
+        assert_eq!(parse("count --mem-budget inf").mem_budget().unwrap(), None);
+        assert_eq!(parse("count --mem-budget 0").mem_budget().unwrap(), Some(0));
+        assert_eq!(parse("count --mem-budget 4096").mem_budget().unwrap(), Some(4096));
+        assert_eq!(
+            parse("count --mem-budget 64m").mem_budget().unwrap(),
+            Some(64 << 20)
+        );
+        assert_eq!(parse("count --mem-budget 2K").mem_budget().unwrap(), Some(2048));
+        assert_eq!(
+            parse("count --mem-budget 1g").mem_budget().unwrap(),
+            Some(1 << 30)
+        );
+        assert!(parse("count --mem-budget lots").mem_budget().is_err());
     }
 }

@@ -1,0 +1,135 @@
+//! An in-tree port of the FxHash algorithm (rustc's non-cryptographic
+//! hasher; Firefox lineage), so the crate builds with zero external
+//! dependencies while keeping the unseeded, cross-process-stable hashing
+//! that the coordinator's deterministic shard routing relies on
+//! ([`crate::coordinator::shard::shard_of`]).
+//!
+//! The byte-stream mixing follows the published algorithm: fold each
+//! `usize`-sized word into the state with a rotate, xor, and multiply by
+//! a golden-ratio-derived constant.  Identical input always hashes to
+//! the identical value on a given pointer width — there is no per-process
+//! seed, unlike `std`'s SipHash.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// Hash map keyed by [`FxHasher`].  Drop-in for the `rustc_hash` crate's
+/// type of the same name.
+pub type FxHashMap<K, V> = HashMap<K, V, BuildHasherDefault<FxHasher>>;
+
+/// Hash set keyed by [`FxHasher`].
+pub type FxHashSet<T> = HashSet<T, BuildHasherDefault<FxHasher>>;
+
+const SEED64: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+const ROTATE: u32 = 5;
+
+/// The FxHash word-at-a-time hasher.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(ROTATE) ^ word).wrapping_mul(SEED64);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for c in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(c.try_into().expect("8-byte chunk")));
+        }
+        let rest = chunks.remainder();
+        if !rest.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rest.len()].copy_from_slice(rest);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, i: u128) {
+        self.add_to_hash(i as u64);
+        self.add_to_hash((i >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::hash::Hash;
+
+    fn hash_of<T: Hash>(v: &T) -> u64 {
+        let mut h = FxHasher::default();
+        v.hash(&mut h);
+        h.finish()
+    }
+
+    #[test]
+    fn deterministic_and_unseeded() {
+        let key = (vec![1usize, 2, 3], vec![0usize, 1]);
+        assert_eq!(hash_of(&key), hash_of(&key.clone()));
+        assert_ne!(hash_of(&1u64), hash_of(&2u64));
+        // stable across hasher instances (no per-process seed)
+        let a = hash_of(&"positive ct".to_string());
+        let b = hash_of(&"positive ct".to_string());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn map_and_set_work() {
+        let mut m: FxHashMap<u64, u64> = FxHashMap::default();
+        for i in 0..100 {
+            m.insert(i, i * i);
+        }
+        assert_eq!(m.len(), 100);
+        assert_eq!(m[&7], 49);
+        let s: FxHashSet<u64> = (0..50).collect();
+        assert!(s.contains(&49) && !s.contains(&50));
+    }
+
+    #[test]
+    fn partial_tail_bytes_mix() {
+        // 9 bytes exercises the chunk + remainder path
+        let mut h = FxHasher::default();
+        h.write(&[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        let nine = h.finish();
+        let mut h2 = FxHasher::default();
+        h2.write(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert_ne!(nine, h2.finish());
+    }
+}

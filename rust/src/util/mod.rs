@@ -1,8 +1,10 @@
 //! In-tree substrates that would normally come from crates.io (this
 //! image builds offline): a JSON parser/writer, a seeded PRNG, a CLI
-//! argument parser, and a micro-benchmark harness.
+//! argument parser, an FxHash implementation, and a micro-benchmark
+//! harness.
 
 pub mod bench;
 pub mod cli;
+pub mod fxhash;
 pub mod json;
 pub mod rng;

@@ -8,8 +8,10 @@ use relcount::ct::dense::{DenseLayout, D_PAD, E_PAD, K_REL};
 use relcount::ct::mobius::{brute_force_complete, mobius_complete};
 use relcount::ct::project::project;
 use relcount::db::catalog::Database;
-use relcount::db::query::DirectSource;
+use relcount::db::query::{positive_chain_ct, DirectSource, JoinStats};
 use relcount::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+use relcount::estimate::{EstimatorConfig, JoinSampler};
+use relcount::lattice::Lattice;
 use relcount::meta::rvar::RVar;
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
@@ -241,6 +243,93 @@ fn prop_outer_product_total() {
             a.total().unwrap() * b.total().unwrap(),
             "seed {seed}"
         );
+    }
+}
+
+/// True join-chain cardinality, by actually executing the join.
+fn true_chain_cardinality(db: &Database, chain: &[usize]) -> f64 {
+    let mut stats = JoinStats::default();
+    positive_chain_ct(db, chain, &[], &mut stats).unwrap().total().unwrap() as f64
+}
+
+#[test]
+fn prop_estimator_exact_on_exhaustive_sampling() {
+    // The random databases are tiny, so the default exhaustive limit
+    // kicks in: every chain estimate must be *exact*.
+    for seed in 1000..1000 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        let sampler = JoinSampler::new(&db, EstimatorConfig::default());
+        for p in &lattice.points {
+            let e = sampler.chain_cardinality(&p.rels).unwrap();
+            assert!(e.exact, "seed {seed} chain {:?}: cap {}", p.rels, e.cap);
+            let truth = true_chain_cardinality(&db, &p.rels);
+            assert_eq!(e.value, truth, "seed {seed} chain {:?}", p.rels);
+            assert_eq!(e.lo, e.hi, "seed {seed}");
+            assert!(truth <= e.cap, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn prop_estimates_within_declared_bounds() {
+    // Force the sampling path (exhaustive enumeration off): the declared
+    // interval [lo, hi] must cover the true cardinality, and the
+    // deterministic cap must bound it.
+    let cfg = EstimatorConfig { exhaustive_limit: 0, walks: 2048, ..Default::default() };
+    for seed in 1100..1100 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        let sampler = JoinSampler::new(&db, cfg);
+        for p in &lattice.points {
+            let e = sampler.chain_cardinality(&p.rels).unwrap();
+            let truth = true_chain_cardinality(&db, &p.rels);
+            assert!(truth <= e.cap, "seed {seed} {:?}: truth {truth} > cap {}", p.rels, e.cap);
+            assert!(
+                e.lo <= truth && truth <= e.hi,
+                "seed {seed} {:?}: [{}, {}] misses {truth} (est {}, {} walks)",
+                p.rels,
+                e.lo,
+                e.hi,
+                e.value,
+                e.walks
+            );
+            // single-relationship chains are always exact
+            if p.rels.len() == 1 {
+                assert_eq!(e.value, truth, "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_adaptive_interchangeable_at_random_budgets() {
+    // ADAPTIVE must serve the same tables as the fixed strategies at
+    // *any* budget, not just the reference points.
+    for seed in 1200..1200 + 30 {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let (vars, ctx) = random_family(&mut rng, &db);
+        let budget = match rng.gen_range(4) {
+            0 => Some(0),
+            1 => Some(rng.gen_range(1 << 14)),
+            2 => Some(rng.gen_range(1 << 20)),
+            _ => None,
+        };
+        let mut reference =
+            StrategyKind::OnDemand.build(&db, StrategyConfig::default()).unwrap();
+        let expect = reference.ct_for_family(&vars, &ctx).unwrap();
+        let scfg = StrategyConfig { mem_budget: budget, ..Default::default() };
+        let mut adaptive = StrategyKind::Adaptive.build(&db, scfg).unwrap();
+        let got = adaptive.ct_for_family(&vars, &ctx).unwrap_or_else(|e| {
+            panic!("seed {seed} budget {budget:?}: {e}")
+        });
+        assert_eq!(got.n_rows(), expect.n_rows(), "seed {seed} budget {budget:?}");
+        for (v, c) in expect.iter_rows() {
+            assert_eq!(got.get(&v).unwrap(), c, "seed {seed} budget {budget:?} {v:?}");
+        }
     }
 }
 

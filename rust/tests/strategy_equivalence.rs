@@ -3,13 +3,18 @@
 //! context they must return bit-identical complete ct-tables, equal to
 //! brute-force grounding enumeration.
 
+use relcount::bench::driver::{
+    run_coordinated_with, run_strategy, run_strategy_with, Workload,
+};
 use relcount::ct::cttable::CtTable;
 use relcount::ct::mobius::brute_force_complete;
 use relcount::datagen::{generator::generate, presets::preset};
 use relcount::db::catalog::Database;
 use relcount::db::fixtures::university_db;
 use relcount::lattice::Lattice;
+use relcount::learn::search::SearchConfig;
 use relcount::meta::rvar::RVar;
+use relcount::strategies::adaptive::Adaptive;
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
 
@@ -123,6 +128,132 @@ fn precount_serves_everything_by_projection_after_prepare() {
     }
     // no further joins: the definition of pre-counting
     assert_eq!(s.report().join_stats.chain_queries, joins_after_prepare);
+}
+
+/// The three reference budgets of the ADAPTIVE planner, paired with the
+/// fixed strategy each reproduces: 0 -> ONDEMAND (nothing pre-counted),
+/// the HYBRID-equivalent budget (marginals + all positives), and
+/// unlimited -> PRECOUNT (complete tables resident).
+fn reference_budgets(db: &Database) -> Vec<(Option<u64>, StrategyKind)> {
+    let hb = Adaptive::new(db, StrategyConfig::default())
+        .unwrap()
+        .plan()
+        .hybrid_budget();
+    vec![
+        (Some(0), StrategyKind::OnDemand),
+        (Some(hb), StrategyKind::Hybrid),
+        (None, StrategyKind::Precount),
+    ]
+}
+
+#[test]
+fn adaptive_cts_bit_identical_at_reference_budgets() {
+    let db = university_db();
+    let fams = families_of(&db, 3);
+    for (budget, twin) in reference_budgets(&db) {
+        let cfg = StrategyConfig { mem_budget: budget, ..Default::default() };
+        let mut adaptive = StrategyKind::Adaptive.build(&db, cfg).unwrap();
+        let mut fixed = twin.build(&db, StrategyConfig::default()).unwrap();
+        for (vars, ctx) in &fams {
+            let a = adaptive.ct_for_family(vars, ctx).unwrap();
+            let f = fixed.ct_for_family(vars, ctx).unwrap();
+            assert_tables_equal(&a, &f, &format!("budget {budget:?} {vars:?}"));
+        }
+        // the reference budgets reproduce the twins' counting workloads
+        let (a_rep, f_rep) = (adaptive.report(), fixed.report());
+        assert_eq!(
+            a_rep.join_stats.chain_queries, f_rep.join_stats.chain_queries,
+            "budget {budget:?} vs {}",
+            twin.name()
+        );
+    }
+}
+
+#[test]
+fn adaptive_cts_match_on_scaled_presets() {
+    for name in ["uw", "hepatitis"] {
+        let cfg = preset(name, 0.02, 42).unwrap();
+        let db = generate(&cfg).unwrap();
+        let fams = families_of(&db, 2);
+        let mut reference =
+            StrategyKind::Hybrid.build(&db, StrategyConfig::default()).unwrap();
+        for (budget, _) in reference_budgets(&db) {
+            let scfg = StrategyConfig { mem_budget: budget, ..Default::default() };
+            let mut adaptive = StrategyKind::Adaptive.build(&db, scfg).unwrap();
+            for (vars, ctx) in &fams {
+                let a = adaptive.ct_for_family(vars, ctx).unwrap();
+                let r = reference.ct_for_family(vars, ctx).unwrap();
+                assert_tables_equal(&a, &r, &format!("{name} {budget:?} {vars:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_learns_identical_models_and_bdeu_bits() {
+    let db = university_db();
+    let cfg = SearchConfig::default();
+    for (budget, twin) in reference_budgets(&db) {
+        let base = run_strategy(&db, "u", twin, Workload::Learn(cfg), None)
+            .unwrap()
+            .model
+            .unwrap();
+        let scfg = StrategyConfig {
+            mem_budget: budget,
+            max_chain_length: cfg.max_chain_length,
+            ..Default::default()
+        };
+        let m = run_strategy_with(&db, "u", StrategyKind::Adaptive, Workload::Learn(cfg), scfg)
+            .unwrap()
+            .model
+            .unwrap();
+        assert_eq!(m.bn.nodes, base.bn.nodes, "budget {budget:?}");
+        assert_eq!(m.bn.parents, base.bn.parents, "budget {budget:?}");
+        assert_eq!(
+            m.total_score.to_bits(),
+            base.total_score.to_bits(),
+            "budget {budget:?} vs {}: {} vs {}",
+            twin.name(),
+            m.total_score,
+            base.total_score
+        );
+    }
+}
+
+#[test]
+fn adaptive_budgets_bit_identical_under_four_workers() {
+    let db = university_db();
+    let cfg = SearchConfig::default();
+    for (budget, twin) in reference_budgets(&db) {
+        let base = run_strategy(&db, "u", twin, Workload::Learn(cfg), None)
+            .unwrap()
+            .model
+            .unwrap();
+        let scfg = StrategyConfig {
+            mem_budget: budget,
+            max_chain_length: cfg.max_chain_length,
+            ..Default::default()
+        };
+        let par = run_coordinated_with(
+            &db,
+            "u",
+            StrategyKind::Adaptive,
+            Workload::Learn(cfg),
+            scfg,
+            4,
+        )
+        .unwrap()
+        .model
+        .unwrap();
+        assert_eq!(par.bn.nodes, base.bn.nodes, "budget {budget:?} w=4");
+        assert_eq!(par.bn.parents, base.bn.parents, "budget {budget:?} w=4");
+        assert_eq!(
+            par.total_score.to_bits(),
+            base.total_score.to_bits(),
+            "budget {budget:?} w=4 vs {}",
+            twin.name()
+        );
+    }
 }
 
 #[test]

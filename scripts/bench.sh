@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Bench trajectory: run the coordinator scaling sweep and the ADAPTIVE
+# planner sweep on tiny presets and emit machine-readable JSON at the
+# repo root, so perf numbers accumulate across PRs.
+#
+#   scripts/bench.sh                       # writes BENCH_scaling.json,
+#                                          #        BENCH_planner.json
+#   RELCOUNT_SCALE=0.1 scripts/bench.sh    # heavier sweep
+#
+# Keep the defaults small: CI runs this on shared runners, and the goal
+# is a comparable trajectory, not absolute numbers.
+set -euo pipefail
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "bench.sh: ERROR: cargo not found on PATH." >&2
+    echo "bench.sh: install a Rust toolchain (rustup.rs) or run inside the CI image." >&2
+    exit 1
+fi
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+
+SCALE="${RELCOUNT_SCALE:-0.03}"
+PRESETS="${RELCOUNT_PRESETS:-uw,mondial}"
+BUDGET_S="${RELCOUNT_BUDGET_S:-120}"
+
+cargo build --release --quiet
+
+echo "== exp scaling (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp scaling \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --workers-list 1,2 --json "$ROOT/BENCH_scaling.json"
+
+echo "== exp planner (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp planner \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --json "$ROOT/BENCH_planner.json"
+
+echo "bench.sh: wrote BENCH_scaling.json and BENCH_planner.json"

@@ -1,12 +1,20 @@
 #!/usr/bin/env bash
 # Lint gate: run before the tier-1 suite (see EXPERIMENTS.md).
 #
-#   scripts/check.sh            # fmt --check + clippy -D warnings
+#   scripts/check.sh            # fmt --check + clippy -D warnings + rustdoc
 #   scripts/check.sh --fix      # apply rustfmt instead of checking
 #
-# The workspace root is rust/; doc builds must stay warning-free for the
-# coordinator module (rustdoc is part of its acceptance criteria).
+# The crate root is rust/; doc builds must stay warning-free (rustdoc is
+# part of the coordinator module's acceptance criteria).  CI runs this
+# script verbatim (.github/workflows/ci.yml), so it must fail loudly —
+# never silently succeed — when the toolchain is absent.
 set -euo pipefail
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "check.sh: ERROR: cargo not found on PATH." >&2
+    echo "check.sh: install a Rust toolchain (rustup.rs) or run inside the CI image." >&2
+    exit 1
+fi
 
 cd "$(dirname "$0")/../rust"
 
