@@ -8,11 +8,16 @@ use crate::bench::driver::{
     run_coordinated, run_coordinated_with, run_strategy, run_strategy_with,
     RunOutcome, Workload,
 };
+use crate::datagen::churn::churn_batch;
 use crate::datagen::generator::generate;
 use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
+use crate::delta::maintain::{MaintainConfig, MaintainedCounts};
+use crate::delta::policy::MaintenanceMode;
 use crate::error::Result;
 use crate::learn::search::SearchConfig;
-use crate::metrics::report::{PlannerRow, RunRow, ScalingRow, Table4Row, Table5Row};
+use crate::metrics::report::{
+    ChurnRow, PlannerRow, RunRow, ScalingRow, Table4Row, Table5Row,
+};
 use crate::strategies::adaptive::Adaptive;
 use crate::strategies::traits::StrategyConfig;
 use crate::strategies::StrategyKind;
@@ -275,6 +280,78 @@ pub fn planner_sweep_rows(cfg: &ExpConfig, workers: usize) -> Result<Vec<Planner
     Ok(rows)
 }
 
+/// The streaming-churn experiment (E10): on every preset of `cfg`,
+/// build a fully resident maintained cache state (`mem_budget: None` —
+/// complete tables included, the warm-serving regime), then stream one
+/// seeded churn batch per fraction in `fracs`, measuring the delta path
+/// against the invalidate-and-recount baseline on **identical** inputs
+/// (two clones of the same state, same batch).  Batches accumulate:
+/// fraction `k+1` churns the database fraction `k` produced, like a live
+/// deployment.  Digest equality between the two paths is asserted into
+/// the row (`consistent`), so every measurement doubles as a
+/// differential check.
+pub fn churn_rows(
+    cfg: &ExpConfig,
+    fracs: &[f64],
+    workers: usize,
+) -> Result<Vec<ChurnRow>> {
+    let workers = crate::coordinator::resolve_workers(workers);
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        let base = MaintainConfig {
+            mem_budget: None,
+            workers,
+            max_chain_length: cfg.search.max_chain_length,
+            ..Default::default()
+        };
+        let mut state = MaintainedCounts::build(db, base)?;
+        for (step, &frac) in fracs.iter().enumerate() {
+            let batch = churn_batch(state.db(), frac, cfg.seed ^ (step as u64 + 1));
+
+            let mut delta_state = state.clone();
+            delta_state.set_mode(MaintenanceMode::DeltaOnly);
+            let t0 = Instant::now();
+            let delta_rep = delta_state.apply(&batch)?;
+            let delta_wall = t0.elapsed();
+
+            let mut recount_state = state.clone();
+            // separate clone, forced to the invalidate-and-recount mode
+            recount_state.set_mode(MaintenanceMode::RecountOnly);
+            let t1 = Instant::now();
+            let recount_rep = recount_state.apply(&batch)?;
+            let recount_wall = t1.elapsed();
+
+            let consistent = delta_state.digest() == recount_state.digest();
+            rows.push(ChurnRow {
+                database: name.to_string(),
+                churn_frac: frac,
+                batch_ops: batch.len() as u64,
+                link_inserts: delta_rep.link_inserts,
+                link_deletes: delta_rep.link_deletes,
+                entity_inserts: delta_rep.entity_inserts,
+                delta: delta_wall,
+                recount: recount_wall,
+                speedup: if delta_wall.is_zero() {
+                    1.0
+                } else {
+                    recount_wall.as_secs_f64() / delta_wall.as_secs_f64()
+                },
+                points_delta_maintained: delta_rep.points_delta_maintained,
+                points_recounted: recount_rep.points_recounted,
+                cells_touched: delta_rep.cells_touched,
+                resident_bytes: delta_state.resident_bytes(),
+                digest: format!("{:016x}", delta_state.digest()),
+                consistent,
+                workers,
+            });
+            state = delta_state; // next fraction churns the mutated state
+        }
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,6 +441,27 @@ mod tests {
             assert_eq!(s.chain_queries, p.chain_queries);
             assert_eq!(s.ct_rows_generated, p.ct_rows_generated);
             assert_eq!(p.workers, 2);
+        }
+    }
+
+    #[test]
+    fn churn_rows_shapes_and_consistency() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = churn_rows(&cfg, &[0.02, 0.05], 1).unwrap();
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.batch_ops > 0, "{r:?}");
+            assert!(r.consistent, "delta and recount paths diverged: {r:?}");
+            assert_eq!(r.digest.len(), 16);
+            assert!(r.resident_bytes > 0);
+            assert!(r.speedup > 0.0);
+        }
+        // seeded determinism of the non-timing fields
+        let again = churn_rows(&cfg, &[0.02, 0.05], 1).unwrap();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.batch_ops, b.batch_ops);
+            assert_eq!(a.digest, b.digest);
+            assert_eq!(a.cells_touched, b.cells_touched);
         }
     }
 

@@ -112,19 +112,21 @@ impl CoordinatorReport {
 
 /// One family count served by a worker (or inline), with its timing and
 /// cost attribution — the unit merged back into the coordinator's state.
-struct ServedFamily {
-    ct: CtTable,
+/// Shared with the delta maintenance subsystem ([`crate::delta`]), whose
+/// maintained caches serve families through the same code path.
+pub(crate) struct ServedFamily {
+    pub(crate) ct: CtTable,
     /// Wall time inside positive-count calls (projection / joins).
-    positive: Duration,
+    pub(crate) positive: Duration,
     /// Remaining wall time (inclusion–exclusion).
-    negative: Duration,
-    stats: JoinStats,
+    pub(crate) negative: Duration,
+    pub(crate) stats: JoinStats,
     /// Rows to add to the Table-5 `ct_rows_generated` counter (zero for
     /// PRECOUNT projections, matching the sequential strategy).
-    fresh_rows: u64,
+    pub(crate) fresh_rows: u64,
     /// True when served by projection from a complete lattice table
     /// (PRECOUNT's cache-hit path).
-    projected: bool,
+    pub(crate) projected: bool,
 }
 
 /// A work-sharded execution layer serving complete ct-tables with the
@@ -472,7 +474,7 @@ fn worker_of_task(n_tasks: usize, assignment: &[Vec<usize>]) -> Vec<usize> {
 /// (parallel) serve, which is what makes worker counts interchangeable.
 /// `plan` is `Some` exactly for ADAPTIVE.
 #[allow(clippy::too_many_arguments)]
-fn serve_one(
+pub(crate) fn serve_one(
     db: &Database,
     lattice: &Lattice,
     positive: &CtCache,

@@ -148,6 +148,22 @@ impl CtTable {
         Ok(())
     }
 
+    /// Merge a delta table cell-wise (checked arithmetic; rows reaching
+    /// zero are dropped, so repeated insert/delete churn never leaves
+    /// tombstones).  Both tables must be over identical columns.
+    pub fn add_table(&mut self, delta: &CtTable) -> Result<()> {
+        if self.vars != delta.vars || self.dims != delta.dims {
+            return Err(Error::Ct(format!(
+                "add_table: column mismatch ({:?} vs {:?})",
+                self.vars, delta.vars
+            )));
+        }
+        for (k, c) in delta.iter_keys() {
+            self.add_key(k, c)?;
+        }
+        Ok(())
+    }
+
     /// Count for a value tuple (0 if absent).
     pub fn get(&self, values: &[u32]) -> Result<i128> {
         Ok(self.counts.get(&self.encode(values)?).copied().unwrap_or(0))
@@ -321,6 +337,24 @@ mod tests {
         assert_eq!(t.total().unwrap(), 51);
         t.scale(0).unwrap();
         assert_eq!(t.n_rows(), 0);
+    }
+
+    #[test]
+    fn add_table_merges_and_compacts() {
+        let mut a = table();
+        a.add(&[0, 0, 0], 5).unwrap();
+        a.add(&[1, 1, 1], 2).unwrap();
+        let mut d = table();
+        d.add(&[0, 0, 0], -5).unwrap(); // cancels to zero -> row dropped
+        d.add(&[1, 1, 1], 3).unwrap();
+        d.add(&[1, 2, 2], 7).unwrap();
+        a.add_table(&d).unwrap();
+        assert_eq!(a.n_rows(), 2);
+        assert_eq!(a.get(&[1, 1, 1]).unwrap(), 5);
+        assert_eq!(a.get(&[1, 2, 2]).unwrap(), 7);
+        // column mismatch rejected
+        let other = CtTable::with_dims(vec![RVar::RelInd { rel: 1 }], vec![2]).unwrap();
+        assert!(a.add_table(&other).is_err());
     }
 
     #[test]

@@ -54,6 +54,20 @@ pub fn g_subset(
     attr_vars: &[RVar],
     ctx_pops: &[usize],
 ) -> Result<CtTable> {
+    g_subset_inner(source, |_, _| None, t_rels, attr_vars, ctx_pops)
+}
+
+/// [`g_subset`] with a per-component override: `delta_for` may supply a
+/// component's positive table (the delta-Möbius feeds the *delta* of the
+/// one component touched by a tuple change; every other factor of the
+/// cross product is a current value read from `source`).
+fn g_subset_inner(
+    source: &mut dyn ChainSource,
+    mut delta_for: impl FnMut(&[usize], &[RVar]) -> Option<Result<CtTable>>,
+    t_rels: &[usize],
+    attr_vars: &[RVar],
+    ctx_pops: &[usize],
+) -> Result<CtTable> {
     let schema = source.schema().clone();
     // Split into connected components; each is a joinable chain.
     let comps = schema.connected_components(t_rels);
@@ -70,7 +84,10 @@ pub fn g_subset(
                 RVar::RelInd { .. } => false,
             })
             .collect();
-        let ct_c = source.positive_chain_ct(comp, &vars_c)?;
+        let ct_c = match delta_for(comp, &vars_c) {
+            Some(delta) => delta?,
+            None => source.positive_chain_ct(comp, &vars_c)?,
+        };
         acc = outer(&acc, &ct_c)?;
         covered_pops.extend(comp_pops);
     }
@@ -144,55 +161,82 @@ pub fn mobius_complete(
             .filter(|&i| mask & (1 << i) != 0)
             .map(|i| rels[i])
             .collect();
-        let sub_attr_vars: Vec<RVar> = attr_vars
-            .iter()
-            .copied()
-            .filter(|v| match v.rel() {
-                Some(r) => t_rels.contains(&r),
-                None => true,
-            })
-            .collect();
+        let sub_attr_vars = subset_attr_vars(&attr_vars, &t_rels);
         let gt = g_subset(source, &t_rels, &sub_attr_vars, ctx_pops)?;
-        // Map each row of gt into g's key space arithmetically: a constant
-        // offset for the fixed columns (indicators = T for rels in the
-        // subset, F otherwise; N/A for absent rel attrs) plus one
-        // (src stride, src dim, dst stride) digit move per copied column.
-        let mut base: u128 = 0;
-        let mut maps: Vec<(u128, u128, u128)> = Vec::new();
-        for (j, v) in vars.iter().enumerate() {
-            let dst = g.stride(j);
-            match v {
-                RVar::RelInd { rel } => {
-                    if t_rels.contains(rel) {
-                        base += dst;
-                    }
-                }
-                RVar::RelAttr { rel, .. } if !t_rels.contains(rel) => {} // N/A = 0
-                _ => {
-                    let sp = gt
-                        .vars
-                        .iter()
-                        .position(|w| w == v)
-                        .expect("attr present in subset table");
-                    maps.push((gt.stride(sp), gt.dims[sp] as u128, dst));
-                }
-            }
-        }
-        for (gk, count) in gt.iter_keys() {
-            let mut key = base;
-            for &(ss, sd, ds) in &maps {
-                key += ((gk / ss) % sd) * ds;
-            }
-            g.add_key(key, count)?;
-        }
+        scatter_subset(&mut g, &gt, &t_rels, vars)?;
     }
 
     // --- Stage 2: the butterfly, one pass per relationship axis. -------
-    // For each row in a true state of the axis (any of the rel's columns
-    // nonzero), subtract its count from the ⊥ projection.  The ⊥ key is
-    // computed arithmetically by zeroing the axis digits — no per-row
-    // decode or allocation (this is the ct- hot loop).
-    for &rel in &rels {
+    butterfly(&mut g, vars, &rels)?;
+
+    g.assert_counts_nonnegative()?;
+    Ok(g)
+}
+
+/// Attribute variables visible on subset `t_rels`: entity attributes
+/// always, rel attributes only for rels in the subset (absent rels are
+/// pinned to N/A by the scatter).
+fn subset_attr_vars(attr_vars: &[RVar], t_rels: &[usize]) -> Vec<RVar> {
+    attr_vars
+        .iter()
+        .copied()
+        .filter(|v| match v.rel() {
+            Some(r) => t_rels.contains(&r),
+            None => true,
+        })
+        .collect()
+}
+
+/// Scatter a subset's positive table `gt` into `g`'s key space
+/// arithmetically: a constant offset for the fixed columns (indicators =
+/// T for rels in the subset, F otherwise; N/A for absent rel attrs) plus
+/// one (src stride, src dim, dst stride) digit move per copied column.
+fn scatter_subset(
+    g: &mut CtTable,
+    gt: &CtTable,
+    t_rels: &[usize],
+    vars: &[RVar],
+) -> Result<()> {
+    let mut base: u128 = 0;
+    let mut maps: Vec<(u128, u128, u128)> = Vec::new();
+    for (j, v) in vars.iter().enumerate() {
+        let dst = g.stride(j);
+        match v {
+            RVar::RelInd { rel } => {
+                if t_rels.contains(rel) {
+                    base += dst;
+                }
+            }
+            RVar::RelAttr { rel, .. } if !t_rels.contains(rel) => {} // N/A = 0
+            _ => {
+                let sp = gt
+                    .vars
+                    .iter()
+                    .position(|w| w == v)
+                    .expect("attr present in subset table");
+                maps.push((gt.stride(sp), gt.dims[sp] as u128, dst));
+            }
+        }
+    }
+    for (gk, count) in gt.iter_keys() {
+        let mut key = base;
+        for &(ss, sd, ds) in &maps {
+            key += ((gk / ss) % sd) * ds;
+        }
+        g.add_key(key, count)?;
+    }
+    Ok(())
+}
+
+/// The inclusion–exclusion butterfly: for each relationship axis, every
+/// row in a true state of the axis (any of the rel's columns nonzero)
+/// subtracts its count from its ⊥ projection.  The ⊥ key is computed
+/// arithmetically by zeroing the axis digits — no per-row decode or
+/// allocation (this is the ct- hot loop).  The transform is linear in
+/// the stored rows, so it applies unchanged to sparse *delta* tables
+/// ([`mobius_delta`]), where it touches only the delta's rows.
+fn butterfly(g: &mut CtTable, vars: &[RVar], rels: &[usize]) -> Result<()> {
+    for &rel in rels {
         let axis: Vec<(u128, u128)> = vars
             .iter()
             .enumerate()
@@ -214,8 +258,85 @@ pub fn mobius_complete(
             g.add_key(k, delta)?;
         }
     }
+    Ok(())
+}
 
-    g.assert_counts_nonnegative()?;
+/// Delta-Möbius: the change of [`mobius_complete`]`(source, vars,
+/// ctx_pops)` caused by a single-tuple change of relationship
+/// `touched_rel`, given `delta_positive(chain, chain_vars)` = the
+/// positive-count delta of each chain containing the changed tuple (the
+/// join rows through that one tuple, signed by the caller).
+///
+/// Only subsets containing `touched_rel` contribute — every other
+/// subset's positives are unchanged — and within such a subset the
+/// cross product is `Δ(A × B) = ΔA × B`: the component containing the
+/// touched relationship comes from `delta_positive`, every other factor
+/// (components, marginals, population scalars) is a *current* value read
+/// from `source`.  The scatter and butterfly then run over the sparse
+/// delta rows only, which is what makes per-tuple cache maintenance
+/// cheap (re-deriving only the affected cells instead of re-running the
+/// full butterfly).
+///
+/// Populations must be unchanged by the tuple change (link churn only;
+/// entity inserts are handled separately — see
+/// [`crate::delta`]).  The result is a signed delta table: add it to the
+/// cached complete table with [`CtTable::add_table`].  Negative interim
+/// counts are expected and NOT rejected here; the maintained table is
+/// verified non-negative after application.
+pub fn mobius_delta(
+    source: &mut dyn ChainSource,
+    delta_positive: &mut dyn FnMut(&[usize], &[RVar]) -> Result<CtTable>,
+    touched_rel: usize,
+    vars: &[RVar],
+    ctx_pops: &[usize],
+) -> Result<CtTable> {
+    let schema = source.schema().clone();
+    for v in vars {
+        for p in v.populations(&schema) {
+            if !ctx_pops.contains(&p) {
+                return Err(Error::Ct(format!(
+                    "variable {v:?} population {p} outside context {ctx_pops:?}"
+                )));
+            }
+        }
+    }
+    let mut rels: Vec<usize> = vars.iter().filter_map(|v| v.rel()).collect();
+    rels.sort_unstable();
+    rels.dedup();
+    let k = rels.len();
+    if k > 30 {
+        return Err(Error::Ct(format!("{k} relationship axes is unsupported")));
+    }
+    let attr_vars: Vec<RVar> =
+        vars.iter().copied().filter(|v| !v.is_indicator()).collect();
+
+    let mut g = CtTable::new(&schema, vars.to_vec())?;
+    if !rels.contains(&touched_rel) {
+        return Ok(g); // the family does not involve the touched rel
+    }
+
+    for mask in 0..(1u32 << k) {
+        let t_rels: Vec<usize> = (0..k)
+            .filter(|&i| mask & (1 << i) != 0)
+            .map(|i| rels[i])
+            .collect();
+        if !t_rels.contains(&touched_rel) {
+            continue; // subset positives unchanged -> zero delta
+        }
+        let sub_attr_vars = subset_attr_vars(&attr_vars, &t_rels);
+        let gt = g_subset_inner(
+            source,
+            |comp, vars_c| {
+                comp.contains(&touched_rel).then(|| delta_positive(comp, vars_c))
+            },
+            &t_rels,
+            &sub_attr_vars,
+            ctx_pops,
+        )?;
+        scatter_subset(&mut g, &gt, &t_rels, vars)?;
+    }
+
+    butterfly(&mut g, vars, &rels)?;
     Ok(g)
 }
 
@@ -361,6 +482,63 @@ mod tests {
         let c = db.population(2) as i128;
         assert_eq!(big.get(&[0]).unwrap(), small.get(&[0]).unwrap() * c);
         assert_eq!(big.get(&[1]).unwrap(), small.get(&[1]).unwrap() * c);
+    }
+
+    #[test]
+    fn mobius_delta_matches_recompute_difference() {
+        use crate::db::query::positive_chain_delta_ct;
+        // ΔG from mobius_delta for one inserted tuple must equal
+        // G(after) - G(before) from two full Möbius runs.
+        let db = university_db();
+        let vars = vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::RelInd { rel: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ];
+        let ctx = vec![0usize, 1, 2];
+        let before = {
+            let mut src = DirectSource::new(&db);
+            mobius_complete(&mut src, &vars, &ctx).unwrap()
+        };
+        let mut db2 = db.clone();
+        // (11, 0) is not an RA pair in the fixture (i % 12 == 11 -> i in
+        // {11, 23}, whose i % 19 are 11 and 4)
+        let tid = db2.insert_link(0, 11, 0, &[2, 1]).unwrap();
+        let after = {
+            let mut src = DirectSource::new(&db2);
+            mobius_complete(&mut src, &vars, &ctx).unwrap()
+        };
+        let mut src = DirectSource::new(&db2);
+        let mut stats = crate::db::query::JoinStats::default();
+        let delta = mobius_delta(
+            &mut src,
+            &mut |chain, cvars| {
+                positive_chain_delta_ct(&db2, chain, cvars, 0, tid, &mut stats)
+            },
+            0,
+            &vars,
+            &ctx,
+        )
+        .unwrap();
+        let mut patched = before.clone();
+        patched.add_table(&delta).unwrap();
+        assert_eq!(patched.n_rows(), after.n_rows());
+        for (v, c) in after.iter_rows() {
+            assert_eq!(patched.get(&v).unwrap(), c, "{v:?}");
+        }
+        // a family not involving the touched rel sees a zero delta
+        let other = vec![RVar::RelInd { rel: 1 }];
+        let mut src2 = DirectSource::new(&db2);
+        let z = mobius_delta(
+            &mut src2,
+            &mut |_, _| unreachable!("no subset contains rel 0"),
+            0,
+            &other,
+            &[1, 2],
+        )
+        .unwrap();
+        assert_eq!(z.n_rows(), 0);
     }
 
     #[test]

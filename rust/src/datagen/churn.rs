@@ -1,0 +1,132 @@
+//! Seeded churn workloads: random, valid insert/delete sequences over a
+//! generated database, for the delta maintenance experiments
+//! (`relcount exp churn`, `benches/delta_churn.rs`) and the differential
+//! tests.
+//!
+//! A churn batch of fraction `f` holds `max(1, round(f * total links))`
+//! ops: alternating deletes of existing tuples and inserts of fresh
+//! pairs (set semantics respected against a simulated mirror of the
+//! tables, so the batch always applies cleanly in order), with an
+//! occasional entity insert to exercise population growth.  Everything
+//! is drawn from the in-tree seeded [`Rng`], so `(db, frac, seed)`
+//! always yields the identical batch.
+
+use crate::db::catalog::Database;
+use crate::db::index::pair_key;
+use crate::delta::batch::{DeltaBatch, DeltaOp};
+use crate::util::fxhash::FxHashSet;
+use crate::util::rng::Rng;
+
+/// Generate one seeded churn batch over the current state of `db`.
+/// `frac` is the op count as a fraction of the database's link rows.
+pub fn churn_batch(db: &Database, frac: f64, seed: u64) -> DeltaBatch {
+    let mut rng = Rng::new(seed ^ 0xC0DE_D017);
+    let schema = &db.schema;
+    let n_rels = schema.relationships.len();
+
+    // Mirror of the live pairs per relationship, kept in sync with the
+    // ops we emit so every op is valid when applied in order.
+    let mut pairs: Vec<Vec<(u32, u32)>> = Vec::with_capacity(n_rels);
+    let mut present: Vec<FxHashSet<u64>> = Vec::with_capacity(n_rels);
+    for rel in 0..n_rels {
+        let t = &db.rels[rel];
+        let mut list = Vec::with_capacity(t.len() as usize);
+        let mut set = FxHashSet::default();
+        for i in 0..t.len() {
+            let (f, o) = (t.from[i as usize], t.to[i as usize]);
+            list.push((f, o));
+            set.insert(pair_key(f, o));
+        }
+        pairs.push(list);
+        present.push(set);
+    }
+    let mut pops: Vec<u32> = (0..schema.entities.len())
+        .map(|et| db.entities[et].len())
+        .collect();
+
+    let total_links: u64 = db.rels.iter().map(|t| t.len() as u64).sum();
+    let n_ops = ((total_links as f64 * frac).round() as u64).max(1);
+
+    let mut ops = Vec::with_capacity(n_ops as usize);
+    for i in 0..n_ops {
+        // occasional entity insert (population growth; fresh entities
+        // become link targets for later inserts)
+        if n_ops >= 8 && i % 16 == 7 {
+            let et = rng.gen_range(schema.entities.len() as u64) as usize;
+            let values: Vec<u32> = schema.entities[et]
+                .attrs
+                .iter()
+                .map(|a| rng.gen_u32(a.card))
+                .collect();
+            pops[et] += 1;
+            ops.push(DeltaOp::InsertEntity { et, values });
+            continue;
+        }
+        let rel = rng.gen_range(n_rels as u64) as usize;
+        let delete = i % 2 == 1 && !pairs[rel].is_empty();
+        if delete {
+            let j = rng.gen_range(pairs[rel].len() as u64) as usize;
+            let (from, to) = pairs[rel].swap_remove(j);
+            present[rel].remove(&pair_key(from, to));
+            ops.push(DeltaOp::DeleteLink { rel, from, to });
+        } else {
+            let (fe, te) = schema.rel_endpoints(rel);
+            let (nf, nt) = (pops[fe] as u64, pops[te] as u64);
+            if nf == 0 || nt == 0 {
+                continue;
+            }
+            // rejection-sample a fresh pair (bounded tries; dense
+            // relations may occasionally yield a shorter batch)
+            let mut found = None;
+            for _ in 0..64 {
+                let f = rng.gen_range(nf) as u32;
+                let t = rng.gen_range(nt) as u32;
+                if !present[rel].contains(&pair_key(f, t)) {
+                    found = Some((f, t));
+                    break;
+                }
+            }
+            let Some((from, to)) = found else { continue };
+            let values: Vec<u32> = schema.relationships[rel]
+                .attrs
+                .iter()
+                .map(|a| rng.gen_u32(a.card))
+                .collect();
+            pairs[rel].push((from, to));
+            present[rel].insert(pair_key(from, to));
+            ops.push(DeltaOp::InsertLink { rel, from, to, values });
+        }
+    }
+    DeltaBatch::new(ops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::delta::maintain::{MaintainConfig, MaintainedCounts};
+
+    #[test]
+    fn batches_are_seeded_and_sized() {
+        let db = university_db();
+        let a = churn_batch(&db, 0.2, 7);
+        let b = churn_batch(&db, 0.2, 7);
+        assert_eq!(a, b);
+        let c = churn_batch(&db, 0.2, 8);
+        assert_ne!(a, c);
+        let total: u64 = db.rels.iter().map(|t| t.len() as u64).sum();
+        assert!(a.len() as u64 <= (total as f64 * 0.2).round() as u64 + 1);
+        assert!(!a.is_empty());
+    }
+
+    #[test]
+    fn batches_apply_cleanly() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        for step in 0..3u64 {
+            let batch = churn_batch(m.db(), 0.15, 100 + step);
+            let rep = m.apply(&batch).unwrap();
+            assert_eq!(rep.ops_applied, batch.len() as u64);
+        }
+    }
+}

@@ -8,10 +8,12 @@
 //! densities.  Attribute values carry injected dependencies so structure
 //! learning has real signal (Table 4's MP/N column).
 
+pub mod churn;
 pub mod config;
 pub mod generator;
 pub mod presets;
 
+pub use churn::churn_batch;
 pub use config::{EntitySpec, GenConfig, RelSpec};
 pub use generator::generate;
 pub use presets::{preset, PRESET_NAMES};

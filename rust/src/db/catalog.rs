@@ -81,6 +81,130 @@ impl Database {
         self.indexes = None;
     }
 
+    /// Append an entity of type `et`, maintaining the indexes of its
+    /// incident relationships (their adjacency lists grow by one empty
+    /// slot).  Returns the new entity id.
+    pub fn insert_entity(&mut self, et: usize, values: &[Code]) -> Result<u32> {
+        let ety = self
+            .schema
+            .entities
+            .get(et)
+            .ok_or_else(|| Error::Data(format!("bad entity type {et}")))?;
+        if values.len() != ety.attrs.len() {
+            return Err(Error::Data(format!(
+                "entity row arity {} != {}",
+                values.len(),
+                ety.attrs.len()
+            )));
+        }
+        for (a, &v) in values.iter().enumerate() {
+            if v >= ety.attrs[a].card {
+                return Err(Error::Data(format!(
+                    "{}.{} value {v} out of range 0..{}",
+                    ety.name, ety.attrs[a].name, ety.attrs[a].card
+                )));
+            }
+        }
+        let id = self.entities[et].push(values)?;
+        if let Some(ixs) = self.indexes.as_mut() {
+            for (rel, ix) in ixs.iter_mut().enumerate() {
+                let (f, o) = self.schema.rel_endpoints(rel);
+                if f == et || o == et {
+                    ix.grow(self.entities[f].len(), self.entities[o].len());
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Append a relationship tuple, maintaining `rel`'s index.  Rejects
+    /// out-of-range endpoints/values and duplicate pairs (set semantics).
+    /// Returns the new tuple id.
+    pub fn insert_link(
+        &mut self,
+        rel: usize,
+        from: u32,
+        to: u32,
+        values: &[Code],
+    ) -> Result<u32> {
+        let rty = self
+            .schema
+            .relationships
+            .get(rel)
+            .ok_or_else(|| Error::Data(format!("bad relationship {rel}")))?;
+        let (fe, te) = (rty.from, rty.to);
+        if from >= self.entities[fe].len() || to >= self.entities[te].len() {
+            return Err(Error::Data(format!(
+                "rel tuple ({from},{to}) out of population range ({},{})",
+                self.entities[fe].len(),
+                self.entities[te].len()
+            )));
+        }
+        if values.len() != rty.attrs.len() {
+            return Err(Error::Data(format!(
+                "rel row arity {} != {}",
+                values.len(),
+                rty.attrs.len()
+            )));
+        }
+        for (a, &v) in values.iter().enumerate() {
+            if v >= rty.attrs[a].card {
+                return Err(Error::Data(format!(
+                    "{}.{} value {v} out of range 0..{}",
+                    rty.name, rty.attrs[a].name, rty.attrs[a].card
+                )));
+            }
+        }
+        let duplicate = match self.indexes.as_ref() {
+            Some(ixs) => ixs[rel].lookup(from, to).is_some(),
+            None => {
+                let t = &self.rels[rel];
+                (0..t.len()).any(|i| {
+                    t.from[i as usize] == from && t.to[i as usize] == to
+                })
+            }
+        };
+        if duplicate {
+            return Err(Error::Data(format!(
+                "duplicate relationship pair ({from},{to})"
+            )));
+        }
+        let id = self.rels[rel].push(from, to, values)?;
+        if let Some(ixs) = self.indexes.as_mut() {
+            ixs[rel].insert(from, to, id)?;
+        }
+        Ok(id)
+    }
+
+    /// Remove the relationship tuple `(from, to)` of `rel` (swap-remove:
+    /// the last tuple takes its id), maintaining `rel`'s index.  Returns
+    /// the removed tuple's attribute values.
+    pub fn delete_link(&mut self, rel: usize, from: u32, to: u32) -> Result<Vec<Code>> {
+        if rel >= self.rels.len() {
+            return Err(Error::Data(format!("bad relationship {rel}")));
+        }
+        let t = match self.indexes.as_ref() {
+            Some(ixs) => ixs[rel].lookup(from, to),
+            None => {
+                let tab = &self.rels[rel];
+                (0..tab.len()).find(|&i| {
+                    tab.from[i as usize] == from && tab.to[i as usize] == to
+                })
+            }
+        }
+        .ok_or_else(|| {
+            Error::Data(format!("no relationship tuple ({from},{to}) to delete"))
+        })?;
+        let last = self.rels[rel].len() - 1;
+        let (last_from, last_to) =
+            (self.rels[rel].from[last as usize], self.rels[rel].to[last as usize]);
+        let values = self.rels[rel].swap_remove(t)?;
+        if let Some(ixs) = self.indexes.as_mut() {
+            ixs[rel].remove_swap(from, to, t, last, last_from, last_to)?;
+        }
+        Ok(values)
+    }
+
     /// Population size of an entity type.
     pub fn population(&self, et: usize) -> u64 {
         self.entities[et].len() as u64
@@ -140,6 +264,43 @@ mod tests {
         for i in 0..t.len() {
             assert_eq!(ix.lookup(t.from[i as usize], t.to[i as usize]), Some(i));
         }
+    }
+
+    #[test]
+    fn incremental_mutation_matches_rebuild() {
+        let mut db = fixtures::university_db();
+        // insert a fresh link ((0, 4) is not a Registered pair in the
+        // fixture: (0 + 2*4) % 3 != 0), delete an existing one, add an
+        // entity
+        let id = db.insert_link(1, 0, 4, &[1]).unwrap();
+        assert_eq!(db.index(1).unwrap().lookup(0, 4), Some(id));
+        let removed = db.delete_link(0, 0, 0).unwrap();
+        assert_eq!(removed.len(), 2);
+        assert!(db.delete_link(0, 0, 0).is_err());
+        let pid = db.insert_entity(0, &[2]).unwrap();
+        assert_eq!(pid, 12);
+        assert!(db.insert_link(0, pid, 0, &[0, 0]).is_ok());
+
+        // the incrementally maintained db validates, and its indexes
+        // agree with a from-scratch rebuild
+        db.validate().unwrap();
+        let fresh =
+            Database::new(db.schema.clone(), db.entities.clone(), db.rels.clone())
+                .unwrap();
+        for rel in 0..db.rels.len() {
+            assert_eq!(db.index(rel).unwrap().pair, fresh.index(rel).unwrap().pair);
+        }
+    }
+
+    #[test]
+    fn mutators_reject_bad_input() {
+        let mut db = fixtures::university_db();
+        assert!(db.insert_entity(9, &[0]).is_err());
+        assert!(db.insert_entity(0, &[9]).is_err()); // card
+        assert!(db.insert_link(0, 0, 999, &[0, 0]).is_err());
+        assert!(db.insert_link(0, 0, 0, &[0, 0]).is_err()); // duplicate pair
+        assert!(db.insert_link(0, 1, 0, &[9, 0]).is_err()); // bad value
+        assert!(db.delete_link(0, 11, 18).is_err()); // absent pair
     }
 
     #[test]

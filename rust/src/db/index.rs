@@ -55,6 +55,84 @@ impl RelIndex {
         self.pair.get(&pair_key(from, to)).copied()
     }
 
+    /// Extend the adjacency lists to cover grown endpoint populations
+    /// (entity inserts; existing entries are untouched).
+    pub fn grow(&mut self, n_from: u32, n_to: u32) {
+        if self.by_from.len() < n_from as usize {
+            self.by_from.resize(n_from as usize, Vec::new());
+        }
+        if self.by_to.len() < n_to as usize {
+            self.by_to.resize(n_to as usize, Vec::new());
+        }
+    }
+
+    /// Register a freshly appended tuple `t = (from, to)` (incremental
+    /// counterpart of [`RelIndex::build`]; duplicate pairs are rejected
+    /// before any structure is touched).
+    pub fn insert(&mut self, from: u32, to: u32, t: u32) -> Result<()> {
+        if from as usize >= self.by_from.len() || to as usize >= self.by_to.len() {
+            return Err(Error::Data(format!(
+                "rel tuple ({from},{to}) out of population range ({},{})",
+                self.by_from.len(),
+                self.by_to.len()
+            )));
+        }
+        if self.pair.contains_key(&pair_key(from, to)) {
+            return Err(Error::Data(format!(
+                "duplicate relationship pair ({from},{to})"
+            )));
+        }
+        self.pair.insert(pair_key(from, to), t);
+        self.by_from[from as usize].push(t);
+        self.by_to[to as usize].push(t);
+        Ok(())
+    }
+
+    /// Unregister tuple `t = (from, to)` after a
+    /// [`crate::db::table::RelTable::swap_remove`]: the tuple formerly
+    /// holding id `last` (endpoints `last_from`, `last_to`) has been
+    /// relabeled to `t`, so its index entries move too.  When `t ==
+    /// last` (the removed tuple was the last row) nothing is relabeled.
+    pub fn remove_swap(
+        &mut self,
+        from: u32,
+        to: u32,
+        t: u32,
+        last: u32,
+        last_from: u32,
+        last_to: u32,
+    ) -> Result<()> {
+        match self.pair.remove(&pair_key(from, to)) {
+            Some(id) if id == t => {}
+            _ => {
+                return Err(Error::Data(format!(
+                    "index out of sync removing ({from},{to}) id {t}"
+                )))
+            }
+        }
+        let drop_id = |list: &mut Vec<u32>, id: u32| {
+            if let Some(p) = list.iter().position(|&x| x == id) {
+                list.swap_remove(p);
+            }
+        };
+        drop_id(&mut self.by_from[from as usize], t);
+        drop_id(&mut self.by_to[to as usize], t);
+        if t != last {
+            // relabel the moved tuple: last -> t
+            if let Some(id) = self.pair.get_mut(&pair_key(last_from, last_to)) {
+                *id = t;
+            }
+            let relabel = |list: &mut Vec<u32>| {
+                if let Some(p) = list.iter().position(|&x| x == last) {
+                    list[p] = t;
+                }
+            };
+            relabel(&mut self.by_from[last_from as usize]);
+            relabel(&mut self.by_to[last_to as usize]);
+        }
+        Ok(())
+    }
+
     /// Approximate heap footprint in bytes.
     pub fn bytes(&self) -> usize {
         let adj: usize = self
@@ -82,6 +160,58 @@ mod tests {
         assert_eq!(ix.by_to[1], vec![0, 2]);
         assert_eq!(ix.lookup(0, 2), Some(1));
         assert_eq!(ix.lookup(1, 2), None);
+    }
+
+    #[test]
+    fn incremental_insert_and_remove_match_rebuild() {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 2, &[]).unwrap();
+        t.push(1, 1, &[]).unwrap();
+        let mut ix = RelIndex::build(&t, 2, 3).unwrap();
+
+        // insert a new tuple incrementally
+        let id = t.push(1, 2, &[]).unwrap();
+        ix.insert(1, 2, id).unwrap();
+        assert_eq!(ix.lookup(1, 2), Some(3));
+        assert!(ix.insert(1, 2, 9).is_err()); // duplicate pair
+
+        // remove tuple 1 = (0,2); the last tuple (1,2) takes id 1
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(1).unwrap();
+        ix.remove_swap(0, 2, 1, last, lf, lt).unwrap();
+        assert_eq!(ix.lookup(0, 2), None);
+        assert_eq!(ix.lookup(1, 2), Some(1));
+
+        // the maintained index matches a from-scratch rebuild (as sets)
+        let fresh = RelIndex::build(&t, 2, 3).unwrap();
+        assert_eq!(ix.pair, fresh.pair);
+        for f in 0..2usize {
+            let mut a = ix.by_from[f].clone();
+            let mut b = fresh.by_from[f].clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "by_from[{f}]");
+        }
+        for o in 0..3usize {
+            let mut a = ix.by_to[o].clone();
+            let mut b = fresh.by_to[o].clone();
+            a.sort_unstable();
+            b.sort_unstable();
+            assert_eq!(a, b, "by_to[{o}]");
+        }
+    }
+
+    #[test]
+    fn grow_extends_adjacency() {
+        let t = RelTable::new(0);
+        let mut ix = RelIndex::build(&t, 1, 1).unwrap();
+        ix.grow(3, 2);
+        assert_eq!(ix.by_from.len(), 3);
+        assert_eq!(ix.by_to.len(), 2);
+        ix.insert(2, 1, 0).unwrap();
+        assert_eq!(ix.lookup(2, 1), Some(0));
     }
 
     #[test]

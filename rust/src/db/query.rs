@@ -82,6 +82,44 @@ pub fn positive_chain_ct(
     vars: &[RVar],
     stats: &mut JoinStats,
 ) -> Result<CtTable> {
+    chain_ct_bound(db, chain, vars, None, stats)
+}
+
+/// The positive-count **delta** of one tuple: GROUP-BY counts over
+/// exactly the join rows of `chain` that use tuple `tuple` of `rel`.
+/// Equals `positive_chain_ct(after) - positive_chain_ct(before)` for an
+/// insert of that tuple (all other tables fixed), and the negation of
+/// the same for a delete evaluated while the tuple still exists.  The
+/// delta maintenance subsystem ([`crate::delta`]) applies these, signed,
+/// to the resident lattice caches instead of re-joining.
+pub fn positive_chain_delta_ct(
+    db: &Database,
+    chain: &[usize],
+    vars: &[RVar],
+    rel: usize,
+    tuple: u32,
+    stats: &mut JoinStats,
+) -> Result<CtTable> {
+    if !chain.contains(&rel) {
+        return Err(Error::Ct(format!(
+            "delta rel {rel} not in chain {chain:?}"
+        )));
+    }
+    chain_ct_bound(db, chain, vars, Some((rel, tuple)), stats)
+}
+
+/// Shared core of [`positive_chain_ct`] / [`positive_chain_delta_ct`]:
+/// when `bound` is set, the enumeration starts with that relationship's
+/// endpoints pinned to the given tuple, so only join rows through it are
+/// visited (the join reaches the pinned rel fully bound and the pair
+/// lookup confirms the single tuple).
+fn chain_ct_bound(
+    db: &Database,
+    chain: &[usize],
+    vars: &[RVar],
+    bound: Option<(usize, u32)>,
+    stats: &mut JoinStats,
+) -> Result<CtTable> {
     let plan = plan_chain(db, chain)?;
     for v in vars {
         let ok = match v {
@@ -130,6 +168,18 @@ pub fn positive_chain_ct(
 
     let n_ets = db.schema.entities.len();
     let mut binding: Vec<Option<u32>> = vec![None; n_ets];
+    if let Some((rel, tuple)) = bound {
+        let t = &db.rels[rel];
+        if tuple >= t.len() {
+            return Err(Error::Ct(format!(
+                "delta tuple {tuple} out of range 0..{}",
+                t.len()
+            )));
+        }
+        let (a, b) = db.schema.rel_endpoints(rel);
+        binding[a] = Some(t.from[tuple as usize]);
+        binding[b] = Some(t.to[tuple as usize]);
+    }
     // tuple id bound for each rel of the chain (indexed by join position)
     let mut tuples: Vec<u32> = vec![0; plan.join_order.len()];
     let mut rows = 0u64;
@@ -323,6 +373,43 @@ mod tests {
         for (vals, _) in ct.iter_rows() {
             assert!(vals[1] >= 1);
         }
+    }
+
+    #[test]
+    fn tuple_deltas_sum_to_full_positive_ct() {
+        // summing the per-tuple deltas over every tuple of a rel must
+        // reproduce the full chain count (each join row uses exactly one
+        // tuple of each rel in the chain)
+        let db = university_db();
+        let vars = vec![
+            RVar::EntityAttr { et: 1, attr: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+        ];
+        for chain in [vec![0usize], vec![0, 1]] {
+            let mut stats = JoinStats::default();
+            let full = positive_chain_ct(&db, &chain, &vars, &mut stats).unwrap();
+            let mut acc =
+                crate::ct::cttable::CtTable::new(&db.schema, vars.clone()).unwrap();
+            for t in 0..db.rels[0].len() {
+                let d = positive_chain_delta_ct(&db, &chain, &vars, 0, t, &mut stats)
+                    .unwrap();
+                acc.add_table(&d).unwrap();
+            }
+            assert_eq!(acc.n_rows(), full.n_rows(), "chain {chain:?}");
+            for (v, c) in full.iter_rows() {
+                assert_eq!(acc.get(&v).unwrap(), c, "chain {chain:?} {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_rejects_rel_outside_chain() {
+        let db = university_db();
+        let mut stats = JoinStats::default();
+        assert!(positive_chain_delta_ct(&db, &[1], &[], 0, 0, &mut stats).is_err());
+        assert!(
+            positive_chain_delta_ct(&db, &[0], &[], 0, 999, &mut stats).is_err()
+        );
     }
 
     #[test]

@@ -131,6 +131,25 @@ impl RelTable {
         self.cols[a][t as usize]
     }
 
+    /// Remove tuple `t` by swapping the last tuple into its slot
+    /// (tombstone-free: ids stay dense, so indexes relabel the moved
+    /// tuple instead of tracking holes).  Returns the removed tuple's
+    /// attribute values.  The caller owns index maintenance — see
+    /// [`crate::db::catalog::Database::delete_link`].
+    pub fn swap_remove(&mut self, t: u32) -> Result<Vec<Code>> {
+        let i = t as usize;
+        if i >= self.from.len() {
+            return Err(Error::Data(format!(
+                "swap_remove({t}) out of range 0..{}",
+                self.from.len()
+            )));
+        }
+        self.from.swap_remove(i);
+        self.to.swap_remove(i);
+        let values = self.cols.iter_mut().map(|c| c.swap_remove(i)).collect();
+        Ok(values)
+    }
+
     pub fn validate(&self, schema: &Schema, rt: usize) -> Result<()> {
         let rty = &schema.relationships[rt];
         if self.cols.len() != rty.attrs.len() {
@@ -217,6 +236,24 @@ mod tests {
         t.validate(&s, 0).unwrap();
         assert_eq!(t.len(), 2);
         assert_eq!(t.value(0, 0), 2);
+    }
+
+    #[test]
+    fn rel_swap_remove_moves_last() {
+        let mut t = RelTable::new(1);
+        t.push(0, 0, &[0]).unwrap();
+        t.push(1, 0, &[1]).unwrap();
+        t.push(1, 1, &[2]).unwrap();
+        let removed = t.swap_remove(0).unwrap();
+        assert_eq!(removed, vec![0]);
+        assert_eq!(t.len(), 2);
+        // the former last tuple (1,1) now owns id 0
+        assert_eq!((t.from[0], t.to[0]), (1, 1));
+        assert_eq!(t.value(0, 0), 2);
+        // removing the last tuple moves nothing
+        t.swap_remove(1).unwrap();
+        assert_eq!(t.len(), 1);
+        assert!(t.swap_remove(5).is_err());
     }
 
     #[test]

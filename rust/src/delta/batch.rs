@@ -1,0 +1,227 @@
+//! Delta batches: the unit of streaming mutation.
+//!
+//! A [`DeltaBatch`] is an ordered list of fact-level mutations — link
+//! inserts, link deletes, entity inserts — applied to a
+//! [`crate::delta::MaintainedCounts`].  Ops apply in list order; a batch
+//! whose ops touch distinct `(rel, from, to)` pairs is order-independent
+//! (asserted by `rust/tests/proptest_invariants.rs`).  A batch either
+//! applies in full or **poisons** the maintained state: a mid-batch
+//! error (e.g. deleting an absent pair) leaves earlier ops applied to
+//! the database but pending cache work undone, so `MaintainedCounts`
+//! refuses further use after an `apply` error — validate batches (or
+//! rebuild on error) rather than relying on partial application.
+//!
+//! Entity *deletion* is intentionally outside the delta language:
+//! removing an entity shrinks a population, which rescales every
+//! complete count that ranges over it and cascades through incident
+//! links — a rebuild, not a delta.  (Qian et al.'s cross-product
+//! derivation, like ours, treats populations as stable dimensions.)
+//!
+//! The JSON wire format (for `relcount apply --deltas FILE`) is an array
+//! of op objects:
+//!
+//! ```json
+//! [
+//!   {"op": "insert_link", "rel": 0, "from": 3, "to": 7, "values": [1, 0]},
+//!   {"op": "delete_link", "rel": 0, "from": 2, "to": 5},
+//!   {"op": "insert_entity", "et": 1, "values": [2]}
+//! ]
+//! ```
+
+use crate::db::value::Code;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One fact-level mutation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DeltaOp {
+    /// Insert a relationship tuple (pair must be absent: set semantics).
+    InsertLink { rel: usize, from: u32, to: u32, values: Vec<Code> },
+    /// Retract a relationship tuple (pair must be present).
+    DeleteLink { rel: usize, from: u32, to: u32 },
+    /// Append a new entity; the id is assigned on application.  The new
+    /// entity starts with no incident links (link it with later ops).
+    InsertEntity { et: usize, values: Vec<Code> },
+}
+
+impl DeltaOp {
+    /// The relationship this op mutates, if any.
+    pub fn rel(&self) -> Option<usize> {
+        match self {
+            DeltaOp::InsertLink { rel, .. } | DeltaOp::DeleteLink { rel, .. } => {
+                Some(*rel)
+            }
+            DeltaOp::InsertEntity { .. } => None,
+        }
+    }
+}
+
+/// An ordered batch of mutations.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DeltaBatch {
+    pub ops: Vec<DeltaOp>,
+}
+
+impl DeltaBatch {
+    pub fn new(ops: Vec<DeltaOp>) -> Self {
+        DeltaBatch { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Number of link ops (inserts + deletes) touching `rel`.
+    pub fn link_ops_on(&self, rel: usize) -> u64 {
+        self.ops.iter().filter(|op| op.rel() == Some(rel)).count() as u64
+    }
+
+    /// Parse the JSON wire format.
+    pub fn parse_json(text: &str) -> Result<DeltaBatch> {
+        let json = Json::parse(text)?;
+        let arr = json
+            .as_arr()
+            .ok_or_else(|| Error::Data("delta file: expected a JSON array".into()))?;
+        let mut ops = Vec::with_capacity(arr.len());
+        for (i, item) in arr.iter().enumerate() {
+            ops.push(parse_op(item).map_err(|e| {
+                Error::Data(format!("delta file: op {i}: {e}"))
+            })?);
+        }
+        Ok(DeltaBatch { ops })
+    }
+
+    /// Load a batch from a file in the JSON wire format.
+    pub fn from_file(path: &std::path::Path) -> Result<DeltaBatch> {
+        Self::parse_json(&std::fs::read_to_string(path)?)
+    }
+
+    /// Emit the JSON wire format.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.ops.iter().map(op_to_json).collect())
+    }
+}
+
+fn values_of(j: &Json) -> Result<Vec<Code>> {
+    match j.get("values") {
+        None => Ok(Vec::new()),
+        Some(v) => v
+            .as_arr()
+            .ok_or_else(|| Error::Data("`values` must be an array".into()))?
+            .iter()
+            .map(|x| {
+                x.as_usize()
+                    .map(|n| n as Code)
+                    .ok_or_else(|| Error::Data("`values` entries must be integers".into()))
+            })
+            .collect(),
+    }
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Data(format!("`{key}` must be a non-negative integer")))
+}
+
+fn parse_op(j: &Json) -> Result<DeltaOp> {
+    let op = j
+        .req("op")?
+        .as_str()
+        .ok_or_else(|| Error::Data("`op` must be a string".into()))?;
+    match op {
+        "insert_link" => Ok(DeltaOp::InsertLink {
+            rel: field_usize(j, "rel")?,
+            from: field_usize(j, "from")? as u32,
+            to: field_usize(j, "to")? as u32,
+            values: values_of(j)?,
+        }),
+        "delete_link" => Ok(DeltaOp::DeleteLink {
+            rel: field_usize(j, "rel")?,
+            from: field_usize(j, "from")? as u32,
+            to: field_usize(j, "to")? as u32,
+        }),
+        "insert_entity" => Ok(DeltaOp::InsertEntity {
+            et: field_usize(j, "et")?,
+            values: values_of(j)?,
+        }),
+        other => Err(Error::Data(format!(
+            "unknown op {other:?} (insert_link | delete_link | insert_entity)"
+        ))),
+    }
+}
+
+fn op_to_json(op: &DeltaOp) -> Json {
+    let vals = |values: &[Code]| {
+        Json::Arr(values.iter().map(|&v| Json::num(v as f64)).collect())
+    };
+    match op {
+        DeltaOp::InsertLink { rel, from, to, values } => Json::obj(vec![
+            ("op", Json::str("insert_link")),
+            ("rel", Json::num(*rel as f64)),
+            ("from", Json::num(*from as f64)),
+            ("to", Json::num(*to as f64)),
+            ("values", vals(values)),
+        ]),
+        DeltaOp::DeleteLink { rel, from, to } => Json::obj(vec![
+            ("op", Json::str("delete_link")),
+            ("rel", Json::num(*rel as f64)),
+            ("from", Json::num(*from as f64)),
+            ("to", Json::num(*to as f64)),
+        ]),
+        DeltaOp::InsertEntity { et, values } => Json::obj(vec![
+            ("op", Json::str("insert_entity")),
+            ("et", Json::num(*et as f64)),
+            ("values", vals(values)),
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch() -> DeltaBatch {
+        DeltaBatch::new(vec![
+            DeltaOp::InsertLink { rel: 0, from: 3, to: 7, values: vec![1, 0] },
+            DeltaOp::DeleteLink { rel: 1, from: 2, to: 5 },
+            DeltaOp::InsertEntity { et: 1, values: vec![2] },
+        ])
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let b = batch();
+        let text = b.to_json().dump();
+        let back = DeltaBatch::parse_json(&text).unwrap();
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn link_op_counting() {
+        let b = batch();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.link_ops_on(0), 1);
+        assert_eq!(b.link_ops_on(1), 1);
+        assert_eq!(b.link_ops_on(2), 0);
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        assert!(DeltaBatch::parse_json("{}").is_err());
+        assert!(DeltaBatch::parse_json(r#"[{"op":"drop_table"}]"#).is_err());
+        assert!(DeltaBatch::parse_json(r#"[{"op":"insert_link","rel":0}]"#).is_err());
+        assert!(
+            DeltaBatch::parse_json(r#"[{"op":"insert_link","rel":0,"from":1,"to":2,"values":["x"]}]"#)
+                .is_err()
+        );
+        // values may be omitted for attribute-less relationships
+        let ok = DeltaBatch::parse_json(r#"[{"op":"delete_link","rel":0,"from":1,"to":2}]"#)
+            .unwrap();
+        assert_eq!(ok.len(), 1);
+    }
+}

@@ -1,0 +1,959 @@
+//! The maintained counting state: a database plus resident lattice
+//! caches that stay **exact** under streaming mutation.
+//!
+//! [`MaintainedCounts`] owns the [`Database`] and the same cache levels
+//! the ADAPTIVE strategy plans ([`CountPlan`]): entity marginals,
+//! positive ct-tables per lattice point, and complete ct-tables for the
+//! complete-planned points.  [`MaintainedCounts::apply`] propagates a
+//! [`DeltaBatch`] through every level:
+//!
+//! - **tables + indexes**: incremental push / swap-remove with in-place
+//!   index maintenance ([`Database::insert_link`] & friends);
+//! - **positive ct-tables**: one bound join enumeration per (op,
+//!   touched point) — the rows through the changed tuple
+//!   ([`crate::db::query::positive_chain_delta_ct`]) — applied signed;
+//! - **entity marginals**: one row added per entity insert;
+//! - **complete ct-tables**: delta-Möbius
+//!   ([`crate::ct::mobius::mobius_delta`]) for link churn, and the
+//!   population-slice projection for entity inserts (the new entity has
+//!   no links yet, so its slice is the point's sub-complete table — the
+//!   cached complete projected and divided by the old population — at
+//!   the new entity's attribute values with incident axes at ⊥).
+//!
+//! Per batch, a [`DeltaPolicy`] decides per point whether deltas beat
+//! invalidate-and-recount (using the ADAPTIVE sampling estimator);
+//! recount-flagged points sit out the per-op loop as *stale* — no delta
+//! computation may read them — and are re-joined once at the end.
+//! Per-op point work and end-of-batch recounts are sharded across the
+//! coordinator's worker pool exactly like counting tasks and merged in
+//! task order, so the maintained caches are **bit-identical for every
+//! worker count** and to a from-scratch rebuild
+//! (`rust/tests/delta_equivalence.rs`).
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::parallel::serve_one;
+use crate::coordinator::pool;
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::{mobius_complete, mobius_delta, ChainSource};
+use crate::ct::project::project;
+use crate::db::catalog::Database;
+use crate::db::query::{
+    groupby_entity, positive_chain_ct, positive_chain_delta_ct, JoinStats,
+};
+use crate::db::schema::Schema;
+use crate::db::value::Code;
+use crate::delta::batch::{DeltaBatch, DeltaOp};
+use crate::delta::policy::{DeltaPolicy, MaintenanceDecision, MaintenanceMode};
+use crate::error::{Error, Result};
+use crate::estimate::plan::CountPlan;
+use crate::estimate::sampler::EstimatorConfig;
+use crate::lattice::Lattice;
+use crate::learn::search::{learn, LearnedModel, SearchConfig};
+use crate::meta::extract::vars_for_entity;
+use crate::meta::rvar::RVar;
+use crate::metrics::timing::PhaseTimer;
+use crate::strategies::adaptive::Adaptive;
+use crate::strategies::cache::CtCache;
+use crate::strategies::common::{
+    entity_key, lp_key, run_positive_task, LatticeCtx, PositiveTask,
+};
+use crate::strategies::precount::Precount;
+use crate::strategies::traits::{CountingStrategy, StrategyReport};
+use crate::strategies::StrategyKind;
+use crate::util::fxhash::{FxHasher, FxHashSet};
+
+/// Configuration of a [`MaintainedCounts`].
+#[derive(Clone, Copy, Debug)]
+pub struct MaintainConfig {
+    /// Maximum relationship-chain length of the maintained lattice.
+    pub max_chain_length: usize,
+    /// Which tables stay resident, via the ADAPTIVE planner: `None` =
+    /// everything complete (PRECOUNT-level residency), the hybrid budget
+    /// = positives only, `Some(0)` = nothing resident (pure
+    /// post-counting; deltas are db-only).
+    pub mem_budget: Option<u64>,
+    /// The cardinality estimator config shared by the residency plan and
+    /// the per-batch delta-vs-recount policy.
+    pub estimator: EstimatorConfig,
+    /// Worker count for per-op point deltas and end-of-batch recounts
+    /// (sharded like counting tasks; 1 = sequential).
+    pub workers: usize,
+    /// Delta-vs-recount decision mode.
+    pub mode: MaintenanceMode,
+    /// Verify maintained tables after each batch (non-negative counts;
+    /// complete totals equal the population product).  Cheap relative to
+    /// churn workloads; disable for raw throughput measurement.
+    pub verify: bool,
+}
+
+impl Default for MaintainConfig {
+    fn default() -> Self {
+        MaintainConfig {
+            max_chain_length: 3,
+            mem_budget: None,
+            estimator: EstimatorConfig::default(),
+            workers: 1,
+            mode: MaintenanceMode::Auto,
+            verify: true,
+        }
+    }
+}
+
+/// Counters of one [`MaintainedCounts::apply`] call (merge across
+/// batches with [`DeltaReport::merge`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaReport {
+    pub ops_applied: u64,
+    pub link_inserts: u64,
+    pub link_deletes: u64,
+    pub entity_inserts: u64,
+    /// Distinct resident points updated through the delta path.
+    pub points_delta_maintained: u64,
+    /// Distinct resident points invalidated and re-joined.
+    pub points_recounted: u64,
+    /// Delta-table rows applied across all resident caches.
+    pub cells_touched: u64,
+    pub join_stats: JoinStats,
+    pub elapsed: Duration,
+}
+
+impl DeltaReport {
+    pub fn merge(&mut self, other: &DeltaReport) {
+        self.ops_applied += other.ops_applied;
+        self.link_inserts += other.link_inserts;
+        self.link_deletes += other.link_deletes;
+        self.entity_inserts += other.entity_inserts;
+        self.points_delta_maintained += other.points_delta_maintained;
+        self.points_recounted += other.points_recounted;
+        self.cells_touched += other.cells_touched;
+        self.join_stats.merge(&other.join_stats);
+        self.elapsed += other.elapsed;
+    }
+}
+
+/// A [`ChainSource`] over the maintained caches that refuses to read
+/// *stale* (recount-deferred) points: their cached positives lag the
+/// database mid-batch, so reads fall back to fresh joins instead.
+struct MaintSource<'a> {
+    db: &'a Database,
+    lattice: &'a Lattice,
+    plan: &'a CountPlan,
+    cache: &'a CtCache,
+    stale: &'a [bool],
+    stats: JoinStats,
+}
+
+impl ChainSource for MaintSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        if let Some(p) = self.lattice.point(chain) {
+            if self.plan.positive_planned(p.id) && !self.stale[p.id] {
+                if let Some(full) =
+                    self.cache.peek(&lp_key(&p.rels, &p.attr_vars, &p.pops))
+                {
+                    return project(full, vars);
+                }
+            }
+        }
+        positive_chain_ct(self.db, chain, vars, &mut self.stats)
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        if self.plan.marginals {
+            if let Some(full) = self.cache.peek(&entity_key(et)) {
+                return project(full, vars);
+            }
+        }
+        self.stats.entity_queries += 1;
+        groupby_entity(self.db, et, vars)
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.db.schema
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.db.population(et) as i128
+    }
+}
+
+/// One point's signed cache deltas for a single link op.
+struct PointDelta {
+    id: usize,
+    positive: CtTable,
+    complete: Option<CtTable>,
+    stats: JoinStats,
+}
+
+/// Compute one point's deltas for the tuple `tid` of `rel` (sign −1 for
+/// a delete, evaluated while the tuple exists).  Read-only over shared
+/// state, so it runs identically inline or on a pool worker.
+#[allow(clippy::too_many_arguments)]
+fn compute_link_delta(
+    db: &Database,
+    lattice: &Lattice,
+    plan: &CountPlan,
+    positive: &CtCache,
+    stale: &[bool],
+    rel: usize,
+    tid: u32,
+    sign: i128,
+    id: usize,
+) -> Result<PointDelta> {
+    let p = &lattice.points[id];
+    let mut stats = JoinStats::default();
+    let mut dpos =
+        positive_chain_delta_ct(db, &p.rels, &p.attr_vars, rel, tid, &mut stats)?;
+    if sign < 0 {
+        dpos.scale(-1)?;
+    }
+    let dcmp = if plan.complete_planned(id) {
+        let vars = p.all_vars();
+        let mut src = MaintSource {
+            db,
+            lattice,
+            plan,
+            cache: positive,
+            stale,
+            stats: JoinStats::default(),
+        };
+        let mut dg = mobius_delta(
+            &mut src,
+            &mut |chain, cvars| {
+                positive_chain_delta_ct(db, chain, cvars, rel, tid, &mut stats)
+            },
+            rel,
+            &vars,
+            &p.pops,
+        )?;
+        stats.merge(&src.stats);
+        if sign < 0 {
+            dg.scale(-1)?;
+        }
+        Some(dg)
+    } else {
+        None
+    };
+    Ok(PointDelta { id, positive: dpos, complete: dcmp, stats })
+}
+
+/// Database + resident caches, kept exact under mutation.
+#[derive(Clone)]
+pub struct MaintainedCounts {
+    db: Database,
+    ctx: LatticeCtx,
+    plan: CountPlan,
+    cfg: MaintainConfig,
+    /// Planned positive lattice ct-tables + entity marginals (same keys
+    /// as the strategies': [`lp_key`] / [`entity_key`]).
+    positive: CtCache,
+    /// Planned complete lattice ct-tables ([`Precount::complete_key`]).
+    complete: CtCache,
+    /// Per-point cost estimates, computed once (per-op sharding reuses
+    /// them instead of rebuilding the vector on every mutation).
+    point_costs: Vec<u64>,
+    /// Cumulative query counters (build + maintenance + serving).
+    join_stats: JoinStats,
+    /// Set when a batch failed mid-application: the database holds the
+    /// batch's earlier ops but pending cache work never ran, so every
+    /// entry point refuses further use (rebuild to recover).
+    poisoned: bool,
+}
+
+impl MaintainedCounts {
+    /// Take ownership of `db` (indexes are built if absent), plan the
+    /// residency with the ADAPTIVE planner, and build the planned tables
+    /// — sharded over [`MaintainConfig::workers`].
+    pub fn build(mut db: Database, cfg: MaintainConfig) -> Result<MaintainedCounts> {
+        if !db.has_indexes() {
+            db.build_indexes()?;
+        }
+        let mut cfg = cfg;
+        cfg.workers = crate::coordinator::resolve_workers(cfg.workers);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(&db, cfg.max_chain_length, &mut timer)?;
+        let plan = CountPlan::build(&db, &ctx.lattice, cfg.estimator, cfg.mem_budget)?;
+        let point_costs = ctx.lattice.point_costs();
+        let mut m = MaintainedCounts {
+            db,
+            ctx,
+            plan,
+            cfg,
+            positive: CtCache::new(),
+            complete: CtCache::new(),
+            point_costs,
+            join_stats: JoinStats::default(),
+            poisoned: false,
+        };
+        let all_fresh = vec![false; m.ctx.lattice.len()];
+        m.recount_positive(&[], true)?;
+        let cmp_ids = Adaptive::planned_complete_points(&m.plan);
+        m.recount_complete(&cmp_ids, &all_fresh)?;
+        Ok(m)
+    }
+
+    pub fn db(&self) -> &Database {
+        &self.db
+    }
+
+    pub fn plan(&self) -> &CountPlan {
+        &self.plan
+    }
+
+    pub fn lattice(&self) -> &Lattice {
+        &self.ctx.lattice
+    }
+
+    /// Exact bytes held in the maintained caches.
+    pub fn resident_bytes(&self) -> usize {
+        self.positive.bytes() + self.complete.bytes()
+    }
+
+    /// Override the delta-vs-recount decision mode (the churn experiment
+    /// pits a `DeltaOnly` clone against a `RecountOnly` clone of the
+    /// same state).
+    pub fn set_mode(&mut self, mode: MaintenanceMode) {
+        self.cfg.mode = mode;
+    }
+
+    /// Apply one batch: mutate the database and keep every resident
+    /// table exact (see the module docs for the data flow).
+    ///
+    /// On error the state is **poisoned**: the database may hold the
+    /// batch's earlier ops while deferred cache work (stale-point
+    /// recounts) never ran, so all further use of this instance errors
+    /// — rebuild from the tables to recover.  This keeps a failed batch
+    /// from silently serving stale counts.
+    pub fn apply(&mut self, batch: &DeltaBatch) -> Result<DeltaReport> {
+        self.check_poisoned()?;
+        match self.apply_inner(batch) {
+            Ok(report) => Ok(report),
+            Err(e) => {
+                self.poisoned = true;
+                Err(e)
+            }
+        }
+    }
+
+    fn check_poisoned(&self) -> Result<()> {
+        if self.poisoned {
+            return Err(Error::Strategy(
+                "maintained counts poisoned by a failed delta batch; \
+                 rebuild from the database tables"
+                    .into(),
+            ));
+        }
+        Ok(())
+    }
+
+    fn apply_inner(&mut self, batch: &DeltaBatch) -> Result<DeltaReport> {
+        let t0 = Instant::now();
+        let policy = DeltaPolicy::decide(
+            &self.db,
+            &self.ctx.lattice,
+            &self.plan,
+            self.cfg.estimator,
+            batch,
+            self.cfg.mode,
+        )?;
+        let mut stale: Vec<bool> = policy
+            .per_point
+            .iter()
+            .map(|d| *d == MaintenanceDecision::Recount)
+            .collect();
+
+        let mut report = DeltaReport::default();
+        let mut delta_points: FxHashSet<usize> = FxHashSet::default();
+        let cells_before = self.positive.cells_deltaed + self.complete.cells_deltaed;
+        let stats_before = self.join_stats;
+
+        for op in &batch.ops {
+            match op {
+                DeltaOp::InsertLink { rel, from, to, values } => {
+                    let tid = self.db.insert_link(*rel, *from, *to, values)?;
+                    self.link_delta(*rel, tid, 1, &stale, &mut delta_points)?;
+                    report.link_inserts += 1;
+                }
+                DeltaOp::DeleteLink { rel, from, to } => {
+                    let tid = self
+                        .db
+                        .index(*rel)?
+                        .lookup(*from, *to)
+                        .ok_or_else(|| {
+                            Error::Data(format!(
+                                "no relationship tuple ({from},{to}) to delete"
+                            ))
+                        })?;
+                    // deltas first, while the tuple still exists
+                    self.link_delta(*rel, tid, -1, &stale, &mut delta_points)?;
+                    self.db.delete_link(*rel, *from, *to)?;
+                    report.link_deletes += 1;
+                }
+                DeltaOp::InsertEntity { et, values } => {
+                    self.entity_insert_delta(*et, values, &mut stale, &mut delta_points)?;
+                    self.db.insert_entity(*et, values)?;
+                    report.entity_inserts += 1;
+                }
+            }
+            report.ops_applied += 1;
+        }
+
+        // Invalidate-and-recount the stale points, positives first so
+        // the complete Möbius reads fresh projections.
+        let pos_ids: Vec<usize> = (0..stale.len())
+            .filter(|&id| stale[id] && self.plan.positive_planned(id))
+            .collect();
+        self.recount_positive(&pos_ids, false)?;
+        let all_fresh = vec![false; stale.len()];
+        let cmp_ids: Vec<usize> = (0..stale.len())
+            .filter(|&id| stale[id] && self.plan.complete_planned(id))
+            .collect();
+        self.recount_complete(&cmp_ids, &all_fresh)?;
+        report.points_recounted = pos_ids.len() as u64;
+        report.points_delta_maintained = delta_points.len() as u64;
+        report.cells_touched =
+            self.positive.cells_deltaed + self.complete.cells_deltaed - cells_before;
+
+        if self.cfg.verify {
+            let touched: Vec<usize> =
+                delta_points.iter().copied().chain(pos_ids.iter().copied()).collect();
+            self.verify_points(&touched)?;
+        }
+        report.join_stats = JoinStats {
+            chain_queries: self.join_stats.chain_queries - stats_before.chain_queries,
+            join_steps: self.join_stats.join_steps - stats_before.join_steps,
+            rows_enumerated: self.join_stats.rows_enumerated
+                - stats_before.rows_enumerated,
+            entity_queries: self.join_stats.entity_queries - stats_before.entity_queries,
+        };
+        report.elapsed = t0.elapsed();
+        Ok(report)
+    }
+
+    /// Per-op maintenance: compute the signed join-row delta (and
+    /// delta-Möbius when a complete table is resident) for every
+    /// delta-maintained point touching `rel`, then merge in point-id
+    /// order.  With several workers *and* several touched points the
+    /// computations shard like counting tasks; otherwise they run
+    /// inline (no pool setup on the per-op hot path — thread scopes are
+    /// far costlier than a small point's bound join).  The database
+    /// must already hold the tuple (`tid` valid) — insert before,
+    /// delete after.
+    fn link_delta(
+        &mut self,
+        rel: usize,
+        tid: u32,
+        sign: i128,
+        stale: &[bool],
+        delta_points: &mut FxHashSet<usize>,
+    ) -> Result<()> {
+        let ids: Vec<usize> = self
+            .ctx
+            .lattice
+            .points
+            .iter()
+            .filter(|p| {
+                p.rels.contains(&rel) && self.plan.positive_planned(p.id) && !stale[p.id]
+            })
+            .map(|p| p.id)
+            .collect();
+        if ids.is_empty() {
+            return Ok(());
+        }
+
+        let db = &self.db;
+        let lattice = &self.ctx.lattice;
+        let plan = &self.plan;
+        let positive = &self.positive;
+        let results: Vec<Result<PointDelta>> =
+            if self.cfg.workers > 1 && ids.len() > 1 {
+                let costs: Vec<u64> =
+                    ids.iter().map(|&id| self.point_costs[id]).collect();
+                let assignment = crate::coordinator::shard::lpt_partition(
+                    &costs,
+                    self.cfg.workers,
+                );
+                pool::run_shards(&ids, &assignment, |_, &id| {
+                    compute_link_delta(db, lattice, plan, positive, stale, rel, tid, sign, id)
+                })
+                .results
+            } else {
+                ids.iter()
+                    .map(|&id| {
+                        compute_link_delta(
+                            db, lattice, plan, positive, stale, rel, tid, sign, id,
+                        )
+                    })
+                    .collect()
+            };
+
+        for r in results {
+            let d = r?;
+            let p = &self.ctx.lattice.points[d.id];
+            self.positive.apply_delta(&lp_key(&p.rels, &p.attr_vars, &p.pops), &d.positive)?;
+            if let Some(dg) = d.complete {
+                self.complete.apply_delta(&Precount::complete_key(p), &dg)?;
+            }
+            self.join_stats.merge(&d.stats);
+            delta_points.insert(d.id);
+        }
+        Ok(())
+    }
+
+    /// Entity-insert maintenance, applied *before* the database mutation
+    /// (`n_old` is the pre-insert population).  Positive chain tables
+    /// are untouched — a fresh entity has no links, so no join row
+    /// involves it.  The marginal gains one row; each resident complete
+    /// table over the population gains the new entity's slice, derived
+    /// from the cached table itself: `project(G, other vars) / n_old`
+    /// scattered at the new attribute values with incident axes at ⊥.
+    /// An empty population has no table to project from — those points
+    /// flip to recount.
+    fn entity_insert_delta(
+        &mut self,
+        et: usize,
+        values: &[Code],
+        stale: &mut [bool],
+        delta_points: &mut FxHashSet<usize>,
+    ) -> Result<()> {
+        let schema = self.db.schema.clone();
+        if et >= schema.entities.len() {
+            return Err(Error::Data(format!("bad entity type {et}")));
+        }
+        if self.plan.marginals {
+            let vars = vars_for_entity(&schema, et);
+            let mut row = CtTable::new(&schema, vars)?;
+            row.add(values, 1)?;
+            self.positive.apply_delta(&entity_key(et), &row)?;
+        }
+        let n_old = self.db.population(et);
+        let incident = |rel: usize| {
+            let (a, b) = schema.rel_endpoints(rel);
+            a == et || b == et
+        };
+        for id in 0..self.ctx.lattice.len() {
+            if !self.plan.complete_planned(id) || stale[id] {
+                continue;
+            }
+            let p = self.ctx.lattice.points[id].clone();
+            if !p.pops.contains(&et) {
+                continue;
+            }
+            if n_old == 0 {
+                stale[id] = true; // no slice to derive from; re-join later
+                continue;
+            }
+            let vars = p.all_vars();
+            let subvars: Vec<RVar> = vars
+                .iter()
+                .copied()
+                .filter(|v| match v {
+                    RVar::EntityAttr { et: e, .. } => *e != et,
+                    RVar::RelInd { rel } | RVar::RelAttr { rel, .. } => !incident(*rel),
+                })
+                .collect();
+            let key = Precount::complete_key(&p);
+            let full = self.complete.peek(&key).ok_or_else(|| {
+                Error::Strategy("complete ct missing from maintained cache".into())
+            })?;
+            let mut sub = project(full, &subvars)?;
+            sub.divide_exact(n_old as i128)?;
+            // scatter the slice into the full key space: new attribute
+            // values fixed, incident indicators F / rel attrs N/A (= 0)
+            let mut dg = CtTable::new(&schema, vars.clone())?;
+            let mut base: u128 = 0;
+            let mut maps: Vec<(u128, u128, u128)> = Vec::new();
+            for (j, v) in vars.iter().enumerate() {
+                let dst = dg.stride(j);
+                match v {
+                    RVar::EntityAttr { et: e, attr } if *e == et => {
+                        let val = *values.get(*attr).ok_or_else(|| {
+                            Error::Data(format!("entity row arity < attr {attr}"))
+                        })?;
+                        base += val as u128 * dst;
+                    }
+                    RVar::RelInd { rel } | RVar::RelAttr { rel, .. }
+                        if incident(*rel) => {} // ⊥ / N/A = 0
+                    _ => {
+                        let sp = sub.var_pos(v)?;
+                        maps.push((sub.stride(sp), sub.dims[sp] as u128, dst));
+                    }
+                }
+            }
+            for (k, c) in sub.iter_keys() {
+                let mut keyv = base;
+                for &(ss, sd, ds) in &maps {
+                    keyv += ((k / ss) % sd) * ds;
+                }
+                dg.add_key(keyv, c)?;
+            }
+            self.complete.apply_delta(&key, &dg)?;
+            delta_points.insert(id);
+        }
+        Ok(())
+    }
+
+    /// Re-join the positive tables of `ids` (sharded, merged in task
+    /// order).  `initial` marks the build-time fill, which also fills
+    /// the entity marginals.
+    fn recount_positive(&mut self, ids: &[usize], initial: bool) -> Result<()> {
+        let tasks: Vec<PositiveTask> = if initial {
+            Adaptive::planned_positive_tasks(&self.db, &self.plan)
+        } else {
+            ids.iter().map(|&id| PositiveTask::Point(id)).collect()
+        };
+        if tasks.is_empty() {
+            return Ok(());
+        }
+        let costs: Vec<u64> = tasks
+            .iter()
+            .map(|t| match *t {
+                PositiveTask::Entity(et) => self.db.entities[et].len() as u64,
+                PositiveTask::Point(id) => self.point_costs[id],
+            })
+            .collect();
+        let assignment =
+            crate::coordinator::shard::lpt_partition(&costs, self.cfg.workers.max(1));
+        let db = &self.db;
+        let ctx = &self.ctx;
+        let run = pool::run_shards(&tasks, &assignment, |_, &task| {
+            let mut stats = JoinStats::default();
+            let out = run_positive_task(db, ctx, task, &mut stats)?;
+            Ok((out, stats))
+        });
+        for r in run.results {
+            let ((key, table), stats) = r?;
+            self.join_stats.merge(&stats);
+            self.positive.insert(key, table);
+        }
+        Ok(())
+    }
+
+    /// Re-run the per-point Möbius for `ids` over the (fresh) positive
+    /// cache (sharded, merged in task order).
+    fn recount_complete(&mut self, ids: &[usize], stale: &[bool]) -> Result<()> {
+        if ids.is_empty() {
+            return Ok(());
+        }
+        let costs: Vec<u64> = ids.iter().map(|&id| self.point_costs[id]).collect();
+        let assignment =
+            crate::coordinator::shard::lpt_partition(&costs, self.cfg.workers.max(1));
+        let db = &self.db;
+        let lattice = &self.ctx.lattice;
+        let plan = &self.plan;
+        let positive = &self.positive;
+        let run = pool::run_shards(ids, &assignment, |_, &id| {
+            let p = &lattice.points[id];
+            let mut src = MaintSource {
+                db,
+                lattice,
+                plan,
+                cache: positive,
+                stale,
+                stats: JoinStats::default(),
+            };
+            let ct = mobius_complete(&mut src, &p.all_vars(), &p.pops)?;
+            Ok((id, ct, src.stats))
+        });
+        for r in run.results {
+            let (id, ct, stats) = r?;
+            self.join_stats.merge(&stats);
+            let p = &self.ctx.lattice.points[id];
+            self.complete.insert(Precount::complete_key(p), ct);
+        }
+        Ok(())
+    }
+
+    /// Post-batch invariants on the touched points: counts stay
+    /// non-negative everywhere, and complete totals equal the (current)
+    /// population product — a delta bug fails loudly here, not in a
+    /// downstream score.
+    fn verify_points(&self, ids: &[usize]) -> Result<()> {
+        for &id in ids {
+            let p = &self.ctx.lattice.points[id];
+            if self.plan.positive_planned(id) {
+                if let Some(t) = self.positive.peek(&lp_key(&p.rels, &p.attr_vars, &p.pops))
+                {
+                    t.assert_counts_nonnegative()?;
+                }
+            }
+            if self.plan.complete_planned(id) {
+                if let Some(t) = self.complete.peek(&Precount::complete_key(p)) {
+                    t.assert_counts_nonnegative()?;
+                    let want: i128 =
+                        p.pops.iter().map(|&e| self.db.population(e) as i128).product();
+                    let got = t.total()?;
+                    if got != want {
+                        return Err(Error::Ct(format!(
+                            "maintained complete ct for point {:?} totals {got}, \
+                             population product is {want}",
+                            p.rels
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serve one family's complete ct-table from the maintained caches —
+    /// the identical code path the parallel coordinator's ADAPTIVE mode
+    /// uses, so maintained serving is bit-identical to a fresh strategy
+    /// over the same data.
+    pub fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        self.check_poisoned()?;
+        let served = serve_one(
+            &self.db,
+            &self.ctx.lattice,
+            &self.positive,
+            &self.complete,
+            StrategyKind::Adaptive,
+            Some(&self.plan),
+            vars,
+            ctx_pops,
+        )?;
+        self.join_stats.merge(&served.stats);
+        Ok(served.ct)
+    }
+
+    /// Structure learning over the maintained caches (counts come from
+    /// [`MaintainedCounts::ct_for_family`]; identical counts give
+    /// bit-identical models and BDeu scores to any fresh strategy).
+    pub fn learn(&mut self, cfg: SearchConfig) -> Result<LearnedModel> {
+        let db = self.db.clone();
+        let mut view = MaintainedStrategy { inner: self };
+        learn(&db, &mut view, cfg)
+    }
+
+    /// Deterministic digest of every resident table (keys and rows in
+    /// sorted order) — the churn experiment's cross-run/bit-identity
+    /// witness.
+    pub fn digest(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = FxHasher::default();
+        for (tag, cache) in [(0u8, &self.positive), (1u8, &self.complete)] {
+            let mut entries: Vec<_> = cache.iter().collect();
+            entries.sort_by(|a, b| a.0.cmp(b.0));
+            for (key, t) in entries {
+                tag.hash(&mut h);
+                key.hash(&mut h);
+                let mut rows: Vec<(u128, i128)> = t.iter_keys().collect();
+                rows.sort_unstable();
+                for (k, c) in rows {
+                    k.hash(&mut h);
+                    c.hash(&mut h);
+                }
+            }
+        }
+        h.finish()
+    }
+}
+
+/// [`CountingStrategy`] view over a [`MaintainedCounts`], so the learner
+/// and the differential tests drive maintained counts through the same
+/// interface as the fresh strategies.
+pub struct MaintainedStrategy<'a> {
+    pub inner: &'a mut MaintainedCounts,
+}
+
+impl CountingStrategy for MaintainedStrategy<'_> {
+    fn name(&self) -> &'static str {
+        "MAINTAINED"
+    }
+
+    fn prepare(&mut self) -> Result<()> {
+        Ok(()) // the maintained caches are always ready
+    }
+
+    fn ct_for_family(&mut self, vars: &[RVar], ctx_pops: &[usize]) -> Result<CtTable> {
+        self.inner.ct_for_family(vars, ctx_pops)
+    }
+
+    fn report(&self) -> StrategyReport {
+        StrategyReport {
+            name: "MAINTAINED".into(),
+            join_stats: self.inner.join_stats,
+            cache_bytes: self.inner.resident_bytes(),
+            planned_positive: self.inner.plan.planned_positive_count(),
+            planned_complete: self.inner.plan.planned_complete_count(),
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::mobius::brute_force_complete;
+    use crate::db::fixtures::university_db;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    #[test]
+    fn build_matches_fresh_counts() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db.clone(), MaintainConfig::default()).unwrap();
+        let ct = m.ct_for_family(&family(), &[0, 1]).unwrap();
+        let brute = brute_force_complete(&db, &family(), &[0, 1]).unwrap();
+        assert_eq!(ct.n_rows(), brute.n_rows());
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c);
+        }
+    }
+
+    #[test]
+    fn link_churn_stays_exact() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 },
+            DeltaOp::InsertLink { rel: 0, from: 11, to: 0, values: vec![2, 1] },
+            DeltaOp::InsertLink { rel: 1, from: 1, to: 0, values: vec![3] },
+        ]);
+        let rep = m.apply(&batch).unwrap();
+        assert_eq!(rep.ops_applied, 3);
+        assert_eq!(rep.link_inserts, 2);
+        assert_eq!(rep.link_deletes, 1);
+        assert!(rep.cells_touched > 0);
+        // maintained serving equals brute force over the mutated data
+        let brute = brute_force_complete(m.db(), &family(), &[0, 1]).unwrap();
+        let ct = m.ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(ct.n_rows(), brute.n_rows());
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn entity_insert_slice_is_exact() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::InsertEntity { et: 1, values: vec![2] },
+            DeltaOp::InsertLink { rel: 0, from: 3, to: 19, values: vec![0, 2] },
+        ]);
+        let rep = m.apply(&batch).unwrap();
+        assert_eq!(rep.entity_inserts, 1);
+        assert_eq!(m.db().population(1), 20);
+        let brute = brute_force_complete(m.db(), &family(), &[0, 1]).unwrap();
+        let ct = m.ct_for_family(&family(), &[0, 1]).unwrap();
+        for (v, c) in brute.iter_rows() {
+            assert_eq!(ct.get(&v).unwrap(), c, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn delete_then_reinsert_roundtrips_digest() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        let d0 = m.digest();
+        m.apply(&DeltaBatch::new(vec![DeltaOp::DeleteLink {
+            rel: 0,
+            from: 0,
+            to: 0,
+        }]))
+        .unwrap();
+        assert_ne!(m.digest(), d0);
+        // the fixture's (0,0) RA tuple carries capability 4-1=3, salary HIGH
+        m.apply(&DeltaBatch::new(vec![DeltaOp::InsertLink {
+            rel: 0,
+            from: 0,
+            to: 0,
+            values: vec![3, 2],
+        }]))
+        .unwrap();
+        assert_eq!(m.digest(), d0);
+    }
+
+    #[test]
+    fn workers_are_interchangeable() {
+        let db = university_db();
+        let mut a = MaintainedCounts::build(
+            db.clone(),
+            MaintainConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut b = MaintainedCounts::build(
+            db,
+            MaintainConfig { workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(a.digest(), b.digest());
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::DeleteLink { rel: 0, from: 1, to: 1 },
+            DeltaOp::InsertLink { rel: 0, from: 1, to: 2, values: vec![4, 0] },
+            DeltaOp::InsertEntity { et: 0, values: vec![1] },
+        ]);
+        a.apply(&batch).unwrap();
+        b.apply(&batch).unwrap();
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn recount_mode_matches_delta_mode() {
+        let db = university_db();
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::DeleteLink { rel: 1, from: 0, to: 0 },
+            DeltaOp::InsertLink { rel: 1, from: 0, to: 1, values: vec![2] },
+        ]);
+        let mut d = MaintainedCounts::build(
+            db.clone(),
+            MaintainConfig { mode: MaintenanceMode::DeltaOnly, ..Default::default() },
+        )
+        .unwrap();
+        let mut r = MaintainedCounts::build(
+            db,
+            MaintainConfig { mode: MaintenanceMode::RecountOnly, ..Default::default() },
+        )
+        .unwrap();
+        let dr = d.apply(&batch).unwrap();
+        let rr = r.apply(&batch).unwrap();
+        assert_eq!(d.digest(), r.digest());
+        assert_eq!(dr.points_recounted, 0);
+        assert!(rr.points_recounted > 0);
+        assert_eq!(rr.points_delta_maintained, 0);
+    }
+
+    #[test]
+    fn bad_ops_fail_loudly_and_poison() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        let dup = DeltaBatch::new(vec![DeltaOp::InsertLink {
+            rel: 0,
+            from: 0,
+            to: 0,
+            values: vec![0, 0],
+        }]);
+        assert!(m.apply(&dup).is_err());
+        // a failed batch poisons the state: no further serving or
+        // application (the db may hold earlier ops of the failed batch)
+        assert!(m.ct_for_family(&family(), &[0, 1]).is_err());
+        let fine = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        assert!(m.apply(&fine).is_err());
+    }
+
+    #[test]
+    fn mid_batch_failure_poisons_instead_of_serving_stale() {
+        // op 1 mutates the db; op 2 fails.  The maintained state must
+        // refuse to serve rather than return counts missing op 1.
+        let db = university_db();
+        let mut m = MaintainedCounts::build(
+            db,
+            MaintainConfig { mode: MaintenanceMode::RecountOnly, ..Default::default() },
+        )
+        .unwrap();
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::InsertLink { rel: 0, from: 11, to: 0, values: vec![2, 1] },
+            DeltaOp::DeleteLink { rel: 0, from: 11, to: 18 }, // absent pair
+        ]);
+        assert!(m.apply(&batch).is_err());
+        assert!(m.ct_for_family(&family(), &[0, 1]).is_err());
+        assert!(m.learn(crate::learn::search::SearchConfig::default()).is_err());
+    }
+}

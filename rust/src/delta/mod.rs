@@ -1,0 +1,35 @@
+//! Delta maintenance: resident count caches that stay exact under
+//! streaming fact inserts and retractions.
+//!
+//! The paper's pre-vs-post counting trade-off assumes a static database;
+//! a production deployment sees facts arrive and retract after the
+//! caches are built.  This subsystem generalizes the ingestion-time
+//! incremental counters ([`crate::pipeline::incremental`], chain length
+//! 1, positive-only, append-only) into full cache maintenance:
+//!
+//! - [`batch`] — the [`DeltaBatch`] mutation language (link insert /
+//!   link delete / entity insert) and its JSON wire format
+//!   (`relcount apply --deltas FILE`);
+//! - [`policy`] — the per-point delta-vs-recount decision, costed with
+//!   the same sampling estimator that drives the ADAPTIVE strategy;
+//! - [`maintain`] — [`MaintainedCounts`]: database + planned caches,
+//!   kept bit-identical to a from-scratch rebuild through per-tuple
+//!   join-row deltas, the delta-Möbius
+//!   ([`crate::ct::mobius::mobius_delta`]) and entity-slice projection,
+//!   with work sharded over the coordinator's pool (`--workers`).
+//!
+//! The correctness contract is differential: after arbitrary seeded
+//! insert/delete sequences, maintained counts — and the models and BDeu
+//! scores learned from them — are bit-identical to every fresh strategy
+//! on the mutated data, sequentially and under 4 workers
+//! (`rust/tests/delta_equivalence.rs`).  The churn workload this opens
+//! is measured by `relcount exp churn` and `benches/delta_churn.rs`
+//! (see EXPERIMENTS.md §E10).
+
+pub mod batch;
+pub mod maintain;
+pub mod policy;
+
+pub use batch::{DeltaBatch, DeltaOp};
+pub use maintain::{DeltaReport, MaintainConfig, MaintainedCounts, MaintainedStrategy};
+pub use policy::{DeltaPolicy, MaintenanceDecision, MaintenanceMode};

@@ -1,0 +1,213 @@
+//! Per-point maintenance policy: delta or invalidate-and-recount.
+//!
+//! Applying a batch to a resident lattice point costs either
+//!
+//! - **delta**: one bound join enumeration per touching link op —
+//!   roughly the chain's rows-per-tuple fan-out (estimated join
+//!   cardinality over the mutated relationship's size), doubled per
+//!   extra relationship axis for the delta-Möbius's subset scatter — or
+//! - **recount**: one full chain join (the estimated join cardinality),
+//!   plus the complete table's Möbius when one is resident.
+//!
+//! Both sides come from the same seeded sampling estimator that drives
+//! the ADAPTIVE strategy ([`crate::estimate`]), so the decision is a
+//! pure function of `(database, lattice, batch shape, estimator
+//! config)` and identical across worker counts.  Low-churn batches pick
+//! delta; a batch that rewrites most of a relationship flips its points
+//! to recount.
+
+use crate::db::catalog::Database;
+use crate::delta::batch::DeltaBatch;
+use crate::error::Result;
+use crate::estimate::plan::CountPlan;
+use crate::estimate::sampler::{EstimatorConfig, JoinSampler};
+use crate::lattice::Lattice;
+
+/// How a batch maintains one resident lattice point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MaintenanceDecision {
+    /// Apply per-op join-row deltas (and delta-Möbius when a complete
+    /// table is resident).
+    Delta,
+    /// Mark stale, apply mutations, re-run the point's JOIN (and Möbius)
+    /// once at the end of the batch.
+    Recount,
+}
+
+/// Forced or estimated decision mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MaintenanceMode {
+    /// Decide per point from estimated costs (the default).
+    #[default]
+    Auto,
+    /// Always delta-maintain (except where a delta is undefined, e.g. an
+    /// entity insert into an empty population).
+    DeltaOnly,
+    /// Always invalidate-and-recount — the baseline the churn experiment
+    /// compares against.
+    RecountOnly,
+}
+
+impl MaintenanceMode {
+    pub fn parse(s: &str) -> Option<MaintenanceMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(MaintenanceMode::Auto),
+            "delta" => Some(MaintenanceMode::DeltaOnly),
+            "recount" => Some(MaintenanceMode::RecountOnly),
+            _ => None,
+        }
+    }
+}
+
+/// The per-point decisions for one batch.
+#[derive(Clone, Debug)]
+pub struct DeltaPolicy {
+    /// Decision per lattice point id (points untouched by the batch are
+    /// `Delta` — there is no work either way).
+    pub per_point: Vec<MaintenanceDecision>,
+}
+
+impl DeltaPolicy {
+    /// Decide every point for `batch` under `mode`.
+    pub fn decide(
+        db: &Database,
+        lattice: &Lattice,
+        plan: &CountPlan,
+        cfg: EstimatorConfig,
+        batch: &DeltaBatch,
+        mode: MaintenanceMode,
+    ) -> Result<DeltaPolicy> {
+        let n = lattice.len();
+        let mut per_point = vec![MaintenanceDecision::Delta; n];
+        match mode {
+            MaintenanceMode::DeltaOnly => {}
+            MaintenanceMode::RecountOnly => {
+                for (id, d) in per_point.iter_mut().enumerate() {
+                    if plan.positive_planned(id) && touches(lattice, batch, id) {
+                        *d = MaintenanceDecision::Recount;
+                    }
+                }
+            }
+            MaintenanceMode::Auto => {
+                let sampler = JoinSampler::new(db, cfg);
+                for (id, d) in per_point.iter_mut().enumerate() {
+                    if !plan.positive_planned(id) || !touches(lattice, batch, id) {
+                        continue;
+                    }
+                    let p = &lattice.points[id];
+                    let est = sampler.chain_cardinality(&p.rels)?;
+                    let ops: u64 = p.rels.iter().map(|&r| batch.link_ops_on(r)).sum();
+                    // rows visited per bound tuple ~ join rows / rel size
+                    let rel_rows: f64 = p
+                        .rels
+                        .iter()
+                        .map(|&r| db.rels[r].len().max(1) as f64)
+                        .fold(f64::INFINITY, f64::min);
+                    let per_op = (est.value / rel_rows).max(1.0)
+                        * (1u64 << (p.rels.len() - 1)) as f64;
+                    let delta_cost = ops as f64 * per_op;
+                    let mut recount_cost = est.value.max(1.0);
+                    if plan.complete_planned(id) {
+                        recount_cost += plan.estimates[id].est_complete_rows;
+                    }
+                    if delta_cost > recount_cost {
+                        *d = MaintenanceDecision::Recount;
+                    }
+                }
+            }
+        }
+        Ok(DeltaPolicy { per_point })
+    }
+
+    pub fn recount_count(&self) -> u64 {
+        self.per_point
+            .iter()
+            .filter(|d| **d == MaintenanceDecision::Recount)
+            .count() as u64
+    }
+}
+
+/// Whether any link op of `batch` touches lattice point `id`.
+fn touches(lattice: &Lattice, batch: &DeltaBatch, id: usize) -> bool {
+    lattice.points[id].rels.iter().any(|&r| batch.link_ops_on(r) > 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::delta::batch::DeltaOp;
+
+    fn setup() -> (Database, Lattice, CountPlan) {
+        let db = university_db();
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        let plan =
+            CountPlan::build(&db, &lattice, EstimatorConfig::default(), None).unwrap();
+        (db, lattice, plan)
+    }
+
+    #[test]
+    fn small_batches_pick_delta_heavy_batches_recount() {
+        let (db, lattice, plan) = setup();
+        let one = DeltaBatch::new(vec![DeltaOp::DeleteLink {
+            rel: 0,
+            from: 0,
+            to: 0,
+        }]);
+        let p = DeltaPolicy::decide(
+            &db,
+            &lattice,
+            &plan,
+            EstimatorConfig::default(),
+            &one,
+            MaintenanceMode::Auto,
+        )
+        .unwrap();
+        assert_eq!(p.recount_count(), 0, "{:?}", p.per_point);
+
+        // a batch rewriting rel 0 many times over should flip its points
+        let ops: Vec<DeltaOp> = (0..2000)
+            .map(|i| DeltaOp::DeleteLink { rel: 0, from: i % 12, to: i % 19 })
+            .collect();
+        let heavy = DeltaBatch::new(ops);
+        let p = DeltaPolicy::decide(
+            &db,
+            &lattice,
+            &plan,
+            EstimatorConfig::default(),
+            &heavy,
+            MaintenanceMode::Auto,
+        )
+        .unwrap();
+        assert!(p.recount_count() > 0, "{:?}", p.per_point);
+    }
+
+    #[test]
+    fn forced_modes() {
+        let (db, lattice, plan) = setup();
+        let b = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let d = DeltaPolicy::decide(
+            &db,
+            &lattice,
+            &plan,
+            EstimatorConfig::default(),
+            &b,
+            MaintenanceMode::DeltaOnly,
+        )
+        .unwrap();
+        assert_eq!(d.recount_count(), 0);
+        let r = DeltaPolicy::decide(
+            &db,
+            &lattice,
+            &plan,
+            EstimatorConfig::default(),
+            &b,
+            MaintenanceMode::RecountOnly,
+        )
+        .unwrap();
+        // rel 0 sits in points {0} and {0,1}
+        assert_eq!(r.recount_count(), 2);
+        assert_eq!(MaintenanceMode::parse("recount"), Some(MaintenanceMode::RecountOnly));
+        assert_eq!(MaintenanceMode::parse("nope"), None);
+    }
+}

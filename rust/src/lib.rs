@@ -35,6 +35,10 @@
 //!   the Möbius butterfly and batched BDeu) and a score micro-batcher,
 //! - a **streaming ingestion pipeline** ([`pipeline`]) with sharded
 //!   builders, backpressure, and incremental positive-count maintenance,
+//! - **delta maintenance** ([`delta`]): resident caches kept exact under
+//!   streaming fact inserts *and* retractions — per-tuple join-row
+//!   deltas, the delta-Möbius, and a planner-driven
+//!   delta-vs-recount policy (`relcount apply`, `relcount exp churn`),
 //! - seeded **synthetic dataset generators** ([`datagen`]) with one
 //!   preset per benchmark database of the paper's Table 4,
 //! - **metrics** ([`metrics`]) reproducing the paper's runtime breakdown
@@ -50,6 +54,7 @@ pub mod coordinator;
 pub mod ct;
 pub mod datagen;
 pub mod db;
+pub mod delta;
 pub mod error;
 pub mod estimate;
 pub mod lattice;

@@ -6,7 +6,10 @@
 //!              [--workers N|auto]
 //!   learn      --preset <name>|--db <dir> --strategy <...>
 //!              [--workers N|auto] [--xla]
-//!   exp        fig3|fig4|table4|table5|scaling  --scale <f> --budget-s <n>
+//!   apply      --preset <name>|--db <dir> --deltas <file>
+//!              [--mode auto|delta|recount] [--workers N|auto] [--out <dir>]
+//!   exp        fig3|fig4|table4|table5|scaling|churn  --scale <f>
+//!              --budget-s <n>
 //!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
 //!
 //! `--workers` routes the counting phases through the L3 parallel
@@ -26,19 +29,21 @@ use relcount::bench::driver::{
     run_coordinated_with, run_strategy_with, Workload,
 };
 use relcount::bench::experiments::{
-    coordinator_scaling_rows, fig3_fig4_rows, planner_sweep_rows, table4_rows,
-    table5_rows, ExpConfig,
+    churn_rows, coordinator_scaling_rows, fig3_fig4_rows, planner_sweep_rows,
+    table4_rows, table5_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
 use relcount::datagen::presets::{preset, PRESET_NAMES};
 use relcount::db::catalog::Database;
 use relcount::db::loader;
+use relcount::delta::{DeltaBatch, MaintainConfig, MaintainedCounts, MaintenanceMode};
 use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
 use relcount::metrics::report::{
-    planner_rows_to_json, render_fig3, render_fig4, render_planner, render_scaling,
-    render_table4, render_table5, scaling_rows_to_json,
+    churn_rows_to_json, planner_rows_to_json, render_churn, render_fig3, render_fig4,
+    render_planner, render_scaling, render_table4, render_table5,
+    scaling_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
@@ -55,9 +60,12 @@ USAGE:
                      [--workers N|auto] [--mem-budget BYTES[k|m|g]|inf]
   relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget ...] [--xla]
-  relcount exp <fig3|fig4|table4|table5|scaling|planner> [--scale F]
+  relcount apply     (--preset <name> | --db <dir>) --deltas FILE
+                     [--mode auto|delta|recount] [--mem-budget ...]
+                     [--workers N|auto] [--out <dir>]
+  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn> [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
-                     [--workers N] [--json FILE]
+                     [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
   relcount presets
 
@@ -69,6 +77,10 @@ USAGE:
   --mem-budget caps ADAPTIVE's pre-count plan (0 = pure post-counting,
   inf = pre-count everything); `exp planner` sweeps the whole spectrum
   and --json writes machine-readable rows (BENCH_planner.json).
+  `apply` streams a JSON delta batch (link inserts/deletes, entity
+  inserts) through the maintained caches; `exp churn` measures delta
+  maintenance against invalidate-and-recount at the given churn
+  fractions (BENCH_churn.json).
 ";
 
 fn main() -> ExitCode {
@@ -103,7 +115,9 @@ fn load_db(args: &Args) -> Result<(String, Database)> {
 fn strategy_kind(args: &Args) -> Result<StrategyKind> {
     let s = args.get_or("strategy", "hybrid");
     StrategyKind::parse(s)
-        .ok_or_else(|| Error::Data(format!("unknown strategy {s:?} (pre|post|hybrid)")))
+        .ok_or_else(|| {
+            Error::Data(format!("unknown strategy {s:?} (pre|post|hybrid|adaptive)"))
+        })
 }
 
 fn run() -> Result<()> {
@@ -232,6 +246,52 @@ fn run() -> Result<()> {
             );
             Ok(())
         }
+        Some("apply") => {
+            let (name, db) = load_db(&args)?;
+            let path = args
+                .get("deltas")
+                .ok_or_else(|| Error::Data("need --deltas FILE".into()))?
+                .to_string();
+            let batch = DeltaBatch::from_file(Path::new(&path))?;
+            let mode = MaintenanceMode::parse(args.get_or("mode", "auto"))
+                .ok_or_else(|| {
+                    Error::Data("--mode expects auto|delta|recount".into())
+                })?;
+            let cfg = MaintainConfig {
+                mem_budget: args.mem_budget()?,
+                workers: args.workers()?,
+                mode,
+                ..Default::default()
+            };
+            eprintln!("building maintained caches for {name}...");
+            let mut m = MaintainedCounts::build(db, cfg)?;
+            let rep = m.apply(&batch)?;
+            println!(
+                "applied {} ops to {name} in {:.3}s: {} link inserts, {} link \
+                 deletes, {} entity inserts",
+                rep.ops_applied,
+                rep.elapsed.as_secs_f64(),
+                rep.link_inserts,
+                rep.link_deletes,
+                rep.entity_inserts
+            );
+            println!(
+                "maintenance: {} points delta-maintained ({} cells), {} points \
+                 recounted, {} fresh chain queries; resident {} bytes; digest \
+                 {:016x}",
+                rep.points_delta_maintained,
+                rep.cells_touched,
+                rep.points_recounted,
+                rep.join_stats.chain_queries,
+                m.resident_bytes(),
+                m.digest()
+            );
+            if let Some(out) = args.get("out") {
+                loader::save(m.db(), Path::new(out))?;
+                println!("wrote mutated database to {out}");
+            }
+            Ok(())
+        }
         Some("exp") => {
             let which = args
                 .positional
@@ -239,7 +299,8 @@ fn run() -> Result<()> {
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
                     Error::Data(
-                        "exp needs fig3|fig4|table4|table5|scaling|planner".into(),
+                        "exp needs fig3|fig4|table4|table5|scaling|planner|churn"
+                            .into(),
                     )
                 })?;
             let cfg = exp_config(&args)?;
@@ -259,6 +320,18 @@ fn run() -> Result<()> {
                     let rows = planner_sweep_rows(&cfg, workers)?;
                     print!("{}", render_planner(&rows));
                     write_json(&args, planner_rows_to_json(&rows))?;
+                }
+                "churn" => {
+                    let workers = args.workers()?;
+                    let fracs = churn_fracs(&args)?;
+                    let rows = churn_rows(&cfg, &fracs, workers)?;
+                    print!("{}", render_churn(&rows));
+                    if rows.iter().any(|r| !r.consistent) {
+                        return Err(Error::Data(
+                            "churn: delta and recount caches diverged".into(),
+                        ));
+                    }
+                    write_json(&args, churn_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }
@@ -314,6 +387,20 @@ fn write_json(args: &Args, rows: Json) -> Result<()> {
         eprintln!("wrote {path}");
     }
     Ok(())
+}
+
+/// Parse `--churn 0.01,0.05` (batch sizes as link-row fractions).
+fn churn_fracs(args: &Args) -> Result<Vec<f64>> {
+    let raw = args.get_or("churn", "0.01,0.05");
+    raw.split(',')
+        .map(|tok| {
+            tok.trim().parse::<f64>().ok().filter(|f| *f > 0.0).ok_or_else(|| {
+                Error::Data(format!(
+                    "--churn expects positive fractions, got {tok:?}"
+                ))
+            })
+        })
+        .collect()
 }
 
 /// Parse `--workers-list 1,2,4` (`auto` entries resolve to all cores).

@@ -277,6 +277,111 @@ pub fn scaling_rows_to_json(rows: &[ScalingRow]) -> Json {
     )
 }
 
+/// One cell of the streaming-churn experiment: a seeded delta batch
+/// applied to a maintained cache state, delta path vs
+/// invalidate-and-recount baseline (`relcount exp churn`,
+/// `benches/delta_churn.rs`, EXPERIMENTS.md §E10).
+#[derive(Clone, Debug)]
+pub struct ChurnRow {
+    pub database: String,
+    /// Batch size as a fraction of the database's link rows.
+    pub churn_frac: f64,
+    /// Ops actually emitted for the batch.
+    pub batch_ops: u64,
+    pub link_inserts: u64,
+    pub link_deletes: u64,
+    pub entity_inserts: u64,
+    /// Wall clock of the delta-maintained application.
+    pub delta: Duration,
+    /// Wall clock of the invalidate-and-recount application.
+    pub recount: Duration,
+    /// `recount / delta` (>1 means delta maintenance wins).
+    pub speedup: f64,
+    /// Points maintained through the delta path (delta run).
+    pub points_delta_maintained: u64,
+    /// Points the recount baseline re-joined.
+    pub points_recounted: u64,
+    /// Delta-table rows applied across resident caches (delta run).
+    pub cells_touched: u64,
+    /// Resident cache bytes after the batch (delta run).
+    pub resident_bytes: usize,
+    /// Deterministic digest of every resident table after the batch
+    /// (hex) — identical across runs, worker counts, and both paths.
+    pub digest: String,
+    /// Delta and recount paths produced identical caches.
+    pub consistent: bool,
+    pub workers: usize,
+}
+
+/// Render the churn sweep (the `delta_churn` bench and `exp churn`).
+pub fn render_churn(rows: &[ChurnRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>6} {:>6} {:>9} {:>10} {:>10} {:>8} {:>8} {:>9} {:>12}  {}\n",
+        "database",
+        "churn",
+        "ops",
+        "delta_s",
+        "recount_s",
+        "speedup",
+        "pts_d",
+        "pts_r",
+        "cells",
+        "resident_B",
+        "check"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>6.3} {:>6} {:>9} {:>10} {:>9.2}x {:>8} {:>8} {:>9} {:>12}  {}\n",
+            r.database,
+            r.churn_frac,
+            r.batch_ops,
+            fmt_dur(r.delta),
+            fmt_dur(r.recount),
+            r.speedup,
+            r.points_delta_maintained,
+            r.points_recounted,
+            r.cells_touched,
+            r.resident_bytes,
+            if r.consistent { "ok" } else { "MISMATCH" }
+        ));
+    }
+    out
+}
+
+/// Machine-readable churn sweep (written to `BENCH_churn.json` by
+/// `scripts/bench.sh`).  Key set is schema-stable; every non-timing
+/// field is seed-deterministic (`rust/tests/churn_golden.rs`).
+pub fn churn_rows_to_json(rows: &[ChurnRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("churn_frac", Json::Num(r.churn_frac)),
+                    ("batch_ops", Json::Num(r.batch_ops as f64)),
+                    ("link_inserts", Json::Num(r.link_inserts as f64)),
+                    ("link_deletes", Json::Num(r.link_deletes as f64)),
+                    ("entity_inserts", Json::Num(r.entity_inserts as f64)),
+                    ("delta_s", Json::Num(r.delta.as_secs_f64())),
+                    ("recount_s", Json::Num(r.recount.as_secs_f64())),
+                    ("speedup", Json::Num(r.speedup)),
+                    (
+                        "points_delta_maintained",
+                        Json::Num(r.points_delta_maintained as f64),
+                    ),
+                    ("points_recounted", Json::Num(r.points_recounted as f64)),
+                    ("cells_touched", Json::Num(r.cells_touched as f64)),
+                    ("resident_bytes", Json::Num(r.resident_bytes as f64)),
+                    ("digest", Json::Str(r.digest.clone())),
+                    ("consistent", Json::Bool(r.consistent)),
+                    ("workers", Json::Num(r.workers as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -404,6 +509,46 @@ mod tests {
         unlimited.budget_bytes = None;
         let j2 = planner_rows_to_json(&[unlimited]);
         assert!(j2.dump().contains("\"budget_bytes\":null"));
+    }
+
+    fn churn_row() -> ChurnRow {
+        ChurnRow {
+            database: "uw".into(),
+            churn_frac: 0.05,
+            batch_ops: 20,
+            link_inserts: 9,
+            link_deletes: 10,
+            entity_inserts: 1,
+            delta: Duration::from_millis(3),
+            recount: Duration::from_millis(30),
+            speedup: 10.0,
+            points_delta_maintained: 3,
+            points_recounted: 3,
+            cells_touched: 120,
+            resident_bytes: 4096,
+            digest: "deadbeefdeadbeef".into(),
+            consistent: true,
+            workers: 1,
+        }
+    }
+
+    #[test]
+    fn renders_churn() {
+        let s = render_churn(&[churn_row()]);
+        assert!(s.contains("uw") && s.contains("10.00x") && s.contains("ok"));
+        let mut bad = churn_row();
+        bad.consistent = false;
+        assert!(render_churn(&[bad]).contains("MISMATCH"));
+    }
+
+    #[test]
+    fn churn_json_shapes() {
+        let j = churn_rows_to_json(&[churn_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("digest").unwrap().as_str(), Some("deadbeefdeadbeef"));
+        assert_eq!(row.get("speedup").unwrap().as_f64(), Some(10.0));
+        assert_eq!(row.get("consistent").unwrap(), &Json::Bool(true));
     }
 
     #[test]

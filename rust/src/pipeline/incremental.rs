@@ -6,6 +6,15 @@
 //! cache for chain length 1 — the longer chains still need joins, but the
 //! single-rel tables (often the bulk of Figure 3's positive component on
 //! 1-relationship databases like MovieLens) come for free.
+//!
+//! This is the chain-length-1 special case of the delta maintenance
+//! subsystem ([`crate::delta`]): link facts apply *signed*
+//! ([`IncrementalCounts::retract`] subtracts the same row `apply`
+//! adds), so an ingest stream may interleave retractions.  For resident
+//! caches at all chain lengths — including complete (negative-count)
+//! tables under deletes — hand the finished database to
+//! [`crate::delta::MaintainedCounts`], which generalizes this mechanism
+//! with per-tuple join-row deltas and the delta-Möbius.
 
 use crate::ct::cttable::CtTable;
 use crate::db::schema::Schema;
@@ -43,9 +52,26 @@ impl IncrementalCounts {
 
     /// Apply one fact (must mirror the shard builder's stream).
     pub fn apply(&mut self, fact: &Fact) -> Result<()> {
+        self.apply_signed(fact, 1)
+    }
+
+    /// Retract a previously applied **link** fact: subtracts the exact
+    /// row `apply` added (zero rows compact away, so apply-then-retract
+    /// is a no-op).  Entity facts cannot be retracted — populations are
+    /// stable dimensions here, as in [`crate::delta`].
+    pub fn retract(&mut self, fact: &Fact) -> Result<()> {
+        if matches!(fact, Fact::Entity { .. }) {
+            return Err(Error::Pipeline(
+                "entity facts cannot be retracted incrementally (rebuild)".into(),
+            ));
+        }
+        self.apply_signed(fact, -1)
+    }
+
+    fn apply_signed(&mut self, fact: &Fact, sign: i128) -> Result<()> {
         match fact {
             Fact::Entity { et, values } => {
-                self.entity_cts[*et].add(values, 1)?;
+                self.entity_cts[*et].add(values, sign)?;
                 self.entity_attrs[*et].push(values.clone());
             }
             Fact::Link { rel, from, to, values } => {
@@ -78,7 +104,7 @@ impl IncrementalCounts {
                     };
                     row.push(code);
                 }
-                ct.add(&row, 1)?;
+                ct.add(&row, sign)?;
             }
         }
         Ok(())
@@ -125,5 +151,24 @@ mod tests {
         let mut inc = IncrementalCounts::new(university_schema()).unwrap();
         let f = Fact::Link { rel: 0, from: 0, to: 0, values: vec![0, 0] };
         assert!(inc.apply(&f).is_err());
+    }
+
+    #[test]
+    fn apply_then_retract_is_noop() {
+        let db = university_db();
+        let mut inc = IncrementalCounts::new(university_schema()).unwrap();
+        for f in db_to_facts(&db) {
+            inc.apply(&f).unwrap();
+        }
+        let rows_before: Vec<usize> =
+            inc.rel_cts.iter().map(|t| t.n_rows()).collect();
+        let link = Fact::Link { rel: 1, from: 2, to: 3, values: vec![1] };
+        inc.apply(&link).unwrap();
+        inc.retract(&link).unwrap();
+        let rows_after: Vec<usize> = inc.rel_cts.iter().map(|t| t.n_rows()).collect();
+        assert_eq!(rows_before, rows_after);
+        // entity retraction is rejected
+        let e = Fact::Entity { et: 0, values: vec![0] };
+        assert!(inc.retract(&e).is_err());
     }
 }

@@ -146,9 +146,10 @@ impl<'a> Adaptive<'a> {
 
     /// The planned subset of the positive-phase task list, in canonical
     /// order (entity marginals first iff planned, then planned points by
-    /// ascending id) — shared with the parallel coordinator so both fill
+    /// ascending id) — shared with the parallel coordinator and the
+    /// delta maintenance subsystem ([`crate::delta`]) so all three fill
     /// identical caches.
-    pub(crate) fn planned_positive_tasks(
+    pub fn planned_positive_tasks(
         db: &Database,
         plan: &CountPlan,
     ) -> Vec<PositiveTask> {
@@ -165,7 +166,7 @@ impl<'a> Adaptive<'a> {
     }
 
     /// The planned complete-phase point ids, ascending.
-    pub(crate) fn planned_complete_points(plan: &CountPlan) -> Vec<usize> {
+    pub fn planned_complete_points(plan: &CountPlan) -> Vec<usize> {
         (0..plan.levels.len()).filter(|&id| plan.complete_planned(id)).collect()
     }
 }

@@ -1,5 +1,6 @@
 //! Count caches with exact byte accounting and hit statistics.
 
+use crate::error::{Error, Result};
 use crate::util::fxhash::FxHashMap;
 
 use crate::ct::cttable::CtTable;
@@ -10,7 +11,7 @@ use crate::metrics::memory::MemTracker;
 pub type CacheKey = (Vec<RVar>, Vec<usize>);
 
 /// A ct-table cache.
-#[derive(Debug, Default)]
+#[derive(Clone, Debug, Default)]
 pub struct CtCache {
     map: FxHashMap<CacheKey, CtTable>,
     pub mem: MemTracker,
@@ -18,6 +19,9 @@ pub struct CtCache {
     pub misses: u64,
     /// Total rows over all tables ever inserted (Table 5 metric).
     pub rows_inserted: u64,
+    /// Cells touched by in-place delta maintenance
+    /// ([`CtCache::apply_delta`]) — the churn workload's cost metric.
+    pub cells_deltaed: u64,
 }
 
 impl CtCache {
@@ -50,6 +54,35 @@ impl CtCache {
         if let Some(old) = self.map.insert(key, table) {
             self.mem.sub(old.bytes());
         }
+    }
+
+    /// Merge a signed delta table into a resident entry in place
+    /// (cell-level add/sub; zero cells compact away — no tombstones),
+    /// keeping the byte accounting exact.  Errors if the entry is absent
+    /// — delta maintenance must never silently materialize tables.
+    pub fn apply_delta(&mut self, key: &CacheKey, delta: &CtTable) -> Result<()> {
+        let entry = self.map.get_mut(key).ok_or_else(|| {
+            Error::Strategy(format!("apply_delta: no resident table for {key:?}"))
+        })?;
+        let old_bytes = entry.bytes();
+        entry.add_table(delta)?;
+        let new_bytes = entry.bytes();
+        self.mem.sub(old_bytes);
+        self.mem.add(new_bytes);
+        self.cells_deltaed += delta.n_rows() as u64;
+        Ok(())
+    }
+
+    /// Drop an entry (invalidate-and-recount path), returning it.
+    pub fn remove(&mut self, key: &CacheKey) -> Option<CtTable> {
+        let old = self.map.remove(key)?;
+        self.mem.sub(old.bytes());
+        Some(old)
+    }
+
+    /// Iterate entries in unspecified order (digests sort keys first).
+    pub fn iter(&self) -> impl Iterator<Item = (&CacheKey, &CtTable)> {
+        self.map.iter()
     }
 
     pub fn len(&self) -> usize {
@@ -97,5 +130,34 @@ mod tests {
         c.clear();
         assert_eq!(c.bytes(), 0);
         assert!(c.mem.peak_bytes >= bytes); // peak survives clears
+    }
+
+    #[test]
+    fn delta_application_keeps_bytes_exact() {
+        let s = university_schema();
+        let v = RVar::EntityAttr { et: 0, attr: 0 };
+        let mut c = CtCache::new();
+        let key = CtCache::key(&[v], &[0]);
+        let mut t = CtTable::new(&s, vec![v]).unwrap();
+        t.add(&[0], 3).unwrap();
+        t.add(&[1], 2).unwrap();
+        c.insert(key.clone(), t);
+
+        let mut d = CtTable::new(&s, vec![v]).unwrap();
+        d.add(&[0], -3).unwrap(); // row compacts away
+        d.add(&[2], 7).unwrap();
+        c.apply_delta(&key, &d).unwrap();
+        assert_eq!(c.cells_deltaed, 2);
+        let cur = c.peek(&key).unwrap();
+        assert_eq!(cur.get(&[0]).unwrap(), 0);
+        assert_eq!(cur.get(&[2]).unwrap(), 7);
+        assert_eq!(c.bytes(), c.peek(&key).unwrap().bytes());
+
+        // absent key errors; remove subtracts bytes
+        let ghost = CtCache::key(&[v], &[1]);
+        assert!(c.apply_delta(&ghost, &d).is_err());
+        assert!(c.remove(&key).is_some());
+        assert_eq!(c.bytes(), 0);
+        assert!(c.remove(&key).is_none());
     }
 }

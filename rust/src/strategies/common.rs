@@ -19,6 +19,7 @@ use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
 use crate::strategies::cache::{CtCache, CacheKey};
 
 /// Metadata + lattice + query plans, built during the MetaData phase.
+#[derive(Clone)]
 pub struct LatticeCtx {
     pub metadata: Metadata,
     pub lattice: Lattice,

@@ -1,0 +1,126 @@
+//! Golden-fixture test for the `exp churn --json` output (the
+//! runtime_artifacts.rs pattern: drive the public row generator + JSON
+//! emitter and pin the machine-readable shape).
+//!
+//! Two guarantees:
+//! - **schema stability** — every row carries exactly the golden key
+//!   set, with the golden types, so downstream BENCH_churn.json readers
+//!   never break silently;
+//! - **seeded determinism** — every non-timing field is identical
+//!   across two runs of the same (preset, scale, seed, fracs), and the
+//!   delta/recount consistency bit is always true.
+
+use std::time::Duration;
+
+use relcount::bench::experiments::{churn_rows, ExpConfig};
+use relcount::metrics::report::churn_rows_to_json;
+use relcount::util::json::Json;
+
+/// The golden key set of one BENCH_churn.json row, in sorted order.
+const GOLDEN_KEYS: [&str; 16] = [
+    "batch_ops",
+    "cells_touched",
+    "churn_frac",
+    "consistent",
+    "database",
+    "delta_s",
+    "digest",
+    "entity_inserts",
+    "link_deletes",
+    "link_inserts",
+    "points_delta_maintained",
+    "points_recounted",
+    "recount_s",
+    "resident_bytes",
+    "speedup",
+    "workers",
+];
+
+/// Fields that must be bit-identical across seeded re-runs (everything
+/// except the wall-clock measurements derived from them).
+const DETERMINISTIC_KEYS: [&str; 12] = [
+    "batch_ops",
+    "cells_touched",
+    "churn_frac",
+    "consistent",
+    "database",
+    "digest",
+    "entity_inserts",
+    "link_deletes",
+    "link_inserts",
+    "points_delta_maintained",
+    "points_recounted",
+    "workers",
+];
+
+fn cfg() -> ExpConfig {
+    ExpConfig {
+        scale: 0.03,
+        budget: Some(Duration::from_secs(120)),
+        seed: 9,
+        presets: &["uw"],
+        ..Default::default()
+    }
+}
+
+fn rows_json() -> Json {
+    let rows = churn_rows(&cfg(), &[0.05, 0.1], 1).unwrap();
+    let json = churn_rows_to_json(&rows);
+    // the emitter's output must survive its own parser
+    Json::parse(&json.dump()).unwrap()
+}
+
+#[test]
+fn churn_json_rows_match_the_golden_schema() {
+    let parsed = rows_json();
+    let rows = parsed.as_arr().unwrap();
+    assert_eq!(rows.len(), 2, "one row per churn fraction");
+    for row in rows {
+        let obj = row.as_obj().unwrap();
+        let keys: Vec<&str> = obj.keys().map(|k| k.as_str()).collect();
+        assert_eq!(keys, GOLDEN_KEYS, "key set drifted");
+        // golden types
+        assert!(row.get("database").unwrap().as_str().is_some());
+        assert!(row.get("digest").unwrap().as_str().is_some());
+        assert_eq!(row.get("digest").unwrap().as_str().unwrap().len(), 16);
+        assert!(matches!(row.get("consistent").unwrap(), Json::Bool(_)));
+        for num_key in [
+            "batch_ops",
+            "cells_touched",
+            "churn_frac",
+            "delta_s",
+            "entity_inserts",
+            "link_deletes",
+            "link_inserts",
+            "points_delta_maintained",
+            "points_recounted",
+            "recount_s",
+            "resident_bytes",
+            "speedup",
+            "workers",
+        ] {
+            let v = row.get(num_key).unwrap().as_f64();
+            assert!(v.is_some(), "{num_key} must be numeric");
+            assert!(v.unwrap() >= 0.0, "{num_key} must be non-negative");
+        }
+        // every measurement doubles as a differential check
+        assert_eq!(row.get("consistent").unwrap(), &Json::Bool(true));
+    }
+}
+
+#[test]
+fn churn_json_is_seed_deterministic_across_runs() {
+    let a = rows_json();
+    let b = rows_json();
+    let (ra, rb) = (a.as_arr().unwrap(), b.as_arr().unwrap());
+    assert_eq!(ra.len(), rb.len());
+    for (x, y) in ra.iter().zip(rb) {
+        for key in DETERMINISTIC_KEYS {
+            assert_eq!(
+                x.get(key).unwrap(),
+                y.get(key).unwrap(),
+                "field {key} must be seed-deterministic"
+            );
+        }
+    }
+}

@@ -1,0 +1,197 @@
+//! The delta maintenance subsystem's differential contract (mirrors
+//! strategy_equivalence.rs): after arbitrary seeded insert/delete
+//! sequences, delta-maintained counts must be **bit-identical** to
+//! from-scratch recounts — for all four strategies rebuilt on the
+//! mutated data, sequentially and under `--workers 4`, including
+//! learned structures and BDeu score bits.
+
+use relcount::ct::cttable::CtTable;
+use relcount::datagen::churn::churn_batch;
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::db::catalog::Database;
+use relcount::delta::{MaintainConfig, MaintainedCounts, MaintenanceMode};
+use relcount::lattice::Lattice;
+use relcount::learn::search::SearchConfig;
+use relcount::meta::rvar::RVar;
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
+use relcount::strategies::StrategyKind;
+
+/// Singleton and pair families over each lattice point's variable set
+/// (the enumeration strategy_equivalence.rs uses, bounded for time).
+fn families_of(db: &Database) -> Vec<(Vec<RVar>, Vec<usize>)> {
+    let lattice = Lattice::build(&db.schema, 3).unwrap();
+    let mut out = Vec::new();
+    for p in &lattice.points {
+        let vars = p.all_vars();
+        for i in 0..vars.len() {
+            out.push((vec![vars[i]], p.pops.clone()));
+            for j in (i + 1)..vars.len() {
+                out.push((vec![vars[i], vars[j]], p.pops.clone()));
+            }
+        }
+    }
+    out
+}
+
+fn assert_tables_equal(a: &CtTable, b: &CtTable, what: &str) {
+    assert_eq!(a.n_rows(), b.n_rows(), "{what}: row count");
+    for (vals, c) in b.iter_rows() {
+        assert_eq!(a.get(&vals).unwrap(), c, "{what} at {vals:?}");
+    }
+}
+
+/// Rebuild a fresh, from-scratch database from the maintained state's
+/// current tables (fresh validation + fresh indexes — no maintained
+/// structure is reused).
+fn rebuild(m: &MaintainedCounts) -> Database {
+    Database::new(
+        m.db().schema.clone(),
+        m.db().entities.clone(),
+        m.db().rels.clone(),
+    )
+    .unwrap()
+}
+
+fn seeded_db(name: &str) -> Database {
+    // 0.05 keeps the runs fast while giving batches enough link rows to
+    // mix inserts, deletes and the occasional entity insert
+    generate(&preset(name, 0.05, 42).unwrap()).unwrap()
+}
+
+#[test]
+fn maintained_counts_match_all_four_strategies_after_churn() {
+    for name in ["uw", "hepatitis"] {
+        let db = seeded_db(name);
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        for step in 0..3u64 {
+            let batch = churn_batch(m.db(), 0.4, 1_000 + step);
+            m.apply(&batch).unwrap();
+            let fresh = rebuild(&m);
+            let fams = families_of(&fresh);
+            let mut strategies: Vec<Box<dyn CountingStrategy>> =
+                StrategyKind::ALL_WITH_ADAPTIVE
+                    .iter()
+                    .map(|k| k.build(&fresh, StrategyConfig::default()).unwrap())
+                    .collect();
+            for (vars, ctx) in &fams {
+                let maintained = m.ct_for_family(vars, ctx).unwrap();
+                for s in strategies.iter_mut() {
+                    let want = s.ct_for_family(vars, ctx).unwrap();
+                    assert_tables_equal(
+                        &maintained,
+                        &want,
+                        &format!("{name} step {step} {} {vars:?}", s.name()),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_residency_plans_stay_exact_after_churn() {
+    // hybrid-equivalent budget (positives only) and a half budget: serve
+    // paths mix projections and fresh joins, counts must not care
+    let db = seeded_db("uw");
+    let probe =
+        MaintainedCounts::build(db.clone(), MaintainConfig::default()).unwrap();
+    let hb = probe.plan().hybrid_budget();
+    for budget in [Some(hb), Some(hb / 2), Some(0)] {
+        let cfg = MaintainConfig { mem_budget: budget, ..Default::default() };
+        let mut m = MaintainedCounts::build(db.clone(), cfg).unwrap();
+        let batch = churn_batch(m.db(), 0.4, 77);
+        m.apply(&batch).unwrap();
+        let fresh = rebuild(&m);
+        let mut reference =
+            StrategyKind::OnDemand.build(&fresh, StrategyConfig::default()).unwrap();
+        for (vars, ctx) in families_of(&fresh) {
+            let got = m.ct_for_family(&vars, &ctx).unwrap();
+            let want = reference.ct_for_family(&vars, &ctx).unwrap();
+            assert_tables_equal(&got, &want, &format!("budget {budget:?} {vars:?}"));
+        }
+    }
+}
+
+#[test]
+fn four_workers_maintain_bit_identical_caches() {
+    for name in ["uw", "hepatitis"] {
+        let db = seeded_db(name);
+        let mut seq = MaintainedCounts::build(
+            db.clone(),
+            MaintainConfig { workers: 1, ..Default::default() },
+        )
+        .unwrap();
+        let mut par = MaintainedCounts::build(
+            db,
+            MaintainConfig { workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(seq.digest(), par.digest(), "{name}: build");
+        for step in 0..3u64 {
+            let batch = churn_batch(seq.db(), 0.4, 2_000 + step);
+            seq.apply(&batch).unwrap();
+            par.apply(&batch).unwrap();
+            assert_eq!(seq.digest(), par.digest(), "{name}: step {step}");
+        }
+        // and the served tables agree with a fresh strategy
+        let fresh = rebuild(&par);
+        let mut reference =
+            StrategyKind::Hybrid.build(&fresh, StrategyConfig::default()).unwrap();
+        for (vars, ctx) in families_of(&fresh).into_iter().take(40) {
+            let got = par.ct_for_family(&vars, &ctx).unwrap();
+            let want = reference.ct_for_family(&vars, &ctx).unwrap();
+            assert_tables_equal(&got, &want, &format!("{name} w=4 {vars:?}"));
+        }
+    }
+}
+
+#[test]
+fn learned_structures_and_bdeu_bits_survive_churn() {
+    let db = seeded_db("uw");
+    let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+    for step in 0..2u64 {
+        let batch = churn_batch(m.db(), 0.3, 3_000 + step);
+        m.apply(&batch).unwrap();
+    }
+    let cfg = SearchConfig::default();
+    let maintained = m.learn(cfg).unwrap();
+
+    let fresh = rebuild(&m);
+    for kind in [StrategyKind::Hybrid, StrategyKind::Precount] {
+        let mut s = kind.build(&fresh, StrategyConfig::default()).unwrap();
+        let want = relcount::learn::search::learn(&fresh, s.as_mut(), cfg).unwrap();
+        assert_eq!(maintained.bn.nodes, want.bn.nodes, "{}", kind.name());
+        assert_eq!(maintained.bn.parents, want.bn.parents, "{}", kind.name());
+        assert_eq!(
+            maintained.total_score.to_bits(),
+            want.total_score.to_bits(),
+            "{}: {} vs {}",
+            kind.name(),
+            maintained.total_score,
+            want.total_score
+        );
+    }
+}
+
+#[test]
+fn delta_and_recount_modes_converge() {
+    let db = seeded_db("hepatitis");
+    let mut delta = MaintainedCounts::build(
+        db.clone(),
+        MaintainConfig { mode: MaintenanceMode::DeltaOnly, ..Default::default() },
+    )
+    .unwrap();
+    let mut recount = MaintainedCounts::build(
+        db,
+        MaintainConfig { mode: MaintenanceMode::RecountOnly, ..Default::default() },
+    )
+    .unwrap();
+    for step in 0..2u64 {
+        let batch = churn_batch(delta.db(), 0.4, 4_000 + step);
+        let dr = delta.apply(&batch).unwrap();
+        let rr = recount.apply(&batch).unwrap();
+        assert_eq!(delta.digest(), recount.digest(), "step {step}");
+        assert_eq!(dr.points_recounted, 0, "step {step}");
+        assert_eq!(rr.points_delta_maintained, 0, "step {step}");
+    }
+}

@@ -8,13 +8,16 @@ use relcount::ct::dense::{DenseLayout, D_PAD, E_PAD, K_REL};
 use relcount::ct::mobius::{brute_force_complete, mobius_complete};
 use relcount::ct::project::project;
 use relcount::db::catalog::Database;
+use relcount::db::index::pair_key;
 use relcount::db::query::{positive_chain_ct, DirectSource, JoinStats};
 use relcount::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+use relcount::delta::{DeltaBatch, DeltaOp, MaintainConfig, MaintainedCounts};
 use relcount::estimate::{EstimatorConfig, JoinSampler};
 use relcount::lattice::Lattice;
 use relcount::meta::rvar::RVar;
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
+use relcount::util::fxhash::FxHashSet;
 use relcount::util::json::Json;
 use relcount::util::rng::Rng;
 
@@ -329,6 +332,140 @@ fn prop_adaptive_interchangeable_at_random_budgets() {
         assert_eq!(got.n_rows(), expect.n_rows(), "seed {seed} budget {budget:?}");
         for (v, c) in expect.iter_rows() {
             assert_eq!(got.get(&v).unwrap(), c, "seed {seed} budget {budget:?} {v:?}");
+        }
+    }
+}
+
+/// A random batch of link ops over distinct `(rel, from, to)` pairs:
+/// deletes of existing tuples and inserts of absent pairs, so any
+/// application order reaches the same final state.
+fn random_link_batch(rng: &mut Rng, db: &Database, max_ops: usize) -> DeltaBatch {
+    let mut ops = Vec::new();
+    let mut touched: FxHashSet<(usize, u64)> = FxHashSet::default();
+    for _ in 0..max_ops {
+        if db.rels.is_empty() {
+            break;
+        }
+        let rel = rng.gen_range(db.rels.len() as u64) as usize;
+        let r = &db.schema.relationships[rel];
+        let (nf, nt) = (db.entities[r.from].len(), db.entities[r.to].len());
+        if nf == 0 || nt == 0 {
+            continue;
+        }
+        let from = rng.gen_u32(nf);
+        let to = rng.gen_u32(nt);
+        if !touched.insert((rel, pair_key(from, to))) {
+            continue; // keep pairs distinct within the batch
+        }
+        if db.index(rel).unwrap().lookup(from, to).is_some() {
+            ops.push(DeltaOp::DeleteLink { rel, from, to });
+        } else {
+            let values: Vec<u32> =
+                r.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+            ops.push(DeltaOp::InsertLink { rel, from, to, values });
+        }
+    }
+    DeltaBatch::new(ops)
+}
+
+const DELTA_CASES: u64 = 20;
+
+#[test]
+fn prop_delta_insert_then_delete_is_noop() {
+    // applying a batch and then its inverse restores every resident
+    // ct-table bit-for-bit (the maintained digest covers them all)
+    for seed in 1300..1300 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let d0 = m.digest();
+        let batch = random_link_batch(&mut rng, m.db(), 6);
+        if batch.is_empty() {
+            continue;
+        }
+        // build the exact inverse against the post-batch state
+        let inverse: Vec<DeltaOp> = batch
+            .ops
+            .iter()
+            .rev()
+            .map(|op| match op {
+                DeltaOp::InsertLink { rel, from, to, .. } => {
+                    DeltaOp::DeleteLink { rel: *rel, from: *from, to: *to }
+                }
+                DeltaOp::DeleteLink { rel, from, to } => {
+                    let t = m.db().index(*rel).unwrap().lookup(*from, *to).unwrap();
+                    let values: Vec<u32> = (0..m.db().rels[*rel].cols.len())
+                        .map(|a| m.db().rels[*rel].value(a, t))
+                        .collect();
+                    DeltaOp::InsertLink { rel: *rel, from: *from, to: *to, values }
+                }
+                DeltaOp::InsertEntity { .. } => unreachable!("link batch"),
+            })
+            .collect();
+        m.apply(&batch).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        m.apply(&DeltaBatch::new(inverse))
+            .unwrap_or_else(|e| panic!("seed {seed} (inverse): {e}"));
+        assert_eq!(m.digest(), d0, "seed {seed}: caches did not round-trip");
+    }
+}
+
+#[test]
+fn prop_delta_application_is_order_independent() {
+    // within a batch over distinct pairs, op order must not matter for
+    // the maintained caches
+    for seed in 1400..1400 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let batch = random_link_batch(&mut rng, &db, 6);
+        if batch.len() < 2 {
+            continue;
+        }
+        let mut shuffled = batch.ops.clone();
+        rng.shuffle(&mut shuffled);
+        let mut a = MaintainedCounts::build(db.clone(), MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let mut b = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        a.apply(&batch).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        b.apply(&DeltaBatch::new(shuffled))
+            .unwrap_or_else(|e| panic!("seed {seed} (shuffled): {e}"));
+        assert_eq!(a.digest(), b.digest(), "seed {seed}: order changed the caches");
+    }
+}
+
+#[test]
+fn prop_delta_counts_never_go_negative() {
+    // random churn (incl. entity inserts) must keep every resident table
+    // non-negative and every complete total at the population product —
+    // apply() verifies both internally (MaintainConfig::verify is on by
+    // default), so a violation fails loudly here; re-check a family
+    // against brute force for good measure
+    for seed in 1500..1500 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for step in 0..2 {
+            let mut batch = random_link_batch(&mut rng, m.db(), 5);
+            let et = rng.gen_range(m.db().schema.entities.len() as u64) as usize;
+            let values: Vec<u32> = m.db().schema.entities[et]
+                .attrs
+                .iter()
+                .map(|a| rng.gen_u32(a.card))
+                .collect();
+            batch.ops.push(DeltaOp::InsertEntity { et, values });
+            m.apply(&batch)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+        }
+        let (vars, ctx) = random_family(&mut rng, m.db());
+        let got = m
+            .ct_for_family(&vars, &ctx)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        got.assert_counts_nonnegative().unwrap();
+        let want = brute_force_complete(m.db(), &vars, &ctx).unwrap();
+        assert_eq!(got.n_rows(), want.n_rows(), "seed {seed}");
+        for (v, c) in want.iter_rows() {
+            assert_eq!(got.get(&v).unwrap(), c, "seed {seed} {v:?}");
         }
     }
 }

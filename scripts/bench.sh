@@ -36,4 +36,9 @@ echo "== exp planner (scale $SCALE, presets $PRESETS) =="
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --json "$ROOT/BENCH_planner.json"
 
-echo "bench.sh: wrote BENCH_scaling.json and BENCH_planner.json"
+echo "== exp churn (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp churn \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --churn 0.01,0.05 --json "$ROOT/BENCH_churn.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json and BENCH_churn.json"
