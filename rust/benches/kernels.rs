@@ -59,8 +59,8 @@ fn main() {
     ms.push(bench(&format!("bdeu_rust_scalar_x{b}"), 2, 30, || {
         let mut total = 0.0;
         for req in &reqs {
-            let ar = req.alpha_row();
-            let ac = req.alpha_cell();
+            let ar = req.alpha_row().unwrap();
+            let ac = req.alpha_cell().unwrap();
             for j in 0..req.q {
                 let row = &req.counts[j * req.r..(j + 1) * req.r];
                 let nij: f64 = row.iter().sum();

@@ -16,7 +16,10 @@ use crate::delta::policy::MaintenanceMode;
 use crate::error::Result;
 use crate::learn::search::SearchConfig;
 use crate::metrics::report::{
-    ChurnRow, PlannerRow, RunRow, ScalingRow, Table4Row, Table5Row,
+    ChurnRow, PlannerRow, RunRow, ScalingRow, ServeRow, Table4Row, Table5Row,
+};
+use crate::serve::{
+    enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
 };
 use crate::strategies::adaptive::Adaptive;
 use crate::strategies::traits::StrategyConfig;
@@ -352,6 +355,72 @@ pub fn churn_rows(
     Ok(rows)
 }
 
+/// The serving-throughput experiment (`relcount exp serve`,
+/// `benches/serve_throughput.rs`, EXPERIMENTS.md §E12): build the
+/// serving engine per preset, synthesize the deterministic
+/// singleton/pair request workload (repeated `repeat` times so the
+/// micro-batcher has a queue to drain), and run a full serve session
+/// while a seeded churn stream publishes `churn_steps` generations
+/// concurrently.  Rows are per generation; any in-protocol error fails
+/// the experiment (served counts must never fail under churn).
+pub fn serve_rows(
+    cfg: &ExpConfig,
+    workers: usize,
+    churn_frac: f64,
+    churn_steps: usize,
+    repeat: usize,
+) -> Result<Vec<ServeRow>> {
+    let workers = crate::coordinator::resolve_workers(workers);
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let db = generate(&preset(name, cfg.scale, cfg.seed)?)?;
+        let base = MaintainConfig {
+            mem_budget: None,
+            workers,
+            max_chain_length: cfg.search.max_chain_length,
+            ..Default::default()
+        };
+        let engine = ServeEngine::build(db, base)?;
+        let reqs =
+            enumerate_requests(engine.db(), cfg.search.max_chain_length, usize::MAX)?;
+        let one_pass: String = reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+        let input = one_pass.repeat(repeat.max(1));
+
+        let opts = ServeOptions {
+            database: name.to_string(),
+            workers,
+            feed: if churn_steps == 0 {
+                DeltaFeed::None
+            } else {
+                DeltaFeed::Churn {
+                    frac: churn_frac,
+                    steps: churn_steps,
+                    seed: cfg.seed ^ 0x5E47E,
+                }
+            },
+            // spread publishes across the serving window so requests
+            // actually span several generations
+            delta_pause: Duration::from_millis(2),
+            ..Default::default()
+        };
+        let summary = run_serve(
+            engine,
+            std::io::Cursor::new(input),
+            std::io::sink(),
+            &opts,
+        )?;
+        if summary.errors > 0 || !summary.publish_failures.is_empty() {
+            return Err(crate::error::Error::Data(format!(
+                "exp serve: {} request errors, {} publish failures on {name}",
+                summary.errors,
+                summary.publish_failures.len()
+            )));
+        }
+        rows.extend(summary.rows);
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -463,6 +532,24 @@ mod tests {
             assert_eq!(a.digest, b.digest);
             assert_eq!(a.cells_touched, b.cells_touched);
         }
+    }
+
+    #[test]
+    fn serve_rows_shapes() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = serve_rows(&cfg, 2, 0.05, 1, 2).unwrap();
+        assert!(!rows.is_empty());
+        let total: u64 = rows.iter().map(|r| r.requests).sum();
+        assert!(total > 0);
+        for r in &rows {
+            assert_eq!(r.errors, 0, "{r:?}");
+            assert_eq!(r.workers, 2);
+            assert!(r.epoch <= 1);
+        }
+        // static serving lands every request on generation 0
+        let quiet = serve_rows(&cfg, 1, 0.0, 0, 1).unwrap();
+        assert_eq!(quiet.len(), 1);
+        assert_eq!(quiet[0].epoch, 0);
     }
 
     #[test]

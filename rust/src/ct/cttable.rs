@@ -255,6 +255,26 @@ impl CtTable {
             + self.counts.capacity() * 40
     }
 
+    /// Deterministic content digest: variables, dims, and rows hashed in
+    /// sorted key order — identical tables hash identically regardless of
+    /// insertion order or hash-map layout.  The serving protocol stamps
+    /// this onto every count response so clients (and the CI smoke) can
+    /// compare answers across runs and worker counts without shipping
+    /// full tables.
+    pub fn digest(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::util::fxhash::FxHasher::default();
+        self.vars.hash(&mut h);
+        self.dims.hash(&mut h);
+        let mut rows: Vec<(u128, i128)> = self.iter_keys().collect();
+        rows.sort_unstable();
+        for (k, c) in rows {
+            k.hash(&mut h);
+            c.hash(&mut h);
+        }
+        h.finish()
+    }
+
     /// Render as an aligned text table (quickstart / debugging).
     pub fn render(&self, schema: &Schema) -> String {
         let mut out = String::new();
@@ -370,6 +390,19 @@ mod tests {
         let mut t = table();
         t.add(&[0, 0, 0], -1).unwrap();
         assert!(t.assert_counts_nonnegative().is_err());
+    }
+
+    #[test]
+    fn digest_is_insertion_order_independent() {
+        let mut a = table();
+        a.add(&[0, 0, 0], 5).unwrap();
+        a.add(&[1, 1, 1], 2).unwrap();
+        let mut b = table();
+        b.add(&[1, 1, 1], 2).unwrap();
+        b.add(&[0, 0, 0], 5).unwrap();
+        assert_eq!(a.digest(), b.digest());
+        b.add(&[1, 2, 2], 1).unwrap();
+        assert_ne!(a.digest(), b.digest());
     }
 
     #[test]

@@ -54,14 +54,14 @@ use crate::meta::extract::vars_for_entity;
 use crate::meta::rvar::RVar;
 use crate::metrics::timing::PhaseTimer;
 use crate::strategies::adaptive::Adaptive;
-use crate::strategies::cache::CtCache;
+use crate::strategies::cache::{digest_caches, CtCache};
 use crate::strategies::common::{
     entity_key, lp_key, run_positive_task, LatticeCtx, PositiveTask,
 };
 use crate::strategies::precount::Precount;
 use crate::strategies::traits::{CountingStrategy, StrategyReport};
 use crate::strategies::StrategyKind;
-use crate::util::fxhash::{FxHasher, FxHashSet};
+use crate::util::fxhash::FxHashSet;
 
 /// Configuration of a [`MaintainedCounts`].
 #[derive(Clone, Copy, Debug)]
@@ -324,6 +324,11 @@ impl MaintainedCounts {
     /// recounts) never ran, so all further use of this instance errors
     /// — rebuild from the tables to recover.  This keeps a failed batch
     /// from silently serving stale counts.
+    ///
+    /// The serving layer ([`crate::serve::ServeEngine`]) applies batches
+    /// to a clone of the last-good state, so there a failure is reported
+    /// on publish while the previous generation keeps serving — the
+    /// poison never reaches readers.
     pub fn apply(&mut self, batch: &DeltaBatch) -> Result<DeltaReport> {
         self.check_poisoned()?;
         match self.apply_inner(batch) {
@@ -727,25 +732,28 @@ impl MaintainedCounts {
 
     /// Deterministic digest of every resident table (keys and rows in
     /// sorted order) — the churn experiment's cross-run/bit-identity
-    /// witness.
+    /// witness.  Shares its algorithm with
+    /// [`crate::serve::Generation::digest`], so a snapshot taken from
+    /// this state hashes identically to it.
     pub fn digest(&self) -> u64 {
-        use std::hash::{Hash, Hasher};
-        let mut h = FxHasher::default();
-        for (tag, cache) in [(0u8, &self.positive), (1u8, &self.complete)] {
-            let mut entries: Vec<_> = cache.iter().collect();
-            entries.sort_by(|a, b| a.0.cmp(b.0));
-            for (key, t) in entries {
-                tag.hash(&mut h);
-                key.hash(&mut h);
-                let mut rows: Vec<(u128, i128)> = t.iter_keys().collect();
-                rows.sort_unstable();
-                for (k, c) in rows {
-                    k.hash(&mut h);
-                    c.hash(&mut h);
-                }
-            }
-        }
-        h.finish()
+        digest_caches(&[(0u8, &self.positive), (1u8, &self.complete)])
+    }
+
+    /// Freeze the current state into an immutable serving generation
+    /// (deep copy of the database and every resident table).  Errors on
+    /// a poisoned instance: a half-applied batch must never be
+    /// published.  The serving layer ([`crate::serve`]) publishes these
+    /// through an epoch-versioned [`crate::serve::SnapshotStore`].
+    pub fn snapshot(&self, epoch: u64) -> Result<crate::serve::Generation> {
+        self.check_poisoned()?;
+        Ok(crate::serve::Generation::from_parts(
+            epoch,
+            self.db.clone(),
+            self.ctx.lattice.clone(),
+            self.plan.clone(),
+            self.positive.clone(),
+            self.complete.clone(),
+        ))
     }
 }
 

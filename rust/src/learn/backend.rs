@@ -27,10 +27,11 @@ pub trait ScoreBackend {
     fn scores(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>>;
 }
 
-/// Scalar BDeu on a dense (q, r) matrix.
-pub fn bdeu_matrix(req: &FamilyCounts) -> f64 {
-    let ar = req.alpha_row();
-    let ac = req.alpha_cell();
+/// Scalar BDeu on a dense (q, r) matrix.  Errors on degenerate shapes
+/// (q or r zero) instead of scoring with NaN/inf alphas.
+pub fn bdeu_matrix(req: &FamilyCounts) -> Result<f64> {
+    let ar = req.alpha_row()?;
+    let ac = req.alpha_cell()?;
     let lg_ar = ln_gamma(ar);
     let lg_ac = ln_gamma(ac);
     let mut s = 0.0;
@@ -46,7 +47,7 @@ pub fn bdeu_matrix(req: &FamilyCounts) -> f64 {
             }
         }
     }
-    s
+    Ok(s)
 }
 
 /// The in-process scorer.
@@ -59,7 +60,7 @@ impl ScoreBackend for RustBackend {
     }
 
     fn scores(&mut self, reqs: &[FamilyCounts]) -> Result<Vec<f64>> {
-        Ok(reqs.iter().map(bdeu_matrix).collect())
+        reqs.iter().map(bdeu_matrix).collect()
     }
 }
 
@@ -105,7 +106,7 @@ impl ScoreBackend for XlaBackend {
                 xla_idx.push(i);
                 xla_reqs.push(req.clone());
             } else {
-                out[i] = bdeu_matrix(req);
+                out[i] = bdeu_matrix(req)?;
                 self.fallback_scored += 1;
             }
         }
@@ -135,13 +136,21 @@ mod tests {
         };
         let mut b = RustBackend;
         let got = b.scores(std::slice::from_ref(&req)).unwrap()[0];
-        assert!((got - bdeu_matrix(&req)).abs() < 1e-15);
+        assert!((got - bdeu_matrix(&req).unwrap()).abs() < 1e-15);
         assert_eq!(b.name(), "rust");
     }
 
     #[test]
     fn bdeu_matrix_zero_counts() {
         let req = FamilyCounts { counts: vec![0.0; 8], q: 4, r: 2, n_prime: 2.0 };
-        assert_eq!(bdeu_matrix(&req), 0.0);
+        assert_eq!(bdeu_matrix(&req).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn degenerate_family_is_a_typed_error_not_nan() {
+        let req = FamilyCounts { counts: vec![], q: 0, r: 2, n_prime: 1.0 };
+        assert!(bdeu_matrix(&req).is_err());
+        let mut b = RustBackend;
+        assert!(b.scores(std::slice::from_ref(&req)).is_err());
     }
 }

@@ -149,7 +149,7 @@ mod tests {
         let m = family_matrix(&ct, &child, 1.0).unwrap().unwrap();
         assert_eq!(m.q, 2 * 4);
         assert_eq!(m.r, 3);
-        let via_matrix = crate::learn::backend::bdeu_matrix(&m);
+        let via_matrix = crate::learn::backend::bdeu_matrix(&m).unwrap();
         let via_sparse = bdeu_from_ct(&ct, &child, 1.0).unwrap();
         assert!((via_matrix - via_sparse).abs() < 1e-9);
     }

@@ -39,6 +39,11 @@
 //!   streaming fact inserts *and* retractions — per-tuple join-row
 //!   deltas, the delta-Möbius, and a planner-driven
 //!   delta-vs-recount policy (`relcount apply`, `relcount exp churn`),
+//! - **snapshot-isolated serving** ([`serve`]): immutable epoch-stamped
+//!   cache generations behind an atomic publish point, so any number of
+//!   reader threads answer count/score requests lock-free while the
+//!   delta writer builds the next generation (`relcount serve`, line-
+//!   delimited JSON on stdin or TCP, micro-batched over the pool),
 //! - seeded **synthetic dataset generators** ([`datagen`]) with one
 //!   preset per benchmark database of the paper's Table 4,
 //! - **metrics** ([`metrics`]) reproducing the paper's runtime breakdown
@@ -63,6 +68,7 @@ pub mod meta;
 pub mod metrics;
 pub mod pipeline;
 pub mod runtime;
+pub mod serve;
 pub mod strategies;
 pub mod util;
 

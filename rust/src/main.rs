@@ -21,6 +21,7 @@
 //!   relcount exp scaling --workers-list 1,2,4 --presets uw
 //!   relcount gen --preset imdb --scale 0.1 --out /tmp/imdb
 
+use std::io::{BufRead, BufReader};
 use std::path::Path;
 use std::process::ExitCode;
 use std::time::Duration;
@@ -30,7 +31,7 @@ use relcount::bench::driver::{
 };
 use relcount::bench::experiments::{
     churn_rows, coordinator_scaling_rows, fig3_fig4_rows, planner_sweep_rows,
-    table4_rows, table5_rows, ExpConfig,
+    serve_rows, table4_rows, table5_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -42,10 +43,14 @@ use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
 use relcount::metrics::report::{
     churn_rows_to_json, planner_rows_to_json, render_churn, render_fig3, render_fig4,
-    render_planner, render_scaling, render_table4, render_table5,
-    scaling_rows_to_json,
+    render_planner, render_scaling, render_serve, render_table4, render_table5,
+    scaling_rows_to_json, serve_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
+use relcount::serve::{
+    enumerate_requests, parse_delta_stream, run_serve, serve_listener, DeltaFeed,
+    ServeEngine, ServeOptions,
+};
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
 use relcount::util::cli::Args;
@@ -63,7 +68,12 @@ USAGE:
   relcount apply     (--preset <name> | --db <dir>) --deltas FILE
                      [--mode auto|delta|recount] [--mem-budget ...]
                      [--workers N|auto] [--out <dir>]
-  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn> [--scale F]
+  relcount serve     (--preset <name> | --db <dir>) [--requests FILE | --port N]
+                     [--deltas FILE | --churn F --churn-steps K]
+                     [--workers N|auto] [--mem-budget ...] [--batch-max N]
+                     [--delta-pause-ms N] [--json FILE]
+  relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
+  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve> [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
                      [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
@@ -81,6 +91,13 @@ USAGE:
   inserts) through the maintained caches; `exp churn` measures delta
   maintenance against invalidate-and-recount at the given churn
   fractions (BENCH_churn.json).
+  `serve` answers line-delimited JSON count/score requests (stdin,
+  --requests FILE, or one TCP client at a time on --port) from
+  snapshot-isolated cache generations, micro-batched over the reader
+  pool, while --deltas (line-delimited batches) or --churn publish new
+  generations concurrently; responses go to stdout, per-generation
+  metrics to stderr (--json writes BENCH_serve.json rows).
+  `gen-requests` emits a deterministic request workload for a database.
 ";
 
 fn main() -> ExitCode {
@@ -292,6 +309,98 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
+        Some("serve") => {
+            let (name, db) = load_db(&args)?;
+            let cfg = MaintainConfig {
+                mem_budget: args.mem_budget()?,
+                workers: args.workers()?,
+                ..Default::default()
+            };
+            let feed = if let Some(path) = args.get("deltas") {
+                let text = std::fs::read_to_string(path)?;
+                DeltaFeed::Batches(parse_delta_stream(&text)?)
+            } else if args.get("churn").is_some() {
+                DeltaFeed::Churn {
+                    frac: args.get_f64("churn", 0.05)?,
+                    steps: args.get_usize("churn-steps", 3)?,
+                    seed: args.get_usize("seed", 0)? as u64 ^ 0x5E47E,
+                }
+            } else {
+                DeltaFeed::None
+            };
+            let opts = ServeOptions {
+                database: name.clone(),
+                workers: args.workers()?,
+                batch_max: args.get_usize("batch-max", 64)?,
+                feed,
+                delta_pause: Duration::from_millis(
+                    args.get_usize("delta-pause-ms", 0)? as u64,
+                ),
+            };
+            eprintln!(
+                "building serving engine for {name} ({} workers)...",
+                relcount::coordinator::resolve_workers(opts.workers)
+            );
+            if args.get("port").is_some() && args.get("requests").is_some() {
+                return Err(Error::Data(
+                    "--port and --requests are mutually exclusive: TCP sessions \
+                     read requests from the socket"
+                        .into(),
+                ));
+            }
+            let engine = ServeEngine::build(db, cfg)?;
+            let summary = if let Some(port) = args.get("port") {
+                let port: u16 = port.parse().map_err(|_| {
+                    Error::Data(format!("--port expects a TCP port, got {port:?}"))
+                })?;
+                let listener =
+                    std::net::TcpListener::bind(("127.0.0.1", port))?;
+                eprintln!(
+                    "serving {name} on {} (send {{\"op\":\"shutdown\"}} to stop)",
+                    listener.local_addr()?
+                );
+                serve_listener(engine, listener, &opts)?
+            } else {
+                let input: Box<dyn BufRead + Send> = match args.get("requests") {
+                    Some(path) => {
+                        Box::new(BufReader::new(std::fs::File::open(path)?))
+                    }
+                    None => Box::new(BufReader::new(std::io::stdin())),
+                };
+                run_serve(engine, input, std::io::stdout(), &opts)?
+            };
+            eprint!("{}", render_serve(&summary.rows));
+            for (i, e) in &summary.publish_failures {
+                eprintln!("publish failure on batch {i}: {e} (previous generation kept serving)");
+            }
+            eprintln!(
+                "serve: {} requests ({} errors), {} generations published, \
+                 final epoch {} digest {:016x}",
+                summary.requests,
+                summary.errors,
+                summary.publishes,
+                summary.final_epoch,
+                summary.final_digest
+            );
+            write_json(&args, serve_rows_to_json(&summary.rows))?;
+            Ok(())
+        }
+        Some("gen-requests") => {
+            let (_, db) = load_db(&args)?;
+            let limit = args.get_usize("limit", 200)?;
+            let chain = args.get_usize("chain", 3)?;
+            let reqs = enumerate_requests(&db, chain, limit)?;
+            let lines: String =
+                reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+            match args.get("out") {
+                Some(path) => {
+                    std::fs::write(path, &lines)?;
+                    eprintln!("wrote {} requests to {path}", reqs.len());
+                }
+                None => print!("{lines}"),
+            }
+            Ok(())
+        }
         Some("exp") => {
             let which = args
                 .positional
@@ -299,7 +408,7 @@ fn run() -> Result<()> {
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
                     Error::Data(
-                        "exp needs fig3|fig4|table4|table5|scaling|planner|churn"
+                        "exp needs fig3|fig4|table4|table5|scaling|planner|churn|serve"
                             .into(),
                     )
                 })?;
@@ -332,6 +441,15 @@ fn run() -> Result<()> {
                         ));
                     }
                     write_json(&args, churn_rows_to_json(&rows))?;
+                }
+                "serve" => {
+                    let workers = args.workers()?;
+                    let frac = args.get_f64("churn-frac", 0.05)?;
+                    let steps = args.get_usize("churn-steps", 3)?;
+                    let repeat = args.get_usize("repeat", 4)?;
+                    let rows = serve_rows(&cfg, workers, frac, steps, repeat)?;
+                    print!("{}", render_serve(&rows));
+                    write_json(&args, serve_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }

@@ -14,19 +14,33 @@ pub struct MemTracker {
 }
 
 impl MemTracker {
+    /// Saturating: a tracker fed absurd sizes pins at `usize::MAX`
+    /// instead of wrapping (wrapped totals would *underreport* peaks,
+    /// the one failure mode a memory profile must not have).
     pub fn add(&mut self, bytes: usize) {
-        self.current_bytes += bytes;
+        self.current_bytes = self.current_bytes.saturating_add(bytes);
         self.peak_bytes = self.peak_bytes.max(self.current_bytes);
     }
 
+    /// Subtract released bytes.  Releasing more than is tracked means a
+    /// caller's byte accounting drifted (e.g. a `CtCache::apply_delta`
+    /// double-subtract) — that fails loudly in debug/test builds
+    /// instead of being masked by saturation; release builds still
+    /// saturate so a drifted profile cannot wrap into nonsense.
     pub fn sub(&mut self, bytes: usize) {
+        debug_assert!(
+            self.current_bytes >= bytes,
+            "MemTracker underflow: sub({bytes}) from {} tracked bytes",
+            self.current_bytes
+        );
         self.current_bytes = self.current_bytes.saturating_sub(bytes);
     }
 
     /// Record a transient allocation that lives only within one
     /// operation (counts toward the peak, not the current level).
+    /// Saturating, like [`MemTracker::add`].
     pub fn observe_transient(&mut self, bytes: usize) {
-        self.peak_bytes = self.peak_bytes.max(self.current_bytes + bytes);
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes.saturating_add(bytes));
     }
 
     pub fn merge_peak(&mut self, other: &MemTracker) {
@@ -61,6 +75,29 @@ mod tests {
         m.observe_transient(1000);
         assert_eq!(m.peak_bytes, 1030);
         assert_eq!(m.current_bytes, 30);
+    }
+
+    #[test]
+    fn add_and_transient_saturate_instead_of_wrapping() {
+        let mut m = MemTracker::default();
+        m.add(usize::MAX - 10);
+        m.add(100); // would wrap with unchecked +=
+        assert_eq!(m.current_bytes, usize::MAX);
+        assert_eq!(m.peak_bytes, usize::MAX);
+
+        let mut t = MemTracker { current_bytes: usize::MAX - 5, peak_bytes: 0 };
+        t.observe_transient(50); // would overflow current + bytes
+        assert_eq!(t.peak_bytes, usize::MAX);
+        assert_eq!(t.current_bytes, usize::MAX - 5);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "MemTracker underflow")]
+    fn sub_underflow_fails_loudly_in_debug() {
+        let mut m = MemTracker::default();
+        m.add(10);
+        m.sub(11);
     }
 
     #[test]

@@ -382,6 +382,96 @@ pub fn churn_rows_to_json(rows: &[ChurnRow]) -> Json {
     )
 }
 
+/// One generation's serving metrics from a `relcount serve` session:
+/// request mix, latency, throughput and micro-batch queue depth, keyed
+/// by the epoch the requests were answered from (`exp serve`,
+/// `benches/serve_throughput.rs`, EXPERIMENTS.md §E12).
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    pub database: String,
+    /// Generation the requests in this row were served from.
+    pub epoch: u64,
+    pub requests: u64,
+    pub count_requests: u64,
+    pub score_requests: u64,
+    /// In-protocol error responses (the session keeps going).
+    pub errors: u64,
+    /// Micro-batches dispatched against this generation.
+    pub batches: u64,
+    /// Largest micro-batch drained in one dispatch — the queue-depth
+    /// proxy (capped by `--batch-max`).
+    pub max_queue_depth: u64,
+    /// Mean enqueue-to-response latency.
+    pub mean_latency: Duration,
+    pub max_latency: Duration,
+    /// Requests per second over this generation's serving window.
+    pub throughput_rps: f64,
+    pub workers: usize,
+}
+
+/// Render a serve session's per-generation rows (`exp serve` and the
+/// `serve_throughput` bench).
+pub fn render_serve(rows: &[ServeRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>10} {:>10} {:>10}\n",
+        "database",
+        "epoch",
+        "requests",
+        "counts",
+        "scores",
+        "errors",
+        "batches",
+        "queue",
+        "mean_ms",
+        "max_ms",
+        "req_per_s"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>10.3} {:>10.3} {:>10.1}\n",
+            r.database,
+            r.epoch,
+            r.requests,
+            r.count_requests,
+            r.score_requests,
+            r.errors,
+            r.batches,
+            r.max_queue_depth,
+            r.mean_latency.as_secs_f64() * 1e3,
+            r.max_latency.as_secs_f64() * 1e3,
+            r.throughput_rps
+        ));
+    }
+    out
+}
+
+/// Machine-readable serve rows (written to `BENCH_serve.json` by
+/// `scripts/bench.sh`).  Key set is schema-stable; the request mix is
+/// seed-deterministic, the timing fields are not.
+pub fn serve_rows_to_json(rows: &[ServeRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("epoch", Json::Num(r.epoch as f64)),
+                    ("requests", Json::Num(r.requests as f64)),
+                    ("count_requests", Json::Num(r.count_requests as f64)),
+                    ("score_requests", Json::Num(r.score_requests as f64)),
+                    ("errors", Json::Num(r.errors as f64)),
+                    ("batches", Json::Num(r.batches as f64)),
+                    ("max_queue_depth", Json::Num(r.max_queue_depth as f64)),
+                    ("mean_latency_s", Json::Num(r.mean_latency.as_secs_f64())),
+                    ("max_latency_s", Json::Num(r.max_latency.as_secs_f64())),
+                    ("throughput_rps", Json::Num(r.throughput_rps)),
+                    ("workers", Json::Num(r.workers as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -549,6 +639,42 @@ mod tests {
         assert_eq!(row.get("digest").unwrap().as_str(), Some("deadbeefdeadbeef"));
         assert_eq!(row.get("speedup").unwrap().as_f64(), Some(10.0));
         assert_eq!(row.get("consistent").unwrap(), &Json::Bool(true));
+    }
+
+    fn serve_row() -> ServeRow {
+        ServeRow {
+            database: "uw".into(),
+            epoch: 2,
+            requests: 40,
+            count_requests: 30,
+            score_requests: 10,
+            errors: 0,
+            batches: 5,
+            max_queue_depth: 16,
+            mean_latency: Duration::from_micros(250),
+            max_latency: Duration::from_millis(2),
+            throughput_rps: 1234.5,
+            workers: 4,
+        }
+    }
+
+    #[test]
+    fn renders_serve() {
+        let s = render_serve(&[serve_row()]);
+        assert!(s.contains("uw"));
+        assert!(s.contains("1234.5"));
+        assert!(s.contains("0.250")); // mean latency in ms
+    }
+
+    #[test]
+    fn serve_json_shapes() {
+        let j = serve_rows_to_json(&[serve_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("epoch").unwrap().as_f64(), Some(2.0));
+        assert_eq!(row.get("requests").unwrap().as_f64(), Some(40.0));
+        assert_eq!(row.get("throughput_rps").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(row.get("workers").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

@@ -28,12 +28,37 @@ pub struct FamilyCounts {
 }
 
 impl FamilyCounts {
-    pub fn alpha_row(&self) -> f64 {
-        self.n_prime / self.q as f64
+    /// Reject degenerate shapes before any alpha math: a family with an
+    /// empty parent-configuration space or a zero-arity child has no
+    /// BDeu score, and dividing by `q` / `q*r` anyway would send
+    /// NaN/inf silently into every downstream score.
+    fn check_dims(&self) -> Result<()> {
+        if self.q == 0 || self.r == 0 {
+            return Err(Error::Runtime(format!(
+                "degenerate family counts (q={}, r={}): no BDeu alphas exist",
+                self.q, self.r
+            )));
+        }
+        Ok(())
     }
 
-    pub fn alpha_cell(&self) -> f64 {
-        self.n_prime / (self.q * self.r) as f64
+    /// BDeu row pseudocount `N'/q`; errors on degenerate (q, r).
+    pub fn alpha_row(&self) -> Result<f64> {
+        self.check_dims()?;
+        Ok(self.n_prime / self.q as f64)
+    }
+
+    /// BDeu cell pseudocount `N'/(q·r)`; errors on degenerate (q, r)
+    /// and on a `q*r` too large to represent.
+    pub fn alpha_cell(&self) -> Result<f64> {
+        self.check_dims()?;
+        let cells = self.q.checked_mul(self.r).ok_or_else(|| {
+            Error::Runtime(format!(
+                "family counts shape overflows: q={} * r={}",
+                self.q, self.r
+            ))
+        })?;
+        Ok(self.n_prime / cells as f64)
     }
 }
 
@@ -101,8 +126,8 @@ impl<'r> ScoreBatcher<'r> {
                 let dst = base + j * self.r_pad;
                 counts[dst..dst + req.r].copy_from_slice(&req.counts[src..src + req.r]);
             }
-            ar[b] = req.alpha_row();
-            ac[b] = req.alpha_cell();
+            ar[b] = req.alpha_row()?;
+            ac[b] = req.alpha_cell()?;
         }
         self.dispatches += 1;
         let scores = self.rt.bdeu_batch(&counts, &ar, &ac)?;
@@ -243,8 +268,26 @@ mod tests {
     #[test]
     fn alphas() {
         let fc = FamilyCounts { counts: vec![0.0; 6], q: 3, r: 2, n_prime: 6.0 };
-        assert_eq!(fc.alpha_row(), 2.0);
-        assert_eq!(fc.alpha_cell(), 1.0);
+        assert_eq!(fc.alpha_row().unwrap(), 2.0);
+        assert_eq!(fc.alpha_cell().unwrap(), 1.0);
+    }
+
+    #[test]
+    fn degenerate_shapes_error_instead_of_nan() {
+        for (q, r) in [(0usize, 2usize), (3, 0), (0, 0)] {
+            let fc = FamilyCounts { counts: vec![], q, r, n_prime: 1.0 };
+            assert!(fc.alpha_row().is_err(), "q={q} r={r}");
+            assert!(fc.alpha_cell().is_err(), "q={q} r={r}");
+        }
+        // q*r overflow is caught, not wrapped
+        let big = FamilyCounts {
+            counts: vec![],
+            q: usize::MAX / 2,
+            r: 3,
+            n_prime: 1.0,
+        };
+        assert!(big.alpha_row().is_ok()); // q alone is representable
+        assert!(big.alpha_cell().is_err());
     }
 
     #[test]

@@ -1,0 +1,215 @@
+//! The serving engine: one writer, many readers, epoch-versioned
+//! publishes.
+//!
+//! [`ServeEngine`] owns the mutable [`MaintainedCounts`] (the *writer*)
+//! and a shared [`SnapshotStore`].  Applying a [`DeltaBatch`] goes
+//! through [`ServeEngine::apply_publish`]:
+//!
+//! 1. clone the last-good writer state,
+//! 2. apply the batch to the clone (delta maintenance, sharded over the
+//!    writer's worker pool exactly as in `relcount apply`),
+//! 3. on success, freeze the clone into generation N+1 and publish it
+//!    atomically; on failure, drop the clone — the writer still holds
+//!    generation N and the store keeps serving it.
+//!
+//! This turns PR 3's "poison on mid-batch failure" semantics into
+//! *publish-or-keep-serving*: the poison is confined to the discarded
+//! clone, the failure is reported to the caller of `apply_publish`, and
+//! readers never see it.  Readers dispatch batches of count requests
+//! over a worker pool with [`serve_batch`] — each distinct family is
+//! routed to one worker by cache-key hash (the coordinator's post-count
+//! sharding) and results come back in request order.
+
+use std::sync::Arc;
+
+use crate::coordinator::shard::shard_of;
+use crate::coordinator::{pool, resolve_workers};
+use crate::ct::cttable::CtTable;
+use crate::db::catalog::Database;
+use crate::delta::{DeltaBatch, DeltaReport, MaintainConfig, MaintainedCounts};
+use crate::error::Result;
+use crate::meta::rvar::RVar;
+use crate::serve::snapshot::{Generation, SnapshotStore};
+use crate::strategies::cache::CtCache;
+use crate::strategies::traits::FamilyRequest;
+
+/// Writer half of the serving layer (see the module docs).
+pub struct ServeEngine {
+    writer: MaintainedCounts,
+    store: Arc<SnapshotStore>,
+}
+
+impl ServeEngine {
+    /// Build the maintained caches and publish generation 0.
+    pub fn build(db: Database, cfg: MaintainConfig) -> Result<ServeEngine> {
+        let writer = MaintainedCounts::build(db, cfg)?;
+        let store = Arc::new(SnapshotStore::new(writer.snapshot(0)?));
+        Ok(ServeEngine { writer, store })
+    }
+
+    /// Wrap an already-built maintained state (publishes it as
+    /// generation 0).
+    pub fn from_maintained(writer: MaintainedCounts) -> Result<ServeEngine> {
+        let store = Arc::new(SnapshotStore::new(writer.snapshot(0)?));
+        Ok(ServeEngine { writer, store })
+    }
+
+    /// Reader handle: clone freely, hand to any thread.
+    pub fn store(&self) -> Arc<SnapshotStore> {
+        self.store.clone()
+    }
+
+    /// Epoch of the currently published generation.
+    pub fn epoch(&self) -> u64 {
+        self.store.epoch()
+    }
+
+    /// The writer's database (the next batch's churn is generated
+    /// against this state).
+    pub fn db(&self) -> &Database {
+        self.writer.db()
+    }
+
+    /// Digest of the writer's resident caches (equals the published
+    /// generation's digest whenever no publish is in flight).
+    pub fn digest(&self) -> u64 {
+        self.writer.digest()
+    }
+
+    /// Apply one batch off to the side and publish the result as the
+    /// next generation.  On error the batch is discarded whole: the
+    /// writer keeps the last-good state, the store keeps serving the
+    /// current generation, and the error is returned to the caller —
+    /// readers are never poisoned and never see a partial batch.
+    pub fn apply_publish(&mut self, batch: &DeltaBatch) -> Result<(u64, DeltaReport)> {
+        let mut next = self.writer.clone();
+        let report = next.apply(batch)?; // Err: `next` (poisoned) is dropped
+        let epoch = self.store.epoch() + 1;
+        let snapshot = next.snapshot(epoch)?;
+        self.writer = next;
+        self.store.publish(snapshot);
+        Ok((epoch, report))
+    }
+}
+
+/// The worker that owns a family's cache key — the single routing
+/// function behind the byte-identical-across-worker-counts contract.
+/// Both [`serve_batch`] and the server's micro-batch dispatch go
+/// through here, so the invariant (stable hash, independent of worker
+/// count and request order) has one source.
+pub(crate) fn shard_for_family(vars: &[RVar], ctx_pops: &[usize], workers: usize) -> usize {
+    shard_of(&CtCache::key(vars, ctx_pops), workers.max(1))
+}
+
+/// Serve a batch of family-count requests from one generation across
+/// `workers` threads.  Families are routed by cache-key hash (stable
+/// across worker counts) and results return in request order, so the
+/// response stream is bit-identical for every worker count.  Individual
+/// request failures stay on their slot — one bad family does not fail
+/// the batch.
+pub fn serve_batch(
+    gen: &Generation,
+    reqs: &[FamilyRequest],
+    workers: usize,
+) -> Vec<Result<CtTable>> {
+    let workers = resolve_workers(workers);
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.max(1)];
+    for (i, r) in reqs.iter().enumerate() {
+        assignment[shard_for_family(&r.vars, &r.ctx_pops, workers)].push(i);
+    }
+    pool::run_shards(reqs, &assignment, |_, r| {
+        gen.ct_for_family(&r.vars, &r.ctx_pops)
+    })
+    .results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::delta::DeltaOp;
+
+    fn family() -> Vec<RVar> {
+        vec![
+            RVar::RelInd { rel: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+            RVar::EntityAttr { et: 1, attr: 0 },
+        ]
+    }
+
+    #[test]
+    fn publish_advances_epoch_and_changes_counts() {
+        let mut e = ServeEngine::build(university_db(), MaintainConfig::default())
+            .unwrap();
+        let store = e.store();
+        let g0 = store.load();
+        let before = g0.ct_for_family(&family(), &[0, 1]).unwrap();
+
+        let batch = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let (epoch, rep) = e.apply_publish(&batch).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(rep.link_deletes, 1);
+        assert_eq!(store.epoch(), 1);
+
+        // gen 0 still serves the pre-batch counts; gen 1 the post-batch
+        let after = store.load().ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(
+            g0.ct_for_family(&family(), &[0, 1]).unwrap().digest(),
+            before.digest()
+        );
+        assert_ne!(after.digest(), before.digest());
+        assert_eq!(store.load().digest(), e.digest());
+    }
+
+    #[test]
+    fn failed_batch_keeps_last_good_generation_serving() {
+        let mut e = ServeEngine::build(university_db(), MaintainConfig::default())
+            .unwrap();
+        let store = e.store();
+        let good = store.load().ct_for_family(&family(), &[0, 1]).unwrap();
+
+        // op 1 mutates, op 2 fails -> the whole batch must vanish
+        let bad = DeltaBatch::new(vec![
+            DeltaOp::InsertLink { rel: 0, from: 11, to: 0, values: vec![2, 1] },
+            DeltaOp::DeleteLink { rel: 0, from: 11, to: 18 }, // absent pair
+        ]);
+        assert!(e.apply_publish(&bad).is_err());
+        assert_eq!(store.epoch(), 0, "failed publish must not advance the epoch");
+        let still = store.load().ct_for_family(&family(), &[0, 1]).unwrap();
+        assert_eq!(still.digest(), good.digest());
+
+        // and the writer is NOT poisoned: the next good batch applies
+        let fine = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let (epoch, _) = e.apply_publish(&fine).unwrap();
+        assert_eq!(epoch, 1);
+        assert_ne!(
+            store.load().ct_for_family(&family(), &[0, 1]).unwrap().digest(),
+            good.digest()
+        );
+    }
+
+    #[test]
+    fn serve_batch_is_request_ordered_and_worker_count_invariant() {
+        let e = ServeEngine::build(university_db(), MaintainConfig::default()).unwrap();
+        let g = e.store().load();
+        let reqs = vec![
+            FamilyRequest::new(&family(), &[0, 1]),
+            FamilyRequest::new(
+                &[RVar::RelInd { rel: 1 }, RVar::EntityAttr { et: 2, attr: 0 }],
+                &[1, 2],
+            ),
+            FamilyRequest::new(&family(), &[0, 1]), // duplicate
+        ];
+        let one: Vec<u64> = serve_batch(&g, &reqs, 1)
+            .into_iter()
+            .map(|r| r.unwrap().digest())
+            .collect();
+        let four: Vec<u64> = serve_batch(&g, &reqs, 4)
+            .into_iter()
+            .map(|r| r.unwrap().digest())
+            .collect();
+        assert_eq!(one, four);
+        assert_eq!(one[0], one[2]);
+        assert_ne!(one[0], one[1]);
+    }
+}

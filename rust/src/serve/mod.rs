@@ -1,0 +1,46 @@
+//! Snapshot-isolated concurrent count serving (`relcount serve`).
+//!
+//! The paper frames counting as the inner loop of model discovery, but
+//! the systems it builds on (FACTORBASE, the MySQL virtual data mart)
+//! are long-lived *services* over a live database.  This module turns
+//! the counting engine into one:
+//!
+//! - [`snapshot`] — [`Generation`]: an immutable, epoch-stamped freeze
+//!   of the maintained caches that answers `ct` queries from `&self`
+//!   (no locks, no coordination), and [`SnapshotStore`]: the
+//!   atomic-swap publish point readers load generations from;
+//! - [`engine`] — [`ServeEngine`]: the single writer.  Delta batches
+//!   apply to a private clone of the last-good state and publish as
+//!   generation N+1; a mid-batch failure is reported on publish while
+//!   generation N keeps serving (PR 3's poison never reaches readers);
+//! - [`protocol`] — the line-delimited JSON wire format (count / score
+//!   / stats / shutdown), with sorted rows and per-response content
+//!   digests so answers are byte-comparable across runs and worker
+//!   counts;
+//! - [`server`] — the threaded front-end: a request pump, a
+//!   micro-batching dispatch loop over the reader pool (one generation
+//!   load per batch — a batch never straddles a publish), and the
+//!   concurrent delta writer, on stdin or a TCP listener.
+//!
+//! The correctness contract extends the delta subsystem's differential
+//! one: every answer a reader ever observes is bit-identical to a
+//! from-scratch strategy on the database of the *exact generation
+//! stamped on the response* — never a blend of adjacent generations —
+//! and the response stream for a fixed input is byte-identical for
+//! every `--workers` count (`rust/tests/delta_equivalence.rs`,
+//! `rust/tests/serve_protocol.rs`).  Throughput, latency and queue
+//! depth are reported per generation (`relcount exp serve`,
+//! `benches/serve_throughput.rs`, EXPERIMENTS.md §E12).
+
+pub mod engine;
+pub mod protocol;
+pub mod server;
+pub mod snapshot;
+
+pub use engine::{serve_batch, ServeEngine};
+pub use protocol::{enumerate_requests, ServeRequest};
+pub use server::{
+    parse_delta_stream, run_serve, serve_listener, DeltaFeed, ServeOptions,
+    ServeSummary,
+};
+pub use snapshot::{Generation, SnapshotStore};

@@ -1,0 +1,397 @@
+//! The line-delimited JSON wire format of `relcount serve`.
+//!
+//! One request per input line, one response per output line, responses
+//! in request order.  Three operations:
+//!
+//! ```json
+//! {"id": 0, "op": "count", "vars": [{"var": "rel_ind", "rel": 0},
+//!  {"var": "entity_attr", "et": 1, "attr": 0}], "ctx": [0, 1]}
+//! {"id": 1, "op": "score", "vars": [...], "ctx": [0, 1],
+//!  "child": {"var": "entity_attr", "et": 1, "attr": 0}, "n_prime": 1.0}
+//! {"id": 2, "op": "stats"}
+//! ```
+//!
+//! A count response carries the full sorted table plus its
+//! [`CtTable::digest`] and the epoch it was served from, so clients can
+//! check snapshot consistency without shipping tables around:
+//!
+//! ```json
+//! {"digest": "89abcdef01234567", "epoch": 3, "id": 0, "ok": true,
+//!  "op": "count", "rows": [[0, 1, 5], ...], "total": 120}
+//! ```
+//!
+//! Rows are `[value codes..., count]`, sorted ascending, and object
+//! keys serialize in fixed (BTreeMap) order — so the response stream
+//! for a fixed input is **byte-identical across worker counts** (the
+//! serve smoke in CI diffs them).  Counts are exact `i128` internally;
+//! the JSON carries them as numbers (exact up to 2^53) *and* under the
+//! digest, which hashes the exact values.
+//!
+//! A failed request answers `{"error": "...", "id": N, "ok": false}` on
+//! its own line; the session keeps going.
+
+use crate::ct::cttable::CtTable;
+use crate::db::catalog::Database;
+use crate::error::{Error, Result};
+use crate::lattice::Lattice;
+use crate::meta::rvar::RVar;
+use crate::util::json::Json;
+
+/// One parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ServeRequest {
+    /// Complete ct-table of a family in a population context.
+    Count { id: u64, vars: Vec<RVar>, ctx: Vec<usize> },
+    /// BDeu family score (`child` must be among `vars`).
+    Score { id: u64, vars: Vec<RVar>, ctx: Vec<usize>, child: RVar, n_prime: f64 },
+    /// Server/generation introspection.
+    Stats { id: u64 },
+    /// Ask the server to stop accepting sessions (TCP mode; on stdin
+    /// the session simply ends at input EOF).
+    Shutdown { id: u64 },
+}
+
+impl ServeRequest {
+    pub fn id(&self) -> u64 {
+        match *self {
+            ServeRequest::Count { id, .. }
+            | ServeRequest::Score { id, .. }
+            | ServeRequest::Stats { id }
+            | ServeRequest::Shutdown { id } => id,
+        }
+    }
+
+    /// Parse one request line.
+    pub fn parse(line: &str) -> Result<ServeRequest> {
+        let j = Json::parse(line)?;
+        let id = j
+            .req("id")?
+            .as_usize()
+            .ok_or_else(|| Error::Data("`id` must be a non-negative integer".into()))?
+            as u64;
+        let op = j
+            .req("op")?
+            .as_str()
+            .ok_or_else(|| Error::Data("`op` must be a string".into()))?;
+        match op {
+            "count" => Ok(ServeRequest::Count {
+                id,
+                vars: vars_of(&j)?,
+                ctx: ctx_of(&j)?,
+            }),
+            "score" => Ok(ServeRequest::Score {
+                id,
+                vars: vars_of(&j)?,
+                ctx: ctx_of(&j)?,
+                child: rvar_from_json(j.req("child")?)?,
+                n_prime: j.get("n_prime").and_then(Json::as_f64).unwrap_or(1.0),
+            }),
+            "stats" => Ok(ServeRequest::Stats { id }),
+            "shutdown" => Ok(ServeRequest::Shutdown { id }),
+            other => Err(Error::Data(format!(
+                "unknown op {other:?} (count | score | stats | shutdown)"
+            ))),
+        }
+    }
+
+    /// Emit the wire form (used by `relcount gen-requests` and the
+    /// serve bench to synthesize request files).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ServeRequest::Count { id, vars, ctx } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("count")),
+                ("vars", vars_to_json(vars)),
+                ("ctx", usizes_to_json(ctx)),
+            ]),
+            ServeRequest::Score { id, vars, ctx, child, n_prime } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("score")),
+                ("vars", vars_to_json(vars)),
+                ("ctx", usizes_to_json(ctx)),
+                ("child", rvar_to_json(child)),
+                ("n_prime", Json::num(*n_prime)),
+            ]),
+            ServeRequest::Stats { id } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("stats")),
+            ]),
+            ServeRequest::Shutdown { id } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("shutdown")),
+            ]),
+        }
+    }
+}
+
+fn vars_of(j: &Json) -> Result<Vec<RVar>> {
+    j.req("vars")?
+        .as_arr()
+        .ok_or_else(|| Error::Data("`vars` must be an array".into()))?
+        .iter()
+        .map(rvar_from_json)
+        .collect()
+}
+
+fn ctx_of(j: &Json) -> Result<Vec<usize>> {
+    j.req("ctx")?
+        .as_arr()
+        .ok_or_else(|| Error::Data("`ctx` must be an array".into()))?
+        .iter()
+        .map(|x| {
+            x.as_usize()
+                .ok_or_else(|| Error::Data("`ctx` entries must be entity ids".into()))
+        })
+        .collect()
+}
+
+/// Parse one first-order variable:
+/// `{"var": "entity_attr", "et": E, "attr": A}` |
+/// `{"var": "rel_attr", "rel": R, "attr": A}` |
+/// `{"var": "rel_ind", "rel": R}`.
+pub fn rvar_from_json(j: &Json) -> Result<RVar> {
+    let kind = j
+        .req("var")?
+        .as_str()
+        .ok_or_else(|| Error::Data("`var` must be a string".into()))?;
+    let field = |key: &str| -> Result<usize> {
+        j.req(key)?
+            .as_usize()
+            .ok_or_else(|| Error::Data(format!("`{key}` must be a non-negative integer")))
+    };
+    match kind {
+        "entity_attr" => Ok(RVar::EntityAttr { et: field("et")?, attr: field("attr")? }),
+        "rel_attr" => Ok(RVar::RelAttr { rel: field("rel")?, attr: field("attr")? }),
+        "rel_ind" => Ok(RVar::RelInd { rel: field("rel")? }),
+        other => Err(Error::Data(format!(
+            "unknown var kind {other:?} (entity_attr | rel_attr | rel_ind)"
+        ))),
+    }
+}
+
+/// Emit one first-order variable in the wire form.
+pub fn rvar_to_json(v: &RVar) -> Json {
+    match *v {
+        RVar::EntityAttr { et, attr } => Json::obj(vec![
+            ("var", Json::str("entity_attr")),
+            ("et", Json::num(et as f64)),
+            ("attr", Json::num(attr as f64)),
+        ]),
+        RVar::RelAttr { rel, attr } => Json::obj(vec![
+            ("var", Json::str("rel_attr")),
+            ("rel", Json::num(rel as f64)),
+            ("attr", Json::num(attr as f64)),
+        ]),
+        RVar::RelInd { rel } => Json::obj(vec![
+            ("var", Json::str("rel_ind")),
+            ("rel", Json::num(rel as f64)),
+        ]),
+    }
+}
+
+fn vars_to_json(vars: &[RVar]) -> Json {
+    Json::Arr(vars.iter().map(rvar_to_json).collect())
+}
+
+fn usizes_to_json(xs: &[usize]) -> Json {
+    Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+/// Successful count response: sorted rows, exact-content digest, epoch.
+pub fn count_response(id: u64, epoch: u64, ct: &CtTable) -> Json {
+    let mut rows: Vec<(Vec<u32>, i128)> = ct.iter_rows().collect();
+    rows.sort();
+    let total: i128 = rows.iter().map(|&(_, c)| c).sum();
+    Json::obj(vec![
+        ("digest", Json::str(format!("{:016x}", ct.digest()))),
+        ("epoch", Json::num(epoch as f64)),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("count")),
+        (
+            "rows",
+            Json::Arr(
+                rows.into_iter()
+                    .map(|(vals, c)| {
+                        let mut row: Vec<Json> =
+                            vals.into_iter().map(|v| Json::num(v as f64)).collect();
+                        row.push(Json::num(c as f64));
+                        Json::Arr(row)
+                    })
+                    .collect(),
+            ),
+        ),
+        ("total", Json::num(total as f64)),
+    ])
+}
+
+/// Successful score response.
+pub fn score_response(id: u64, epoch: u64, score: f64) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::num(epoch as f64)),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("score")),
+        ("score", Json::num(score)),
+    ])
+}
+
+/// Stats response for one generation.
+pub fn stats_response(id: u64, epoch: u64, resident_bytes: usize, digest: u64) -> Json {
+    Json::obj(vec![
+        ("digest", Json::str(format!("{digest:016x}"))),
+        ("epoch", Json::num(epoch as f64)),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("stats")),
+        ("resident_bytes", Json::num(resident_bytes as f64)),
+    ])
+}
+
+/// Shutdown acknowledgement.
+pub fn shutdown_response(id: u64, epoch: u64) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::num(epoch as f64)),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("shutdown")),
+    ])
+}
+
+/// Failure response (`id` 0 when the line didn't parse far enough to
+/// carry one).
+pub fn error_response(id: u64, err: &Error) -> Json {
+    Json::obj(vec![
+        ("error", Json::str(err.to_string())),
+        ("id", Json::num(id as f64)),
+        ("ok", Json::Bool(false)),
+    ])
+}
+
+/// Deterministic request workload over a database: singleton and pair
+/// families of every lattice point (the enumeration the differential
+/// tests use), as count requests with every third family also scored
+/// against its first variable.  `limit` caps the list; ids are
+/// sequential from 0.
+pub fn enumerate_requests(
+    db: &Database,
+    max_chain_length: usize,
+    limit: usize,
+) -> Result<Vec<ServeRequest>> {
+    let lattice = Lattice::build(&db.schema, max_chain_length)?;
+    let mut out = Vec::new();
+    let mut fams: Vec<(Vec<RVar>, Vec<usize>)> = Vec::new();
+    for p in &lattice.points {
+        let vars = p.all_vars();
+        for i in 0..vars.len() {
+            fams.push((vec![vars[i]], p.pops.clone()));
+            for j in (i + 1)..vars.len() {
+                fams.push((vec![vars[i], vars[j]], p.pops.clone()));
+            }
+        }
+    }
+    for (n, (vars, ctx)) in fams.into_iter().take(limit).enumerate() {
+        let id = out.len() as u64;
+        if n % 3 == 2 {
+            out.push(ServeRequest::Score {
+                id,
+                child: vars[0],
+                vars,
+                ctx,
+                n_prime: 1.0,
+            });
+        } else {
+            out.push(ServeRequest::Count { id, vars, ctx });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::{university_db, university_schema};
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            ServeRequest::Count {
+                id: 0,
+                vars: vec![
+                    RVar::RelInd { rel: 0 },
+                    RVar::EntityAttr { et: 1, attr: 0 },
+                ],
+                ctx: vec![0, 1],
+            },
+            ServeRequest::Score {
+                id: 1,
+                vars: vec![RVar::RelAttr { rel: 0, attr: 1 }],
+                ctx: vec![0, 1],
+                child: RVar::RelAttr { rel: 0, attr: 1 },
+                n_prime: 2.0,
+            },
+            ServeRequest::Stats { id: 2 },
+        ];
+        for r in reqs {
+            let line = r.to_json().dump();
+            assert_eq!(ServeRequest::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(ServeRequest::parse("not json").is_err());
+        assert!(ServeRequest::parse(r#"{"op":"count"}"#).is_err()); // no id
+        assert!(ServeRequest::parse(r#"{"id":1,"op":"drop"}"#).is_err());
+        assert!(
+            ServeRequest::parse(r#"{"id":1,"op":"count","vars":[{"var":"nope"}],"ctx":[]}"#)
+                .is_err()
+        );
+        // score defaults n_prime to 1.0
+        let r = ServeRequest::parse(
+            r#"{"id":1,"op":"score","vars":[{"var":"rel_ind","rel":0}],"ctx":[0],
+                "child":{"var":"rel_ind","rel":0}}"#,
+        )
+        .unwrap();
+        match r {
+            ServeRequest::Score { n_prime, .. } => assert_eq!(n_prime, 1.0),
+            _ => panic!("expected score"),
+        }
+    }
+
+    #[test]
+    fn count_response_rows_are_sorted_and_digested() {
+        let s = university_schema();
+        let mut t = CtTable::new(&s, vec![RVar::EntityAttr { et: 1, attr: 0 }]).unwrap();
+        t.add(&[2], 7).unwrap();
+        t.add(&[0], 3).unwrap();
+        let j = count_response(5, 9, &t);
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("id").unwrap().as_f64(), Some(5.0));
+        assert_eq!(back.get("epoch").unwrap().as_f64(), Some(9.0));
+        assert_eq!(back.get("total").unwrap().as_f64(), Some(10.0));
+        let rows = back.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_f64(), Some(0.0));
+        assert_eq!(rows[1].as_arr().unwrap()[0].as_f64(), Some(2.0));
+        assert_eq!(
+            back.get("digest").unwrap().as_str(),
+            Some(format!("{:016x}", t.digest()).as_str())
+        );
+    }
+
+    #[test]
+    fn enumerate_requests_is_deterministic_and_bounded() {
+        let db = university_db();
+        let a = enumerate_requests(&db, 3, 12).unwrap();
+        let b = enumerate_requests(&db, 3, 12).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().any(|r| matches!(r, ServeRequest::Score { .. })));
+        assert!(a.iter().any(|r| matches!(r, ServeRequest::Count { .. })));
+        // ids are the line numbers
+        for (i, r) in a.iter().enumerate() {
+            assert_eq!(r.id(), i as u64);
+        }
+    }
+}

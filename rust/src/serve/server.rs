@@ -1,0 +1,637 @@
+//! The `relcount serve` front-end: line-delimited JSON requests in,
+//! responses out, deltas applied concurrently.
+//!
+//! Three threads cooperate per session (the channel pattern of
+//! [`crate::runtime::batcher::ScoreService`]):
+//!
+//! - the **pump** reads request lines and feeds a channel (stamping
+//!   each request's arrival time).  It is detached, not joined: a
+//!   session that ends early (shutdown op, write error) must not wait
+//!   on a pump parked in a blocking read — the pump exits on its own
+//!   at input EOF or on the first send to the dropped channel;
+//! - the **dispatch loop** (the calling thread) drains whatever is
+//!   queued — up to [`ServeOptions::batch_max`] — into one micro-batch,
+//!   loads the current [`Generation`] **once per batch**, fans the
+//!   batch out over the reader pool ([`pool::run_shards`], families
+//!   routed by cache-key hash), and writes responses in request order;
+//! - the **delta writer** owns the [`ServeEngine`] and streams batches
+//!   through [`ServeEngine::apply_publish`], fully concurrent with the
+//!   readers — a publish failure is recorded and the stream continues
+//!   from the last good generation.
+//!
+//! Every request in a micro-batch is answered from the same generation
+//! (one `load` per batch), so a batch never straddles a publish — the
+//! protocol stamps the epoch on each response and the equivalence test
+//! holds every answer to *exactly* its stamped generation's counts.
+//! Latency, throughput and queue depth are accumulated **per epoch**
+//! ([`ServeRow`]) so a regression in publish behavior shows up in the
+//! metrics, not just in wall clock.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Write};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{pool, resolve_workers};
+use crate::datagen::churn::churn_batch;
+use crate::delta::DeltaBatch;
+use crate::error::{Error, Result};
+use crate::metrics::report::ServeRow;
+use crate::serve::engine::{shard_for_family, ServeEngine};
+use crate::serve::protocol::{
+    count_response, error_response, score_response, shutdown_response, stats_response,
+    ServeRequest,
+};
+use crate::serve::snapshot::{Generation, SnapshotStore};
+use crate::util::json::Json;
+
+/// Where the concurrent delta stream comes from.
+#[derive(Clone, Debug)]
+pub enum DeltaFeed {
+    /// Static serving: generation 0 answers everything.
+    None,
+    /// Pre-parsed batches (one JSON batch per line of `--deltas FILE`).
+    Batches(Vec<DeltaBatch>),
+    /// Seeded churn generated against the writer's live state right
+    /// before each publish (`--churn FRAC --churn-steps K`) — the same
+    /// generator as `exp churn`, so the final digest is deterministic
+    /// for a given (db, frac, steps, seed) regardless of read traffic.
+    Churn { frac: f64, steps: usize, seed: u64 },
+}
+
+/// Session configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Label stamped on the metrics rows.
+    pub database: String,
+    /// Reader pool width (0 = all cores).
+    pub workers: usize,
+    /// Micro-batch cap per dispatch.
+    pub batch_max: usize,
+    pub feed: DeltaFeed,
+    /// Pause between publishes, letting readers overlap generations
+    /// (zero = apply as fast as possible).
+    pub delta_pause: Duration,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            database: String::new(),
+            workers: 1,
+            batch_max: 64,
+            feed: DeltaFeed::None,
+            delta_pause: Duration::ZERO,
+        }
+    }
+}
+
+/// Outcome of one serve run.
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    /// Per-generation latency/throughput/queue-depth rows.
+    pub rows: Vec<ServeRow>,
+    pub requests: u64,
+    pub errors: u64,
+    /// Generations published (successful `apply_publish` calls).
+    pub publishes: u64,
+    /// `(batch index, error)` for batches that failed to publish — the
+    /// previous generation kept serving through each.
+    pub publish_failures: Vec<(usize, String)>,
+    pub final_epoch: u64,
+    /// Writer-state digest after the delta stream quiesced (equals the
+    /// last published generation's digest).
+    pub final_digest: u64,
+}
+
+/// Per-epoch metric accumulator.
+#[derive(Default)]
+struct GenAccum {
+    requests: u64,
+    count_requests: u64,
+    score_requests: u64,
+    errors: u64,
+    batches: u64,
+    max_queue_depth: u64,
+    lat_sum: Duration,
+    lat_max: Duration,
+    first: Option<Instant>,
+    last: Option<Instant>,
+}
+
+impl GenAccum {
+    fn into_row(self, database: &str, epoch: u64, workers: usize) -> ServeRow {
+        let elapsed = match (self.first, self.last) {
+            (Some(a), Some(b)) => b.duration_since(a),
+            _ => Duration::ZERO,
+        };
+        ServeRow {
+            database: database.to_string(),
+            epoch,
+            requests: self.requests,
+            count_requests: self.count_requests,
+            score_requests: self.score_requests,
+            errors: self.errors,
+            batches: self.batches,
+            max_queue_depth: self.max_queue_depth,
+            mean_latency: if self.requests == 0 {
+                Duration::ZERO
+            } else {
+                self.lat_sum / self.requests as u32
+            },
+            max_latency: self.lat_max,
+            throughput_rps: if elapsed.is_zero() {
+                // single-instant generation: latency is the only clock
+                if self.lat_sum.is_zero() {
+                    0.0
+                } else {
+                    self.requests as f64 / self.lat_sum.as_secs_f64()
+                }
+            } else {
+                self.requests as f64 / elapsed.as_secs_f64()
+            },
+            workers,
+        }
+    }
+}
+
+/// One in-flight request (parse errors ride along so responses keep
+/// input order).
+struct Envelope {
+    req: Result<ServeRequest>,
+    t0: Instant,
+}
+
+/// Run a full serve session: `input` request lines answered onto `out`
+/// while the delta feed publishes generations concurrently.  Returns
+/// once the input is exhausted **and** the delta stream has quiesced.
+pub fn run_serve<R, W>(
+    engine: ServeEngine,
+    input: R,
+    mut out: W,
+    opts: &ServeOptions,
+) -> Result<ServeSummary>
+where
+    R: BufRead + Send + 'static,
+    W: Write,
+{
+    let store = engine.store();
+    let feed = opts.feed.clone();
+    let pause = opts.delta_pause;
+    let mut acc: BTreeMap<u64, GenAccum> = BTreeMap::new();
+
+    let (engine, publishes, publish_failures, session) =
+        std::thread::scope(|scope| {
+            let delta = scope.spawn(move || drive_deltas(engine, feed, pause));
+            let session = session_loop(&store, input, &mut out, opts, &mut acc);
+            let (engine, publishes, failures) =
+                delta.join().expect("delta writer panicked");
+            (engine, publishes, failures, session)
+        });
+    let (requests, errors, _shutdown) = session?;
+
+    let rows = acc
+        .into_iter()
+        .map(|(epoch, a)| a.into_row(&opts.database, epoch, resolve_workers(opts.workers)))
+        .collect();
+    Ok(ServeSummary {
+        rows,
+        requests,
+        errors,
+        publishes,
+        publish_failures,
+        final_epoch: engine.epoch(),
+        final_digest: engine.digest(),
+    })
+}
+
+/// The delta writer: apply-and-publish every batch of the feed,
+/// surviving failures (the stream continues from the last good
+/// generation).  Returns the engine for the final digest.
+fn drive_deltas(
+    mut engine: ServeEngine,
+    feed: DeltaFeed,
+    pause: Duration,
+) -> (ServeEngine, u64, Vec<(usize, String)>) {
+    let mut publishes = 0u64;
+    let mut failures = Vec::new();
+    let mut publish = |engine: &mut ServeEngine, i: usize, batch: &DeltaBatch| {
+        match engine.apply_publish(batch) {
+            Ok(_) => publishes += 1,
+            Err(e) => failures.push((i, e.to_string())),
+        }
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
+    };
+    match feed {
+        DeltaFeed::None => {}
+        DeltaFeed::Batches(batches) => {
+            for (i, b) in batches.iter().enumerate() {
+                publish(&mut engine, i, b);
+            }
+        }
+        DeltaFeed::Churn { frac, steps, seed } => {
+            for i in 0..steps {
+                // generated against the *current* writer state, so every
+                // op is valid and the sequence is seed-deterministic
+                let b = churn_batch(engine.db(), frac, seed ^ (i as u64 + 1));
+                publish(&mut engine, i, &b);
+            }
+        }
+    }
+    (engine, publishes, failures)
+}
+
+/// The dispatch loop of one client session (see the module docs).
+fn session_loop<R, W>(
+    store: &SnapshotStore,
+    input: R,
+    out: &mut W,
+    opts: &ServeOptions,
+    acc: &mut BTreeMap<u64, GenAccum>,
+) -> Result<(u64, u64, bool)>
+where
+    R: BufRead + Send + 'static,
+    W: Write,
+{
+    let workers = resolve_workers(opts.workers);
+    let batch_max = opts.batch_max.max(1);
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+    let mut shutdown = false;
+
+    // Detached on purpose: a pump parked in a blocking read must not be
+    // joined by a session that ends early (shutdown op, write error) —
+    // it exits at input EOF or on the first send to the dropped channel.
+    let (tx, rx) = mpsc::channel::<Envelope>();
+    std::thread::spawn(move || {
+        for line in input.lines() {
+            let env = match line {
+                Ok(l) if l.trim().is_empty() => continue,
+                Ok(l) => Envelope { req: ServeRequest::parse(&l), t0: Instant::now() },
+                Err(e) => Envelope { req: Err(e.into()), t0: Instant::now() },
+            };
+            if tx.send(env).is_err() {
+                return; // dispatch loop gone
+            }
+        }
+    });
+
+    let mut pending: Vec<Envelope> = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(env) => pending.push(env),
+            Err(_) => break, // pump done and channel drained
+        }
+        while pending.len() < batch_max {
+            match rx.try_recv() {
+                Ok(env) => pending.push(env),
+                Err(_) => break,
+            }
+        }
+        let depth = pending.len() as u64;
+        // one generation per micro-batch: the batch never straddles
+        // a publish, and each response is stamped with its epoch
+        let gen = store.load();
+        // the serving window opens when compute starts, not when the
+        // first response is written — else single-batch generations
+        // would report the write loop's elapsed time as the window
+        // and wildly inflate throughput_rps
+        let batch_start = Instant::now();
+        let responses = dispatch(&gen, &pending, workers);
+
+        let a = acc.entry(gen.epoch).or_default();
+        a.batches += 1;
+        a.max_queue_depth = a.max_queue_depth.max(depth);
+        a.first.get_or_insert(batch_start);
+        for (env, resp) in pending.drain(..).zip(responses) {
+            let ok = matches!(resp.get("ok"), Some(Json::Bool(true)));
+            requests += 1;
+            a.requests += 1;
+            match &env.req {
+                Ok(ServeRequest::Count { .. }) => a.count_requests += 1,
+                Ok(ServeRequest::Score { .. }) => a.score_requests += 1,
+                Ok(ServeRequest::Shutdown { .. }) => shutdown = true,
+                _ => {}
+            }
+            if !ok {
+                errors += 1;
+                a.errors += 1;
+            }
+            let lat = env.t0.elapsed();
+            a.lat_sum += lat;
+            a.lat_max = a.lat_max.max(lat);
+            writeln!(out, "{}", resp.dump())?;
+        }
+        a.last = Some(Instant::now());
+        out.flush()?;
+        if shutdown {
+            break; // stop reading; the pump exits on its dead channel
+        }
+    }
+    Ok((requests, errors, shutdown))
+}
+
+/// TCP mode: serve sessions from `listener` sequentially (one client at
+/// a time; every session shares the store, so later clients see the
+/// generations earlier ones advanced past).  Runs until a client sends
+/// `{"op": "shutdown"}`, then quiesces the delta stream and returns the
+/// summary.
+pub fn serve_listener(
+    engine: ServeEngine,
+    listener: std::net::TcpListener,
+    opts: &ServeOptions,
+) -> Result<ServeSummary> {
+    let store = engine.store();
+    let feed = opts.feed.clone();
+    let pause = opts.delta_pause;
+    let mut acc: BTreeMap<u64, GenAccum> = BTreeMap::new();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
+
+    let (engine, publishes, publish_failures, session) =
+        std::thread::scope(|scope| {
+            let delta = scope.spawn(move || drive_deltas(engine, feed, pause));
+            let session = (|| -> Result<()> {
+                loop {
+                    let (stream, peer) = listener.accept()?;
+                    // one client's I/O failure (disconnect mid-response,
+                    // broken clone) ends that session, not the server
+                    let ended = (|| -> Result<(u64, u64, bool)> {
+                        let reader = std::io::BufReader::new(stream.try_clone()?);
+                        let mut writer = stream;
+                        session_loop(&store, reader, &mut writer, opts, &mut acc)
+                    })();
+                    match ended {
+                        Ok((r, e, shutdown)) => {
+                            requests += r;
+                            errors += e;
+                            if shutdown {
+                                return Ok(());
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("serve: session {peer} failed: {e}; still accepting");
+                        }
+                    }
+                }
+            })();
+            let (engine, publishes, failures) =
+                delta.join().expect("delta writer panicked");
+            (engine, publishes, failures, session)
+        });
+    session?;
+
+    let rows = acc
+        .into_iter()
+        .map(|(epoch, a)| a.into_row(&opts.database, epoch, resolve_workers(opts.workers)))
+        .collect();
+    Ok(ServeSummary {
+        rows,
+        requests,
+        errors,
+        publishes,
+        publish_failures,
+        final_epoch: engine.epoch(),
+        final_digest: engine.digest(),
+    })
+}
+
+/// Answer one micro-batch from one generation: requests fan out over
+/// the reader pool (families routed by cache-key hash, stats and parse
+/// errors answered on worker 0), responses in request order.
+fn dispatch(gen: &Generation, batch: &[Envelope], workers: usize) -> Vec<Json> {
+    let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.max(1)];
+    for (i, env) in batch.iter().enumerate() {
+        let w = match &env.req {
+            Ok(ServeRequest::Count { vars, ctx, .. })
+            | Ok(ServeRequest::Score { vars, ctx, .. }) => {
+                shard_for_family(vars, ctx, workers)
+            }
+            _ => 0,
+        };
+        assignment[w].push(i);
+    }
+    let run = pool::run_shards(batch, &assignment, |_, env| Ok(answer(gen, env)));
+    run.results
+        .into_iter()
+        .map(|r| r.expect("answer() is infallible"))
+        .collect()
+}
+
+/// Serve one request from one generation; failures become in-protocol
+/// error responses (the session keeps going).
+fn answer(gen: &Generation, env: &Envelope) -> Json {
+    match &env.req {
+        Err(e) => error_response(0, e),
+        Ok(ServeRequest::Count { id, vars, ctx }) => {
+            match gen.ct_for_family(vars, ctx) {
+                Ok(ct) => count_response(*id, gen.epoch, &ct),
+                Err(e) => error_response(*id, &e),
+            }
+        }
+        Ok(ServeRequest::Score { id, vars, ctx, child, n_prime }) => {
+            match gen.score_family(vars, ctx, child, *n_prime) {
+                Ok(s) => score_response(*id, gen.epoch, s),
+                Err(e) => error_response(*id, &e),
+            }
+        }
+        Ok(ServeRequest::Stats { id }) => {
+            stats_response(*id, gen.epoch, gen.resident_bytes(), gen.digest())
+        }
+        Ok(ServeRequest::Shutdown { id }) => shutdown_response(*id, gen.epoch),
+    }
+}
+
+/// Parse a line-delimited delta stream (one JSON batch per non-empty
+/// line) — the `--deltas` wire format of `relcount serve`.  A file
+/// holding a single JSON array still parses (one batch).
+pub fn parse_delta_stream(text: &str) -> Result<Vec<DeltaBatch>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(DeltaBatch::parse_json(line).map_err(|e| {
+            Error::Data(format!("delta stream line {}: {e}", i + 1))
+        })?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::delta::{DeltaOp, MaintainConfig};
+
+    fn lines(reqs: &[ServeRequest]) -> String {
+        reqs.iter().map(|r| r.to_json().dump() + "\n").collect()
+    }
+
+    fn engine() -> ServeEngine {
+        ServeEngine::build(university_db(), MaintainConfig::default()).unwrap()
+    }
+
+    fn requests() -> Vec<ServeRequest> {
+        crate::serve::protocol::enumerate_requests(&university_db(), 3, 20).unwrap()
+    }
+
+    #[test]
+    fn static_serving_is_bit_identical_across_worker_counts() {
+        let input = lines(&requests());
+        let mut outputs = Vec::new();
+        for workers in [1usize, 4] {
+            let mut out = Vec::new();
+            let opts = ServeOptions {
+                database: "uw".into(),
+                workers,
+                ..Default::default()
+            };
+            let summary = run_serve(
+                engine(),
+                std::io::Cursor::new(input.clone()),
+                &mut out,
+                &opts,
+            )
+            .unwrap();
+            assert_eq!(summary.requests, 20);
+            assert_eq!(summary.errors, 0);
+            assert_eq!(summary.final_epoch, 0);
+            outputs.push(out);
+        }
+        assert_eq!(outputs[0], outputs[1], "responses must not depend on workers");
+    }
+
+    #[test]
+    fn serving_continues_through_publish_failures() {
+        let good = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let bad = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        // `bad` deletes the same pair again -> fails mid-stream
+        let after = DeltaBatch::new(vec![DeltaOp::InsertLink {
+            rel: 0,
+            from: 0,
+            to: 0,
+            values: vec![3, 2],
+        }]);
+        let input = lines(&requests());
+        let mut out = Vec::new();
+        let opts = ServeOptions {
+            database: "uw".into(),
+            workers: 2,
+            feed: DeltaFeed::Batches(vec![good, bad, after]),
+            ..Default::default()
+        };
+        let summary =
+            run_serve(engine(), std::io::Cursor::new(input), &mut out, &opts).unwrap();
+        assert_eq!(summary.publishes, 2);
+        assert_eq!(summary.publish_failures.len(), 1);
+        assert_eq!(summary.publish_failures[0].0, 1);
+        assert_eq!(summary.final_epoch, 2);
+        assert_eq!(summary.errors, 0, "reads never fail through a bad publish");
+        // delete + exact reinsert: the final state equals the initial one
+        assert_eq!(summary.final_digest, engine().digest());
+    }
+
+    #[test]
+    fn churn_feed_final_digest_matches_direct_application() {
+        let opts = ServeOptions {
+            database: "uw".into(),
+            workers: 2,
+            feed: DeltaFeed::Churn { frac: 0.2, steps: 2, seed: 99 },
+            ..Default::default()
+        };
+        let input = lines(&requests());
+        let mut out = Vec::new();
+        let summary =
+            run_serve(engine(), std::io::Cursor::new(input), &mut out, &opts).unwrap();
+        assert_eq!(summary.final_epoch, 2);
+
+        // the same churn applied without any read traffic lands on the
+        // same digest: reads are isolated from writes
+        let mut direct = engine();
+        for i in 0..2u64 {
+            let b = churn_batch(direct.db(), 0.2, 99 ^ (i + 1));
+            direct.apply_publish(&b).unwrap();
+        }
+        assert_eq!(summary.final_digest, direct.digest());
+        // per-generation rows cover only epochs that served requests
+        assert!(!summary.rows.is_empty());
+        let served: u64 = summary.rows.iter().map(|r| r.requests).sum();
+        assert_eq!(served, summary.requests);
+    }
+
+    #[test]
+    fn malformed_lines_answer_in_order_and_session_survives() {
+        let input = format!(
+            "{}\nnot json at all\n{}\n",
+            ServeRequest::Stats { id: 7 }.to_json().dump(),
+            ServeRequest::Stats { id: 8 }.to_json().dump(),
+        );
+        let mut out = Vec::new();
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        let summary =
+            run_serve(engine(), std::io::Cursor::new(input), &mut out, &opts).unwrap();
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.errors, 1);
+        let text = String::from_utf8(out).unwrap();
+        let ids: Vec<f64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("id").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![7.0, 0.0, 8.0]);
+    }
+
+    #[test]
+    fn tcp_sessions_serve_until_shutdown() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut answers = Vec::new();
+            // session 1: one stats request, then EOF
+            let mut s1 = std::net::TcpStream::connect(addr).unwrap();
+            writeln!(s1, "{}", ServeRequest::Stats { id: 1 }.to_json().dump()).unwrap();
+            s1.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut line = String::new();
+            BufReader::new(&s1).read_line(&mut line).unwrap();
+            answers.push(line);
+            // session 2: a count, then shutdown
+            let mut s2 = std::net::TcpStream::connect(addr).unwrap();
+            let req = crate::serve::protocol::enumerate_requests(&university_db(), 3, 1)
+                .unwrap()
+                .remove(0);
+            writeln!(s2, "{}", req.to_json().dump()).unwrap();
+            writeln!(s2, "{}", ServeRequest::Shutdown { id: 9 }.to_json().dump())
+                .unwrap();
+            s2.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut r2 = BufReader::new(&s2);
+            for _ in 0..2 {
+                let mut line = String::new();
+                r2.read_line(&mut line).unwrap();
+                answers.push(line);
+            }
+            answers
+        });
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        let summary = serve_listener(engine(), listener, &opts).unwrap();
+        let answers = client.join().unwrap();
+        assert_eq!(summary.requests, 3);
+        assert_eq!(summary.errors, 0);
+        for line in &answers {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+        }
+    }
+
+    #[test]
+    fn delta_stream_parses_line_delimited_batches() {
+        let b1 = DeltaBatch::new(vec![DeltaOp::InsertEntity { et: 0, values: vec![1] }]);
+        let b2 = DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let text = format!("{}\n\n{}\n", b1.to_json().dump(), b2.to_json().dump());
+        let parsed = parse_delta_stream(&text).unwrap();
+        assert_eq!(parsed, vec![b1, b2]);
+        assert!(parse_delta_stream("nope\n").is_err());
+    }
+}

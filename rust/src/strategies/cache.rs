@@ -103,6 +103,33 @@ impl CtCache {
     }
 }
 
+/// Deterministic digest over tagged caches: entries in sorted cache-key
+/// order, rows in sorted flat-key order.  Shared by
+/// [`crate::delta::MaintainedCounts::digest`] and the serving
+/// generations ([`crate::serve`]), so a published snapshot hashes
+/// identically to the writer state it was cloned from — the
+/// bit-identity witness used by the churn experiment, the differential
+/// tests and the serve smoke.
+pub fn digest_caches(caches: &[(u8, &CtCache)]) -> u64 {
+    use std::hash::{Hash, Hasher};
+    let mut h = crate::util::fxhash::FxHasher::default();
+    for &(tag, cache) in caches {
+        let mut entries: Vec<_> = cache.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        for (key, t) in entries {
+            tag.hash(&mut h);
+            key.hash(&mut h);
+            let mut rows: Vec<(u128, i128)> = t.iter_keys().collect();
+            rows.sort_unstable();
+            for (k, c) in rows {
+                k.hash(&mut h);
+                c.hash(&mut h);
+            }
+        }
+    }
+    h.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,5 +186,29 @@ mod tests {
         assert!(c.remove(&key).is_some());
         assert_eq!(c.bytes(), 0);
         assert!(c.remove(&key).is_none());
+    }
+
+    #[test]
+    fn digest_ignores_insertion_order_but_not_tags() {
+        let s = university_schema();
+        let v = RVar::EntityAttr { et: 0, attr: 0 };
+        let w = RVar::EntityAttr { et: 1, attr: 0 };
+        let mk = |pairs: &[(RVar, u32, i128)]| {
+            let mut c = CtCache::new();
+            for &(var, val, n) in pairs {
+                let mut t = CtTable::new(&s, vec![var]).unwrap();
+                t.add(&[val], n).unwrap();
+                c.insert(CtCache::key(&[var], &[0]), t);
+            }
+            c
+        };
+        let a = mk(&[(v, 1, 3), (w, 0, 2)]);
+        let b = mk(&[(w, 0, 2), (v, 1, 3)]);
+        assert_eq!(digest_caches(&[(0, &a)]), digest_caches(&[(0, &b)]));
+        // the tag distinguishes positive from complete caches
+        assert_ne!(digest_caches(&[(0, &a)]), digest_caches(&[(1, &a)]));
+        // and content changes change the digest
+        let c = mk(&[(v, 1, 4), (w, 0, 2)]);
+        assert_ne!(digest_caches(&[(0, &a)]), digest_caches(&[(0, &c)]));
     }
 }

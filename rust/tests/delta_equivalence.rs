@@ -5,14 +5,19 @@
 //! mutated data, sequentially and under `--workers 4`, including
 //! learned structures and BDeu score bits.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
 use relcount::ct::cttable::CtTable;
 use relcount::datagen::churn::churn_batch;
 use relcount::datagen::{generator::generate, presets::preset};
 use relcount::db::catalog::Database;
-use relcount::delta::{MaintainConfig, MaintainedCounts, MaintenanceMode};
+use relcount::delta::{DeltaBatch, DeltaOp, MaintainConfig, MaintainedCounts, MaintenanceMode};
 use relcount::lattice::Lattice;
 use relcount::learn::search::SearchConfig;
 use relcount::meta::rvar::RVar;
+use relcount::serve::{Generation, ServeEngine};
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
 
@@ -171,6 +176,182 @@ fn learned_structures_and_bdeu_bits_survive_churn() {
             want.total_score
         );
     }
+}
+
+/// From-scratch reference for one generation: rebuild its database
+/// (fresh validation, fresh indexes) and serve every family through a
+/// fresh ONDEMAND strategy.
+fn reference_digests(
+    gen: &Generation,
+    fams: &[(Vec<RVar>, Vec<usize>)],
+) -> Vec<u64> {
+    let fresh = Database::new(
+        gen.db().schema.clone(),
+        gen.db().entities.clone(),
+        gen.db().rels.clone(),
+    )
+    .unwrap();
+    let mut s = StrategyKind::OnDemand.build(&fresh, StrategyConfig::default()).unwrap();
+    fams.iter()
+        .map(|(vars, ctx)| s.ct_for_family(vars, ctx).unwrap().digest())
+        .collect()
+}
+
+/// The serving layer's snapshot-isolation contract, exercised live:
+/// reader threads hammer a fixed family set while the writer publishes
+/// churn generations concurrently.  Every answer is stamped with the
+/// generation it came from and must be bit-identical to a from-scratch
+/// strategy on **that exact generation's** database — an answer
+/// blending generation N with N+1 (a torn read of a half-applied
+/// batch) matches neither reference and fails.  Runs with 1 and 4
+/// maintenance workers; the per-epoch generation digests must be
+/// identical across the two, and the post-quiesce state bit-identical
+/// to a from-scratch rebuild on the final database.
+#[test]
+fn concurrent_readers_match_exact_generations_never_blends() {
+    const STEPS: u64 = 3;
+    const READERS: usize = 3;
+    let mut digests_by_workers: Vec<Vec<u64>> = Vec::new();
+
+    for workers in [1usize, 4] {
+        let db = seeded_db("uw");
+        let fams: Vec<(Vec<RVar>, Vec<usize>)> =
+            families_of(&db).into_iter().take(10).collect();
+        let mut engine = ServeEngine::build(
+            db,
+            MaintainConfig { workers, ..Default::default() },
+        )
+        .unwrap();
+        let store = engine.store();
+
+        // every generation the writer publishes, in epoch order
+        let mut gens: Vec<Arc<Generation>> = vec![store.load()];
+        let answers: Mutex<Vec<(u64, usize, u64)>> = Mutex::new(Vec::new());
+        let stop = AtomicBool::new(false);
+
+        std::thread::scope(|scope| {
+            for _ in 0..READERS {
+                scope.spawn(|| {
+                    while !stop.load(Ordering::Relaxed) {
+                        // one load per pass: a pass never straddles a
+                        // publish, like the server's micro-batches
+                        let gen = store.load();
+                        for (i, (vars, ctx)) in fams.iter().enumerate() {
+                            let ct = gen.ct_for_family(vars, ctx).unwrap();
+                            answers.lock().unwrap().push((gen.epoch, i, ct.digest()));
+                        }
+                    }
+                });
+            }
+            for step in 0..STEPS {
+                let batch = churn_batch(engine.db(), 0.3, 7_000 + step);
+                engine.apply_publish(&batch).unwrap();
+                gens.push(store.load());
+                // let the readers serve from this generation for a bit
+                std::thread::sleep(Duration::from_millis(15));
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+
+        // per-epoch truth: from-scratch rebuild of each generation's db
+        assert_eq!(gens.len() as u64, STEPS + 1);
+        let expected: Vec<Vec<u64>> =
+            gens.iter().map(|g| reference_digests(g, &fams)).collect();
+        let answers = answers.into_inner().unwrap();
+        assert!(!answers.is_empty());
+        for &(epoch, fam, digest) in &answers {
+            assert_eq!(
+                digest, expected[epoch as usize][fam],
+                "workers={workers}: answer from epoch {epoch} family {fam} \
+                 does not match that generation's from-scratch counts"
+            );
+        }
+
+        // post-quiesce: the final state is bit-identical to a fresh
+        // build on the (rebuilt) final database
+        let last = gens.last().unwrap();
+        let rebuilt = Database::new(
+            last.db().schema.clone(),
+            last.db().entities.clone(),
+            last.db().rels.clone(),
+        )
+        .unwrap();
+        let fresh = MaintainedCounts::build(
+            rebuilt,
+            MaintainConfig { workers, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(last.digest(), fresh.digest(), "workers={workers}");
+
+        digests_by_workers.push(gens.iter().map(|g| g.digest()).collect());
+    }
+
+    // the generation sequence is bit-identical across worker counts
+    assert_eq!(digests_by_workers[0], digests_by_workers[1]);
+}
+
+/// A mid-batch failure during concurrent serving: the bad batch is
+/// reported on publish, the previous generation keeps serving (readers
+/// never error, the epoch never advances), and the writer stays usable
+/// for the next good batch.
+#[test]
+fn mid_batch_failure_keeps_previous_generation_serving() {
+    let db = seeded_db("uw");
+    let fams: Vec<(Vec<RVar>, Vec<usize>)> =
+        families_of(&db).into_iter().take(6).collect();
+    let mut engine = ServeEngine::build(db, MaintainConfig::default()).unwrap();
+    let store = engine.store();
+
+    let good = churn_batch(engine.db(), 0.2, 8_001);
+    engine.apply_publish(&good).unwrap();
+    let g1 = store.load();
+    let before: Vec<u64> = fams
+        .iter()
+        .map(|(v, c)| g1.ct_for_family(v, c).unwrap().digest())
+        .collect();
+
+    // a batch whose first op mutates state and whose second op must
+    // fail: a fresh entity is always insertable, a relationship index
+    // of usize::MAX never resolves
+    let bad = DeltaBatch::new(vec![
+        DeltaOp::InsertEntity {
+            et: 0,
+            values: vec![0; engine.db().schema.entities[0].attrs.len()],
+        },
+        DeltaOp::DeleteLink { rel: usize::MAX, from: 0, to: 0 },
+    ]);
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let reader = scope.spawn(|| {
+            let mut served = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let gen = store.load();
+                for (vars, ctx) in &fams {
+                    gen.ct_for_family(vars, ctx).unwrap(); // must never error
+                    served += 1;
+                }
+            }
+            served
+        });
+        assert!(engine.apply_publish(&bad).is_err(), "bad batch must fail");
+        std::thread::sleep(Duration::from_millis(10));
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0);
+    });
+
+    // epoch unchanged, counts unchanged
+    assert_eq!(store.epoch(), 1);
+    let after: Vec<u64> = fams
+        .iter()
+        .map(|(v, c)| store.load().ct_for_family(v, c).unwrap().digest())
+        .collect();
+    assert_eq!(before, after);
+
+    // the writer is not poisoned: the next good batch publishes
+    let next = churn_batch(engine.db(), 0.2, 8_002);
+    let (epoch, _) = engine.apply_publish(&next).unwrap();
+    assert_eq!(epoch, 2);
+    assert_eq!(store.epoch(), 2);
 }
 
 #[test]

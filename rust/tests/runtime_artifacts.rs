@@ -255,7 +255,7 @@ fn xla_backend_end_to_end_learning() {
             let ct = s3.ct_for_family(&fam.vars(), &ctx).unwrap();
             let sparse = bdeu_from_ct(&ct, &fam.child, cfg.n_prime).unwrap();
             if let Some(req) = family_matrix(&ct, &fam.child, cfg.n_prime).unwrap() {
-                let dense = bdeu_matrix(&req);
+                let dense = bdeu_matrix(&req).unwrap();
                 assert!(
                     (dense - sparse).abs() < 1e-9 * sparse.abs().max(1.0),
                     "{}",

@@ -1,0 +1,103 @@
+//! The `relcount serve` wire-format contract, end to end through the
+//! public API: every response line must be independently verifiable
+//! against a from-scratch strategy on the served generation's database
+//! — the digest a client reads IS the bit-identity witness — and the
+//! full response stream must be byte-identical across worker counts,
+//! malformed lines included.
+
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::delta::MaintainConfig;
+use relcount::learn::score::bdeu_from_ct;
+use relcount::serve::{enumerate_requests, run_serve, ServeEngine, ServeOptions, ServeRequest};
+use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
+use relcount::strategies::StrategyKind;
+use relcount::util::json::Json;
+
+#[test]
+fn every_response_verifies_against_a_fresh_strategy() {
+    let db = generate(&preset("uw", 0.05, 42).unwrap()).unwrap();
+    let reqs = enumerate_requests(&db, 3, 30).unwrap();
+    let input: String = reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+
+    let engine = ServeEngine::build(db.clone(), MaintainConfig::default()).unwrap();
+    let mut out = Vec::new();
+    let opts = ServeOptions { database: "uw".into(), workers: 2, ..Default::default() };
+    let summary =
+        run_serve(engine, std::io::Cursor::new(input), &mut out, &opts).unwrap();
+    assert_eq!(summary.requests as usize, reqs.len());
+    assert_eq!(summary.errors, 0);
+
+    let mut fresh = StrategyKind::OnDemand.build(&db, StrategyConfig::default()).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), reqs.len(), "one response line per request, in order");
+    for (req, line) in reqs.iter().zip(&lines) {
+        let resp = Json::parse(line).unwrap();
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{line}");
+        assert_eq!(resp.get("id").unwrap().as_usize().unwrap() as u64, req.id());
+        // static feed: everything answers from generation 0
+        assert_eq!(resp.get("epoch").unwrap().as_usize(), Some(0));
+        match req {
+            ServeRequest::Count { vars, ctx, .. } => {
+                let want = fresh.ct_for_family(vars, ctx).unwrap();
+                assert_eq!(
+                    resp.get("digest").unwrap().as_str().unwrap(),
+                    format!("{:016x}", want.digest()),
+                    "served digest must match a from-scratch count: {line}"
+                );
+                let total: i128 = want.iter_rows().map(|(_, c)| c).sum();
+                assert_eq!(resp.get("total").unwrap().as_f64(), Some(total as f64));
+                assert_eq!(
+                    resp.get("rows").unwrap().as_arr().unwrap().len(),
+                    want.n_rows()
+                );
+            }
+            ServeRequest::Score { vars, ctx, child, n_prime, .. } => {
+                let ct = fresh.ct_for_family(vars, ctx).unwrap();
+                let want = bdeu_from_ct(&ct, child, *n_prime).unwrap();
+                let got = resp.get("score").unwrap().as_f64().unwrap();
+                assert!(
+                    (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                    "served score {got} != fresh {want}: {line}"
+                );
+            }
+            _ => unreachable!("enumerate_requests emits counts and scores only"),
+        }
+    }
+}
+
+#[test]
+fn response_stream_is_byte_identical_across_worker_counts() {
+    let db = generate(&preset("uw", 0.05, 42).unwrap()).unwrap();
+    let reqs = enumerate_requests(&db, 3, 24).unwrap();
+    let mut input: String = reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+    // malformed and unknown-op lines must also answer identically
+    input.push_str("definitely not json\n");
+    input.push_str("{\"id\":99,\"op\":\"explode\"}\n");
+
+    let mut streams = Vec::new();
+    for workers in [1usize, 4] {
+        let engine = ServeEngine::build(db.clone(), MaintainConfig::default()).unwrap();
+        let mut out = Vec::new();
+        let opts = ServeOptions {
+            database: "uw".into(),
+            workers,
+            batch_max: 8,
+            ..Default::default()
+        };
+        let summary = run_serve(
+            engine,
+            std::io::Cursor::new(input.clone()),
+            &mut out,
+            &opts,
+        )
+        .unwrap();
+        assert_eq!(summary.requests as usize, reqs.len() + 2);
+        assert_eq!(summary.errors, 2);
+        streams.push(out);
+    }
+    assert_eq!(
+        streams[0], streams[1],
+        "the response stream is part of the bit-identity contract"
+    );
+}

@@ -41,4 +41,10 @@ echo "== exp churn (scale $SCALE, presets $PRESETS) =="
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --churn 0.01,0.05 --json "$ROOT/BENCH_churn.json"
 
-echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json and BENCH_churn.json"
+echo "== exp serve (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp serve \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --workers 2 --churn-frac 0.05 --churn-steps 3 \
+    --json "$ROOT/BENCH_serve.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json and BENCH_serve.json"
