@@ -1,23 +1,102 @@
-//! Hot-path kernel ablation: the Pallas/XLA artifacts vs the pure-Rust
-//! twins, and the value of micro-batching BDeu dispatches.
+//! Hot-path kernel ablation: the storage-engine join kernels (hash vs
+//! CSR backend, plus the raw intersection primitives), then the
+//! Pallas/XLA artifacts vs the pure-Rust twins and the value of
+//! micro-batching BDeu dispatches.
 //!
+//! - joins:  `positive_chain_ct` on the identical database under
+//!           `--backend hash` vs `--backend csr` (results asserted
+//!           equal), and merge vs gallop vs hash-set intersection
 //! - mobius: dense butterfly, Rust loop vs `mobius` XLA artifact
 //! - bdeu:   per-family dispatch (`bdeu_one`-shaped) vs batched
 //!           (`bdeu_batch` with B families per PJRT call) vs pure Rust
 //!
-//! Requires `make artifacts` (skips with a notice otherwise).
+//! The join section always runs; the XLA section requires
+//! `make artifacts` (skips with a notice otherwise).
 
 use relcount::ct::dense::mobius_dense;
+use relcount::datagen::{generator::generate, presets::preset};
+use relcount::db::index::Backend;
+use relcount::db::query::{intersect_count, positive_chain_ct, JoinStats};
 use relcount::learn::score::ln_gamma;
+use relcount::lattice::Lattice;
 use relcount::runtime::batcher::{FamilyCounts, ScoreBatcher};
 use relcount::runtime::client::Runtime;
 use relcount::util::bench::{bench, render};
+use relcount::util::fxhash::FxHashSet;
 use relcount::util::rng::Rng;
 
+fn join_kernels() {
+    let mut ms = Vec::new();
+    let csr = generate(&preset("uw", 0.3, 7).unwrap()).unwrap();
+    let mut hash = csr.clone();
+    hash.set_backend(Backend::Hash).unwrap();
+    let lattice = Lattice::build(&csr.schema, 3).unwrap();
+    let point = lattice
+        .points
+        .iter()
+        .max_by_key(|p| (p.rels.len(), p.attr_vars.len()))
+        .expect("non-empty lattice");
+
+    // full grouped chain join (index probes + key assembly)
+    let mut totals = Vec::new();
+    for (name, db) in [("hash", &hash), ("csr", &csr)] {
+        ms.push(bench(&format!("chain_join_grouped_{name}"), 1, 8, || {
+            let mut stats = JoinStats::default();
+            let t =
+                positive_chain_ct(db, &point.rels, &point.attr_vars, &mut stats)
+                    .unwrap();
+            t.total().unwrap()
+        }));
+        let mut stats = JoinStats::default();
+        totals.push(
+            positive_chain_ct(db, &point.rels, &point.attr_vars, &mut stats)
+                .unwrap()
+                .total()
+                .unwrap(),
+        );
+    }
+    assert_eq!(totals[0], totals[1], "backends must agree");
+
+    // count-only chain join (the Möbius subset shape: kernels collapse
+    // unused tails)
+    for (name, db) in [("hash", &hash), ("csr", &csr)] {
+        ms.push(bench(&format!("chain_join_count_only_{name}"), 1, 8, || {
+            let mut stats = JoinStats::default();
+            positive_chain_ct(db, &point.rels, &[], &mut stats)
+                .unwrap()
+                .total()
+                .unwrap()
+        }));
+    }
+
+    // raw intersection primitives: balanced merge, skewed gallop, and
+    // the hash-probe baseline the CSR kernels replace
+    let a: Vec<u32> = (0..60_000u32).map(|i| i * 3).collect();
+    let b: Vec<u32> = (0..90_000u32).map(|i| i * 2).collect();
+    let small: Vec<u32> = (0..4_000u32).map(|i| i * 45).collect();
+    ms.push(bench("intersect_merge_60k_90k", 2, 20, || {
+        intersect_count(&a, &b)
+    }));
+    ms.push(bench("intersect_gallop_4k_90k", 2, 20, || {
+        intersect_count(&small, &b)
+    }));
+    let b_set: FxHashSet<u32> = b.iter().copied().collect();
+    ms.push(bench("intersect_hashset_60k_90k", 2, 20, || {
+        a.iter().filter(|&&v| b_set.contains(&v)).count() as u64
+    }));
+    ms.push(bench("intersect_hashset_4k_90k", 2, 20, || {
+        small.iter().filter(|&&v| b_set.contains(&v)).count() as u64
+    }));
+
+    print!("{}", render("join_kernels", &ms));
+}
+
 fn main() {
+    join_kernels();
+
     let dir = relcount::runtime::default_artifact_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("kernels bench skipped: run `make artifacts` first");
+        eprintln!("kernels bench: XLA section skipped: run `make artifacts` first");
         return;
     }
     let rt = Runtime::load(&dir).unwrap();

@@ -27,6 +27,10 @@ pub struct RunOutcome {
     pub row: RunRow,
     pub report: StrategyReport,
     pub model: Option<LearnedModel>,
+    /// Deterministic digest of the strategy's resident caches
+    /// ([`CountingStrategy::cache_digest`]) — the backend-equivalence
+    /// witness the CI gate diffs across `--backend hash` / `csr`.
+    pub cache_digest: u64,
 }
 
 /// Build the strategy configuration for a workload cell.
@@ -76,9 +80,10 @@ pub fn run_strategy_with(
         },
     };
 
+    let cache_digest = strategy.cache_digest();
     let report = strategy.report();
     let row = row_from_report(db_name, kind, &report, timed_out);
-    Ok(RunOutcome { row, report, model })
+    Ok(RunOutcome { row, report, model, cache_digest })
 }
 
 fn row_from_report(
@@ -108,6 +113,9 @@ pub struct CoordinatedOutcome {
     /// Per-worker breakdown of the run.
     pub coordinator: CoordinatorReport,
     pub model: Option<LearnedModel>,
+    /// Worker-count-invariant digest of the coordinator's caches (see
+    /// [`RunOutcome::cache_digest`]).
+    pub cache_digest: u64,
 }
 
 /// Run `kind` on `db` through the [`ParallelCoordinator`] with `workers`
@@ -153,6 +161,7 @@ pub fn run_coordinated_with(
         },
     };
 
+    let cache_digest = coord.cache_digest();
     let report = coord.report();
     let row = row_from_report(db_name, kind, &report, timed_out);
     Ok(CoordinatedOutcome {
@@ -160,6 +169,7 @@ pub fn run_coordinated_with(
         report,
         coordinator: coord.coordinator_report(),
         model,
+        cache_digest,
     })
 }
 

@@ -40,7 +40,7 @@ use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer, WorkerTimers};
 use crate::strategies::adaptive::{Adaptive, PlannedSource};
-use crate::strategies::cache::{CacheKey, CtCache};
+use crate::strategies::cache::{digest_caches, CacheKey, CtCache};
 use crate::strategies::common::{
     narrow_to_ctx, positive_tasks, run_positive_task, var_pops, var_rels,
     LatticeCtx, PositiveTask, SharedLatticeSource, TimedSource,
@@ -852,6 +852,18 @@ impl CountingStrategy for ParallelCoordinator<'_> {
             plan_est_bytes: self.plan.as_ref().map(|p| p.est_spent_bytes).unwrap_or(0),
             estimator_walks: self.plan.as_ref().map(|p| p.walks).unwrap_or(0),
         }
+    }
+
+    /// Digest over the shared lattice caches plus the union of the
+    /// per-worker family shards — `digest_caches` sorts entries
+    /// globally by (tag, key), so the result is independent of the
+    /// worker count (shards hold disjoint keys) and equal to the
+    /// sequential strategy's digest over the same content.
+    fn cache_digest(&self) -> u64 {
+        let mut tagged: Vec<(u8, &CtCache)> =
+            vec![(0, &self.positive), (1, &self.complete)];
+        tagged.extend(self.shards.iter().map(|s| (2u8, s)));
+        digest_caches(&tagged)
     }
 }
 

@@ -1,28 +1,32 @@
 //! The database: schema + tables + indexes.
 
-use crate::db::index::RelIndex;
+use crate::db::index::{Backend, RelIx};
 use crate::db::schema::Schema;
 use crate::db::table::{EntityTable, RelTable};
+use crate::db::value::Code;
 use crate::error::{Error, Result};
 
 /// An in-memory relational database.  Indexes are built explicitly with
-/// [`Database::build_indexes`]; mutation invalidates them.
+/// [`Database::build_indexes`] on the selected storage [`Backend`]
+/// (columnar CSR by default, CLI `--backend`); mutation through anything
+/// but the incremental mutators invalidates them.
 #[derive(Clone, Debug)]
 pub struct Database {
     pub schema: Schema,
     pub entities: Vec<EntityTable>,
     pub rels: Vec<RelTable>,
-    indexes: Option<Vec<RelIndex>>,
+    indexes: Option<Vec<RelIx>>,
+    backend: Backend,
 }
 
 impl Database {
-    /// Empty database over a schema.
+    /// Empty database over a schema (default backend: CSR).
     pub fn empty(schema: Schema) -> Self {
         let entities =
             schema.entities.iter().map(|e| EntityTable::new(e.attrs.len())).collect();
         let rels =
             schema.relationships.iter().map(|r| RelTable::new(r.attrs.len())).collect();
-        Database { schema, entities, rels, indexes: None }
+        Database { schema, entities, rels, indexes: None, backend: Backend::default() }
     }
 
     /// Construct from parts, validate, and build indexes.
@@ -31,10 +35,36 @@ impl Database {
         entities: Vec<EntityTable>,
         rels: Vec<RelTable>,
     ) -> Result<Self> {
-        let mut db = Database { schema, entities, rels, indexes: None };
+        let mut db = Database {
+            schema,
+            entities,
+            rels,
+            indexes: None,
+            backend: Backend::default(),
+        };
         db.validate()?;
         db.build_indexes()?;
         Ok(db)
+    }
+
+    /// The relationship-index storage engine in use.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Switch the index storage engine, rebuilding the indexes when they
+    /// exist and the backend actually changes.  Counts are bit-identical
+    /// on either engine; only the layout (and the join kernels it
+    /// enables) differ.
+    pub fn set_backend(&mut self, backend: Backend) -> Result<()> {
+        if self.backend == backend {
+            return Ok(());
+        }
+        self.backend = backend;
+        if self.indexes.is_some() {
+            self.build_indexes()?;
+        }
+        Ok(())
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -53,23 +83,50 @@ impl Database {
         Ok(())
     }
 
-    /// (Re)build all relationship indexes.
+    /// (Re)build all relationship indexes on the current backend.
     pub fn build_indexes(&mut self) -> Result<()> {
         let mut ixs = Vec::with_capacity(self.rels.len());
         for (rt, t) in self.rels.iter().enumerate() {
             let (f, o) = self.schema.rel_endpoints(rt);
-            ixs.push(RelIndex::build(t, self.entities[f].len(), self.entities[o].len())?);
+            ixs.push(RelIx::build(
+                self.backend,
+                t,
+                self.entities[f].len(),
+                self.entities[o].len(),
+            )?);
         }
         self.indexes = Some(ixs);
         Ok(())
     }
 
     /// Index for a relationship; requires [`Database::build_indexes`].
-    pub fn index(&self, rel: usize) -> Result<&RelIndex> {
+    pub fn index(&self, rel: usize) -> Result<&RelIx> {
         self.indexes
             .as_ref()
             .and_then(|v| v.get(rel))
             .ok_or_else(|| Error::Data("indexes not built (call build_indexes)".into()))
+    }
+
+    /// Merge pending CSR overlay entries into the base runs across all
+    /// indexes (no-op on the hash backend or when indexes are absent).
+    /// [`crate::delta::MaintainedCounts`] calls this at end-of-batch so
+    /// recounts and post-batch serving read clean contiguous runs.
+    pub fn compact_indexes(&mut self) {
+        if let Some(ixs) = self.indexes.as_mut() {
+            for ix in ixs {
+                ix.compact();
+            }
+        }
+    }
+
+    /// Total pending overlay entries across all CSR indexes (0 on the
+    /// hash backend; mutations self-compact past a size threshold, and
+    /// the delta subsystem compacts at end-of-batch).
+    pub fn index_overlay_len(&self) -> usize {
+        self.indexes
+            .as_ref()
+            .map(|v| v.iter().map(|ix| ix.overlay_len()).sum())
+            .unwrap_or(0)
     }
 
     pub fn has_indexes(&self) -> bool {
@@ -288,8 +345,63 @@ mod tests {
             Database::new(db.schema.clone(), db.entities.clone(), db.rels.clone())
                 .unwrap();
         for rel in 0..db.rels.len() {
-            assert_eq!(db.index(rel).unwrap().pair, fresh.index(rel).unwrap().pair);
+            let t = &db.rels[rel];
+            assert_eq!(db.index(rel).unwrap().len(), t.len() as usize);
+            assert_eq!(fresh.index(rel).unwrap().len(), t.len() as usize);
+            for i in 0..t.len() {
+                let (f, o) = (t.from[i as usize], t.to[i as usize]);
+                assert_eq!(db.index(rel).unwrap().lookup(f, o), Some(i));
+                assert_eq!(fresh.index(rel).unwrap().lookup(f, o), Some(i));
+            }
         }
+    }
+
+    #[test]
+    fn backend_switch_rebuilds_equivalent_indexes() {
+        use crate::db::index::Backend;
+        let mut db = fixtures::university_db();
+        assert_eq!(db.backend(), Backend::Csr);
+        let csr_pairs: Vec<Vec<Option<u32>>> = (0..db.rels.len())
+            .map(|rel| {
+                let t = &db.rels[rel];
+                (0..t.len())
+                    .map(|i| {
+                        db.index(rel)
+                            .unwrap()
+                            .lookup(t.from[i as usize], t.to[i as usize])
+                    })
+                    .collect()
+            })
+            .collect();
+        db.set_backend(Backend::Hash).unwrap();
+        assert_eq!(db.backend(), Backend::Hash);
+        for rel in 0..db.rels.len() {
+            let t = &db.rels[rel];
+            for i in 0..t.len() {
+                assert_eq!(
+                    db.index(rel)
+                        .unwrap()
+                        .lookup(t.from[i as usize], t.to[i as usize]),
+                    csr_pairs[rel][i as usize]
+                );
+            }
+        }
+        // switching to the same backend is a no-op
+        db.set_backend(Backend::Hash).unwrap();
+        assert!(db.has_indexes());
+    }
+
+    #[test]
+    fn mutation_overlay_compacts_on_demand() {
+        let mut db = fixtures::university_db();
+        assert_eq!(db.index_overlay_len(), 0);
+        db.insert_link(1, 0, 4, &[1]).unwrap();
+        db.delete_link(0, 0, 0).unwrap();
+        assert!(db.index_overlay_len() > 0);
+        db.compact_indexes();
+        assert_eq!(db.index_overlay_len(), 0);
+        assert_eq!(db.index(1).unwrap().lookup(0, 4), Some(db.rels[1].len() - 1));
+        assert_eq!(db.index(0).unwrap().lookup(0, 0), None);
     }
 
     #[test]

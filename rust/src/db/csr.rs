@@ -1,0 +1,672 @@
+//! Columnar CSR (compressed sparse row) adjacency for relationship
+//! tables: one sorted run of `(neighbor, tuple id)` per endpoint value,
+//! in both orientations, backed by three contiguous arrays per
+//! orientation (`offsets` / `nbr` / `tid`).
+//!
+//! Compared with the seed-era hash index ([`crate::db::index::RelIndex`]
+//! — `Vec<Vec<u32>>` adjacency plus an `FxHashMap` pair map), the CSR
+//! layout trades pointer-chasing hash probes for cache-friendly scans:
+//! membership is a binary search inside one contiguous run, degree is an
+//! offset subtraction, and two runs over the same population intersect
+//! with a linear merge (or galloping search when the degree distribution
+//! is skewed — see [`crate::db::query::intersect_count`]).
+//!
+//! Churn support: mutations do **not** rewrite the base arrays.  They go
+//! to a small sorted *overlay* — pending inserts plus tombstones over
+//! base entries — consulted by every read.  [`CsrIndex::compact`] merges
+//! the overlay back into fresh base runs in one linear pass;
+//! [`crate::delta::MaintainedCounts`] calls it at end-of-batch so the
+//! stale-point recounts (whose costs the `DeltaPolicy` estimates assume
+//! clean-run join speed) and all post-batch serving read contiguous
+//! runs.  The mutators also self-compact once the overlay outgrows
+//! `64 + √base` entries: sorted-insert memmoves cost O(overlay) and a
+//! compaction costs O(base) amortized over the overlay's lifetime, so
+//! the √base threshold bounds streaming mutation at O(√base) amortized
+//! per op (vs the hash backend's O(1); the batched delta path compacts
+//! at end-of-batch regardless).
+//!
+//! Reads are equivalent to the hash backend *at all times* (overlay
+//! pending or not): `rust/tests/proptest_invariants.rs` asserts
+//! build-vs-overlay-then-compact equivalence, run sortedness, and
+//! hash/CSR count equality under random churn.
+
+use crate::db::index::pair_key;
+use crate::db::table::RelTable;
+use crate::error::{Error, Result};
+
+/// Mask extracting the neighbor id from an orientation pair key.
+const NBR_MASK: u64 = 0xFFFF_FFFF;
+
+/// Self-compaction slack: compact when one orientation's overlay holds
+/// more than `OVERLAY_SLACK + √base` entries.  Sorted inserts cost
+/// O(overlay) and compaction O(base)/overlay-lifetime, so the √base
+/// threshold balances them at O(√base) amortized per streaming op.
+const OVERLAY_SLACK: usize = 64;
+
+/// Integer square root (`usize::isqrt` needs Rust 1.84; MSRV is 1.70).
+/// f64 has 52 mantissa bits, exact for every table size we index.
+fn isqrt(n: usize) -> usize {
+    (n as f64).sqrt() as usize
+}
+
+/// One orientation of the adjacency: `row` is an endpoint value, its run
+/// `nbr[offsets[row]..offsets[row+1]]` lists the opposite endpoints in
+/// strictly ascending order, with the owning tuple ids alongside.
+#[derive(Clone, Debug, Default)]
+pub struct CsrHalf {
+    /// Run bounds; `len() == rows + 1`.
+    pub offsets: Vec<u32>,
+    /// Neighbor entity ids, strictly ascending within each run.
+    pub nbr: Vec<u32>,
+    /// Tuple id of each `(row, nbr)` entry, parallel to `nbr`.
+    pub tid: Vec<u32>,
+}
+
+impl CsrHalf {
+    fn rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    fn run(&self, r: u32) -> (usize, usize) {
+        (self.offsets[r as usize] as usize, self.offsets[r as usize + 1] as usize)
+    }
+
+    /// Build from `(row, nbr, tid)` triples (sorted in place).
+    fn build(mut triples: Vec<(u32, u32, u32)>, rows: usize) -> CsrHalf {
+        triples.sort_unstable();
+        let mut offsets = vec![0u32; rows + 1];
+        for &(r, _, _) in &triples {
+            offsets[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            offsets[i + 1] += offsets[i];
+        }
+        CsrHalf {
+            offsets,
+            nbr: triples.iter().map(|t| t.1).collect(),
+            tid: triples.iter().map(|t| t.2).collect(),
+        }
+    }
+
+    /// Position of `nbr` inside row `r`'s run.
+    fn find(&self, r: u32, nbr: u32) -> Option<usize> {
+        let (lo, hi) = self.run(r);
+        self.nbr[lo..hi].binary_search(&nbr).ok().map(|p| lo + p)
+    }
+
+    fn grow(&mut self, rows: usize) {
+        let last = *self.offsets.last().expect("offsets non-empty");
+        while self.offsets.len() < rows + 1 {
+            self.offsets.push(last);
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        (self.offsets.capacity() + self.nbr.capacity() + self.tid.capacity()) * 4
+    }
+}
+
+/// Pending mutations of one orientation, keyed by that orientation's
+/// `(row << 32) | nbr` pair key (so one row's entries are contiguous).
+#[derive(Clone, Debug, Default)]
+struct Overlay {
+    /// `(key, tid)` of inserted pairs absent from the live base.
+    add: Vec<(u64, u32)>,
+    /// Keys of base entries deleted (tombstones).
+    del: Vec<u64>,
+}
+
+impl Overlay {
+    fn is_empty(&self) -> bool {
+        self.add.is_empty() && self.del.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.add.len() + self.del.len()
+    }
+
+    /// Pending inserts within row `r`.
+    fn add_range(&self, r: u32) -> &[(u64, u32)] {
+        let lo = self.add.partition_point(|&(k, _)| k < pair_key(r, 0));
+        let hi = self.add.partition_point(|&(k, _)| k <= pair_key(r, u32::MAX));
+        &self.add[lo..hi]
+    }
+
+    /// Tombstones within row `r`.
+    fn del_range(&self, r: u32) -> &[u64] {
+        let lo = self.del.partition_point(|&k| k < pair_key(r, 0));
+        let hi = self.del.partition_point(|&k| k <= pair_key(r, u32::MAX));
+        &self.del[lo..hi]
+    }
+
+    fn touches(&self, r: u32) -> bool {
+        !self.add_range(r).is_empty() || !self.del_range(r).is_empty()
+    }
+
+    fn insert_add(&mut self, key: u64, tid: u32) {
+        let pos = self.add.partition_point(|&(k, _)| k < key);
+        self.add.insert(pos, (key, tid));
+    }
+
+    fn insert_del(&mut self, key: u64) {
+        let pos = self.del.partition_point(|&k| k < key);
+        self.del.insert(pos, key);
+    }
+
+    fn bytes(&self) -> usize {
+        self.add.capacity() * 12 + self.del.capacity() * 8
+    }
+}
+
+/// One row of a CSR orientation, merged with any overlay entries.
+pub enum CsrRow<'a> {
+    /// No overlay entries touch this row: borrow the base run directly.
+    Clean { nbr: &'a [u32], tid: &'a [u32] },
+    /// Overlay entries touch this row: a materialized `(nbr, tid)` run,
+    /// still strictly ascending by neighbor.
+    Dirty(Vec<(u32, u32)>),
+}
+
+/// CSR index over one relationship table: both orientations plus their
+/// overlays.  The mutation API mirrors [`crate::db::index::RelIndex`]
+/// so [`crate::db::index::RelIx`] can dispatch on the backend.
+#[derive(Clone, Debug, Default)]
+pub struct CsrIndex {
+    /// from -> sorted (to, tid) runs.
+    fwd: CsrHalf,
+    /// to -> sorted (from, tid) runs.
+    rev: CsrHalf,
+    ov_fwd: Overlay,
+    ov_rev: Overlay,
+}
+
+impl CsrIndex {
+    /// Build from a table given the endpoint population sizes (same
+    /// contract as [`crate::db::index::RelIndex::build`]: rejects
+    /// out-of-range endpoints and duplicate pairs).
+    pub fn build(table: &RelTable, n_from: u32, n_to: u32) -> Result<CsrIndex> {
+        let n = table.len() as usize;
+        let mut f_triples = Vec::with_capacity(n);
+        let mut r_triples = Vec::with_capacity(n);
+        for t in 0..table.len() {
+            let f = table.from[t as usize];
+            let o = table.to[t as usize];
+            if f >= n_from || o >= n_to {
+                return Err(Error::Data(format!(
+                    "rel tuple ({f},{o}) out of population range ({n_from},{n_to})"
+                )));
+            }
+            f_triples.push((f, o, t));
+            r_triples.push((o, f, t));
+        }
+        f_triples.sort_unstable();
+        for w in f_triples.windows(2) {
+            if (w[0].0, w[0].1) == (w[1].0, w[1].1) {
+                return Err(Error::Data(format!(
+                    "duplicate relationship pair ({},{})",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        let fwd = CsrHalf::build(f_triples, n_from as usize);
+        let rev = CsrHalf::build(r_triples, n_to as usize);
+        Ok(CsrIndex {
+            fwd,
+            rev,
+            ov_fwd: Overlay::default(),
+            ov_rev: Overlay::default(),
+        })
+    }
+
+    /// Tuple id for a fully-bound pair, if the relationship holds
+    /// (overlay-aware: pending inserts win, tombstones hide base
+    /// entries).
+    #[inline]
+    pub fn lookup(&self, from: u32, to: u32) -> Option<u32> {
+        if from as usize >= self.fwd.rows() || to as usize >= self.rev.rows() {
+            return None;
+        }
+        if !self.ov_fwd.is_empty() {
+            let k = pair_key(from, to);
+            if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&k, |e| e.0) {
+                return Some(self.ov_fwd.add[p].1);
+            }
+            if self.ov_fwd.del.binary_search(&k).is_ok() {
+                return None;
+            }
+        }
+        self.fwd.find(from, to).map(|p| self.fwd.tid[p])
+    }
+
+    /// Live adjacency degree of `from` (base minus tombstones plus
+    /// pending inserts).
+    pub fn degree_from(&self, f: u32) -> usize {
+        let (lo, hi) = self.fwd.run(f);
+        hi - lo - self.ov_fwd.del_range(f).len() + self.ov_fwd.add_range(f).len()
+    }
+
+    /// Live adjacency degree of `to`.
+    pub fn degree_to(&self, t: u32) -> usize {
+        let (lo, hi) = self.rev.run(t);
+        hi - lo - self.ov_rev.del_range(t).len() + self.ov_rev.add_range(t).len()
+    }
+
+    /// The from-oriented row, merged with the overlay when necessary.
+    pub fn row_from(&self, f: u32) -> CsrRow<'_> {
+        Self::row(&self.fwd, &self.ov_fwd, f)
+    }
+
+    /// The to-oriented row, merged with the overlay when necessary.
+    pub fn row_to(&self, t: u32) -> CsrRow<'_> {
+        Self::row(&self.rev, &self.ov_rev, t)
+    }
+
+    /// The contiguous sorted neighbor run of `from`, available only when
+    /// no overlay entry touches the row (the merge-intersection kernel's
+    /// fast path; dirty rows fall back to generic enumeration).
+    pub fn sorted_nbrs_from(&self, f: u32) -> Option<&[u32]> {
+        if self.ov_fwd.is_empty() || !self.ov_fwd.touches(f) {
+            let (lo, hi) = self.fwd.run(f);
+            Some(&self.fwd.nbr[lo..hi])
+        } else {
+            None
+        }
+    }
+
+    /// The contiguous sorted neighbor run of `to` (see
+    /// [`CsrIndex::sorted_nbrs_from`]).
+    pub fn sorted_nbrs_to(&self, t: u32) -> Option<&[u32]> {
+        if self.ov_rev.is_empty() || !self.ov_rev.touches(t) {
+            let (lo, hi) = self.rev.run(t);
+            Some(&self.rev.nbr[lo..hi])
+        } else {
+            None
+        }
+    }
+
+    fn row<'a>(half: &'a CsrHalf, ov: &'a Overlay, r: u32) -> CsrRow<'a> {
+        let (lo, hi) = half.run(r);
+        if ov.is_empty() || !ov.touches(r) {
+            return CsrRow::Clean { nbr: &half.nbr[lo..hi], tid: &half.tid[lo..hi] };
+        }
+        let adds = ov.add_range(r);
+        let dels = ov.del_range(r);
+        let mut out = Vec::with_capacity(hi - lo + adds.len());
+        let mut ai = 0;
+        let mut di = 0;
+        for p in lo..hi {
+            let n = half.nbr[p];
+            while ai < adds.len() && ((adds[ai].0 & NBR_MASK) as u32) < n {
+                out.push(((adds[ai].0 & NBR_MASK) as u32, adds[ai].1));
+                ai += 1;
+            }
+            if di < dels.len() && (dels[di] & NBR_MASK) as u32 == n {
+                // tombstoned; a re-added pair carries the fresh tid
+                di += 1;
+                if ai < adds.len() && (adds[ai].0 & NBR_MASK) as u32 == n {
+                    out.push((n, adds[ai].1));
+                    ai += 1;
+                }
+                continue;
+            }
+            out.push((n, half.tid[p]));
+        }
+        for &(k, t) in &adds[ai..] {
+            out.push(((k & NBR_MASK) as u32, t));
+        }
+        CsrRow::Dirty(out)
+    }
+
+    /// Extend both orientations to cover grown endpoint populations.
+    pub fn grow(&mut self, n_from: u32, n_to: u32) {
+        if self.fwd.rows() < n_from as usize {
+            self.fwd.grow(n_from as usize);
+        }
+        if self.rev.rows() < n_to as usize {
+            self.rev.grow(n_to as usize);
+        }
+    }
+
+    /// Register a freshly appended tuple `t = (from, to)` in the
+    /// overlay (duplicate pairs are rejected before any structure is
+    /// touched).
+    pub fn insert(&mut self, from: u32, to: u32, t: u32) -> Result<()> {
+        if from as usize >= self.fwd.rows() || to as usize >= self.rev.rows() {
+            return Err(Error::Data(format!(
+                "rel tuple ({from},{to}) out of population range ({},{})",
+                self.fwd.rows(),
+                self.rev.rows()
+            )));
+        }
+        if self.lookup(from, to).is_some() {
+            return Err(Error::Data(format!(
+                "duplicate relationship pair ({from},{to})"
+            )));
+        }
+        self.ov_fwd.insert_add(pair_key(from, to), t);
+        self.ov_rev.insert_add(pair_key(to, from), t);
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Unregister tuple `t = (from, to)` after a
+    /// [`RelTable::swap_remove`]: tombstone (or drop the pending insert
+    /// of) the pair, then relabel the moved tuple `last -> t` wherever
+    /// its entries live.  Mirrors
+    /// [`crate::db::index::RelIndex::remove_swap`].
+    pub fn remove_swap(
+        &mut self,
+        from: u32,
+        to: u32,
+        t: u32,
+        last: u32,
+        last_from: u32,
+        last_to: u32,
+    ) -> Result<()> {
+        match self.lookup(from, to) {
+            Some(id) if id == t => {}
+            _ => {
+                return Err(Error::Data(format!(
+                    "index out of sync removing ({from},{to}) id {t}"
+                )))
+            }
+        }
+        let fk = pair_key(from, to);
+        if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&fk, |e| e.0) {
+            self.ov_fwd.add.remove(p);
+            let rk = pair_key(to, from);
+            let q = self
+                .ov_rev
+                .add
+                .binary_search_by_key(&rk, |e| e.0)
+                .expect("overlay orientations in sync");
+            self.ov_rev.add.remove(q);
+        } else {
+            self.ov_fwd.insert_del(fk);
+            self.ov_rev.insert_del(pair_key(to, from));
+        }
+        if t != last {
+            // relabel the moved tuple: last -> t
+            let lk = pair_key(last_from, last_to);
+            if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&lk, |e| e.0) {
+                self.ov_fwd.add[p].1 = t;
+                let rk = pair_key(last_to, last_from);
+                let q = self
+                    .ov_rev
+                    .add
+                    .binary_search_by_key(&rk, |e| e.0)
+                    .expect("overlay orientations in sync");
+                self.ov_rev.add[q].1 = t;
+            } else {
+                if let Some(p) = self.fwd.find(last_from, last_to) {
+                    self.fwd.tid[p] = t;
+                }
+                if let Some(p) = self.rev.find(last_to, last_from) {
+                    self.rev.tid[p] = t;
+                }
+            }
+        }
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Live pair count.
+    pub fn len(&self) -> usize {
+        self.fwd.nbr.len() - self.ov_fwd.del.len() + self.ov_fwd.add.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pending overlay entries across both orientations.
+    pub fn overlay_len(&self) -> usize {
+        self.ov_fwd.len() + self.ov_rev.len()
+    }
+
+    /// Largest live degree in either orientation.
+    pub fn max_degree(&self) -> usize {
+        if self.ov_fwd.is_empty() && self.ov_rev.is_empty() {
+            let f = self.fwd.offsets.windows(2).map(|w| (w[1] - w[0]) as usize);
+            let t = self.rev.offsets.windows(2).map(|w| (w[1] - w[0]) as usize);
+            f.max().unwrap_or(0).max(t.max().unwrap_or(0))
+        } else {
+            let f = (0..self.fwd.rows()).map(|r| self.degree_from(r as u32));
+            let t = (0..self.rev.rows()).map(|r| self.degree_to(r as u32));
+            f.max().unwrap_or(0).max(t.max().unwrap_or(0))
+        }
+    }
+
+    /// Merge the overlay into fresh base runs (one linear pass per
+    /// orientation); afterwards every row is clean and
+    /// [`CsrIndex::overlay_len`] is zero.
+    pub fn compact(&mut self) {
+        if !self.ov_fwd.is_empty() {
+            Self::compact_half(&mut self.fwd, &mut self.ov_fwd);
+        }
+        if !self.ov_rev.is_empty() {
+            Self::compact_half(&mut self.rev, &mut self.ov_rev);
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        let threshold = OVERLAY_SLACK + isqrt(self.fwd.nbr.len());
+        if self.ov_fwd.len() > threshold || self.ov_rev.len() > threshold {
+            self.compact();
+        }
+    }
+
+    fn compact_half(half: &mut CsrHalf, ov: &mut Overlay) {
+        let rows = half.rows();
+        let new_len = half.nbr.len() + ov.add.len() - ov.del.len();
+        let mut offsets = Vec::with_capacity(rows + 1);
+        let mut nbr = Vec::with_capacity(new_len);
+        let mut tid = Vec::with_capacity(new_len);
+        offsets.push(0u32);
+        let (mut ai, mut di) = (0, 0);
+        for r in 0..rows as u32 {
+            let (lo, hi) = half.run(r);
+            let mut bi = lo;
+            let row_end = pair_key(r, u32::MAX);
+            loop {
+                let bkey = if bi < hi { Some(pair_key(r, half.nbr[bi])) } else { None };
+                let akey = match ov.add.get(ai) {
+                    Some(&(k, _)) if k <= row_end => Some(k),
+                    _ => None,
+                };
+                match (bkey, akey) {
+                    (None, None) => break,
+                    (Some(bk), Some(ak)) if bk == ak => {
+                        // tombstoned base entry shadowed by a re-insert
+                        debug_assert_eq!(ov.del.get(di), Some(&bk));
+                        di += 1;
+                        bi += 1;
+                        nbr.push((ak & NBR_MASK) as u32);
+                        tid.push(ov.add[ai].1);
+                        ai += 1;
+                    }
+                    (Some(bk), _) if bkey < akey || akey.is_none() => {
+                        if ov.del.get(di) == Some(&bk) {
+                            di += 1; // tombstoned: drop
+                        } else {
+                            nbr.push(half.nbr[bi]);
+                            tid.push(half.tid[bi]);
+                        }
+                        bi += 1;
+                    }
+                    (_, Some(ak)) => {
+                        nbr.push((ak & NBR_MASK) as u32);
+                        tid.push(ov.add[ai].1);
+                        ai += 1;
+                    }
+                    (Some(_), None) => unreachable!("covered above"),
+                }
+            }
+            offsets.push(nbr.len() as u32);
+        }
+        debug_assert_eq!(ai, ov.add.len());
+        debug_assert_eq!(di, ov.del.len());
+        half.offsets = offsets;
+        half.nbr = nbr;
+        half.tid = tid;
+        ov.add.clear();
+        ov.del.clear();
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.fwd.bytes() + self.rev.bytes() + self.ov_fwd.bytes() + self.ov_rev.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> RelTable {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 2, &[]).unwrap();
+        t.push(1, 1, &[]).unwrap();
+        t
+    }
+
+    fn nbrs(ix: &CsrIndex, f: u32) -> Vec<(u32, u32)> {
+        match ix.row_from(f) {
+            CsrRow::Clean { nbr, tid } => {
+                nbr.iter().copied().zip(tid.iter().copied()).collect()
+            }
+            CsrRow::Dirty(v) => v,
+        }
+    }
+
+    #[test]
+    fn builds_sorted_runs_and_lookup() {
+        let t = table();
+        let ix = CsrIndex::build(&t, 2, 3).unwrap();
+        assert_eq!(ix.sorted_nbrs_from(0).unwrap(), &[1, 2]);
+        assert_eq!(ix.sorted_nbrs_to(1).unwrap(), &[0, 1]);
+        assert_eq!(ix.lookup(0, 2), Some(1));
+        assert_eq!(ix.lookup(1, 2), None);
+        assert_eq!(ix.degree_from(0), 2);
+        assert_eq!(ix.degree_to(1), 2);
+        assert_eq!(ix.len(), 3);
+        assert_eq!(ix.max_degree(), 2);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_out_of_range() {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 1, &[]).unwrap();
+        assert!(CsrIndex::build(&t, 2, 2).is_err());
+
+        let mut t2 = RelTable::new(0);
+        t2.push(5, 0, &[]).unwrap();
+        assert!(CsrIndex::build(&t2, 2, 2).is_err());
+    }
+
+    #[test]
+    fn overlay_insert_delete_reads_like_rebuild() {
+        let mut t = table();
+        let mut ix = CsrIndex::build(&t, 2, 3).unwrap();
+
+        // insert (1, 2) through the overlay
+        let id = t.push(1, 2, &[]).unwrap();
+        ix.insert(1, 2, id).unwrap();
+        assert!(ix.insert(1, 2, 9).is_err()); // duplicate
+        assert_eq!(ix.lookup(1, 2), Some(3));
+        assert_eq!(ix.degree_from(1), 2);
+        assert_eq!(ix.sorted_nbrs_from(1), None); // dirty row
+        assert_eq!(nbrs(&ix, 1), vec![(1, 2), (2, 3)]);
+        assert!(ix.overlay_len() > 0);
+
+        // delete (0, 2): the last tuple (1,2) takes id 1
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(1).unwrap();
+        ix.remove_swap(0, 2, 1, last, lf, lt).unwrap();
+        assert_eq!(ix.lookup(0, 2), None);
+        assert_eq!(ix.lookup(1, 2), Some(1));
+        assert_eq!(ix.degree_from(0), 1);
+        assert_eq!(ix.len(), t.len() as usize);
+
+        // overlay reads match a from-scratch rebuild...
+        let fresh = CsrIndex::build(&t, 2, 3).unwrap();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
+        }
+        // ...and compaction reproduces its base arrays exactly
+        ix.compact();
+        assert_eq!(ix.overlay_len(), 0);
+        for f in 0..2u32 {
+            assert_eq!(
+                ix.sorted_nbrs_from(f).unwrap(),
+                fresh.sorted_nbrs_from(f).unwrap(),
+                "row {f}"
+            );
+        }
+        for o in 0..3u32 {
+            assert_eq!(
+                ix.sorted_nbrs_to(o).unwrap(),
+                fresh.sorted_nbrs_to(o).unwrap(),
+                "rev row {o}"
+            );
+        }
+        assert_eq!(ix.lookup(1, 2), fresh.lookup(1, 2));
+    }
+
+    #[test]
+    fn delete_then_reinsert_same_pair() {
+        let mut t = table();
+        let mut ix = CsrIndex::build(&t, 2, 3).unwrap();
+        // delete (0, 1): last tuple (1,1) takes id 0
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(0).unwrap();
+        ix.remove_swap(0, 1, 0, last, lf, lt).unwrap();
+        assert_eq!(ix.lookup(0, 1), None);
+        assert_eq!(ix.lookup(1, 1), Some(0));
+        // re-insert the tombstoned pair with a fresh tid
+        let id = t.push(0, 1, &[]).unwrap();
+        ix.insert(0, 1, id).unwrap();
+        assert_eq!(ix.lookup(0, 1), Some(id));
+        assert_eq!(nbrs(&ix, 0), vec![(1, id), (2, 1)]);
+        ix.compact();
+        let fresh = CsrIndex::build(&t, 2, 3).unwrap();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
+        }
+    }
+
+    #[test]
+    fn grow_extends_runs() {
+        let t = RelTable::new(0);
+        let mut ix = CsrIndex::build(&t, 1, 1).unwrap();
+        ix.grow(3, 2);
+        assert_eq!(ix.degree_from(2), 0);
+        ix.insert(2, 1, 0).unwrap();
+        assert_eq!(ix.lookup(2, 1), Some(0));
+        assert!(ix.insert(5, 0, 1).is_err()); // out of range
+    }
+
+    #[test]
+    fn self_compaction_keeps_overlay_bounded() {
+        let mut t = RelTable::new(0);
+        let mut ix = CsrIndex::build(&t, 1, 4096).unwrap();
+        for i in 0..2000u32 {
+            let id = t.push(0, i, &[]).unwrap();
+            ix.insert(0, i, id).unwrap();
+        }
+        // the mutators self-compacted along the way (both orientations
+        // count toward overlay_len, hence the factor of two)
+        assert!(ix.overlay_len() <= 2 * (OVERLAY_SLACK + isqrt(ix.len())));
+        assert_eq!(ix.len(), 2000);
+        assert_eq!(ix.degree_from(0), 2000);
+        ix.compact();
+        let run = ix.sorted_nbrs_from(0).unwrap();
+        assert!(run.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(run.len(), 2000);
+    }
+}

@@ -136,6 +136,6 @@ mod tests {
         let db = university_db();
         // index build would have failed on duplicates; double-check here
         let ix = db.index(0).unwrap();
-        assert_eq!(ix.pair.len(), 25);
+        assert_eq!(ix.len(), 25);
     }
 }

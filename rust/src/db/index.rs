@@ -1,11 +1,50 @@
-//! FK hash indexes over relationship tables: adjacency lists in both
-//! directions plus a unique `(from, to) -> tuple` map used for indicator
-//! lookups and bound-bound join steps.
+//! FK indexes over relationship tables, behind a [`Backend`] selector:
+//!
+//! - [`RelIndex`] — the seed-era **hash** engine: per-endpoint adjacency
+//!   `Vec`s plus a unique `(from, to) -> tuple` FxHash map used for
+//!   indicator lookups and bound-bound join steps;
+//! - [`crate::db::csr::CsrIndex`] — the columnar **CSR** engine (the
+//!   default): contiguous sorted neighbor runs in both orientations,
+//!   with a sorted overlay absorbing churn until compaction.
+//!
+//! [`RelIx`] is the enum the rest of the crate sees (returned by
+//! [`crate::db::catalog::Database::index`]); every consumer goes
+//! through its accessors, so the two engines are interchangeable and
+//! produce bit-identical counts (asserted by the backend-equivalence
+//! tests and the CI digest gate).
 
 use crate::util::fxhash::FxHashMap;
 
+use crate::db::csr::{CsrIndex, CsrRow};
 use crate::db::table::RelTable;
 use crate::error::{Error, Result};
+
+/// Relationship-index storage engine selector (CLI `--backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Backend {
+    /// Seed-era FxHash adjacency lists + pair map.
+    Hash,
+    /// Columnar CSR with sorted neighbor runs (the default).
+    #[default]
+    Csr,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s.to_ascii_lowercase().as_str() {
+            "hash" => Some(Backend::Hash),
+            "csr" => Some(Backend::Csr),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Hash => "hash",
+            Backend::Csr => "csr",
+        }
+    }
+}
 
 /// Index over one relationship table.
 #[derive(Clone, Debug, Default)]
@@ -145,6 +184,244 @@ impl RelIndex {
     }
 }
 
+/// Iterator over the tuple ids adjacent to one endpoint value, for
+/// either backend (CSR dirty rows materialize their merged run).
+pub enum Tids<'a> {
+    Slice(std::slice::Iter<'a, u32>),
+    Owned(std::vec::IntoIter<(u32, u32)>),
+}
+
+impl Iterator for Tids<'_> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        match self {
+            Tids::Slice(it) => it.next().copied(),
+            Tids::Owned(it) => it.next().map(|(_, t)| t),
+        }
+    }
+}
+
+/// A relationship index of either backend.  All consumers (join
+/// enumeration, the wander-join sampler, delta maintenance, the Möbius
+/// indicator probes) go through these accessors, so hash and CSR are
+/// interchangeable bit-for-bit.
+#[derive(Clone, Debug)]
+pub enum RelIx {
+    Hash(RelIndex),
+    Csr(CsrIndex),
+}
+
+impl RelIx {
+    /// Build an index of the selected backend from a table.
+    pub fn build(
+        backend: Backend,
+        table: &RelTable,
+        n_from: u32,
+        n_to: u32,
+    ) -> Result<RelIx> {
+        match backend {
+            Backend::Hash => Ok(RelIx::Hash(RelIndex::build(table, n_from, n_to)?)),
+            Backend::Csr => Ok(RelIx::Csr(CsrIndex::build(table, n_from, n_to)?)),
+        }
+    }
+
+    pub fn backend(&self) -> Backend {
+        match self {
+            RelIx::Hash(_) => Backend::Hash,
+            RelIx::Csr(_) => Backend::Csr,
+        }
+    }
+
+    /// Tuple id for a fully-bound pair, if the relationship holds.
+    #[inline]
+    pub fn lookup(&self, from: u32, to: u32) -> Option<u32> {
+        match self {
+            RelIx::Hash(ix) => ix.lookup(from, to),
+            RelIx::Csr(ix) => ix.lookup(from, to),
+        }
+    }
+
+    /// Adjacency degree of `from`.
+    #[inline]
+    pub fn degree_from(&self, f: u32) -> usize {
+        match self {
+            RelIx::Hash(ix) => ix.by_from[f as usize].len(),
+            RelIx::Csr(ix) => ix.degree_from(f),
+        }
+    }
+
+    /// Adjacency degree of `to`.
+    #[inline]
+    pub fn degree_to(&self, t: u32) -> usize {
+        match self {
+            RelIx::Hash(ix) => ix.by_to[t as usize].len(),
+            RelIx::Csr(ix) => ix.degree_to(t),
+        }
+    }
+
+    /// Tuple ids with `from == f` (hash: insertion order; CSR: sorted by
+    /// neighbor — counting consumers are order-independent).
+    pub fn tids_from(&self, f: u32) -> Tids<'_> {
+        match self {
+            RelIx::Hash(ix) => Tids::Slice(ix.by_from[f as usize].iter()),
+            RelIx::Csr(ix) => match ix.row_from(f) {
+                CsrRow::Clean { tid, .. } => Tids::Slice(tid.iter()),
+                CsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
+            },
+        }
+    }
+
+    /// Tuple ids with `to == t`.
+    pub fn tids_to(&self, t: u32) -> Tids<'_> {
+        match self {
+            RelIx::Hash(ix) => Tids::Slice(ix.by_to[t as usize].iter()),
+            RelIx::Csr(ix) => match ix.row_to(t) {
+                CsrRow::Clean { tid, .. } => Tids::Slice(tid.iter()),
+                CsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
+            },
+        }
+    }
+
+    /// The `k`-th `(neighbor, tuple id)` of `f` in **ascending neighbor
+    /// order** — the canonical ordering both backends share, so seeded
+    /// samplers (the ADAPTIVE wander-join estimator) draw identical
+    /// walks on either engine.  CSR reads its sorted run directly; the
+    /// hash backend sorts the row on demand (sampling-path only).
+    pub fn nth_from(&self, table: &RelTable, f: u32, k: usize) -> Option<(u32, u32)> {
+        match self {
+            RelIx::Hash(ix) => {
+                let list = ix.by_from.get(f as usize)?;
+                let mut row: Vec<(u32, u32)> =
+                    list.iter().map(|&t| (table.to[t as usize], t)).collect();
+                row.sort_unstable();
+                row.get(k).copied()
+            }
+            RelIx::Csr(ix) => match ix.row_from(f) {
+                CsrRow::Clean { nbr, tid } => nbr.get(k).map(|&n| (n, tid[k])),
+                CsrRow::Dirty(v) => v.get(k).copied(),
+            },
+        }
+    }
+
+    /// The `k`-th `(neighbor, tuple id)` of `t` in ascending neighbor
+    /// order (see [`RelIx::nth_from`]).
+    pub fn nth_to(&self, table: &RelTable, t: u32, k: usize) -> Option<(u32, u32)> {
+        match self {
+            RelIx::Hash(ix) => {
+                let list = ix.by_to.get(t as usize)?;
+                let mut row: Vec<(u32, u32)> =
+                    list.iter().map(|&x| (table.from[x as usize], x)).collect();
+                row.sort_unstable();
+                row.get(k).copied()
+            }
+            RelIx::Csr(ix) => match ix.row_to(t) {
+                CsrRow::Clean { nbr, tid } => nbr.get(k).map(|&n| (n, tid[k])),
+                CsrRow::Dirty(v) => v.get(k).copied(),
+            },
+        }
+    }
+
+    /// The contiguous sorted neighbor run of `f` — `Some` only on the
+    /// CSR backend with no pending overlay in the row (the merge
+    /// intersection kernel's fast path).
+    pub fn sorted_nbrs_from(&self, f: u32) -> Option<&[u32]> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix.sorted_nbrs_from(f),
+        }
+    }
+
+    /// The contiguous sorted neighbor run of `t` (see
+    /// [`RelIx::sorted_nbrs_from`]).
+    pub fn sorted_nbrs_to(&self, t: u32) -> Option<&[u32]> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix.sorted_nbrs_to(t),
+        }
+    }
+
+    /// Largest adjacency-list length in either direction.
+    pub fn max_degree(&self) -> usize {
+        match self {
+            RelIx::Hash(ix) => {
+                let f = ix.by_from.iter().map(|v| v.len()).max().unwrap_or(0);
+                let t = ix.by_to.iter().map(|v| v.len()).max().unwrap_or(0);
+                f.max(t)
+            }
+            RelIx::Csr(ix) => ix.max_degree(),
+        }
+    }
+
+    /// Number of live relationship pairs.
+    pub fn len(&self) -> usize {
+        match self {
+            RelIx::Hash(ix) => ix.pair.len(),
+            RelIx::Csr(ix) => ix.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pending CSR overlay entries (0 on the hash backend).
+    pub fn overlay_len(&self) -> usize {
+        match self {
+            RelIx::Hash(_) => 0,
+            RelIx::Csr(ix) => ix.overlay_len(),
+        }
+    }
+
+    /// Extend the adjacency to cover grown endpoint populations.
+    pub fn grow(&mut self, n_from: u32, n_to: u32) {
+        match self {
+            RelIx::Hash(ix) => ix.grow(n_from, n_to),
+            RelIx::Csr(ix) => ix.grow(n_from, n_to),
+        }
+    }
+
+    /// Register a freshly appended tuple (see [`RelIndex::insert`]).
+    pub fn insert(&mut self, from: u32, to: u32, t: u32) -> Result<()> {
+        match self {
+            RelIx::Hash(ix) => ix.insert(from, to, t),
+            RelIx::Csr(ix) => ix.insert(from, to, t),
+        }
+    }
+
+    /// Unregister a swap-removed tuple (see [`RelIndex::remove_swap`]).
+    pub fn remove_swap(
+        &mut self,
+        from: u32,
+        to: u32,
+        t: u32,
+        last: u32,
+        last_from: u32,
+        last_to: u32,
+    ) -> Result<()> {
+        match self {
+            RelIx::Hash(ix) => ix.remove_swap(from, to, t, last, last_from, last_to),
+            RelIx::Csr(ix) => ix.remove_swap(from, to, t, last, last_from, last_to),
+        }
+    }
+
+    /// Merge any pending CSR overlay into the base runs (no-op on hash).
+    pub fn compact(&mut self) {
+        if let RelIx::Csr(ix) = self {
+            ix.compact();
+        }
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        match self {
+            RelIx::Hash(ix) => ix.bytes(),
+            RelIx::Csr(ix) => ix.bytes(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -224,5 +501,75 @@ mod tests {
         let mut t2 = RelTable::new(0);
         t2.push(5, 0, &[]).unwrap();
         assert!(RelIndex::build(&t2, 2, 2).is_err());
+    }
+
+    #[test]
+    fn backend_parse_and_default() {
+        assert_eq!(Backend::parse("hash"), Some(Backend::Hash));
+        assert_eq!(Backend::parse("CSR"), Some(Backend::Csr));
+        assert_eq!(Backend::parse("btree"), None);
+        assert_eq!(Backend::default(), Backend::Csr);
+        assert_eq!(Backend::Csr.name(), "csr");
+    }
+
+    #[test]
+    fn relix_backends_agree_on_all_accessors() {
+        let mut t = RelTable::new(0);
+        t.push(0, 2, &[]).unwrap();
+        t.push(0, 1, &[]).unwrap();
+        t.push(1, 1, &[]).unwrap();
+        let mut h = RelIx::build(Backend::Hash, &t, 2, 3).unwrap();
+        let mut c = RelIx::build(Backend::Csr, &t, 2, 3).unwrap();
+        assert_eq!(h.backend(), Backend::Hash);
+        assert_eq!(c.backend(), Backend::Csr);
+        assert!(c.sorted_nbrs_from(0).is_some());
+        assert!(h.sorted_nbrs_from(0).is_none());
+
+        let check = |h: &RelIx, c: &RelIx, t: &RelTable| {
+            assert_eq!(h.len(), c.len());
+            assert_eq!(h.max_degree(), c.max_degree());
+            for f in 0..2u32 {
+                assert_eq!(h.degree_from(f), c.degree_from(f), "deg from {f}");
+                let mut a: Vec<u32> = h.tids_from(f).collect();
+                let mut b: Vec<u32> = c.tids_from(f).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "tids from {f}");
+                for k in 0..h.degree_from(f) {
+                    assert_eq!(h.nth_from(t, f, k), c.nth_from(t, f, k));
+                }
+                assert_eq!(h.nth_from(t, f, h.degree_from(f)), None);
+            }
+            for o in 0..3u32 {
+                assert_eq!(h.degree_to(o), c.degree_to(o), "deg to {o}");
+                let mut a: Vec<u32> = h.tids_to(o).collect();
+                let mut b: Vec<u32> = c.tids_to(o).collect();
+                a.sort_unstable();
+                b.sort_unstable();
+                assert_eq!(a, b, "tids to {o}");
+                for k in 0..h.degree_to(o) {
+                    assert_eq!(h.nth_to(t, o, k), c.nth_to(t, o, k));
+                }
+                for f in 0..2u32 {
+                    assert_eq!(h.lookup(f, o), c.lookup(f, o), "lookup {f},{o}");
+                }
+            }
+        };
+        check(&h, &c, &t);
+
+        // churn both through the shared mutation API
+        let id = t.push(1, 2, &[]).unwrap();
+        h.insert(1, 2, id).unwrap();
+        c.insert(1, 2, id).unwrap();
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(0).unwrap();
+        h.remove_swap(0, 2, 0, last, lf, lt).unwrap();
+        c.remove_swap(0, 2, 0, last, lf, lt).unwrap();
+        check(&h, &c, &t);
+        c.compact();
+        h.compact(); // no-op
+        assert_eq!(c.overlay_len(), 0);
+        check(&h, &c, &t);
     }
 }

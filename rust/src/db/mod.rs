@@ -2,12 +2,15 @@
 //!
 //! This is the substrate that replaces MariaDB in the paper's setup (see
 //! DESIGN.md §1): typed entity/relationship schemas, columnar tables with
-//! u32-coded categorical values, FK hash indexes and the two counting
-//! queries FACTORBASE issues — GROUP-BY counts over entity tables and
+//! interned u32-coded categorical values, FK indexes behind a selectable
+//! storage engine ([`Backend`]: seed-era hash maps or the default
+//! columnar CSR with merge-join kernels, DESIGN.md §3d) and the two
+//! counting queries FACTORBASE issues — GROUP-BY counts over entity tables and
 //! GROUP-BY counts over INNER-JOIN chains of relationship tables (the
 //! paper's *JOIN problem*).
 
 pub mod catalog;
+pub mod csr;
 pub mod fixtures;
 pub mod index;
 pub mod loader;
@@ -17,7 +20,8 @@ pub mod table;
 pub mod value;
 
 pub use catalog::Database;
-pub use index::RelIndex;
+pub use csr::CsrIndex;
+pub use index::{Backend, RelIndex, RelIx};
 pub use schema::{Attribute, EntityType, RelationshipType, Schema};
 pub use table::{EntityTable, RelTable};
 pub use value::Code;

@@ -4,6 +4,26 @@
 //! `positive_chain_ct` is the expensive operation whose frequency
 //! distinguishes the three strategies: PRECOUNT/HYBRID execute it once
 //! per lattice point, ONDEMAND once per subset per family scored.
+//!
+//! The enumeration core carries **count-only kernels** that collapse
+//! join tails which feed no group-by column (common for the Möbius
+//! subset queries, whose variable sets shrink toward the empty set):
+//!
+//! - a *degree multiply* when a step's freshly bound entity is never
+//!   read again — the subtree contribution is the adjacency degree;
+//! - a *sorted-run intersection* ([`intersect_count`], linear merge
+//!   with galloping on skewed degree distributions) when a step binds
+//!   an entity only so the next relationship can probe membership
+//!   against its other, already-bound endpoint.  The intersection runs
+//!   on the CSR backend's contiguous neighbor runs
+//!   ([`crate::db::index::RelIx::sorted_nbrs_from`]); the hash backend
+//!   (and CSR rows with pending overlay) falls back to generic
+//!   enumeration with pair lookups.
+//!
+//! Both kernels are exact — they emit the same group keys with the same
+//! multiplicities as full enumeration, and `JoinStats::rows_enumerated`
+//! still counts true join rows — so every backend/kernel combination is
+//! bit-identical (`rust/tests/proptest_invariants.rs`).
 
 use crate::ct::cttable::CtTable;
 use crate::db::catalog::Database;
@@ -167,6 +187,22 @@ fn chain_ct_bound(
     }
 
     let n_ets = db.schema.entities.len();
+    let mut shape = JoinShape {
+        last_use: vec![usize::MAX; n_ets],
+        needed_ets: vec![false; n_ets],
+        needed_jps: vec![false; plan.join_order.len()],
+    };
+    for (d, &rel) in plan.join_order.iter().enumerate() {
+        let (a, b) = db.schema.rel_endpoints(rel);
+        shape.last_use[a] = d;
+        shape.last_use[b] = d;
+    }
+    for acc in &accesses {
+        match *acc {
+            Access::Ent { et, .. } => shape.needed_ets[et] = true,
+            Access::Rel { jp, .. } => shape.needed_jps[jp] = true,
+        }
+    }
     let mut binding: Vec<Option<u32>> = vec![None; n_ets];
     if let Some((rel, tuple)) = bound {
         let t = &db.rels[rel];
@@ -183,13 +219,14 @@ fn chain_ct_bound(
     // tuple id bound for each rel of the chain (indexed by join position)
     let mut tuples: Vec<u32> = vec![0; plan.join_order.len()];
     let mut rows = 0u64;
+    let cx = JoinCx { db, order: &plan.join_order, shape };
     enumerate_join(
-        db,
-        &plan.join_order,
+        &cx,
         0,
+        1,
         &mut binding,
         &mut tuples,
-        &mut |binding, tuples| {
+        &mut |binding, tuples, mult| {
             let mut key = base;
             for a in &accesses {
                 key += match *a {
@@ -203,66 +240,257 @@ fn chain_ct_bound(
                     }
                 };
             }
-            rows += 1;
-            out.add_key(key, 1)
+            rows += mult as u64;
+            out.add_key(key, mult)
         },
     )?;
     stats.rows_enumerated += rows;
     Ok(out)
 }
 
-/// Recursive index-nested-loop join enumeration.
+/// Precomputed shape of one chain enumeration: which entity types and
+/// join positions feed the group-by key, and where each entity type is
+/// last used — the legality conditions for the count-only kernels.
+struct JoinShape {
+    /// Deepest join-order position whose relationship touches each
+    /// entity type (`usize::MAX` = not on the chain).
+    last_use: Vec<usize>,
+    /// Entity types whose attributes feed the group-by key.
+    needed_ets: Vec<bool>,
+    /// Join positions whose relationship attributes feed the key.
+    needed_jps: Vec<bool>,
+}
+
+/// Borrowed context threaded through the recursive enumeration.
+struct JoinCx<'a> {
+    db: &'a Database,
+    order: &'a [usize],
+    shape: JoinShape,
+}
+
+/// Recursive index-nested-loop join enumeration with count-only
+/// kernels.  `mult` is the multiplicity carried by collapsed steps
+/// (degree multiplies and sorted-run intersections); the leaf emit
+/// receives it so group counts and `rows_enumerated` stay exact.
 fn enumerate_join(
-    db: &Database,
-    order: &[usize],
+    cx: &JoinCx<'_>,
     depth: usize,
+    mult: i128,
     binding: &mut Vec<Option<u32>>,
     tuples: &mut Vec<u32>,
-    emit: &mut dyn FnMut(&[Option<u32>], &[u32]) -> Result<()>,
+    emit: &mut dyn FnMut(&[Option<u32>], &[u32], i128) -> Result<()>,
 ) -> Result<()> {
-    if depth == order.len() {
-        return emit(binding, tuples);
+    if depth == cx.order.len() {
+        return emit(binding, tuples, mult);
     }
-    let rel = order[depth];
+    let db = cx.db;
+    let rel = cx.order[depth];
     let (a, b) = db.schema.rel_endpoints(rel);
     let ix = db.index(rel)?;
     match (binding[a], binding[b]) {
         (Some(fa), Some(fb)) => {
             if let Some(t) = ix.lookup(fa, fb) {
                 tuples[depth] = t;
-                enumerate_join(db, order, depth + 1, binding, tuples, emit)?;
+                enumerate_join(cx, depth + 1, mult, binding, tuples, emit)?;
             }
         }
         (Some(fa), None) => {
-            // clone the tuple list to release the borrow on ix
-            for &t in &ix.by_from[fa as usize] {
+            if a != b && !cx.shape.needed_jps[depth] {
+                if let Some(n) = try_intersect(cx, depth, b, fa, true, binding)? {
+                    if n > 0 {
+                        let m = mult * n as i128;
+                        enumerate_join(cx, depth + 2, m, binding, tuples, emit)?;
+                    }
+                    return Ok(());
+                }
+                if cx.shape.last_use[b] == depth && !cx.shape.needed_ets[b] {
+                    let deg = ix.degree_from(fa);
+                    if deg > 0 {
+                        let m = mult * deg as i128;
+                        enumerate_join(cx, depth + 1, m, binding, tuples, emit)?;
+                    }
+                    return Ok(());
+                }
+            }
+            for t in ix.tids_from(fa) {
                 tuples[depth] = t;
                 binding[b] = Some(db.rels[rel].to[t as usize]);
-                enumerate_join(db, order, depth + 1, binding, tuples, emit)?;
+                enumerate_join(cx, depth + 1, mult, binding, tuples, emit)?;
             }
             binding[b] = None;
         }
         (None, Some(fb)) => {
-            for &t in &ix.by_to[fb as usize] {
+            if a != b && !cx.shape.needed_jps[depth] {
+                if let Some(n) = try_intersect(cx, depth, a, fb, false, binding)? {
+                    if n > 0 {
+                        let m = mult * n as i128;
+                        enumerate_join(cx, depth + 2, m, binding, tuples, emit)?;
+                    }
+                    return Ok(());
+                }
+                if cx.shape.last_use[a] == depth && !cx.shape.needed_ets[a] {
+                    let deg = ix.degree_to(fb);
+                    if deg > 0 {
+                        let m = mult * deg as i128;
+                        enumerate_join(cx, depth + 1, m, binding, tuples, emit)?;
+                    }
+                    return Ok(());
+                }
+            }
+            for t in ix.tids_to(fb) {
                 tuples[depth] = t;
                 binding[a] = Some(db.rels[rel].from[t as usize]);
-                enumerate_join(db, order, depth + 1, binding, tuples, emit)?;
+                enumerate_join(cx, depth + 1, mult, binding, tuples, emit)?;
             }
             binding[a] = None;
         }
         (None, None) => {
+            if a != b
+                && !cx.shape.needed_jps[depth]
+                && cx.shape.last_use[a] == depth
+                && !cx.shape.needed_ets[a]
+                && cx.shape.last_use[b] == depth
+                && !cx.shape.needed_ets[b]
+            {
+                let n = db.rels[rel].len();
+                if n > 0 {
+                    let m = mult * n as i128;
+                    enumerate_join(cx, depth + 1, m, binding, tuples, emit)?;
+                }
+                return Ok(());
+            }
             let table = &db.rels[rel];
             for t in 0..table.len() {
                 tuples[depth] = t;
                 binding[a] = Some(table.from[t as usize]);
                 binding[b] = Some(table.to[t as usize]);
-                enumerate_join(db, order, depth + 1, binding, tuples, emit)?;
+                enumerate_join(cx, depth + 1, mult, binding, tuples, emit)?;
             }
             binding[a] = None;
             binding[b] = None;
         }
     }
     Ok(())
+}
+
+/// Attempt the sorted-run intersection kernel at `depth`: the current
+/// relationship would bind `x` (from its bound endpoint `bound_val`)
+/// only so the *next* relationship can probe membership against its
+/// other, already-bound endpoint — and nothing downstream reads `x`.
+/// The two steps' contribution then factors into the size of
+/// `candidates(x via rel_d) ∩ candidates(x via rel_d+1)`, computed by
+/// [`intersect_count`] over the CSR backend's sorted neighbor runs.
+/// Returns `None` when the shape or backend does not admit the kernel
+/// (generic enumeration handles those cases identically).
+fn try_intersect(
+    cx: &JoinCx<'_>,
+    depth: usize,
+    x: usize,
+    bound_val: u32,
+    x_is_to: bool,
+    binding: &[Option<u32>],
+) -> Result<Option<u64>> {
+    let shape = &cx.shape;
+    if depth + 1 >= cx.order.len()
+        || shape.needed_jps[depth + 1]
+        || shape.needed_ets[x]
+        || shape.last_use[x] != depth + 1
+    {
+        return Ok(None);
+    }
+    let db = cx.db;
+    let rel2 = cx.order[depth + 1];
+    let (a2, b2) = db.schema.rel_endpoints(rel2);
+    if a2 == b2 {
+        return Ok(None);
+    }
+    let (y, x_is_from2) = if a2 == x {
+        (b2, true)
+    } else if b2 == x {
+        (a2, false)
+    } else {
+        return Ok(None);
+    };
+    let vy = match binding[y] {
+        Some(v) => v,
+        None => return Ok(None),
+    };
+    let ix1 = db.index(cx.order[depth])?;
+    let ix2 = db.index(rel2)?;
+    let s1 = if x_is_to {
+        ix1.sorted_nbrs_from(bound_val)
+    } else {
+        ix1.sorted_nbrs_to(bound_val)
+    };
+    let s2 = if x_is_from2 {
+        ix2.sorted_nbrs_to(vy)
+    } else {
+        ix2.sorted_nbrs_from(vy)
+    };
+    match (s1, s2) {
+        (Some(r1), Some(r2)) => Ok(Some(intersect_count(r1, r2))),
+        _ => Ok(None),
+    }
+}
+
+/// Skew threshold: gallop instead of merging when one run is this many
+/// times longer than the other.
+const GALLOP_RATIO: usize = 8;
+
+/// Size of the intersection of two strictly ascending `u32` runs.
+///
+/// Balanced runs use a linear merge; skewed runs (degree distributions
+/// with heavy hitters) gallop the short run's elements through the long
+/// one, bounding the work at `O(short · log(long/short))` — the
+/// adaptive scheme of Karan et al., "Fast Counting in Machine Learning
+/// Applications" (2018).
+pub fn intersect_count(mut a: &[u32], mut b: &[u32]) -> u64 {
+    if a.len() > b.len() {
+        std::mem::swap(&mut a, &mut b);
+    }
+    if a.is_empty() {
+        return 0;
+    }
+    let mut n = 0u64;
+    if b.len() / a.len() >= GALLOP_RATIO {
+        let mut lo = 0usize;
+        for &x in a {
+            lo += gallop_lower_bound(&b[lo..], x);
+            if lo >= b.len() {
+                break;
+            }
+            if b[lo] == x {
+                n += 1;
+                lo += 1;
+            }
+        }
+    } else {
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// First position in a strictly ascending run whose value is `>= x`,
+/// found by doubling probes then a bounded binary search.
+fn gallop_lower_bound(s: &[u32], x: u32) -> usize {
+    let mut hi = 1usize;
+    while hi < s.len() && s[hi] < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    let hi = hi.min(s.len());
+    lo + s[lo..hi].partition_point(|&v| v < x)
 }
 
 /// A [`ChainSource`](crate::ct::mobius::ChainSource) that executes fresh
@@ -420,5 +648,169 @@ mod tests {
         assert!(positive_chain_ct(&db, &[0], &vars, &mut stats).is_err());
         let vars2 = vec![RVar::EntityAttr { et: 2, attr: 0 }];
         assert!(positive_chain_ct(&db, &[0], &vars2, &mut stats).is_err());
+    }
+
+    #[test]
+    fn intersect_count_merge_and_gallop_agree() {
+        let a: Vec<u32> = (0..200).map(|i| i * 3).collect();
+        let b: Vec<u32> = (0..150).map(|i| i * 2).collect();
+        let brute = |x: &[u32], y: &[u32]| {
+            x.iter().filter(|v| y.binary_search(v).is_ok()).count() as u64
+        };
+        // balanced: linear merge path
+        assert_eq!(intersect_count(&a, &b), brute(&a, &b));
+        // skewed: galloping path (|big| / |small| >= GALLOP_RATIO)
+        let small: Vec<u32> = vec![0, 7, 300, 301, 597, 9999];
+        let big: Vec<u32> = (0..600).collect();
+        assert_eq!(intersect_count(&small, &big), brute(&small, &big));
+        assert_eq!(intersect_count(&big, &small), brute(&small, &big));
+        // edges
+        assert_eq!(intersect_count(&[], &b), 0);
+        assert_eq!(intersect_count(&a, &a), a.len() as u64);
+        assert_eq!(intersect_count(&[5], &big), 1);
+        assert_eq!(intersect_count(&[600], &big), 0);
+    }
+
+    #[test]
+    fn gallop_lower_bound_matches_partition_point() {
+        let s: Vec<u32> = (0..97).map(|i| i * 5 + 2).collect();
+        for x in [0u32, 1, 2, 3, 240, 481, 482, 483, 1000] {
+            assert_eq!(
+                gallop_lower_bound(&s, x),
+                s.partition_point(|&v| v < x),
+                "x = {x}"
+            );
+        }
+        assert_eq!(gallop_lower_bound(&[], 7), 0);
+    }
+
+    /// A triangle schema R0(A,B) R1(B,C) R2(A,C): the chain over all
+    /// three relationships exercises the intersection kernel (the C
+    /// binding only feeds R2's membership probe when no C/R1/R2 column
+    /// is requested).
+    fn triangle_db() -> Database {
+        use crate::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+        let schema = Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![Attribute::new("x", 2)] },
+                EntityType { name: "B".into(), attrs: vec![] },
+                EntityType { name: "C".into(), attrs: vec![] },
+            ],
+            vec![
+                RelationshipType { name: "R0".into(), from: 0, to: 1, attrs: vec![] },
+                RelationshipType { name: "R1".into(), from: 1, to: 2, attrs: vec![] },
+                RelationshipType { name: "R2".into(), from: 0, to: 2, attrs: vec![] },
+            ],
+        )
+        .unwrap();
+        let mut db = Database::empty(schema);
+        for i in 0..6u32 {
+            db.entities[0].push(&[i % 2]).unwrap();
+        }
+        for _ in 0..5u32 {
+            db.entities[1].push(&[]).unwrap();
+        }
+        for _ in 0..7u32 {
+            db.entities[2].push(&[]).unwrap();
+        }
+        for a in 0..6u32 {
+            for b in 0..5u32 {
+                if (a + 2 * b) % 3 != 1 {
+                    db.rels[0].push(a, b, &[]).unwrap();
+                }
+            }
+        }
+        for b in 0..5u32 {
+            for c in 0..7u32 {
+                if (b + c) % 2 == 0 {
+                    db.rels[1].push(b, c, &[]).unwrap();
+                }
+            }
+        }
+        for a in 0..6u32 {
+            for c in 0..7u32 {
+                if (2 * a + c) % 3 != 0 {
+                    db.rels[2].push(a, c, &[]).unwrap();
+                }
+            }
+        }
+        db.build_indexes().unwrap();
+        db
+    }
+
+    /// Brute-force triangle count grouped by A.x.
+    fn triangle_brute(db: &Database) -> Vec<i128> {
+        let mut counts = vec![0i128; 2];
+        for a in 0..db.entities[0].len() {
+            for b in 0..db.entities[1].len() {
+                if db.index(0).unwrap().lookup(a, b).is_none() {
+                    continue;
+                }
+                for c in 0..db.entities[2].len() {
+                    if db.index(1).unwrap().lookup(b, c).is_some()
+                        && db.index(2).unwrap().lookup(a, c).is_some()
+                    {
+                        counts[db.entities[0].value(0, a) as usize] += 1;
+                    }
+                }
+            }
+        }
+        counts
+    }
+
+    #[test]
+    fn triangle_chain_counts_match_brute_force_on_both_backends() {
+        let csr = triangle_db();
+        let mut hash = csr.clone();
+        hash.set_backend(crate::db::index::Backend::Hash).unwrap();
+        let brute = triangle_brute(&csr);
+        let vars = vec![RVar::EntityAttr { et: 0, attr: 0 }];
+        let mut s_csr = JoinStats::default();
+        let mut s_hash = JoinStats::default();
+        let a = positive_chain_ct(&csr, &[0, 1, 2], &vars, &mut s_csr).unwrap();
+        let b = positive_chain_ct(&hash, &[0, 1, 2], &vars, &mut s_hash).unwrap();
+        for x in 0..2u32 {
+            assert_eq!(a.get(&[x]).unwrap(), brute[x as usize], "csr x={x}");
+            assert_eq!(b.get(&[x]).unwrap(), brute[x as usize], "hash x={x}");
+        }
+        // the kernels preserve the row accounting exactly
+        assert_eq!(s_csr, s_hash);
+        assert_eq!(s_csr.rows_enumerated, (brute[0] + brute[1]) as u64);
+        // ungrouped count too (pure count-only tail)
+        let mut s2 = JoinStats::default();
+        let t = positive_chain_ct(&csr, &[0, 1, 2], &[], &mut s2).unwrap();
+        assert_eq!(t.total().unwrap(), brute[0] + brute[1]);
+    }
+
+    #[test]
+    fn degree_kernel_matches_enumeration_on_university() {
+        // chain [0, 1] with vars only on the RA leg: the Registered leg
+        // collapses to a degree multiply on both backends
+        let csr = university_db();
+        let mut hash = csr.clone();
+        hash.set_backend(crate::db::index::Backend::Hash).unwrap();
+        let vars = vec![RVar::RelAttr { rel: 0, attr: 1 }];
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = positive_chain_ct(&csr, &[0, 1], &vars, &mut s1).unwrap();
+        let b = positive_chain_ct(&hash, &[0, 1], &vars, &mut s2).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(a.n_rows(), b.n_rows());
+        for (v, c) in a.iter_rows() {
+            assert_eq!(b.get(&v).unwrap(), c, "{v:?}");
+        }
+        // brute force the expected grouped join size
+        let mut expect = std::collections::BTreeMap::new();
+        for i in 0..csr.rels[0].len() {
+            let s = csr.rels[0].to[i as usize];
+            let sal = csr.rels[0].value(1, i) + 1; // ct coords
+            let deg = csr.index(1).unwrap().degree_from(s) as i128;
+            *expect.entry(sal).or_insert(0i128) += deg;
+        }
+        for (sal, c) in expect {
+            if c > 0 {
+                assert_eq!(a.get(&[sal]).unwrap(), c, "salary {sal}");
+            }
+        }
     }
 }

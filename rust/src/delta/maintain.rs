@@ -403,6 +403,13 @@ impl MaintainedCounts {
             report.ops_applied += 1;
         }
 
+        // End-of-batch CSR compaction: the overlay absorbed this batch's
+        // churn; merging it before the recounts means the stale-point
+        // joins below — whose costs the DeltaPolicy estimated assuming
+        // clean-run speed — and all post-batch serving read contiguous
+        // base runs.  No-op on the hash backend.
+        self.db.compact_indexes();
+
         // Invalidate-and-recount the stale points, positives first so
         // the complete Möbius reads fresh projections.
         let pos_ids: Vec<usize> = (0..stale.len())
@@ -786,6 +793,10 @@ impl CountingStrategy for MaintainedStrategy<'_> {
             planned_complete: self.inner.plan.planned_complete_count(),
             ..Default::default()
         }
+    }
+
+    fn cache_digest(&self) -> u64 {
+        self.inner.digest()
     }
 }
 

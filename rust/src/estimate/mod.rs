@@ -10,7 +10,7 @@
 //! supplies those numbers:
 //!
 //! - [`sampler`] — wander-join-style random walks over the relationship
-//!   FK indexes ([`crate::db::index::RelIndex`]), giving unbiased
+//!   FK indexes ([`crate::db::index::RelIx`], either backend), giving unbiased
 //!   join-chain cardinality estimates with declared error bounds, seeded
 //!   via [`crate::util::rng::Rng`] for bit-reproducible plans.  Chains
 //!   cheap enough to enumerate outright are counted exactly.

@@ -16,10 +16,24 @@
 //! Everything is seeded through [`crate::util::rng::Rng`]: the same
 //! database, chain, and config always produce the identical estimate, so
 //! the ADAPTIVE plan is bit-reproducible across runs and worker counts.
+//!
+//! Walks draw continuations in **canonical neighbor order** (ascending
+//! opposite-endpoint id) rather than adjacency-list position, so the
+//! estimate — and therefore every plan and cache digest built on it —
+//! is also identical across index storage backends (`--backend hash`
+//! vs `--backend csr`).  Clean CSR rows serve a draw in O(1) from
+//! their sorted runs; rows the index cannot serve sorted (hash
+//! backend, CSR rows with pending overlay) are sorted **once per
+//! endpoint** into a sampler-local memo — walks hammer the same hubs,
+//! so the sort amortizes across all of a chain's draws.
+
+use std::cell::RefCell;
 
 use crate::db::catalog::Database;
+use crate::db::index::RelIx;
 use crate::error::Result;
 use crate::meta::extract::plan_chain;
+use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Rng;
 
 /// Configuration of the sampling estimators (carried inside
@@ -67,11 +81,39 @@ pub struct Estimate {
 pub struct JoinSampler<'a> {
     db: &'a Database,
     cfg: EstimatorConfig,
+    /// Sorted neighbor rows for endpoints the index cannot serve in
+    /// O(1) canonical order (hash backend, CSR overlay-dirty rows),
+    /// keyed by `(rel, from-orientation, endpoint)`.  The database is
+    /// borrowed for the sampler's lifetime, so entries never go stale.
+    sorted_rows: RefCell<FxHashMap<(usize, bool, u32), Vec<u32>>>,
 }
 
 impl<'a> JoinSampler<'a> {
     pub fn new(db: &'a Database, cfg: EstimatorConfig) -> Self {
-        JoinSampler { db, cfg }
+        JoinSampler { db, cfg, sorted_rows: RefCell::new(FxHashMap::default()) }
+    }
+
+    /// The `k`-th neighbor of endpoint `v` through `rel`, in canonical
+    /// (ascending) order — O(1) on clean CSR runs, one memoized sort
+    /// per endpoint otherwise.
+    fn nth_nbr(&self, rel: usize, ix: &RelIx, from_side: bool, v: u32, k: usize) -> u32 {
+        let run =
+            if from_side { ix.sorted_nbrs_from(v) } else { ix.sorted_nbrs_to(v) };
+        if let Some(run) = run {
+            return run[k];
+        }
+        let mut rows = self.sorted_rows.borrow_mut();
+        let row = rows.entry((rel, from_side, v)).or_insert_with(|| {
+            let table = &self.db.rels[rel];
+            let mut r: Vec<u32> = if from_side {
+                ix.tids_from(v).map(|t| table.to[t as usize]).collect()
+            } else {
+                ix.tids_to(v).map(|t| table.from[t as usize]).collect()
+            };
+            r.sort_unstable();
+            r
+        });
+        row[k]
     }
 
     /// Estimated number of groundings satisfying every relationship of
@@ -130,10 +172,7 @@ impl<'a> JoinSampler<'a> {
 
     /// Largest adjacency-list length of `rel` in either direction.
     fn max_degree(&self, rel: usize) -> Result<usize> {
-        let ix = self.db.index(rel)?;
-        let from = ix.by_from.iter().map(|v| v.len()).max().unwrap_or(0);
-        let to = ix.by_to.iter().map(|v| v.len()).max().unwrap_or(0);
-        Ok(from.max(to))
+        Ok(self.db.index(rel)?.max_degree())
     }
 
     /// One random walk; returns its Horvitz–Thompson weight (0 on a dead
@@ -159,22 +198,22 @@ impl<'a> JoinSampler<'a> {
                     }
                 }
                 (Some(fa), None) => {
-                    let cands = &ix.by_from[fa as usize];
-                    if cands.is_empty() {
+                    let deg = ix.degree_from(fa);
+                    if deg == 0 {
                         return Ok(0.0);
                     }
-                    let t = cands[rng.gen_range(cands.len() as u64) as usize];
-                    binding[b] = Some(self.db.rels[rel].to[t as usize]);
-                    weight *= cands.len() as f64;
+                    let k = rng.gen_range(deg as u64) as usize;
+                    binding[b] = Some(self.nth_nbr(rel, ix, true, fa, k));
+                    weight *= deg as f64;
                 }
                 (None, Some(fb)) => {
-                    let cands = &ix.by_to[fb as usize];
-                    if cands.is_empty() {
+                    let deg = ix.degree_to(fb);
+                    if deg == 0 {
                         return Ok(0.0);
                     }
-                    let t = cands[rng.gen_range(cands.len() as u64) as usize];
-                    binding[a] = Some(self.db.rels[rel].from[t as usize]);
-                    weight *= cands.len() as f64;
+                    let k = rng.gen_range(deg as u64) as usize;
+                    binding[a] = Some(self.nth_nbr(rel, ix, false, fb, k));
+                    weight *= deg as f64;
                 }
                 (None, None) => {
                     // plan_chain emits connected orders, but stay robust:
@@ -221,14 +260,14 @@ impl<'a> JoinSampler<'a> {
                 }
             }
             (Some(fa), None) => {
-                for &t in &ix.by_from[fa as usize] {
+                for t in ix.tids_from(fa) {
                     binding[b] = Some(self.db.rels[rel].to[t as usize]);
                     total += self.count_rec(order, depth + 1, binding)?;
                 }
                 binding[b] = None;
             }
             (None, Some(fb)) => {
-                for &t in &ix.by_to[fb as usize] {
+                for t in ix.tids_to(fb) {
                     binding[a] = Some(self.db.rels[rel].from[t as usize]);
                     total += self.count_rec(order, depth + 1, binding)?;
                 }
@@ -324,5 +363,24 @@ mod tests {
             .unwrap();
         assert!(c.lo <= true_cardinality(&db, &[0, 1]) as f64);
         assert!(c.hi >= true_cardinality(&db, &[0, 1]) as f64);
+    }
+
+    #[test]
+    fn estimates_are_backend_invariant() {
+        // canonical neighbor-order sampling: the hash and CSR engines
+        // draw the identical walk stream, so estimates (and the plans
+        // built on them) match bit-for-bit
+        let csr = university_db();
+        let mut hash = csr.clone();
+        hash.set_backend(crate::db::index::Backend::Hash).unwrap();
+        let cfg = EstimatorConfig { exhaustive_limit: 0, ..Default::default() };
+        for chain in [vec![0usize], vec![1], vec![0, 1]] {
+            let a = JoinSampler::new(&csr, cfg).chain_cardinality(&chain).unwrap();
+            let b = JoinSampler::new(&hash, cfg).chain_cardinality(&chain).unwrap();
+            assert_eq!(a.value, b.value, "{chain:?}");
+            assert_eq!(a.lo, b.lo, "{chain:?}");
+            assert_eq!(a.hi, b.hi, "{chain:?}");
+            assert_eq!(a.walks, b.walks, "{chain:?}");
+        }
     }
 }

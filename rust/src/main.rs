@@ -37,6 +37,7 @@ use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
 use relcount::datagen::presets::{preset, PRESET_NAMES};
 use relcount::db::catalog::Database;
+use relcount::db::index::Backend;
 use relcount::db::loader;
 use relcount::delta::{DeltaBatch, MaintainConfig, MaintainedCounts, MaintenanceMode};
 use relcount::error::{Error, Result};
@@ -63,6 +64,7 @@ USAGE:
   relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
   relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget BYTES[k|m|g]|inf]
+                     [--backend csr|hash]
   relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget ...] [--xla]
   relcount apply     (--preset <name> | --db <dir>) --deltas FILE
@@ -82,6 +84,11 @@ USAGE:
   strategies: precount | ondemand | hybrid | adaptive
   presets: uw mondial hepatitis mutagenesis movielens financial imdb
   visual_genome
+  --backend selects the relationship-index storage engine for any
+  subcommand that loads a database: `csr` (default; columnar sorted
+  adjacency with merge-join kernels) or `hash` (seed-era hash maps).
+  Counts, plans, models and cache digests are bit-identical across
+  backends — `count` prints the digest so the two can be diffed.
   --workers N shards the counting phases over N threads (auto = all cores)
   via the L3 parallel coordinator; counts stay bit-identical.
   --mem-budget caps ADAPTIVE's pre-count plan (0 = pure post-counting,
@@ -110,9 +117,19 @@ fn main() -> ExitCode {
     }
 }
 
+fn backend_of(args: &Args) -> Result<Backend> {
+    match args.get("backend") {
+        None => Ok(Backend::default()),
+        Some(v) => Backend::parse(v)
+            .ok_or_else(|| Error::Data(format!("--backend expects csr|hash, got {v:?}"))),
+    }
+}
+
 fn load_db(args: &Args) -> Result<(String, Database)> {
+    let backend = backend_of(args)?;
     if let Some(dir) = args.get("db") {
-        let db = loader::load(Path::new(dir))?;
+        let mut db = loader::load(Path::new(dir))?;
+        db.set_backend(backend)?;
         return Ok((dir.to_string(), db));
     }
     let name = args
@@ -126,7 +143,9 @@ fn load_db(args: &Args) -> Result<(String, Database)> {
         cfg.name,
         cfg.total_rows()
     );
-    Ok((cfg.name.clone(), generate(&cfg)?))
+    let mut db = generate(&cfg)?;
+    db.set_backend(backend)?;
+    Ok((cfg.name.clone(), db))
 }
 
 fn strategy_kind(args: &Args) -> Result<StrategyKind> {
@@ -167,10 +186,10 @@ fn run() -> Result<()> {
                 ..Default::default()
             };
             let workers = args.workers()?;
-            let (row, report) = if workers == 1 {
+            let (row, report, digest) = if workers == 1 {
                 let out =
                     run_strategy_with(&db, &name, kind, Workload::PrepareOnly, scfg)?;
-                (out.row, out.report)
+                (out.row, out.report, out.cache_digest)
             } else {
                 let out = run_coordinated_with(
                     &db,
@@ -189,7 +208,7 @@ fn run() -> Result<()> {
                     out.row.total().as_secs_f64(),
                     out.coordinator.tasks_per_worker
                 );
-                (out.row, out.report)
+                (out.row, out.report, out.cache_digest)
             };
             print!("{}", render_fig3(&[row.clone()]));
             print!("{}", render_fig4(&[row]));
@@ -198,6 +217,10 @@ fn run() -> Result<()> {
                 report.join_stats.chain_queries,
                 report.join_stats.rows_enumerated,
                 report.ct_rows_generated
+            );
+            println!(
+                "caches: digest {digest:016x} (backend {})",
+                db.backend().name()
             );
             if kind == StrategyKind::Adaptive {
                 println!(

@@ -30,7 +30,7 @@ use crate::lattice::Lattice;
 use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
-use crate::strategies::cache::CtCache;
+use crate::strategies::cache::{digest_caches, CtCache};
 use crate::strategies::common::{
     entity_key, lp_key, narrow_to_ctx, run_positive_task, var_pops, var_rels,
     LatticeCtx, PositiveTask, TimedSource,
@@ -309,6 +309,14 @@ impl CountingStrategy for Adaptive<'_> {
             plan_est_bytes: self.plan.est_spent_bytes,
             estimator_walks: self.plan.walks,
         }
+    }
+
+    fn cache_digest(&self) -> u64 {
+        digest_caches(&[
+            (0, &self.positive),
+            (1, &self.complete),
+            (2, &self.family_cache),
+        ])
     }
 }
 

@@ -112,19 +112,25 @@ impl CtCache {
 /// tests and the serve smoke.
 pub fn digest_caches(caches: &[(u8, &CtCache)]) -> u64 {
     use std::hash::{Hash, Hasher};
+    // Global (tag, key) sort across all passed caches: several caches
+    // with the same tag digest as their union, so a sharded family
+    // cache (one shard per coordinator worker) hashes identically for
+    // every worker count — and to the sequential strategy's single
+    // cache.  Distinct-tag inputs hash exactly as before.
+    let mut entries: Vec<(u8, &CacheKey, &CtTable)> = caches
+        .iter()
+        .flat_map(|&(tag, cache)| cache.iter().map(move |(k, t)| (tag, k, t)))
+        .collect();
+    entries.sort_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
     let mut h = crate::util::fxhash::FxHasher::default();
-    for &(tag, cache) in caches {
-        let mut entries: Vec<_> = cache.iter().collect();
-        entries.sort_by(|a, b| a.0.cmp(b.0));
-        for (key, t) in entries {
-            tag.hash(&mut h);
-            key.hash(&mut h);
-            let mut rows: Vec<(u128, i128)> = t.iter_keys().collect();
-            rows.sort_unstable();
-            for (k, c) in rows {
-                k.hash(&mut h);
-                c.hash(&mut h);
-            }
+    for (tag, key, t) in entries {
+        tag.hash(&mut h);
+        key.hash(&mut h);
+        let mut rows: Vec<(u128, i128)> = t.iter_keys().collect();
+        rows.sort_unstable();
+        for (k, c) in rows {
+            k.hash(&mut h);
+            c.hash(&mut h);
         }
     }
     h.finish()

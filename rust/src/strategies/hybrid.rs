@@ -17,7 +17,7 @@ use crate::error::Result;
 use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
-use crate::strategies::cache::CtCache;
+use crate::strategies::cache::{digest_caches, CtCache};
 use crate::strategies::common::{
     fill_positive_cache, LatticeCacheSource, LatticeCtx, TimedSource,
 };
@@ -140,6 +140,10 @@ impl CountingStrategy for Hybrid<'_> {
             cache_misses: self.family_cache.misses,
             ..Default::default()
         }
+    }
+
+    fn cache_digest(&self) -> u64 {
+        digest_caches(&[(0, &self.positive), (2, &self.family_cache)])
     }
 }
 

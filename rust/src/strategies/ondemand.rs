@@ -16,7 +16,7 @@ use crate::error::Result;
 use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
-use crate::strategies::cache::CtCache;
+use crate::strategies::cache::{digest_caches, CtCache};
 use crate::strategies::common::{LatticeCtx, TimedSource};
 use crate::strategies::traits::{CountingStrategy, StrategyConfig, StrategyReport};
 
@@ -115,6 +115,10 @@ impl CountingStrategy for OnDemand<'_> {
             cache_misses: self.family_cache.misses,
             ..Default::default()
         }
+    }
+
+    fn cache_digest(&self) -> u64 {
+        digest_caches(&[(2, &self.family_cache)])
     }
 }
 

@@ -16,7 +16,7 @@ use crate::error::{Error, Result};
 use crate::meta::rvar::RVar;
 use crate::metrics::memory::MemTracker;
 use crate::metrics::timing::{Deadline, Phase, PhaseTimer};
-use crate::strategies::cache::CtCache;
+use crate::strategies::cache::{digest_caches, CtCache};
 use crate::strategies::common::{
     fill_positive_cache, narrow_to_ctx, var_pops, var_rels, LatticeCacheSource,
     LatticeCtx,
@@ -189,6 +189,10 @@ impl CountingStrategy for Precount<'_> {
             cache_misses: self.complete.misses,
             ..Default::default()
         }
+    }
+
+    fn cache_digest(&self) -> u64 {
+        digest_caches(&[(0, &self.positive), (1, &self.complete)])
     }
 }
 

@@ -127,6 +127,15 @@ pub trait CountingStrategy {
 
     /// Metrics snapshot.
     fn report(&self) -> StrategyReport;
+
+    /// Deterministic digest of every resident cache, via
+    /// [`crate::strategies::cache::digest_caches`] with the shared tag
+    /// scheme (0 = positive lattice tables + entity marginals, 1 =
+    /// complete lattice tables, 2 = family tables).  The
+    /// backend-equivalence witness: `--backend hash` and `--backend
+    /// csr` must produce the identical digest for the same strategy and
+    /// worker count (asserted by tests and the CI gate).
+    fn cache_digest(&self) -> u64;
 }
 
 /// One family-count request: the family's variables plus the population

@@ -151,6 +151,45 @@ fn four_workers_maintain_bit_identical_caches() {
 }
 
 #[test]
+fn hash_and_csr_backends_maintain_bit_identical_caches() {
+    // the storage-engine contract: under seeded churn the maintained
+    // digests stay identical across backends, for 1 and 4 workers, and
+    // the CSR writer ends every batch with its overlay compacted
+    use relcount::db::index::Backend;
+    for workers in [1usize, 4] {
+        let csr_db = seeded_db("uw");
+        let mut hash_db = csr_db.clone();
+        hash_db.set_backend(Backend::Hash).unwrap();
+        let cfg = MaintainConfig { workers, ..Default::default() };
+        let mut csr = MaintainedCounts::build(csr_db, cfg).unwrap();
+        let mut hash = MaintainedCounts::build(hash_db, cfg).unwrap();
+        assert_eq!(csr.digest(), hash.digest(), "workers {workers}: build");
+        for step in 0..3u64 {
+            let batch = churn_batch(csr.db(), 0.3, 7_000 + step);
+            csr.apply(&batch).unwrap();
+            hash.apply(&batch).unwrap();
+            assert_eq!(
+                csr.digest(),
+                hash.digest(),
+                "workers {workers}: step {step}"
+            );
+            assert_eq!(
+                csr.db().index_overlay_len(),
+                0,
+                "workers {workers}: overlay not compacted at end-of-batch"
+            );
+        }
+        // served tables agree across backends after the churn
+        let fams = families_of(csr.db());
+        for (vars, ctx) in fams.into_iter().take(30) {
+            let a = csr.ct_for_family(&vars, &ctx).unwrap();
+            let b = hash.ct_for_family(&vars, &ctx).unwrap();
+            assert_tables_equal(&a, &b, &format!("w={workers} {vars:?}"));
+        }
+    }
+}
+
+#[test]
 fn learned_structures_and_bdeu_bits_survive_churn() {
     let db = seeded_db("uw");
     let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();

@@ -470,6 +470,188 @@ fn prop_delta_counts_never_go_negative() {
     }
 }
 
+/// A random sequence of mutations driven through the `Database`
+/// mutators (exercising the CSR overlay: inserts, tombstones, swap
+/// relabels, entity grows).
+fn random_churn(rng: &mut Rng, db: &mut Database, ops: usize) {
+    for _ in 0..ops {
+        if db.rels.is_empty() {
+            return;
+        }
+        if rng.gen_bool(0.1) {
+            let et = rng.gen_range(db.schema.entities.len() as u64) as usize;
+            let values: Vec<u32> = db.schema.entities[et]
+                .attrs
+                .iter()
+                .map(|a| rng.gen_u32(a.card))
+                .collect();
+            db.insert_entity(et, &values).unwrap();
+            continue;
+        }
+        let rel = rng.gen_range(db.rels.len() as u64) as usize;
+        let r = &db.schema.relationships[rel];
+        let (nf, nt) = (db.entities[r.from].len(), db.entities[r.to].len());
+        if nf == 0 || nt == 0 {
+            continue;
+        }
+        let from = rng.gen_u32(nf);
+        let to = rng.gen_u32(nt);
+        if db.index(rel).unwrap().lookup(from, to).is_some() {
+            db.delete_link(rel, from, to).unwrap();
+        } else {
+            let values: Vec<u32> = r.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+            db.insert_link(rel, from, to, &values).unwrap();
+        }
+    }
+}
+
+#[test]
+fn prop_csr_neighbor_runs_sorted_and_consistent() {
+    // every CSR run is strictly ascending, degree-consistent, and its
+    // (nbr, tid) entries point back at the owning table rows
+    for seed in 1600..1600 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        for rel in 0..db.rels.len() {
+            let ix = db.index(rel).unwrap();
+            let t = &db.rels[rel];
+            let r = &db.schema.relationships[rel];
+            let mut covered = 0usize;
+            for f in 0..db.entities[r.from].len() {
+                let run = ix.sorted_nbrs_from(f).expect("clean CSR row");
+                assert!(
+                    run.windows(2).all(|w| w[0] < w[1]),
+                    "seed {seed} rel {rel} row {f} not strictly ascending"
+                );
+                assert_eq!(run.len(), ix.degree_from(f), "seed {seed}");
+                for (k, &nbr) in run.iter().enumerate() {
+                    let (n2, tid) =
+                        ix.nth_from(t, f, k).expect("k < degree");
+                    assert_eq!(n2, nbr, "seed {seed}");
+                    assert_eq!(t.from[tid as usize], f, "seed {seed}");
+                    assert_eq!(t.to[tid as usize], nbr, "seed {seed}");
+                    assert_eq!(ix.lookup(f, nbr), Some(tid), "seed {seed}");
+                }
+                covered += run.len();
+            }
+            assert_eq!(covered, t.len() as usize, "seed {seed} rel {rel}");
+        }
+    }
+}
+
+#[test]
+fn prop_csr_overlay_then_compact_matches_rebuild() {
+    // random churn through the mutators (overlay path), then: reads
+    // must match a from-scratch rebuild both *before* and *after*
+    // compaction, and compaction must reproduce the rebuild's base
+    // arrays exactly
+    for seed in 1650..1650 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let mut db = random_db(&mut rng);
+        random_churn(&mut rng, &mut db, 25);
+        let fresh =
+            Database::new(db.schema.clone(), db.entities.clone(), db.rels.clone())
+                .unwrap();
+        let check_reads = |db: &Database| {
+            for rel in 0..db.rels.len() {
+                let r = &db.schema.relationships[rel];
+                let (a, b) = (db.index(rel).unwrap(), fresh.index(rel).unwrap());
+                assert_eq!(a.len(), b.len(), "seed {seed} rel {rel}");
+                assert_eq!(a.max_degree(), b.max_degree(), "seed {seed}");
+                for f in 0..db.entities[r.from].len() {
+                    assert_eq!(a.degree_from(f), b.degree_from(f), "seed {seed}");
+                    for o in 0..db.entities[r.to].len() {
+                        assert_eq!(a.lookup(f, o), b.lookup(f, o), "seed {seed}");
+                    }
+                }
+            }
+        };
+        check_reads(&db); // overlay still pending
+        db.compact_indexes();
+        assert_eq!(db.index_overlay_len(), 0, "seed {seed}");
+        check_reads(&db); // compacted
+        for rel in 0..db.rels.len() {
+            let r = &db.schema.relationships[rel];
+            let (a, b) = (db.index(rel).unwrap(), fresh.index(rel).unwrap());
+            for f in 0..db.entities[r.from].len() {
+                assert_eq!(
+                    a.sorted_nbrs_from(f),
+                    b.sorted_nbrs_from(f),
+                    "seed {seed} rel {rel} row {f}"
+                );
+            }
+            for o in 0..db.entities[r.to].len() {
+                assert_eq!(
+                    a.sorted_nbrs_to(o),
+                    b.sorted_nbrs_to(o),
+                    "seed {seed} rel {rel} rev row {o}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_csr_and_hash_backends_count_identically() {
+    // identical ct-tables *and* identical JoinStats accounting on every
+    // lattice point, before and after random churn
+    use relcount::db::index::Backend;
+    for seed in 1700..1700 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let mut csr = random_db(&mut rng);
+        random_churn(&mut rng, &mut csr, 15);
+        let mut hash = csr.clone();
+        hash.set_backend(Backend::Hash).unwrap();
+        let lattice = Lattice::build(&csr.schema, 3).unwrap();
+        for p in &lattice.points {
+            let mut s1 = JoinStats::default();
+            let mut s2 = JoinStats::default();
+            let a = positive_chain_ct(&csr, &p.rels, &p.attr_vars, &mut s1)
+                .unwrap_or_else(|e| panic!("seed {seed} csr: {e}"));
+            let b = positive_chain_ct(&hash, &p.rels, &p.attr_vars, &mut s2)
+                .unwrap_or_else(|e| panic!("seed {seed} hash: {e}"));
+            assert_eq!(s1, s2, "seed {seed} {:?}: stats diverged", p.rels);
+            assert_eq!(a.n_rows(), b.n_rows(), "seed {seed} {:?}", p.rels);
+            for (v, c) in a.iter_rows() {
+                assert_eq!(b.get(&v).unwrap(), c, "seed {seed} {:?} {v:?}", p.rels);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_backend_cache_digests_match_across_strategies() {
+    // the CI gate's property: every strategy's resident-cache digest is
+    // identical under --backend hash and --backend csr
+    use relcount::db::index::Backend;
+    for seed in 1750..1750 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let csr = random_db(&mut rng);
+        let mut hash = csr.clone();
+        hash.set_backend(Backend::Hash).unwrap();
+        let (vars, ctx) = random_family(&mut rng, &csr);
+        for kind in StrategyKind::ALL_WITH_ADAPTIVE {
+            let mut a = kind.build(&csr, StrategyConfig::default()).unwrap();
+            let mut b = kind.build(&hash, StrategyConfig::default()).unwrap();
+            a.prepare().unwrap_or_else(|e| panic!("seed {seed} {kind:?}: {e}"));
+            b.prepare().unwrap();
+            assert_eq!(
+                a.cache_digest(),
+                b.cache_digest(),
+                "seed {seed} {kind:?}: prepare digests diverged"
+            );
+            let ta = a.ct_for_family(&vars, &ctx).unwrap();
+            let tb = b.ct_for_family(&vars, &ctx).unwrap();
+            assert_eq!(ta.digest(), tb.digest(), "seed {seed} {kind:?}");
+            assert_eq!(
+                a.cache_digest(),
+                b.cache_digest(),
+                "seed {seed} {kind:?}: serving digests diverged"
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_family_cache_returns_identical_tables() {
     for seed in 600..620 {

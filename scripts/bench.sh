@@ -1,11 +1,24 @@
 #!/usr/bin/env bash
-# Bench trajectory: run the coordinator scaling sweep and the ADAPTIVE
-# planner sweep on tiny presets and emit machine-readable JSON at the
-# repo root, so perf numbers accumulate across PRs.
+# Bench trajectory: run the coordinator scaling sweep, the ADAPTIVE
+# planner sweep, the churn differential and the serve throughput rows on
+# small presets, emitting machine-readable JSON at the repo root so perf
+# numbers accumulate across PRs.
 #
-#   scripts/bench.sh                       # writes BENCH_scaling.json,
-#                                          #        BENCH_planner.json
-#   RELCOUNT_SCALE=0.1 scripts/bench.sh    # heavier sweep
+#   scripts/bench.sh                          # local defaults
+#   RELCOUNT_BENCH_SCALE=ci scripts/bench.sh  # CI profile: smallest
+#                                             # preset, 2 workers, tight
+#                                             # budget (the bench-smoke
+#                                             # job runs exactly this)
+#   RELCOUNT_BENCH_SCALE=full scripts/bench.sh  # heavier local sweep
+#
+# Every knob is env-overridable on top of the profile, so the same
+# script serves the CI job and local sweeps:
+#   RELCOUNT_SCALE         dataset scale factor        (default 0.03)
+#   RELCOUNT_PRESETS       comma-separated presets     (default uw,mondial)
+#   RELCOUNT_BUDGET_S      per-cell budget, seconds    (default 120)
+#   RELCOUNT_WORKERS_LIST  scaling sweep worker list   (default 1,2)
+#   RELCOUNT_WORKERS       churn/serve worker count    (default 2)
+#   RELCOUNT_CHURN_FRACS   churn batch fractions       (default 0.01,0.05)
 #
 # Keep the defaults small: CI runs this on shared runners, and the goal
 # is a comparable trajectory, not absolute numbers.
@@ -20,16 +33,42 @@ fi
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$ROOT/rust"
 
-SCALE="${RELCOUNT_SCALE:-0.03}"
-PRESETS="${RELCOUNT_PRESETS:-uw,mondial}"
-BUDGET_S="${RELCOUNT_BUDGET_S:-120}"
+# Profile defaults (RELCOUNT_BENCH_SCALE=ci|full|<unset>), individually
+# overridable by the RELCOUNT_* variables below.
+case "${RELCOUNT_BENCH_SCALE:-}" in
+    ci)
+        D_SCALE=0.02 D_PRESETS=uw D_BUDGET=120 D_WLIST=1,2 D_WORKERS=2 D_CHURN=0.05
+        ;;
+    full)
+        D_SCALE=0.1 D_PRESETS=uw,mondial,hepatitis D_BUDGET=300 D_WLIST=1,2,4 \
+            D_WORKERS=4 D_CHURN=0.01,0.05
+        ;;
+    "")
+        D_SCALE=0.03 D_PRESETS=uw,mondial D_BUDGET=120 D_WLIST=1,2 D_WORKERS=2 \
+            D_CHURN=0.01,0.05
+        ;;
+    *)
+        echo "bench.sh: RELCOUNT_BENCH_SCALE expects ci|full (or unset), got '${RELCOUNT_BENCH_SCALE}'" >&2
+        exit 1
+        ;;
+esac
+
+SCALE="${RELCOUNT_SCALE:-$D_SCALE}"
+PRESETS="${RELCOUNT_PRESETS:-$D_PRESETS}"
+BUDGET_S="${RELCOUNT_BUDGET_S:-$D_BUDGET}"
+WORKERS_LIST="${RELCOUNT_WORKERS_LIST:-$D_WLIST}"
+WORKERS="${RELCOUNT_WORKERS:-$D_WORKERS}"
+CHURN_FRACS="${RELCOUNT_CHURN_FRACS:-$D_CHURN}"
+
+echo "bench.sh: scale=$SCALE presets=$PRESETS budget=${BUDGET_S}s" \
+     "workers-list=$WORKERS_LIST workers=$WORKERS churn=$CHURN_FRACS"
 
 cargo build --release --quiet
 
 echo "== exp scaling (scale $SCALE, presets $PRESETS) =="
 ./target/release/relcount exp scaling \
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
-    --workers-list 1,2 --json "$ROOT/BENCH_scaling.json"
+    --workers-list "$WORKERS_LIST" --json "$ROOT/BENCH_scaling.json"
 
 echo "== exp planner (scale $SCALE, presets $PRESETS) =="
 ./target/release/relcount exp planner \
@@ -39,12 +78,12 @@ echo "== exp planner (scale $SCALE, presets $PRESETS) =="
 echo "== exp churn (scale $SCALE, presets $PRESETS) =="
 ./target/release/relcount exp churn \
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
-    --churn 0.01,0.05 --json "$ROOT/BENCH_churn.json"
+    --churn "$CHURN_FRACS" --workers "$WORKERS" --json "$ROOT/BENCH_churn.json"
 
 echo "== exp serve (scale $SCALE, presets $PRESETS) =="
 ./target/release/relcount exp serve \
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
-    --workers 2 --churn-frac 0.05 --churn-steps 3 \
+    --workers "$WORKERS" --churn-frac 0.05 --churn-steps 3 \
     --json "$ROOT/BENCH_serve.json"
 
 echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json and BENCH_serve.json"
