@@ -16,7 +16,8 @@ use crate::delta::policy::MaintenanceMode;
 use crate::error::Result;
 use crate::learn::search::SearchConfig;
 use crate::metrics::report::{
-    ChurnRow, PlannerRow, RunRow, ScalingRow, ServeRow, Table4Row, Table5Row,
+    ChurnRow, PersistRow, PlannerRow, RunRow, ScalingRow, ServeRow, Table4Row,
+    Table5Row,
 };
 use crate::serve::{
     enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
@@ -421,6 +422,85 @@ pub fn serve_rows(
     Ok(rows)
 }
 
+/// The restart-latency experiment (`relcount exp persist`,
+/// EXPERIMENTS.md §E14): per preset, build the maintained-count state,
+/// churn it so the snapshot is not the trivial initial generation, then
+/// compare a cold rebuild from the mutated base tables against saving
+/// a durable snapshot and loading it back.  `digest_match` must hold on
+/// every row — the snapshot round-trip and the cold recount are both
+/// required to be bit-identical to the live state; only the timings
+/// (and hence `speedup`) are machine-dependent.
+pub fn persist_rows(cfg: &ExpConfig, workers: usize) -> Result<Vec<PersistRow>> {
+    let workers = crate::coordinator::resolve_workers(workers);
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let db = generate(&preset(name, cfg.scale, cfg.seed)?)?;
+        let base = MaintainConfig {
+            mem_budget: None,
+            workers,
+            max_chain_length: cfg.search.max_chain_length,
+            ..Default::default()
+        };
+        let mut m = MaintainedCounts::build(db, base)?;
+        for i in 0..2u64 {
+            let batch = churn_batch(m.db(), 0.02, cfg.seed ^ 0x9E14 ^ (i + 1));
+            m.apply(&batch)?;
+        }
+        m.compact_indexes();
+
+        // cold restart: recount everything from the mutated base tables
+        let rebuilt = crate::db::catalog::Database::new(
+            m.db().schema.clone(),
+            m.db().entities.clone(),
+            m.db().rels.clone(),
+        )?;
+        let start = Instant::now();
+        let cold = MaintainedCounts::build(rebuilt, base)?;
+        let cold_build = start.elapsed();
+
+        // durable restart: save a snapshot, load it back
+        let dir = std::env::temp_dir().join(format!(
+            "relcount-exp-persist-{}-{}",
+            name,
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir)?;
+        let start = Instant::now();
+        crate::persist::write_snapshot(&dir, &m, 2)?;
+        let save = start.elapsed();
+        let mut snapshot_bytes = 0u64;
+        for entry in std::fs::read_dir(&dir)? {
+            snapshot_bytes += entry?.metadata()?.len();
+        }
+        let start = Instant::now();
+        let loaded =
+            crate::persist::load_snapshot(&dir)?.into_maintained(workers)?;
+        let load = start.elapsed();
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let digest_match =
+            loaded.digest() == m.digest() && cold.digest() == m.digest();
+        rows.push(PersistRow {
+            database: name.to_string(),
+            rows: m.db().total_rows(),
+            resident_bytes: m.resident_bytes(),
+            snapshot_bytes,
+            cold_build,
+            save,
+            load,
+            speedup: if load.as_secs_f64() > 0.0 {
+                cold_build.as_secs_f64() / load.as_secs_f64()
+            } else {
+                f64::INFINITY
+            },
+            digest_match,
+            workers,
+        });
+    }
+    Ok(rows)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -550,6 +630,21 @@ mod tests {
         let quiet = serve_rows(&cfg, 1, 0.0, 0, 1).unwrap();
         assert_eq!(quiet.len(), 1);
         assert_eq!(quiet[0].epoch, 0);
+    }
+
+    #[test]
+    fn persist_rows_round_trip_bit_identically() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = persist_rows(&cfg, 1).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert!(r.digest_match, "{r:?}");
+        assert!(r.rows > 0);
+        assert!(r.resident_bytes > 0);
+        assert!(r.snapshot_bytes > 0);
+        assert!(r.cold_build > Duration::ZERO);
+        assert!(r.speedup > 0.0);
+        assert_eq!(r.workers, 1);
     }
 
     #[test]

@@ -99,6 +99,40 @@ impl Database {
         Ok(())
     }
 
+    /// Install pre-built relationship indexes — the snapshot-restore
+    /// path, which deserializes compacted CSR base arrays instead of
+    /// re-sorting every table.  The index set must match the schema's
+    /// relationship count, the current backend, and each table's live
+    /// pair count; anything else means the persisted artifact does not
+    /// describe this database.
+    pub(crate) fn install_indexes(&mut self, ixs: Vec<RelIx>) -> Result<()> {
+        if ixs.len() != self.rels.len() {
+            return Err(Error::Data(format!(
+                "index count {} != relationship count {}",
+                ixs.len(),
+                self.rels.len()
+            )));
+        }
+        for (rt, ix) in ixs.iter().enumerate() {
+            if ix.backend() != self.backend {
+                return Err(Error::Data(format!(
+                    "index {rt} backend {} != database backend {}",
+                    ix.backend().name(),
+                    self.backend.name()
+                )));
+            }
+            if ix.len() != self.rels[rt].len() as usize {
+                return Err(Error::Data(format!(
+                    "index {rt} pair count {} != table rows {}",
+                    ix.len(),
+                    self.rels[rt].len()
+                )));
+            }
+        }
+        self.indexes = Some(ixs);
+        Ok(())
+    }
+
     /// Index for a relationship; requires [`Database::build_indexes`].
     pub fn index(&self, rel: usize) -> Result<&RelIx> {
         self.indexes

@@ -518,6 +518,74 @@ impl CsrIndex {
     pub fn bytes(&self) -> usize {
         self.fwd.bytes() + self.rev.bytes() + self.ov_fwd.bytes() + self.ov_rev.bytes()
     }
+
+    /// The base arrays of both orientations, for snapshot serialization.
+    /// Only a clean index can be serialized — callers must
+    /// [`CsrIndex::compact`] first so the base runs hold every live pair.
+    pub fn halves(&self) -> Result<(&CsrHalf, &CsrHalf)> {
+        if self.overlay_len() != 0 {
+            return Err(Error::Data(
+                "cannot serialize a CSR index with a pending overlay; compact first"
+                    .into(),
+            ));
+        }
+        Ok((&self.fwd, &self.rev))
+    }
+
+    /// Rebuild an index from persisted base arrays (the snapshot-restore
+    /// path), validating structure so corrupt-but-checksummed inputs can
+    /// never produce out-of-bounds reads: offsets monotone and
+    /// bounds-consistent, neighbor runs strictly ascending, neighbor and
+    /// tuple ids inside the opposite orientation's ranges, and both
+    /// orientations holding the same pair count.
+    pub fn from_halves(fwd: CsrHalf, rev: CsrHalf) -> Result<CsrIndex> {
+        Self::validate_half(&fwd, rev.offsets.len().saturating_sub(1), "fwd")?;
+        Self::validate_half(&rev, fwd.offsets.len().saturating_sub(1), "rev")?;
+        if fwd.nbr.len() != rev.nbr.len() {
+            return Err(Error::Data(format!(
+                "CSR orientations disagree on pair count ({} vs {})",
+                fwd.nbr.len(),
+                rev.nbr.len()
+            )));
+        }
+        Ok(CsrIndex {
+            fwd,
+            rev,
+            ov_fwd: Overlay::default(),
+            ov_rev: Overlay::default(),
+        })
+    }
+
+    fn validate_half(h: &CsrHalf, n_opposite: usize, side: &str) -> Result<()> {
+        let err = |m: String| Error::Data(format!("CSR {side} half: {m}"));
+        if h.offsets.is_empty() || h.offsets[0] != 0 {
+            return Err(err("offsets must start at 0".into()));
+        }
+        if h.offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err(err("offsets not monotone".into()));
+        }
+        let total = *h.offsets.last().unwrap() as usize;
+        if total != h.nbr.len() || h.nbr.len() != h.tid.len() {
+            return Err(err(format!(
+                "array lengths inconsistent (offsets end {total}, nbr {}, tid {})",
+                h.nbr.len(),
+                h.tid.len()
+            )));
+        }
+        for w in h.offsets.windows(2) {
+            let (lo, hi) = (w[0] as usize, w[1] as usize);
+            if h.nbr[lo..hi].windows(2).any(|p| p[0] >= p[1]) {
+                return Err(err("neighbor run not strictly ascending".into()));
+            }
+        }
+        if h.nbr.iter().any(|&n| n as usize >= n_opposite) {
+            return Err(err("neighbor id out of population range".into()));
+        }
+        if h.tid.iter().any(|&t| t as usize >= total) {
+            return Err(err("tuple id out of range".into()));
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -638,6 +706,35 @@ mod tests {
         for f in 0..2u32 {
             assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
         }
+    }
+
+    #[test]
+    fn halves_roundtrip_and_validation() {
+        let t = table();
+        let mut ix = CsrIndex::build(&t, 2, 3).unwrap();
+        let (f, r) = ix.halves().unwrap();
+        let (f, r) = (f.clone(), r.clone());
+        let back = CsrIndex::from_halves(f.clone(), r.clone()).unwrap();
+        assert_eq!(back.lookup(0, 2), ix.lookup(0, 2));
+        assert_eq!(back.sorted_nbrs_from(0), ix.sorted_nbrs_from(0));
+        assert_eq!(back.len(), ix.len());
+
+        // a dirty index refuses to expose its halves
+        ix.insert(1, 2, 3).unwrap();
+        assert!(ix.halves().is_err());
+        ix.compact();
+        assert!(ix.halves().is_ok());
+
+        // structural corruption is rejected
+        let mut bad = f.clone();
+        bad.nbr[0] = 99; // out of population range
+        assert!(CsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.offsets[1] = 0; // folds both rows into one non-ascending run
+        assert!(CsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.tid.pop(); // lengths inconsistent
+        assert!(CsrIndex::from_halves(bad, r).is_err());
     }
 
     #[test]

@@ -234,6 +234,15 @@ impl RelIx {
         }
     }
 
+    /// The underlying CSR index, if this is the CSR backend (snapshot
+    /// serialization reads the compacted base arrays through this).
+    pub fn as_csr(&self) -> Option<&CsrIndex> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => Some(ix),
+        }
+    }
+
     /// Tuple id for a fully-bound pair, if the relationship holds.
     #[inline]
     pub fn lookup(&self, from: u32, to: u32) -> Option<u32> {

@@ -292,12 +292,80 @@ impl MaintainedCounts {
         Ok(m)
     }
 
+    /// Rebuild a maintained state from persisted parts (the
+    /// snapshot-restore path).  The plan is taken verbatim — it was
+    /// built from the *initial* database at [`MaintainedCounts::build`]
+    /// time and is never re-planned on apply, so re-deriving it from the
+    /// mutated tables would diverge from the pre-crash writer.  The
+    /// lattice, by contrast, is a pure function of (schema,
+    /// max_chain_length) and is rebuilt here.  `db` must already carry
+    /// indexes (installed from the snapshot or rebuilt by the loader).
+    pub fn restore(
+        db: Database,
+        cfg: MaintainConfig,
+        plan: CountPlan,
+        positive: CtCache,
+        complete: CtCache,
+    ) -> Result<MaintainedCounts> {
+        if !db.has_indexes() {
+            return Err(Error::Persist {
+                section: "db".into(),
+                msg: "restore requires a database with indexes installed".into(),
+            });
+        }
+        let mut cfg = cfg;
+        cfg.workers = crate::coordinator::resolve_workers(cfg.workers);
+        let mut timer = PhaseTimer::default();
+        let ctx = LatticeCtx::build(&db, cfg.max_chain_length, &mut timer)?;
+        if plan.levels.len() != ctx.lattice.len() {
+            return Err(Error::Persist {
+                section: "plan".into(),
+                msg: format!(
+                    "persisted plan covers {} lattice points, schema implies {}",
+                    plan.levels.len(),
+                    ctx.lattice.len()
+                ),
+            });
+        }
+        let point_costs = ctx.lattice.point_costs();
+        Ok(MaintainedCounts {
+            db,
+            ctx,
+            plan,
+            cfg,
+            positive,
+            complete,
+            point_costs,
+            join_stats: JoinStats::default(),
+            poisoned: false,
+        })
+    }
+
     pub fn db(&self) -> &Database {
         &self.db
     }
 
     pub fn plan(&self) -> &CountPlan {
         &self.plan
+    }
+
+    /// The configuration this state was built with (workers resolved).
+    pub fn config(&self) -> &MaintainConfig {
+        &self.cfg
+    }
+
+    /// The resident caches `(positive, complete)` — read-only, for
+    /// snapshot serialization.
+    pub fn caches(&self) -> (&CtCache, &CtCache) {
+        (&self.positive, &self.complete)
+    }
+
+    /// Merge any pending CSR overlay into the base runs (no-op when
+    /// clean — [`MaintainedCounts::apply`] compacts at end-of-batch).
+    /// The snapshot writer persists base arrays only, so it compacts
+    /// through this before serializing.
+    pub fn compact_indexes(&mut self) {
+        self.db.compact_indexes();
     }
 
     pub fn lattice(&self) -> &Lattice {

@@ -57,6 +57,16 @@ impl MaintenanceMode {
             _ => None,
         }
     }
+
+    /// The CLI token [`MaintenanceMode::parse`] accepts back (also the
+    /// snapshot manifest's serialization of the mode).
+    pub fn name(&self) -> &'static str {
+        match self {
+            MaintenanceMode::Auto => "auto",
+            MaintenanceMode::DeltaOnly => "delta",
+            MaintenanceMode::RecountOnly => "recount",
+        }
+    }
 }
 
 /// The per-point decisions for one batch.

@@ -36,6 +36,12 @@ pub enum Error {
     /// limit that ONDEMAND blows on IMDb / Visual Genome).
     Timeout { phase: String, elapsed_ms: u64 },
 
+    /// On-disk persistence failure (snapshot section or WAL record
+    /// failed checksum/format verification), tagged with the section
+    /// that failed so fault-injection tests and operators can pinpoint
+    /// the corrupt artifact.
+    Persist { section: String, msg: String },
+
     Io(std::io::Error),
 }
 
@@ -52,6 +58,9 @@ impl fmt::Display for Error {
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
             Error::Timeout { phase, elapsed_ms } => {
                 write!(f, "timeout after {elapsed_ms} ms during {phase}")
+            }
+            Error::Persist { section, msg } => {
+                write!(f, "persist error in section '{section}': {msg}")
             }
             Error::Io(e) => write!(f, "io error: {e}"),
         }
@@ -78,6 +87,19 @@ impl Error {
     pub fn is_timeout(&self) -> bool {
         matches!(self, Error::Timeout { .. })
     }
+
+    /// Construct a [`Error::Persist`] naming the on-disk section.
+    pub fn persist(section: impl Into<String>, msg: impl Into<String>) -> Error {
+        Error::Persist { section: section.into(), msg: msg.into() }
+    }
+
+    /// The section name of a persistence error, if this is one.
+    pub fn persist_section(&self) -> Option<&str> {
+        match self {
+            Error::Persist { section, .. } => Some(section),
+            _ => None,
+        }
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
@@ -92,6 +114,15 @@ mod tests {
         assert!(e.is_timeout());
         assert!(!Error::Schema("x".into()).is_timeout());
         assert!(e.to_string().contains("positive"));
+    }
+
+    #[test]
+    fn persist_errors_name_their_section() {
+        let e = Error::persist("caches", "checksum mismatch");
+        assert_eq!(e.persist_section(), Some("caches"));
+        assert!(e.to_string().contains("'caches'"));
+        assert!(e.to_string().contains("checksum mismatch"));
+        assert_eq!(Error::Schema("x".into()).persist_section(), None);
     }
 
     #[test]

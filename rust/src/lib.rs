@@ -44,6 +44,11 @@
 //!   reader threads answer count/score requests lock-free while the
 //!   delta writer builds the next generation (`relcount serve`, line-
 //!   delimited JSON on stdin or TCP, micro-batched over the pool),
+//! - **durable snapshots + write-ahead log** ([`persist`]): a
+//!   manifest-addressed, checksummed snapshot format for the full
+//!   maintained-count state and an fsync-on-append WAL of delta
+//!   batches, so `relcount serve --data-dir` recovers bit-identically
+//!   (same cache digests) after a crash (`relcount snapshot`),
 //! - seeded **synthetic dataset generators** ([`datagen`]) with one
 //!   preset per benchmark database of the paper's Table 4,
 //! - **metrics** ([`metrics`]) reproducing the paper's runtime breakdown
@@ -66,6 +71,7 @@ pub mod lattice;
 pub mod learn;
 pub mod meta;
 pub mod metrics;
+pub mod persist;
 pub mod pipeline;
 pub mod runtime;
 pub mod serve;

@@ -8,8 +8,11 @@
 //!              [--workers N|auto] [--xla]
 //!   apply      --preset <name>|--db <dir> --deltas <file>
 //!              [--mode auto|delta|recount] [--workers N|auto] [--out <dir>]
-//!   exp        fig3|fig4|table4|table5|scaling|churn  --scale <f>
-//!              --budget-s <n>
+//!   serve      --preset <name>|--db <dir>|--data-dir <dir> [--port N]
+//!              [--data-dir <dir> --snapshot-every N]   (durable serving)
+//!   snapshot   save|verify|load                        (snapshot tooling)
+//!   exp        fig3|fig4|table4|table5|scaling|churn|serve|persist
+//!              --scale <f> --budget-s <n>
 //!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
 //!
 //! `--workers` routes the counting phases through the L3 parallel
@@ -30,8 +33,8 @@ use relcount::bench::driver::{
     run_coordinated_with, run_strategy_with, Workload,
 };
 use relcount::bench::experiments::{
-    churn_rows, coordinator_scaling_rows, fig3_fig4_rows, planner_sweep_rows,
-    serve_rows, table4_rows, table5_rows, ExpConfig,
+    churn_rows, coordinator_scaling_rows, fig3_fig4_rows, persist_rows,
+    planner_sweep_rows, serve_rows, table4_rows, table5_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -42,10 +45,12 @@ use relcount::db::loader;
 use relcount::delta::{DeltaBatch, MaintainConfig, MaintainedCounts, MaintenanceMode};
 use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
+use relcount::persist::{load_snapshot, verify_snapshot, write_snapshot, DataDir};
 use relcount::metrics::report::{
-    churn_rows_to_json, planner_rows_to_json, render_churn, render_fig3, render_fig4,
-    render_planner, render_scaling, render_serve, render_table4, render_table5,
-    scaling_rows_to_json, serve_rows_to_json,
+    churn_rows_to_json, persist_rows_to_json, planner_rows_to_json, render_churn,
+    render_fig3, render_fig4, render_persist, render_planner, render_scaling,
+    render_serve, render_table4, render_table5, scaling_rows_to_json,
+    serve_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
 use relcount::serve::{
@@ -70,12 +75,16 @@ USAGE:
   relcount apply     (--preset <name> | --db <dir>) --deltas FILE
                      [--mode auto|delta|recount] [--mem-budget ...]
                      [--workers N|auto] [--out <dir>]
-  relcount serve     (--preset <name> | --db <dir>) [--requests FILE | --port N]
+  relcount serve     (--preset <name> | --db <dir> | --data-dir <dir>)
+                     [--requests FILE | --port N]
                      [--deltas FILE | --churn F --churn-steps K]
                      [--workers N|auto] [--mem-budget ...] [--batch-max N]
-                     [--delta-pause-ms N] [--json FILE]
+                     [--delta-pause-ms N] [--snapshot-every N] [--json FILE]
+  relcount snapshot  save (--preset <name> | --db <dir>) --out <dir>
+                     | verify --dir <snapshot dir> | load --dir <snapshot dir>
   relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
-  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve> [--scale F]
+  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve|persist>
+                     [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
                      [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
@@ -104,6 +113,18 @@ USAGE:
   pool, while --deltas (line-delimited batches) or --churn publish new
   generations concurrently; responses go to stdout, per-generation
   metrics to stderr (--json writes BENCH_serve.json rows).
+  --data-dir makes `serve` durable: every published batch is fsync'd to
+  a write-ahead log before readers can see it, a full checksummed
+  snapshot is written every --snapshot-every batches (default 8) and on
+  graceful shutdown, and restarting with the same --data-dir (no
+  --preset/--db needed) recovers bit-identically — same epoch, same
+  cache digest — from the last valid snapshot plus WAL replay.
+  `snapshot save/verify/load` manage standalone snapshot directories;
+  `verify` proves a snapshot can reproduce its manifest digest and
+  names the corrupt section otherwise.
+  `exp persist` measures restart latency per preset — cold recount vs
+  snapshot save + load — and fails unless all three states share one
+  cache digest (--json writes BENCH_persist.json rows).
   `gen-requests` emits a deterministic request workload for a database.
 ";
 
@@ -333,12 +354,6 @@ fn run() -> Result<()> {
             Ok(())
         }
         Some("serve") => {
-            let (name, db) = load_db(&args)?;
-            let cfg = MaintainConfig {
-                mem_budget: args.mem_budget()?,
-                workers: args.workers()?,
-                ..Default::default()
-            };
             let feed = if let Some(path) = args.get("deltas") {
                 let text = std::fs::read_to_string(path)?;
                 DeltaFeed::Batches(parse_delta_stream(&text)?)
@@ -351,6 +366,63 @@ fn run() -> Result<()> {
             } else {
                 DeltaFeed::None
             };
+            if args.get("port").is_some() && args.get("requests").is_some() {
+                return Err(Error::Data(
+                    "--port and --requests are mutually exclusive: TCP sessions \
+                     read requests from the socket"
+                        .into(),
+                ));
+            }
+            // --data-dir makes the engine durable: a dir with snapshots
+            // recovers the pre-crash state (no --preset/--db needed);
+            // an empty one starts from the loaded database and writes
+            // the initial snapshot
+            let data_dir = args.get("data-dir").map(Path::new);
+            let snapshot_every = args.get_usize("snapshot-every", 8)? as u64;
+            let (name, mut engine) = match data_dir {
+                Some(root) => {
+                    let dd = DataDir::open(root)?;
+                    if dd.has_snapshots()? {
+                        eprintln!("recovering state from {}...", root.display());
+                        let (m, epoch) = dd.recover(args.workers()?)?;
+                        let name = match args.get("preset").or_else(|| args.get("db")) {
+                            Some(s) => s.to_string(),
+                            None => root.display().to_string(),
+                        };
+                        eprintln!(
+                            "recovered epoch {epoch} digest {:016x}",
+                            m.digest()
+                        );
+                        (name, ServeEngine::from_maintained_at(m, epoch)?)
+                    } else {
+                        let (name, db) = load_db(&args)?;
+                        let cfg = MaintainConfig {
+                            mem_budget: args.mem_budget()?,
+                            workers: args.workers()?,
+                            ..Default::default()
+                        };
+                        eprintln!("building serving engine for {name}...");
+                        (name, ServeEngine::build(db, cfg)?)
+                    }
+                }
+                None => {
+                    let (name, db) = load_db(&args)?;
+                    let cfg = MaintainConfig {
+                        mem_budget: args.mem_budget()?,
+                        workers: args.workers()?,
+                        ..Default::default()
+                    };
+                    eprintln!("building serving engine for {name}...");
+                    (name, ServeEngine::build(db, cfg)?)
+                }
+            };
+            if let Some(root) = data_dir {
+                engine.attach_persistence(DataDir::open(root)?, snapshot_every)?;
+                eprintln!(
+                    "durable: WAL + snapshot every {snapshot_every} batches in {}",
+                    root.display()
+                );
+            }
             let opts = ServeOptions {
                 database: name.clone(),
                 workers: args.workers()?,
@@ -360,18 +432,6 @@ fn run() -> Result<()> {
                     args.get_usize("delta-pause-ms", 0)? as u64,
                 ),
             };
-            eprintln!(
-                "building serving engine for {name} ({} workers)...",
-                relcount::coordinator::resolve_workers(opts.workers)
-            );
-            if args.get("port").is_some() && args.get("requests").is_some() {
-                return Err(Error::Data(
-                    "--port and --requests are mutually exclusive: TCP sessions \
-                     read requests from the socket"
-                        .into(),
-                ));
-            }
-            let engine = ServeEngine::build(db, cfg)?;
             let summary = if let Some(port) = args.get("port") {
                 let port: u16 = port.parse().map_err(|_| {
                     Error::Data(format!("--port expects a TCP port, got {port:?}"))
@@ -394,7 +454,11 @@ fn run() -> Result<()> {
             };
             eprint!("{}", render_serve(&summary.rows));
             for (i, e) in &summary.publish_failures {
-                eprintln!("publish failure on batch {i}: {e} (previous generation kept serving)");
+                if *i == usize::MAX {
+                    eprintln!("warning: {e} (WAL still holds every batch)");
+                } else {
+                    eprintln!("publish failure on batch {i}: {e} (previous generation kept serving)");
+                }
             }
             eprintln!(
                 "serve: {} requests ({} errors), {} generations published, \
@@ -406,6 +470,69 @@ fn run() -> Result<()> {
                 summary.final_digest
             );
             write_json(&args, serve_rows_to_json(&summary.rows))?;
+            Ok(())
+        }
+        Some("snapshot") => {
+            let action = args
+                .positional
+                .first()
+                .map(|s| s.as_str())
+                .ok_or_else(|| Error::Data("snapshot needs save|verify|load".into()))?;
+            match action {
+                "save" => {
+                    let (name, db) = load_db(&args)?;
+                    let cfg = MaintainConfig {
+                        mem_budget: args.mem_budget()?,
+                        workers: args.workers()?,
+                        ..Default::default()
+                    };
+                    let out = args
+                        .get("out")
+                        .ok_or_else(|| Error::Data("need --out <dir>".into()))?;
+                    eprintln!("building maintained caches for {name}...");
+                    let mut m = MaintainedCounts::build(db, cfg)?;
+                    m.compact_indexes();
+                    std::fs::create_dir_all(out)?;
+                    write_snapshot(Path::new(out), &m, 0)?;
+                    println!(
+                        "wrote snapshot of {name} at epoch 0 to {out} (digest {:016x})",
+                        m.digest()
+                    );
+                }
+                "verify" => {
+                    let dir = args
+                        .get("dir")
+                        .ok_or_else(|| Error::Data("need --dir <snapshot dir>".into()))?;
+                    let info = verify_snapshot(Path::new(dir))?;
+                    println!(
+                        "snapshot OK: epoch {}, backend {}, digest {:016x}",
+                        info.epoch,
+                        info.backend.name(),
+                        info.cache_digest
+                    );
+                    for (section, bytes) in &info.sections {
+                        println!("  {section}: {bytes} bytes");
+                    }
+                }
+                "load" => {
+                    let dir = args
+                        .get("dir")
+                        .ok_or_else(|| Error::Data("need --dir <snapshot dir>".into()))?;
+                    let state = load_snapshot(Path::new(dir))?;
+                    let (epoch, digest) = (state.epoch, state.cache_digest);
+                    let m = state.into_maintained(args.workers()?)?;
+                    println!(
+                        "loaded snapshot epoch {epoch} digest {digest:016x}: \
+                         resident {} bytes, serviceable",
+                        m.resident_bytes()
+                    );
+                }
+                other => {
+                    return Err(Error::Data(format!(
+                        "unknown snapshot action {other:?} (save|verify|load)"
+                    )))
+                }
+            }
             Ok(())
         }
         Some("gen-requests") => {
@@ -431,7 +558,8 @@ fn run() -> Result<()> {
                 .map(|s| s.as_str())
                 .ok_or_else(|| {
                     Error::Data(
-                        "exp needs fig3|fig4|table4|table5|scaling|planner|churn|serve"
+                        "exp needs fig3|fig4|table4|table5|scaling|planner|\
+                         churn|serve|persist"
                             .into(),
                     )
                 })?;
@@ -473,6 +601,19 @@ fn run() -> Result<()> {
                     let rows = serve_rows(&cfg, workers, frac, steps, repeat)?;
                     print!("{}", render_serve(&rows));
                     write_json(&args, serve_rows_to_json(&rows))?;
+                }
+                "persist" => {
+                    let workers = args.workers()?;
+                    let rows = persist_rows(&cfg, workers)?;
+                    print!("{}", render_persist(&rows));
+                    if rows.iter().any(|r| !r.digest_match) {
+                        return Err(Error::Data(
+                            "persist: snapshot round-trip or cold recount \
+                             diverged from the live state"
+                                .into(),
+                        ));
+                    }
+                    write_json(&args, persist_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }

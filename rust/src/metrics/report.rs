@@ -472,6 +472,89 @@ pub fn serve_rows_to_json(rows: &[ServeRow]) -> Json {
     )
 }
 
+/// One preset's restart-latency comparison (`exp persist`,
+/// EXPERIMENTS.md §E14): rebuilding the maintained-count state from
+/// the base tables (a cold recount) versus saving a durable snapshot
+/// and loading it back.  `digest_match` asserts all three states —
+/// built, cold-rebuilt and snapshot-loaded — share one cache digest.
+#[derive(Clone, Debug)]
+pub struct PersistRow {
+    pub database: String,
+    /// Total tuples across all tables at snapshot time.
+    pub rows: u64,
+    /// Resident ct-cache bytes in the maintained state.
+    pub resident_bytes: usize,
+    /// On-disk bytes across every snapshot section file + manifest.
+    pub snapshot_bytes: u64,
+    /// Wall-clock of a from-scratch `MaintainedCounts::build`.
+    pub cold_build: Duration,
+    /// Wall-clock of `write_snapshot`.
+    pub save: Duration,
+    /// Wall-clock of `load_snapshot` + `into_maintained`.
+    pub load: Duration,
+    /// `cold_build / load` — the restart-latency win (E14 expects
+    /// >= 5x on the largest preset).
+    pub speedup: f64,
+    pub digest_match: bool,
+    pub workers: usize,
+}
+
+/// Render the restart-latency rows (`exp persist`).
+pub fn render_persist(rows: &[PersistRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>9} {:>12} {:>12} {:>10} {:>10} {:>10} {:>8} {:>6}\n",
+        "database",
+        "rows",
+        "resident_b",
+        "snapshot_b",
+        "cold_s",
+        "save_s",
+        "load_s",
+        "speedup",
+        "match"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:>9} {:>12} {:>12} {:>10.4} {:>10.4} {:>10.4} {:>8.1} {:>6}\n",
+            r.database,
+            r.rows,
+            r.resident_bytes,
+            r.snapshot_bytes,
+            r.cold_build.as_secs_f64(),
+            r.save.as_secs_f64(),
+            r.load.as_secs_f64(),
+            r.speedup,
+            r.digest_match
+        ));
+    }
+    out
+}
+
+/// Machine-readable persist rows (written to `BENCH_persist.json` by
+/// `scripts/bench.sh`).  Key set is schema-stable; `digest_match` is
+/// deterministic, the timing fields are not.
+pub fn persist_rows_to_json(rows: &[PersistRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("rows", Json::Num(r.rows as f64)),
+                    ("resident_bytes", Json::Num(r.resident_bytes as f64)),
+                    ("snapshot_bytes", Json::Num(r.snapshot_bytes as f64)),
+                    ("cold_build_s", Json::Num(r.cold_build.as_secs_f64())),
+                    ("save_s", Json::Num(r.save.as_secs_f64())),
+                    ("load_s", Json::Num(r.load.as_secs_f64())),
+                    ("speedup", Json::Num(r.speedup)),
+                    ("digest_match", Json::Bool(r.digest_match)),
+                    ("workers", Json::Num(r.workers as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {

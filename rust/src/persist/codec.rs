@@ -1,0 +1,236 @@
+//! Length-prefixed little-endian binary codec for snapshot sections.
+//!
+//! Every section payload is built with [`ByteWriter`] and parsed back
+//! with [`ByteReader`]; the reader carries the section name so every
+//! decode failure surfaces as [`crate::error::Error::Persist`] naming
+//! the on-disk artifact that broke.  The checksum is the crate's own
+//! [`crate::util::fxhash::FxHasher`] over the payload bytes plus the
+//! length — no external CRC dependency, and the same function the cache
+//! digests use, so one hash implementation guards the whole pipeline.
+//!
+//! i128 ct-counts and f64 plan estimates are encoded via their exact
+//! bit patterns (`to_le_bytes` / `to_bits`), never through JSON's f64
+//! numbers, so round-trips are bit-identical at any magnitude.
+
+use crate::error::{Error, Result};
+use crate::util::fxhash::FxHasher;
+
+/// Checksum over a byte string: FxHasher fed the bytes then the length
+/// (the length term keeps a truncated-but-zero-padded payload from
+/// colliding with the original).
+pub fn checksum64(bytes: &[u8]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    h.write(bytes);
+    h.write_u64(bytes.len() as u64);
+    h.finish()
+}
+
+/// Append-only little-endian byte buffer.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i128(&mut self, v: i128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.put_u64(v.to_bits());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed u32 vector.
+    pub fn put_u32s(&mut self, v: &[u32]) {
+        self.put_u32(v.len() as u32);
+        for &x in v {
+            self.put_u32(x);
+        }
+    }
+}
+
+/// Cursor over a section payload; every failure names the section.
+pub struct ByteReader<'a> {
+    b: &'a [u8],
+    i: usize,
+    section: &'a str,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(b: &'a [u8], section: &'a str) -> Self {
+        ByteReader { b, i: 0, section }
+    }
+
+    pub fn err(&self, msg: impl Into<String>) -> Error {
+        Error::Persist {
+            section: self.section.to_string(),
+            msg: format!("{} (at byte {})", msg.into(), self.i),
+        }
+    }
+
+    /// All bytes consumed?  Trailing garbage in a section is corruption
+    /// the checksum missed only if the checksum itself was forged, but
+    /// we still reject it.
+    pub fn finish(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(self.err(format!(
+                "{} trailing bytes after decode",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(self.err(format!(
+                "truncated: need {n} bytes, {} remain",
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_u128(&mut self) -> Result<u128> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn get_i128(&mut self) -> Result<i128> {
+        Ok(i128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let v = self.get_u64()?;
+        usize::try_from(v).map_err(|_| self.err(format!("{v} overflows usize")))
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid utf-8"))
+    }
+
+    pub fn get_u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.get_u32()? as usize;
+        // cap the preallocation: a corrupt length must not OOM before
+        // the truncation check fires
+        let mut v = Vec::with_capacity(n.min(self.b.len() / 4 + 1));
+        for _ in 0..n {
+            v.push(self.get_u32()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 3);
+        w.put_u128(u128::MAX / 3);
+        w.put_i128(-(1i128 << 100));
+        w.put_f64(-0.1);
+        w.put_usize(42);
+        w.put_str("café ✓");
+        w.put_u32s(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes, "test");
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.get_u128().unwrap(), u128::MAX / 3);
+        assert_eq!(r.get_i128().unwrap(), -(1i128 << 100));
+        assert_eq!(r.get_f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        assert_eq!(r.get_usize().unwrap(), 42);
+        assert_eq!(r.get_str().unwrap(), "café ✓");
+        assert_eq!(r.get_u32s().unwrap(), vec![1, 2, 3]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncation_and_trailing_name_the_section() {
+        let mut w = ByteWriter::new();
+        w.put_u64(5);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes[..4], "caches");
+        let e = r.get_u64().unwrap_err();
+        assert_eq!(e.persist_section(), Some("caches"));
+        assert!(e.to_string().contains("truncated"));
+
+        let mut r = ByteReader::new(&bytes, "plan");
+        r.get_u32().unwrap();
+        let e = r.finish().unwrap_err();
+        assert_eq!(e.persist_section(), Some("plan"));
+    }
+
+    #[test]
+    fn checksum_sensitive_to_every_byte() {
+        let data = b"0123456789abcdef".to_vec();
+        let base = checksum64(&data);
+        for i in 0..data.len() {
+            let mut flipped = data.clone();
+            flipped[i] ^= 0x01;
+            assert_ne!(checksum64(&flipped), base, "byte {i}");
+        }
+        // length-extension: truncation changes the sum too
+        assert_ne!(checksum64(&data[..15]), base);
+    }
+}

@@ -1,0 +1,334 @@
+//! Durable snapshots + write-ahead log for the maintained-count state.
+//!
+//! PR 4/5 made mutation cheap (delta-maintained caches) and reads
+//! concurrent (snapshot-isolated generations); both died with the
+//! process.  This module adds the crash-consistency layer: a serving
+//! data directory
+//!
+//! ```text
+//! <data-dir>/
+//!   wal.log            append-only DeltaBatch log (see [`wal`])
+//!   snapshots/
+//!     snap-<epoch:016x>/   manifest-addressed snapshot (see [`snapshot`])
+//!     snap-<epoch:016x>/   ... the newest `RETAIN` epochs are kept
+//! ```
+//!
+//! **Durability protocol** (the serving engine's write path):
+//!
+//! 1. apply the batch to a clone of the writer state (PR 4);
+//! 2. append the batch to the WAL with the post-apply `cache_digest`
+//!    and `fsync` — only then
+//! 3. publish the new generation to readers;
+//! 4. every N batches (and on graceful shutdown), write a full snapshot
+//!    to a temp directory and `rename` it into place.
+//!
+//! A batch is therefore durable *before* any reader can observe it, and
+//! a crash between (2) and (3) merely replays a batch the readers never
+//! saw — convergent, since replay reproduces the exact writer state.
+//!
+//! **Recovery** ([`DataDir::recover`]) = newest snapshot that passes
+//! full verification (per-section checksums + reloaded-cache digest) +
+//! replay of the WAL records after its epoch.  Every replayed record
+//! carries the digest the original writer observed, so recovery proves
+//! bit-identity batch by batch — it can never silently diverge.  A
+//! snapshot that fails verification is skipped (typed error recorded,
+//! older snapshot tried); corrupt WAL records refuse recovery rather
+//! than serve unproven counts.
+//!
+//! The WAL is never pruned — replay skips records at or below the
+//! snapshot's epoch.  That trades disk for a simpler invariant (the log
+//! alone can rebuild any state from the oldest snapshot) and keeps the
+//! append fd stable; see DESIGN.md §3e.
+
+pub mod codec;
+pub mod snapshot;
+pub mod wal;
+
+pub use snapshot::{
+    load_snapshot, verify_snapshot, write_snapshot, SnapshotInfo, SnapshotState,
+};
+pub use wal::{read_records, WalRecord, WalWriter};
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::delta::maintain::MaintainedCounts;
+use crate::error::{Error, Result};
+
+/// Snapshots kept per data directory (newest first); older epochs are
+/// deleted after a successful save.
+pub const RETAIN: usize = 2;
+
+const SNAP_PREFIX: &str = "snap-";
+
+fn perr(section: &str, msg: impl Into<String>) -> Error {
+    Error::Persist { section: section.into(), msg: msg.into() }
+}
+
+/// A serving data directory: WAL + snapshot retention + recovery.
+pub struct DataDir {
+    root: PathBuf,
+}
+
+impl DataDir {
+    /// Open (creating if needed) `root` and its `snapshots/` subdir.
+    pub fn open(root: &Path) -> Result<DataDir> {
+        fs::create_dir_all(root.join("snapshots"))
+            .map_err(|e| perr("datadir", format!("create {}: {e}", root.display())))?;
+        Ok(DataDir { root: root.to_path_buf() })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn wal_path(&self) -> PathBuf {
+        self.root.join("wal.log")
+    }
+
+    fn snapshots_root(&self) -> PathBuf {
+        self.root.join("snapshots")
+    }
+
+    pub fn snapshot_dir(&self, epoch: u64) -> PathBuf {
+        self.snapshots_root().join(format!("{SNAP_PREFIX}{epoch:016x}"))
+    }
+
+    /// Epochs with a `snap-<epoch>` directory, ascending.  Names that
+    /// don't parse (temp dirs from an interrupted save) are ignored.
+    pub fn snapshot_epochs(&self) -> Result<Vec<u64>> {
+        let mut epochs = Vec::new();
+        let dir = self.snapshots_root();
+        let rd = fs::read_dir(&dir)
+            .map_err(|e| perr("datadir", format!("list {}: {e}", dir.display())))?;
+        for entry in rd {
+            let entry =
+                entry.map_err(|e| perr("datadir", format!("list entry: {e}")))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(hexpart) = name.strip_prefix(SNAP_PREFIX) {
+                if let Ok(e) = u64::from_str_radix(hexpart, 16) {
+                    epochs.push(e);
+                }
+            }
+        }
+        epochs.sort_unstable();
+        Ok(epochs)
+    }
+
+    pub fn latest_snapshot_epoch(&self) -> Result<Option<u64>> {
+        Ok(self.snapshot_epochs()?.last().copied())
+    }
+
+    pub fn has_snapshots(&self) -> Result<bool> {
+        Ok(!self.snapshot_epochs()?.is_empty())
+    }
+
+    /// Write a snapshot of `m` at `epoch`: compact the indexes, write
+    /// every section into a temp directory, then `rename` it to
+    /// `snap-<epoch>` — the snapshot either exists completely or not at
+    /// all.  Older snapshots beyond [`RETAIN`] are then deleted.
+    pub fn save_snapshot(&self, m: &mut MaintainedCounts, epoch: u64) -> Result<PathBuf> {
+        m.compact_indexes();
+        let final_dir = self.snapshot_dir(epoch);
+        if final_dir.exists() {
+            // same epoch already durable (e.g. shutdown right after a
+            // periodic snapshot): nothing to write
+            return Ok(final_dir);
+        }
+        let tmp_dir = self.snapshots_root().join(format!(".tmp-{epoch:016x}"));
+        if tmp_dir.exists() {
+            fs::remove_dir_all(&tmp_dir)
+                .map_err(|e| perr("datadir", format!("clear temp dir: {e}")))?;
+        }
+        fs::create_dir_all(&tmp_dir)
+            .map_err(|e| perr("datadir", format!("create temp dir: {e}")))?;
+        snapshot::write_snapshot(&tmp_dir, m, epoch)?;
+        fs::rename(&tmp_dir, &final_dir).map_err(|e| {
+            perr("datadir", format!("publish {}: {e}", final_dir.display()))
+        })?;
+        // best-effort: make the rename itself durable
+        if let Ok(d) = fs::File::open(self.snapshots_root()) {
+            let _ = d.sync_all();
+        }
+        self.prune_snapshots()?;
+        Ok(final_dir)
+    }
+
+    fn prune_snapshots(&self) -> Result<()> {
+        let epochs = self.snapshot_epochs()?;
+        if epochs.len() <= RETAIN {
+            return Ok(());
+        }
+        for &old in &epochs[..epochs.len() - RETAIN] {
+            let dir = self.snapshot_dir(old);
+            fs::remove_dir_all(&dir)
+                .map_err(|e| perr("datadir", format!("prune {}: {e}", dir.display())))?;
+        }
+        Ok(())
+    }
+
+    /// Recover the pre-crash writer state: load the newest snapshot
+    /// that passes full verification (older ones are tried when a
+    /// newer one is damaged — with the WAL intact no committed batch is
+    /// lost, only replayed), then replay the WAL suffix, checking the
+    /// recorded digest after **every** batch.  Returns the state and
+    /// its epoch.  `workers` overrides the persisted worker count when
+    /// non-zero.
+    pub fn recover(&self, workers: usize) -> Result<(MaintainedCounts, u64)> {
+        let epochs = self.snapshot_epochs()?;
+        if epochs.is_empty() {
+            return Err(perr("datadir", "no snapshots to recover from"));
+        }
+        let mut last_err: Option<Error> = None;
+        for &epoch in epochs.iter().rev() {
+            match snapshot::load_snapshot(&self.snapshot_dir(epoch)) {
+                Ok(state) => {
+                    let m = state.into_maintained(workers)?;
+                    return self.replay_wal(m, epoch);
+                }
+                Err(e @ Error::Persist { .. }) => {
+                    // damaged snapshot: remember why, fall back to the
+                    // previous epoch
+                    last_err = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Err(match last_err {
+            Some(Error::Persist { section, msg }) => Error::Persist {
+                section,
+                msg: format!("no snapshot passed verification; last error: {msg}"),
+            },
+            _ => perr("datadir", "no snapshot passed verification"),
+        })
+    }
+
+    /// Replay WAL records after `from_epoch` onto `m`, proving each
+    /// step against the digest the original writer recorded.
+    fn replay_wal(
+        &self,
+        mut m: MaintainedCounts,
+        from_epoch: u64,
+    ) -> Result<(MaintainedCounts, u64)> {
+        let records = wal::read_records(&self.wal_path())?;
+        let mut epoch = from_epoch;
+        for rec in records {
+            if rec.epoch <= from_epoch {
+                continue; // already folded into the snapshot
+            }
+            if rec.epoch != epoch + 1 {
+                return Err(perr(
+                    "wal",
+                    format!(
+                        "gap: expected epoch {} next, found {}",
+                        epoch + 1,
+                        rec.epoch
+                    ),
+                ));
+            }
+            m.apply(&rec.batch)?;
+            let got = m.digest();
+            if got != rec.digest {
+                return Err(perr(
+                    "wal",
+                    format!(
+                        "replay diverged at epoch {}: digest {:016x}, writer recorded {:016x}",
+                        rec.epoch, got, rec.digest
+                    ),
+                ));
+            }
+            epoch = rec.epoch;
+        }
+        Ok((m, epoch))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datagen::churn::churn_batch;
+    use crate::db::fixtures::university_db;
+    use crate::delta::maintain::MaintainConfig;
+
+    fn tmp(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("relcount-datadir-{}-{name}", std::process::id()));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn save_recover_roundtrip_with_wal_suffix() {
+        let root = tmp("roundtrip");
+        let dd = DataDir::open(&root).unwrap();
+        let mut m =
+            MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
+        dd.save_snapshot(&mut m, 0).unwrap();
+
+        // three batches: snapshot after the first, WAL-only after
+        let mut w = WalWriter::open(&dd.wal_path()).unwrap();
+        for e in 1..=3u64 {
+            let batch = churn_batch(m.db(), 0.05, 0xC0FFEE + e);
+            m.apply(&batch).unwrap();
+            w.append(e, m.digest(), &batch).unwrap();
+            if e == 1 {
+                dd.save_snapshot(&mut m, e).unwrap();
+            }
+        }
+        drop(w);
+
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 3);
+        assert_eq!(r.digest(), m.digest());
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn retention_prunes_oldest() {
+        let root = tmp("retention");
+        let dd = DataDir::open(&root).unwrap();
+        let mut m =
+            MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
+        for e in [0, 5, 9] {
+            dd.save_snapshot(&mut m, e).unwrap();
+        }
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![5, 9]);
+        assert_eq!(dd.latest_snapshot_epoch().unwrap(), Some(9));
+    }
+
+    #[test]
+    fn recovery_falls_back_past_damaged_snapshot() {
+        let root = tmp("fallback");
+        let dd = DataDir::open(&root).unwrap();
+        let mut m =
+            MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
+        dd.save_snapshot(&mut m, 0).unwrap();
+        let mut w = WalWriter::open(&dd.wal_path()).unwrap();
+        let batch = churn_batch(m.db(), 0.05, 7);
+        m.apply(&batch).unwrap();
+        w.append(1, m.digest(), &batch).unwrap();
+        drop(w);
+        dd.save_snapshot(&mut m, 1).unwrap();
+
+        // damage the newest snapshot's caches section
+        let caches = dd.snapshot_dir(1).join("caches.bin");
+        let mut bytes = fs::read(&caches).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        fs::write(&caches, &bytes).unwrap();
+
+        // epoch-1 snapshot fails verification; recovery uses epoch 0 +
+        // WAL replay and still lands on the exact same state
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 1);
+        assert_eq!(r.digest(), m.digest());
+
+        // with the WAL also gone, recovery must refuse rather than
+        // serve the unverified epoch-1 snapshot
+        fs::remove_file(dd.wal_path()).unwrap();
+        fs::remove_dir_all(dd.snapshot_dir(0)).unwrap();
+        let e = dd.recover(0).unwrap_err();
+        assert!(e.persist_section().is_some());
+    }
+}

@@ -1,0 +1,771 @@
+//! The snapshot format: one manifest-addressed directory per epoch.
+//!
+//! ```text
+//! snap-<epoch:016x>/
+//!   MANIFEST.json   format, epoch, backend, config, cache_digest,
+//!                   per-section {file, bytes, checksum}
+//!   db.bin          schema JSON + columnar entity/relationship tables
+//!   csr.bin         compacted CSR base arrays (CSR backend only)
+//!   plan.bin        the CountPlan, verbatim
+//!   caches.bin      resident positive + complete ct-caches
+//! ```
+//!
+//! Each `.bin` section is `[magic][payload len u64][payload][checksum
+//! u64]`; the manifest records the same length and checksum, so a flip
+//! in a section file *or* in the manifest's record of it is caught by
+//! the cross-check.  The end-to-end integrity witness is the existing
+//! `cache_digest` ([`crate::strategies::cache::digest_caches`]): it is
+//! recomputed over the *reloaded* caches on every load and compared to
+//! the manifest — a snapshot that cannot reproduce its own digest is
+//! never served.
+//!
+//! What is persisted vs rebuilt:
+//!
+//! - the [`CountPlan`] is persisted **verbatim** — it was planned
+//!   against the initial database and never re-planned on apply, so
+//!   re-deriving it from the mutated tables would diverge from the
+//!   pre-crash writer (and change which points are resident);
+//! - the lattice is **rebuilt** — it is a pure function of (schema,
+//!   max_chain_length);
+//! - CSR indexes are persisted as base arrays (the overlay is compacted
+//!   first); the hash backend rebuilds its maps from the tables.
+
+use std::fs::{self, File};
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::db::catalog::Database;
+use crate::db::csr::{CsrHalf, CsrIndex};
+use crate::db::index::{Backend, RelIx};
+use crate::db::schema::Schema;
+use crate::db::table::{EntityTable, RelTable};
+use crate::delta::maintain::{MaintainConfig, MaintainedCounts};
+use crate::delta::policy::MaintenanceMode;
+use crate::error::{Error, Result};
+use crate::estimate::plan::{CountPlan, PlanLevel, PointEstimate};
+use crate::estimate::sampler::EstimatorConfig;
+use crate::meta::rvar::RVar;
+use crate::persist::codec::{checksum64, ByteReader, ByteWriter};
+use crate::strategies::cache::{digest_caches, CacheKey, CtCache};
+use crate::util::json::Json;
+
+/// Manifest `format` field; bump on any layout change.
+pub const FORMAT: &str = "relcount-snapshot-v1";
+
+const SECTION_MAGIC: &[u8; 8] = b"RCSNAP1\0";
+pub const MANIFEST_FILE: &str = "MANIFEST.json";
+
+fn perr(section: &str, msg: impl Into<String>) -> Error {
+    Error::Persist { section: section.into(), msg: msg.into() }
+}
+
+/// Everything a snapshot holds, decoded and digest-verified.
+pub struct SnapshotState {
+    pub epoch: u64,
+    /// Indexes installed (CSR from the persisted arrays, hash rebuilt).
+    pub db: Database,
+    /// The persisted maintenance config (workers as persisted; override
+    /// at restore time if the new host differs).
+    pub cfg: MaintainConfig,
+    pub plan: CountPlan,
+    pub positive: CtCache,
+    pub complete: CtCache,
+    /// The manifest digest, already verified against the loaded caches.
+    pub cache_digest: u64,
+}
+
+impl SnapshotState {
+    /// Restore a [`MaintainedCounts`] from this state, overriding the
+    /// worker count when `workers > 0`.
+    pub fn into_maintained(self, workers: usize) -> Result<MaintainedCounts> {
+        let mut cfg = self.cfg;
+        if workers > 0 {
+            cfg.workers = workers;
+        }
+        MaintainedCounts::restore(
+            self.db,
+            cfg,
+            self.plan,
+            self.positive,
+            self.complete,
+        )
+    }
+}
+
+/// Summary returned by [`verify_snapshot`] (a full load under the hood,
+/// so "verified" means *loadable and digest-exact*, not just well-formed).
+pub struct SnapshotInfo {
+    pub epoch: u64,
+    pub backend: Backend,
+    pub cache_digest: u64,
+    /// `(section, payload bytes)` in manifest order.
+    pub sections: Vec<(String, u64)>,
+}
+
+// ---------------------------------------------------------------- sections
+
+fn write_section(dir: &Path, name: &str, file: &str, payload: &[u8]) -> Result<(u64, u64)> {
+    let crc = checksum64(payload);
+    let mut out = Vec::with_capacity(24 + payload.len());
+    out.extend_from_slice(SECTION_MAGIC);
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(payload);
+    out.extend_from_slice(&crc.to_le_bytes());
+    let path = dir.join(file);
+    let mut f = File::create(&path)
+        .map_err(|e| perr(name, format!("create {}: {e}", path.display())))?;
+    f.write_all(&out).map_err(|e| perr(name, format!("write: {e}")))?;
+    f.sync_data().map_err(|e| perr(name, format!("fsync: {e}")))?;
+    Ok((payload.len() as u64, crc))
+}
+
+fn read_section(
+    dir: &Path,
+    name: &str,
+    file: &str,
+    want_bytes: u64,
+    want_crc: u64,
+) -> Result<Vec<u8>> {
+    let path = dir.join(file);
+    let raw = fs::read(&path)
+        .map_err(|e| perr(name, format!("read {}: {e}", path.display())))?;
+    if raw.len() < 24 || &raw[..8] != SECTION_MAGIC {
+        return Err(perr(name, "bad section magic"));
+    }
+    let len = u64::from_le_bytes(raw[8..16].try_into().unwrap());
+    if raw.len() as u64 != 24 + len {
+        return Err(perr(
+            name,
+            format!("file is {} bytes, header promises {}", raw.len(), 24 + len),
+        ));
+    }
+    let payload = &raw[16..16 + len as usize];
+    let stored = u64::from_le_bytes(raw[16 + len as usize..].try_into().unwrap());
+    let crc = checksum64(payload);
+    if crc != stored {
+        return Err(perr(name, "section checksum mismatch"));
+    }
+    if len != want_bytes || crc != want_crc {
+        return Err(perr(name, "manifest disagrees with section file"));
+    }
+    Ok(payload.to_vec())
+}
+
+// ------------------------------------------------------------------ db.bin
+
+fn encode_db(db: &Database) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_str(&db.schema.to_json().dump());
+    w.put_u32(db.entities.len() as u32);
+    for t in &db.entities {
+        w.put_u32(t.n);
+        w.put_u32(t.cols.len() as u32);
+        for c in &t.cols {
+            w.put_u32s(c);
+        }
+    }
+    w.put_u32(db.rels.len() as u32);
+    for t in &db.rels {
+        w.put_u32s(&t.from);
+        w.put_u32s(&t.to);
+        w.put_u32(t.cols.len() as u32);
+        for c in &t.cols {
+            w.put_u32s(c);
+        }
+    }
+    w.into_bytes()
+}
+
+fn decode_db(payload: &[u8], backend: Backend) -> Result<Database> {
+    let mut r = ByteReader::new(payload, "db");
+    let schema_text = r.get_str()?;
+    let schema_json = Json::parse(&schema_text)
+        .map_err(|e| perr("db", format!("schema json: {e}")))?;
+    let schema = Schema::from_json(&schema_json)
+        .map_err(|e| perr("db", format!("schema: {e}")))?;
+
+    let n_ent = r.get_u32()? as usize;
+    let mut entities = Vec::with_capacity(n_ent);
+    for i in 0..n_ent {
+        let n = r.get_u32()?;
+        let n_cols = r.get_u32()? as usize;
+        let mut cols = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            let c = r.get_u32s()?;
+            if c.len() != n as usize {
+                return Err(perr("db", format!("entity table {i}: ragged column")));
+            }
+            cols.push(c);
+        }
+        entities.push(EntityTable { n, cols });
+    }
+    let n_rel = r.get_u32()? as usize;
+    let mut rels = Vec::with_capacity(n_rel);
+    for i in 0..n_rel {
+        let from = r.get_u32s()?;
+        let to = r.get_u32s()?;
+        if from.len() != to.len() {
+            return Err(perr("db", format!("rel table {i}: from/to length skew")));
+        }
+        let n_cols = r.get_u32()? as usize;
+        let mut cols = Vec::with_capacity(n_cols);
+        for _ in 0..n_cols {
+            let c = r.get_u32s()?;
+            if c.len() != from.len() {
+                return Err(perr("db", format!("rel table {i}: ragged column")));
+            }
+            cols.push(c);
+        }
+        rels.push(RelTable { from, to, cols });
+    }
+    r.finish()?;
+
+    let mut db = Database::empty(schema);
+    db.entities = entities;
+    db.rels = rels;
+    db.set_backend(backend)?; // no indexes yet: records the engine only
+    db.validate().map_err(|e| perr("db", e.to_string()))?;
+    Ok(db)
+}
+
+// ----------------------------------------------------------------- csr.bin
+
+fn encode_half(w: &mut ByteWriter, h: &CsrHalf) {
+    w.put_u32s(&h.offsets);
+    w.put_u32s(&h.nbr);
+    w.put_u32s(&h.tid);
+}
+
+fn decode_half(r: &mut ByteReader) -> Result<CsrHalf> {
+    Ok(CsrHalf { offsets: r.get_u32s()?, nbr: r.get_u32s()?, tid: r.get_u32s()? })
+}
+
+fn encode_csr(db: &Database) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    w.put_u32(db.rels.len() as u32);
+    for rel in 0..db.rels.len() {
+        let ix = db.index(rel)?;
+        let csr = ix.as_csr().ok_or_else(|| {
+            perr("csr", format!("index {rel} is not CSR ({})", ix.backend().name()))
+        })?;
+        let (fwd, rev) = csr.halves().map_err(|e| perr("csr", e.to_string()))?;
+        encode_half(&mut w, fwd);
+        encode_half(&mut w, rev);
+    }
+    Ok(w.into_bytes())
+}
+
+/// Decode and install CSR indexes onto `db` (whose backend must be CSR).
+fn decode_csr_into(payload: &[u8], db: &mut Database) -> Result<()> {
+    let mut r = ByteReader::new(payload, "csr");
+    let n = r.get_u32()? as usize;
+    if n != db.rels.len() {
+        return Err(perr(
+            "csr",
+            format!("{n} indexes for {} relationship tables", db.rels.len()),
+        ));
+    }
+    let mut ixs = Vec::with_capacity(n);
+    for rel in 0..n {
+        let fwd = decode_half(&mut r)?;
+        let rev = decode_half(&mut r)?;
+        let ix = CsrIndex::from_halves(fwd, rev)
+            .map_err(|e| perr("csr", format!("index {rel}: {e}")))?;
+        ixs.push(RelIx::Csr(ix));
+    }
+    r.finish()?;
+    db.install_indexes(ixs).map_err(|e| perr("csr", e.to_string()))
+}
+
+// ---------------------------------------------------------------- plan.bin
+
+fn encode_plan(p: &CountPlan) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u32(p.levels.len() as u32);
+    for l in &p.levels {
+        w.put_u8(match l {
+            PlanLevel::OnDemand => 0,
+            PlanLevel::Positive => 1,
+            PlanLevel::Complete => 2,
+        });
+    }
+    w.put_u8(p.marginals as u8);
+    w.put_u64(p.marginal_bytes);
+    match p.budget {
+        Some(b) => {
+            w.put_u8(1);
+            w.put_u64(b);
+        }
+        None => {
+            w.put_u8(0);
+            w.put_u64(0);
+        }
+    }
+    w.put_u64(p.est_spent_bytes);
+    w.put_u64(p.est_all_positive_bytes);
+    w.put_u64(p.est_all_complete_bytes);
+    w.put_u64(p.walks);
+    w.put_u32(p.estimates.len() as u32);
+    for e in &p.estimates {
+        w.put_usize(e.point);
+        w.put_f64(e.est_join_rows);
+        w.put_f64(e.est_positive_rows);
+        w.put_u64(e.est_positive_bytes);
+        w.put_f64(e.est_complete_rows);
+        w.put_u64(e.est_complete_bytes);
+        w.put_u64(e.reuse);
+        w.put_u64(e.walks);
+    }
+    w.into_bytes()
+}
+
+fn decode_plan(payload: &[u8]) -> Result<CountPlan> {
+    let mut r = ByteReader::new(payload, "plan");
+    let n = r.get_u32()? as usize;
+    let mut levels = Vec::with_capacity(n.min(payload.len()));
+    for _ in 0..n {
+        levels.push(match r.get_u8()? {
+            0 => PlanLevel::OnDemand,
+            1 => PlanLevel::Positive,
+            2 => PlanLevel::Complete,
+            x => return Err(r.err(format!("bad plan level {x}"))),
+        });
+    }
+    let marginals = r.get_u8()? != 0;
+    let marginal_bytes = r.get_u64()?;
+    let budget = match (r.get_u8()?, r.get_u64()?) {
+        (0, _) => None,
+        (_, b) => Some(b),
+    };
+    let est_spent_bytes = r.get_u64()?;
+    let est_all_positive_bytes = r.get_u64()?;
+    let est_all_complete_bytes = r.get_u64()?;
+    let walks = r.get_u64()?;
+    let n_est = r.get_u32()? as usize;
+    let mut estimates = Vec::with_capacity(n_est.min(payload.len()));
+    for _ in 0..n_est {
+        estimates.push(PointEstimate {
+            point: r.get_usize()?,
+            est_join_rows: r.get_f64()?,
+            est_positive_rows: r.get_f64()?,
+            est_positive_bytes: r.get_u64()?,
+            est_complete_rows: r.get_f64()?,
+            est_complete_bytes: r.get_u64()?,
+            reuse: r.get_u64()?,
+            walks: r.get_u64()?,
+        });
+    }
+    r.finish()?;
+    Ok(CountPlan {
+        levels,
+        marginals,
+        estimates,
+        marginal_bytes,
+        budget,
+        est_spent_bytes,
+        est_all_positive_bytes,
+        est_all_complete_bytes,
+        walks,
+    })
+}
+
+// -------------------------------------------------------------- caches.bin
+
+fn encode_rvar(w: &mut ByteWriter, v: &RVar) {
+    match *v {
+        RVar::EntityAttr { et, attr } => {
+            w.put_u8(0);
+            w.put_usize(et);
+            w.put_usize(attr);
+        }
+        RVar::RelAttr { rel, attr } => {
+            w.put_u8(1);
+            w.put_usize(rel);
+            w.put_usize(attr);
+        }
+        RVar::RelInd { rel } => {
+            w.put_u8(2);
+            w.put_usize(rel);
+            w.put_usize(0);
+        }
+    }
+}
+
+fn decode_rvar(r: &mut ByteReader) -> Result<RVar> {
+    let tag = r.get_u8()?;
+    let a = r.get_usize()?;
+    let b = r.get_usize()?;
+    Ok(match tag {
+        0 => RVar::EntityAttr { et: a, attr: b },
+        1 => RVar::RelAttr { rel: a, attr: b },
+        2 => RVar::RelInd { rel: a },
+        x => return Err(r.err(format!("bad rvar tag {x}"))),
+    })
+}
+
+fn encode_cache(w: &mut ByteWriter, cache: &CtCache) {
+    // sorted entry order (and sorted rows) so identical states always
+    // serialize to identical bytes, whatever the hash-map iteration
+    // order was — save→load→save is byte-stable.
+    let mut entries: Vec<(&CacheKey, _)> = cache.iter().collect();
+    entries.sort_by(|a, b| a.0.cmp(b.0));
+    w.put_u64(entries.len() as u64);
+    for (key, table) in entries {
+        w.put_u32(key.0.len() as u32);
+        for v in &key.0 {
+            encode_rvar(w, v);
+        }
+        w.put_u32(key.1.len() as u32);
+        for &c in &key.1 {
+            w.put_usize(c);
+        }
+        w.put_u32(table.vars.len() as u32);
+        for v in &table.vars {
+            encode_rvar(w, v);
+        }
+        w.put_u32s(&table.dims);
+        w.put_u64(table.n_rows() as u64);
+        let mut rows: Vec<(u128, i128)> = table.iter_keys().collect();
+        rows.sort_unstable();
+        for (k, c) in rows {
+            w.put_u128(k);
+            w.put_i128(c);
+        }
+    }
+}
+
+fn decode_cache(r: &mut ByteReader) -> Result<CtCache> {
+    use crate::ct::cttable::CtTable;
+    let n = r.get_u64()?;
+    let mut cache = CtCache::new();
+    for _ in 0..n {
+        let n_kv = r.get_u32()? as usize;
+        let mut kvars = Vec::with_capacity(n_kv.min(1 << 16));
+        for _ in 0..n_kv {
+            kvars.push(decode_rvar(r)?);
+        }
+        let n_ctx = r.get_u32()? as usize;
+        let mut ctx = Vec::with_capacity(n_ctx.min(1 << 16));
+        for _ in 0..n_ctx {
+            ctx.push(r.get_usize()?);
+        }
+        let n_tv = r.get_u32()? as usize;
+        let mut tvars = Vec::with_capacity(n_tv.min(1 << 16));
+        for _ in 0..n_tv {
+            tvars.push(decode_rvar(r)?);
+        }
+        let dims = r.get_u32s()?;
+        let mut table = CtTable::with_dims(tvars, dims)
+            .map_err(|e| r.err(format!("ct table: {e}")))?;
+        let n_rows = r.get_u64()?;
+        for _ in 0..n_rows {
+            let k = r.get_u128()?;
+            let c = r.get_i128()?;
+            table.add_key(k, c).map_err(|e| r.err(format!("ct row: {e}")))?;
+        }
+        cache.insert((kvars, ctx), table);
+    }
+    Ok(cache)
+}
+
+fn encode_caches(positive: &CtCache, complete: &CtCache) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    encode_cache(&mut w, positive);
+    encode_cache(&mut w, complete);
+    w.into_bytes()
+}
+
+fn decode_caches(payload: &[u8]) -> Result<(CtCache, CtCache)> {
+    let mut r = ByteReader::new(payload, "caches");
+    let positive = decode_cache(&mut r)?;
+    let complete = decode_cache(&mut r)?;
+    r.finish()?;
+    Ok((positive, complete))
+}
+
+// ---------------------------------------------------------------- manifest
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex(j: &Json, field: &str) -> Result<u64> {
+    let s = j
+        .req(field)
+        .and_then(|x| {
+            x.as_str().ok_or_else(|| Error::Manifest(format!("{field}: not a string")))
+        })
+        .map_err(|e| perr("manifest", e.to_string()))?;
+    u64::from_str_radix(s, 16)
+        .map_err(|_| perr("manifest", format!("{field}: bad hex {s:?}")))
+}
+
+fn config_json(cfg: &MaintainConfig) -> Json {
+    Json::obj(vec![
+        ("max_chain_length", Json::num(cfg.max_chain_length as f64)),
+        (
+            "mem_budget",
+            match cfg.mem_budget {
+                Some(b) => Json::num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        (
+            "estimator",
+            Json::obj(vec![
+                ("seed", Json::str(hex(cfg.estimator.seed))),
+                ("walks", Json::num(cfg.estimator.walks as f64)),
+                (
+                    "exhaustive_limit",
+                    Json::num(cfg.estimator.exhaustive_limit as f64),
+                ),
+            ]),
+        ),
+        ("workers", Json::num(cfg.workers as f64)),
+        ("mode", Json::str(cfg.mode.name())),
+        ("verify", Json::Bool(cfg.verify)),
+    ])
+}
+
+fn config_from_json(j: &Json) -> Result<MaintainConfig> {
+    let m = |e: Error| perr("manifest", e.to_string());
+    let get_usize = |field: &str| -> Result<usize> {
+        j.req(field)
+            .and_then(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::Manifest(format!("{field}: not an integer")))
+            })
+            .map_err(m)
+    };
+    let est = j.req("estimator").map_err(m)?;
+    let mode_s = j
+        .req("mode")
+        .and_then(|x| {
+            x.as_str().ok_or_else(|| Error::Manifest("mode: not a string".into()))
+        })
+        .map_err(m)?;
+    let mode = MaintenanceMode::parse(mode_s)
+        .ok_or_else(|| perr("manifest", format!("bad mode {mode_s:?}")))?;
+    Ok(MaintainConfig {
+        max_chain_length: get_usize("max_chain_length")?,
+        mem_budget: match j.req("mem_budget").map_err(m)? {
+            Json::Null => None,
+            x => Some(x.as_f64().ok_or_else(|| {
+                perr("manifest", "mem_budget: not a number")
+            })? as u64),
+        },
+        estimator: EstimatorConfig {
+            seed: parse_hex(est, "seed")?,
+            walks: est
+                .req("walks")
+                .and_then(|x| {
+                    x.as_usize()
+                        .ok_or_else(|| Error::Manifest("walks: not an integer".into()))
+                })
+                .map_err(m)? as u32,
+            exhaustive_limit: est
+                .req("exhaustive_limit")
+                .and_then(|x| {
+                    x.as_usize().ok_or_else(|| {
+                        Error::Manifest("exhaustive_limit: not an integer".into())
+                    })
+                })
+                .map_err(m)? as u64,
+        },
+        workers: get_usize("workers")?,
+        mode,
+        verify: matches!(j.req("verify").map_err(m)?, Json::Bool(true)),
+    })
+}
+
+// ------------------------------------------------------------- save / load
+
+/// Serialize `m` (compacted: [`MaintainedCounts::compact_indexes`] has
+/// run) into `dir`, which must exist and be empty-ish (files are
+/// overwritten).  The caller owns atomicity (write to a temp dir, then
+/// rename) — see [`crate::persist::DataDir::save_snapshot`].
+pub fn write_snapshot(dir: &Path, m: &MaintainedCounts, epoch: u64) -> Result<()> {
+    let db = m.db();
+    let backend = db.backend();
+    let (positive, complete) = m.caches();
+
+    let mut sections: Vec<(&str, &str, Vec<u8>)> = vec![
+        ("db", "db.bin", encode_db(db)),
+        ("plan", "plan.bin", encode_plan(m.plan())),
+        ("caches", "caches.bin", encode_caches(positive, complete)),
+    ];
+    if backend == Backend::Csr {
+        sections.insert(1, ("csr", "csr.bin", encode_csr(db)?));
+    }
+
+    let mut section_json = Vec::new();
+    for (name, file, payload) in &sections {
+        let (bytes, crc) = write_section(dir, name, file, payload)?;
+        section_json.push((
+            *name,
+            Json::obj(vec![
+                ("file", Json::str(*file)),
+                ("bytes", Json::num(bytes as f64)),
+                ("checksum", Json::str(hex(crc))),
+            ]),
+        ));
+    }
+
+    let manifest = Json::obj(vec![
+        ("format", Json::str(FORMAT)),
+        ("epoch", Json::num(epoch as f64)),
+        ("backend", Json::str(backend.name())),
+        ("cache_digest", Json::str(hex(m.digest()))),
+        ("config", config_json(m.config())),
+        ("sections", Json::Obj(
+            section_json.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )),
+    ]);
+    let path = dir.join(MANIFEST_FILE);
+    let mut f = File::create(&path)
+        .map_err(|e| perr("manifest", format!("create {}: {e}", path.display())))?;
+    f.write_all(manifest.dump().as_bytes())
+        .map_err(|e| perr("manifest", format!("write: {e}")))?;
+    f.sync_data().map_err(|e| perr("manifest", format!("fsync: {e}")))?;
+    Ok(())
+}
+
+struct Manifest {
+    epoch: u64,
+    backend: Backend,
+    cache_digest: u64,
+    cfg: MaintainConfig,
+    /// `(section, file, bytes, checksum)`.
+    sections: Vec<(String, String, u64, u64)>,
+}
+
+fn read_manifest(dir: &Path) -> Result<Manifest> {
+    let path = dir.join(MANIFEST_FILE);
+    let text = fs::read_to_string(&path)
+        .map_err(|e| perr("manifest", format!("read {}: {e}", path.display())))?;
+    let j = Json::parse(&text).map_err(|e| perr("manifest", e.to_string()))?;
+    let m = |e: Error| perr("manifest", e.to_string());
+    let format = j
+        .req("format")
+        .and_then(|x| {
+            x.as_str().ok_or_else(|| Error::Manifest("format: not a string".into()))
+        })
+        .map_err(m)?;
+    if format != FORMAT {
+        return Err(perr("manifest", format!("unsupported format {format:?}")));
+    }
+    let epoch = j
+        .req("epoch")
+        .and_then(|x| {
+            x.as_usize().ok_or_else(|| Error::Manifest("epoch: not an integer".into()))
+        })
+        .map_err(m)? as u64;
+    let backend_s = j
+        .req("backend")
+        .and_then(|x| {
+            x.as_str().ok_or_else(|| Error::Manifest("backend: not a string".into()))
+        })
+        .map_err(m)?;
+    let backend = Backend::parse(backend_s)
+        .ok_or_else(|| perr("manifest", format!("bad backend {backend_s:?}")))?;
+    let cache_digest = parse_hex(&j, "cache_digest")?;
+    let cfg = config_from_json(j.req("config").map_err(m)?)?;
+    let sec_obj = j
+        .req("sections")
+        .and_then(|x| {
+            x.as_obj().ok_or_else(|| Error::Manifest("sections: not an object".into()))
+        })
+        .map_err(m)?;
+    let mut sections = Vec::new();
+    for (name, s) in sec_obj {
+        let file = s
+            .req("file")
+            .and_then(|x| {
+                x.as_str().ok_or_else(|| Error::Manifest("file: not a string".into()))
+            })
+            .map_err(m)?
+            .to_string();
+        let bytes = s
+            .req("bytes")
+            .and_then(|x| {
+                x.as_usize()
+                    .ok_or_else(|| Error::Manifest("bytes: not an integer".into()))
+            })
+            .map_err(m)? as u64;
+        let crc = parse_hex(s, "checksum")?;
+        sections.push((name.clone(), file, bytes, crc));
+    }
+    Ok(Manifest { epoch, backend, cache_digest, cfg, sections })
+}
+
+impl Manifest {
+    fn section(&self, name: &str) -> Result<&(String, String, u64, u64)> {
+        self.sections
+            .iter()
+            .find(|(n, ..)| n == name)
+            .ok_or_else(|| perr("manifest", format!("missing section {name:?}")))
+    }
+}
+
+/// Load and fully verify a snapshot directory: every section's length
+/// and checksum (against both its own header and the manifest), then
+/// the reloaded caches' digest against the manifest `cache_digest`.
+pub fn load_snapshot(dir: &Path) -> Result<SnapshotState> {
+    let man = read_manifest(dir)?;
+
+    let (_, file, bytes, crc) = man.section("db")?;
+    let db_payload = read_section(dir, "db", file, *bytes, *crc)?;
+    let mut db = decode_db(&db_payload, man.backend)?;
+
+    match man.backend {
+        Backend::Csr => {
+            let (_, file, bytes, crc) = man.section("csr")?;
+            let payload = read_section(dir, "csr", file, *bytes, *crc)?;
+            decode_csr_into(&payload, &mut db)?;
+        }
+        Backend::Hash => {
+            db.build_indexes().map_err(|e| perr("db", e.to_string()))?;
+        }
+    }
+
+    let (_, file, bytes, crc) = man.section("plan")?;
+    let plan = decode_plan(&read_section(dir, "plan", file, *bytes, *crc)?)?;
+
+    let (_, file, bytes, crc) = man.section("caches")?;
+    let (positive, complete) =
+        decode_caches(&read_section(dir, "caches", file, *bytes, *crc)?)?;
+
+    let digest = digest_caches(&[(0u8, &positive), (1u8, &complete)]);
+    if digest != man.cache_digest {
+        return Err(perr(
+            "digest",
+            format!(
+                "reloaded caches digest {:016x} != manifest cache_digest {:016x}",
+                digest, man.cache_digest
+            ),
+        ));
+    }
+
+    Ok(SnapshotState {
+        epoch: man.epoch,
+        db,
+        cfg: man.cfg,
+        plan,
+        positive,
+        complete,
+        cache_digest: digest,
+    })
+}
+
+/// Verify by loading (so a "valid" snapshot is one that reproduces its
+/// own digest), returning a summary instead of the state.
+pub fn verify_snapshot(dir: &Path) -> Result<SnapshotInfo> {
+    let man = read_manifest(dir)?;
+    let state = load_snapshot(dir)?;
+    Ok(SnapshotInfo {
+        epoch: state.epoch,
+        backend: state.db.backend(),
+        cache_digest: state.cache_digest,
+        sections: man.sections.iter().map(|(n, _, b, _)| (n.clone(), *b)).collect(),
+    })
+}

@@ -19,7 +19,18 @@
 //! over a worker pool with [`serve_batch`] — each distinct family is
 //! routed to one worker by cache-key hash (the coordinator's post-count
 //! sharding) and results come back in request order.
+//!
+//! With a [`DataDir`] attached ([`ServeEngine::attach_persistence`])
+//! the publish point also becomes the durability point: between a
+//! successful apply and the atomic publish, the batch is appended to
+//! the WAL and `fsync`ed with the post-apply cache digest.  A failed
+//! apply never reaches the log; a failed append aborts the publish (the
+//! old generation keeps serving); and every published epoch is durable
+//! before any reader can observe it — so crash recovery (snapshot +
+//! WAL-suffix replay, see [`crate::persist`]) always lands exactly on
+//! the last published generation.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::coordinator::shard::shard_of;
@@ -29,14 +40,26 @@ use crate::db::catalog::Database;
 use crate::delta::{DeltaBatch, DeltaReport, MaintainConfig, MaintainedCounts};
 use crate::error::Result;
 use crate::meta::rvar::RVar;
+use crate::persist::{DataDir, WalWriter};
 use crate::serve::snapshot::{Generation, SnapshotStore};
 use crate::strategies::cache::CtCache;
 use crate::strategies::traits::FamilyRequest;
+
+/// Durability sidecar: the data directory, the open WAL append handle,
+/// and the periodic-snapshot counter.
+struct PersistState {
+    dir: DataDir,
+    wal: WalWriter,
+    /// Snapshot every N published batches (0 = only on shutdown).
+    every: u64,
+    since_snapshot: u64,
+}
 
 /// Writer half of the serving layer (see the module docs).
 pub struct ServeEngine {
     writer: MaintainedCounts,
     store: Arc<SnapshotStore>,
+    persist: Option<PersistState>,
 }
 
 impl ServeEngine {
@@ -44,14 +67,41 @@ impl ServeEngine {
     pub fn build(db: Database, cfg: MaintainConfig) -> Result<ServeEngine> {
         let writer = MaintainedCounts::build(db, cfg)?;
         let store = Arc::new(SnapshotStore::new(writer.snapshot(0)?));
-        Ok(ServeEngine { writer, store })
+        Ok(ServeEngine { writer, store, persist: None })
     }
 
     /// Wrap an already-built maintained state (publishes it as
     /// generation 0).
     pub fn from_maintained(writer: MaintainedCounts) -> Result<ServeEngine> {
-        let store = Arc::new(SnapshotStore::new(writer.snapshot(0)?));
-        Ok(ServeEngine { writer, store })
+        Self::from_maintained_at(writer, 0)
+    }
+
+    /// Wrap a recovered maintained state, publishing it as generation
+    /// `epoch` — the recovery path: epochs keep counting from where the
+    /// pre-crash process stopped, so WAL epochs stay strictly
+    /// increasing across restarts.
+    pub fn from_maintained_at(writer: MaintainedCounts, epoch: u64) -> Result<ServeEngine> {
+        let store = Arc::new(SnapshotStore::new(writer.snapshot(epoch)?));
+        Ok(ServeEngine { writer, store, persist: None })
+    }
+
+    /// Attach a data directory: open (truncating any torn tail) the
+    /// WAL for append, and write an initial snapshot if the directory
+    /// has none — from here on every published batch is durable.
+    /// `every` > 0 also snapshots after that many published batches.
+    pub fn attach_persistence(&mut self, dir: DataDir, every: u64) -> Result<()> {
+        let wal = WalWriter::open(&dir.wal_path())?;
+        let mut state = PersistState { dir, wal, every, since_snapshot: 0 };
+        if !state.dir.has_snapshots()? {
+            state.dir.save_snapshot(&mut self.writer, self.store.epoch())?;
+        }
+        self.persist = Some(state);
+        Ok(())
+    }
+
+    /// Whether a data directory is attached.
+    pub fn is_durable(&self) -> bool {
+        self.persist.is_some()
     }
 
     /// Reader handle: clone freely, hand to any thread.
@@ -81,14 +131,43 @@ impl ServeEngine {
     /// writer keeps the last-good state, the store keeps serving the
     /// current generation, and the error is returned to the caller —
     /// readers are never poisoned and never see a partial batch.
+    ///
+    /// With persistence attached the batch is WAL-appended (and
+    /// `fsync`ed) with its post-apply digest *before* the publish: a
+    /// failed apply never reaches the log, a failed append aborts the
+    /// publish, and every epoch a reader can see is already durable.
     pub fn apply_publish(&mut self, batch: &DeltaBatch) -> Result<(u64, DeltaReport)> {
         let mut next = self.writer.clone();
         let report = next.apply(batch)?; // Err: `next` (poisoned) is dropped
         let epoch = self.store.epoch() + 1;
         let snapshot = next.snapshot(epoch)?;
+        if let Some(p) = &mut self.persist {
+            p.wal.append(epoch, next.digest(), batch)?;
+        }
         self.writer = next;
         self.store.publish(snapshot);
+        let snapshot_due = match &mut self.persist {
+            Some(p) => {
+                p.since_snapshot += 1;
+                p.every > 0 && p.since_snapshot >= p.every
+            }
+            None => false,
+        };
+        if snapshot_due {
+            self.persist_snapshot()?;
+        }
         Ok((epoch, report))
+    }
+
+    /// Write a full snapshot of the current generation to the attached
+    /// data directory (no-op when none is attached).  Returns the
+    /// snapshot path.  Called periodically from `apply_publish` and on
+    /// graceful shutdown by the server loop.
+    pub fn persist_snapshot(&mut self) -> Result<Option<PathBuf>> {
+        let Some(p) = &mut self.persist else { return Ok(None) };
+        let path = p.dir.save_snapshot(&mut self.writer, self.store.epoch())?;
+        p.since_snapshot = 0;
+        Ok(Some(path))
     }
 }
 
@@ -186,6 +265,42 @@ mod tests {
             store.load().ct_for_family(&family(), &[0, 1]).unwrap().digest(),
             good.digest()
         );
+    }
+
+    #[test]
+    fn attached_engine_logs_every_publish_and_snapshots_periodically() {
+        let root = std::env::temp_dir().join(format!(
+            "relcount-engine-persist-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let dd = DataDir::open(&root).unwrap();
+        let mut e =
+            ServeEngine::build(university_db(), MaintainConfig::default()).unwrap();
+        e.attach_persistence(dd, 2).unwrap();
+        assert!(e.is_durable());
+        // attach wrote the initial (epoch 0) snapshot
+        let dd = DataDir::open(&root).unwrap();
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![0]);
+
+        for i in 0..3u64 {
+            let b = crate::datagen::churn::churn_batch(e.db(), 0.05, 0xBEEF + i);
+            e.apply_publish(&b).unwrap();
+        }
+        // every publish hit the WAL; the every=2 policy snapshotted at 2
+        let recs = crate::persist::read_records(&dd.wal_path()).unwrap();
+        assert_eq!(
+            recs.iter().map(|r| r.epoch).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        assert_eq!(recs.last().unwrap().digest, e.digest());
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![0, 2]);
+
+        // recovery from snapshot 2 + WAL record 3 lands on the writer
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 3);
+        assert_eq!(r.digest(), e.digest());
+        let _ = std::fs::remove_dir_all(&root);
     }
 
     #[test]

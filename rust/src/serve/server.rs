@@ -179,16 +179,26 @@ where
     let feed = opts.feed.clone();
     let pause = opts.delta_pause;
     let mut acc: BTreeMap<u64, GenAccum> = BTreeMap::new();
+    let mut requests = 0u64;
+    let mut errors = 0u64;
 
     let (engine, publishes, publish_failures, session) =
         std::thread::scope(|scope| {
             let delta = scope.spawn(move || drive_deltas(engine, feed, pause));
-            let session = session_loop(&store, input, &mut out, opts, &mut acc);
+            let session = session_loop(
+                &store,
+                input,
+                &mut out,
+                opts,
+                &mut acc,
+                &mut requests,
+                &mut errors,
+            );
             let (engine, publishes, failures) =
                 delta.join().expect("delta writer panicked");
             (engine, publishes, failures, session)
         });
-    let (requests, errors, _shutdown) = session?;
+    session?;
 
     let rows = acc
         .into_iter()
@@ -207,7 +217,10 @@ where
 
 /// The delta writer: apply-and-publish every batch of the feed,
 /// surviving failures (the stream continues from the last good
-/// generation).  Returns the engine for the final digest.
+/// generation).  Returns the engine for the final digest.  When a data
+/// directory is attached, the quiesced state is snapshotted before
+/// returning — the graceful-shutdown snapshot — so a clean restart
+/// loads the final generation without replaying the whole WAL.
 fn drive_deltas(
     mut engine: ServeEngine,
     feed: DeltaFeed,
@@ -240,25 +253,36 @@ fn drive_deltas(
             }
         }
     }
+    drop(publish);
+    if let Err(e) = engine.persist_snapshot() {
+        // the WAL still holds every batch; recovery replays from the
+        // previous snapshot, so this is reported, not fatal
+        failures.push((usize::MAX, format!("shutdown snapshot: {e}")));
+    }
     (engine, publishes, failures)
 }
 
 /// The dispatch loop of one client session (see the module docs).
+///
+/// `requests`/`errors` are accumulated through the caller's counters —
+/// not returned — so a session that dies mid-stream (write error,
+/// client disconnect) still contributes everything it served before
+/// failing to the [`ServeSummary`].
 fn session_loop<R, W>(
     store: &SnapshotStore,
     input: R,
     out: &mut W,
     opts: &ServeOptions,
     acc: &mut BTreeMap<u64, GenAccum>,
-) -> Result<(u64, u64, bool)>
+    requests: &mut u64,
+    errors: &mut u64,
+) -> Result<bool>
 where
     R: BufRead + Send + 'static,
     W: Write,
 {
     let workers = resolve_workers(opts.workers);
     let batch_max = opts.batch_max.max(1);
-    let mut requests = 0u64;
-    let mut errors = 0u64;
     let mut shutdown = false;
 
     // Detached on purpose: a pump parked in a blocking read must not be
@@ -307,7 +331,7 @@ where
         a.first.get_or_insert(batch_start);
         for (env, resp) in pending.drain(..).zip(responses) {
             let ok = matches!(resp.get("ok"), Some(Json::Bool(true)));
-            requests += 1;
+            *requests += 1;
             a.requests += 1;
             match &env.req {
                 Ok(ServeRequest::Count { .. }) => a.count_requests += 1,
@@ -316,7 +340,7 @@ where
                 _ => {}
             }
             if !ok {
-                errors += 1;
+                *errors += 1;
                 a.errors += 1;
             }
             let lat = env.t0.elapsed();
@@ -330,7 +354,7 @@ where
             break; // stop reading; the pump exits on its dead channel
         }
     }
-    Ok((requests, errors, shutdown))
+    Ok(shutdown)
 }
 
 /// TCP mode: serve sessions from `listener` sequentially (one client at
@@ -357,16 +381,24 @@ pub fn serve_listener(
                 loop {
                     let (stream, peer) = listener.accept()?;
                     // one client's I/O failure (disconnect mid-response,
-                    // broken clone) ends that session, not the server
-                    let ended = (|| -> Result<(u64, u64, bool)> {
+                    // broken clone) ends that session, not the server —
+                    // and the counters live outside the session, so
+                    // whatever it served before failing still counts
+                    let ended = (|| -> Result<bool> {
                         let reader = std::io::BufReader::new(stream.try_clone()?);
                         let mut writer = stream;
-                        session_loop(&store, reader, &mut writer, opts, &mut acc)
+                        session_loop(
+                            &store,
+                            reader,
+                            &mut writer,
+                            opts,
+                            &mut acc,
+                            &mut requests,
+                            &mut errors,
+                        )
                     })();
                     match ended {
-                        Ok((r, e, shutdown)) => {
-                            requests += r;
-                            errors += e;
+                        Ok(shutdown) => {
                             if shutdown {
                                 return Ok(());
                             }
@@ -623,6 +655,69 @@ mod tests {
             let j = Json::parse(line).unwrap();
             assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
         }
+    }
+
+    /// Accepts `limit` full response lines, then fails — a
+    /// deterministic stand-in for a client that disconnects
+    /// mid-response.
+    struct FailingWriter {
+        lines: usize,
+        limit: usize,
+    }
+
+    impl Write for FailingWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.lines >= self.limit {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "client gone",
+                ));
+            }
+            self.lines += buf.iter().filter(|&&b| b == b'\n').count();
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn failed_session_still_contributes_its_counters() {
+        // PR 5 review finding: a session that died mid-stream lost its
+        // (requests, errors) from the summary.  The counters now live
+        // with the caller, so everything answered before the failure
+        // survives the error return.
+        let e = engine();
+        let store = e.store();
+        let input = format!(
+            "{}\nnot json\n{}\n{}\n",
+            ServeRequest::Stats { id: 1 }.to_json().dump(),
+            ServeRequest::Stats { id: 2 }.to_json().dump(),
+            ServeRequest::Stats { id: 3 }.to_json().dump(),
+        );
+        let opts = ServeOptions {
+            database: "uw".into(),
+            batch_max: 1, // one response per dispatch: the failure point is exact
+            ..Default::default()
+        };
+        let mut acc = BTreeMap::new();
+        let mut requests = 0u64;
+        let mut errors = 0u64;
+        let mut out = FailingWriter { lines: 0, limit: 2 };
+        let r = session_loop(
+            &store,
+            std::io::Cursor::new(input),
+            &mut out,
+            &opts,
+            &mut acc,
+            &mut requests,
+            &mut errors,
+        );
+        assert!(r.is_err(), "third response write must fail the session");
+        // everything answered before the broken pipe is retained: the
+        // ok stats, the parse error, and the response that hit the pipe
+        assert_eq!(requests, 3);
+        assert_eq!(errors, 1);
     }
 
     #[test]

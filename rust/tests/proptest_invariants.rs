@@ -707,3 +707,127 @@ fn prop_schema_json_roundtrip() {
         assert_eq!(back, schema, "seed {seed}");
     }
 }
+
+// ---------------------------------------------------------------- persist
+
+#[test]
+fn prop_snapshot_save_load_roundtrip_is_identity() {
+    // save -> load must reproduce the exact maintained state (digest,
+    // epoch, serviceability), and re-saving the loaded state must emit
+    // byte-identical section files — the encoding is canonical, so any
+    // state difference would show up as a byte difference
+    use relcount::db::index::Backend;
+    use relcount::persist::{load_snapshot, write_snapshot};
+
+    for seed in 1700..1700 + 12u64 {
+        let mut rng = Rng::new(seed);
+        let mut db = random_db(&mut rng);
+        let backend = if seed % 2 == 0 { Backend::Csr } else { Backend::Hash };
+        db.set_backend(backend).unwrap();
+        let mem_budget = match rng.gen_range(3) {
+            0 => None,          // everything resident
+            1 => Some(0),       // nothing resident: empty caches section
+            _ => Some(1 + rng.gen_u32(1 << 20) as u64),
+        };
+        let cfg = MaintainConfig { mem_budget, ..Default::default() };
+        let mut m = MaintainedCounts::build(db, cfg)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let batch = random_link_batch(&mut rng, m.db(), 5);
+        if !batch.is_empty() {
+            m.apply(&batch).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+        m.compact_indexes();
+
+        let base = std::env::temp_dir()
+            .join(format!("relcount-prop-snap-{}-{seed}", std::process::id()));
+        let (d1, d2) = (base.join("a"), base.join("b"));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&d1).unwrap();
+        std::fs::create_dir_all(&d2).unwrap();
+
+        write_snapshot(&d1, &m, 3).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let state = load_snapshot(&d1).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(state.epoch, 3, "seed {seed}");
+        assert_eq!(state.cache_digest, m.digest(), "seed {seed}");
+        let mut reloaded = state
+            .into_maintained(0)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(reloaded.digest(), m.digest(), "seed {seed}");
+
+        write_snapshot(&d2, &reloaded, 3).unwrap();
+        for f in ["MANIFEST.json", "db.bin", "csr.bin", "plan.bin", "caches.bin"] {
+            let a = d1.join(f);
+            if !a.exists() {
+                assert_ne!(backend, Backend::Csr, "seed {seed}: {f} missing");
+                continue; // csr.bin only exists on the CSR backend
+            }
+            assert_eq!(
+                std::fs::read(&a).unwrap(),
+                std::fs::read(d2.join(f)).unwrap(),
+                "seed {seed}: re-saved {f} is not byte-identical"
+            );
+        }
+
+        // the reloaded state is live: further batches maintain in step
+        let b2 = random_link_batch(&mut rng, m.db(), 4);
+        if !b2.is_empty() {
+            m.apply(&b2).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            reloaded
+                .apply(&b2)
+                .unwrap_or_else(|e| panic!("seed {seed} (reloaded): {e}"));
+            assert_eq!(m.digest(), reloaded.digest(), "seed {seed}: diverged");
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}
+
+#[test]
+fn prop_wal_replay_equals_in_memory_application() {
+    // append -> replay must reproduce the live application batch by
+    // batch (each record's recorded digest matches the replayed state)
+    use relcount::persist::{read_records, WalWriter};
+
+    for seed in 1800..1800 + 12u64 {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let mut live = MaintainedCounts::build(db.clone(), MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        let path = std::env::temp_dir()
+            .join(format!("relcount-prop-wal-{}-{seed}.log", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut w = WalWriter::open(&path).unwrap();
+        let mut epoch = 0u64;
+        for i in 0..4 {
+            let b = random_link_batch(&mut rng, live.db(), 5);
+            if b.is_empty() {
+                continue;
+            }
+            live.apply(&b).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+            epoch += 1;
+            w.append(epoch, live.digest(), &b).unwrap();
+            if i == 1 {
+                // reopen mid-stream: append must continue seamlessly
+                drop(w);
+                w = WalWriter::open(&path).unwrap();
+                assert_eq!(w.last_epoch(), epoch, "seed {seed}");
+            }
+        }
+        drop(w);
+
+        let mut replay = MaintainedCounts::build(db, MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        for rec in read_records(&path).unwrap() {
+            replay
+                .apply(&rec.batch)
+                .unwrap_or_else(|e| panic!("seed {seed} epoch {}: {e}", rec.epoch));
+            assert_eq!(
+                replay.digest(),
+                rec.digest,
+                "seed {seed}: replay diverged at epoch {}",
+                rec.epoch
+            );
+        }
+        assert_eq!(replay.digest(), live.digest(), "seed {seed}");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -86,4 +86,9 @@ echo "== exp serve (scale $SCALE, presets $PRESETS) =="
     --workers "$WORKERS" --churn-frac 0.05 --churn-steps 3 \
     --json "$ROOT/BENCH_serve.json"
 
-echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json and BENCH_serve.json"
+echo "== exp persist (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp persist \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --workers "$WORKERS" --json "$ROOT/BENCH_persist.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json and BENCH_persist.json"
