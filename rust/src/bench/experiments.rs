@@ -14,10 +14,13 @@ use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
 use crate::delta::maintain::{MaintainConfig, MaintainedCounts};
 use crate::delta::policy::MaintenanceMode;
 use crate::error::Result;
+use crate::estimate::quality::{self, QualityMode};
+use crate::estimate::sampler::EstimatorConfig;
+use crate::lattice::Lattice;
 use crate::learn::search::SearchConfig;
 use crate::metrics::report::{
-    ChurnRow, PersistRow, PlannerRow, RunRow, ScalingRow, ServeRow, Table4Row,
-    Table5Row,
+    ChurnRow, EstimatorRow, PersistRow, PlannerRow, RunRow, ScalingRow, ServeRow,
+    Table4Row, Table5Row,
 };
 use crate::serve::{
     enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
@@ -422,6 +425,40 @@ pub fn serve_rows(
     Ok(rows)
 }
 
+/// The estimator quality lab (`relcount exp estimator`,
+/// EXPERIMENTS.md §E15): per preset, sweep every lattice point the
+/// planner estimates under each [`QualityMode`] and report the q-error
+/// distribution (p50/p95/max against oracle counts) plus plan-regret —
+/// see [`crate::estimate::quality`] for the metric definitions.  The
+/// sweep is seeded and byte-deterministic, so `estimator-smoke` in CI
+/// gates the JSON against `scripts/estimator_gates.json`.
+pub fn estimator_rows(cfg: &ExpConfig) -> Result<Vec<EstimatorRow>> {
+    let mut rows = Vec::new();
+    for name in cfg.presets {
+        let gen_cfg = preset(name, cfg.scale, cfg.seed)?;
+        let db = generate(&gen_cfg)?;
+        let lattice = Lattice::build(&db.schema, cfg.search.max_chain_length)?;
+        for mode in QualityMode::ALL {
+            let r =
+                quality::evaluate(&db, &lattice, EstimatorConfig::default(), mode)?;
+            rows.push(EstimatorRow {
+                database: name.to_string(),
+                mode: r.mode.to_string(),
+                points: r.points,
+                q_p50: r.q_p50,
+                q_p95: r.q_p95,
+                q_max: r.q_max,
+                exact_frac: r.exact_frac,
+                summary_hits: r.summary_hits,
+                walks: r.walks,
+                regret_saved_frac: r.regret_saved_frac,
+                bytes_overrun_frac: r.bytes_overrun_frac,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// The restart-latency experiment (`relcount exp persist`,
 /// EXPERIMENTS.md §E14): per preset, build the maintained-count state,
 /// churn it so the snapshot is not the trivial initial generation, then
@@ -645,6 +682,30 @@ mod tests {
         assert!(r.cold_build > Duration::ZERO);
         assert!(r.speedup > 0.0);
         assert_eq!(r.workers, 1);
+    }
+
+    #[test]
+    fn estimator_rows_cover_modes_deterministically() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = estimator_rows(&cfg).unwrap();
+        // 1 preset x 3 quality modes, in QualityMode::ALL order
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].mode, "default");
+        assert_eq!(rows[1].mode, "sampled");
+        assert_eq!(rows[2].mode, "summary");
+        for r in &rows {
+            assert!(r.points > 0, "{r:?}");
+            assert!(r.q_max >= r.q_p95 && r.q_p95 >= r.q_p50 && r.q_p50 >= 1.0);
+            assert!((0.0..=1.0).contains(&r.regret_saved_frac));
+            assert!(r.bytes_overrun_frac >= 0.0);
+        }
+        assert_eq!(rows[2].walks, 0, "summary mode must not sample");
+        let again = estimator_rows(&cfg).unwrap();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.q_p50, b.q_p50);
+            assert_eq!(a.q_max, b.q_max);
+            assert_eq!(a.regret_saved_frac, b.regret_saved_frac);
+        }
     }
 
     #[test]

@@ -48,6 +48,7 @@ use crate::delta::policy::{DeltaPolicy, MaintenanceDecision, MaintenanceMode};
 use crate::error::{Error, Result};
 use crate::estimate::plan::CountPlan;
 use crate::estimate::sampler::EstimatorConfig;
+use crate::estimate::summary::SummaryStats;
 use crate::lattice::Lattice;
 use crate::learn::search::{learn, LearnedModel, SearchConfig};
 use crate::meta::extract::vars_for_entity;
@@ -252,6 +253,12 @@ pub struct MaintainedCounts {
     /// Per-point cost estimates, computed once (per-op sharding reuses
     /// them instead of rebuilding the vector on every mutation).
     point_costs: Vec<u64>,
+    /// First-tier estimator summaries (degree histograms + selectivity
+    /// counts), maintained per-op alongside the tables so the
+    /// [`DeltaPolicy`] cost model can answer in O(1).  Derived state:
+    /// excluded from [`MaintainedCounts::digest`] and rebuilt from the
+    /// tables on restore.
+    summary: SummaryStats,
     /// Cumulative query counters (build + maintenance + serving).
     join_stats: JoinStats,
     /// Set when a batch failed mid-application: the database holds the
@@ -274,6 +281,7 @@ impl MaintainedCounts {
         let ctx = LatticeCtx::build(&db, cfg.max_chain_length, &mut timer)?;
         let plan = CountPlan::build(&db, &ctx.lattice, cfg.estimator, cfg.mem_budget)?;
         let point_costs = ctx.lattice.point_costs();
+        let summary = SummaryStats::build(&db);
         let mut m = MaintainedCounts {
             db,
             ctx,
@@ -282,6 +290,7 @@ impl MaintainedCounts {
             positive: CtCache::new(),
             complete: CtCache::new(),
             point_costs,
+            summary,
             join_stats: JoinStats::default(),
             poisoned: false,
         };
@@ -328,6 +337,7 @@ impl MaintainedCounts {
             });
         }
         let point_costs = ctx.lattice.point_costs();
+        let summary = SummaryStats::build(&db);
         Ok(MaintainedCounts {
             db,
             ctx,
@@ -336,6 +346,7 @@ impl MaintainedCounts {
             positive,
             complete,
             point_costs,
+            summary,
             join_stats: JoinStats::default(),
             poisoned: false,
         })
@@ -358,6 +369,13 @@ impl MaintainedCounts {
     /// snapshot serialization.
     pub fn caches(&self) -> (&CtCache, &CtCache) {
         (&self.positive, &self.complete)
+    }
+
+    /// The incrementally-maintained first-tier estimator summaries.
+    /// Invariant (proptested): always equal to
+    /// [`SummaryStats::build`] on the current tables.
+    pub fn summary(&self) -> &SummaryStats {
+        &self.summary
     }
 
     /// Merge any pending CSR overlay into the base runs (no-op when
@@ -426,6 +444,7 @@ impl MaintainedCounts {
             &self.ctx.lattice,
             &self.plan,
             self.cfg.estimator,
+            Some(&self.summary),
             batch,
             self.cfg.mode,
         )?;
@@ -444,6 +463,7 @@ impl MaintainedCounts {
             match op {
                 DeltaOp::InsertLink { rel, from, to, values } => {
                     let tid = self.db.insert_link(*rel, *from, *to, values)?;
+                    self.summary.insert_link(*rel, *from, *to, values);
                     self.link_delta(*rel, tid, 1, &stale, &mut delta_points)?;
                     report.link_inserts += 1;
                 }
@@ -459,12 +479,14 @@ impl MaintainedCounts {
                         })?;
                     // deltas first, while the tuple still exists
                     self.link_delta(*rel, tid, -1, &stale, &mut delta_points)?;
-                    self.db.delete_link(*rel, *from, *to)?;
+                    let values = self.db.delete_link(*rel, *from, *to)?;
+                    self.summary.delete_link(*rel, *from, *to, &values);
                     report.link_deletes += 1;
                 }
                 DeltaOp::InsertEntity { et, values } => {
                     self.entity_insert_delta(*et, values, &mut stale, &mut delta_points)?;
                     self.db.insert_entity(*et, values)?;
+                    self.summary.insert_entity(*et, values);
                     report.entity_inserts += 1;
                 }
             }
@@ -980,6 +1002,20 @@ mod tests {
         a.apply(&batch).unwrap();
         b.apply(&batch).unwrap();
         assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn summary_tracks_tables_through_batches() {
+        let db = university_db();
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default()).unwrap();
+        assert_eq!(*m.summary(), SummaryStats::build(m.db()));
+        let batch = DeltaBatch::new(vec![
+            DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 },
+            DeltaOp::InsertLink { rel: 0, from: 11, to: 0, values: vec![2, 1] },
+            DeltaOp::InsertEntity { et: 1, values: vec![2] },
+        ]);
+        m.apply(&batch).unwrap();
+        assert_eq!(*m.summary(), SummaryStats::build(m.db()));
     }
 
     #[test]

@@ -21,6 +21,7 @@ use crate::delta::batch::DeltaBatch;
 use crate::error::Result;
 use crate::estimate::plan::CountPlan;
 use crate::estimate::sampler::{EstimatorConfig, JoinSampler};
+use crate::estimate::summary::SummaryStats;
 use crate::lattice::Lattice;
 
 /// How a batch maintains one resident lattice point.
@@ -79,11 +80,19 @@ pub struct DeltaPolicy {
 
 impl DeltaPolicy {
     /// Decide every point for `batch` under `mode`.
+    ///
+    /// `summary` is the incrementally-maintained first-tier estimator
+    /// (see [`crate::estimate::summary`]); when present and
+    /// `cfg.summary_bound > 0` the Auto cost model answers cheap chains
+    /// from it in O(1) instead of sampling — estimation sits on the
+    /// serve hot path, so every avoided walk is throughput.  At bound 0
+    /// the decisions are bit-identical with or without a summary.
     pub fn decide(
         db: &Database,
         lattice: &Lattice,
         plan: &CountPlan,
         cfg: EstimatorConfig,
+        summary: Option<&SummaryStats>,
         batch: &DeltaBatch,
         mode: MaintenanceMode,
     ) -> Result<DeltaPolicy> {
@@ -105,7 +114,7 @@ impl DeltaPolicy {
                         continue;
                     }
                     let p = &lattice.points[id];
-                    let est = sampler.chain_cardinality(&p.rels)?;
+                    let est = sampler.chain_cardinality_with(&p.rels, summary)?;
                     let ops: u64 = p.rels.iter().map(|&r| batch.link_ops_on(r)).sum();
                     // rows visited per bound tuple ~ join rows / rel size
                     let rel_rows: f64 = p
@@ -169,6 +178,7 @@ mod tests {
             &lattice,
             &plan,
             EstimatorConfig::default(),
+            None,
             &one,
             MaintenanceMode::Auto,
         )
@@ -185,6 +195,7 @@ mod tests {
             &lattice,
             &plan,
             EstimatorConfig::default(),
+            None,
             &heavy,
             MaintenanceMode::Auto,
         )
@@ -201,6 +212,7 @@ mod tests {
             &lattice,
             &plan,
             EstimatorConfig::default(),
+            None,
             &b,
             MaintenanceMode::DeltaOnly,
         )
@@ -211,6 +223,7 @@ mod tests {
             &lattice,
             &plan,
             EstimatorConfig::default(),
+            None,
             &b,
             MaintenanceMode::RecountOnly,
         )

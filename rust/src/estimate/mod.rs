@@ -14,19 +14,34 @@
 //!   join-chain cardinality estimates with declared error bounds, seeded
 //!   via [`crate::util::rng::Rng`] for bit-reproducible plans.  Chains
 //!   cheap enough to enumerate outright are counted exactly.
+//! - [`summary`] — the O(1) first tier: per-relationship degree
+//!   histograms and per-attribute-value selectivity counts, maintained
+//!   incrementally by the delta path.  The sampler consults it first and
+//!   refines by walking only when the summary's declared band is wider
+//!   than [`sampler::EstimatorConfig::summary_bound`] allows; at bound 0
+//!   (the default) the tier is off and plans are bit-identical to the
+//!   sampler-only path.
 //! - [`plan`] — the [`plan::CountPlan`]: per-lattice-point estimates of
 //!   join cost, ct-table rows and resident bytes, folded into a greedy
 //!   knapsack fill of an explicit `--mem-budget`.  Each point is planned
 //!   at one of three levels (on-demand / positive pre-count / complete
 //!   pre-count), spanning the whole ONDEMAND → HYBRID → PRECOUNT
 //!   spectrum from a single strategy.
+//! - [`quality`] — the estimator lab: q-error distributions and
+//!   plan-regret against oracle counts for every lattice point, per
+//!   preset (`relcount exp estimator`, `BENCH_estimator.json`, gated by
+//!   CI's `estimator-smoke`).
 //!
 //! Estimation never touches counting correctness: the ADAPTIVE strategy
 //! (`strategies::adaptive`) produces bit-identical ct-tables at every
 //! plan — estimates only decide *where* counts are computed.
 
 pub mod plan;
+pub mod quality;
 pub mod sampler;
+pub mod summary;
 
 pub use plan::{CountPlan, PlanLevel, PointEstimate};
+pub use quality::{QualityMode, QualityReport};
 pub use sampler::{Estimate, EstimatorConfig, JoinSampler};
+pub use summary::SummaryStats;

@@ -32,6 +32,7 @@
 use crate::db::catalog::Database;
 use crate::error::Result;
 use crate::estimate::sampler::{EstimatorConfig, JoinSampler};
+use crate::estimate::summary::SummaryStats;
 use crate::lattice::Lattice;
 use crate::meta::rvar::RVar;
 
@@ -106,6 +107,12 @@ impl CountPlan {
         budget: Option<u64>,
     ) -> Result<CountPlan> {
         let sampler = JoinSampler::new(db, cfg);
+        // First-tier summary statistics, consulted ahead of sampling
+        // when a nonzero summary_bound enables the tier (at 0 the plan
+        // is a pure function of the sampler, bit-identical to builds
+        // that never constructed a summary).
+        let summary =
+            if cfg.summary_bound > 0.0 { Some(SummaryStats::build(db)) } else { None };
         let schema = &db.schema;
 
         // Entity marginals: one ct-table per entity type.
@@ -119,7 +126,7 @@ impl CountPlan {
         let mut estimates = Vec::with_capacity(lattice.len());
         let mut walks = 0u64;
         for p in &lattice.points {
-            let join = sampler.chain_cardinality(&p.rels)?;
+            let join = sampler.chain_cardinality_with(&p.rels, summary.as_ref())?;
             walks += join.walks;
 
             // Positive table: one row per distinct attribute combination
@@ -349,6 +356,35 @@ mod tests {
         let b = plan_with(Some(10_000));
         assert_eq!(a.levels, b.levels);
         assert_eq!(a.est_spent_bytes, b.est_spent_bytes);
+    }
+
+    #[test]
+    fn summary_tier_plans_are_deterministic_and_valid() {
+        let db = university_db();
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        let cfg = EstimatorConfig {
+            exhaustive_limit: 0,
+            summary_bound: f64::INFINITY,
+            ..Default::default()
+        };
+        let a = CountPlan::build(&db, &lattice, cfg, Some(10_000)).unwrap();
+        let b = CountPlan::build(&db, &lattice, cfg, Some(10_000)).unwrap();
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(a.est_spent_bytes, b.est_spent_bytes);
+        // the summary answered everything: no walks consumed
+        assert_eq!(a.walks, 0);
+        // bound 0 never consults the summary: identical to the default
+        // config's (sampler-only) plan
+        let c = CountPlan::build(
+            &db,
+            &lattice,
+            EstimatorConfig { summary_bound: 0.0, ..Default::default() },
+            Some(10_000),
+        )
+        .unwrap();
+        let d = plan_with(Some(10_000));
+        assert_eq!(c.levels, d.levels);
+        assert_eq!(c.est_spent_bytes, d.est_spent_bytes);
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Estimator quality lab: q-error distributions and plan-regret.
+//!
+//! The ADAPTIVE planner and the delta policy live or die on the
+//! cardinality estimator, so this harness measures it directly against
+//! ground truth.  For every lattice point the planner would ask about,
+//! [`evaluate`] computes the **true** join cardinality (the sampler in
+//! oracle mode: unlimited `exhaustive_limit`, so every chain is counted
+//! by full enumeration) next to the estimate a given
+//! [`QualityMode`] produces, and reports
+//!
+//! - the **q-error** distribution (p50 / p95 / max), where
+//!   `q = max(est, truth) / max(1, min(est, truth))` — the standard
+//!   symmetric multiplicative error, 1.0 for a perfect estimate;
+//! - **plan-regret**: both the estimate-driven and the oracle-driven
+//!   [`CountPlan`] are filled against the same budget (the oracle plan's
+//!   HYBRID operating point, where admission decisions actually bite),
+//!   and the plans are compared on the true benefit they admit
+//!   (`reuse × true join rows` summed over pre-counted positives —
+//!   `regret_saved_frac` is the fraction of oracle benefit the
+//!   estimate-driven plan forfeits) and on the true bytes the
+//!   estimate-driven admissions really cost versus the budget they were
+//!   admitted under (`bytes_overrun_frac`).
+//!
+//! Both regret metrics are exactly 0 under perfect estimates, which the
+//! unit tests assert for [`QualityMode::Default`] on the University
+//! fixture (every chain is below the exhaustive limit there).
+//!
+//! The harness is surfaced per preset as `relcount exp estimator
+//! --json BENCH_estimator.json` (see [`crate::bench::experiments`]) and
+//! gated in CI by `scripts/estimator_gates.json`.
+
+use crate::db::catalog::Database;
+use crate::error::Result;
+use crate::estimate::plan::{CountPlan, PlanLevel};
+use crate::estimate::sampler::{EstimatorConfig, JoinSampler};
+use crate::estimate::summary::{within_bound, SummaryStats};
+use crate::lattice::Lattice;
+use crate::meta::extract::plan_chain;
+
+/// Which estimator configuration a quality sweep exercises.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QualityMode {
+    /// The configuration the planner actually runs with (small chains
+    /// exhaustive, the rest sampled; summary tier off).
+    Default,
+    /// Wander-join sampling forced on every chain
+    /// (`exhaustive_limit = 0`) — stresses the sampler itself.
+    Sampled,
+    /// Pure first-tier summary estimates (`summary_bound = ∞`, sampling
+    /// never consulted) — stresses the O(1) tier's independence
+    /// assumptions.
+    Summary,
+}
+
+impl QualityMode {
+    pub const ALL: [QualityMode; 3] =
+        [QualityMode::Default, QualityMode::Sampled, QualityMode::Summary];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QualityMode::Default => "default",
+            QualityMode::Sampled => "sampled",
+            QualityMode::Summary => "summary",
+        }
+    }
+
+    /// The estimator configuration this mode derives from `base`.
+    pub fn cfg(self, base: EstimatorConfig) -> EstimatorConfig {
+        match self {
+            QualityMode::Default => base,
+            QualityMode::Sampled => EstimatorConfig { exhaustive_limit: 0, ..base },
+            QualityMode::Summary => EstimatorConfig {
+                exhaustive_limit: 0,
+                summary_bound: f64::INFINITY,
+                ..base
+            },
+        }
+    }
+}
+
+/// One (database, mode) sweep's quality metrics.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    pub mode: &'static str,
+    /// Lattice points evaluated (every point the planner estimates).
+    pub points: u64,
+    pub q_p50: f64,
+    pub q_p95: f64,
+    pub q_max: f64,
+    /// Fraction of points the estimator answered exactly.
+    pub exact_frac: f64,
+    /// Points answered by the O(1) summary tier (its declared band was
+    /// within `summary_bound`).
+    pub summary_hits: u64,
+    /// Random walks consumed across all points.
+    pub walks: u64,
+    /// Fraction of the oracle plan's true admitted benefit
+    /// (`reuse × true join rows`) the estimate-driven plan forfeits.
+    pub regret_saved_frac: f64,
+    /// True bytes of the estimate-driven admissions beyond the budget
+    /// they were admitted under, as a fraction of that budget.
+    pub bytes_overrun_frac: f64,
+}
+
+/// `max(est, truth) / max(1, min(est, truth))`; 1.0 when both are 0.
+fn q_error(est: f64, truth: f64) -> f64 {
+    let (lo, hi) = if est <= truth { (est, truth) } else { (truth, est) };
+    hi.max(1.0) / lo.max(1.0)
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice.
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Sweep every lattice point under `mode` and compare against oracle
+/// counts — see the module docs for the metrics.
+pub fn evaluate(
+    db: &Database,
+    lattice: &Lattice,
+    base: EstimatorConfig,
+    mode: QualityMode,
+) -> Result<QualityReport> {
+    let cfg = mode.cfg(base);
+    let oracle_cfg =
+        EstimatorConfig { exhaustive_limit: u64::MAX, summary_bound: 0.0, ..base };
+
+    let summary =
+        if cfg.summary_bound > 0.0 { Some(SummaryStats::build(db)) } else { None };
+    let sampler = JoinSampler::new(db, cfg);
+    let oracle = JoinSampler::new(db, oracle_cfg);
+
+    let mut qs = Vec::with_capacity(lattice.len());
+    let mut truths = Vec::with_capacity(lattice.len());
+    let mut exact = 0u64;
+    let mut summary_hits = 0u64;
+    let mut walks = 0u64;
+    for p in &lattice.points {
+        let truth = oracle.chain_cardinality(&p.rels)?;
+        debug_assert!(truth.exact);
+        let est = sampler.chain_cardinality_with(&p.rels, summary.as_ref())?;
+        walks += est.walks;
+        if est.exact {
+            exact += 1;
+        }
+        if let Some(s) = summary.as_ref() {
+            let order = plan_chain(db, &p.rels)?.join_order;
+            if within_bound(&s.chain_estimate(&db.schema, &order), cfg.summary_bound) {
+                summary_hits += 1;
+            }
+        }
+        qs.push(q_error(est.value, truth.value));
+        truths.push(truth.value);
+    }
+    qs.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+
+    // Plan-regret: fill both plans against the oracle plan's HYBRID
+    // operating point — the budget where admission decisions bite.
+    let probe = CountPlan::build(db, lattice, oracle_cfg, None)?;
+    let budget = probe.hybrid_budget();
+    let plan_est = CountPlan::build(db, lattice, cfg, Some(budget))?;
+    let plan_orc = CountPlan::build(db, lattice, oracle_cfg, Some(budget))?;
+
+    let saved_true = |plan: &CountPlan| -> f64 {
+        plan.estimates
+            .iter()
+            .filter(|e| plan.positive_planned(e.point))
+            .map(|e| e.reuse as f64 * truths[e.point])
+            .sum()
+    };
+    let saved_orc = saved_true(&plan_orc);
+    let saved_est = saved_true(&plan_est);
+    let regret_saved_frac = if saved_orc > 0.0 {
+        ((saved_orc - saved_est) / saved_orc).max(0.0)
+    } else {
+        0.0
+    };
+
+    // True bytes of the estimate-driven plan's admissions, priced by the
+    // oracle's (exact-cardinality) byte estimates.
+    let mut spent_true = if plan_est.marginals { plan_est.marginal_bytes } else { 0 };
+    for oe in &plan_orc.estimates {
+        match plan_est.levels[oe.point] {
+            PlanLevel::OnDemand => {}
+            PlanLevel::Positive => spent_true += oe.est_positive_bytes,
+            PlanLevel::Complete => {
+                spent_true += oe.est_positive_bytes + oe.est_complete_bytes
+            }
+        }
+    }
+    let bytes_overrun_frac =
+        spent_true.saturating_sub(budget) as f64 / budget.max(1) as f64;
+
+    let points = lattice.len() as u64;
+    Ok(QualityReport {
+        mode: mode.name(),
+        points,
+        q_p50: percentile(&qs, 0.50),
+        q_p95: percentile(&qs, 0.95),
+        q_max: qs.last().copied().unwrap_or(0.0),
+        exact_frac: if points == 0 { 1.0 } else { exact as f64 / points as f64 },
+        summary_hits,
+        walks,
+        regret_saved_frac,
+        bytes_overrun_frac,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+
+    fn lab(mode: QualityMode) -> QualityReport {
+        let db = university_db();
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        evaluate(&db, &lattice, EstimatorConfig::default(), mode).unwrap()
+    }
+
+    #[test]
+    fn default_mode_is_perfect_on_university() {
+        // every university chain is below the exhaustive limit, so the
+        // planner's estimates equal the oracle: q == 1 everywhere and
+        // both regret metrics are exactly 0
+        let r = lab(QualityMode::Default);
+        assert!(r.points >= 3);
+        assert_eq!(r.q_p50, 1.0);
+        assert_eq!(r.q_p95, 1.0);
+        assert_eq!(r.q_max, 1.0);
+        assert_eq!(r.exact_frac, 1.0);
+        assert_eq!(r.summary_hits, 0);
+        assert_eq!(r.regret_saved_frac, 0.0);
+        assert_eq!(r.bytes_overrun_frac, 0.0);
+    }
+
+    #[test]
+    fn sampled_mode_stays_sane() {
+        let r = lab(QualityMode::Sampled);
+        assert!(r.q_p50 >= 1.0);
+        assert!(r.q_max >= r.q_p95 && r.q_p95 >= r.q_p50);
+        assert!(r.walks > 0);
+        assert!((0.0..=1.0).contains(&r.regret_saved_frac));
+        assert!(r.bytes_overrun_frac >= 0.0);
+    }
+
+    #[test]
+    fn summary_mode_answers_without_walks() {
+        let r = lab(QualityMode::Summary);
+        assert_eq!(r.walks, 0);
+        assert_eq!(r.summary_hits, r.points);
+        assert!(r.q_p50 >= 1.0);
+    }
+
+    #[test]
+    fn quality_is_deterministic() {
+        let a = lab(QualityMode::Sampled);
+        let b = lab(QualityMode::Sampled);
+        assert_eq!(a.q_p50, b.q_p50);
+        assert_eq!(a.q_max, b.q_max);
+        assert_eq!(a.regret_saved_frac, b.regret_saved_frac);
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.50), 2.0);
+        assert_eq!(percentile(&v, 0.95), 4.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(q_error(0.0, 0.0), 1.0);
+        assert_eq!(q_error(0.0, 5.0), 5.0);
+        assert_eq!(q_error(10.0, 5.0), 2.0);
+    }
+}

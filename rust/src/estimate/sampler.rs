@@ -32,6 +32,7 @@ use std::cell::RefCell;
 use crate::db::catalog::Database;
 use crate::db::index::RelIx;
 use crate::error::Result;
+use crate::estimate::summary::{within_bound, SummaryStats};
 use crate::meta::extract::plan_chain;
 use crate::util::fxhash::FxHashMap;
 use crate::util::rng::Rng;
@@ -48,11 +49,24 @@ pub struct EstimatorConfig {
     /// Chains whose deterministic cardinality cap is at most this are
     /// enumerated exactly instead of sampled.
     pub exhaustive_limit: u64,
+    /// Relative error band within which a first-tier
+    /// [`crate::estimate::summary::SummaryStats`] estimate is accepted
+    /// without sampling (see
+    /// [`JoinSampler::chain_cardinality_with`]).  At the default `0.0`
+    /// the summary tier is never consulted and every estimate — and
+    /// therefore every plan and cache digest — is bit-identical to the
+    /// sampler-only path.
+    pub summary_bound: f64,
 }
 
 impl Default for EstimatorConfig {
     fn default() -> Self {
-        EstimatorConfig { seed: 0x9E3779B9, walks: 256, exhaustive_limit: 8192 }
+        EstimatorConfig {
+            seed: 0x9E3779B9,
+            walks: 256,
+            exhaustive_limit: 8192,
+            summary_bound: 0.0,
+        }
     }
 }
 
@@ -114,6 +128,31 @@ impl<'a> JoinSampler<'a> {
             r
         });
         row[k]
+    }
+
+    /// Tiered estimate: consult the O(1) summary tier first and fall
+    /// through to [`JoinSampler::chain_cardinality`] whenever the
+    /// summary's declared band is wider than
+    /// [`EstimatorConfig::summary_bound`] allows.
+    ///
+    /// With `summary` absent or `summary_bound == 0.0` this is exactly
+    /// `chain_cardinality` — the bound-0 bit-identity invariant the
+    /// property tests assert.
+    pub fn chain_cardinality_with(
+        &self,
+        chain: &[usize],
+        summary: Option<&SummaryStats>,
+    ) -> Result<Estimate> {
+        if let Some(s) = summary {
+            if self.cfg.summary_bound > 0.0 {
+                let plan = plan_chain(self.db, chain)?;
+                let est = s.chain_estimate(&self.db.schema, &plan.join_order);
+                if within_bound(&est, self.cfg.summary_bound) {
+                    return Ok(est);
+                }
+            }
+        }
+        self.chain_cardinality(chain)
     }
 
     /// Estimated number of groundings satisfying every relationship of
@@ -363,6 +402,32 @@ mod tests {
             .unwrap();
         assert!(c.lo <= true_cardinality(&db, &[0, 1]) as f64);
         assert!(c.hi >= true_cardinality(&db, &[0, 1]) as f64);
+    }
+
+    #[test]
+    fn summary_tier_gates_on_bound() {
+        let db = university_db();
+        let summary = SummaryStats::build(&db);
+        // bound 0 (the default): the summary is never consulted — the
+        // tiered call is bit-identical to the sampler-only path
+        let cfg = EstimatorConfig { exhaustive_limit: 0, ..Default::default() };
+        let s = JoinSampler::new(&db, cfg);
+        let a = s.chain_cardinality(&[0, 1]).unwrap();
+        let b = s.chain_cardinality_with(&[0, 1], Some(&summary)).unwrap();
+        assert_eq!((a.value, a.lo, a.hi, a.walks), (b.value, b.lo, b.hi, b.walks));
+        // bound infinity: the summary always answers — no walks
+        let cfg = EstimatorConfig {
+            exhaustive_limit: 0,
+            summary_bound: f64::INFINITY,
+            ..Default::default()
+        };
+        let s = JoinSampler::new(&db, cfg);
+        let e = s.chain_cardinality_with(&[0, 1], Some(&summary)).unwrap();
+        assert_eq!(e.walks, 0);
+        assert!(!e.exact);
+        // no summary handed in: falls through regardless of bound
+        let f = s.chain_cardinality_with(&[0, 1], None).unwrap();
+        assert!(f.walks > 0);
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! O(1) summary-statistics estimator: the cheap first tier in front of
+//! the wander-join sampler.
+//!
+//! A [`SummaryStats`] holds, per relationship, the row count, a
+//! log-bucketed degree histogram for each endpoint orientation and
+//! per-attribute-value selectivity counts — and per entity type, the
+//! population and per-attribute-value counts.  Everything is maintained
+//! **incrementally** by the delta path ([`crate::delta::maintain`]): one
+//! link insert/delete or entity insert touches O(values) map entries, so
+//! the summary is always exact for the facts it tracks, no matter how
+//! much churn has flowed through.  A from-scratch [`SummaryStats::build`]
+//! over the same tables is always equal (asserted by
+//! `rust/tests/proptest_invariants.rs`), because zeroed entries are
+//! removed eagerly — the representation is canonical.
+//!
+//! [`SummaryStats::chain_estimate`] answers a join-chain cardinality
+//! question in O(chain length) under an independence assumption
+//! (uniform fan-out per step), with a **sound deterministic upper bound**
+//! from the degree histograms: the top of the highest occupied bucket
+//! can never be exceeded by any real degree.  The declared band is wide
+//! — `lo = 0` for multi-relationship chains — which is exactly the
+//! point: [`crate::estimate::sampler::JoinSampler::chain_cardinality_with`]
+//! consults the summary first and falls through to sampling whenever the
+//! band is wider than [`EstimatorConfig::summary_bound`] allows, so at
+//! bound 0 the summary is never consulted and plans are bit-identical to
+//! the sampler-only path.
+//!
+//! [`EstimatorConfig::summary_bound`]: crate::estimate::sampler::EstimatorConfig::summary_bound
+
+use crate::db::catalog::Database;
+use crate::db::schema::Schema;
+use crate::db::value::Code;
+use crate::estimate::sampler::Estimate;
+use crate::util::fxhash::FxHashMap;
+
+/// Log-bucketed degree histogram over one endpoint orientation of a
+/// relationship.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DegreeHist {
+    /// Exact degree per endpoint id.  Entries that drop to degree 0 are
+    /// removed, so two histograms over the same live edges compare equal
+    /// regardless of churn history.
+    degrees: FxHashMap<u32, u32>,
+    /// `buckets[k]` = endpoints with degree in `[2^k, 2^(k+1))`.
+    buckets: [u64; 32],
+}
+
+impl DegreeHist {
+    #[inline]
+    fn bucket(d: u32) -> usize {
+        d.ilog2() as usize
+    }
+
+    /// Record one new edge incident to endpoint `v`.
+    pub fn add(&mut self, v: u32) {
+        let d = self.degrees.entry(v).or_insert(0);
+        if *d > 0 {
+            self.buckets[Self::bucket(*d)] -= 1;
+        }
+        *d += 1;
+        self.buckets[Self::bucket(*d)] += 1;
+    }
+
+    /// Retract one edge incident to endpoint `v` (no-op if `v` has no
+    /// recorded edge — the delta path only retracts live tuples).
+    pub fn remove(&mut self, v: u32) {
+        if let Some(d) = self.degrees.get_mut(&v) {
+            self.buckets[Self::bucket(*d)] -= 1;
+            *d -= 1;
+            if *d == 0 {
+                self.degrees.remove(&v);
+            } else {
+                self.buckets[Self::bucket(*d)] += 1;
+            }
+        }
+    }
+
+    /// Exact degree of endpoint `v`.
+    pub fn degree(&self, v: u32) -> u32 {
+        self.degrees.get(&v).copied().unwrap_or(0)
+    }
+
+    /// Endpoints with at least one edge.
+    pub fn active(&self) -> u64 {
+        self.degrees.len() as u64
+    }
+
+    /// Deterministic upper bound on the maximum degree: the top of the
+    /// highest occupied bucket (`2^(k+1) - 1`), 0 when no endpoint has
+    /// an edge.  Never below the true maximum.
+    pub fn max_degree_bound(&self) -> u64 {
+        match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(k) => (1u64 << (k as u32 + 1)) - 1,
+            None => 0,
+        }
+    }
+}
+
+/// Summary statistics for one relationship table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RelSummary {
+    /// Live tuple count.
+    pub rows: u64,
+    /// Degree histogram of the `from` endpoints (fan-out).
+    pub fan_out: DegreeHist,
+    /// Degree histogram of the `to` endpoints (fan-in).
+    pub fan_in: DegreeHist,
+    /// `attr_counts[a][value]` = live tuples carrying `value` in rel
+    /// attribute `a` (zeroed entries removed).
+    pub attr_counts: Vec<FxHashMap<Code, u64>>,
+}
+
+/// Summary statistics for one entity table.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct EntitySummary {
+    pub population: u64,
+    /// `attr_counts[a][value]` = entities carrying `value` in attribute
+    /// `a`.
+    pub attr_counts: Vec<FxHashMap<Code, u64>>,
+}
+
+/// Incrementally-maintained database summary: the first estimator tier.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SummaryStats {
+    pub rels: Vec<RelSummary>,
+    pub entities: Vec<EntitySummary>,
+}
+
+impl SummaryStats {
+    /// Build from the base tables in one pass (O(data)).
+    pub fn build(db: &Database) -> SummaryStats {
+        let mut entities = Vec::with_capacity(db.entities.len());
+        for t in &db.entities {
+            let mut s = EntitySummary {
+                population: t.len() as u64,
+                attr_counts: vec![FxHashMap::default(); t.cols.len()],
+            };
+            for (a, col) in t.cols.iter().enumerate() {
+                for &v in col {
+                    *s.attr_counts[a].entry(v).or_insert(0) += 1;
+                }
+            }
+            entities.push(s);
+        }
+        let mut rels = Vec::with_capacity(db.rels.len());
+        for t in &db.rels {
+            let mut s = RelSummary {
+                rows: t.len() as u64,
+                fan_out: DegreeHist::default(),
+                fan_in: DegreeHist::default(),
+                attr_counts: vec![FxHashMap::default(); t.cols.len()],
+            };
+            for &f in &t.from {
+                s.fan_out.add(f);
+            }
+            for &v in &t.to {
+                s.fan_in.add(v);
+            }
+            for (a, col) in t.cols.iter().enumerate() {
+                for &v in col {
+                    *s.attr_counts[a].entry(v).or_insert(0) += 1;
+                }
+            }
+            rels.push(s);
+        }
+        SummaryStats { rels, entities }
+    }
+
+    /// Maintain through one link insert (O(values)).
+    pub fn insert_link(&mut self, rel: usize, from: u32, to: u32, values: &[Code]) {
+        let s = &mut self.rels[rel];
+        s.rows += 1;
+        s.fan_out.add(from);
+        s.fan_in.add(to);
+        for (a, &v) in values.iter().enumerate() {
+            *s.attr_counts[a].entry(v).or_insert(0) += 1;
+        }
+    }
+
+    /// Maintain through one link delete; `values` are the retracted
+    /// tuple's attribute values (returned by
+    /// [`crate::db::catalog::Database::delete_link`]).
+    pub fn delete_link(&mut self, rel: usize, from: u32, to: u32, values: &[Code]) {
+        let s = &mut self.rels[rel];
+        s.rows = s.rows.saturating_sub(1);
+        s.fan_out.remove(from);
+        s.fan_in.remove(to);
+        for (a, &v) in values.iter().enumerate() {
+            if let Some(c) = s.attr_counts[a].get_mut(&v) {
+                *c -= 1;
+                if *c == 0 {
+                    s.attr_counts[a].remove(&v);
+                }
+            }
+        }
+    }
+
+    /// Maintain through one entity insert (O(values)).
+    pub fn insert_entity(&mut self, et: usize, values: &[Code]) {
+        let s = &mut self.entities[et];
+        s.population += 1;
+        for (a, &v) in values.iter().enumerate() {
+            *s.attr_counts[a].entry(v).or_insert(0) += 1;
+        }
+    }
+
+    /// Fraction of `rel`'s live tuples carrying `value` in attribute `a`
+    /// (1.0 on an empty relationship: a vacuous filter).
+    pub fn rel_selectivity(&self, rel: usize, a: usize, value: Code) -> f64 {
+        let s = &self.rels[rel];
+        if s.rows == 0 {
+            return 1.0;
+        }
+        s.attr_counts[a].get(&value).copied().unwrap_or(0) as f64 / s.rows as f64
+    }
+
+    /// Fraction of entity type `et`'s population carrying `value` in
+    /// attribute `a` (1.0 on an empty population).
+    pub fn entity_selectivity(&self, et: usize, a: usize, value: Code) -> f64 {
+        let s = &self.entities[et];
+        if s.population == 0 {
+            return 1.0;
+        }
+        s.attr_counts[a].get(&value).copied().unwrap_or(0) as f64
+            / s.population as f64
+    }
+
+    /// O(chain) cardinality estimate over a connected join `order` (as
+    /// produced by [`crate::meta::extract::plan_chain`]).
+    ///
+    /// The point value multiplies independence-assumption fan-out factors
+    /// (`rows / population` per newly-bound endpoint); the declared `hi`
+    /// multiplies the degree-histogram maximum bounds and is therefore a
+    /// sound deterministic cap.  Empty relationships and single-rel
+    /// chains are exact; everything else declares `lo = 0`.
+    pub fn chain_estimate(&self, schema: &Schema, order: &[usize]) -> Estimate {
+        if order.iter().any(|&r| self.rels[r].rows == 0) {
+            return Estimate { value: 0.0, lo: 0.0, hi: 0.0, cap: 0.0, exact: true, walks: 0 };
+        }
+        let first = order[0];
+        let n0 = self.rels[first].rows as f64;
+        if order.len() == 1 {
+            return Estimate { value: n0, lo: n0, hi: n0, cap: n0, exact: true, walks: 0 };
+        }
+        let mut bound = vec![false; schema.entities.len()];
+        let (a0, b0) = schema.rel_endpoints(first);
+        bound[a0] = true;
+        bound[b0] = true;
+        let mut value = n0;
+        let mut hi = n0;
+        for &rel in &order[1..] {
+            let s = &self.rels[rel];
+            let rows = s.rows as f64;
+            let (a, b) = schema.rel_endpoints(rel);
+            let pop = |et: usize| self.entities[et].population.max(1) as f64;
+            let (factor, hi_factor) = match (bound[a], bound[b]) {
+                // Both endpoints already bound: the step is a membership
+                // probe — on average rows/(|A|·|B|) pairs survive, at
+                // most 1 (set semantics).
+                (true, true) => (rows / (pop(a) * pop(b)), 1.0),
+                // One endpoint bound: average vs maximum fan-out.
+                (true, false) => {
+                    (rows / pop(a), s.fan_out.max_degree_bound() as f64)
+                }
+                (false, true) => (rows / pop(b), s.fan_in.max_degree_bound() as f64),
+                // Disconnected step (plan_chain avoids these): full
+                // cross-product with the table.
+                (false, false) => (rows, rows),
+            };
+            bound[a] = true;
+            bound[b] = true;
+            value *= factor;
+            hi *= hi_factor;
+        }
+        Estimate { value, lo: 0.0, hi, cap: hi, exact: false, walks: 0 }
+    }
+}
+
+/// The tiering predicate shared by
+/// [`crate::estimate::sampler::JoinSampler::chain_cardinality_with`] and
+/// the quality harness: an estimate is usable as-is when it is exact or
+/// its declared band is within `bound`, relative to its point value.
+pub fn within_bound(est: &Estimate, bound: f64) -> bool {
+    est.exact || (est.hi - est.lo) <= bound * est.value.max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::db::query::{positive_chain_ct, JoinStats};
+
+    fn truth(db: &Database, chain: &[usize]) -> u64 {
+        let mut stats = JoinStats::default();
+        positive_chain_ct(db, chain, &[], &mut stats).unwrap().total().unwrap() as u64
+    }
+
+    #[test]
+    fn hist_add_remove_is_canonical() {
+        let mut h = DegreeHist::default();
+        h.add(3);
+        h.add(3);
+        h.add(7);
+        assert_eq!(h.degree(3), 2);
+        assert_eq!(h.active(), 2);
+        assert_eq!(h.max_degree_bound(), 3); // bucket [2,4) -> bound 3
+        h.remove(3);
+        h.remove(3);
+        h.remove(7);
+        assert_eq!(h, DegreeHist::default());
+        assert_eq!(h.max_degree_bound(), 0);
+    }
+
+    #[test]
+    fn bound_never_below_true_max() {
+        let mut h = DegreeHist::default();
+        for _ in 0..9 {
+            h.add(0);
+        }
+        assert_eq!(h.degree(0), 9);
+        assert!(h.max_degree_bound() >= 9);
+        assert_eq!(h.max_degree_bound(), 15); // bucket [8,16)
+    }
+
+    #[test]
+    fn build_matches_incremental_after_churn() {
+        let mut db = university_db();
+        let mut s = SummaryStats::build(&db);
+        // retract a live tuple, then re-insert the (now absent) pair
+        let (from, to) = (db.rels[0].from[0], db.rels[0].to[0]);
+        let values = db.delete_link(0, from, to).unwrap();
+        s.delete_link(0, from, to, &values);
+        assert_eq!(s, SummaryStats::build(&db));
+        db.insert_link(0, from, to, &values).unwrap();
+        s.insert_link(0, from, to, &values);
+        assert_eq!(s, SummaryStats::build(&db));
+        // grow a population
+        let n_attrs = db.entities[0].cols.len();
+        let ev = vec![0; n_attrs];
+        db.insert_entity(0, &ev).unwrap();
+        s.insert_entity(0, &ev);
+        assert_eq!(s, SummaryStats::build(&db));
+    }
+
+    #[test]
+    fn single_rel_chains_are_exact() {
+        let db = university_db();
+        let s = SummaryStats::build(&db);
+        let e = s.chain_estimate(&db.schema, &[0]);
+        assert!(e.exact);
+        assert_eq!(e.value as u64, db.rels[0].len() as u64);
+        assert_eq!(e.lo, e.hi);
+    }
+
+    #[test]
+    fn multi_rel_hi_covers_truth() {
+        let db = university_db();
+        let s = SummaryStats::build(&db);
+        let order = crate::meta::extract::plan_chain(&db, &[0, 1]).unwrap().join_order;
+        let e = s.chain_estimate(&db.schema, &order);
+        assert!(!e.exact);
+        let t = truth(&db, &[0, 1]) as f64;
+        assert!(e.hi >= t, "hi {} < truth {t}", e.hi);
+        assert_eq!(e.lo, 0.0);
+        assert!(e.value > 0.0);
+    }
+
+    #[test]
+    fn empty_relationship_is_exact_zero() {
+        let mut s = SummaryStats::default();
+        s.rels.push(RelSummary::default());
+        s.rels.push(RelSummary { rows: 5, ..Default::default() });
+        let db = university_db();
+        let e = s.chain_estimate(&db.schema, &[1, 0]);
+        assert!(e.exact);
+        assert_eq!(e.value, 0.0);
+    }
+
+    #[test]
+    fn selectivities_sum_to_one() {
+        let db = university_db();
+        let s = SummaryStats::build(&db);
+        for (rel, t) in db.rels.iter().enumerate() {
+            for a in 0..t.cols.len() {
+                let total: f64 = s.rels[rel].attr_counts[a]
+                    .keys()
+                    .map(|&v| s.rel_selectivity(rel, a, v))
+                    .sum();
+                assert!((total - 1.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn within_bound_predicate() {
+        let exact = Estimate { value: 5.0, lo: 5.0, hi: 5.0, cap: 5.0, exact: true, walks: 0 };
+        assert!(within_bound(&exact, 0.0));
+        let wide = Estimate { value: 10.0, lo: 0.0, hi: 100.0, cap: 100.0, exact: false, walks: 0 };
+        assert!(!within_bound(&wide, 1.0));
+        assert!(within_bound(&wide, 10.0));
+        assert!(within_bound(&wide, f64::INFINITY));
+    }
+}

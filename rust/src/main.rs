@@ -11,7 +11,7 @@
 //!   serve      --preset <name>|--db <dir>|--data-dir <dir> [--port N]
 //!              [--data-dir <dir> --snapshot-every N]   (durable serving)
 //!   snapshot   save|verify|load                        (snapshot tooling)
-//!   exp        fig3|fig4|table4|table5|scaling|churn|serve|persist
+//!   exp        fig3|fig4|table4|table5|scaling|churn|serve|persist|estimator
 //!              --scale <f> --budget-s <n>
 //!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
 //!
@@ -33,8 +33,9 @@ use relcount::bench::driver::{
     run_coordinated_with, run_strategy_with, Workload,
 };
 use relcount::bench::experiments::{
-    churn_rows, coordinator_scaling_rows, fig3_fig4_rows, persist_rows,
-    planner_sweep_rows, serve_rows, table4_rows, table5_rows, ExpConfig,
+    churn_rows, coordinator_scaling_rows, estimator_rows, fig3_fig4_rows,
+    persist_rows, planner_sweep_rows, serve_rows, table4_rows, table5_rows,
+    ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -47,10 +48,10 @@ use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
 use relcount::persist::{load_snapshot, verify_snapshot, write_snapshot, DataDir};
 use relcount::metrics::report::{
-    churn_rows_to_json, persist_rows_to_json, planner_rows_to_json, render_churn,
-    render_fig3, render_fig4, render_persist, render_planner, render_scaling,
-    render_serve, render_table4, render_table5, scaling_rows_to_json,
-    serve_rows_to_json,
+    churn_rows_to_json, estimator_rows_to_json, persist_rows_to_json,
+    planner_rows_to_json, render_churn, render_estimator, render_fig3,
+    render_fig4, render_persist, render_planner, render_scaling, render_serve,
+    render_table4, render_table5, scaling_rows_to_json, serve_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
 use relcount::serve::{
@@ -83,8 +84,8 @@ USAGE:
   relcount snapshot  save (--preset <name> | --db <dir>) --out <dir>
                      | verify --dir <snapshot dir> | load --dir <snapshot dir>
   relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
-  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve|persist>
-                     [--scale F]
+  relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve|persist
+                     |estimator> [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
                      [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
@@ -125,6 +126,10 @@ USAGE:
   `exp persist` measures restart latency per preset — cold recount vs
   snapshot save + load — and fails unless all three states share one
   cache digest (--json writes BENCH_persist.json rows).
+  `exp estimator` runs the estimator quality lab per preset: q-error
+  distributions (p50/p95/max vs oracle counts) and plan-regret for the
+  default, pure-sampled and pure-summary estimator tiers (--json writes
+  BENCH_estimator.json rows, gated in CI by scripts/estimator_gates.json).
   `gen-requests` emits a deterministic request workload for a database.
 ";
 
@@ -559,7 +564,7 @@ fn run() -> Result<()> {
                 .ok_or_else(|| {
                     Error::Data(
                         "exp needs fig3|fig4|table4|table5|scaling|planner|\
-                         churn|serve|persist"
+                         churn|serve|persist|estimator"
                             .into(),
                     )
                 })?;
@@ -614,6 +619,11 @@ fn run() -> Result<()> {
                         ));
                     }
                     write_json(&args, persist_rows_to_json(&rows))?;
+                }
+                "estimator" => {
+                    let rows = estimator_rows(&cfg)?;
+                    print!("{}", render_estimator(&rows));
+                    write_json(&args, estimator_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }

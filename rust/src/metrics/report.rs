@@ -555,6 +555,95 @@ pub fn persist_rows_to_json(rows: &[PersistRow]) -> Json {
     )
 }
 
+/// One (database, quality-mode) cell of the estimator quality lab
+/// (`exp estimator`, EXPERIMENTS.md §E15): q-error distribution against
+/// oracle counts plus plan-regret — see [`crate::estimate::quality`] for
+/// the metric definitions.
+#[derive(Clone, Debug)]
+pub struct EstimatorRow {
+    pub database: String,
+    /// `"default"`, `"sampled"` or `"summary"`
+    /// ([`crate::estimate::quality::QualityMode`]).
+    pub mode: String,
+    /// Lattice points evaluated.
+    pub points: u64,
+    pub q_p50: f64,
+    pub q_p95: f64,
+    pub q_max: f64,
+    /// Fraction of points answered exactly.
+    pub exact_frac: f64,
+    /// Points answered by the O(1) summary tier.
+    pub summary_hits: u64,
+    /// Random walks consumed across all points.
+    pub walks: u64,
+    /// Fraction of the oracle plan's true admitted benefit forfeited.
+    pub regret_saved_frac: f64,
+    /// True bytes admitted beyond the budget, as a budget fraction.
+    pub bytes_overrun_frac: f64,
+}
+
+/// Render the estimator quality lab (`exp estimator`).
+pub fn render_estimator(rows: &[EstimatorRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:<8} {:>6} {:>8} {:>8} {:>8} {:>7} {:>8} {:>8} {:>8} {:>8}\n",
+        "database",
+        "mode",
+        "points",
+        "q_p50",
+        "q_p95",
+        "q_max",
+        "exact",
+        "sum_hit",
+        "walks",
+        "regret",
+        "overrun"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<16} {:<8} {:>6} {:>8.3} {:>8.3} {:>8.3} {:>7.2} {:>8} {:>8} {:>8.3} {:>8.3}\n",
+            r.database,
+            r.mode,
+            r.points,
+            r.q_p50,
+            r.q_p95,
+            r.q_max,
+            r.exact_frac,
+            r.summary_hits,
+            r.walks,
+            r.regret_saved_frac,
+            r.bytes_overrun_frac
+        ));
+    }
+    out
+}
+
+/// Machine-readable estimator-lab rows (written to
+/// `BENCH_estimator.json` by `scripts/bench.sh` and gated in CI against
+/// `scripts/estimator_gates.json`).  Key set is schema-stable; every
+/// field is seed-deterministic.
+pub fn estimator_rows_to_json(rows: &[EstimatorRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("mode", Json::Str(r.mode.clone())),
+                    ("points", Json::Num(r.points as f64)),
+                    ("q_p50", Json::Num(r.q_p50)),
+                    ("q_p95", Json::Num(r.q_p95)),
+                    ("q_max", Json::Num(r.q_max)),
+                    ("exact_frac", Json::Num(r.exact_frac)),
+                    ("summary_hits", Json::Num(r.summary_hits as f64)),
+                    ("walks", Json::Num(r.walks as f64)),
+                    ("regret_saved_frac", Json::Num(r.regret_saved_frac)),
+                    ("bytes_overrun_frac", Json::Num(r.bytes_overrun_frac)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -758,6 +847,42 @@ mod tests {
         assert_eq!(row.get("requests").unwrap().as_f64(), Some(40.0));
         assert_eq!(row.get("throughput_rps").unwrap().as_f64(), Some(1234.5));
         assert_eq!(row.get("workers").unwrap().as_f64(), Some(4.0));
+    }
+
+    fn estimator_row() -> EstimatorRow {
+        EstimatorRow {
+            database: "uw".into(),
+            mode: "sampled".into(),
+            points: 3,
+            q_p50: 1.25,
+            q_p95: 2.5,
+            q_max: 4.0,
+            exact_frac: 0.0,
+            summary_hits: 0,
+            walks: 768,
+            regret_saved_frac: 0.125,
+            bytes_overrun_frac: 0.0,
+        }
+    }
+
+    #[test]
+    fn renders_estimator() {
+        let s = render_estimator(&[estimator_row()]);
+        assert!(s.contains("uw") && s.contains("sampled"));
+        assert!(s.contains("1.250") && s.contains("4.000"));
+        assert!(s.contains("0.125"));
+    }
+
+    #[test]
+    fn estimator_json_shapes() {
+        let j = estimator_rows_to_json(&[estimator_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("mode").unwrap().as_str(), Some("sampled"));
+        assert_eq!(row.get("q_p50").unwrap().as_f64(), Some(1.25));
+        assert_eq!(row.get("q_max").unwrap().as_f64(), Some(4.0));
+        assert_eq!(row.get("regret_saved_frac").unwrap().as_f64(), Some(0.125));
+        assert_eq!(row.get("walks").unwrap().as_f64(), Some(768.0));
     }
 
     #[test]

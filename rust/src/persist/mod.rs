@@ -35,10 +35,16 @@
 //! older snapshot tried); corrupt WAL records refuse recovery rather
 //! than serve unproven counts.
 //!
-//! The WAL is never pruned — replay skips records at or below the
-//! snapshot's epoch.  That trades disk for a simpler invariant (the log
-//! alone can rebuild any state from the oldest snapshot) and keeps the
-//! append fd stable; see DESIGN.md §3e.
+//! **WAL pruning**: after a successful snapshot save, records at or
+//! below the **oldest retained** snapshot's epoch are dead — every
+//! snapshot recovery could start from has already folded them in — so
+//! the engine rewrites the log without them ([`WalWriter::prune_through`],
+//! atomic temp + `rename`).  Pruning to the oldest (not newest) retained
+//! epoch preserves the fallback invariant: even when the newest snapshot
+//! is damaged, the oldest retained snapshot + the pruned log still
+//! reaches the pre-crash epoch.  Replay itself still skips records at or
+//! below its chosen snapshot's epoch, so a log that was never pruned
+//! (or pruned less aggressively) recovers identically; see DESIGN.md §3e.
 
 pub mod codec;
 pub mod snapshot;
@@ -47,7 +53,7 @@ pub mod wal;
 pub use snapshot::{
     load_snapshot, verify_snapshot, write_snapshot, SnapshotInfo, SnapshotState,
 };
-pub use wal::{read_records, WalRecord, WalWriter};
+pub use wal::{prune_records, read_records, WalRecord, WalWriter};
 
 use std::fs;
 use std::path::{Path, PathBuf};
@@ -166,6 +172,25 @@ impl DataDir {
                 .map_err(|e| perr("datadir", format!("prune {}: {e}", dir.display())))?;
         }
         Ok(())
+    }
+
+    /// The WAL-prune cutoff: the **oldest retained** snapshot's epoch.
+    /// Records at or below it are folded into every snapshot recovery
+    /// could start from, so dropping them can never break
+    /// snapshot-plus-suffix replay — including the fallback past a
+    /// damaged newer snapshot.  `None` when there is no snapshot yet
+    /// (nothing is safely prunable).
+    pub fn wal_prune_cutoff(&self) -> Result<Option<u64>> {
+        Ok(self.snapshot_epochs()?.first().copied())
+    }
+
+    /// Prune WAL records already folded into every retained snapshot
+    /// (`epoch <= cutoff`, normally [`DataDir::wal_prune_cutoff`]).
+    /// Returns how many records were dropped.  A caller holding an open
+    /// [`WalWriter`] must use [`WalWriter::prune_through`] instead — the
+    /// rewrite replaces the file under any open append fd.
+    pub fn prune_wal(&self, cutoff: u64) -> Result<usize> {
+        wal::prune_records(&self.wal_path(), cutoff)
     }
 
     /// Recover the pre-crash writer state: load the newest snapshot
@@ -295,6 +320,41 @@ mod tests {
         }
         assert_eq!(dd.snapshot_epochs().unwrap(), vec![5, 9]);
         assert_eq!(dd.latest_snapshot_epoch().unwrap(), Some(9));
+    }
+
+    #[test]
+    fn wal_prune_respects_oldest_retained_snapshot() {
+        let root = tmp("wal-prune");
+        let dd = DataDir::open(&root).unwrap();
+        let mut m =
+            MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
+        dd.save_snapshot(&mut m, 0).unwrap();
+        let mut w = WalWriter::open(&dd.wal_path()).unwrap();
+        for e in 1..=4u64 {
+            let batch = churn_batch(m.db(), 0.03, 0xBEEF + e);
+            m.apply(&batch).unwrap();
+            w.append(e, m.digest(), &batch).unwrap();
+            if e == 2 || e == 3 {
+                dd.save_snapshot(&mut m, e).unwrap();
+                let cutoff = dd.wal_prune_cutoff().unwrap().unwrap();
+                w = w.prune_through(cutoff).unwrap();
+            }
+        }
+        drop(w);
+        // snapshots 2 and 3 retained; the cutoff tracked the OLDEST one,
+        // so epochs 1-2 are gone but 3-4 survive for the fallback path
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![2, 3]);
+        assert_eq!(
+            read_records(&dd.wal_path())
+                .unwrap()
+                .iter()
+                .map(|r| r.epoch)
+                .collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(r.digest(), m.digest());
     }
 
     #[test]

@@ -519,6 +519,7 @@ fn config_json(cfg: &MaintainConfig) -> Json {
                     "exhaustive_limit",
                     Json::num(cfg.estimator.exhaustive_limit as f64),
                 ),
+                ("summary_bound", Json::num(cfg.estimator.summary_bound)),
             ]),
         ),
         ("workers", Json::num(cfg.workers as f64)),
@@ -571,6 +572,13 @@ fn config_from_json(j: &Json) -> Result<MaintainConfig> {
                     })
                 })
                 .map_err(m)? as u64,
+            // absent in pre-summary-tier manifests: default to tier-off
+            summary_bound: match est.get("summary_bound") {
+                Some(x) => x.as_f64().ok_or_else(|| {
+                    perr("manifest", "summary_bound: not a number")
+                })?,
+                None => 0.0,
+            },
         },
         workers: get_usize("workers")?,
         mode,

@@ -161,6 +161,46 @@ pub fn read_records(path: &Path) -> Result<Vec<WalRecord>> {
     Ok(scan(&bytes)?.records)
 }
 
+/// Rewrite the WAL at `path` keeping only records with `epoch > cutoff`,
+/// returning how many records were dropped.  The rewrite is atomic
+/// (temp file + `rename`, both fsynced), so a crash leaves either the
+/// old or the new log — never a partial one.  A torn tail is dropped
+/// with the pruned prefix (open-for-append would truncate it anyway);
+/// corruption of a complete record refuses the prune, exactly like
+/// [`read_records`] — a log that cannot be proven intact is never
+/// rewritten.  No-op (and no I/O) when nothing is prunable.
+pub fn prune_records(path: &Path, cutoff: u64) -> Result<usize> {
+    if !path.exists() {
+        return Ok(0);
+    }
+    let bytes = std::fs::read(path)?;
+    let s = scan(&bytes)?;
+    let kept: Vec<&WalRecord> = s.records.iter().filter(|r| r.epoch > cutoff).collect();
+    let dropped = s.records.len() - kept.len();
+    if dropped == 0 && !s.torn {
+        return Ok(0);
+    }
+    let mut out = Vec::with_capacity(bytes.len());
+    out.extend_from_slice(MAGIC);
+    for r in &kept {
+        out.extend_from_slice(&encode_record(r.epoch, r.digest, &r.batch));
+    }
+    let tmp = path.with_extension("log.tmp");
+    {
+        let mut f = File::create(&tmp)?;
+        f.write_all(&out)?;
+        f.sync_data()?;
+    }
+    std::fs::rename(&tmp, path)?;
+    // best-effort: make the rename itself durable
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(dropped)
+}
+
 /// The append handle the serving engine holds.
 pub struct WalWriter {
     file: File,
@@ -212,6 +252,17 @@ impl WalWriter {
         self.file.sync_data()?;
         self.last_epoch = epoch;
         Ok(())
+    }
+
+    /// Prune records with `epoch <= cutoff` and reopen the handle on the
+    /// rewritten log.  Consumes `self` because the rewrite replaces the
+    /// file under the append fd ([`prune_records`]'s temp + `rename`) —
+    /// the old handle would keep appending to the unlinked inode.
+    pub fn prune_through(self, cutoff: u64) -> Result<WalWriter> {
+        let path = self.path.clone();
+        drop(self);
+        prune_records(&path, cutoff)?;
+        WalWriter::open(&path)
     }
 }
 
@@ -277,6 +328,55 @@ mod tests {
         assert_eq!(w.last_epoch(), 1);
         drop(w);
         assert!(std::fs::metadata(&p).unwrap().len() < full.len() as u64);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn prune_keeps_suffix_and_reopens_for_append() {
+        let p = tmp("prune");
+        let mut w = WalWriter::open(&p).unwrap();
+        for e in 1..=4u64 {
+            w.append(e, 100 + e, &batch(e as u32)).unwrap();
+        }
+        // epochs 1-2 folded into a snapshot: prune through 2
+        let mut w = w.prune_through(2).unwrap();
+        assert_eq!(w.last_epoch(), 4);
+        let recs = read_records(&p).unwrap();
+        assert_eq!(recs.iter().map(|r| r.epoch).collect::<Vec<_>>(), vec![3, 4]);
+        assert_eq!(recs[0].digest, 103);
+        assert_eq!(recs[0].batch, batch(3));
+        // the reopened handle keeps appending where the log left off
+        w.append(5, 105, &batch(5)).unwrap();
+        assert_eq!(read_records(&p).unwrap().len(), 3);
+        // pruning nothing is a no-op (same bytes, no rewrite)
+        let before = std::fs::read(&p).unwrap();
+        let w = w.prune_through(2).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), before);
+        assert_eq!(w.last_epoch(), 5);
+        // pruning everything leaves a valid empty log that accepts any
+        // future epoch
+        let mut w = w.prune_through(u64::MAX).unwrap();
+        assert_eq!(read_records(&p).unwrap().len(), 0);
+        assert_eq!(w.last_epoch(), 0);
+        w.append(6, 106, &batch(6)).unwrap();
+        assert_eq!(read_records(&p).unwrap().len(), 1);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn prune_refuses_corrupt_log() {
+        let p = tmp("prune-corrupt");
+        let mut w = WalWriter::open(&p).unwrap();
+        w.append(1, 11, &batch(1)).unwrap();
+        w.append(2, 22, &batch(2)).unwrap();
+        drop(w);
+        let full = std::fs::read(&p).unwrap();
+        let mut bad = full.clone();
+        bad[MAGIC.len() + HEADER + 2] ^= 0x40;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(prune_records(&p, 1).is_err());
+        // the corrupt log is left untouched for forensics
+        assert_eq!(std::fs::read(&p).unwrap(), bad);
         let _ = std::fs::remove_file(&p);
     }
 

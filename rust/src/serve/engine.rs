@@ -38,7 +38,7 @@ use crate::coordinator::{pool, resolve_workers};
 use crate::ct::cttable::CtTable;
 use crate::db::catalog::Database;
 use crate::delta::{DeltaBatch, DeltaReport, MaintainConfig, MaintainedCounts};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::meta::rvar::RVar;
 use crate::persist::{DataDir, WalWriter};
 use crate::serve::snapshot::{Generation, SnapshotStore};
@@ -49,7 +49,10 @@ use crate::strategies::traits::FamilyRequest;
 /// and the periodic-snapshot counter.
 struct PersistState {
     dir: DataDir,
-    wal: WalWriter,
+    /// Always `Some` between operations — taken transiently while a
+    /// snapshot save prunes the log ([`WalWriter::prune_through`]
+    /// consumes the handle) and restored before returning.
+    wal: Option<WalWriter>,
     /// Snapshot every N published batches (0 = only on shutdown).
     every: u64,
     since_snapshot: u64,
@@ -91,7 +94,8 @@ impl ServeEngine {
     /// `every` > 0 also snapshots after that many published batches.
     pub fn attach_persistence(&mut self, dir: DataDir, every: u64) -> Result<()> {
         let wal = WalWriter::open(&dir.wal_path())?;
-        let mut state = PersistState { dir, wal, every, since_snapshot: 0 };
+        let mut state =
+            PersistState { dir, wal: Some(wal), every, since_snapshot: 0 };
         if !state.dir.has_snapshots()? {
             state.dir.save_snapshot(&mut self.writer, self.store.epoch())?;
         }
@@ -142,7 +146,11 @@ impl ServeEngine {
         let epoch = self.store.epoch() + 1;
         let snapshot = next.snapshot(epoch)?;
         if let Some(p) = &mut self.persist {
-            p.wal.append(epoch, next.digest(), batch)?;
+            let wal = p.wal.as_mut().ok_or_else(|| Error::Persist {
+                section: "wal".into(),
+                msg: "append handle lost by a failed prune".into(),
+            })?;
+            wal.append(epoch, next.digest(), batch)?;
         }
         self.writer = next;
         self.store.publish(snapshot);
@@ -163,10 +171,31 @@ impl ServeEngine {
     /// data directory (no-op when none is attached).  Returns the
     /// snapshot path.  Called periodically from `apply_publish` and on
     /// graceful shutdown by the server loop.
+    ///
+    /// After a successful save the WAL is pruned to the **oldest
+    /// retained** snapshot's epoch ([`DataDir::wal_prune_cutoff`]):
+    /// records at or below it are folded into every snapshot recovery
+    /// could start from, so the log stops growing without bound while
+    /// snapshot-plus-suffix replay — including the fallback past a
+    /// damaged newer snapshot — stays whole.
     pub fn persist_snapshot(&mut self) -> Result<Option<PathBuf>> {
         let Some(p) = &mut self.persist else { return Ok(None) };
         let path = p.dir.save_snapshot(&mut self.writer, self.store.epoch())?;
         p.since_snapshot = 0;
+        if let (Some(cutoff), Some(wal)) =
+            (p.dir.wal_prune_cutoff()?, p.wal.take())
+        {
+            match wal.prune_through(cutoff) {
+                Ok(w) => p.wal = Some(w),
+                Err(e) => {
+                    // the rewrite is atomic, so a reopen sees either the
+                    // old or the pruned log — restore the handle before
+                    // surfacing the error
+                    p.wal = Some(WalWriter::open(&p.dir.wal_path())?);
+                    return Err(e);
+                }
+            }
+        }
         Ok(Some(path))
     }
 }
@@ -299,6 +328,51 @@ mod tests {
         // recovery from snapshot 2 + WAL record 3 lands on the writer
         let (r, epoch) = dd.recover(0).unwrap();
         assert_eq!(epoch, 3);
+        assert_eq!(r.digest(), e.digest());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn snapshot_saves_prune_the_wal_without_breaking_recovery() {
+        let root = std::env::temp_dir().join(format!(
+            "relcount-engine-prune-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        let dd = DataDir::open(&root).unwrap();
+        let mut e =
+            ServeEngine::build(university_db(), MaintainConfig::default()).unwrap();
+        e.attach_persistence(dd, 1).unwrap(); // snapshot on every publish
+        for i in 0..4u64 {
+            let b = crate::datagen::churn::churn_batch(e.db(), 0.05, 0xFACE + i);
+            e.apply_publish(&b).unwrap();
+        }
+        let dd = DataDir::open(&root).unwrap();
+        // retention kept snapshots 3 and 4; each save pruned through the
+        // OLDEST retained epoch, so the log holds only the suffix the
+        // fallback snapshot still needs — not all four batches
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![3, 4]);
+        assert_eq!(
+            crate::persist::read_records(&dd.wal_path())
+                .unwrap()
+                .iter()
+                .map(|r| r.epoch)
+                .collect::<Vec<_>>(),
+            vec![4]
+        );
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(r.digest(), e.digest());
+
+        // damage the newest snapshot: the pruned log must still carry
+        // recovery from the older retained snapshot to the same state
+        let caches = dd.snapshot_dir(4).join("caches.bin");
+        let mut bytes = std::fs::read(&caches).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x10;
+        std::fs::write(&caches, &bytes).unwrap();
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 4);
         assert_eq!(r.digest(), e.digest());
         let _ = std::fs::remove_dir_all(&root);
     }

@@ -131,6 +131,73 @@ fn kill_at_every_batch_boundary_recovers_bit_identically() {
     }
 }
 
+/// Snapshot saves prune WAL records at or below the oldest retained
+/// snapshot's epoch.  Kill the engine at every batch boundary under the
+/// most aggressive policy (snapshot + prune on every publish) and prove
+/// the pruned log still carries snapshot-plus-suffix replay to the
+/// uninterrupted reference — including the fallback past a damaged
+/// newest snapshot, which is exactly the path pruning could starve.
+#[test]
+fn wal_pruning_never_breaks_snapshot_plus_suffix_replay() {
+    const K: u64 = 5;
+    for backend in [Backend::Csr, Backend::Hash] {
+        let mut reference =
+            MaintainedCounts::build(db_with(backend), cfg_with(1)).unwrap();
+        let mut ref_digests = vec![reference.digest()];
+        let mut batches = Vec::new();
+        for e in 1..=K {
+            let b = churn_batch(reference.db(), 0.08, batch_seed(e));
+            reference.apply(&b).unwrap();
+            ref_digests.push(reference.digest());
+            batches.push(b);
+        }
+
+        for kill_at in 0..=K {
+            let root = tmp(&format!("prune-{}-{kill_at}", backend.name()));
+            let mut engine =
+                ServeEngine::build(db_with(backend), cfg_with(1)).unwrap();
+            engine
+                .attach_persistence(DataDir::open(&root).unwrap(), 1)
+                .unwrap();
+            for b in &batches[..kill_at as usize] {
+                engine.apply_publish(b).unwrap();
+            }
+            drop(engine);
+
+            let dd = DataDir::open(&root).unwrap();
+            // the prune actually ran: no record at or below the oldest
+            // retained snapshot's epoch survives
+            let cutoff = dd.wal_prune_cutoff().unwrap().unwrap();
+            let recs = relcount::persist::read_records(&dd.wal_path()).unwrap();
+            assert!(
+                recs.iter().all(|r| r.epoch > cutoff),
+                "records at or below cutoff {cutoff} survived: {:?} ({backend:?}, kill {kill_at})",
+                recs.iter().map(|r| r.epoch).collect::<Vec<_>>()
+            );
+
+            let (recovered, epoch) = dd.recover(1).unwrap();
+            assert_eq!(epoch, kill_at, "{backend:?} kill {kill_at}");
+            assert_eq!(recovered.digest(), ref_digests[kill_at as usize]);
+
+            // damage the newest snapshot: the older retained snapshot
+            // plus the pruned suffix must reach the same state
+            let epochs = dd.snapshot_epochs().unwrap();
+            if epochs.len() >= 2 {
+                let caches =
+                    dd.snapshot_dir(*epochs.last().unwrap()).join("caches.bin");
+                let mut bytes = std::fs::read(&caches).unwrap();
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x10;
+                std::fs::write(&caches, &bytes).unwrap();
+                let (fallback, fb_epoch) = dd.recover(1).unwrap();
+                assert_eq!(fb_epoch, kill_at, "{backend:?} fallback {kill_at}");
+                assert_eq!(fallback.digest(), ref_digests[kill_at as usize]);
+            }
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
 #[test]
 fn torn_wal_tail_recovers_to_previous_boundary() {
     let root = tmp("torn-tail");

@@ -708,6 +708,116 @@ fn prop_schema_json_roundtrip() {
     }
 }
 
+// --------------------------------------------------------------- estimate
+
+#[test]
+fn prop_incremental_summary_equals_rebuild_after_churn() {
+    // the summary tier is maintained op-by-op inside MaintainedCounts;
+    // after any sequence of random churn batches it must equal a
+    // from-scratch rebuild over the post-churn database
+    use relcount::estimate::SummaryStats;
+    for seed in 1900..1900 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let mut m = MaintainedCounts::build(db, MaintainConfig::default())
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(*m.summary(), SummaryStats::build(m.db()), "seed {seed} fresh");
+        for step in 0..3 {
+            let mut batch = random_link_batch(&mut rng, m.db(), 6);
+            if rng.gen_bool(0.5) {
+                let et = rng.gen_range(m.db().schema.entities.len() as u64) as usize;
+                let values: Vec<u32> = m.db().schema.entities[et]
+                    .attrs
+                    .iter()
+                    .map(|a| rng.gen_u32(a.card))
+                    .collect();
+                batch.ops.push(DeltaOp::InsertEntity { et, values });
+            }
+            if batch.is_empty() {
+                continue;
+            }
+            m.apply(&batch)
+                .unwrap_or_else(|e| panic!("seed {seed} step {step}: {e}"));
+            assert_eq!(
+                *m.summary(),
+                SummaryStats::build(m.db()),
+                "seed {seed} step {step}: incremental summary drifted from rebuild"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_summary_bound_zero_is_bit_identical_to_sampler_only() {
+    // the planner invariant: at summary_bound 0 the summary tier is
+    // never consulted, so estimates and plans are bit-identical to the
+    // sampler-only path — on both index backends
+    use relcount::db::index::Backend;
+    use relcount::estimate::{CountPlan, SummaryStats};
+    for seed in 2000..2000 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let mut db = random_db(&mut rng);
+        random_churn(&mut rng, &mut db, 10);
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        let mut levels_by_backend = Vec::new();
+        for backend in [Backend::Csr, Backend::Hash] {
+            db.set_backend(backend).unwrap();
+            let summary = SummaryStats::build(&db);
+            // force the sampling path, where a consulted summary *would*
+            // change the result — bound 0 must keep it untouched
+            let cfg = EstimatorConfig {
+                exhaustive_limit: 0,
+                walks: 64,
+                ..Default::default()
+            };
+            let sampler = JoinSampler::new(&db, cfg);
+            for p in &lattice.points {
+                let a = sampler.chain_cardinality(&p.rels).unwrap();
+                let b = sampler
+                    .chain_cardinality_with(&p.rels, Some(&summary))
+                    .unwrap();
+                assert_eq!(
+                    a.value.to_bits(),
+                    b.value.to_bits(),
+                    "seed {seed} {backend:?} {:?}: bound-0 summary changed the estimate",
+                    p.rels
+                );
+                assert_eq!(a.lo.to_bits(), b.lo.to_bits(), "seed {seed}");
+                assert_eq!(a.hi.to_bits(), b.hi.to_bits(), "seed {seed}");
+                assert_eq!(a.exact, b.exact, "seed {seed}");
+                assert_eq!(a.walks, b.walks, "seed {seed}");
+            }
+            // and the whole plan is bit-identical whether or not the
+            // tier field is spelled out
+            let plain = CountPlan::build(
+                &db,
+                &lattice,
+                EstimatorConfig::default(),
+                Some(20_000),
+            )
+            .unwrap();
+            let tiered = CountPlan::build(
+                &db,
+                &lattice,
+                EstimatorConfig { summary_bound: 0.0, ..Default::default() },
+                Some(20_000),
+            )
+            .unwrap();
+            assert_eq!(plain.levels, tiered.levels, "seed {seed} {backend:?}");
+            assert_eq!(plain.marginals, tiered.marginals, "seed {seed}");
+            assert_eq!(
+                plain.est_spent_bytes, tiered.est_spent_bytes,
+                "seed {seed} {backend:?}"
+            );
+            levels_by_backend.push(plain.levels);
+        }
+        assert_eq!(
+            levels_by_backend[0], levels_by_backend[1],
+            "seed {seed}: plan diverged across backends"
+        );
+    }
+}
+
 // ---------------------------------------------------------------- persist
 
 #[test]

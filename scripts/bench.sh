@@ -91,4 +91,9 @@ echo "== exp persist (scale $SCALE, presets $PRESETS) =="
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --workers "$WORKERS" --json "$ROOT/BENCH_persist.json"
 
-echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json and BENCH_persist.json"
+echo "== exp estimator (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp estimator \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --json "$ROOT/BENCH_estimator.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json, BENCH_persist.json and BENCH_estimator.json"

@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Diff a fresh bench sweep against the committed baselines.
+
+    python3 scripts/bench_diff.py <baseline_dir> <fresh_dir> [report_path]
+
+Baselines live in `bench/baselines/` as either
+
+  * a wrapper object ``{"provenance": "...", "rows": [...]}`` — the
+    committed form, carrying where the numbers came from, or
+  * a bare row array — the exact shape `scripts/bench.sh` emits, for
+    drop-in promotion of a measured run (``cp BENCH_x.json
+    bench/baselines/`` plus a provenance note is the upgrade path).
+
+Behaviour per file:
+
+  * ``provenance == "seed"`` (or an empty rows array): **record-only**.
+    The run's headline values are printed into the report so the
+    trajectory is visible in CI artifacts, but nothing can fail — a
+    seed baseline has no trustworthy numbers to compare against.
+  * anything else: every baseline headline row must reappear in the
+    fresh run (matched on its identity columns) with each headline
+    metric within ``RELCOUNT_BENCH_TOLERANCE`` (default 0.25, i.e.
+    +/-25%) relative deviation.  Out-of-band rows, vanished rows, and
+    malformed files fail the diff.
+
+Exit status: 0 on pass/record-only, 1 on any failure.
+"""
+
+import json
+import os
+import sys
+
+# file -> (identity columns, headline metric columns)
+HEADLINES = {
+    "BENCH_scaling.json": (("database", "strategy", "workers"), ("wall_s",)),
+    "BENCH_planner.json": (("database", "pre_fraction", "workers"), ("total_s",)),
+    "BENCH_churn.json": (("database", "churn_frac", "workers"), ("speedup",)),
+    "BENCH_serve.json": (("database", "workers"), ("throughput_rps",)),
+    "BENCH_persist.json": (("database", "workers"), ("save_s", "load_s")),
+    "BENCH_estimator.json": (
+        ("database", "mode"),
+        ("q_p50", "regret_saved_frac"),
+    ),
+}
+
+
+def load_rows(path):
+    """Return (provenance, rows) for a baseline or fresh file."""
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):
+        rows = data.get("rows", [])
+        provenance = data.get("provenance", "unknown")
+    elif isinstance(data, list):
+        rows, provenance = data, "measured"
+    else:
+        raise ValueError(f"{path}: expected an object or array")
+    if not isinstance(rows, list):
+        raise ValueError(f"{path}: rows is not an array")
+    return provenance, rows
+
+
+def ident(row, cols):
+    return tuple((c, row.get(c)) for c in cols)
+
+
+def fmt_ident(key):
+    return " ".join(f"{c}={v}" for c, v in key)
+
+
+def main():
+    if len(sys.argv) not in (3, 4):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    base_dir, fresh_dir = sys.argv[1], sys.argv[2]
+    report_path = sys.argv[3] if len(sys.argv) == 4 else None
+    tolerance = float(os.environ.get("RELCOUNT_BENCH_TOLERANCE", "0.25"))
+
+    lines = [f"# bench diff (tolerance +/-{tolerance:.0%})", ""]
+    failed = False
+
+    for name, (id_cols, metric_cols) in sorted(HEADLINES.items()):
+        base_path = os.path.join(base_dir, name)
+        fresh_path = os.path.join(fresh_dir, name)
+        lines.append(f"## {name}")
+        if not os.path.exists(base_path):
+            lines.append("FAIL: no committed baseline (seed one in bench/baselines/)")
+            failed = True
+            continue
+        if not os.path.exists(fresh_path):
+            lines.append("FAIL: fresh run missing (bench.sh did not emit it)")
+            failed = True
+            continue
+        try:
+            provenance, base_rows = load_rows(base_path)
+            _, fresh_rows = load_rows(fresh_path)
+        except (ValueError, json.JSONDecodeError) as e:
+            lines.append(f"FAIL: unreadable: {e}")
+            failed = True
+            continue
+
+        fresh_by_id = {ident(r, id_cols): r for r in fresh_rows}
+
+        if provenance == "seed" or not base_rows:
+            # Record-only: a seed baseline carries no comparable numbers.
+            lines.append(f"record-only (baseline provenance: {provenance})")
+            for key, row in sorted(fresh_by_id.items(), key=repr):
+                vals = ", ".join(f"{m}={row.get(m)}" for m in metric_cols)
+                lines.append(f"  {fmt_ident(key)}: {vals}")
+            continue
+
+        lines.append(f"comparing {len(base_rows)} baseline rows ({provenance})")
+        for brow in base_rows:
+            key = ident(brow, id_cols)
+            frow = fresh_by_id.get(key)
+            if frow is None:
+                lines.append(f"FAIL {fmt_ident(key)}: row vanished from fresh run")
+                failed = True
+                continue
+            for m in metric_cols:
+                try:
+                    b, f = float(brow[m]), float(frow[m])
+                except (KeyError, TypeError, ValueError):
+                    lines.append(f"FAIL {fmt_ident(key)}: metric {m} unreadable")
+                    failed = True
+                    continue
+                delta = (f - b) / b if b != 0.0 else (0.0 if f == 0.0 else float("inf"))
+                ok = abs(delta) <= tolerance
+                mark = "ok  " if ok else "FAIL"
+                lines.append(
+                    f"{mark} {fmt_ident(key)}: {m} {b:g} -> {f:g} ({delta:+.1%})"
+                )
+                failed = failed or not ok
+
+    lines.append("")
+    lines.append("RESULT: " + ("FAIL" if failed else "pass"))
+    report = "\n".join(lines) + "\n"
+    print(report, end="")
+    if report_path:
+        with open(report_path, "w") as f:
+            f.write(report)
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
