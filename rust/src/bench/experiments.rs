@@ -11,16 +11,20 @@ use crate::bench::driver::{
 use crate::datagen::churn::churn_batch;
 use crate::datagen::generator::generate;
 use crate::datagen::presets::{preset, paper_row_count, PRESET_NAMES};
+use crate::datagen::synth::{skewed_star_db, skewed_triangle_db};
+use crate::db::index::Backend;
+use crate::db::query::{positive_chain_ct, JoinStats};
+use crate::db::wcoj::JoinKernel;
 use crate::delta::maintain::{MaintainConfig, MaintainedCounts};
 use crate::delta::policy::MaintenanceMode;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::estimate::quality::{self, QualityMode};
 use crate::estimate::sampler::EstimatorConfig;
 use crate::lattice::Lattice;
 use crate::learn::search::SearchConfig;
 use crate::metrics::report::{
     ChurnRow, EstimatorRow, PersistRow, PlannerRow, RunRow, ScalingRow, ServeRow,
-    Table4Row, Table5Row,
+    Table4Row, Table5Row, WcojRow,
 };
 use crate::serve::{
     enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
@@ -459,6 +463,87 @@ pub fn estimator_rows(cfg: &ExpConfig) -> Result<Vec<EstimatorRow>> {
     Ok(rows)
 }
 
+/// The join-kernel differential experiment (`relcount exp wcoj`,
+/// EXPERIMENTS.md §E16): every lattice point with at least two
+/// relationships is counted by the binary chain kernel and by the
+/// worst-case optimal kernel ([`crate::db::wcoj`]), on the hub-skewed
+/// triangle/star constructions ([`crate::datagen::synth`]) and on the
+/// Table-4 presets; a hash-backend WCOJ run is the third oracle.
+/// Digests and [`JoinStats`] must be bit-identical across all three —
+/// any divergence is a hard error, never a reported row — so only the
+/// timings (and hence `speedup`) are machine-dependent.  The headline
+/// is the `tri_skew` triangle row: binary plans enumerate Θ(n²) hub
+/// pairs there while the WCOJ kernel touches Θ(n log n).
+pub fn wcoj_rows(cfg: &ExpConfig) -> Result<Vec<WcojRow>> {
+    let n = ((4000.0 * cfg.scale) as u32).max(16);
+    let mut dbs = vec![
+        ("tri_skew".to_string(), skewed_triangle_db(n)?),
+        ("star_skew".to_string(), skewed_star_db(n)?),
+    ];
+    for name in cfg.presets {
+        let db = generate(&preset(name, cfg.scale, cfg.seed)?)?;
+        dbs.push((name.to_string(), db));
+    }
+
+    let mut rows = Vec::new();
+    for (name, chain_db) in &dbs {
+        let mut wcoj_db = chain_db.clone();
+        wcoj_db.set_kernel(JoinKernel::Wcoj);
+        let mut hash_db = chain_db.clone();
+        hash_db.set_backend(Backend::Hash)?;
+        hash_db.set_kernel(JoinKernel::Wcoj);
+
+        let lattice = Lattice::build(&chain_db.schema, cfg.search.max_chain_length)?;
+        for p in &lattice.points {
+            if p.rels.len() < 2 {
+                continue;
+            }
+            let point = p
+                .rels
+                .iter()
+                .map(|&r| chain_db.schema.relationships[r].name.as_str())
+                .collect::<Vec<_>>()
+                .join("+");
+
+            let mut sc = JoinStats::default();
+            let start = Instant::now();
+            let a = positive_chain_ct(chain_db, &p.rels, &p.attr_vars, &mut sc)?;
+            let chain = start.elapsed();
+
+            let mut sw = JoinStats::default();
+            let start = Instant::now();
+            let b = positive_chain_ct(&wcoj_db, &p.rels, &p.attr_vars, &mut sw)?;
+            let wcoj = start.elapsed();
+
+            let mut sh = JoinStats::default();
+            let c = positive_chain_ct(&hash_db, &p.rels, &p.attr_vars, &mut sh)?;
+
+            let digests_ok = a.digest() == b.digest() && b.digest() == c.digest();
+            if !digests_ok || sc != sw || sw != sh {
+                return Err(Error::Data(format!(
+                    "wcoj kernel diverged from chain on {name} point {point}"
+                )));
+            }
+            rows.push(WcojRow {
+                database: name.clone(),
+                point,
+                pattern: p.pattern.name().to_string(),
+                rels: p.rels.len(),
+                rows_enumerated: sw.rows_enumerated,
+                chain,
+                wcoj,
+                speedup: if wcoj.as_secs_f64() > 0.0 {
+                    chain.as_secs_f64() / wcoj.as_secs_f64()
+                } else {
+                    f64::INFINITY
+                },
+                identical: true,
+            });
+        }
+    }
+    Ok(rows)
+}
+
 /// The restart-latency experiment (`relcount exp persist`,
 /// EXPERIMENTS.md §E14): per preset, build the maintained-count state,
 /// churn it so the snapshot is not the trivial initial generation, then
@@ -697,7 +782,7 @@ mod tests {
             assert!(r.points > 0, "{r:?}");
             assert!(r.q_max >= r.q_p95 && r.q_p95 >= r.q_p50 && r.q_p50 >= 1.0);
             assert!((0.0..=1.0).contains(&r.regret_saved_frac));
-            assert!(r.bytes_overrun_frac >= 0.0);
+            assert!(r.bytes_overrun_frac.unwrap_or(0.0) >= 0.0);
         }
         assert_eq!(rows[2].walks, 0, "summary mode must not sample");
         let again = estimator_rows(&cfg).unwrap();
@@ -706,6 +791,26 @@ mod tests {
             assert_eq!(a.q_max, b.q_max);
             assert_eq!(a.regret_saved_frac, b.regret_saved_frac);
         }
+    }
+
+    #[test]
+    fn wcoj_rows_cover_synthetics_and_presets() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = wcoj_rows(&cfg).unwrap();
+        // the generator hard-errors on any kernel divergence, so every
+        // surviving row is a witnessed agreement
+        assert!(rows.iter().all(|r| r.identical));
+        assert!(rows.iter().all(|r| r.rels >= 2));
+        let tri = rows
+            .iter()
+            .find(|r| r.database == "tri_skew" && r.pattern == "triangle")
+            .expect("triangle point present");
+        assert_eq!(tri.rels, 3);
+        assert!(tri.rows_enumerated > 0);
+        assert!(rows
+            .iter()
+            .any(|r| r.database == "star_skew" && r.pattern == "star"));
+        assert!(rows.iter().any(|r| r.database == "uw"));
     }
 
     #[test]

@@ -12,8 +12,10 @@ pub mod churn;
 pub mod config;
 pub mod generator;
 pub mod presets;
+pub mod synth;
 
 pub use churn::churn_batch;
 pub use config::{EntitySpec, GenConfig, RelSpec};
 pub use generator::generate;
 pub use presets::{preset, PRESET_NAMES};
+pub use synth::{skewed_star_db, skewed_triangle_count, skewed_triangle_db};

@@ -1,0 +1,168 @@
+//! Deterministic hub-skewed pattern databases for the WCOJ experiment.
+//!
+//! The Table-4 presets ([`crate::datagen::presets`]) pin the paper's
+//! benchmark shapes, which are chain-dominated; the AGM gap the WCOJ
+//! kernel closes only opens on *cyclic* patterns with degree skew.
+//! These constructions are the textbook worst case, built directly (no
+//! sampling) so runs are exactly reproducible:
+//!
+//! - [`skewed_triangle_db`] — three populations of size `n` where node
+//!   0 of each is a hub linked to everything.  Any binary two-relation
+//!   join materializes Θ(n²) intermediate pairs through the hubs, while
+//!   the full triangle count is only `3n - 2` rows; a worst-case
+//!   optimal plan touches Θ(n log n).
+//! - [`skewed_star_db`] — a hub population with three spoke
+//!   relationships, hub node 0 again of degree n.  The pattern is
+//!   acyclic, so this is the control: both kernels are near-linear and
+//!   the experiment should show parity rather than a gap.
+
+use crate::db::catalog::Database;
+use crate::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+use crate::error::{Error, Result};
+
+/// Triangle pattern A—B—C (R0: A→B, R1: B→C, R2: A→C), each population
+/// of size `n`, hub node 0 everywhere: R0 = {(0,b)} ∪ {(a,0)},
+/// R1 = {(0,c)} ∪ {(b,0)}, R2 = {(0,c)} ∪ {(a,0)}.  Attributes
+/// `A.x` and `C.y` (cardinality 3) give the group-by something to do.
+pub fn skewed_triangle_db(n: u32) -> Result<Database> {
+    if n < 2 {
+        return Err(Error::Data(format!(
+            "skewed_triangle_db needs n >= 2, got {n}"
+        )));
+    }
+    let schema = Schema::new(
+        vec![
+            EntityType { name: "A".into(), attrs: vec![Attribute::new("x", 3)] },
+            EntityType { name: "B".into(), attrs: vec![] },
+            EntityType { name: "C".into(), attrs: vec![Attribute::new("y", 3)] },
+        ],
+        vec![
+            RelationshipType { name: "R0".into(), from: 0, to: 1, attrs: vec![] },
+            RelationshipType { name: "R1".into(), from: 1, to: 2, attrs: vec![] },
+            RelationshipType { name: "R2".into(), from: 0, to: 2, attrs: vec![] },
+        ],
+    )?;
+    let mut db = Database::empty(schema);
+    for i in 0..n {
+        db.entities[0].push(&[i % 3])?;
+        db.entities[1].push(&[])?;
+        db.entities[2].push(&[i % 3])?;
+    }
+    for rel in 0..3usize {
+        for v in 0..n {
+            db.rels[rel].push(0, v, &[])?;
+        }
+        for v in 1..n {
+            db.rels[rel].push(v, 0, &[])?;
+        }
+    }
+    db.build_indexes()?;
+    Ok(db)
+}
+
+/// Number of triangles in [`skewed_triangle_db`]`(n)`: the hub rows
+/// `(0,0,*)`, `(0,b,0)` for `b >= 1` and `(a,0,0)` for `a >= 1`.
+pub fn skewed_triangle_count(n: u32) -> u64 {
+    3 * n as u64 - 2
+}
+
+/// Star pattern around a hub population H: E0: P→H, E1: H→Q, E2: H→S,
+/// all populations of size `n`.  Hub node 0 receives an edge from every
+/// P; every hub keeps constant-degree links into Q and S, so the full
+/// star join stays linear in `n` (the acyclic control case).
+pub fn skewed_star_db(n: u32) -> Result<Database> {
+    if n < 8 {
+        return Err(Error::Data(format!(
+            "skewed_star_db needs n >= 8, got {n}"
+        )));
+    }
+    let schema = Schema::new(
+        vec![
+            EntityType { name: "H".into(), attrs: vec![] },
+            EntityType { name: "P".into(), attrs: vec![Attribute::new("x", 2)] },
+            EntityType { name: "Q".into(), attrs: vec![] },
+            EntityType { name: "S".into(), attrs: vec![Attribute::new("z", 2)] },
+        ],
+        vec![
+            RelationshipType { name: "E0".into(), from: 1, to: 0, attrs: vec![] },
+            RelationshipType { name: "E1".into(), from: 0, to: 2, attrs: vec![] },
+            RelationshipType { name: "E2".into(), from: 0, to: 3, attrs: vec![] },
+        ],
+    )?;
+    let mut db = Database::empty(schema);
+    for i in 0..n {
+        db.entities[0].push(&[])?;
+        db.entities[1].push(&[i % 2])?;
+        db.entities[2].push(&[])?;
+        db.entities[3].push(&[i % 2])?;
+    }
+    for p in 0..n {
+        db.rels[0].push(p, 0, &[])?;
+        if p % (n - 1) != 0 {
+            db.rels[0].push(p, p % (n - 1), &[])?;
+        }
+    }
+    for h in 0..n {
+        db.rels[1].push(h, h, &[])?;
+        db.rels[1].push(h, (h + 1) % n, &[])?;
+        db.rels[1].push(h, (h + 7) % n, &[])?;
+        db.rels[2].push(h, (2 * h) % n, &[])?;
+        db.rels[2].push(h, (2 * h + 3) % n, &[])?;
+    }
+    db.build_indexes()?;
+    Ok(db)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::query::{positive_chain_ct, JoinStats};
+    use crate::db::wcoj::JoinKernel;
+    use crate::lattice::pattern::{classify, PatternClass};
+
+    #[test]
+    fn triangle_construction_has_the_predicted_count() {
+        let db = skewed_triangle_db(24).unwrap();
+        let mut stats = JoinStats::default();
+        let ct = positive_chain_ct(&db, &[0, 1, 2], &[], &mut stats).unwrap();
+        assert_eq!(ct.total().unwrap(), skewed_triangle_count(24) as i128);
+        assert_eq!(classify(&db.schema, &[0, 1, 2]), PatternClass::Triangle);
+    }
+
+    #[test]
+    fn triangle_kernels_agree_on_the_skewed_hub() {
+        let db = skewed_triangle_db(17).unwrap();
+        let mut wcoj_db = db.clone();
+        wcoj_db.set_kernel(JoinKernel::Wcoj);
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = positive_chain_ct(&db, &[0, 1, 2], &[], &mut s1).unwrap();
+        let b = positive_chain_ct(&wcoj_db, &[0, 1, 2], &[], &mut s2).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(a.digest(), b.digest());
+        assert_eq!(a.total().unwrap(), skewed_triangle_count(17) as i128);
+    }
+
+    #[test]
+    fn star_is_linear_sized_and_classified() {
+        let db = skewed_star_db(16).unwrap();
+        assert_eq!(classify(&db.schema, &[0, 1, 2]), PatternClass::Star);
+        let mut stats = JoinStats::default();
+        let ct = positive_chain_ct(&db, &[0, 1, 2], &[], &mut stats).unwrap();
+        // hub 0 carries n-ish P edges x 6 H-side pairs; other hubs O(1)
+        let total = ct.total().unwrap();
+        assert!(total > 0);
+        assert!(total < 16 * 16, "star join must stay linear, got {total}");
+        let mut wcoj_db = db.clone();
+        wcoj_db.set_kernel(JoinKernel::Wcoj);
+        let mut s2 = JoinStats::default();
+        let b = positive_chain_ct(&wcoj_db, &[0, 1, 2], &[], &mut s2).unwrap();
+        assert_eq!(b.total().unwrap(), total);
+    }
+
+    #[test]
+    fn constructions_reject_degenerate_sizes() {
+        assert!(skewed_triangle_db(1).is_err());
+        assert!(skewed_star_db(4).is_err());
+    }
+}

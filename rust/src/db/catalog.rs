@@ -4,12 +4,15 @@ use crate::db::index::{Backend, RelIx};
 use crate::db::schema::Schema;
 use crate::db::table::{EntityTable, RelTable};
 use crate::db::value::Code;
+use crate::db::wcoj::JoinKernel;
 use crate::error::{Error, Result};
 
 /// An in-memory relational database.  Indexes are built explicitly with
 /// [`Database::build_indexes`] on the selected storage [`Backend`]
 /// (columnar CSR by default, CLI `--backend`); mutation through anything
-/// but the incremental mutators invalidates them.
+/// but the incremental mutators invalidates them.  Positive-count joins
+/// dispatch through the selected [`JoinKernel`] (binary chain by
+/// default, CLI `--kernel`).
 #[derive(Clone, Debug)]
 pub struct Database {
     pub schema: Schema,
@@ -17,6 +20,7 @@ pub struct Database {
     pub rels: Vec<RelTable>,
     indexes: Option<Vec<RelIx>>,
     backend: Backend,
+    kernel: JoinKernel,
 }
 
 impl Database {
@@ -26,7 +30,14 @@ impl Database {
             schema.entities.iter().map(|e| EntityTable::new(e.attrs.len())).collect();
         let rels =
             schema.relationships.iter().map(|r| RelTable::new(r.attrs.len())).collect();
-        Database { schema, entities, rels, indexes: None, backend: Backend::default() }
+        Database {
+            schema,
+            entities,
+            rels,
+            indexes: None,
+            backend: Backend::default(),
+            kernel: JoinKernel::default(),
+        }
     }
 
     /// Construct from parts, validate, and build indexes.
@@ -41,6 +52,7 @@ impl Database {
             rels,
             indexes: None,
             backend: Backend::default(),
+            kernel: JoinKernel::default(),
         };
         db.validate()?;
         db.build_indexes()?;
@@ -50,6 +62,18 @@ impl Database {
     /// The relationship-index storage engine in use.
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The positive-count join kernel in use.
+    pub fn kernel(&self) -> JoinKernel {
+        self.kernel
+    }
+
+    /// Select the positive-count join kernel.  Pure dispatch — no index
+    /// rebuild; clones (per-worker shards, strategy snapshots) inherit
+    /// the selection, which is how the CLI flag reaches every consumer.
+    pub fn set_kernel(&mut self, kernel: JoinKernel) {
+        self.kernel = kernel;
     }
 
     /// Switch the index storage engine, rebuilding the indexes when they

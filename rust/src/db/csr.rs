@@ -72,8 +72,11 @@ impl CsrHalf {
         (self.offsets[r as usize] as usize, self.offsets[r as usize + 1] as usize)
     }
 
-    /// Build from `(row, nbr, tid)` triples (sorted in place).
-    fn build(mut triples: Vec<(u32, u32, u32)>, rows: usize) -> CsrHalf {
+    /// Build from `(row, nbr, tid)` triples (sorted in place).  The
+    /// offsets column is `u32`, so the cumulative count would wrap
+    /// silently past `u32::MAX` triples — guard before accumulating.
+    fn build(mut triples: Vec<(u32, u32, u32)>, rows: usize) -> Result<CsrHalf> {
+        Error::check_u32_capacity("csr offset column", triples.len() as u64)?;
         triples.sort_unstable();
         let mut offsets = vec![0u32; rows + 1];
         for &(r, _, _) in &triples {
@@ -82,11 +85,11 @@ impl CsrHalf {
         for i in 0..rows {
             offsets[i + 1] += offsets[i];
         }
-        CsrHalf {
+        Ok(CsrHalf {
             offsets,
             nbr: triples.iter().map(|t| t.1).collect(),
             tid: triples.iter().map(|t| t.2).collect(),
-        }
+        })
     }
 
     /// Position of `nbr` inside row `r`'s run.
@@ -209,8 +212,8 @@ impl CsrIndex {
                 )));
             }
         }
-        let fwd = CsrHalf::build(f_triples, n_from as usize);
-        let rev = CsrHalf::build(r_triples, n_to as usize);
+        let fwd = CsrHalf::build(f_triples, n_from as usize)?;
+        let rev = CsrHalf::build(r_triples, n_to as usize)?;
         Ok(CsrIndex {
             fwd,
             rev,
@@ -285,6 +288,30 @@ impl CsrIndex {
         }
     }
 
+    /// The clean sorted `(neighbor, tid)` run of `from` as parallel
+    /// column slices, under the same no-overlay condition as
+    /// [`CsrIndex::sorted_nbrs_from`] — unlike [`CsrIndex::row_from`]
+    /// this never allocates, so it doubles as a cheap cleanliness probe.
+    pub fn sorted_run_from(&self, f: u32) -> Option<(&[u32], &[u32])> {
+        if self.ov_fwd.is_empty() || !self.ov_fwd.touches(f) {
+            let (lo, hi) = self.fwd.run(f);
+            Some((&self.fwd.nbr[lo..hi], &self.fwd.tid[lo..hi]))
+        } else {
+            None
+        }
+    }
+
+    /// The clean sorted `(neighbor, tid)` run of `to` (see
+    /// [`CsrIndex::sorted_run_from`]).
+    pub fn sorted_run_to(&self, t: u32) -> Option<(&[u32], &[u32])> {
+        if self.ov_rev.is_empty() || !self.ov_rev.touches(t) {
+            let (lo, hi) = self.rev.run(t);
+            Some((&self.rev.nbr[lo..hi], &self.rev.tid[lo..hi]))
+        } else {
+            None
+        }
+    }
+
     fn row<'a>(half: &'a CsrHalf, ov: &'a Overlay, r: u32) -> CsrRow<'a> {
         let (lo, hi) = half.run(r);
         if ov.is_empty() || !ov.touches(r) {
@@ -344,6 +371,9 @@ impl CsrIndex {
                 "duplicate relationship pair ({from},{to})"
             )));
         }
+        // compaction folds the overlay back into u32 offsets; keep the
+        // live pair count inside the space they can address
+        Error::check_u32_capacity("csr live pairs", self.len() as u64 + 1)?;
         self.ov_fwd.insert_add(pair_key(from, to), t);
         self.ov_rev.insert_add(pair_key(to, from), t);
         self.maybe_compact();
@@ -607,6 +637,23 @@ mod tests {
             }
             CsrRow::Dirty(v) => v,
         }
+    }
+
+    #[test]
+    fn sorted_runs_expose_parallel_columns_only_when_clean() {
+        let t = table();
+        let mut ix = CsrIndex::build(&t, 2, 3).unwrap();
+        let (nbr, tid) = ix.sorted_run_from(0).unwrap();
+        assert_eq!(nbr, &[1, 2]);
+        assert_eq!(tid, &[0, 1]);
+        ix.insert(1, 2, 3).unwrap();
+        assert!(ix.sorted_run_from(1).is_none(), "dirty row must not lend a run");
+        assert!(ix.sorted_run_from(0).is_some(), "untouched row stays clean");
+        assert!(ix.sorted_run_to(2).is_none());
+        ix.compact();
+        let (nbr, tid) = ix.sorted_run_from(1).unwrap();
+        assert_eq!(nbr, &[1, 2]);
+        assert_eq!(tid, &[2, 3]);
     }
 
     #[test]

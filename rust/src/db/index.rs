@@ -351,6 +351,26 @@ impl RelIx {
         }
     }
 
+    /// The clean sorted `(neighbor, tid)` run of `f` — both parallel
+    /// column slices, available under the same conditions as
+    /// [`RelIx::sorted_nbrs_from`].  The WCOJ kernel intersects these in
+    /// place; hash/dirty rows take its sorted-memo fallback instead.
+    pub fn sorted_run_from(&self, f: u32) -> Option<(&[u32], &[u32])> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix.sorted_run_from(f),
+        }
+    }
+
+    /// The clean sorted `(neighbor, tid)` run of `t` (see
+    /// [`RelIx::sorted_run_from`]).
+    pub fn sorted_run_to(&self, t: u32) -> Option<(&[u32], &[u32])> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix.sorted_run_to(t),
+        }
+    }
+
     /// Largest adjacency-list length in either direction.
     pub fn max_degree(&self) -> usize {
         match self {

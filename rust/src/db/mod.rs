@@ -18,6 +18,7 @@ pub mod query;
 pub mod schema;
 pub mod table;
 pub mod value;
+pub mod wcoj;
 
 pub use catalog::Database;
 pub use csr::CsrIndex;
@@ -25,3 +26,4 @@ pub use index::{Backend, RelIndex, RelIx};
 pub use schema::{Attribute, EntityType, RelationshipType, Schema};
 pub use table::{EntityTable, RelTable};
 pub use value::Code;
+pub use wcoj::JoinKernel;

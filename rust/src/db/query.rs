@@ -28,6 +28,7 @@
 use crate::ct::cttable::CtTable;
 use crate::db::catalog::Database;
 use crate::db::schema::Schema;
+use crate::db::wcoj::JoinKernel;
 use crate::error::{Error, Result};
 use crate::meta::extract::plan_chain;
 use crate::meta::rvar::RVar;
@@ -102,7 +103,12 @@ pub fn positive_chain_ct(
     vars: &[RVar],
     stats: &mut JoinStats,
 ) -> Result<CtTable> {
-    chain_ct_bound(db, chain, vars, None, stats)
+    match db.kernel() {
+        JoinKernel::Chain => chain_ct_bound(db, chain, vars, None, stats),
+        // the WCOJ twin: bit-identical counts and JoinStats, different
+        // enumeration order (variable-at-a-time, DESIGN.md §3g)
+        JoinKernel::Wcoj => crate::db::wcoj::wcoj_chain_ct(db, chain, vars, stats),
+    }
 }
 
 /// The positive-count **delta** of one tuple: GROUP-BY counts over
@@ -482,8 +488,9 @@ pub fn intersect_count(mut a: &[u32], mut b: &[u32]) -> u64 {
 }
 
 /// First position in a strictly ascending run whose value is `>= x`,
-/// found by doubling probes then a bounded binary search.
-fn gallop_lower_bound(s: &[u32], x: u32) -> usize {
+/// found by doubling probes then a bounded binary search (shared with
+/// the WCOJ kernel's leapfrog seeks).
+pub(crate) fn gallop_lower_bound(s: &[u32], x: u32) -> usize {
     let mut hi = 1usize;
     while hi < s.len() && s[hi] < x {
         hi <<= 1;

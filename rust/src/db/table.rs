@@ -28,6 +28,8 @@ impl EntityTable {
                 self.cols.len()
             )));
         }
+        // entity ids are u32; `n += 1` at the boundary would wrap to 0
+        Error::check_u32_capacity("entity ids", self.n as u64 + 1)?;
         for (c, &v) in self.cols.iter_mut().zip(values) {
             c.push(v);
         }
@@ -110,6 +112,9 @@ impl RelTable {
                 self.cols.len()
             )));
         }
+        // tuple ids are u32: an unchecked 2^32-th push would hand out a
+        // wrapped id and silently alias tuple 0
+        Error::check_u32_capacity("relationship tuple ids", self.from.len() as u64 + 1)?;
         self.from.push(from);
         self.to.push(to);
         for (c, &v) in self.cols.iter_mut().zip(values) {

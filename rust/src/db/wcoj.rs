@@ -1,0 +1,907 @@
+//! Worst-case optimal multi-way count kernel (LeapFrog / Atreides style).
+//!
+//! The binary chain enumerator in [`crate::db::query`] extends a partial
+//! binding one *relationship* at a time, so on skewed data a pairwise
+//! plan can enumerate intermediate joins asymptotically larger than the
+//! output (the AGM gap: for the triangle pattern every binary plan is
+//! Θ(N²) on the hub construction while the output is Θ(N)).  This
+//! module binds one *variable* (entity type) at a time instead: a new
+//! variable's candidates are the intersection of the sorted neighbor
+//! runs of every relationship connecting it to the bound prefix,
+//! computed with the same merge/gallop primitives the chain kernel's
+//! intersection fast path uses.  Clean CSR rows are intersected in
+//! place; dirty CSR rows and the hash backend fall back to a per-query
+//! sorted memo, so both storage engines produce identical answers.
+//!
+//! The variable order is chosen greedily from cardinality estimates —
+//! [`SummaryStats`] degree summaries when the caller maintains them
+//! (the PR 7 estimator tier), raw index fan-outs otherwise.  The order
+//! affects running time only, never counts: results are bit-identical
+//! to the chain enumerator under the established discipline (same
+//! `JoinStats` semantics, comparable `cache_digest`s), so the chain
+//! kernel and the hash backend double as differential oracles on every
+//! connected pattern — chains, stars, triangles and small cliques.
+
+use crate::ct::cttable::CtTable;
+use crate::db::catalog::Database;
+use crate::db::index::RelIx;
+use crate::db::query::{gallop_lower_bound, intersect_count, JoinStats};
+use crate::error::{Error, Result};
+use crate::estimate::summary::SummaryStats;
+use crate::meta::extract::plan_chain;
+use crate::meta::rvar::RVar;
+use crate::util::fxhash::FxHashMap;
+
+/// Positive-count join kernel selector (CLI `--kernel`).  Carried by
+/// [`Database`] so every consumer — all four strategies, the Möbius
+/// completer and the `ParallelCoordinator`'s per-worker clones —
+/// dispatches through the same switch in
+/// [`crate::db::query::positive_chain_ct`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum JoinKernel {
+    /// Binary chain enumeration, one relationship per step (the
+    /// default; also the delta-maintenance path's only kernel).
+    #[default]
+    Chain,
+    /// Worst-case optimal variable-at-a-time enumeration.
+    Wcoj,
+}
+
+impl JoinKernel {
+    pub fn parse(s: &str) -> Option<JoinKernel> {
+        match s.to_ascii_lowercase().as_str() {
+            "chain" => Some(JoinKernel::Chain),
+            "wcoj" => Some(JoinKernel::Wcoj),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            JoinKernel::Chain => "chain",
+            JoinKernel::Wcoj => "wcoj",
+        }
+    }
+}
+
+/// Greedy connectivity-preserving variable order: start from the
+/// cheapest population, then repeatedly append the not-yet-bound entity
+/// type with the smallest estimated candidate count given the bound
+/// prefix (minimum average degree over its connecting relationships).
+/// Estimates come from `summary` when provided, otherwise from index
+/// cardinalities; ties break toward the smaller entity-type id, so the
+/// order is deterministic for a given database state.
+pub fn variable_order(
+    db: &Database,
+    chain: &[usize],
+    pops: &[usize],
+    summary: Option<&SummaryStats>,
+) -> Vec<usize> {
+    let mut order: Vec<usize> = Vec::with_capacity(pops.len());
+    let mut bound = vec![false; db.schema.entities.len()];
+    while order.len() < pops.len() {
+        let mut best: Option<(f64, usize)> = None;
+        for &v in pops {
+            if bound[v] {
+                continue;
+            }
+            let score = if order.is_empty() {
+                db.entities[v].len() as f64
+            } else {
+                // min avg degree toward v over rels whose other endpoint
+                // is already bound; unconnected vars wait their turn
+                let mut s: Option<f64> = None;
+                for &r in chain {
+                    let (a, b) = db.schema.rel_endpoints(r);
+                    let est = if b == v && bound[a] {
+                        avg_degree(db, summary, r, true)
+                    } else if a == v && bound[b] {
+                        avg_degree(db, summary, r, false)
+                    } else {
+                        continue;
+                    };
+                    s = Some(s.map_or(est, |cur: f64| cur.min(est)));
+                }
+                match s {
+                    Some(s) => s,
+                    None => continue,
+                }
+            };
+            // strict < keeps the first (smallest-id) minimum
+            if best.map_or(true, |(bs, _)| score < bs) {
+                best = Some((score, v));
+            }
+        }
+        match best {
+            Some((_, v)) => {
+                bound[v] = true;
+                order.push(v);
+            }
+            // disconnected pattern: plan_chain rejects these before we
+            // run, but stay total — append remaining vars in id order
+            None => {
+                for &v in pops {
+                    if !bound[v] {
+                        bound[v] = true;
+                        order.push(v);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    order
+}
+
+/// Expected number of `to`-values reachable from one bound `from`
+/// value of `rel` (or the reverse when `toward_to` is false).
+fn avg_degree(
+    db: &Database,
+    summary: Option<&SummaryStats>,
+    rel: usize,
+    toward_to: bool,
+) -> f64 {
+    if let Some(s) = summary {
+        let rs = &s.rels[rel];
+        let active = if toward_to {
+            rs.fan_out.active()
+        } else {
+            rs.fan_in.active()
+        };
+        return rs.rows as f64 / active.max(1) as f64;
+    }
+    let (a, b) = db.schema.rel_endpoints(rel);
+    let other = if toward_to { a } else { b };
+    let rows = db.index(rel).map(|ix| ix.len()).unwrap_or(0);
+    rows as f64 / (db.entities[other].len() as f64).max(1.0)
+}
+
+/// One already-bound-side constraint on the variable being extended.
+struct Cons {
+    rel: usize,
+    /// Position of `rel` in the canonical (sorted) chain — indexes the
+    /// shared `tuples` scratch the group-by key reads rel attrs from.
+    pos: usize,
+    /// The already-bound endpoint entity type.
+    other: usize,
+    /// The new variable sits on the `to` side of `rel`.
+    v_is_to: bool,
+}
+
+/// One variable of the enumeration, with the relationships that
+/// constrain it against the bound prefix (empty for the first).
+struct Step {
+    var: usize,
+    cons: Vec<Cons>,
+}
+
+/// Per-query sorted-run memo for rows the CSR engine cannot hand out as
+/// clean slices: hash-backend adjacency (insertion order) and CSR rows
+/// with pending overlay entries.  Keyed by (rel, orientation, value);
+/// each materialized row is sorted by neighbor, mirroring the clean-run
+/// order, so intersection results cannot depend on the backend.
+type RunMemo = FxHashMap<(u32, bool, u32), Vec<(u32, u32)>>;
+
+/// A sorted `(neighbor, tid)` run for one constraint.
+enum Run<'a> {
+    /// Clean CSR row: borrowed nbr/tid column slices.
+    Clean { nbr: &'a [u32], tid: &'a [u32] },
+    /// Memoized row (hash backend or dirty CSR row).
+    Pairs(&'a [(u32, u32)]),
+}
+
+impl Run<'_> {
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            Run::Clean { nbr, .. } => nbr.len(),
+            Run::Pairs(p) => p.len(),
+        }
+    }
+
+    #[inline]
+    fn val(&self, i: usize) -> u32 {
+        match self {
+            Run::Clean { nbr, .. } => nbr[i],
+            Run::Pairs(p) => p[i].0,
+        }
+    }
+
+    #[inline]
+    fn tid(&self, i: usize) -> u32 {
+        match self {
+            Run::Clean { tid, .. } => tid[i],
+            Run::Pairs(p) => p[i].1,
+        }
+    }
+
+    /// First position `>= lo` whose neighbor is `>= x` (gallop seek).
+    #[inline]
+    fn seek(&self, lo: usize, x: u32) -> usize {
+        match self {
+            Run::Clean { nbr, .. } => lo + gallop_lower_bound(&nbr[lo..], x),
+            Run::Pairs(p) => lo + gallop_pairs_lower_bound(&p[lo..], x),
+        }
+    }
+}
+
+/// [`gallop_lower_bound`] over the neighbor component of a pair run.
+fn gallop_pairs_lower_bound(s: &[(u32, u32)], x: u32) -> usize {
+    let mut hi = 1usize;
+    while hi < s.len() && s[hi].0 < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    let hi = hi.min(s.len());
+    lo + s[lo..hi].partition_point(|&(v, _)| v < x)
+}
+
+/// Candidates for one variable: the intersection members, plus the
+/// tuple id each constraining relationship matched them with (`k` tids
+/// per candidate, in constraint order).
+struct Cands {
+    k: usize,
+    vals: Vec<u32>,
+    tids: Vec<u32>,
+}
+
+/// Leapfrog intersection of `runs`: iterate the shortest run and seek
+/// the rest.  Runs are strictly ascending in neighbor (pairs are unique
+/// per relationship), so each cursor only moves forward.
+fn collect_candidates(runs: &[Run<'_>]) -> Cands {
+    let k = runs.len();
+    let pi = (0..k).min_by_key(|&i| runs[i].len()).expect("k >= 1");
+    let mut cur = vec![0usize; k];
+    let mut out = Cands { k, vals: Vec::new(), tids: Vec::new() };
+    'probe: for i in 0..runs[pi].len() {
+        let c = runs[pi].val(i);
+        for (j, run) in runs.iter().enumerate() {
+            if j == pi {
+                continue;
+            }
+            let p = run.seek(cur[j], c);
+            cur[j] = p;
+            if p >= run.len() {
+                // this run is exhausted; later probes are larger still
+                break 'probe;
+            }
+            if run.val(p) != c {
+                continue 'probe;
+            }
+        }
+        out.vals.push(c);
+        for (j, run) in runs.iter().enumerate() {
+            out.tids.push(run.tid(if j == pi { i } else { cur[j] }));
+        }
+    }
+    out
+}
+
+/// Size of the k-way intersection (count-only collapse at the last
+/// variable).  Two clean runs reuse [`intersect_count`] directly.
+fn intersect_size(runs: &[Run<'_>]) -> u64 {
+    if runs.len() == 1 {
+        return runs[0].len() as u64;
+    }
+    if let [Run::Clean { nbr: a, .. }, Run::Clean { nbr: b, .. }] = runs {
+        return intersect_count(a, b);
+    }
+    let k = runs.len();
+    let pi = (0..k).min_by_key(|&i| runs[i].len()).expect("k >= 2");
+    let mut cur = vec![0usize; k];
+    let mut n = 0u64;
+    'probe: for i in 0..runs[pi].len() {
+        let c = runs[pi].val(i);
+        for (j, run) in runs.iter().enumerate() {
+            if j == pi {
+                continue;
+            }
+            let p = run.seek(cur[j], c);
+            cur[j] = p;
+            if p >= run.len() {
+                break 'probe;
+            }
+            if run.val(p) != c {
+                continue 'probe;
+            }
+        }
+        n += 1;
+    }
+    n
+}
+
+/// Context threaded through the recursive variable-at-a-time descent.
+struct WcojCx<'a> {
+    db: &'a Database,
+    steps: Vec<Step>,
+    /// Degree screens for the seed variable: (rel, seed-is-from).
+    seed_filters: Vec<(usize, bool)>,
+    /// The last variable admits the count-only collapse (its entity
+    /// attrs and its completing rels' attrs are all outside the key).
+    collapse_last: bool,
+}
+
+/// Worst-case optimal positive ct-table for a connected relationship
+/// set — the WCOJ twin of the chain path inside
+/// [`crate::db::query::positive_chain_ct`], which dispatches here when
+/// the database's [`JoinKernel`] is `Wcoj`.  Counts, `JoinStats` and
+/// ct-table contents are bit-identical to the chain enumerator's.
+pub fn wcoj_chain_ct(
+    db: &Database,
+    chain: &[usize],
+    vars: &[RVar],
+    stats: &mut JoinStats,
+) -> Result<CtTable> {
+    wcoj_chain_ct_with(db, chain, vars, None, stats)
+}
+
+/// [`wcoj_chain_ct`] with an optional summary-statistics tier steering
+/// the variable order (`exp wcoj` and estimator-maintaining callers).
+pub fn wcoj_chain_ct_with(
+    db: &Database,
+    chain: &[usize],
+    vars: &[RVar],
+    summary: Option<&SummaryStats>,
+    stats: &mut JoinStats,
+) -> Result<CtTable> {
+    let plan = plan_chain(db, chain)?;
+    for v in vars {
+        let ok = match v {
+            RVar::EntityAttr { et, .. } => plan.pops.contains(et),
+            RVar::RelAttr { rel, .. } => plan.chain.contains(rel),
+            RVar::RelInd { .. } => false,
+        };
+        if !ok {
+            return Err(Error::Ct(format!(
+                "variable {v:?} not available on chain {chain:?}"
+            )));
+        }
+    }
+    let mut out = CtTable::new(&db.schema, vars.to_vec())?;
+    stats.chain_queries += 1;
+    stats.join_steps += plan.join_order.len() as u64;
+
+    // Precompiled key accessors, as in the chain kernel; rel attrs are
+    // read through the canonical chain position.
+    enum Access {
+        Ent { et: usize, attr: usize, stride: u128 },
+        Rel { rel: usize, pos: usize, attr: usize, stride: u128 },
+    }
+    let mut base: u128 = 0;
+    let mut accesses = Vec::with_capacity(vars.len());
+    for (j, v) in vars.iter().enumerate() {
+        let stride = out.stride(j);
+        match *v {
+            RVar::EntityAttr { et, attr } => {
+                accesses.push(Access::Ent { et, attr, stride })
+            }
+            RVar::RelAttr { rel, attr } => {
+                let pos = plan
+                    .chain
+                    .iter()
+                    .position(|&r| r == rel)
+                    .expect("rel in chain");
+                base += stride; // ct coords = raw + 1
+                accesses.push(Access::Rel { rel, pos, attr, stride });
+            }
+            RVar::RelInd { .. } => unreachable!("validated above"),
+        }
+    }
+    let n_ets = db.schema.entities.len();
+    let mut needed_ets = vec![false; n_ets];
+    let mut needed_pos = vec![false; plan.chain.len()];
+    for acc in &accesses {
+        match *acc {
+            Access::Ent { et, .. } => needed_ets[et] = true,
+            Access::Rel { pos, .. } => needed_pos[pos] = true,
+        }
+    }
+
+    let order = variable_order(db, &plan.chain, &plan.pops, summary);
+    let mut steps: Vec<Step> = order
+        .iter()
+        .map(|&v| Step { var: v, cons: Vec::new() })
+        .collect();
+    let depth_of = |et: usize| order.iter().position(|&v| v == et);
+    for (pos, &rel) in plan.chain.iter().enumerate() {
+        let (a, b) = db.schema.rel_endpoints(rel);
+        let (da, db_) = match (depth_of(a), depth_of(b)) {
+            (Some(x), Some(y)) => (x, y),
+            _ => unreachable!("chain endpoints are in pops"),
+        };
+        // the rel constrains whichever endpoint binds later
+        let (d, other, v_is_to) = if da < db_ {
+            (db_, a, true)
+        } else {
+            (da, b, false)
+        };
+        steps[d].cons.push(Cons { rel, pos, other, v_is_to });
+    }
+    for step in steps.iter().skip(1) {
+        if step.cons.is_empty() {
+            return Err(Error::Ct(format!(
+                "wcoj: disconnected variable order for chain {chain:?}"
+            )));
+        }
+    }
+    let seed_filters: Vec<(usize, bool)> = plan
+        .chain
+        .iter()
+        .filter_map(|&rel| {
+            let (a, b) = db.schema.rel_endpoints(rel);
+            if a == order[0] {
+                Some((rel, true))
+            } else if b == order[0] {
+                Some((rel, false))
+            } else {
+                None
+            }
+        })
+        .collect();
+    let collapse_last = {
+        let last = steps.last().expect("pattern has >= 2 variables");
+        !needed_ets[last.var] && last.cons.iter().all(|c| !needed_pos[c.pos])
+    };
+
+    let cx = WcojCx { db, steps, seed_filters, collapse_last };
+    let mut binding: Vec<u32> = vec![0; n_ets];
+    let mut tuples: Vec<u32> = vec![0; plan.chain.len()];
+    let mut memo = RunMemo::default();
+    let mut rows = 0u64;
+    descend(
+        &cx,
+        0,
+        1,
+        &mut binding,
+        &mut tuples,
+        &mut memo,
+        &mut |binding, tuples, mult| {
+            let mut key = base;
+            for a in &accesses {
+                key += match *a {
+                    Access::Ent { et, attr, stride } => {
+                        db.entities[et].value(attr, binding[et]) as u128 * stride
+                    }
+                    Access::Rel { rel, pos, attr, stride } => {
+                        db.rels[rel].value(attr, tuples[pos]) as u128 * stride
+                    }
+                };
+            }
+            rows += mult as u64;
+            out.add_key(key, mult)
+        },
+    )?;
+    stats.rows_enumerated += rows;
+    Ok(out)
+}
+
+/// Borrow the sorted run for one constraint, memoizing rows the engine
+/// cannot hand out as clean slices.  Phase 1 of each step fills the
+/// memo (mutable); phase 2 takes the borrows.
+fn ensure_memo(
+    db: &Database,
+    memo: &mut RunMemo,
+    cons: &Cons,
+    bound_val: u32,
+) -> Result<()> {
+    let ix = db.index(cons.rel)?;
+    let clean = if cons.v_is_to {
+        ix.sorted_run_from(bound_val).is_some()
+    } else {
+        ix.sorted_run_to(bound_val).is_some()
+    };
+    if clean {
+        return Ok(());
+    }
+    let key = (cons.rel as u32, cons.v_is_to, bound_val);
+    if !memo.contains_key(&key) {
+        let table = &db.rels[cons.rel];
+        let mut row: Vec<(u32, u32)> = if cons.v_is_to {
+            ix.tids_from(bound_val)
+                .map(|t| (table.to[t as usize], t))
+                .collect()
+        } else {
+            ix.tids_to(bound_val)
+                .map(|t| (table.from[t as usize], t))
+                .collect()
+        };
+        row.sort_unstable();
+        memo.insert(key, row);
+    }
+    Ok(())
+}
+
+fn run_for<'a>(
+    ix: &'a RelIx,
+    memo: &'a RunMemo,
+    cons: &Cons,
+    bound_val: u32,
+) -> Run<'a> {
+    let clean = if cons.v_is_to {
+        ix.sorted_run_from(bound_val)
+    } else {
+        ix.sorted_run_to(bound_val)
+    };
+    match clean {
+        Some((nbr, tid)) => Run::Clean { nbr, tid },
+        None => Run::Pairs(
+            memo.get(&(cons.rel as u32, cons.v_is_to, bound_val))
+                .expect("memoized in ensure_memo"),
+        ),
+    }
+}
+
+/// Recursive variable-at-a-time descent.  `mult` carries collapsed
+/// multiplicities exactly as the chain enumerator's kernels do, so the
+/// leaf emit keeps group counts and `rows_enumerated` exact.
+fn descend(
+    cx: &WcojCx<'_>,
+    depth: usize,
+    mult: i128,
+    binding: &mut [u32],
+    tuples: &mut [u32],
+    memo: &mut RunMemo,
+    emit: &mut dyn FnMut(&[u32], &[u32], i128) -> Result<()>,
+) -> Result<()> {
+    if depth == cx.steps.len() {
+        return emit(binding, tuples, mult);
+    }
+    let db = cx.db;
+    let step = &cx.steps[depth];
+    if depth == 0 {
+        // seed variable: scan its population, screening out values that
+        // cannot satisfy some incident relationship (degree 0)
+        let pop = db.entities[step.var].len();
+        'seed: for c in 0..pop {
+            for &(rel, is_from) in &cx.seed_filters {
+                let ix = db.index(rel)?;
+                let deg = if is_from {
+                    ix.degree_from(c)
+                } else {
+                    ix.degree_to(c)
+                };
+                if deg == 0 {
+                    continue 'seed;
+                }
+            }
+            binding[step.var] = c;
+            descend(cx, depth + 1, mult, binding, tuples, memo, emit)?;
+        }
+        return Ok(());
+    }
+    for cons in &step.cons {
+        ensure_memo(db, memo, cons, binding[cons.other])?;
+    }
+    if depth + 1 == cx.steps.len() && cx.collapse_last {
+        // count-only collapse: nothing downstream reads this variable
+        // or its completing rels, so the subtree contributes |∩ runs|
+        let n = {
+            let mut runs = Vec::with_capacity(step.cons.len());
+            for cons in &step.cons {
+                let ix = db.index(cons.rel)?;
+                runs.push(run_for(ix, memo, cons, binding[cons.other]));
+            }
+            intersect_size(&runs)
+        };
+        if n > 0 {
+            emit(binding, tuples, mult * n as i128)?;
+        }
+        return Ok(());
+    }
+    let cands = {
+        let mut runs = Vec::with_capacity(step.cons.len());
+        for cons in &step.cons {
+            let ix = db.index(cons.rel)?;
+            runs.push(run_for(ix, memo, cons, binding[cons.other]));
+        }
+        collect_candidates(&runs)
+    };
+    for (i, &c) in cands.vals.iter().enumerate() {
+        binding[step.var] = c;
+        for (j, cons) in step.cons.iter().enumerate() {
+            tuples[cons.pos] = cands.tids[i * cands.k + j];
+        }
+        descend(cx, depth + 1, mult, binding, tuples, memo, emit)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::index::Backend;
+    use crate::db::query::positive_chain_ct;
+    use crate::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+
+    /// Triangle schema A-B-C with all three pairwise rels, deterministic
+    /// membership predicates, and attrs on A, C and R2.
+    fn triangle_db() -> Database {
+        let schema = Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![Attribute::new("x", 2)] },
+                EntityType { name: "B".into(), attrs: vec![] },
+                EntityType { name: "C".into(), attrs: vec![Attribute::new("y", 3)] },
+            ],
+            vec![
+                RelationshipType { name: "R0".into(), from: 0, to: 1, attrs: vec![] },
+                RelationshipType { name: "R1".into(), from: 1, to: 2, attrs: vec![] },
+                RelationshipType {
+                    name: "R2".into(),
+                    from: 0,
+                    to: 2,
+                    attrs: vec![Attribute::new("w", 2)],
+                },
+            ],
+        )
+        .unwrap();
+        let mut db = Database::empty(schema);
+        for a in 0..6u32 {
+            db.entities[0].push(&[a % 2]).unwrap();
+        }
+        for _ in 0..5u32 {
+            db.entities[1].push(&[]).unwrap();
+        }
+        for c in 0..7u32 {
+            db.entities[2].push(&[c % 3]).unwrap();
+        }
+        for a in 0..6u32 {
+            for b in 0..5u32 {
+                if (a + 2 * b) % 3 != 1 {
+                    db.rels[0].push(a, b, &[]).unwrap();
+                }
+            }
+        }
+        for b in 0..5u32 {
+            for c in 0..7u32 {
+                if (b + c) % 2 == 0 {
+                    db.rels[1].push(b, c, &[]).unwrap();
+                }
+            }
+        }
+        for a in 0..6u32 {
+            for c in 0..7u32 {
+                if (2 * a + c) % 3 != 0 {
+                    db.rels[2].push(a, c, &[(a + c) % 2]).unwrap();
+                }
+            }
+        }
+        db.build_indexes().unwrap();
+        db
+    }
+
+    fn star_db() -> Database {
+        let schema = Schema::new(
+            vec![
+                EntityType { name: "Hub".into(), attrs: vec![] },
+                EntityType { name: "P".into(), attrs: vec![Attribute::new("x", 2)] },
+                EntityType { name: "Q".into(), attrs: vec![] },
+                EntityType { name: "S".into(), attrs: vec![Attribute::new("z", 2)] },
+            ],
+            vec![
+                RelationshipType { name: "E0".into(), from: 1, to: 0, attrs: vec![] },
+                RelationshipType { name: "E1".into(), from: 0, to: 2, attrs: vec![] },
+                RelationshipType { name: "E2".into(), from: 0, to: 3, attrs: vec![] },
+            ],
+        )
+        .unwrap();
+        let mut db = Database::empty(schema);
+        for _ in 0..4u32 {
+            db.entities[0].push(&[]).unwrap();
+        }
+        for p in 0..5u32 {
+            db.entities[1].push(&[p % 2]).unwrap();
+        }
+        for _ in 0..6u32 {
+            db.entities[2].push(&[]).unwrap();
+        }
+        for s in 0..3u32 {
+            db.entities[3].push(&[s % 2]).unwrap();
+        }
+        for p in 0..5u32 {
+            for h in 0..4u32 {
+                if (p + h) % 3 != 0 {
+                    db.rels[0].push(p, h, &[]).unwrap();
+                }
+            }
+        }
+        for h in 0..4u32 {
+            for q in 0..6u32 {
+                if (h + 2 * q) % 4 != 1 {
+                    db.rels[1].push(h, q, &[]).unwrap();
+                }
+            }
+        }
+        for h in 0..4u32 {
+            for s in 0..3u32 {
+                if (h + s) % 2 == 0 {
+                    db.rels[2].push(h, s, &[]).unwrap();
+                }
+            }
+        }
+        db.build_indexes().unwrap();
+        db
+    }
+
+    fn compare_kernels(db: &Database, chain: &[usize], vars: &[RVar]) {
+        let mut chain_db = db.clone();
+        chain_db.set_kernel(JoinKernel::Chain);
+        let mut wcoj_db = db.clone();
+        wcoj_db.set_kernel(JoinKernel::Wcoj);
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = positive_chain_ct(&chain_db, chain, vars, &mut s1).unwrap();
+        let b = positive_chain_ct(&wcoj_db, chain, vars, &mut s2).unwrap();
+        assert_eq!(s1, s2, "JoinStats diverge on {chain:?} {vars:?}");
+        assert_eq!(a.digest(), b.digest(), "tables diverge on {chain:?} {vars:?}");
+    }
+
+    fn all_var_subsets(db: &Database, chain: &[usize]) -> Vec<Vec<RVar>> {
+        let pops = db.schema.populations_of(chain);
+        let mut pool: Vec<RVar> = Vec::new();
+        for &et in &pops {
+            for attr in 0..db.schema.entities[et].attrs.len() {
+                pool.push(RVar::EntityAttr { et, attr });
+            }
+        }
+        for &rel in chain {
+            for attr in 0..db.schema.relationships[rel].attrs.len() {
+                pool.push(RVar::RelAttr { rel, attr });
+            }
+        }
+        let mut subsets = vec![Vec::new()];
+        for v in pool {
+            let mut more: Vec<Vec<RVar>> = subsets
+                .iter()
+                .map(|s| {
+                    let mut s = s.clone();
+                    s.push(v);
+                    s
+                })
+                .collect();
+            subsets.append(&mut more);
+        }
+        subsets
+    }
+
+    #[test]
+    fn triangle_matches_chain_kernel_on_all_var_subsets() {
+        let db = triangle_db();
+        for chain in [
+            vec![0usize],
+            vec![1],
+            vec![2],
+            vec![0, 1],
+            vec![1, 2],
+            vec![0, 2],
+            vec![0, 1, 2],
+        ] {
+            if !db.schema.is_connected(&chain) {
+                continue;
+            }
+            for vars in all_var_subsets(&db, &chain) {
+                compare_kernels(&db, &chain, &vars);
+            }
+        }
+    }
+
+    #[test]
+    fn star_matches_chain_kernel_on_all_var_subsets() {
+        let db = star_db();
+        for chain in [vec![0usize, 1], vec![0, 2], vec![1, 2], vec![0, 1, 2]] {
+            for vars in all_var_subsets(&db, &chain) {
+                compare_kernels(&db, &chain, &vars);
+            }
+        }
+    }
+
+    #[test]
+    fn hash_backend_memo_path_matches_csr() {
+        let mut db = triangle_db();
+        db.set_backend(Backend::Hash).unwrap();
+        db.set_kernel(JoinKernel::Wcoj);
+        let mut csr = triangle_db();
+        csr.set_kernel(JoinKernel::Wcoj);
+        let vars = vec![
+            RVar::EntityAttr { et: 0, attr: 0 },
+            RVar::RelAttr { rel: 2, attr: 0 },
+        ];
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = positive_chain_ct(&db, &[0, 1, 2], &vars, &mut s1).unwrap();
+        let b = positive_chain_ct(&csr, &[0, 1, 2], &vars, &mut s2).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn dirty_csr_rows_take_memo_fallback() {
+        // churn the triangle db so CSR overlays are pending, then compare
+        let mut db = triangle_db();
+        db.set_kernel(JoinKernel::Wcoj);
+        // delete + reinsert some R1 links without compacting
+        db.delete_link(1, 0, 0).unwrap();
+        db.delete_link(1, 2, 2).unwrap();
+        db.insert_link(1, 0, 1, &[]).unwrap();
+        let mut chain_db = db.clone();
+        chain_db.set_kernel(JoinKernel::Chain);
+        let vars = vec![RVar::EntityAttr { et: 2, attr: 0 }];
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = positive_chain_ct(&chain_db, &[0, 1, 2], &vars, &mut s1).unwrap();
+        let b = positive_chain_ct(&db, &[0, 1, 2], &vars, &mut s2).unwrap();
+        assert_eq!(s1, s2);
+        assert_eq!(a.digest(), b.digest());
+    }
+
+    #[test]
+    fn triangle_count_matches_brute_force() {
+        let db = triangle_db();
+        let mut wcoj_db = db.clone();
+        wcoj_db.set_kernel(JoinKernel::Wcoj);
+        let mut stats = JoinStats::default();
+        let ct = positive_chain_ct(&wcoj_db, &[0, 1, 2], &[], &mut stats).unwrap();
+        // brute-force nested loop over all (a, b, c)
+        let mut n = 0i128;
+        for a in 0..6u32 {
+            for b in 0..5u32 {
+                for c in 0..7u32 {
+                    if (a + 2 * b) % 3 != 1 && (b + c) % 2 == 0 && (2 * a + c) % 3 != 0 {
+                        n += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(ct.total().unwrap(), n);
+        assert_eq!(stats.rows_enumerated, n as u64);
+        assert_eq!(stats.chain_queries, 1);
+        assert_eq!(stats.join_steps, 3);
+    }
+
+    #[test]
+    fn variable_order_is_connected_and_deterministic() {
+        let db = triangle_db();
+        for chain in [vec![0usize, 1], vec![0, 1, 2]] {
+            let pops = db.schema.populations_of(&chain);
+            let order = variable_order(&db, &chain, &pops, None);
+            assert_eq!(order.len(), pops.len());
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, pops);
+            // every var after the first connects to the prefix
+            for d in 1..order.len() {
+                let prefix = &order[..d];
+                assert!(
+                    chain.iter().any(|&r| {
+                        let (a, b) = db.schema.rel_endpoints(r);
+                        (order[d] == a && prefix.contains(&b))
+                            || (order[d] == b && prefix.contains(&a))
+                    }),
+                    "order {order:?} disconnected at depth {d}"
+                );
+            }
+            assert_eq!(order, variable_order(&db, &chain, &pops, None));
+        }
+    }
+
+    #[test]
+    fn summary_steered_order_agrees_with_counts() {
+        let db = triangle_db();
+        let summary = SummaryStats::build(&db);
+        let vars = vec![RVar::EntityAttr { et: 0, attr: 0 }];
+        let mut s1 = JoinStats::default();
+        let mut s2 = JoinStats::default();
+        let a = wcoj_chain_ct_with(&db, &[0, 1, 2], &vars, Some(&summary), &mut s1);
+        let b = wcoj_chain_ct(&db, &[0, 1, 2], &vars, &mut s2);
+        assert_eq!(s1, s2);
+        assert_eq!(a.unwrap().digest(), b.unwrap().digest());
+    }
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        assert_eq!(JoinKernel::parse("chain"), Some(JoinKernel::Chain));
+        assert_eq!(JoinKernel::parse("WCOJ"), Some(JoinKernel::Wcoj));
+        assert_eq!(JoinKernel::parse("nope"), None);
+        assert_eq!(JoinKernel::default().name(), "chain");
+        assert_eq!(JoinKernel::Wcoj.name(), "wcoj");
+    }
+}

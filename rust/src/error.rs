@@ -12,6 +12,10 @@ pub enum Error {
     /// Data violates the schema (bad code, out-of-range id, ...).
     Data(String),
 
+    /// A columnar structure would outgrow its u32 address space (e.g. a
+    /// CSR offset column asked to cover more than `u32::MAX` tuples).
+    Capacity { what: String, needed: u64 },
+
     /// A contingency-table operation was applied to incompatible tables
     /// or the value space overflows the flat-key width.
     Ct(String),
@@ -50,6 +54,9 @@ impl fmt::Display for Error {
         match self {
             Error::Schema(m) => write!(f, "schema error: {m}"),
             Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Capacity { what, needed } => {
+                write!(f, "capacity error: {what} needs {needed} entries, over the u32 limit")
+            }
             Error::Ct(m) => write!(f, "ct-table error: {m}"),
             Error::Strategy(m) => write!(f, "strategy error: {m}"),
             Error::Learn(m) => write!(f, "learn error: {m}"),
@@ -93,6 +100,18 @@ impl Error {
         Error::Persist { section: section.into(), msg: msg.into() }
     }
 
+    /// Guard for u32-addressed structures (tuple ids, CSR offset
+    /// columns): error when `needed` entries would overflow the u32 id
+    /// space.  The columnar engine accumulates offsets in `u32`, so an
+    /// unchecked build past `u32::MAX` triples would wrap silently and
+    /// corrupt every run boundary; callers guard *before* growing.
+    pub fn check_u32_capacity(what: &str, needed: u64) -> Result<()> {
+        if needed > u32::MAX as u64 {
+            return Err(Error::Capacity { what: what.into(), needed });
+        }
+        Ok(())
+    }
+
     /// The section name of a persistence error, if this is one.
     pub fn persist_section(&self) -> Option<&str> {
         match self {
@@ -123,6 +142,22 @@ mod tests {
         assert!(e.to_string().contains("'caches'"));
         assert!(e.to_string().contains("checksum mismatch"));
         assert_eq!(Error::Schema("x".into()).persist_section(), None);
+    }
+
+    #[test]
+    fn capacity_errors_report_the_demand() {
+        let e = Error::Capacity { what: "csr fwd offsets".into(), needed: 1 << 33 };
+        assert!(e.to_string().contains("csr fwd offsets"));
+        assert!(e.to_string().contains(&(1u64 << 33).to_string()));
+    }
+
+    #[test]
+    fn u32_capacity_boundary() {
+        // exactly u32::MAX entries fit (ids 0..=u32::MAX-1, len
+        // representable); one more would wrap — no allocation involved
+        assert!(Error::check_u32_capacity("ids", u32::MAX as u64).is_ok());
+        let e = Error::check_u32_capacity("ids", u32::MAX as u64 + 1).unwrap_err();
+        assert!(matches!(e, Error::Capacity { needed, .. } if needed == u32::MAX as u64 + 1));
     }
 
     #[test]

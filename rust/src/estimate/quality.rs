@@ -98,8 +98,20 @@ pub struct QualityReport {
     /// (`reuse × true join rows`) the estimate-driven plan forfeits.
     pub regret_saved_frac: f64,
     /// True bytes of the estimate-driven admissions beyond the budget
-    /// they were admitted under, as a fraction of that budget.
-    pub bytes_overrun_frac: f64,
+    /// they were admitted under, as a fraction of that budget.  `None`
+    /// when the budget is zero: the fraction is undefined there, and
+    /// the old 1-byte floor turned those rows into astronomically large
+    /// (but meaningless) overruns.
+    pub bytes_overrun_frac: Option<f64>,
+}
+
+/// Overrun as a fraction of `budget`, or `None` for a zero budget
+/// (undefined — flooring the divisor would fabricate a huge fraction).
+pub fn overrun_frac(spent: u64, budget: u64) -> Option<f64> {
+    if budget == 0 {
+        return None;
+    }
+    Some(spent.saturating_sub(budget) as f64 / budget as f64)
 }
 
 /// `max(est, truth) / max(1, min(est, truth))`; 1.0 when both are 0.
@@ -192,8 +204,7 @@ pub fn evaluate(
             }
         }
     }
-    let bytes_overrun_frac =
-        spent_true.saturating_sub(budget) as f64 / budget.max(1) as f64;
+    let bytes_overrun_frac = overrun_frac(spent_true, budget);
 
     let points = lattice.len() as u64;
     Ok(QualityReport {
@@ -234,7 +245,7 @@ mod tests {
         assert_eq!(r.exact_frac, 1.0);
         assert_eq!(r.summary_hits, 0);
         assert_eq!(r.regret_saved_frac, 0.0);
-        assert_eq!(r.bytes_overrun_frac, 0.0);
+        assert_eq!(r.bytes_overrun_frac, Some(0.0));
     }
 
     #[test]
@@ -244,7 +255,7 @@ mod tests {
         assert!(r.q_max >= r.q_p95 && r.q_p95 >= r.q_p50);
         assert!(r.walks > 0);
         assert!((0.0..=1.0).contains(&r.regret_saved_frac));
-        assert!(r.bytes_overrun_frac >= 0.0);
+        assert!(r.bytes_overrun_frac.unwrap_or(0.0) >= 0.0);
     }
 
     #[test]
@@ -262,6 +273,14 @@ mod tests {
         assert_eq!(a.q_p50, b.q_p50);
         assert_eq!(a.q_max, b.q_max);
         assert_eq!(a.regret_saved_frac, b.regret_saved_frac);
+    }
+
+    #[test]
+    fn overrun_frac_zero_budget_is_undefined_not_huge() {
+        assert_eq!(overrun_frac(10, 0), None);
+        assert_eq!(overrun_frac(0, 0), None);
+        assert_eq!(overrun_frac(5, 10), Some(0.0));
+        assert_eq!(overrun_frac(15, 10), Some(0.5));
     }
 
     #[test]

@@ -5,12 +5,16 @@
 //! learn-and-join model search.  Points are *connected* relationship
 //! subsets up to a maximum chain length (default 3, matching FACTORBASE).
 
+pub mod pattern;
+
 use crate::util::fxhash::FxHashMap;
 
 use crate::db::schema::Schema;
 use crate::error::{Error, Result};
 use crate::meta::extract::vars_for_chain;
 use crate::meta::rvar::RVar;
+
+pub use pattern::PatternClass;
 
 /// One lattice point: a connected relationship chain.
 #[derive(Clone, Debug)]
@@ -27,6 +31,9 @@ pub struct LatticePoint {
     pub length: usize,
     /// Ids of the points directly below (one relationship removed).
     pub below: Vec<usize>,
+    /// Shape of the point's entity-type multigraph (chain, star,
+    /// triangle, …) — see [`pattern::classify`].
+    pub pattern: PatternClass,
 }
 
 impl LatticePoint {
@@ -103,6 +110,7 @@ impl Lattice {
                 attr_vars: vars_for_chain(schema, &rels),
                 length: rels.len(),
                 below: Vec::new(),
+                pattern: pattern::classify(schema, &rels),
                 rels,
             });
         }
@@ -191,6 +199,31 @@ mod tests {
         assert_eq!(l.points[2].rels, vec![0, 1]);
         assert_eq!(l.points[2].pops, vec![0, 1, 2]);
         assert_eq!(l.points[2].below.len(), 2);
+        assert_eq!(l.points[0].pattern, PatternClass::Single);
+        assert_eq!(l.points[2].pattern, PatternClass::Chain);
+    }
+
+    #[test]
+    fn lattice_contains_cyclic_points_when_schema_has_them() {
+        // triangle schema: three pairwise relationships over A, B, C
+        let s = Schema::new(
+            vec![
+                EntityType { name: "A".into(), attrs: vec![] },
+                EntityType { name: "B".into(), attrs: vec![] },
+                EntityType { name: "C".into(), attrs: vec![] },
+            ],
+            vec![
+                RelationshipType { name: "R0".into(), from: 0, to: 1, attrs: vec![] },
+                RelationshipType { name: "R1".into(), from: 1, to: 2, attrs: vec![] },
+                RelationshipType { name: "R2".into(), from: 0, to: 2, attrs: vec![] },
+            ],
+        )
+        .unwrap();
+        let l = Lattice::build(&s, 3).unwrap();
+        let top = l.point(&[0, 1, 2]).unwrap();
+        assert_eq!(top.pattern, PatternClass::Triangle);
+        assert!(top.pattern.is_cyclic());
+        assert_eq!(l.point(&[0, 1]).unwrap().pattern, PatternClass::Chain);
     }
 
     #[test]

@@ -1,0 +1,168 @@
+//! Join-pattern classification for lattice points.
+//!
+//! The lattice builder enumerates every *connected* relationship subset
+//! up to the length cap, so beyond simple paths the lattice contains
+//! stars, triangles, longer cycles and small cliques.  This module
+//! names those shapes: the class of a point is the shape of its
+//! entity-type multigraph (nodes = populations, edges = relationships).
+//! The WCOJ kernel's advantage is shape-dependent — cyclic classes are
+//! exactly where binary chain plans hit the AGM gap — so `exp wcoj`
+//! groups its measurements by [`PatternClass`].
+
+use crate::db::schema::Schema;
+
+/// Shape of a connected relationship subset's entity-type multigraph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PatternClass {
+    /// One relationship (a lattice atom).
+    Single,
+    /// A simple path: acyclic, every node on at most two relationships.
+    Chain,
+    /// Acyclic with one center on every relationship, leaves elsewhere.
+    Star,
+    /// Acyclic but neither a path nor a star.
+    Tree,
+    /// The 3-cycle on three distinct entity types.
+    Triangle,
+    /// A single cycle that is not a triangle (including the 2-cycle of
+    /// parallel relationships over the same endpoint pair).
+    Cycle,
+    /// Complete simple graph on four or more entity types.
+    Clique,
+    /// Anything denser or more irregular.
+    General,
+}
+
+impl PatternClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PatternClass::Single => "single",
+            PatternClass::Chain => "chain",
+            PatternClass::Star => "star",
+            PatternClass::Tree => "tree",
+            PatternClass::Triangle => "triangle",
+            PatternClass::Cycle => "cycle",
+            PatternClass::Clique => "clique",
+            PatternClass::General => "general",
+        }
+    }
+
+    /// Classes where a binary join plan can enumerate intermediates
+    /// asymptotically larger than the output (the WCOJ target set).
+    pub fn is_cyclic(&self) -> bool {
+        matches!(
+            self,
+            PatternClass::Triangle | PatternClass::Cycle | PatternClass::Clique
+        )
+    }
+}
+
+/// Classify a *connected* relationship subset (a lattice point's
+/// `rels`).  Degree arguments over the entity-type multigraph decide
+/// every class, so parallel relationships between the same endpoint
+/// pair are handled uniformly: connected with `m` edges over `n` nodes,
+/// `m == n - 1` means acyclic, `m == n` with all degrees 2 means a
+/// single cycle, and anything denser falls through to clique/general.
+pub fn classify(schema: &Schema, rels: &[usize]) -> PatternClass {
+    let m = rels.len();
+    if m <= 1 {
+        return PatternClass::Single;
+    }
+    let pops = schema.populations_of(rels);
+    let n = pops.len();
+    let node = |et: usize| pops.binary_search(&et).expect("endpoint in pops");
+    let mut deg = vec![0usize; n];
+    let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(m);
+    for &r in rels {
+        let (a, b) = schema.rel_endpoints(r);
+        let (a, b) = (node(a), node(b));
+        deg[a] += 1;
+        deg[b] += 1;
+        pairs.push((a.min(b), a.max(b)));
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    let simple = pairs.len() == m;
+    if m + 1 == n {
+        // acyclic (a tree); leaves have degree 1
+        let leaves = deg.iter().filter(|&&d| d == 1).count();
+        if deg.iter().all(|&d| d <= 2) {
+            PatternClass::Chain
+        } else if leaves == n - 1 {
+            PatternClass::Star
+        } else {
+            PatternClass::Tree
+        }
+    } else if m == n && deg.iter().all(|&d| d == 2) {
+        if n == 3 {
+            PatternClass::Triangle
+        } else {
+            PatternClass::Cycle
+        }
+    } else if simple && 2 * m == n * (n - 1) && deg.iter().all(|&d| d == n - 1) {
+        PatternClass::Clique
+    } else {
+        PatternClass::General
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::schema::{EntityType, RelationshipType};
+
+    fn schema_with(n_ets: usize, edges: &[(usize, usize)]) -> Schema {
+        let ets = (0..n_ets)
+            .map(|i| EntityType { name: format!("E{i}"), attrs: vec![] })
+            .collect();
+        let rels = edges
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, b))| RelationshipType {
+                name: format!("R{i}"),
+                from: a,
+                to: b,
+                attrs: vec![],
+            })
+            .collect();
+        Schema::new(ets, rels).unwrap()
+    }
+
+    #[test]
+    fn classifies_acyclic_shapes() {
+        let s = schema_with(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(classify(&s, &[0]), PatternClass::Single);
+        assert_eq!(classify(&s, &[0, 1]), PatternClass::Chain);
+        assert_eq!(classify(&s, &[0, 1, 2]), PatternClass::Chain);
+        let star = schema_with(4, &[(1, 0), (0, 2), (0, 3)]);
+        assert_eq!(classify(&star, &[0, 1, 2]), PatternClass::Star);
+        // two edges from a 3-star still form a chain through the center
+        assert_eq!(classify(&star, &[0, 1]), PatternClass::Chain);
+        let tree = schema_with(5, &[(0, 1), (1, 2), (1, 3), (3, 4)]);
+        assert_eq!(classify(&tree, &[0, 1, 2, 3]), PatternClass::Tree);
+    }
+
+    #[test]
+    fn classifies_cyclic_shapes() {
+        let tri = schema_with(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(classify(&tri, &[0, 1, 2]), PatternClass::Triangle);
+        assert!(classify(&tri, &[0, 1, 2]).is_cyclic());
+        let square = schema_with(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        assert_eq!(classify(&square, &[0, 1, 2, 3]), PatternClass::Cycle);
+        // parallel relationships over one endpoint pair: a 2-cycle
+        let par = schema_with(2, &[(0, 1), (0, 1)]);
+        assert_eq!(classify(&par, &[0, 1]), PatternClass::Cycle);
+        let k4 = schema_with(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(classify(&k4, &[0, 1, 2, 3, 4, 5]), PatternClass::Clique);
+        // triangle plus a pendant edge: cyclic but no single class fits
+        let lollipop = schema_with(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        assert_eq!(classify(&lollipop, &[0, 1, 2, 3]), PatternClass::General);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(PatternClass::Triangle.name(), "triangle");
+        assert_eq!(PatternClass::Chain.name(), "chain");
+        assert!(!PatternClass::Chain.is_cyclic());
+    }
+}

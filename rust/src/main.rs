@@ -35,7 +35,7 @@ use relcount::bench::driver::{
 use relcount::bench::experiments::{
     churn_rows, coordinator_scaling_rows, estimator_rows, fig3_fig4_rows,
     persist_rows, planner_sweep_rows, serve_rows, table4_rows, table5_rows,
-    ExpConfig,
+    wcoj_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -43,6 +43,7 @@ use relcount::datagen::presets::{preset, PRESET_NAMES};
 use relcount::db::catalog::Database;
 use relcount::db::index::Backend;
 use relcount::db::loader;
+use relcount::db::wcoj::JoinKernel;
 use relcount::delta::{DeltaBatch, MaintainConfig, MaintainedCounts, MaintenanceMode};
 use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
@@ -51,7 +52,8 @@ use relcount::metrics::report::{
     churn_rows_to_json, estimator_rows_to_json, persist_rows_to_json,
     planner_rows_to_json, render_churn, render_estimator, render_fig3,
     render_fig4, render_persist, render_planner, render_scaling, render_serve,
-    render_table4, render_table5, scaling_rows_to_json, serve_rows_to_json,
+    render_table4, render_table5, render_wcoj, scaling_rows_to_json,
+    serve_rows_to_json, wcoj_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
 use relcount::serve::{
@@ -70,7 +72,7 @@ USAGE:
   relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
   relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget BYTES[k|m|g]|inf]
-                     [--backend csr|hash]
+                     [--backend csr|hash] [--kernel chain|wcoj]
   relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget ...] [--xla]
   relcount apply     (--preset <name> | --db <dir>) --deltas FILE
@@ -85,7 +87,7 @@ USAGE:
                      | verify --dir <snapshot dir> | load --dir <snapshot dir>
   relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
   relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve|persist
-                     |estimator> [--scale F]
+                     |estimator|wcoj> [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
                      [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
@@ -99,6 +101,12 @@ USAGE:
   adjacency with merge-join kernels) or `hash` (seed-era hash maps).
   Counts, plans, models and cache digests are bit-identical across
   backends — `count` prints the digest so the two can be diffed.
+  --kernel selects the positive-count join kernel for any subcommand
+  that loads a database: `chain` (default; binary merge joins in chain
+  order) or `wcoj` (worst-case optimal variable-at-a-time
+  intersection).  Counts, digests and join statistics are bit-identical
+  across kernels; the asymptotic gap on cyclic skewed patterns is
+  measured by `exp wcoj`.
   --workers N shards the counting phases over N threads (auto = all cores)
   via the L3 parallel coordinator; counts stay bit-identical.
   --mem-budget caps ADAPTIVE's pre-count plan (0 = pure post-counting,
@@ -130,6 +138,11 @@ USAGE:
   distributions (p50/p95/max vs oracle counts) and plan-regret for the
   default, pure-sampled and pure-summary estimator tiers (--json writes
   BENCH_estimator.json rows, gated in CI by scripts/estimator_gates.json).
+  `exp wcoj` differentially tests the chain and WCOJ kernels (plus the
+  hash backend as a third oracle) on every multi-relationship lattice
+  point of hub-skewed triangle/star constructions and the presets,
+  hard-failing on any digest or JoinStats divergence, and times the AGM
+  gap on the skewed triangle (--json writes BENCH_wcoj.json rows).
   `gen-requests` emits a deterministic request workload for a database.
 ";
 
@@ -151,11 +164,21 @@ fn backend_of(args: &Args) -> Result<Backend> {
     }
 }
 
+fn kernel_of(args: &Args) -> Result<JoinKernel> {
+    match args.get("kernel") {
+        None => Ok(JoinKernel::default()),
+        Some(v) => JoinKernel::parse(v)
+            .ok_or_else(|| Error::Data(format!("--kernel expects chain|wcoj, got {v:?}"))),
+    }
+}
+
 fn load_db(args: &Args) -> Result<(String, Database)> {
     let backend = backend_of(args)?;
+    let kernel = kernel_of(args)?;
     if let Some(dir) = args.get("db") {
         let mut db = loader::load(Path::new(dir))?;
         db.set_backend(backend)?;
+        db.set_kernel(kernel);
         return Ok((dir.to_string(), db));
     }
     let name = args
@@ -171,6 +194,7 @@ fn load_db(args: &Args) -> Result<(String, Database)> {
     );
     let mut db = generate(&cfg)?;
     db.set_backend(backend)?;
+    db.set_kernel(kernel);
     Ok((cfg.name.clone(), db))
 }
 
@@ -245,8 +269,9 @@ fn run() -> Result<()> {
                 report.ct_rows_generated
             );
             println!(
-                "caches: digest {digest:016x} (backend {})",
-                db.backend().name()
+                "caches: digest {digest:016x} (backend {}, kernel {})",
+                db.backend().name(),
+                db.kernel().name()
             );
             if kind == StrategyKind::Adaptive {
                 println!(
@@ -564,7 +589,7 @@ fn run() -> Result<()> {
                 .ok_or_else(|| {
                     Error::Data(
                         "exp needs fig3|fig4|table4|table5|scaling|planner|\
-                         churn|serve|persist|estimator"
+                         churn|serve|persist|estimator|wcoj"
                             .into(),
                     )
                 })?;
@@ -624,6 +649,13 @@ fn run() -> Result<()> {
                     let rows = estimator_rows(&cfg)?;
                     print!("{}", render_estimator(&rows));
                     write_json(&args, estimator_rows_to_json(&rows))?;
+                }
+                "wcoj" => {
+                    // wcoj_rows hard-errors on any kernel divergence, so
+                    // reaching here means every row witnessed agreement
+                    let rows = wcoj_rows(&cfg)?;
+                    print!("{}", render_wcoj(&rows));
+                    write_json(&args, wcoj_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }

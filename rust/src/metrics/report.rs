@@ -578,8 +578,9 @@ pub struct EstimatorRow {
     pub walks: u64,
     /// Fraction of the oracle plan's true admitted benefit forfeited.
     pub regret_saved_frac: f64,
-    /// True bytes admitted beyond the budget, as a budget fraction.
-    pub bytes_overrun_frac: f64,
+    /// True bytes admitted beyond the budget, as a budget fraction;
+    /// `None` for zero-budget sweeps, where the fraction is undefined.
+    pub bytes_overrun_frac: Option<f64>,
 }
 
 /// Render the estimator quality lab (`exp estimator`).
@@ -600,8 +601,14 @@ pub fn render_estimator(rows: &[EstimatorRow]) -> String {
         "overrun"
     ));
     for r in rows {
+        // a zero-budget sweep has no defined overrun fraction; say so
+        // instead of printing a fabricated number
+        let overrun = match r.bytes_overrun_frac {
+            Some(v) => format!("{v:.3}"),
+            None => "n/a".into(),
+        };
         out.push_str(&format!(
-            "{:<16} {:<8} {:>6} {:>8.3} {:>8.3} {:>8.3} {:>7.2} {:>8} {:>8} {:>8.3} {:>8.3}\n",
+            "{:<16} {:<8} {:>6} {:>8.3} {:>8.3} {:>8.3} {:>7.2} {:>8} {:>8} {:>8.3} {:>8}\n",
             r.database,
             r.mode,
             r.points,
@@ -612,7 +619,7 @@ pub fn render_estimator(rows: &[EstimatorRow]) -> String {
             r.summary_hits,
             r.walks,
             r.regret_saved_frac,
-            r.bytes_overrun_frac
+            overrun
         ));
     }
     out
@@ -637,7 +644,95 @@ pub fn estimator_rows_to_json(rows: &[EstimatorRow]) -> Json {
                     ("summary_hits", Json::Num(r.summary_hits as f64)),
                     ("walks", Json::Num(r.walks as f64)),
                     ("regret_saved_frac", Json::Num(r.regret_saved_frac)),
-                    ("bytes_overrun_frac", Json::Num(r.bytes_overrun_frac)),
+                    (
+                        "bytes_overrun_frac",
+                        match r.bytes_overrun_frac {
+                            Some(v) => Json::Num(v),
+                            None => Json::Null,
+                        },
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// One (database, lattice point) cell of the join-kernel experiment
+/// (`exp wcoj`, EXPERIMENTS.md §E16): the binary chain kernel and the
+/// worst-case optimal kernel count the same pattern; `identical` is the
+/// differential gate ([`crate::db::wcoj`] docs) and must be `true` on
+/// every row — the generator hard-errors otherwise, so the field exists
+/// for the JSON schema, not as a soft signal.
+#[derive(Clone, Debug)]
+pub struct WcojRow {
+    pub database: String,
+    /// Relationship names of the lattice point, joined with `+`.
+    pub point: String,
+    /// [`crate::lattice::pattern::PatternClass`] name of the point.
+    pub pattern: String,
+    /// Relationships in the pattern.
+    pub rels: usize,
+    /// True join cardinality (`JoinStats::rows_enumerated`, identical
+    /// across kernels by construction).
+    pub rows_enumerated: u64,
+    pub chain: Duration,
+    pub wcoj: Duration,
+    /// `chain / wcoj` wall-clock ratio (> 1 means the WCOJ kernel won).
+    pub speedup: f64,
+    /// Chain and WCOJ kernels (CSR and hash backends) agreed on the
+    /// `CtTable` digest and on `JoinStats`.
+    pub identical: bool,
+}
+
+/// Render the join-kernel differential experiment (`exp wcoj`).
+pub fn render_wcoj(rows: &[WcojRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:<24} {:<10} {:>4} {:>10} {:>10} {:>10} {:>8} {:>6}\n",
+        "database",
+        "point",
+        "pattern",
+        "rels",
+        "rows",
+        "chain_s",
+        "wcoj_s",
+        "speedup",
+        "ident"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:<24} {:<10} {:>4} {:>10} {:>10.4} {:>10.4} {:>8.1} {:>6}\n",
+            r.database,
+            r.point,
+            r.pattern,
+            r.rels,
+            r.rows_enumerated,
+            r.chain.as_secs_f64(),
+            r.wcoj.as_secs_f64(),
+            r.speedup,
+            r.identical
+        ));
+    }
+    out
+}
+
+/// Machine-readable WCOJ rows (written to `BENCH_wcoj.json` by
+/// `scripts/bench.sh`).  Key set is schema-stable; `identical` and
+/// `rows_enumerated` are deterministic, the timing fields are not.
+pub fn wcoj_rows_to_json(rows: &[WcojRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("point", Json::Str(r.point.clone())),
+                    ("pattern", Json::Str(r.pattern.clone())),
+                    ("rels", Json::Num(r.rels as f64)),
+                    ("rows_enumerated", Json::Num(r.rows_enumerated as f64)),
+                    ("chain_s", Json::Num(r.chain.as_secs_f64())),
+                    ("wcoj_s", Json::Num(r.wcoj.as_secs_f64())),
+                    ("speedup", Json::Num(r.speedup)),
+                    ("identical", Json::Bool(r.identical)),
                 ])
             })
             .collect(),
@@ -861,7 +956,7 @@ mod tests {
             summary_hits: 0,
             walks: 768,
             regret_saved_frac: 0.125,
-            bytes_overrun_frac: 0.0,
+            bytes_overrun_frac: Some(0.0),
         }
     }
 
@@ -874,6 +969,16 @@ mod tests {
     }
 
     #[test]
+    fn undefined_overrun_renders_na_and_null() {
+        let mut r = estimator_row();
+        r.bytes_overrun_frac = None;
+        let s = render_estimator(&[r.clone()]);
+        assert!(s.contains("n/a"), "zero-budget rows must say n/a: {s}");
+        let j = estimator_rows_to_json(&[r]).dump();
+        assert!(j.contains("\"bytes_overrun_frac\":null"), "{j}");
+    }
+
+    #[test]
     fn estimator_json_shapes() {
         let j = estimator_rows_to_json(&[estimator_row()]);
         let parsed = Json::parse(&j.dump()).unwrap();
@@ -883,6 +988,39 @@ mod tests {
         assert_eq!(row.get("q_max").unwrap().as_f64(), Some(4.0));
         assert_eq!(row.get("regret_saved_frac").unwrap().as_f64(), Some(0.125));
         assert_eq!(row.get("walks").unwrap().as_f64(), Some(768.0));
+    }
+
+    fn wcoj_row() -> WcojRow {
+        WcojRow {
+            database: "tri_skew".into(),
+            point: "R0+R1+R2".into(),
+            pattern: "triangle".into(),
+            rels: 3,
+            rows_enumerated: 70,
+            chain: Duration::from_millis(40),
+            wcoj: Duration::from_millis(5),
+            speedup: 8.0,
+            identical: true,
+        }
+    }
+
+    #[test]
+    fn renders_wcoj() {
+        let s = render_wcoj(&[wcoj_row()]);
+        assert!(s.contains("tri_skew") && s.contains("R0+R1+R2"));
+        assert!(s.contains("triangle") && s.contains("8.0"));
+        assert!(s.contains("true"));
+    }
+
+    #[test]
+    fn wcoj_json_shapes() {
+        let j = wcoj_rows_to_json(&[wcoj_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("pattern").unwrap().as_str(), Some("triangle"));
+        assert_eq!(row.get("rows_enumerated").unwrap().as_f64(), Some(70.0));
+        assert_eq!(row.get("speedup").unwrap().as_f64(), Some(8.0));
+        assert_eq!(row.get("identical").unwrap(), &Json::Bool(true));
     }
 
     #[test]

@@ -1,0 +1,267 @@
+//! Differential gate for the worst-case optimal join kernel
+//! (`relcount::db::wcoj`): the kernel is only shippable because it is
+//! *indistinguishable* from the binary chain kernel — same `CtTable`
+//! digest, same `JoinStats`, same totals — on every pattern, backend
+//! and worker count.  This file checks that on randomized
+//! schemas/databases over every lattice point, on the hub-skewed
+//! cyclic constructions under churn (against a brute-force edge-set
+//! oracle, with dirty CSR rows left uncompacted so the sorted-memo
+//! fallback is exercised), and through the strategy/coordinator stack.
+
+use relcount::bench::driver::{run_coordinated, run_strategy, Workload};
+use relcount::datagen::{skewed_star_db, skewed_triangle_count, skewed_triangle_db};
+use relcount::db::catalog::Database;
+use relcount::db::index::Backend;
+use relcount::db::query::{positive_chain_ct, JoinStats};
+use relcount::db::schema::{Attribute, EntityType, RelationshipType, Schema};
+use relcount::db::wcoj::JoinKernel;
+use relcount::lattice::Lattice;
+use relcount::meta::rvar::RVar;
+use relcount::strategies::StrategyKind;
+use relcount::util::fxhash::FxHashSet;
+use relcount::util::rng::Rng;
+
+/// Every (backend, kernel) combination of `db`.
+fn variants(db: &Database) -> Vec<(String, Database)> {
+    let mut out = Vec::new();
+    for backend in [Backend::Csr, Backend::Hash] {
+        for kernel in [JoinKernel::Chain, JoinKernel::Wcoj] {
+            let mut v = db.clone();
+            v.set_backend(backend).unwrap();
+            v.set_kernel(kernel);
+            out.push((format!("{}/{}", backend.name(), kernel.name()), v));
+        }
+    }
+    out
+}
+
+/// Count `rels` grouped by `vars` under every (backend, kernel)
+/// combination and assert the digest, the [`JoinStats`] and the total
+/// are bit-identical across all four; returns the agreed total.
+fn assert_kernels_agree(db: &Database, rels: &[usize], vars: &[RVar], what: &str) -> i128 {
+    let mut reference: Option<(u64, JoinStats, i128)> = None;
+    for (label, v) in variants(db) {
+        let mut stats = JoinStats::default();
+        let ct = positive_chain_ct(&v, rels, vars, &mut stats)
+            .unwrap_or_else(|e| panic!("{what} [{label}]: {e}"));
+        let got = (ct.digest(), stats, ct.total().unwrap());
+        match &reference {
+            None => reference = Some(got),
+            Some(r) => assert_eq!(*r, got, "{what} [{label}]"),
+        }
+    }
+    reference.unwrap().2
+}
+
+/// A random small schema: 2-3 entity types with 0-2 attrs, 1-3 distinct
+/// relationships over distinct endpoint pairs (the same generator shape
+/// as proptest_invariants.rs).
+fn random_schema(rng: &mut Rng) -> Schema {
+    let n_ets = 2 + rng.gen_range(2) as usize;
+    let entities: Vec<EntityType> = (0..n_ets)
+        .map(|i| EntityType {
+            name: format!("E{i}"),
+            attrs: (0..rng.gen_range(3))
+                .map(|a| Attribute::new(format!("a{a}"), 2 + rng.gen_u32(2)))
+                .collect(),
+        })
+        .collect();
+    let mut pairs = Vec::new();
+    for i in 0..n_ets {
+        for j in 0..n_ets {
+            if i != j {
+                pairs.push((i, j));
+            }
+        }
+    }
+    rng.shuffle(&mut pairs);
+    let n_rels = 1 + rng.gen_range(pairs.len().min(3) as u64) as usize;
+    let relationships: Vec<RelationshipType> = pairs[..n_rels]
+        .iter()
+        .enumerate()
+        .map(|(k, &(f, t))| RelationshipType {
+            name: format!("R{k}"),
+            from: f,
+            to: t,
+            attrs: (0..rng.gen_range(2))
+                .map(|a| Attribute::new(format!("w{a}"), 2 + rng.gen_u32(2)))
+                .collect(),
+        })
+        .collect();
+    Schema::new(entities, relationships).unwrap()
+}
+
+/// A random small database over a random schema, link density high
+/// enough that multi-relationship joins are routinely non-empty.
+fn random_db(rng: &mut Rng) -> Database {
+    let schema = random_schema(rng);
+    let mut db = Database::empty(schema.clone());
+    for (et, e) in schema.entities.iter().enumerate() {
+        let n = 2 + rng.gen_range(6) as u32;
+        for _ in 0..n {
+            let row: Vec<u32> = e.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+            db.entities[et].push(&row).unwrap();
+        }
+    }
+    for (rt, r) in schema.relationships.iter().enumerate() {
+        let nf = db.entities[r.from].len();
+        let nt = db.entities[r.to].len();
+        for f in 0..nf {
+            for t in 0..nt {
+                if rng.gen_bool(0.4) {
+                    let row: Vec<u32> =
+                        r.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+                    db.rels[rt].push(f, t, &row).unwrap();
+                }
+            }
+        }
+    }
+    db.build_indexes().unwrap();
+    db
+}
+
+/// Live `(from, to)` pairs of `rel`, read straight off the index.
+fn edge_set(db: &Database, rel: usize) -> FxHashSet<(u32, u32)> {
+    let ix = db.index(rel).unwrap();
+    let n_from = db.entities[db.schema.relationships[rel].from].len() as u32;
+    let mut out = FxHashSet::default();
+    for f in 0..n_from {
+        for tid in ix.tids_from(f) {
+            out.insert((f, db.rels[rel].to[tid as usize]));
+        }
+    }
+    out
+}
+
+/// Triangle join cardinality of `skewed_triangle_db`-shaped schemas by
+/// nested-loop enumeration over the edge sets.
+fn brute_triangles(db: &Database) -> i128 {
+    let e0 = edge_set(db, 0);
+    let e1 = edge_set(db, 1);
+    let e2 = edge_set(db, 2);
+    let mut n = 0i128;
+    for &(a, b) in &e0 {
+        for &(b2, c) in &e1 {
+            if b2 == b && e2.contains(&(a, c)) {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Star join cardinality of `skewed_star_db`-shaped schemas:
+/// `Σ_h indeg_E0(h) · outdeg_E1(h) · outdeg_E2(h)`.
+fn brute_star(db: &Database) -> i128 {
+    let e0 = edge_set(db, 0);
+    let e1 = edge_set(db, 1);
+    let e2 = edge_set(db, 2);
+    let n_h = db.entities[0].len() as u32;
+    let mut n = 0i128;
+    for h in 0..n_h {
+        let d0 = e0.iter().filter(|&&(_, t)| t == h).count() as i128;
+        let d1 = e1.iter().filter(|&&(f, _)| f == h).count() as i128;
+        let d2 = e2.iter().filter(|&&(f, _)| f == h).count() as i128;
+        n += d0 * d1 * d2;
+    }
+    n
+}
+
+const CASES: u64 = 40;
+
+#[test]
+fn prop_wcoj_matches_chain_on_random_lattices() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        for p in &lattice.points {
+            let what = format!("seed {seed} point {:?}", p.rels);
+            assert_kernels_agree(&db, &p.rels, &p.attr_vars, &what);
+        }
+    }
+}
+
+#[test]
+fn prop_wcoj_matches_chain_on_indicator_only_queries() {
+    // empty var lists take the collapse-last fast path in the WCOJ
+    // kernel; the grouped queries above never do
+    for seed in 500..500 + CASES {
+        let mut rng = Rng::new(seed);
+        let db = random_db(&mut rng);
+        let lattice = Lattice::build(&db.schema, 3).unwrap();
+        for p in &lattice.points {
+            let what = format!("seed {seed} point {:?} ungrouped", p.rels);
+            assert_kernels_agree(&db, &p.rels, &[], &what);
+        }
+    }
+}
+
+#[test]
+fn triangle_tracks_brute_force_under_churn() {
+    let mut db = skewed_triangle_db(10).unwrap();
+    assert_eq!(brute_triangles(&db), skewed_triangle_count(10) as i128);
+    let mut rng = Rng::new(0xC0FFEE);
+    for step in 0..6 {
+        // churn: drop one link and add a few per relationship, leaving
+        // the touched CSR rows dirty (overlays force the memo fallback)
+        for rel in 0..3 {
+            let es: Vec<(u32, u32)> = edge_set(&db, rel).into_iter().collect();
+            let (f, t) = es[rng.gen_range(es.len() as u64) as usize];
+            db.delete_link(rel, f, t).unwrap();
+            for _ in 0..3 {
+                let f = rng.gen_u32(10);
+                let t = rng.gen_u32(10);
+                if !edge_set(&db, rel).contains(&(f, t)) {
+                    db.insert_link(rel, f, t, &[]).unwrap();
+                }
+            }
+        }
+        if step == 3 {
+            db.compact_indexes();
+        }
+        let want = brute_triangles(&db);
+        let got = assert_kernels_agree(&db, &[0, 1, 2], &[], &format!("step {step}"));
+        assert_eq!(got, want, "step {step}");
+    }
+}
+
+#[test]
+fn star_tracks_brute_force_under_churn() {
+    let mut db = skewed_star_db(9).unwrap();
+    let mut rng = Rng::new(42);
+    for step in 0..4 {
+        for rel in 0..3 {
+            let es: Vec<(u32, u32)> = edge_set(&db, rel).into_iter().collect();
+            let (f, t) = es[rng.gen_range(es.len() as u64) as usize];
+            db.delete_link(rel, f, t).unwrap();
+            let f = rng.gen_u32(9);
+            let t = rng.gen_u32(9);
+            if !edge_set(&db, rel).contains(&(f, t)) {
+                db.insert_link(rel, f, t, &[]).unwrap();
+            }
+        }
+        let want = brute_star(&db);
+        let got = assert_kernels_agree(&db, &[0, 1, 2], &[], &format!("step {step}"));
+        assert_eq!(got, want, "step {step}");
+    }
+}
+
+#[test]
+fn kernel_is_invisible_through_strategies_and_coordinator() {
+    let db = skewed_triangle_db(12).unwrap();
+    let mut wcoj_db = db.clone();
+    wcoj_db.set_kernel(JoinKernel::Wcoj);
+    for kind in StrategyKind::ALL_WITH_ADAPTIVE {
+        let base = run_strategy(&db, "tri", kind, Workload::PrepareOnly, None).unwrap();
+        let seq =
+            run_strategy(&wcoj_db, "tri", kind, Workload::PrepareOnly, None).unwrap();
+        assert_eq!(seq.cache_digest, base.cache_digest, "{kind:?} sequential");
+        for workers in [1, 4] {
+            let par =
+                run_coordinated(&wcoj_db, "tri", kind, Workload::PrepareOnly, None, workers)
+                    .unwrap();
+            assert_eq!(par.cache_digest, base.cache_digest, "{kind:?} x{workers}");
+        }
+    }
+}

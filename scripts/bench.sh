@@ -96,4 +96,9 @@ echo "== exp estimator (scale $SCALE, presets $PRESETS) =="
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --json "$ROOT/BENCH_estimator.json"
 
-echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json, BENCH_persist.json and BENCH_estimator.json"
+echo "== exp wcoj (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp wcoj \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --json "$ROOT/BENCH_wcoj.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json, BENCH_persist.json, BENCH_estimator.json and BENCH_wcoj.json"

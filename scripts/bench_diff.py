@@ -20,8 +20,11 @@ Behaviour per file:
   * anything else: every baseline headline row must reappear in the
     fresh run (matched on its identity columns) with each headline
     metric within ``RELCOUNT_BENCH_TOLERANCE`` (default 0.25, i.e.
-    +/-25%) relative deviation.  Out-of-band rows, vanished rows, and
-    malformed files fail the diff.
+    +/-25%) relative deviation.  The divisor is floored at
+    ``RELCOUNT_BENCH_EPSILON`` (default 1e-3), so a zero or near-zero
+    baseline value neither divides by zero nor manufactures a +/-inf%
+    deviation out of sub-epsilon noise.  Out-of-band rows, vanished
+    rows, and malformed files fail the diff.
 
 Exit status: 0 on pass/record-only, 1 on any failure.
 """
@@ -41,6 +44,7 @@ HEADLINES = {
         ("database", "mode"),
         ("q_p50", "regret_saved_frac"),
     ),
+    "BENCH_wcoj.json": (("database", "point"), ("speedup",)),
 }
 
 
@@ -75,6 +79,7 @@ def main():
     base_dir, fresh_dir = sys.argv[1], sys.argv[2]
     report_path = sys.argv[3] if len(sys.argv) == 4 else None
     tolerance = float(os.environ.get("RELCOUNT_BENCH_TOLERANCE", "0.25"))
+    epsilon = float(os.environ.get("RELCOUNT_BENCH_EPSILON", "1e-3"))
 
     lines = [f"# bench diff (tolerance +/-{tolerance:.0%})", ""]
     failed = False
@@ -124,7 +129,10 @@ def main():
                     lines.append(f"FAIL {fmt_ident(key)}: metric {m} unreadable")
                     failed = True
                     continue
-                delta = (f - b) / b if b != 0.0 else (0.0 if f == 0.0 else float("inf"))
+                # floor the divisor: a 0.0 baseline (or one below the
+                # noise floor) must not divide by zero or turn
+                # sub-epsilon jitter into an infinite relative deviation
+                delta = (f - b) / max(abs(b), epsilon)
                 ok = abs(delta) <= tolerance
                 mark = "ok  " if ok else "FAIL"
                 lines.append(

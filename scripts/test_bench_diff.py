@@ -1,0 +1,166 @@
+#!/usr/bin/env python3
+"""Synthetic-fixture tests for scripts/bench_diff.py.
+
+Run directly (CI does, in bench-smoke):
+
+    python3 scripts/test_bench_diff.py
+
+Builds throwaway baseline/fresh directories and checks the diff's
+verdicts, in particular the zero-baseline arithmetic: a 0.0 baseline
+value used to divide by zero into a +/-inf% deviation and fail the run
+on pure noise; it must now be judged against the epsilon floor.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DIFF = os.path.join(HERE, "bench_diff.py")
+
+# every HEADLINES file must exist in both dirs or the diff fails, so
+# fixtures write the full set and the test under scrutiny varies one
+ALL_FILES = {
+    "BENCH_scaling.json": [{"database": "uw", "strategy": "HYBRID", "workers": 2, "wall_s": 1.0}],
+    "BENCH_planner.json": [{"database": "uw", "pre_fraction": 0.5, "workers": 2, "total_s": 2.0}],
+    "BENCH_churn.json": [{"database": "uw", "churn_frac": 0.01, "workers": 2, "speedup": 3.0}],
+    "BENCH_serve.json": [{"database": "uw", "workers": 2, "throughput_rps": 1000.0}],
+    "BENCH_persist.json": [{"database": "uw", "workers": 2, "save_s": 0.1, "load_s": 0.1}],
+    "BENCH_estimator.json": [
+        {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.0}
+    ],
+    "BENCH_wcoj.json": [
+        {"database": "tri_skew", "point": "R0+R1+R2", "speedup": 8.0}
+    ],
+}
+
+
+def write_dirs(tmp, base_overrides=None, fresh_overrides=None):
+    base_dir = os.path.join(tmp, "base")
+    fresh_dir = os.path.join(tmp, "fresh")
+    os.makedirs(base_dir, exist_ok=True)
+    os.makedirs(fresh_dir, exist_ok=True)
+    for name, rows in ALL_FILES.items():
+        brows = (base_overrides or {}).get(name, rows)
+        frows = (fresh_overrides or {}).get(name, rows)
+        with open(os.path.join(base_dir, name), "w") as f:
+            json.dump({"provenance": "test", "rows": brows}, f)
+        with open(os.path.join(fresh_dir, name), "w") as f:
+            json.dump(frows, f)
+    return base_dir, fresh_dir
+
+
+def run_diff(base_dir, fresh_dir, env_extra=None):
+    env = dict(os.environ)
+    env.update(env_extra or {})
+    proc = subprocess.run(
+        [sys.executable, DIFF, base_dir, fresh_dir],
+        capture_output=True,
+        text=True,
+        env=env,
+    )
+    return proc.returncode, proc.stdout
+
+
+def check(name, cond, output):
+    if cond:
+        print(f"ok   {name}")
+    else:
+        print(f"FAIL {name}\n--- diff output ---\n{output}")
+        sys.exit(1)
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        # identical runs pass
+        code, out = run_diff(*write_dirs(tmp))
+        check("identical runs pass", code == 0 and "RESULT: pass" in out, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # a genuine regression beyond tolerance fails
+        fresh = {
+            "BENCH_churn.json": [
+                {"database": "uw", "churn_frac": 0.01, "workers": 2, "speedup": 1.0}
+            ]
+        }
+        code, out = run_diff(*write_dirs(tmp, fresh_overrides=fresh))
+        check("out-of-band metric fails", code == 1 and "FAIL" in out, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # THE BUG: a 0.0 baseline with sub-epsilon fresh noise used to
+        # produce (f - 0)/0 -> +inf% and fail; with the epsilon floor it
+        # is ordinary jitter
+        base = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.0}
+            ]
+        }
+        fresh = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 1e-5}
+            ]
+        }
+        code, out = run_diff(*write_dirs(tmp, base, fresh))
+        check("zero baseline + noise passes", code == 0, out)
+        check("no infinite deviation printed", "inf" not in out, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # a real jump off a 0.0 baseline still fails under the floor
+        base = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.0}
+            ]
+        }
+        fresh = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.9}
+            ]
+        }
+        code, out = run_diff(*write_dirs(tmp, base, fresh))
+        check("zero baseline + real jump fails", code == 1, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # the floor is tunable: a huge epsilon waves the same jump through
+        base = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.0}
+            ]
+        }
+        fresh = {
+            "BENCH_estimator.json": [
+                {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.9}
+            ]
+        }
+        code, out = run_diff(
+            *write_dirs(tmp, base, fresh), env_extra={"RELCOUNT_BENCH_EPSILON": "100"}
+        )
+        check("epsilon env var is honored", code == 0, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # seed baselines are record-only even when fresh rows differ wildly
+        base = {"BENCH_wcoj.json": []}
+        fresh = {
+            "BENCH_wcoj.json": [
+                {"database": "tri_skew", "point": "R0+R1+R2", "speedup": 0.001}
+            ]
+        }
+        base_dir, fresh_dir = write_dirs(tmp, base, fresh)
+        with open(os.path.join(base_dir, "BENCH_wcoj.json"), "w") as f:
+            json.dump({"provenance": "seed", "rows": []}, f)
+        code, out = run_diff(base_dir, fresh_dir)
+        check("seed baseline is record-only", code == 0 and "record-only" in out, out)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # a vanished identity row fails
+        fresh = {"BENCH_wcoj.json": []}
+        code, out = run_diff(*write_dirs(tmp, fresh_overrides=fresh))
+        check("vanished row fails", code == 1 and "vanished" in out, out)
+
+    print("all bench_diff tests passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
