@@ -23,8 +23,8 @@ use crate::estimate::sampler::EstimatorConfig;
 use crate::lattice::Lattice;
 use crate::learn::search::SearchConfig;
 use crate::metrics::report::{
-    ChurnRow, EstimatorRow, PersistRow, PlannerRow, RunRow, ScalingRow, ServeRow,
-    Table4Row, Table5Row, WcojRow,
+    ChurnRow, CompressRow, EstimatorRow, PersistRow, PlannerRow, RunRow,
+    ScalingRow, ServeRow, Table4Row, Table5Row, WcojRow,
 };
 use crate::serve::{
     enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
@@ -544,6 +544,158 @@ pub fn wcoj_rows(cfg: &ExpConfig) -> Result<Vec<WcojRow>> {
     Ok(rows)
 }
 
+/// The index-compression experiment (`relcount exp compress`,
+/// EXPERIMENTS.md §E17): per database (hub-skewed synthetics plus the
+/// Table-4 presets), every lattice point with at least two
+/// relationships is counted on all three index backends — plain CSR,
+/// compressed block-CSR and the hash oracle — under **both** join
+/// kernels, and the full cache build is digest-compared across backends
+/// at 1 and 4 workers.  Any count-digest or [`JoinStats`] divergence is
+/// a hard error, never a reported row, so only the timings (and hence
+/// `throughput_vs_csr`) are machine-dependent.  The headline is
+/// `bytes_per_pair_ccsr`: delta-encoded bit-packed blocks against CSR's
+/// flat 16 bytes/pair, with intersection throughput required to stay
+/// within 0.8x of plain CSR on at least one preset (gated by
+/// `compress-smoke` in CI against `bench/baselines/BENCH_compress.json`).
+pub fn compress_rows(cfg: &ExpConfig) -> Result<Vec<CompressRow>> {
+    let n = ((4000.0 * cfg.scale) as u32).max(16);
+    let mut dbs = vec![
+        ("tri_skew".to_string(), skewed_triangle_db(n)?),
+        ("star_skew".to_string(), skewed_star_db(n)?),
+    ];
+    for name in cfg.presets {
+        let db = generate(&preset(name, cfg.scale, cfg.seed)?)?;
+        dbs.push((name.to_string(), db));
+    }
+
+    let mut rows = Vec::new();
+    for (name, base) in &dbs {
+        let mut csr_db = base.clone();
+        csr_db.set_backend(Backend::Csr)?;
+        let mut ccsr_db = base.clone();
+        ccsr_db.set_backend(Backend::Ccsr)?;
+        let mut hash_db = base.clone();
+        hash_db.set_backend(Backend::Hash)?;
+
+        let pairs: u64 = base.rels.iter().map(|t| t.len() as u64).sum();
+        let csr_bytes: u64 =
+            csr_db.index_bytes_per_rel().iter().map(|&b| b as u64).sum();
+        let ccsr_bytes: u64 =
+            ccsr_db.index_bytes_per_rel().iter().map(|&b| b as u64).sum();
+
+        // per-point differential across backends, under both kernels
+        let lattice = Lattice::build(&base.schema, cfg.search.max_chain_length)?;
+        let mut points = 0u64;
+        let mut csr_time = Duration::ZERO;
+        let mut ccsr_time = Duration::ZERO;
+        for kernel in [JoinKernel::Chain, JoinKernel::Wcoj] {
+            csr_db.set_kernel(kernel);
+            ccsr_db.set_kernel(kernel);
+            hash_db.set_kernel(kernel);
+            for p in &lattice.points {
+                if p.rels.len() < 2 {
+                    continue;
+                }
+                let mut sa = JoinStats::default();
+                let start = Instant::now();
+                let a = positive_chain_ct(&csr_db, &p.rels, &p.attr_vars, &mut sa)?;
+                csr_time += start.elapsed();
+
+                let mut sb = JoinStats::default();
+                let start = Instant::now();
+                let b = positive_chain_ct(&ccsr_db, &p.rels, &p.attr_vars, &mut sb)?;
+                ccsr_time += start.elapsed();
+
+                let mut sc = JoinStats::default();
+                let c = positive_chain_ct(&hash_db, &p.rels, &p.attr_vars, &mut sc)?;
+
+                let digests_ok = a.digest() == b.digest() && b.digest() == c.digest();
+                if !digests_ok || sa != sb || sb != sc {
+                    return Err(Error::Data(format!(
+                        "compress: backends diverged on {name} kernel {} point {:?}",
+                        kernel.name(),
+                        p.rels
+                    )));
+                }
+                points += 1;
+            }
+        }
+
+        // full cache build digest equality across backends x worker counts
+        let scfg = StrategyConfig { budget: cfg.budget, ..Default::default() };
+        let mut witness: Option<(u64, JoinStats)> = None;
+        for workers in [1usize, 4] {
+            for db in [&csr_db, &ccsr_db, &hash_db] {
+                let (digest, stats) = if workers == 1 {
+                    let o = run_strategy_with(
+                        db,
+                        name,
+                        StrategyKind::Hybrid,
+                        Workload::PrepareOnly,
+                        scfg,
+                    )?;
+                    (o.cache_digest, o.report.join_stats)
+                } else {
+                    let o = run_coordinated_with(
+                        db,
+                        name,
+                        StrategyKind::Hybrid,
+                        Workload::PrepareOnly,
+                        scfg,
+                        workers,
+                    )?;
+                    (o.cache_digest, o.report.join_stats)
+                };
+                match &witness {
+                    None => witness = Some((digest, stats)),
+                    Some((d, s)) => {
+                        if *d != digest || *s != stats {
+                            return Err(Error::Data(format!(
+                                "compress: cache digest diverged on {name} \
+                                 backend {} at {workers} workers",
+                                db.backend().name()
+                            )));
+                        }
+                    }
+                }
+            }
+        }
+
+        rows.push(CompressRow {
+            database: name.clone(),
+            pairs,
+            csr_bytes,
+            ccsr_bytes,
+            bytes_per_pair_csr: if pairs == 0 {
+                0.0
+            } else {
+                csr_bytes as f64 / pairs as f64
+            },
+            bytes_per_pair_ccsr: if pairs == 0 {
+                0.0
+            } else {
+                ccsr_bytes as f64 / pairs as f64
+            },
+            bytes_ratio: if ccsr_bytes == 0 {
+                1.0
+            } else {
+                csr_bytes as f64 / ccsr_bytes as f64
+            },
+            points,
+            csr_time,
+            ccsr_time,
+            throughput_vs_csr: if ccsr_time.as_secs_f64() > 0.0 {
+                csr_time.as_secs_f64() / ccsr_time.as_secs_f64()
+            } else {
+                f64::INFINITY
+            },
+            identical: true,
+            workers: 4,
+        });
+    }
+    Ok(rows)
+}
+
 /// The restart-latency experiment (`relcount exp persist`,
 /// EXPERIMENTS.md §E14): per preset, build the maintained-count state,
 /// churn it so the snapshot is not the trivial initial generation, then
@@ -811,6 +963,32 @@ mod tests {
             .iter()
             .any(|r| r.database == "star_skew" && r.pattern == "star"));
         assert!(rows.iter().any(|r| r.database == "uw"));
+    }
+
+    #[test]
+    fn compress_rows_witness_identity_and_compression() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = compress_rows(&cfg).unwrap();
+        // the generator hard-errors on any backend divergence, so every
+        // surviving row is a witnessed three-way agreement at 1 and 4
+        // workers
+        assert_eq!(rows.len(), 3); // tri_skew, star_skew, uw
+        for r in &rows {
+            assert!(r.identical, "{r:?}");
+            assert_eq!(r.workers, 4);
+            assert!(r.pairs > 0);
+            assert!(r.points > 0, "no multi-rel lattice points on {}", r.database);
+            assert!(r.csr_bytes > 0 && r.ccsr_bytes > 0);
+            assert!(r.throughput_vs_csr > 0.0);
+        }
+        // the hub-skewed synthetics have dense sorted runs: the
+        // delta-encoded blocks must beat CSR's flat 16 bytes/pair
+        let tri = rows.iter().find(|r| r.database == "tri_skew").unwrap();
+        assert!(
+            tri.bytes_ratio > 1.0,
+            "ccsr should compress tri_skew: {tri:?}"
+        );
+        assert!(tri.bytes_per_pair_ccsr < tri.bytes_per_pair_csr);
     }
 
     #[test]

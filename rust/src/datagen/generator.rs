@@ -46,6 +46,19 @@ pub fn generate(cfg: &GenConfig) -> Result<Database> {
             })
             .collect(),
     )?;
+    // Fail before any table or dedup set grows: entity ids and
+    // relationship tuple ids are u32-addressed, and `seen.reserve`
+    // below sizes off n_links — an over-capacity preset must surface as
+    // a typed error up front, not an OOM or a mid-build wrap.
+    for spec in &cfg.entities {
+        Error::check_u32_capacity(&format!("{} entity ids", spec.name), spec.n)?;
+    }
+    for spec in &cfg.rels {
+        Error::check_u32_capacity(
+            &format!("{} link pairs", spec.name),
+            spec.n_links,
+        )?;
+    }
     let mut db = Database::empty(schema);
     let mut rng = Rng::new(cfg.seed);
 
@@ -185,6 +198,18 @@ mod tests {
         let db = generate(&cfg(11)).unwrap();
         // index build enforces uniqueness; verify count survived it
         assert_eq!(db.index(0).unwrap().len(), 150);
+    }
+
+    #[test]
+    fn over_capacity_specs_error_before_building() {
+        let mut c = cfg(5);
+        c.rels[0].n_links = u32::MAX as u64 + 1;
+        let e = generate(&c).unwrap_err();
+        assert!(matches!(e, Error::Capacity { .. }), "{e}");
+        let mut c = cfg(5);
+        c.entities[0].n = u32::MAX as u64 + 1;
+        let e = generate(&c).unwrap_err();
+        assert!(matches!(e, Error::Capacity { .. }), "{e}");
     }
 
     #[test]

@@ -30,6 +30,10 @@ pub fn skewed_triangle_db(n: u32) -> Result<Database> {
             "skewed_triangle_db needs n >= 2, got {n}"
         )));
     }
+    // fail before any table grows: each population holds n entities and
+    // each relationship 2n-1 pairs, all addressed by u32 ids
+    Error::check_u32_capacity("skewed_triangle_db entities", n as u64)?;
+    Error::check_u32_capacity("skewed_triangle_db pairs", 2 * n as u64 - 1)?;
     let schema = Schema::new(
         vec![
             EntityType { name: "A".into(), attrs: vec![Attribute::new("x", 3)] },
@@ -76,6 +80,10 @@ pub fn skewed_star_db(n: u32) -> Result<Database> {
             "skewed_star_db needs n >= 8, got {n}"
         )));
     }
+    // fail before any table grows: the widest relationship (E1) holds
+    // 3n pairs, all addressed by u32 tuple ids
+    Error::check_u32_capacity("skewed_star_db entities", n as u64)?;
+    Error::check_u32_capacity("skewed_star_db pairs", 3 * n as u64)?;
     let schema = Schema::new(
         vec![
             EntityType { name: "H".into(), attrs: vec![] },
@@ -164,5 +172,16 @@ mod tests {
     fn constructions_reject_degenerate_sizes() {
         assert!(skewed_triangle_db(1).is_err());
         assert!(skewed_star_db(4).is_err());
+    }
+
+    #[test]
+    fn constructions_reject_u32_overflow_before_building() {
+        // 2n-1 pairs would exceed the u32 tuple-id space: the guard must
+        // fire immediately (this returns in microseconds, not after
+        // growing gigabyte tables)
+        let e = skewed_triangle_db(0x8000_0001).unwrap_err();
+        assert!(matches!(e, Error::Capacity { .. }), "{e}");
+        let e = skewed_star_db(0x6000_0000).unwrap_err();
+        assert!(matches!(e, Error::Capacity { .. }), "{e}");
     }
 }

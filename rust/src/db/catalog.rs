@@ -352,6 +352,17 @@ impl Database {
                 .map(|v| v.iter().map(|i| i.bytes()).sum())
                 .unwrap_or(0)
     }
+
+    /// Bytes resident per relationship index, in relationship order
+    /// (empty when indexes are not built).  This is what makes storage
+    /// wins attributable per relationship in `relcount count` / `exp`
+    /// output instead of one lumped index number.
+    pub fn index_bytes_per_rel(&self) -> Vec<usize> {
+        self.indexes
+            .as_ref()
+            .map(|v| v.iter().map(|i| i.bytes()).collect())
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -447,6 +458,35 @@ mod tests {
         // switching to the same backend is a no-op
         db.set_backend(Backend::Hash).unwrap();
         assert!(db.has_indexes());
+        // and on to the compressed engine: same pair->tid mapping
+        db.set_backend(Backend::Ccsr).unwrap();
+        assert_eq!(db.backend(), Backend::Ccsr);
+        for rel in 0..db.rels.len() {
+            let t = &db.rels[rel];
+            for i in 0..t.len() {
+                assert_eq!(
+                    db.index(rel)
+                        .unwrap()
+                        .lookup(t.from[i as usize], t.to[i as usize]),
+                    csr_pairs[rel][i as usize]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn per_rel_index_bytes_track_backend() {
+        use crate::db::index::Backend;
+        let mut db = fixtures::university_db();
+        let csr_bytes = db.index_bytes_per_rel();
+        assert_eq!(csr_bytes.len(), db.n_relationships());
+        assert!(csr_bytes.iter().all(|&b| b > 0));
+        db.set_backend(Backend::Ccsr).unwrap();
+        let ccsr_bytes = db.index_bytes_per_rel();
+        assert_eq!(ccsr_bytes.len(), db.n_relationships());
+        assert!(ccsr_bytes.iter().all(|&b| b > 0));
+        db.invalidate_indexes();
+        assert!(db.index_bytes_per_rel().is_empty());
     }
 
     #[test]

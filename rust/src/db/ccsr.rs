@@ -1,0 +1,1070 @@
+//! Compressed block-CSR adjacency: the third `--backend` (`ccsr`),
+//! storing each sorted neighbor run as fixed-size delta-encoded,
+//! bit-packed blocks with per-block min/max headers.
+//!
+//! Layout, per orientation ([`CcsrHalf`]): the entry-offset column is
+//! identical to the plain CSR ([`crate::db::csr::CsrHalf::offsets`]),
+//! but instead of two parallel `u32` columns the entries live in
+//! [`BLOCK`]-sized blocks that never span rows.  Each block stores
+//!
+//! * `nbr_min` — the first neighbor, raw (also the skip header's lower
+//!   bound);
+//! * `nbr_max` — the last neighbor (the skip header's upper bound);
+//! * the remaining `blen-1` neighbors as `delta - 1` values bit-packed
+//!   at the block's `nbr_width` (consecutive hub runs pack at width 0);
+//! * the `blen` tuple ids as offsets from the block's `tid_min`,
+//!   bit-packed at `tid_width`.
+//!
+//! Intersections skip whole blocks by comparing the probe value against
+//! the `nbr_min`/`nbr_max` headers before paying for a decode (see
+//! [`crate::db::index::NeighborRun`]), and decode itself is chunked —
+//! deltas unpack into a stack buffer in one plain loop, then a prefix
+//! sum rebuilds the run — so the compiler can vectorize the hot parts.
+//!
+//! Churn reuses the plain CSR's sorted overlay verbatim
+//! ([`crate::db::csr::Overlay`]): mutations never rewrite packed
+//! blocks, reads merge the overlay exactly like the CSR engine, and
+//! [`CcsrIndex::compact`] decodes + merges + re-encodes each
+//! orientation.  The one structural difference: relabeling a
+//! base-resident tuple id after a swap-remove cannot patch the packed
+//! bytes in place, so it tombstones the pair and re-adds it with the
+//! fresh tid (the overlay merge and compaction already handle
+//! tombstone-with-readd for the delete-then-reinsert case).
+//!
+//! Equivalence with the `csr` and `hash` backends at all times — counts,
+//! `JoinStats`, cache digests, snapshot round-trips — is held by
+//! `rust/tests/proptest_invariants.rs` and the `compress-smoke` CI lane.
+
+use crate::db::csr::{isqrt, Overlay, NBR_MASK, OVERLAY_SLACK};
+use crate::db::index::pair_key;
+use crate::db::table::RelTable;
+use crate::error::{Error, Result};
+
+/// Entries per packed block.  64 keeps the decode buffers on the stack,
+/// the per-block header cost under half a bit per entry, and one block's
+/// deltas inside a couple of cache lines at typical widths.
+pub const BLOCK: usize = 64;
+
+/// Bits needed to represent `v` (0 for 0 — width-0 fields occupy no
+/// payload bits at all).
+#[inline]
+fn bits_for(v: u32) -> u8 {
+    (32 - v.leading_zeros()) as u8
+}
+
+/// Append `width` low bits of `v` to the packed stream.  Widths are at
+/// most 32 (values are `u32`), so a write spills into at most one
+/// following word; the spill shift `64 - off` is only taken when
+/// `off + width > 64`, i.e. `off >= 33`, keeping it in `1..=31`.
+fn push_bits(packed: &mut Vec<u64>, bit_len: &mut u64, width: u8, v: u64) {
+    if width == 0 {
+        return;
+    }
+    debug_assert!(width <= 32 && v < (1u64 << width));
+    let word = (*bit_len / 64) as usize;
+    let off = (*bit_len % 64) as u32;
+    while packed.len() < word + 2 {
+        packed.push(0);
+    }
+    packed[word] |= v << off;
+    if off + width as u32 > 64 {
+        packed[word + 1] |= v >> (64 - off);
+    }
+    *bit_len += width as u64;
+}
+
+/// Read `width` bits at `bit_pos` (the inverse of [`push_bits`]).
+#[inline]
+fn get_bits(packed: &[u64], bit_pos: u64, width: u8) -> u64 {
+    if width == 0 {
+        return 0;
+    }
+    let word = (bit_pos / 64) as usize;
+    let off = (bit_pos % 64) as u32;
+    let mut v = packed[word] >> off;
+    if off + width as u32 > 64 {
+        v |= packed[word + 1] << (64 - off);
+    }
+    v & ((1u64 << width) - 1)
+}
+
+/// One orientation of the compressed adjacency.  `offsets` has the
+/// same semantics as the plain CSR entry bounds; `blk_offsets` bounds
+/// each row's blocks; the five header columns and `data_off` are
+/// indexed by global block number; `packed` holds every block's payload
+/// bits back to back (trimmed to exactly `ceil(bits / 64)` words so the
+/// encoding — and hence snapshot bytes and checksums — is a pure
+/// function of the content).
+#[derive(Clone, Debug, Default)]
+pub struct CcsrHalf {
+    /// Entry bounds per row; `len() == rows + 1`.
+    pub offsets: Vec<u32>,
+    /// Block-index bounds per row; `len() == rows + 1`.
+    pub blk_offsets: Vec<u32>,
+    /// First neighbor of each block, stored raw.
+    pub nbr_min: Vec<u32>,
+    /// Last neighbor of each block (skip header).
+    pub nbr_max: Vec<u32>,
+    /// Smallest tuple id in each block.
+    pub tid_min: Vec<u32>,
+    /// Bits per `delta - 1` neighbor gap in each block.
+    pub nbr_width: Vec<u8>,
+    /// Bits per `tid - tid_min` offset in each block.
+    pub tid_width: Vec<u8>,
+    /// Bit offset of each block's payload; `len() == blocks + 1`.
+    pub data_off: Vec<u64>,
+    /// Bit-packed payload words.
+    pub packed: Vec<u64>,
+}
+
+impl CcsrHalf {
+    fn rows(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    fn run(&self, r: u32) -> (usize, usize) {
+        (self.offsets[r as usize] as usize, self.offsets[r as usize + 1] as usize)
+    }
+
+    /// Total base entries (live pairs before overlay adjustments).
+    fn base_len(&self) -> usize {
+        *self.offsets.last().expect("offsets non-empty") as usize
+    }
+
+    /// Build from `(row, nbr, tid)` triples (sorted in place), mirroring
+    /// [`crate::db::csr::CsrHalf`]'s capacity guard on the offset column.
+    fn build(mut triples: Vec<(u32, u32, u32)>, rows: usize) -> Result<CcsrHalf> {
+        Error::check_u32_capacity("ccsr offset column", triples.len() as u64)?;
+        triples.sort_unstable();
+        let mut offsets = vec![0u32; rows + 1];
+        for &(r, _, _) in &triples {
+            offsets[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            offsets[i + 1] += offsets[i];
+        }
+        let nbr: Vec<u32> = triples.iter().map(|t| t.1).collect();
+        let tid: Vec<u32> = triples.iter().map(|t| t.2).collect();
+        Ok(Self::encode(offsets, &nbr, &tid))
+    }
+
+    /// Encode flat sorted columns (CSR shape) into packed blocks.
+    fn encode(offsets: Vec<u32>, nbr: &[u32], tid: &[u32]) -> CcsrHalf {
+        let rows = offsets.len() - 1;
+        let mut h = CcsrHalf {
+            blk_offsets: Vec::with_capacity(rows + 1),
+            ..CcsrHalf::default()
+        };
+        h.blk_offsets.push(0);
+        h.data_off.push(0);
+        let mut bit_len = 0u64;
+        for r in 0..rows {
+            let (lo, hi) = (offsets[r] as usize, offsets[r + 1] as usize);
+            let mut pos = lo;
+            while pos < hi {
+                let blen = (hi - pos).min(BLOCK);
+                let bn = &nbr[pos..pos + blen];
+                let bt = &tid[pos..pos + blen];
+                let tmn = *bt.iter().min().expect("non-empty block");
+                let nw = bn
+                    .windows(2)
+                    .map(|w| w[1] - w[0] - 1)
+                    .max()
+                    .map_or(0, bits_for);
+                let tw = bt.iter().map(|&t| t - tmn).max().map_or(0, bits_for);
+                h.nbr_min.push(bn[0]);
+                h.nbr_max.push(bn[blen - 1]);
+                h.tid_min.push(tmn);
+                h.nbr_width.push(nw);
+                h.tid_width.push(tw);
+                for w in bn.windows(2) {
+                    push_bits(&mut h.packed, &mut bit_len, nw, (w[1] - w[0] - 1) as u64);
+                }
+                for &t in bt {
+                    push_bits(&mut h.packed, &mut bit_len, tw, (t - tmn) as u64);
+                }
+                h.data_off.push(bit_len);
+                pos += blen;
+            }
+            h.blk_offsets.push(h.nbr_min.len() as u32);
+        }
+        // trim the spare spill word so the byte image is canonical
+        h.packed.truncate(((bit_len + 63) / 64) as usize);
+        h.offsets = offsets;
+        h
+    }
+
+    /// Decode global block `g` (holding `blen` entries) into the output
+    /// buffers: deltas unpack into a stack buffer in one plain loop,
+    /// then a prefix sum rebuilds the neighbors (wrapping so corrupt
+    /// persisted widths surface as validation errors, not panics).
+    fn decode_block(&self, g: usize, blen: usize, nbr: &mut [u32; BLOCK], tid: &mut [u32; BLOCK]) {
+        let nw = self.nbr_width[g];
+        let tw = self.tid_width[g];
+        let mut pos = self.data_off[g];
+        let mut dbuf = [0u32; BLOCK];
+        for d in dbuf[1..blen].iter_mut() {
+            *d = get_bits(&self.packed, pos, nw) as u32;
+            pos += nw as u64;
+        }
+        let mut acc = self.nbr_min[g];
+        nbr[0] = acc;
+        for i in 1..blen {
+            acc = acc.wrapping_add(dbuf[i]).wrapping_add(1);
+            nbr[i] = acc;
+        }
+        let tmn = self.tid_min[g];
+        for t in tid[..blen].iter_mut() {
+            *t = tmn.wrapping_add(get_bits(&self.packed, pos, tw) as u32);
+            pos += tw as u64;
+        }
+    }
+
+    /// Borrow row `r` as a block run.
+    fn block_run(&self, r: u32) -> BlockRun<'_> {
+        let (lo, hi) = self.run(r);
+        BlockRun {
+            half: self,
+            len: hi - lo,
+            blk0: self.blk_offsets[r as usize] as usize,
+        }
+    }
+
+    /// Tuple id of `(r, x)` if present in the base blocks: skip to the
+    /// candidate block by header, then decode and binary-search it.
+    fn find(&self, r: u32, x: u32) -> Option<u32> {
+        let blo = self.blk_offsets[r as usize] as usize;
+        let bhi = self.blk_offsets[r as usize + 1] as usize;
+        let b = blo + self.nbr_max[blo..bhi].partition_point(|&m| m < x);
+        if b == bhi || self.nbr_min[b] > x {
+            return None;
+        }
+        let (lo, hi) = self.run(r);
+        let blen = (hi - lo - (b - blo) * BLOCK).min(BLOCK);
+        let mut nb = [0u32; BLOCK];
+        let mut tb = [0u32; BLOCK];
+        self.decode_block(b, blen, &mut nb, &mut tb);
+        nb[..blen].binary_search(&x).ok().map(|p| tb[p])
+    }
+
+    fn grow(&mut self, rows: usize) {
+        let last = *self.offsets.last().expect("offsets non-empty");
+        let blast = *self.blk_offsets.last().expect("blk_offsets non-empty");
+        while self.offsets.len() < rows + 1 {
+            self.offsets.push(last);
+            self.blk_offsets.push(blast);
+        }
+    }
+
+    fn bytes(&self) -> usize {
+        (self.offsets.capacity()
+            + self.blk_offsets.capacity()
+            + self.nbr_min.capacity()
+            + self.nbr_max.capacity()
+            + self.tid_min.capacity())
+            * 4
+            + self.nbr_width.capacity()
+            + self.tid_width.capacity()
+            + (self.data_off.capacity() + self.packed.capacity()) * 8
+    }
+}
+
+/// A borrowed clean row of packed blocks.  The skip headers
+/// ([`BlockRun::seek_block`]) let intersections reject whole blocks
+/// before decoding; [`BlockRun::decode_block`] materializes one block
+/// into caller-provided stack buffers.
+#[derive(Clone, Copy)]
+pub struct BlockRun<'a> {
+    half: &'a CcsrHalf,
+    len: usize,
+    blk0: usize,
+}
+
+impl<'a> BlockRun<'a> {
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Blocks in this run.
+    pub fn n_blocks(&self) -> usize {
+        (self.len + BLOCK - 1) / BLOCK
+    }
+
+    /// Entries in row-local block `b`.
+    pub fn block_len(&self, b: usize) -> usize {
+        (self.len - b * BLOCK).min(BLOCK)
+    }
+
+    /// Smallest neighbor in row-local block `b` (header read, no decode).
+    pub fn block_min(&self, b: usize) -> u32 {
+        self.half.nbr_min[self.blk0 + b]
+    }
+
+    /// Largest neighbor in row-local block `b` (header read, no decode).
+    pub fn block_max(&self, b: usize) -> u32 {
+        self.half.nbr_max[self.blk0 + b]
+    }
+
+    /// First row-local block at or after `b_from` whose `nbr_max` is
+    /// `>= x` ([`Self::n_blocks`] if none) — the skip-intersection
+    /// primitive: every earlier block provably holds only values `< x`.
+    pub fn seek_block(&self, b_from: usize, x: u32) -> usize {
+        let s = &self.half.nbr_max[self.blk0 + b_from..self.blk0 + self.n_blocks()];
+        b_from + s.partition_point(|&m| m < x)
+    }
+
+    /// Decode row-local block `b` into the buffers; returns its length.
+    pub fn decode_block(&self, b: usize, nbr: &mut [u32; BLOCK], tid: &mut [u32; BLOCK]) -> usize {
+        let blen = self.block_len(b);
+        self.half.decode_block(self.blk0 + b, blen, nbr, tid);
+        blen
+    }
+
+    /// Entry `k` of the run (decodes `k`'s block; for one-off draws like
+    /// the sampler's canonical-order walk, not for iteration).
+    pub fn get(&self, k: usize) -> (u32, u32) {
+        debug_assert!(k < self.len);
+        let mut nb = [0u32; BLOCK];
+        let mut tb = [0u32; BLOCK];
+        self.decode_block(k / BLOCK, &mut nb, &mut tb);
+        (nb[k % BLOCK], tb[k % BLOCK])
+    }
+
+    /// Materialize the whole run as sorted `(neighbor, tid)` pairs.
+    pub fn to_pairs(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.len);
+        let mut nb = [0u32; BLOCK];
+        let mut tb = [0u32; BLOCK];
+        for b in 0..self.n_blocks() {
+            let blen = self.decode_block(b, &mut nb, &mut tb);
+            out.extend(nb[..blen].iter().copied().zip(tb[..blen].iter().copied()));
+        }
+        out
+    }
+}
+
+/// One row of a compressed orientation, merged with any overlay
+/// entries.  Unlike [`crate::db::csr::CsrRow`] the clean arm cannot
+/// lend column slices — entries live in packed blocks — so it lends the
+/// block run itself.
+pub enum CcsrRow<'a> {
+    /// No overlay entries touch this row: borrow the packed blocks.
+    Clean(BlockRun<'a>),
+    /// Overlay entries touch this row: a materialized `(nbr, tid)` run,
+    /// still strictly ascending by neighbor.
+    Dirty(Vec<(u32, u32)>),
+}
+
+/// Compressed block-CSR index over one relationship table: both
+/// orientations plus their overlays.  The API mirrors
+/// [`crate::db::csr::CsrIndex`] so [`crate::db::index::RelIx`] can
+/// dispatch on the backend.
+#[derive(Clone, Debug, Default)]
+pub struct CcsrIndex {
+    /// from -> packed sorted (to, tid) runs.
+    fwd: CcsrHalf,
+    /// to -> packed sorted (from, tid) runs.
+    rev: CcsrHalf,
+    ov_fwd: Overlay,
+    ov_rev: Overlay,
+}
+
+impl CcsrIndex {
+    /// Build from a table (same contract as
+    /// [`crate::db::csr::CsrIndex::build`]: rejects out-of-range
+    /// endpoints and duplicate pairs).
+    pub fn build(table: &RelTable, n_from: u32, n_to: u32) -> Result<CcsrIndex> {
+        let n = table.len() as usize;
+        let mut f_triples = Vec::with_capacity(n);
+        let mut r_triples = Vec::with_capacity(n);
+        for t in 0..table.len() {
+            let f = table.from[t as usize];
+            let o = table.to[t as usize];
+            if f >= n_from || o >= n_to {
+                return Err(Error::Data(format!(
+                    "rel tuple ({f},{o}) out of population range ({n_from},{n_to})"
+                )));
+            }
+            f_triples.push((f, o, t));
+            r_triples.push((o, f, t));
+        }
+        f_triples.sort_unstable();
+        for w in f_triples.windows(2) {
+            if (w[0].0, w[0].1) == (w[1].0, w[1].1) {
+                return Err(Error::Data(format!(
+                    "duplicate relationship pair ({},{})",
+                    w[0].0, w[0].1
+                )));
+            }
+        }
+        let fwd = CcsrHalf::build(f_triples, n_from as usize)?;
+        let rev = CcsrHalf::build(r_triples, n_to as usize)?;
+        Ok(CcsrIndex {
+            fwd,
+            rev,
+            ov_fwd: Overlay::default(),
+            ov_rev: Overlay::default(),
+        })
+    }
+
+    /// Tuple id for a fully-bound pair, if the relationship holds
+    /// (overlay-aware: pending inserts win, tombstones hide base
+    /// entries).
+    #[inline]
+    pub fn lookup(&self, from: u32, to: u32) -> Option<u32> {
+        if from as usize >= self.fwd.rows() || to as usize >= self.rev.rows() {
+            return None;
+        }
+        if !self.ov_fwd.is_empty() {
+            let k = pair_key(from, to);
+            if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&k, |e| e.0) {
+                return Some(self.ov_fwd.add[p].1);
+            }
+            if self.ov_fwd.del.binary_search(&k).is_ok() {
+                return None;
+            }
+        }
+        self.fwd.find(from, to)
+    }
+
+    /// Live adjacency degree of `from`.
+    pub fn degree_from(&self, f: u32) -> usize {
+        let (lo, hi) = self.fwd.run(f);
+        hi - lo - self.ov_fwd.del_range(f).len() + self.ov_fwd.add_range(f).len()
+    }
+
+    /// Live adjacency degree of `to`.
+    pub fn degree_to(&self, t: u32) -> usize {
+        let (lo, hi) = self.rev.run(t);
+        hi - lo - self.ov_rev.del_range(t).len() + self.ov_rev.add_range(t).len()
+    }
+
+    /// The from-oriented row, merged with the overlay when necessary.
+    pub fn row_from(&self, f: u32) -> CcsrRow<'_> {
+        Self::row(&self.fwd, &self.ov_fwd, f)
+    }
+
+    /// The to-oriented row, merged with the overlay when necessary.
+    pub fn row_to(&self, t: u32) -> CcsrRow<'_> {
+        Self::row(&self.rev, &self.ov_rev, t)
+    }
+
+    /// The packed block run of `from`, available only when no overlay
+    /// entry touches the row (same cleanliness contract as
+    /// [`crate::db::csr::CsrIndex::sorted_run_from`]; dirty rows fall
+    /// back to generic enumeration).
+    pub fn block_run_from(&self, f: u32) -> Option<BlockRun<'_>> {
+        if self.ov_fwd.is_empty() || !self.ov_fwd.touches(f) {
+            Some(self.fwd.block_run(f))
+        } else {
+            None
+        }
+    }
+
+    /// The packed block run of `to` (see [`CcsrIndex::block_run_from`]).
+    pub fn block_run_to(&self, t: u32) -> Option<BlockRun<'_>> {
+        if self.ov_rev.is_empty() || !self.ov_rev.touches(t) {
+            Some(self.rev.block_run(t))
+        } else {
+            None
+        }
+    }
+
+    fn row<'a>(half: &'a CcsrHalf, ov: &'a Overlay, r: u32) -> CcsrRow<'a> {
+        if ov.is_empty() || !ov.touches(r) {
+            return CcsrRow::Clean(half.block_run(r));
+        }
+        CcsrRow::Dirty(Self::merge_row(half, ov, r))
+    }
+
+    /// Decode row `r` and merge the overlay into a sorted `(nbr, tid)`
+    /// run — the same merge as [`crate::db::csr::CsrIndex`]'s dirty-row
+    /// path (adds interleave by key, tombstones drop base entries, a
+    /// tombstone-with-readd carries the fresh tid).
+    fn merge_row(half: &CcsrHalf, ov: &Overlay, r: u32) -> Vec<(u32, u32)> {
+        let base = half.block_run(r).to_pairs();
+        let adds = ov.add_range(r);
+        let dels = ov.del_range(r);
+        let mut out = Vec::with_capacity(base.len() + adds.len());
+        let (mut ai, mut di) = (0, 0);
+        for &(n, t) in &base {
+            while ai < adds.len() && ((adds[ai].0 & NBR_MASK) as u32) < n {
+                out.push(((adds[ai].0 & NBR_MASK) as u32, adds[ai].1));
+                ai += 1;
+            }
+            if di < dels.len() && (dels[di] & NBR_MASK) as u32 == n {
+                di += 1;
+                if ai < adds.len() && (adds[ai].0 & NBR_MASK) as u32 == n {
+                    out.push((n, adds[ai].1));
+                    ai += 1;
+                }
+                continue;
+            }
+            out.push((n, t));
+        }
+        for &(k, t) in &adds[ai..] {
+            out.push(((k & NBR_MASK) as u32, t));
+        }
+        out
+    }
+
+    /// Extend both orientations to cover grown endpoint populations.
+    pub fn grow(&mut self, n_from: u32, n_to: u32) {
+        if self.fwd.rows() < n_from as usize {
+            self.fwd.grow(n_from as usize);
+        }
+        if self.rev.rows() < n_to as usize {
+            self.rev.grow(n_to as usize);
+        }
+    }
+
+    /// Register a freshly appended tuple `t = (from, to)` in the
+    /// overlay.
+    pub fn insert(&mut self, from: u32, to: u32, t: u32) -> Result<()> {
+        if from as usize >= self.fwd.rows() || to as usize >= self.rev.rows() {
+            return Err(Error::Data(format!(
+                "rel tuple ({from},{to}) out of population range ({},{})",
+                self.fwd.rows(),
+                self.rev.rows()
+            )));
+        }
+        if self.lookup(from, to).is_some() {
+            return Err(Error::Data(format!(
+                "duplicate relationship pair ({from},{to})"
+            )));
+        }
+        Error::check_u32_capacity("ccsr live pairs", self.len() as u64 + 1)?;
+        self.ov_fwd.insert_add(pair_key(from, to), t);
+        self.ov_rev.insert_add(pair_key(to, from), t);
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Unregister tuple `t = (from, to)` after a
+    /// [`RelTable::swap_remove`], relabeling the moved tuple
+    /// `last -> t`.  Packed blocks are immutable, so a base-resident
+    /// relabel goes through the overlay as tombstone + re-add with the
+    /// fresh tid instead of patching the tid column in place.
+    pub fn remove_swap(
+        &mut self,
+        from: u32,
+        to: u32,
+        t: u32,
+        last: u32,
+        last_from: u32,
+        last_to: u32,
+    ) -> Result<()> {
+        match self.lookup(from, to) {
+            Some(id) if id == t => {}
+            _ => {
+                return Err(Error::Data(format!(
+                    "index out of sync removing ({from},{to}) id {t}"
+                )))
+            }
+        }
+        let fk = pair_key(from, to);
+        if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&fk, |e| e.0) {
+            self.ov_fwd.add.remove(p);
+            let rk = pair_key(to, from);
+            let q = self
+                .ov_rev
+                .add
+                .binary_search_by_key(&rk, |e| e.0)
+                .expect("overlay orientations in sync");
+            self.ov_rev.add.remove(q);
+        } else {
+            self.ov_fwd.insert_del(fk);
+            self.ov_rev.insert_del(pair_key(to, from));
+        }
+        if t != last {
+            let lk = pair_key(last_from, last_to);
+            if let Ok(p) = self.ov_fwd.add.binary_search_by_key(&lk, |e| e.0) {
+                self.ov_fwd.add[p].1 = t;
+                let rk = pair_key(last_to, last_from);
+                let q = self
+                    .ov_rev
+                    .add
+                    .binary_search_by_key(&rk, |e| e.0)
+                    .expect("overlay orientations in sync");
+                self.ov_rev.add[q].1 = t;
+            } else {
+                // base-resident: tombstone + re-add with the fresh tid
+                debug_assert!(self.fwd.find(last_from, last_to).is_some());
+                self.ov_fwd.insert_del(lk);
+                self.ov_fwd.insert_add(lk, t);
+                let rk = pair_key(last_to, last_from);
+                self.ov_rev.insert_del(rk);
+                self.ov_rev.insert_add(rk, t);
+            }
+        }
+        self.maybe_compact();
+        Ok(())
+    }
+
+    /// Live pair count.
+    pub fn len(&self) -> usize {
+        self.fwd.base_len() - self.ov_fwd.del.len() + self.ov_fwd.add.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pending overlay entries across both orientations.
+    pub fn overlay_len(&self) -> usize {
+        self.ov_fwd.len() + self.ov_rev.len()
+    }
+
+    /// Largest live degree in either orientation.
+    pub fn max_degree(&self) -> usize {
+        if self.ov_fwd.is_empty() && self.ov_rev.is_empty() {
+            let f = self.fwd.offsets.windows(2).map(|w| (w[1] - w[0]) as usize);
+            let t = self.rev.offsets.windows(2).map(|w| (w[1] - w[0]) as usize);
+            f.max().unwrap_or(0).max(t.max().unwrap_or(0))
+        } else {
+            let f = (0..self.fwd.rows()).map(|r| self.degree_from(r as u32));
+            let t = (0..self.rev.rows()).map(|r| self.degree_to(r as u32));
+            f.max().unwrap_or(0).max(t.max().unwrap_or(0))
+        }
+    }
+
+    /// Merge the overlay into freshly re-encoded blocks (decode + merge
+    /// + re-encode per orientation); afterwards every row is clean and
+    /// [`CcsrIndex::overlay_len`] is zero.
+    pub fn compact(&mut self) {
+        if !self.ov_fwd.is_empty() {
+            self.fwd = Self::compact_half(&self.fwd, &mut self.ov_fwd);
+        }
+        if !self.ov_rev.is_empty() {
+            self.rev = Self::compact_half(&self.rev, &mut self.ov_rev);
+        }
+    }
+
+    fn maybe_compact(&mut self) {
+        let threshold = OVERLAY_SLACK + isqrt(self.fwd.base_len());
+        if self.ov_fwd.len() > threshold || self.ov_rev.len() > threshold {
+            self.compact();
+        }
+    }
+
+    fn compact_half(half: &CcsrHalf, ov: &mut Overlay) -> CcsrHalf {
+        let rows = half.rows();
+        let new_len = half.base_len() - ov.del.len() + ov.add.len();
+        let mut offsets = Vec::with_capacity(rows + 1);
+        let mut nbr = Vec::with_capacity(new_len);
+        let mut tid = Vec::with_capacity(new_len);
+        offsets.push(0u32);
+        let mut nb = [0u32; BLOCK];
+        let mut tb = [0u32; BLOCK];
+        for r in 0..rows as u32 {
+            if ov.touches(r) {
+                for (n, t) in Self::merge_row(half, ov, r) {
+                    nbr.push(n);
+                    tid.push(t);
+                }
+            } else {
+                let run = half.block_run(r);
+                for b in 0..run.n_blocks() {
+                    let blen = run.decode_block(b, &mut nb, &mut tb);
+                    nbr.extend_from_slice(&nb[..blen]);
+                    tid.extend_from_slice(&tb[..blen]);
+                }
+            }
+            offsets.push(nbr.len() as u32);
+        }
+        debug_assert_eq!(nbr.len(), new_len);
+        ov.add.clear();
+        ov.del.clear();
+        CcsrHalf::encode(offsets, &nbr, &tid)
+    }
+
+    /// Approximate heap footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.fwd.bytes() + self.rev.bytes() + self.ov_fwd.bytes() + self.ov_rev.bytes()
+    }
+
+    /// The packed halves of both orientations, for snapshot
+    /// serialization.  Only a clean index can be serialized — callers
+    /// must [`CcsrIndex::compact`] first.
+    pub fn halves(&self) -> Result<(&CcsrHalf, &CcsrHalf)> {
+        if self.overlay_len() != 0 {
+            return Err(Error::Data(
+                "cannot serialize a ccsr index with a pending overlay; compact first"
+                    .into(),
+            ));
+        }
+        Ok((&self.fwd, &self.rev))
+    }
+
+    /// Rebuild an index from persisted halves (the snapshot-restore
+    /// path), validating the block structure so corrupt-but-checksummed
+    /// inputs can never produce out-of-bounds reads or silent count
+    /// divergence: header/offset arithmetic first (so every subsequent
+    /// payload read is provably in bounds), then a full decode checking
+    /// strict ascent, population/tuple ranges, and header consistency.
+    pub fn from_halves(fwd: CcsrHalf, rev: CcsrHalf) -> Result<CcsrIndex> {
+        Self::validate_half(&fwd, rev.offsets.len().saturating_sub(1), "fwd")?;
+        Self::validate_half(&rev, fwd.offsets.len().saturating_sub(1), "rev")?;
+        if fwd.base_len() != rev.base_len() {
+            return Err(Error::Data(format!(
+                "ccsr orientations disagree on pair count ({} vs {})",
+                fwd.base_len(),
+                rev.base_len()
+            )));
+        }
+        Ok(CcsrIndex {
+            fwd,
+            rev,
+            ov_fwd: Overlay::default(),
+            ov_rev: Overlay::default(),
+        })
+    }
+
+    fn validate_half(h: &CcsrHalf, n_opposite: usize, side: &str) -> Result<()> {
+        let err = |m: String| Error::Data(format!("ccsr {side} half: {m}"));
+        if h.offsets.is_empty() || h.offsets[0] != 0 {
+            return Err(err("offsets must start at 0".into()));
+        }
+        if h.offsets.windows(2).any(|w| w[0] > w[1]) {
+            return Err(err("offsets not monotone".into()));
+        }
+        if h.blk_offsets.len() != h.offsets.len() || h.blk_offsets[0] != 0 {
+            return Err(err("block offsets inconsistent with offsets".into()));
+        }
+        for r in 0..h.rows() {
+            let run = (h.offsets[r + 1] - h.offsets[r]) as usize;
+            let blks = h
+                .blk_offsets[r + 1]
+                .checked_sub(h.blk_offsets[r])
+                .ok_or_else(|| err("block offsets not monotone".into()))?
+                as usize;
+            if blks != (run + BLOCK - 1) / BLOCK {
+                return Err(err(format!("row {r}: {run} entries but {blks} blocks")));
+            }
+        }
+        let n_blocks = *h.blk_offsets.last().unwrap() as usize;
+        if h.nbr_min.len() != n_blocks
+            || h.nbr_max.len() != n_blocks
+            || h.tid_min.len() != n_blocks
+            || h.nbr_width.len() != n_blocks
+            || h.tid_width.len() != n_blocks
+            || h.data_off.len() != n_blocks + 1
+        {
+            return Err(err("header column lengths inconsistent".into()));
+        }
+        if h.data_off[0] != 0 {
+            return Err(err("payload must start at bit 0".into()));
+        }
+        if h.nbr_width.iter().chain(h.tid_width.iter()).any(|&w| w > 32) {
+            return Err(err("field width exceeds 32 bits".into()));
+        }
+        // bit-offset contiguity: each block's payload is exactly its
+        // (blen-1) deltas plus blen tid offsets, back to back
+        let total = h.base_len();
+        let mut g = 0usize;
+        for r in 0..h.rows() {
+            let mut left = (h.offsets[r + 1] - h.offsets[r]) as usize;
+            while left > 0 {
+                let blen = left.min(BLOCK) as u64;
+                let want = h.data_off[g]
+                    + (blen - 1) * h.nbr_width[g] as u64
+                    + blen * h.tid_width[g] as u64;
+                if h.data_off[g + 1] != want {
+                    return Err(err(format!("block {g}: payload bits not contiguous")));
+                }
+                left -= blen as usize;
+                g += 1;
+            }
+        }
+        let final_bits = h.data_off[n_blocks];
+        if h.packed.len() as u64 != (final_bits + 63) / 64 {
+            return Err(err(format!(
+                "packed length {} words inconsistent with {final_bits} payload bits",
+                h.packed.len()
+            )));
+        }
+        // full decode: strict ascent within rows (across block seams
+        // too), ids in range, headers matching the decoded content
+        let mut nb = [0u32; BLOCK];
+        let mut tb = [0u32; BLOCK];
+        for r in 0..h.rows() {
+            let run = h.block_run(r as u32);
+            let mut prev: Option<u32> = None;
+            for b in 0..run.n_blocks() {
+                let blen = run.decode_block(b, &mut nb, &mut tb);
+                if nb[0] != run.block_min(b) || nb[blen - 1] != run.block_max(b) {
+                    return Err(err(format!("row {r}: block header/content mismatch")));
+                }
+                for i in 0..blen {
+                    if prev.map_or(false, |p| p >= nb[i]) {
+                        return Err(err(format!("row {r}: neighbor run not strictly ascending")));
+                    }
+                    prev = Some(nb[i]);
+                    if nb[i] as usize >= n_opposite {
+                        return Err(err("neighbor id out of population range".into()));
+                    }
+                    if tb[i] as usize >= total {
+                        return Err(err("tuple id out of range".into()));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::csr::CsrIndex;
+
+    fn table() -> RelTable {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 2, &[]).unwrap();
+        t.push(1, 1, &[]).unwrap();
+        t
+    }
+
+    fn nbrs(ix: &CcsrIndex, f: u32) -> Vec<(u32, u32)> {
+        match ix.row_from(f) {
+            CcsrRow::Clean(run) => run.to_pairs(),
+            CcsrRow::Dirty(v) => v,
+        }
+    }
+
+    #[test]
+    fn builds_packed_runs_and_lookup() {
+        let t = table();
+        let ix = CcsrIndex::build(&t, 2, 3).unwrap();
+        assert_eq!(nbrs(&ix, 0), vec![(1, 0), (2, 1)]);
+        assert_eq!(ix.lookup(0, 2), Some(1));
+        assert_eq!(ix.lookup(1, 2), None);
+        assert_eq!(ix.degree_from(0), 2);
+        assert_eq!(ix.degree_to(1), 2);
+        assert_eq!(ix.len(), 3);
+        assert_eq!(ix.max_degree(), 2);
+        let run = ix.block_run_from(0).unwrap();
+        assert_eq!(run.get(0), (1, 0));
+        assert_eq!(run.get(1), (2, 1));
+    }
+
+    #[test]
+    fn rejects_duplicates_and_out_of_range() {
+        let mut t = RelTable::new(0);
+        t.push(0, 1, &[]).unwrap();
+        t.push(0, 1, &[]).unwrap();
+        assert!(CcsrIndex::build(&t, 2, 2).is_err());
+
+        let mut t2 = RelTable::new(0);
+        t2.push(5, 0, &[]).unwrap();
+        assert!(CcsrIndex::build(&t2, 2, 2).is_err());
+    }
+
+    #[test]
+    fn multi_block_rows_decode_exactly_and_skip_by_header() {
+        // a 200-entry hub row with irregular gaps spanning 4 blocks
+        let mut t = RelTable::new(0);
+        let mut expect = Vec::new();
+        let mut v = 0u32;
+        for i in 0..200u32 {
+            v += 1 + (i * 7) % 5; // gaps 1..=5, deterministic
+            t.push(0, v, &[]).unwrap();
+            expect.push((v, i));
+        }
+        let ix = CcsrIndex::build(&t, 1, v + 1).unwrap();
+        let run = ix.block_run_from(0).unwrap();
+        assert_eq!(run.len(), 200);
+        assert_eq!(run.n_blocks(), 4);
+        assert_eq!(run.to_pairs(), expect);
+        for (k, &(n, id)) in expect.iter().enumerate() {
+            assert_eq!(run.get(k), (n, id), "entry {k}");
+            assert_eq!(ix.lookup(0, n), Some(id));
+        }
+        // headers bound each block exactly
+        for b in 0..run.n_blocks() {
+            let lo = b * BLOCK;
+            let hi = (lo + BLOCK).min(200);
+            assert_eq!(run.block_min(b), expect[lo].0);
+            assert_eq!(run.block_max(b), expect[hi - 1].0);
+        }
+        // seek_block lands on the first block that can hold the probe
+        let probe = expect[130].0;
+        let b = run.seek_block(0, probe);
+        assert_eq!(b, 130 / BLOCK);
+        assert_eq!(run.seek_block(0, v + 1), run.n_blocks());
+        // a value between runs is absent but findable-block-wise
+        assert_eq!(ix.lookup(0, 0), None);
+    }
+
+    #[test]
+    fn hub_rows_compress_well_below_plain_csr() {
+        // consecutive neighbors (delta 1 -> width 0) with in-order tids:
+        // the shape the skewed synth generators produce at scale
+        let mut t = RelTable::new(0);
+        for v in 0..4096u32 {
+            t.push(0, v, &[]).unwrap();
+        }
+        let ccsr = CcsrIndex::build(&t, 1, 4096).unwrap();
+        let csr = CsrIndex::build(&t, 1, 4096).unwrap();
+        assert!(
+            ccsr.bytes() * 2 < csr.bytes(),
+            "ccsr {} bytes vs csr {} bytes",
+            ccsr.bytes(),
+            csr.bytes()
+        );
+    }
+
+    #[test]
+    fn overlay_insert_delete_reads_like_rebuild() {
+        let mut t = table();
+        let mut ix = CcsrIndex::build(&t, 2, 3).unwrap();
+
+        let id = t.push(1, 2, &[]).unwrap();
+        ix.insert(1, 2, id).unwrap();
+        assert!(ix.insert(1, 2, 9).is_err()); // duplicate
+        assert_eq!(ix.lookup(1, 2), Some(3));
+        assert_eq!(ix.degree_from(1), 2);
+        assert!(ix.block_run_from(1).is_none(), "dirty row must not lend a run");
+        assert!(ix.block_run_from(0).is_some(), "untouched row stays clean");
+        assert_eq!(nbrs(&ix, 1), vec![(1, 2), (2, 3)]);
+        assert!(ix.overlay_len() > 0);
+
+        // delete (0, 2): the last tuple (1,2) takes id 1
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(1).unwrap();
+        ix.remove_swap(0, 2, 1, last, lf, lt).unwrap();
+        assert_eq!(ix.lookup(0, 2), None);
+        assert_eq!(ix.lookup(1, 2), Some(1));
+        assert_eq!(ix.degree_from(0), 1);
+        assert_eq!(ix.len(), t.len() as usize);
+
+        let fresh = CcsrIndex::build(&t, 2, 3).unwrap();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
+        }
+        ix.compact();
+        assert_eq!(ix.overlay_len(), 0);
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f} after compact");
+        }
+        assert_eq!(ix.lookup(1, 2), fresh.lookup(1, 2));
+    }
+
+    #[test]
+    fn base_resident_relabel_goes_through_tombstone_readd() {
+        // delete tuple 0 while the moved last tuple lives in the packed
+        // base: its relabel must tombstone + re-add with the fresh tid
+        let mut t = table();
+        let mut ix = CcsrIndex::build(&t, 2, 3).unwrap();
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(0).unwrap();
+        ix.remove_swap(0, 1, 0, last, lf, lt).unwrap();
+        assert_eq!(ix.lookup(0, 1), None);
+        assert_eq!(ix.lookup(1, 1), Some(0), "relabeled tid must win over base");
+        assert_eq!(ix.degree_from(1), 1);
+        let fresh = CcsrIndex::build(&t, 2, 3).unwrap();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
+        }
+        ix.compact();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f} after compact");
+        }
+    }
+
+    #[test]
+    fn delete_then_reinsert_same_pair() {
+        let mut t = table();
+        let mut ix = CcsrIndex::build(&t, 2, 3).unwrap();
+        let last = t.len() - 1;
+        let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
+        t.swap_remove(0).unwrap();
+        ix.remove_swap(0, 1, 0, last, lf, lt).unwrap();
+        let id = t.push(0, 1, &[]).unwrap();
+        ix.insert(0, 1, id).unwrap();
+        assert_eq!(ix.lookup(0, 1), Some(id));
+        assert_eq!(nbrs(&ix, 0), vec![(1, id), (2, 1)]);
+        ix.compact();
+        let fresh = CcsrIndex::build(&t, 2, 3).unwrap();
+        for f in 0..2u32 {
+            assert_eq!(nbrs(&ix, f), nbrs(&fresh, f), "row {f}");
+        }
+    }
+
+    #[test]
+    fn halves_roundtrip_and_validation() {
+        let mut t = table();
+        for i in 0..150u32 {
+            t.push(1, i + 3, &[]).unwrap(); // multi-block row
+        }
+        let mut ix = CcsrIndex::build(&t, 2, 160).unwrap();
+        let (f, r) = ix.halves().unwrap();
+        let (f, r) = (f.clone(), r.clone());
+        let back = CcsrIndex::from_halves(f.clone(), r.clone()).unwrap();
+        assert_eq!(back.lookup(0, 2), ix.lookup(0, 2));
+        assert_eq!(back.lookup(1, 100), ix.lookup(1, 100));
+        assert_eq!(back.len(), ix.len());
+        assert_eq!(nbrs(&back, 1), nbrs(&ix, 1));
+
+        // a dirty index refuses to expose its halves
+        let id = t.push(0, 5, &[]).unwrap();
+        ix.insert(0, 5, id).unwrap();
+        assert!(ix.halves().is_err());
+        ix.compact();
+        assert!(ix.halves().is_ok());
+
+        // structural corruption is rejected
+        let mut bad = f.clone();
+        bad.nbr_max[0] = 0; // header no longer matches content
+        assert!(CcsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.data_off[1] += 1; // payload bits not contiguous
+        assert!(CcsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.packed.pop(); // payload truncated
+        assert!(CcsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.blk_offsets[1] = 0; // block bounds inconsistent with entries
+        assert!(CcsrIndex::from_halves(bad, r.clone()).is_err());
+        let mut bad = f.clone();
+        bad.nbr_min[0] = 9999; // decoded neighbor out of population range
+        assert!(CcsrIndex::from_halves(bad, r).is_err());
+    }
+
+    #[test]
+    fn grow_extends_runs() {
+        let t = RelTable::new(0);
+        let mut ix = CcsrIndex::build(&t, 1, 1).unwrap();
+        ix.grow(3, 2);
+        assert_eq!(ix.degree_from(2), 0);
+        ix.insert(2, 1, 0).unwrap();
+        assert_eq!(ix.lookup(2, 1), Some(0));
+        assert!(ix.insert(5, 0, 1).is_err()); // out of range
+    }
+
+    #[test]
+    fn self_compaction_keeps_overlay_bounded() {
+        let mut t = RelTable::new(0);
+        let mut ix = CcsrIndex::build(&t, 1, 4096).unwrap();
+        for i in 0..2000u32 {
+            let id = t.push(0, i, &[]).unwrap();
+            ix.insert(0, i, id).unwrap();
+        }
+        assert!(ix.overlay_len() <= 2 * (OVERLAY_SLACK + isqrt(ix.len())));
+        assert_eq!(ix.len(), 2000);
+        assert_eq!(ix.degree_from(0), 2000);
+        ix.compact();
+        let run = ix.block_run_from(0).unwrap();
+        let pairs = run.to_pairs();
+        assert_eq!(pairs.len(), 2000);
+        assert!(pairs.windows(2).all(|w| w[0].0 < w[1].0));
+    }
+}

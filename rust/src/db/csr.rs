@@ -34,18 +34,19 @@ use crate::db::index::pair_key;
 use crate::db::table::RelTable;
 use crate::error::{Error, Result};
 
-/// Mask extracting the neighbor id from an orientation pair key.
-const NBR_MASK: u64 = 0xFFFF_FFFF;
+/// Mask extracting the neighbor id from an orientation pair key
+/// (shared with the compressed block engine, [`crate::db::ccsr`]).
+pub(crate) const NBR_MASK: u64 = 0xFFFF_FFFF;
 
 /// Self-compaction slack: compact when one orientation's overlay holds
 /// more than `OVERLAY_SLACK + √base` entries.  Sorted inserts cost
 /// O(overlay) and compaction O(base)/overlay-lifetime, so the √base
 /// threshold balances them at O(√base) amortized per streaming op.
-const OVERLAY_SLACK: usize = 64;
+pub(crate) const OVERLAY_SLACK: usize = 64;
 
 /// Integer square root (`usize::isqrt` needs Rust 1.84; MSRV is 1.70).
 /// f64 has 52 mantissa bits, exact for every table size we index.
-fn isqrt(n: usize) -> usize {
+pub(crate) fn isqrt(n: usize) -> usize {
     (n as f64).sqrt() as usize
 }
 
@@ -112,52 +113,54 @@ impl CsrHalf {
 
 /// Pending mutations of one orientation, keyed by that orientation's
 /// `(row << 32) | nbr` pair key (so one row's entries are contiguous).
+/// Shared with the compressed block engine ([`crate::db::ccsr`]), whose
+/// churn path is this overlay verbatim over bit-packed base blocks.
 #[derive(Clone, Debug, Default)]
-struct Overlay {
+pub(crate) struct Overlay {
     /// `(key, tid)` of inserted pairs absent from the live base.
-    add: Vec<(u64, u32)>,
+    pub(crate) add: Vec<(u64, u32)>,
     /// Keys of base entries deleted (tombstones).
-    del: Vec<u64>,
+    pub(crate) del: Vec<u64>,
 }
 
 impl Overlay {
-    fn is_empty(&self) -> bool {
+    pub(crate) fn is_empty(&self) -> bool {
         self.add.is_empty() && self.del.is_empty()
     }
 
-    fn len(&self) -> usize {
+    pub(crate) fn len(&self) -> usize {
         self.add.len() + self.del.len()
     }
 
     /// Pending inserts within row `r`.
-    fn add_range(&self, r: u32) -> &[(u64, u32)] {
+    pub(crate) fn add_range(&self, r: u32) -> &[(u64, u32)] {
         let lo = self.add.partition_point(|&(k, _)| k < pair_key(r, 0));
         let hi = self.add.partition_point(|&(k, _)| k <= pair_key(r, u32::MAX));
         &self.add[lo..hi]
     }
 
     /// Tombstones within row `r`.
-    fn del_range(&self, r: u32) -> &[u64] {
+    pub(crate) fn del_range(&self, r: u32) -> &[u64] {
         let lo = self.del.partition_point(|&k| k < pair_key(r, 0));
         let hi = self.del.partition_point(|&k| k <= pair_key(r, u32::MAX));
         &self.del[lo..hi]
     }
 
-    fn touches(&self, r: u32) -> bool {
+    pub(crate) fn touches(&self, r: u32) -> bool {
         !self.add_range(r).is_empty() || !self.del_range(r).is_empty()
     }
 
-    fn insert_add(&mut self, key: u64, tid: u32) {
+    pub(crate) fn insert_add(&mut self, key: u64, tid: u32) {
         let pos = self.add.partition_point(|&(k, _)| k < key);
         self.add.insert(pos, (key, tid));
     }
 
-    fn insert_del(&mut self, key: u64) {
+    pub(crate) fn insert_del(&mut self, key: u64) {
         let pos = self.del.partition_point(|&k| k < key);
         self.del.insert(pos, key);
     }
 
-    fn bytes(&self) -> usize {
+    pub(crate) fn bytes(&self) -> usize {
         self.add.capacity() * 12 + self.del.capacity() * 8
     }
 }

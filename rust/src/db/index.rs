@@ -5,16 +5,25 @@
 //!   indicator lookups and bound-bound join steps;
 //! - [`crate::db::csr::CsrIndex`] — the columnar **CSR** engine (the
 //!   default): contiguous sorted neighbor runs in both orientations,
-//!   with a sorted overlay absorbing churn until compaction.
+//!   with a sorted overlay absorbing churn until compaction;
+//! - [`crate::db::ccsr::CcsrIndex`] — the compressed block-**CSR**
+//!   engine: the same sorted runs as delta-encoded bit-packed blocks
+//!   with per-block skip headers, behind the same overlay.
 //!
 //! [`RelIx`] is the enum the rest of the crate sees (returned by
 //! [`crate::db::catalog::Database::index`]); every consumer goes
-//! through its accessors, so the two engines are interchangeable and
+//! through its accessors, so the three engines are interchangeable and
 //! produce bit-identical counts (asserted by the backend-equivalence
-//! tests and the CI digest gate).
+//! tests and the CI digest gate).  Consumers that intersect or walk
+//! sorted runs go through one further abstraction, [`NeighborRun`]
+//! (and its stateful [`RunCursor`]): a clean run borrowed from
+//! whichever representation the backend keeps, so the join kernels and
+//! the sampler are written once against runs rather than once per
+//! storage engine.
 
 use crate::util::fxhash::FxHashMap;
 
+use crate::db::ccsr::{BlockRun, CcsrIndex, CcsrRow, BLOCK};
 use crate::db::csr::{CsrIndex, CsrRow};
 use crate::db::table::RelTable;
 use crate::error::{Error, Result};
@@ -27,6 +36,8 @@ pub enum Backend {
     /// Columnar CSR with sorted neighbor runs (the default).
     #[default]
     Csr,
+    /// Compressed block-CSR: delta-encoded bit-packed runs.
+    Ccsr,
 }
 
 impl Backend {
@@ -34,6 +45,7 @@ impl Backend {
         match s.to_ascii_lowercase().as_str() {
             "hash" => Some(Backend::Hash),
             "csr" => Some(Backend::Csr),
+            "ccsr" => Some(Backend::Ccsr),
             _ => None,
         }
     }
@@ -42,6 +54,7 @@ impl Backend {
         match self {
             Backend::Hash => "hash",
             Backend::Csr => "csr",
+            Backend::Ccsr => "ccsr",
         }
     }
 }
@@ -203,14 +216,271 @@ impl Iterator for Tids<'_> {
     }
 }
 
-/// A relationship index of either backend.  All consumers (join
+/// Skew threshold: gallop instead of merging when one run is this many
+/// times longer than the other.
+const GALLOP_RATIO: usize = 8;
+
+/// Size of the intersection of two strictly ascending `u32` runs.
+///
+/// Balanced runs use a linear merge; skewed runs (degree distributions
+/// with heavy hitters) gallop the short run's elements through the long
+/// one, bounding the work at `O(short · log(long/short))` — the
+/// adaptive scheme of Karan et al., "Fast Counting in Machine Learning
+/// Applications" (2018).  This is the slice fast path of
+/// [`NeighborRun::intersect_count`]; it stays public because plain
+/// sorted slices arise outside the run abstraction too.
+pub fn intersect_count(mut a: &[u32], mut b: &[u32]) -> u64 {
+    if a.len() > b.len() {
+        std::mem::swap(&mut a, &mut b);
+    }
+    if a.is_empty() {
+        return 0;
+    }
+    let mut n = 0u64;
+    if b.len() / a.len() >= GALLOP_RATIO {
+        let mut lo = 0usize;
+        for &x in a {
+            lo += gallop_lower_bound(&b[lo..], x);
+            if lo >= b.len() {
+                break;
+            }
+            if b[lo] == x {
+                n += 1;
+                lo += 1;
+            }
+        }
+    } else {
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    n
+}
+
+/// First position in a strictly ascending run whose value is `>= x`,
+/// found by doubling probes then a bounded binary search (shared with
+/// the WCOJ kernel's leapfrog seeks).
+pub(crate) fn gallop_lower_bound(s: &[u32], x: u32) -> usize {
+    let mut hi = 1usize;
+    while hi < s.len() && s[hi] < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    let hi = hi.min(s.len());
+    lo + s[lo..hi].partition_point(|&v| v < x)
+}
+
+/// [`gallop_lower_bound`] over the neighbor component of a pair run.
+pub(crate) fn gallop_pairs_lower_bound(s: &[(u32, u32)], x: u32) -> usize {
+    let mut hi = 1usize;
+    while hi < s.len() && s[hi].0 < x {
+        hi <<= 1;
+    }
+    let lo = hi >> 1;
+    let hi = hi.min(s.len());
+    lo + s[lo..hi].partition_point(|&(v, _)| v < x)
+}
+
+/// A borrowed sorted `(neighbor, tid)` run, in whichever representation
+/// its owner keeps: plain CSR column slices, compressed ccsr blocks, or
+/// a caller-memoized pair vector (the hash backend and dirty rows).
+/// Every consumer of sorted runs — the chain kernel's intersection fast
+/// path, the WCOJ leapfrog, the sampler's canonical-order draws — is
+/// written against this enum, so adding a storage engine means adding a
+/// variant here rather than a fourth copy of each kernel.
+#[derive(Clone, Copy)]
+pub enum NeighborRun<'a> {
+    /// Clean plain-CSR row: parallel column slices.
+    Slice { nbr: &'a [u32], tid: &'a [u32] },
+    /// Clean compressed block-CSR row (decode on access).
+    Blocks(BlockRun<'a>),
+    /// Memoized sorted row borrowed from caller-owned storage.
+    Pairs(&'a [(u32, u32)]),
+}
+
+impl<'a> NeighborRun<'a> {
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            NeighborRun::Slice { nbr, .. } => nbr.len(),
+            NeighborRun::Blocks(r) => r.len(),
+            NeighborRun::Pairs(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Neighbor at position `k` (ascending order).  On `Blocks` this
+    /// decodes `k`'s block — O(BLOCK) per call, intended for one-off
+    /// draws like the sampler's; iteration should use [`RunCursor`].
+    #[inline]
+    pub fn value_at(&self, k: usize) -> u32 {
+        match self {
+            NeighborRun::Slice { nbr, .. } => nbr[k],
+            NeighborRun::Blocks(r) => r.get(k).0,
+            NeighborRun::Pairs(p) => p[k].0,
+        }
+    }
+
+    /// `(neighbor, tid)` at position `k` (see [`NeighborRun::value_at`]).
+    #[inline]
+    pub fn pair_at(&self, k: usize) -> (u32, u32) {
+        match self {
+            NeighborRun::Slice { nbr, tid } => (nbr[k], tid[k]),
+            NeighborRun::Blocks(r) => r.get(k),
+            NeighborRun::Pairs(p) => p[k],
+        }
+    }
+
+    /// Size of the intersection with `other`.  Two plain slices take
+    /// the adaptive merge/gallop kernel unchanged; any combination
+    /// involving blocks or pairs runs a cursor-gallop loop whose seeks
+    /// skip whole ccsr blocks by their min/max headers before paying
+    /// for a decode.  Exact for every variant combination — the
+    /// backends stay bit-identical through this call.
+    pub fn intersect_count(&self, other: &NeighborRun<'_>) -> u64 {
+        if let (
+            NeighborRun::Slice { nbr: a, .. },
+            NeighborRun::Slice { nbr: b, .. },
+        ) = (self, other)
+        {
+            return intersect_count(a, b);
+        }
+        let mut ca = RunCursor::new(*self);
+        let mut cb = RunCursor::new(*other);
+        let (la, lb) = (ca.len(), cb.len());
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut n = 0u64;
+        while i < la && j < lb {
+            let va = ca.val(i);
+            let vb = cb.val(j);
+            match va.cmp(&vb) {
+                std::cmp::Ordering::Less => i = ca.seek(i + 1, vb),
+                std::cmp::Ordering::Greater => j = cb.seek(j + 1, va),
+                std::cmp::Ordering::Equal => {
+                    n += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        n
+    }
+}
+
+/// Forward cursor over a [`NeighborRun`] with a one-block decode cache:
+/// `Slice`/`Pairs` index their borrows directly, `Blocks` decodes a
+/// block into the inline buffers on first touch and reuses it until the
+/// cursor crosses a block boundary.  The WCOJ leapfrog and the generic
+/// intersection loop drive these; positions only move forward, so each
+/// block decodes at most once per pass.
+pub struct RunCursor<'a> {
+    run: NeighborRun<'a>,
+    /// Row-local index of the cached decoded block (`usize::MAX` none).
+    blk: usize,
+    buf_nbr: [u32; BLOCK],
+    buf_tid: [u32; BLOCK],
+}
+
+impl<'a> RunCursor<'a> {
+    pub fn new(run: NeighborRun<'a>) -> RunCursor<'a> {
+        RunCursor {
+            run,
+            blk: usize::MAX,
+            buf_nbr: [0; BLOCK],
+            buf_tid: [0; BLOCK],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.run.len()
+    }
+
+    #[inline]
+    fn load(&mut self, r: BlockRun<'a>, b: usize) {
+        if self.blk != b {
+            r.decode_block(b, &mut self.buf_nbr, &mut self.buf_tid);
+            self.blk = b;
+        }
+    }
+
+    /// Neighbor at position `i`.
+    #[inline]
+    pub fn val(&mut self, i: usize) -> u32 {
+        match self.run {
+            NeighborRun::Slice { nbr, .. } => nbr[i],
+            NeighborRun::Pairs(p) => p[i].0,
+            NeighborRun::Blocks(r) => {
+                self.load(r, i / BLOCK);
+                self.buf_nbr[i % BLOCK]
+            }
+        }
+    }
+
+    /// Tuple id at position `i`.
+    #[inline]
+    pub fn tid(&mut self, i: usize) -> u32 {
+        match self.run {
+            NeighborRun::Slice { tid, .. } => tid[i],
+            NeighborRun::Pairs(p) => p[i].1,
+            NeighborRun::Blocks(r) => {
+                self.load(r, i / BLOCK);
+                self.buf_tid[i % BLOCK]
+            }
+        }
+    }
+
+    /// First position `>= lo` whose neighbor is `>= x` (`len()` if
+    /// none).  Slices and pairs gallop; blocks first skip by the
+    /// `nbr_max` headers and only decode the one block that can hold
+    /// the target.
+    pub fn seek(&mut self, lo: usize, x: u32) -> usize {
+        match self.run {
+            NeighborRun::Slice { nbr, .. } => lo + gallop_lower_bound(&nbr[lo..], x),
+            NeighborRun::Pairs(p) => lo + gallop_pairs_lower_bound(&p[lo..], x),
+            NeighborRun::Blocks(r) => {
+                if lo >= r.len() {
+                    return r.len();
+                }
+                let b0 = lo / BLOCK;
+                let b = r.seek_block(b0, x);
+                if b == r.n_blocks() {
+                    return r.len();
+                }
+                self.load(r, b);
+                // the target block's max is >= x, so the partition
+                // point lands strictly inside it
+                let start = if b == b0 { lo % BLOCK } else { 0 };
+                let blen = r.block_len(b);
+                b * BLOCK
+                    + start
+                    + self.buf_nbr[start..blen].partition_point(|&v| v < x)
+            }
+        }
+    }
+}
+
+/// A relationship index of any backend.  All consumers (join
 /// enumeration, the wander-join sampler, delta maintenance, the Möbius
-/// indicator probes) go through these accessors, so hash and CSR are
-/// interchangeable bit-for-bit.
+/// indicator probes) go through these accessors, so hash, CSR and ccsr
+/// are interchangeable bit-for-bit.
 #[derive(Clone, Debug)]
 pub enum RelIx {
     Hash(RelIndex),
     Csr(CsrIndex),
+    Ccsr(CcsrIndex),
 }
 
 impl RelIx {
@@ -224,6 +494,7 @@ impl RelIx {
         match backend {
             Backend::Hash => Ok(RelIx::Hash(RelIndex::build(table, n_from, n_to)?)),
             Backend::Csr => Ok(RelIx::Csr(CsrIndex::build(table, n_from, n_to)?)),
+            Backend::Ccsr => Ok(RelIx::Ccsr(CcsrIndex::build(table, n_from, n_to)?)),
         }
     }
 
@@ -231,6 +502,7 @@ impl RelIx {
         match self {
             RelIx::Hash(_) => Backend::Hash,
             RelIx::Csr(_) => Backend::Csr,
+            RelIx::Ccsr(_) => Backend::Ccsr,
         }
     }
 
@@ -238,8 +510,17 @@ impl RelIx {
     /// serialization reads the compacted base arrays through this).
     pub fn as_csr(&self) -> Option<&CsrIndex> {
         match self {
-            RelIx::Hash(_) => None,
             RelIx::Csr(ix) => Some(ix),
+            _ => None,
+        }
+    }
+
+    /// The underlying compressed index, if this is the ccsr backend
+    /// (snapshot serialization reads the compacted blocks through this).
+    pub fn as_ccsr(&self) -> Option<&CcsrIndex> {
+        match self {
+            RelIx::Ccsr(ix) => Some(ix),
+            _ => None,
         }
     }
 
@@ -249,6 +530,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.lookup(from, to),
             RelIx::Csr(ix) => ix.lookup(from, to),
+            RelIx::Ccsr(ix) => ix.lookup(from, to),
         }
     }
 
@@ -258,6 +540,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.by_from[f as usize].len(),
             RelIx::Csr(ix) => ix.degree_from(f),
+            RelIx::Ccsr(ix) => ix.degree_from(f),
         }
     }
 
@@ -267,6 +550,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.by_to[t as usize].len(),
             RelIx::Csr(ix) => ix.degree_to(t),
+            RelIx::Ccsr(ix) => ix.degree_to(t),
         }
     }
 
@@ -279,6 +563,10 @@ impl RelIx {
                 CsrRow::Clean { tid, .. } => Tids::Slice(tid.iter()),
                 CsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
             },
+            RelIx::Ccsr(ix) => match ix.row_from(f) {
+                CcsrRow::Clean(run) => Tids::Owned(run.to_pairs().into_iter()),
+                CcsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
+            },
         }
     }
 
@@ -289,6 +577,10 @@ impl RelIx {
             RelIx::Csr(ix) => match ix.row_to(t) {
                 CsrRow::Clean { tid, .. } => Tids::Slice(tid.iter()),
                 CsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
+            },
+            RelIx::Ccsr(ix) => match ix.row_to(t) {
+                CcsrRow::Clean(run) => Tids::Owned(run.to_pairs().into_iter()),
+                CcsrRow::Dirty(v) => Tids::Owned(v.into_iter()),
             },
         }
     }
@@ -311,6 +603,10 @@ impl RelIx {
                 CsrRow::Clean { nbr, tid } => nbr.get(k).map(|&n| (n, tid[k])),
                 CsrRow::Dirty(v) => v.get(k).copied(),
             },
+            RelIx::Ccsr(ix) => match ix.row_from(f) {
+                CcsrRow::Clean(run) => (k < run.len()).then(|| run.get(k)),
+                CcsrRow::Dirty(v) => v.get(k).copied(),
+            },
         }
     }
 
@@ -329,16 +625,21 @@ impl RelIx {
                 CsrRow::Clean { nbr, tid } => nbr.get(k).map(|&n| (n, tid[k])),
                 CsrRow::Dirty(v) => v.get(k).copied(),
             },
+            RelIx::Ccsr(ix) => match ix.row_to(t) {
+                CcsrRow::Clean(run) => (k < run.len()).then(|| run.get(k)),
+                CcsrRow::Dirty(v) => v.get(k).copied(),
+            },
         }
     }
 
     /// The contiguous sorted neighbor run of `f` — `Some` only on the
-    /// CSR backend with no pending overlay in the row (the merge
-    /// intersection kernel's fast path).
+    /// plain CSR backend with no pending overlay in the row (ccsr rows
+    /// are packed, not contiguous; use [`RelIx::neighbor_run_from`] for
+    /// the backend-generic borrow).
     pub fn sorted_nbrs_from(&self, f: u32) -> Option<&[u32]> {
         match self {
-            RelIx::Hash(_) => None,
             RelIx::Csr(ix) => ix.sorted_nbrs_from(f),
+            _ => None,
         }
     }
 
@@ -346,19 +647,18 @@ impl RelIx {
     /// [`RelIx::sorted_nbrs_from`]).
     pub fn sorted_nbrs_to(&self, t: u32) -> Option<&[u32]> {
         match self {
-            RelIx::Hash(_) => None,
             RelIx::Csr(ix) => ix.sorted_nbrs_to(t),
+            _ => None,
         }
     }
 
     /// The clean sorted `(neighbor, tid)` run of `f` — both parallel
     /// column slices, available under the same conditions as
-    /// [`RelIx::sorted_nbrs_from`].  The WCOJ kernel intersects these in
-    /// place; hash/dirty rows take its sorted-memo fallback instead.
+    /// [`RelIx::sorted_nbrs_from`] (plain CSR only).
     pub fn sorted_run_from(&self, f: u32) -> Option<(&[u32], &[u32])> {
         match self {
-            RelIx::Hash(_) => None,
             RelIx::Csr(ix) => ix.sorted_run_from(f),
+            _ => None,
         }
     }
 
@@ -366,8 +666,38 @@ impl RelIx {
     /// [`RelIx::sorted_run_from`]).
     pub fn sorted_run_to(&self, t: u32) -> Option<(&[u32], &[u32])> {
         match self {
-            RelIx::Hash(_) => None,
             RelIx::Csr(ix) => ix.sorted_run_to(t),
+            _ => None,
+        }
+    }
+
+    /// The clean sorted run of `f` as a backend-generic [`NeighborRun`]
+    /// borrow — `Some` exactly when the row can be read without
+    /// materialization: a clean CSR row lends its column slices, a
+    /// clean ccsr row lends its packed blocks.  Hash rows and rows with
+    /// pending overlay entries return `None`; consumers (the chain
+    /// kernel's intersection fast path, the WCOJ leapfrog, the sampler)
+    /// fall back to memoized enumeration there, identically on every
+    /// backend.
+    pub fn neighbor_run_from(&self, f: u32) -> Option<NeighborRun<'_>> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix
+                .sorted_run_from(f)
+                .map(|(nbr, tid)| NeighborRun::Slice { nbr, tid }),
+            RelIx::Ccsr(ix) => ix.block_run_from(f).map(NeighborRun::Blocks),
+        }
+    }
+
+    /// The clean sorted run of `t` as a [`NeighborRun`] borrow (see
+    /// [`RelIx::neighbor_run_from`]).
+    pub fn neighbor_run_to(&self, t: u32) -> Option<NeighborRun<'_>> {
+        match self {
+            RelIx::Hash(_) => None,
+            RelIx::Csr(ix) => ix
+                .sorted_run_to(t)
+                .map(|(nbr, tid)| NeighborRun::Slice { nbr, tid }),
+            RelIx::Ccsr(ix) => ix.block_run_to(t).map(NeighborRun::Blocks),
         }
     }
 
@@ -380,6 +710,7 @@ impl RelIx {
                 f.max(t)
             }
             RelIx::Csr(ix) => ix.max_degree(),
+            RelIx::Ccsr(ix) => ix.max_degree(),
         }
     }
 
@@ -388,6 +719,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.pair.len(),
             RelIx::Csr(ix) => ix.len(),
+            RelIx::Ccsr(ix) => ix.len(),
         }
     }
 
@@ -395,11 +727,12 @@ impl RelIx {
         self.len() == 0
     }
 
-    /// Pending CSR overlay entries (0 on the hash backend).
+    /// Pending overlay entries (0 on the hash backend).
     pub fn overlay_len(&self) -> usize {
         match self {
             RelIx::Hash(_) => 0,
             RelIx::Csr(ix) => ix.overlay_len(),
+            RelIx::Ccsr(ix) => ix.overlay_len(),
         }
     }
 
@@ -408,6 +741,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.grow(n_from, n_to),
             RelIx::Csr(ix) => ix.grow(n_from, n_to),
+            RelIx::Ccsr(ix) => ix.grow(n_from, n_to),
         }
     }
 
@@ -416,6 +750,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.insert(from, to, t),
             RelIx::Csr(ix) => ix.insert(from, to, t),
+            RelIx::Ccsr(ix) => ix.insert(from, to, t),
         }
     }
 
@@ -432,13 +767,16 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.remove_swap(from, to, t, last, last_from, last_to),
             RelIx::Csr(ix) => ix.remove_swap(from, to, t, last, last_from, last_to),
+            RelIx::Ccsr(ix) => ix.remove_swap(from, to, t, last, last_from, last_to),
         }
     }
 
-    /// Merge any pending CSR overlay into the base runs (no-op on hash).
+    /// Merge any pending overlay into the base runs (no-op on hash).
     pub fn compact(&mut self) {
-        if let RelIx::Csr(ix) = self {
-            ix.compact();
+        match self {
+            RelIx::Hash(_) => {}
+            RelIx::Csr(ix) => ix.compact(),
+            RelIx::Ccsr(ix) => ix.compact(),
         }
     }
 
@@ -447,6 +785,7 @@ impl RelIx {
         match self {
             RelIx::Hash(ix) => ix.bytes(),
             RelIx::Csr(ix) => ix.bytes(),
+            RelIx::Ccsr(ix) => ix.bytes(),
         }
     }
 }
@@ -536,9 +875,12 @@ mod tests {
     fn backend_parse_and_default() {
         assert_eq!(Backend::parse("hash"), Some(Backend::Hash));
         assert_eq!(Backend::parse("CSR"), Some(Backend::Csr));
+        assert_eq!(Backend::parse("ccsr"), Some(Backend::Ccsr));
+        assert_eq!(Backend::parse("CCSR"), Some(Backend::Ccsr));
         assert_eq!(Backend::parse("btree"), None);
         assert_eq!(Backend::default(), Backend::Csr);
         assert_eq!(Backend::Csr.name(), "csr");
+        assert_eq!(Backend::Ccsr.name(), "ccsr");
     }
 
     #[test]
@@ -549,10 +891,16 @@ mod tests {
         t.push(1, 1, &[]).unwrap();
         let mut h = RelIx::build(Backend::Hash, &t, 2, 3).unwrap();
         let mut c = RelIx::build(Backend::Csr, &t, 2, 3).unwrap();
+        let mut z = RelIx::build(Backend::Ccsr, &t, 2, 3).unwrap();
         assert_eq!(h.backend(), Backend::Hash);
         assert_eq!(c.backend(), Backend::Csr);
+        assert_eq!(z.backend(), Backend::Ccsr);
         assert!(c.sorted_nbrs_from(0).is_some());
         assert!(h.sorted_nbrs_from(0).is_none());
+        assert!(z.sorted_nbrs_from(0).is_none(), "ccsr runs are packed");
+        assert!(c.neighbor_run_from(0).is_some());
+        assert!(z.neighbor_run_from(0).is_some());
+        assert!(h.neighbor_run_from(0).is_none());
 
         let check = |h: &RelIx, c: &RelIx, t: &RelTable| {
             assert_eq!(h.len(), c.len());
@@ -585,20 +933,111 @@ mod tests {
             }
         };
         check(&h, &c, &t);
+        check(&h, &z, &t);
 
-        // churn both through the shared mutation API
+        // churn all three through the shared mutation API
         let id = t.push(1, 2, &[]).unwrap();
         h.insert(1, 2, id).unwrap();
         c.insert(1, 2, id).unwrap();
+        z.insert(1, 2, id).unwrap();
         let last = t.len() - 1;
         let (lf, lt) = (t.from[last as usize], t.to[last as usize]);
         t.swap_remove(0).unwrap();
         h.remove_swap(0, 2, 0, last, lf, lt).unwrap();
         c.remove_swap(0, 2, 0, last, lf, lt).unwrap();
+        z.remove_swap(0, 2, 0, last, lf, lt).unwrap();
         check(&h, &c, &t);
+        check(&h, &z, &t);
         c.compact();
+        z.compact();
         h.compact(); // no-op
         assert_eq!(c.overlay_len(), 0);
+        assert_eq!(z.overlay_len(), 0);
         check(&h, &c, &t);
+        check(&h, &z, &t);
+    }
+
+    /// Two multi-block relationship rows sharing a population, indexed
+    /// by every backend — the fixture for run-abstraction tests.
+    fn run_fixture() -> (RelTable, Vec<u32>, Vec<u32>) {
+        let mut t = RelTable::new(0);
+        let mut r0 = Vec::new();
+        let mut r1 = Vec::new();
+        for v in 0..600u32 {
+            if v % 3 != 1 {
+                t.push(0, v, &[]).unwrap();
+                r0.push(v);
+            }
+        }
+        for v in 0..600u32 {
+            if v % 7 < 5 {
+                t.push(1, v, &[]).unwrap();
+                r1.push(v);
+            }
+        }
+        (t, r0, r1)
+    }
+
+    #[test]
+    fn neighbor_run_variants_read_identically() {
+        let (t, r0, _) = run_fixture();
+        let c = RelIx::build(Backend::Csr, &t, 2, 600).unwrap();
+        let z = RelIx::build(Backend::Ccsr, &t, 2, 600).unwrap();
+        let rc = c.neighbor_run_from(0).unwrap();
+        let rz = z.neighbor_run_from(0).unwrap();
+        assert_eq!(rc.len(), r0.len());
+        assert_eq!(rz.len(), r0.len());
+        for k in 0..r0.len() {
+            assert_eq!(rc.value_at(k), r0[k]);
+            assert_eq!(rz.value_at(k), r0[k], "ccsr value_at {k}");
+            assert_eq!(rc.pair_at(k), rz.pair_at(k), "pair_at {k}");
+        }
+        // cursor seek matches partition_point on every variant
+        let mut cc = RunCursor::new(rc);
+        let mut cz = RunCursor::new(rz);
+        for x in [0u32, 1, 2, 63, 64, 299, 300, 301, 598, 599, 1000] {
+            let want = r0.partition_point(|&v| v < x);
+            assert_eq!(cc.seek(0, x), want, "slice seek {x}");
+            assert_eq!(cz.seek(0, x), want, "blocks seek {x}");
+        }
+        // forward-only seeks from interior positions
+        let mut cz = RunCursor::new(rz);
+        let mut pos = 0;
+        for x in [5u32, 70, 71, 200, 450, 599] {
+            let want = r0.partition_point(|&v| v < x).max(pos);
+            pos = cz.seek(pos, x);
+            assert_eq!(pos, want, "interior seek {x}");
+        }
+    }
+
+    #[test]
+    fn intersect_count_agrees_across_run_variants() {
+        let (t, r0, r1) = run_fixture();
+        let c = RelIx::build(Backend::Csr, &t, 2, 600).unwrap();
+        let z = RelIx::build(Backend::Ccsr, &t, 2, 600).unwrap();
+        let brute = r0.iter().filter(|v| r1.binary_search(v).is_ok()).count() as u64;
+        let (c0, c1) = (
+            c.neighbor_run_from(0).unwrap(),
+            c.neighbor_run_from(1).unwrap(),
+        );
+        let (z0, z1) = (
+            z.neighbor_run_from(0).unwrap(),
+            z.neighbor_run_from(1).unwrap(),
+        );
+        let pairs0: Vec<(u32, u32)> = (0..c0.len()).map(|k| c0.pair_at(k)).collect();
+        let p0 = NeighborRun::Pairs(&pairs0);
+        // every variant pairing lands on the brute-force size
+        assert_eq!(c0.intersect_count(&c1), brute, "slice x slice");
+        assert_eq!(z0.intersect_count(&z1), brute, "blocks x blocks");
+        assert_eq!(c0.intersect_count(&z1), brute, "slice x blocks");
+        assert_eq!(z0.intersect_count(&c1), brute, "blocks x slice");
+        assert_eq!(p0.intersect_count(&z1), brute, "pairs x blocks");
+        assert_eq!(p0.intersect_count(&c1), brute, "pairs x slice");
+        // degenerate: empty row intersects to zero on both engines
+        let e = RelIx::build(Backend::Ccsr, &RelTable::new(0), 1, 1).unwrap();
+        let ez = e.neighbor_run_from(0).unwrap();
+        assert_eq!(ez.len(), 0);
+        assert_eq!(ez.intersect_count(&z0), 0);
+        assert_eq!(z0.intersect_count(&ez), 0);
     }
 }

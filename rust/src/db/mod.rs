@@ -3,13 +3,15 @@
 //! This is the substrate that replaces MariaDB in the paper's setup (see
 //! DESIGN.md §1): typed entity/relationship schemas, columnar tables with
 //! interned u32-coded categorical values, FK indexes behind a selectable
-//! storage engine ([`Backend`]: seed-era hash maps or the default
-//! columnar CSR with merge-join kernels, DESIGN.md §3d) and the two
+//! storage engine ([`Backend`]: seed-era hash maps, the default columnar
+//! CSR with merge-join kernels, or compressed block-CSR — DESIGN.md
+//! §3d/§3h) and the two
 //! counting queries FACTORBASE issues — GROUP-BY counts over entity tables and
 //! GROUP-BY counts over INNER-JOIN chains of relationship tables (the
 //! paper's *JOIN problem*).
 
 pub mod catalog;
+pub mod ccsr;
 pub mod csr;
 pub mod fixtures;
 pub mod index;
@@ -21,8 +23,9 @@ pub mod value;
 pub mod wcoj;
 
 pub use catalog::Database;
+pub use ccsr::CcsrIndex;
 pub use csr::CsrIndex;
-pub use index::{Backend, RelIndex, RelIx};
+pub use index::{Backend, NeighborRun, RelIndex, RelIx};
 pub use schema::{Attribute, EntityType, RelationshipType, Schema};
 pub use table::{EntityTable, RelTable};
 pub use value::Code;

@@ -11,13 +11,14 @@
 //!
 //! - a *degree multiply* when a step's freshly bound entity is never
 //!   read again — the subtree contribution is the adjacency degree;
-//! - a *sorted-run intersection* ([`intersect_count`], linear merge
-//!   with galloping on skewed degree distributions) when a step binds
-//!   an entity only so the next relationship can probe membership
-//!   against its other, already-bound endpoint.  The intersection runs
-//!   on the CSR backend's contiguous neighbor runs
-//!   ([`crate::db::index::RelIx::sorted_nbrs_from`]); the hash backend
-//!   (and CSR rows with pending overlay) falls back to generic
+//! - a *sorted-run intersection* ([`NeighborRun::intersect_count`],
+//!   linear merge with galloping on skewed degree distributions, block
+//!   skipping on the compressed backend) when a step binds an entity
+//!   only so the next relationship can probe membership against its
+//!   other, already-bound endpoint.  The intersection runs on the
+//!   sorted neighbor runs both columnar backends expose
+//!   ([`crate::db::index::RelIx::neighbor_run_from`]); the hash backend
+//!   (and columnar rows with pending overlay) falls back to generic
 //!   enumeration with pair lookups.
 //!
 //! Both kernels are exact — they emit the same group keys with the same
@@ -27,6 +28,7 @@
 
 use crate::ct::cttable::CtTable;
 use crate::db::catalog::Database;
+use crate::db::index::NeighborRun;
 use crate::db::schema::Schema;
 use crate::db::wcoj::JoinKernel;
 use crate::error::{Error, Result};
@@ -385,7 +387,8 @@ fn enumerate_join(
 /// other, already-bound endpoint — and nothing downstream reads `x`.
 /// The two steps' contribution then factors into the size of
 /// `candidates(x via rel_d) ∩ candidates(x via rel_d+1)`, computed by
-/// [`intersect_count`] over the CSR backend's sorted neighbor runs.
+/// [`NeighborRun::intersect_count`] over the columnar backends' sorted
+/// neighbor runs (contiguous slices for CSR, packed blocks for CCSR).
 /// Returns `None` when the shape or backend does not admit the kernel
 /// (generic enumeration handles those cases identically).
 fn try_intersect(
@@ -423,82 +426,27 @@ fn try_intersect(
     };
     let ix1 = db.index(cx.order[depth])?;
     let ix2 = db.index(rel2)?;
-    let s1 = if x_is_to {
-        ix1.sorted_nbrs_from(bound_val)
+    let s1: Option<NeighborRun<'_>> = if x_is_to {
+        ix1.neighbor_run_from(bound_val)
     } else {
-        ix1.sorted_nbrs_to(bound_val)
+        ix1.neighbor_run_to(bound_val)
     };
     let s2 = if x_is_from2 {
-        ix2.sorted_nbrs_to(vy)
+        ix2.neighbor_run_to(vy)
     } else {
-        ix2.sorted_nbrs_from(vy)
+        ix2.neighbor_run_from(vy)
     };
     match (s1, s2) {
-        (Some(r1), Some(r2)) => Ok(Some(intersect_count(r1, r2))),
+        (Some(r1), Some(r2)) => Ok(Some(r1.intersect_count(&r2))),
         _ => Ok(None),
     }
 }
 
-/// Skew threshold: gallop instead of merging when one run is this many
-/// times longer than the other.
-const GALLOP_RATIO: usize = 8;
-
-/// Size of the intersection of two strictly ascending `u32` runs.
-///
-/// Balanced runs use a linear merge; skewed runs (degree distributions
-/// with heavy hitters) gallop the short run's elements through the long
-/// one, bounding the work at `O(short · log(long/short))` — the
-/// adaptive scheme of Karan et al., "Fast Counting in Machine Learning
-/// Applications" (2018).
-pub fn intersect_count(mut a: &[u32], mut b: &[u32]) -> u64 {
-    if a.len() > b.len() {
-        std::mem::swap(&mut a, &mut b);
-    }
-    if a.is_empty() {
-        return 0;
-    }
-    let mut n = 0u64;
-    if b.len() / a.len() >= GALLOP_RATIO {
-        let mut lo = 0usize;
-        for &x in a {
-            lo += gallop_lower_bound(&b[lo..], x);
-            if lo >= b.len() {
-                break;
-            }
-            if b[lo] == x {
-                n += 1;
-                lo += 1;
-            }
-        }
-    } else {
-        let (mut i, mut j) = (0, 0);
-        while i < a.len() && j < b.len() {
-            match a[i].cmp(&b[j]) {
-                std::cmp::Ordering::Less => i += 1,
-                std::cmp::Ordering::Greater => j += 1,
-                std::cmp::Ordering::Equal => {
-                    n += 1;
-                    i += 1;
-                    j += 1;
-                }
-            }
-        }
-    }
-    n
-}
-
-/// First position in a strictly ascending run whose value is `>= x`,
-/// found by doubling probes then a bounded binary search (shared with
-/// the WCOJ kernel's leapfrog seeks).
-pub(crate) fn gallop_lower_bound(s: &[u32], x: u32) -> usize {
-    let mut hi = 1usize;
-    while hi < s.len() && s[hi] < x {
-        hi <<= 1;
-    }
-    let lo = hi >> 1;
-    let hi = hi.min(s.len());
-    lo + s[lo..hi].partition_point(|&v| v < x)
-}
+// The adaptive merge/gallop intersection primitive lives next to the
+// `NeighborRun` abstraction now; re-exported here because this module
+// is its historical home and external callers import it from here.
+pub use crate::db::index::intersect_count;
+pub(crate) use crate::db::index::gallop_lower_bound;
 
 /// A [`ChainSource`](crate::ct::mobius::ChainSource) that executes fresh
 /// joins against the database on every request — the post-counting data

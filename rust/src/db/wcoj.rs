@@ -9,9 +9,12 @@
 //! variable's candidates are the intersection of the sorted neighbor
 //! runs of every relationship connecting it to the bound prefix,
 //! computed with the same merge/gallop primitives the chain kernel's
-//! intersection fast path uses.  Clean CSR rows are intersected in
-//! place; dirty CSR rows and the hash backend fall back to a per-query
-//! sorted memo, so both storage engines produce identical answers.
+//! intersection fast path uses.  Runs are borrowed through the
+//! [`NeighborRun`] abstraction, so clean CSR slices and clean
+//! compressed block runs are intersected in place (the latter with
+//! block-skipping seeks); dirty rows and the hash backend fall back to
+//! a per-query sorted memo, so all storage engines produce identical
+//! answers.
 //!
 //! The variable order is chosen greedily from cardinality estimates —
 //! [`SummaryStats`] degree summaries when the caller maintains them
@@ -24,8 +27,8 @@
 
 use crate::ct::cttable::CtTable;
 use crate::db::catalog::Database;
-use crate::db::index::RelIx;
-use crate::db::query::{gallop_lower_bound, intersect_count, JoinStats};
+use crate::db::index::{NeighborRun, RelIx, RunCursor};
+use crate::db::query::JoinStats;
 use crate::error::{Error, Result};
 use crate::estimate::summary::SummaryStats;
 use crate::meta::extract::plan_chain;
@@ -175,66 +178,13 @@ struct Step {
     cons: Vec<Cons>,
 }
 
-/// Per-query sorted-run memo for rows the CSR engine cannot hand out as
-/// clean slices: hash-backend adjacency (insertion order) and CSR rows
-/// with pending overlay entries.  Keyed by (rel, orientation, value);
-/// each materialized row is sorted by neighbor, mirroring the clean-run
-/// order, so intersection results cannot depend on the backend.
+/// Per-query sorted-run memo for rows the columnar engines cannot hand
+/// out as clean runs: hash-backend adjacency (insertion order) and
+/// CSR/CCSR rows with pending overlay entries.  Keyed by (rel,
+/// orientation, value); each materialized row is sorted by neighbor,
+/// mirroring the clean-run order, so intersection results cannot depend
+/// on the backend.
 type RunMemo = FxHashMap<(u32, bool, u32), Vec<(u32, u32)>>;
-
-/// A sorted `(neighbor, tid)` run for one constraint.
-enum Run<'a> {
-    /// Clean CSR row: borrowed nbr/tid column slices.
-    Clean { nbr: &'a [u32], tid: &'a [u32] },
-    /// Memoized row (hash backend or dirty CSR row).
-    Pairs(&'a [(u32, u32)]),
-}
-
-impl Run<'_> {
-    #[inline]
-    fn len(&self) -> usize {
-        match self {
-            Run::Clean { nbr, .. } => nbr.len(),
-            Run::Pairs(p) => p.len(),
-        }
-    }
-
-    #[inline]
-    fn val(&self, i: usize) -> u32 {
-        match self {
-            Run::Clean { nbr, .. } => nbr[i],
-            Run::Pairs(p) => p[i].0,
-        }
-    }
-
-    #[inline]
-    fn tid(&self, i: usize) -> u32 {
-        match self {
-            Run::Clean { tid, .. } => tid[i],
-            Run::Pairs(p) => p[i].1,
-        }
-    }
-
-    /// First position `>= lo` whose neighbor is `>= x` (gallop seek).
-    #[inline]
-    fn seek(&self, lo: usize, x: u32) -> usize {
-        match self {
-            Run::Clean { nbr, .. } => lo + gallop_lower_bound(&nbr[lo..], x),
-            Run::Pairs(p) => lo + gallop_pairs_lower_bound(&p[lo..], x),
-        }
-    }
-}
-
-/// [`gallop_lower_bound`] over the neighbor component of a pair run.
-fn gallop_pairs_lower_bound(s: &[(u32, u32)], x: u32) -> usize {
-    let mut hi = 1usize;
-    while hi < s.len() && s[hi].0 < x {
-        hi <<= 1;
-    }
-    let lo = hi >> 1;
-    let hi = hi.min(s.len());
-    lo + s[lo..hi].partition_point(|&(v, _)| v < x)
-}
 
 /// Candidates for one variable: the intersection members, plus the
 /// tuple id each constraining relationship matched them with (`k` tids
@@ -247,61 +197,69 @@ struct Cands {
 
 /// Leapfrog intersection of `runs`: iterate the shortest run and seek
 /// the rest.  Runs are strictly ascending in neighbor (pairs are unique
-/// per relationship), so each cursor only moves forward.
-fn collect_candidates(runs: &[Run<'_>]) -> Cands {
+/// per relationship), so each cursor only moves forward — block runs
+/// additionally skip whole packed blocks via their min/max headers and
+/// decode at most one block per seek.
+fn collect_candidates(runs: &[NeighborRun<'_>]) -> Cands {
     let k = runs.len();
     let pi = (0..k).min_by_key(|&i| runs[i].len()).expect("k >= 1");
+    let mut cursors: Vec<RunCursor<'_>> =
+        runs.iter().map(|&r| RunCursor::new(r)).collect();
     let mut cur = vec![0usize; k];
     let mut out = Cands { k, vals: Vec::new(), tids: Vec::new() };
     'probe: for i in 0..runs[pi].len() {
-        let c = runs[pi].val(i);
-        for (j, run) in runs.iter().enumerate() {
+        let c = cursors[pi].val(i);
+        for j in 0..k {
             if j == pi {
                 continue;
             }
-            let p = run.seek(cur[j], c);
+            let p = cursors[j].seek(cur[j], c);
             cur[j] = p;
-            if p >= run.len() {
+            if p >= runs[j].len() {
                 // this run is exhausted; later probes are larger still
                 break 'probe;
             }
-            if run.val(p) != c {
+            if cursors[j].val(p) != c {
                 continue 'probe;
             }
         }
         out.vals.push(c);
-        for (j, run) in runs.iter().enumerate() {
-            out.tids.push(run.tid(if j == pi { i } else { cur[j] }));
+        for j in 0..k {
+            let p = if j == pi { i } else { cur[j] };
+            out.tids.push(cursors[j].tid(p));
         }
     }
     out
 }
 
 /// Size of the k-way intersection (count-only collapse at the last
-/// variable).  Two clean runs reuse [`intersect_count`] directly.
-fn intersect_size(runs: &[Run<'_>]) -> u64 {
+/// variable).  Two runs reuse [`NeighborRun::intersect_count`], which
+/// keeps the adaptive merge/gallop fast path for clean CSR slices.
+fn intersect_size(runs: &[NeighborRun<'_>]) -> u64 {
     if runs.len() == 1 {
         return runs[0].len() as u64;
     }
-    if let [Run::Clean { nbr: a, .. }, Run::Clean { nbr: b, .. }] = runs {
-        return intersect_count(a, b);
+    if runs.len() == 2 {
+        return runs[0].intersect_count(&runs[1]);
     }
     let k = runs.len();
     let pi = (0..k).min_by_key(|&i| runs[i].len()).expect("k >= 2");
+    let mut cursors: Vec<RunCursor<'_>> =
+        runs.iter().map(|&r| RunCursor::new(r)).collect();
     let mut cur = vec![0usize; k];
     let mut n = 0u64;
     'probe: for i in 0..runs[pi].len() {
-        let c = runs[pi].val(i);
-        for (j, run) in runs.iter().enumerate() {
+        let c = cursors[pi].val(i);
+        for j in 0..k {
             if j == pi {
                 continue;
             }
-            let p = run.seek(cur[j], c);
+            let p = cursors[j].seek(cur[j], c);
             cur[j] = p;
-            if p >= run.len() {
+            if p >= runs[j].len() {
                 break 'probe;
             }
-            if run.val(p) != c {
+            if cursors[j].val(p) != c {
                 continue 'probe;
             }
         }
@@ -476,8 +434,8 @@ pub fn wcoj_chain_ct_with(
 }
 
 /// Borrow the sorted run for one constraint, memoizing rows the engine
-/// cannot hand out as clean slices.  Phase 1 of each step fills the
-/// memo (mutable); phase 2 takes the borrows.
+/// cannot hand out as clean runs.  Phase 1 of each step fills the memo
+/// (mutable); phase 2 takes the borrows.
 fn ensure_memo(
     db: &Database,
     memo: &mut RunMemo,
@@ -486,9 +444,9 @@ fn ensure_memo(
 ) -> Result<()> {
     let ix = db.index(cons.rel)?;
     let clean = if cons.v_is_to {
-        ix.sorted_run_from(bound_val).is_some()
+        ix.neighbor_run_from(bound_val).is_some()
     } else {
-        ix.sorted_run_to(bound_val).is_some()
+        ix.neighbor_run_to(bound_val).is_some()
     };
     if clean {
         return Ok(());
@@ -516,15 +474,15 @@ fn run_for<'a>(
     memo: &'a RunMemo,
     cons: &Cons,
     bound_val: u32,
-) -> Run<'a> {
+) -> NeighborRun<'a> {
     let clean = if cons.v_is_to {
-        ix.sorted_run_from(bound_val)
+        ix.neighbor_run_from(bound_val)
     } else {
-        ix.sorted_run_to(bound_val)
+        ix.neighbor_run_to(bound_val)
     };
     match clean {
-        Some((nbr, tid)) => Run::Clean { nbr, tid },
-        None => Run::Pairs(
+        Some(run) => run,
+        None => NeighborRun::Pairs(
             memo.get(&(cons.rel as u32, cons.v_is_to, bound_val))
                 .expect("memoized in ensure_memo"),
         ),

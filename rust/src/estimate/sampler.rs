@@ -21,11 +21,13 @@
 //! opposite-endpoint id) rather than adjacency-list position, so the
 //! estimate — and therefore every plan and cache digest built on it —
 //! is also identical across index storage backends (`--backend hash`
-//! vs `--backend csr`).  Clean CSR rows serve a draw in O(1) from
-//! their sorted runs; rows the index cannot serve sorted (hash
-//! backend, CSR rows with pending overlay) are sorted **once per
-//! endpoint** into a sampler-local memo — walks hammer the same hubs,
-//! so the sort amortizes across all of a chain's draws.
+//! vs `--backend csr` vs `--backend ccsr`).  Clean columnar rows serve
+//! a draw through [`crate::db::index::NeighborRun::value_at`] — O(1)
+//! on CSR slices, one block decode on compressed runs; rows the index
+//! cannot serve sorted (hash backend, rows with pending overlay) are
+//! sorted **once per endpoint** into a sampler-local memo — walks
+//! hammer the same hubs, so the sort amortizes across all of a chain's
+//! draws.
 
 use std::cell::RefCell;
 
@@ -108,13 +110,13 @@ impl<'a> JoinSampler<'a> {
     }
 
     /// The `k`-th neighbor of endpoint `v` through `rel`, in canonical
-    /// (ascending) order — O(1) on clean CSR runs, one memoized sort
-    /// per endpoint otherwise.
+    /// (ascending) order — served from the clean neighbor run when the
+    /// backend has one, one memoized sort per endpoint otherwise.
     fn nth_nbr(&self, rel: usize, ix: &RelIx, from_side: bool, v: u32, k: usize) -> u32 {
         let run =
-            if from_side { ix.sorted_nbrs_from(v) } else { ix.sorted_nbrs_to(v) };
+            if from_side { ix.neighbor_run_from(v) } else { ix.neighbor_run_to(v) };
         if let Some(run) = run {
-            return run[k];
+            return run.value_at(k);
         }
         let mut rows = self.sorted_rows.borrow_mut();
         let row = rows.entry((rel, from_side, v)).or_insert_with(|| {
@@ -432,20 +434,24 @@ mod tests {
 
     #[test]
     fn estimates_are_backend_invariant() {
-        // canonical neighbor-order sampling: the hash and CSR engines
-        // draw the identical walk stream, so estimates (and the plans
-        // built on them) match bit-for-bit
+        // canonical neighbor-order sampling: the hash, CSR, and
+        // compressed engines draw the identical walk stream, so
+        // estimates (and the plans built on them) match bit-for-bit
         let csr = university_db();
         let mut hash = csr.clone();
         hash.set_backend(crate::db::index::Backend::Hash).unwrap();
+        let mut ccsr = csr.clone();
+        ccsr.set_backend(crate::db::index::Backend::Ccsr).unwrap();
         let cfg = EstimatorConfig { exhaustive_limit: 0, ..Default::default() };
         for chain in [vec![0usize], vec![1], vec![0, 1]] {
             let a = JoinSampler::new(&csr, cfg).chain_cardinality(&chain).unwrap();
-            let b = JoinSampler::new(&hash, cfg).chain_cardinality(&chain).unwrap();
-            assert_eq!(a.value, b.value, "{chain:?}");
-            assert_eq!(a.lo, b.lo, "{chain:?}");
-            assert_eq!(a.hi, b.hi, "{chain:?}");
-            assert_eq!(a.walks, b.walks, "{chain:?}");
+            for other in [&hash, &ccsr] {
+                let b = JoinSampler::new(other, cfg).chain_cardinality(&chain).unwrap();
+                assert_eq!(a.value, b.value, "{chain:?}");
+                assert_eq!(a.lo, b.lo, "{chain:?}");
+                assert_eq!(a.hi, b.hi, "{chain:?}");
+                assert_eq!(a.walks, b.walks, "{chain:?}");
+            }
         }
     }
 }

@@ -9,10 +9,10 @@
 //!   apply      --preset <name>|--db <dir> --deltas <file>
 //!              [--mode auto|delta|recount] [--workers N|auto] [--out <dir>]
 //!   serve      --preset <name>|--db <dir>|--data-dir <dir> [--port N]
-//!              [--data-dir <dir> --snapshot-every N]   (durable serving)
+//!              [--data-dir <dir> --snapshot-every N --snapshot-retain N]
 //!   snapshot   save|verify|load                        (snapshot tooling)
 //!   exp        fig3|fig4|table4|table5|scaling|churn|serve|persist|estimator
-//!              --scale <f> --budget-s <n>
+//!              |wcoj|compress --scale <f> --budget-s <n>
 //!   artifacts  --dir <artifacts>        (smoke-test the XLA runtime)
 //!
 //! `--workers` routes the counting phases through the L3 parallel
@@ -33,9 +33,9 @@ use relcount::bench::driver::{
     run_coordinated_with, run_strategy_with, Workload,
 };
 use relcount::bench::experiments::{
-    churn_rows, coordinator_scaling_rows, estimator_rows, fig3_fig4_rows,
-    persist_rows, planner_sweep_rows, serve_rows, table4_rows, table5_rows,
-    wcoj_rows, ExpConfig,
+    churn_rows, compress_rows, coordinator_scaling_rows, estimator_rows,
+    fig3_fig4_rows, persist_rows, planner_sweep_rows, serve_rows, table4_rows,
+    table5_rows, wcoj_rows, ExpConfig,
 };
 use relcount::coordinator::{CoordinatorConfig, ParallelCoordinator};
 use relcount::datagen::generator::generate;
@@ -49,11 +49,11 @@ use relcount::error::{Error, Result};
 use relcount::learn::search::{learn, SearchConfig};
 use relcount::persist::{load_snapshot, verify_snapshot, write_snapshot, DataDir};
 use relcount::metrics::report::{
-    churn_rows_to_json, estimator_rows_to_json, persist_rows_to_json,
-    planner_rows_to_json, render_churn, render_estimator, render_fig3,
-    render_fig4, render_persist, render_planner, render_scaling, render_serve,
-    render_table4, render_table5, render_wcoj, scaling_rows_to_json,
-    serve_rows_to_json, wcoj_rows_to_json,
+    churn_rows_to_json, compress_rows_to_json, estimator_rows_to_json,
+    persist_rows_to_json, planner_rows_to_json, render_churn, render_compress,
+    render_estimator, render_fig3, render_fig4, render_persist, render_planner,
+    render_scaling, render_serve, render_table4, render_table5, render_wcoj,
+    scaling_rows_to_json, serve_rows_to_json, wcoj_rows_to_json,
 };
 use relcount::runtime::client::Runtime;
 use relcount::serve::{
@@ -72,7 +72,7 @@ USAGE:
   relcount gen       --preset <name> [--scale F] [--seed N] --out <dir>
   relcount count     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget BYTES[k|m|g]|inf]
-                     [--backend csr|hash] [--kernel chain|wcoj]
+                     [--backend csr|ccsr|hash] [--kernel chain|wcoj]
   relcount learn     (--preset <name> | --db <dir>) [--strategy S] [--scale F]
                      [--workers N|auto] [--mem-budget ...] [--xla]
   relcount apply     (--preset <name> | --db <dir>) --deltas FILE
@@ -82,12 +82,13 @@ USAGE:
                      [--requests FILE | --port N]
                      [--deltas FILE | --churn F --churn-steps K]
                      [--workers N|auto] [--mem-budget ...] [--batch-max N]
-                     [--delta-pause-ms N] [--snapshot-every N] [--json FILE]
+                     [--delta-pause-ms N] [--snapshot-every N]
+                     [--snapshot-retain N] [--json FILE]
   relcount snapshot  save (--preset <name> | --db <dir>) --out <dir>
                      | verify --dir <snapshot dir> | load --dir <snapshot dir>
   relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
   relcount exp <fig3|fig4|table4|table5|scaling|planner|churn|serve|persist
-                     |estimator|wcoj> [--scale F]
+                     |estimator|wcoj|compress> [--scale F]
                      [--budget-s N] [--presets a,b] [--workers-list 1,2,4]
                      [--workers N] [--churn 0.01,0.05] [--json FILE]
   relcount artifacts [--dir <artifacts>]
@@ -98,9 +99,11 @@ USAGE:
   visual_genome
   --backend selects the relationship-index storage engine for any
   subcommand that loads a database: `csr` (default; columnar sorted
-  adjacency with merge-join kernels) or `hash` (seed-era hash maps).
-  Counts, plans, models and cache digests are bit-identical across
-  backends — `count` prints the digest so the two can be diffed.
+  adjacency with merge-join kernels), `ccsr` (delta-encoded bit-packed
+  block-CSR with block-skipping intersections — smallest resident
+  footprint) or `hash` (seed-era hash maps).  Counts, plans, models and
+  cache digests are bit-identical across backends — `count` prints the
+  digest plus per-relationship index bytes so backends can be diffed.
   --kernel selects the positive-count join kernel for any subcommand
   that loads a database: `chain` (default; binary merge joins in chain
   order) or `wcoj` (worst-case optimal variable-at-a-time
@@ -128,6 +131,9 @@ USAGE:
   graceful shutdown, and restarting with the same --data-dir (no
   --preset/--db needed) recovers bit-identically — same epoch, same
   cache digest — from the last valid snapshot plus WAL replay.
+  --snapshot-retain N (default 2, minimum 1) keeps the newest N
+  snapshot epochs on disk; each save prunes older epochs and trims the
+  WAL through the oldest retained epoch.
   `snapshot save/verify/load` manage standalone snapshot directories;
   `verify` proves a snapshot can reproduce its manifest digest and
   names the corrupt section otherwise.
@@ -143,6 +149,11 @@ USAGE:
   point of hub-skewed triangle/star constructions and the presets,
   hard-failing on any digest or JoinStats divergence, and times the AGM
   gap on the skewed triangle (--json writes BENCH_wcoj.json rows).
+  `exp compress` differentially tests all three index backends (csr,
+  ccsr, hash) across both kernels at 1 and 4 workers — hard-failing on
+  any count-digest divergence — and measures ccsr's resident bytes and
+  intersection throughput against plain csr (--json writes
+  BENCH_compress.json rows).
   `gen-requests` emits a deterministic request workload for a database.
 ";
 
@@ -159,8 +170,9 @@ fn main() -> ExitCode {
 fn backend_of(args: &Args) -> Result<Backend> {
     match args.get("backend") {
         None => Ok(Backend::default()),
-        Some(v) => Backend::parse(v)
-            .ok_or_else(|| Error::Data(format!("--backend expects csr|hash, got {v:?}"))),
+        Some(v) => Backend::parse(v).ok_or_else(|| {
+            Error::Data(format!("--backend expects csr|ccsr|hash, got {v:?}"))
+        }),
     }
 }
 
@@ -273,6 +285,19 @@ fn run() -> Result<()> {
                 db.backend().name(),
                 db.kernel().name()
             );
+            let per_rel = db.index_bytes_per_rel();
+            if !per_rel.is_empty() {
+                println!(
+                    "indexes: {} bytes resident (per relationship: {})",
+                    per_rel.iter().sum::<usize>(),
+                    per_rel
+                        .iter()
+                        .enumerate()
+                        .map(|(rt, b)| format!("r{rt}={b}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+            }
             if kind == StrategyKind::Adaptive {
                 println!(
                     "plan: {} points positive-planned, {} complete-planned, \
@@ -409,9 +434,15 @@ fn run() -> Result<()> {
             // the initial snapshot
             let data_dir = args.get("data-dir").map(Path::new);
             let snapshot_every = args.get_usize("snapshot-every", 8)? as u64;
+            let snapshot_retain = args.get_usize("snapshot-retain", 2)?;
+            if snapshot_retain == 0 {
+                return Err(Error::Data(
+                    "--snapshot-retain expects an integer >= 1".into(),
+                ));
+            }
             let (name, mut engine) = match data_dir {
                 Some(root) => {
-                    let dd = DataDir::open(root)?;
+                    let dd = DataDir::with_retain(root, snapshot_retain)?;
                     if dd.has_snapshots()? {
                         eprintln!("recovering state from {}...", root.display());
                         let (m, epoch) = dd.recover(args.workers()?)?;
@@ -447,9 +478,13 @@ fn run() -> Result<()> {
                 }
             };
             if let Some(root) = data_dir {
-                engine.attach_persistence(DataDir::open(root)?, snapshot_every)?;
+                engine.attach_persistence(
+                    DataDir::with_retain(root, snapshot_retain)?,
+                    snapshot_every,
+                )?;
                 eprintln!(
-                    "durable: WAL + snapshot every {snapshot_every} batches in {}",
+                    "durable: WAL + snapshot every {snapshot_every} batches \
+                     (retaining {snapshot_retain}) in {}",
                     root.display()
                 );
             }
@@ -589,7 +624,7 @@ fn run() -> Result<()> {
                 .ok_or_else(|| {
                     Error::Data(
                         "exp needs fig3|fig4|table4|table5|scaling|planner|\
-                         churn|serve|persist|estimator|wcoj"
+                         churn|serve|persist|estimator|wcoj|compress"
                             .into(),
                     )
                 })?;
@@ -656,6 +691,14 @@ fn run() -> Result<()> {
                     let rows = wcoj_rows(&cfg)?;
                     print!("{}", render_wcoj(&rows));
                     write_json(&args, wcoj_rows_to_json(&rows))?;
+                }
+                "compress" => {
+                    // compress_rows hard-errors on any digest divergence
+                    // across the three backends, so reaching here means
+                    // every row witnessed bit-identity
+                    let rows = compress_rows(&cfg)?;
+                    print!("{}", render_compress(&rows));
+                    write_json(&args, compress_rows_to_json(&rows))?;
                 }
                 other => return Err(Error::Data(format!("unknown experiment {other:?}"))),
             }

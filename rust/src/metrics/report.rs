@@ -739,6 +739,104 @@ pub fn wcoj_rows_to_json(rows: &[WcojRow]) -> Json {
     )
 }
 
+/// One database row of the index-compression experiment
+/// (`exp compress`, EXPERIMENTS.md §E17): the three index backends
+/// (csr, ccsr, hash) counted every multi-relationship lattice point
+/// under both kernels and built the full caches at 1 and 4 workers;
+/// `identical` is the differential gate and must be `true` on every
+/// row — the generator hard-errors otherwise, so the field exists for
+/// the JSON schema, not as a soft signal.
+#[derive(Clone, Debug)]
+pub struct CompressRow {
+    pub database: String,
+    /// Live link pairs across all relationship tables.
+    pub pairs: u64,
+    /// Resident bytes of all plain-CSR relationship indexes.
+    pub csr_bytes: u64,
+    /// Resident bytes of all compressed block-CSR indexes.
+    pub ccsr_bytes: u64,
+    pub bytes_per_pair_csr: f64,
+    pub bytes_per_pair_ccsr: f64,
+    /// `csr_bytes / ccsr_bytes` (> 1 means ccsr is smaller).
+    pub bytes_ratio: f64,
+    /// Multi-relationship lattice points differentially verified (the
+    /// same set under each kernel).
+    pub points: u64,
+    /// Total positive-count time over those points on plain CSR.
+    pub csr_time: Duration,
+    /// Same workload on compressed block-CSR.
+    pub ccsr_time: Duration,
+    /// `csr_time / ccsr_time` intersection-throughput ratio (1.0 =
+    /// parity; the CI gate requires >= 0.8 somewhere).
+    pub throughput_vs_csr: f64,
+    /// All three backends agreed on every count digest, JoinStats and
+    /// cache digest at 1 and 4 workers.
+    pub identical: bool,
+    /// Highest worker count the cache digests were verified at.
+    pub workers: usize,
+}
+
+/// Render the index-compression experiment (`exp compress`).
+pub fn render_compress(rows: &[CompressRow]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:>10} {:>12} {:>12} {:>7} {:>7} {:>6} {:>6} {:>8} {:>6}\n",
+        "database",
+        "pairs",
+        "csr_bytes",
+        "ccsr_bytes",
+        "B/pair",
+        "ratio",
+        "points",
+        "thru",
+        "workers",
+        "ident"
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<12} {:>10} {:>12} {:>12} {:>7.2} {:>6.2}x {:>6} {:>6.2} {:>8} {:>6}\n",
+            r.database,
+            r.pairs,
+            r.csr_bytes,
+            r.ccsr_bytes,
+            r.bytes_per_pair_ccsr,
+            r.bytes_ratio,
+            r.points,
+            r.throughput_vs_csr,
+            r.workers,
+            r.identical
+        ));
+    }
+    out
+}
+
+/// Machine-readable compression rows (written to `BENCH_compress.json`
+/// by `scripts/bench.sh`).  Key set is schema-stable; the byte and pair
+/// fields are deterministic, the timing fields are not.
+pub fn compress_rows_to_json(rows: &[CompressRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("database", Json::Str(r.database.clone())),
+                    ("pairs", Json::Num(r.pairs as f64)),
+                    ("csr_bytes", Json::Num(r.csr_bytes as f64)),
+                    ("ccsr_bytes", Json::Num(r.ccsr_bytes as f64)),
+                    ("bytes_per_pair_csr", Json::Num(r.bytes_per_pair_csr)),
+                    ("bytes_per_pair_ccsr", Json::Num(r.bytes_per_pair_ccsr)),
+                    ("bytes_ratio", Json::Num(r.bytes_ratio)),
+                    ("points", Json::Num(r.points as f64)),
+                    ("csr_s", Json::Num(r.csr_time.as_secs_f64())),
+                    ("ccsr_s", Json::Num(r.ccsr_time.as_secs_f64())),
+                    ("throughput_vs_csr", Json::Num(r.throughput_vs_csr)),
+                    ("identical", Json::Bool(r.identical)),
+                    ("workers", Json::Num(r.workers as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// Table-4-shaped rows.
 #[derive(Clone, Debug)]
 pub struct Table4Row {
@@ -1021,6 +1119,45 @@ mod tests {
         assert_eq!(row.get("rows_enumerated").unwrap().as_f64(), Some(70.0));
         assert_eq!(row.get("speedup").unwrap().as_f64(), Some(8.0));
         assert_eq!(row.get("identical").unwrap(), &Json::Bool(true));
+    }
+
+    fn compress_row() -> CompressRow {
+        CompressRow {
+            database: "tri_skew".into(),
+            pairs: 12000,
+            csr_bytes: 200_000,
+            ccsr_bytes: 64_000,
+            bytes_per_pair_csr: 16.67,
+            bytes_per_pair_ccsr: 5.33,
+            bytes_ratio: 3.125,
+            points: 7,
+            csr_time: Duration::from_millis(40),
+            ccsr_time: Duration::from_millis(44),
+            throughput_vs_csr: 0.91,
+            identical: true,
+            workers: 4,
+        }
+    }
+
+    #[test]
+    fn renders_compress() {
+        let s = render_compress(&[compress_row()]);
+        assert!(s.contains("tri_skew") && s.contains("64000"));
+        assert!(s.contains("3.12x") && s.contains("true"));
+    }
+
+    #[test]
+    fn compress_json_shapes() {
+        let j = compress_rows_to_json(&[compress_row()]);
+        let parsed = Json::parse(&j.dump()).unwrap();
+        let row = &parsed.as_arr().unwrap()[0];
+        assert_eq!(row.get("pairs").unwrap().as_f64(), Some(12000.0));
+        assert_eq!(row.get("ccsr_bytes").unwrap().as_f64(), Some(64000.0));
+        assert_eq!(row.get("bytes_per_pair_ccsr").unwrap().as_f64(), Some(5.33));
+        assert_eq!(row.get("bytes_ratio").unwrap().as_f64(), Some(3.125));
+        assert_eq!(row.get("throughput_vs_csr").unwrap().as_f64(), Some(0.91));
+        assert_eq!(row.get("identical").unwrap(), &Json::Bool(true));
+        assert_eq!(row.get("workers").unwrap().as_f64(), Some(4.0));
     }
 
     #[test]

@@ -82,6 +82,20 @@ impl ByteWriter {
             self.put_u32(x);
         }
     }
+
+    /// Length-prefixed u64 vector (ccsr packed words / bit offsets).
+    pub fn put_u64s(&mut self, v: &[u64]) {
+        self.put_u64(v.len() as u64);
+        for &x in v {
+            self.put_u64(x);
+        }
+    }
+
+    /// Length-prefixed u8 vector (ccsr per-block bit widths).
+    pub fn put_u8s(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
 }
 
 /// Cursor over a section payload; every failure names the section.
@@ -173,6 +187,20 @@ impl<'a> ByteReader<'a> {
         }
         Ok(v)
     }
+
+    pub fn get_u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.get_usize()?;
+        let mut v = Vec::with_capacity(n.min(self.b.len() / 8 + 1));
+        for _ in 0..n {
+            v.push(self.get_u64()?);
+        }
+        Ok(v)
+    }
+
+    pub fn get_u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
 }
 
 #[cfg(test)]
@@ -191,6 +219,8 @@ mod tests {
         w.put_usize(42);
         w.put_str("café ✓");
         w.put_u32s(&[1, 2, 3]);
+        w.put_u64s(&[u64::MAX, 0, 9]);
+        w.put_u8s(&[4, 0, 32]);
         let bytes = w.into_bytes();
         let mut r = ByteReader::new(&bytes, "test");
         assert_eq!(r.get_u8().unwrap(), 7);
@@ -202,6 +232,8 @@ mod tests {
         assert_eq!(r.get_usize().unwrap(), 42);
         assert_eq!(r.get_str().unwrap(), "café ✓");
         assert_eq!(r.get_u32s().unwrap(), vec![1, 2, 3]);
+        assert_eq!(r.get_u64s().unwrap(), vec![u64::MAX, 0, 9]);
+        assert_eq!(r.get_u8s().unwrap(), vec![4, 0, 32]);
         r.finish().unwrap();
     }
 

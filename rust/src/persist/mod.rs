@@ -61,8 +61,10 @@ use std::path::{Path, PathBuf};
 use crate::delta::maintain::MaintainedCounts;
 use crate::error::{Error, Result};
 
-/// Snapshots kept per data directory (newest first); older epochs are
-/// deleted after a successful save.
+/// Default number of snapshots kept per data directory (newest first);
+/// older epochs are deleted after a successful save.  Override per
+/// directory with [`DataDir::with_retain`] / [`DataDir::set_retain`]
+/// (CLI `--snapshot-retain`).
 pub const RETAIN: usize = 2;
 
 const SNAP_PREFIX: &str = "snap-";
@@ -74,14 +76,45 @@ fn perr(section: &str, msg: impl Into<String>) -> Error {
 /// A serving data directory: WAL + snapshot retention + recovery.
 pub struct DataDir {
     root: PathBuf,
+    /// Snapshots kept by [`DataDir::prune_snapshots`]; the WAL prune
+    /// cutoff follows the on-disk epochs, so it respects this too.
+    retain: usize,
 }
 
 impl DataDir {
-    /// Open (creating if needed) `root` and its `snapshots/` subdir.
+    /// Open (creating if needed) `root` and its `snapshots/` subdir,
+    /// with the default [`RETAIN`] retention.
     pub fn open(root: &Path) -> Result<DataDir> {
         fs::create_dir_all(root.join("snapshots"))
             .map_err(|e| perr("datadir", format!("create {}: {e}", root.display())))?;
-        Ok(DataDir { root: root.to_path_buf() })
+        Ok(DataDir { root: root.to_path_buf(), retain: RETAIN })
+    }
+
+    /// Open with an explicit retention count (must be >= 1: retaining
+    /// zero snapshots would make every recovery impossible).
+    pub fn with_retain(root: &Path, retain: usize) -> Result<DataDir> {
+        if retain == 0 {
+            return Err(perr("datadir", "snapshot retention must be >= 1"));
+        }
+        let mut dd = Self::open(root)?;
+        dd.retain = retain;
+        Ok(dd)
+    }
+
+    /// Snapshots kept after each successful save.
+    pub fn retain(&self) -> usize {
+        self.retain
+    }
+
+    /// Change the retention count (must be >= 1).  Takes effect at the
+    /// next [`DataDir::save_snapshot`]; shrinking it does not delete
+    /// anything until then.
+    pub fn set_retain(&mut self, retain: usize) -> Result<()> {
+        if retain == 0 {
+            return Err(perr("datadir", "snapshot retention must be >= 1"));
+        }
+        self.retain = retain;
+        Ok(())
     }
 
     pub fn root(&self) -> &Path {
@@ -133,7 +166,8 @@ impl DataDir {
     /// Write a snapshot of `m` at `epoch`: compact the indexes, write
     /// every section into a temp directory, then `rename` it to
     /// `snap-<epoch>` — the snapshot either exists completely or not at
-    /// all.  Older snapshots beyond [`RETAIN`] are then deleted.
+    /// all.  Older snapshots beyond [`DataDir::retain`] are then
+    /// deleted.
     pub fn save_snapshot(&self, m: &mut MaintainedCounts, epoch: u64) -> Result<PathBuf> {
         m.compact_indexes();
         let final_dir = self.snapshot_dir(epoch);
@@ -163,10 +197,10 @@ impl DataDir {
 
     fn prune_snapshots(&self) -> Result<()> {
         let epochs = self.snapshot_epochs()?;
-        if epochs.len() <= RETAIN {
+        if epochs.len() <= self.retain {
             return Ok(());
         }
-        for &old in &epochs[..epochs.len() - RETAIN] {
+        for &old in &epochs[..epochs.len() - self.retain] {
             let dir = self.snapshot_dir(old);
             fs::remove_dir_all(&dir)
                 .map_err(|e| perr("datadir", format!("prune {}: {e}", dir.display())))?;
@@ -313,6 +347,7 @@ mod tests {
     fn retention_prunes_oldest() {
         let root = tmp("retention");
         let dd = DataDir::open(&root).unwrap();
+        assert_eq!(dd.retain(), RETAIN);
         let mut m =
             MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
         for e in [0, 5, 9] {
@@ -320,6 +355,32 @@ mod tests {
         }
         assert_eq!(dd.snapshot_epochs().unwrap(), vec![5, 9]);
         assert_eq!(dd.latest_snapshot_epoch().unwrap(), Some(9));
+    }
+
+    #[test]
+    fn configurable_retention_keeps_n_and_moves_wal_cutoff() {
+        let root = tmp("retain-n");
+        let dd = DataDir::with_retain(&root, 3).unwrap();
+        assert_eq!(dd.retain(), 3);
+        let mut m =
+            MaintainedCounts::build(university_db(), MaintainConfig::default()).unwrap();
+        for e in [0, 1, 2, 3, 4] {
+            dd.save_snapshot(&mut m, e).unwrap();
+        }
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![2, 3, 4]);
+        // the WAL cutoff follows the oldest *retained* epoch, so wider
+        // retention prunes less aggressively
+        assert_eq!(dd.wal_prune_cutoff().unwrap(), Some(2));
+
+        // a wider-retention reopen keeps more going forward
+        let mut dd = DataDir::open(&root).unwrap();
+        dd.set_retain(4).unwrap();
+        dd.save_snapshot(&mut m, 5).unwrap();
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![2, 3, 4, 5]);
+
+        // retention 0 is rejected everywhere
+        assert!(DataDir::with_retain(&root, 0).is_err());
+        assert!(dd.set_retain(0).is_err());
     }
 
     #[test]

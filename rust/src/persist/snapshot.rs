@@ -6,6 +6,7 @@
 //!                   per-section {file, bytes, checksum}
 //!   db.bin          schema JSON + columnar entity/relationship tables
 //!   csr.bin         compacted CSR base arrays (CSR backend only)
+//!   ccsr.bin        compacted packed block columns (CCSR backend only)
 //!   plan.bin        the CountPlan, verbatim
 //!   caches.bin      resident positive + complete ct-caches
 //! ```
@@ -27,14 +28,18 @@
 //!   pre-crash writer (and change which points are resident);
 //! - the lattice is **rebuilt** — it is a pure function of (schema,
 //!   max_chain_length);
-//! - CSR indexes are persisted as base arrays (the overlay is compacted
-//!   first); the hash backend rebuilds its maps from the tables.
+//! - CSR indexes are persisted as base arrays and CCSR indexes as their
+//!   packed block columns (the overlay is compacted first in both
+//!   cases); the hash backend rebuilds its maps from the tables.
+//!   Manifests written before the CCSR backend existed carry no
+//!   `ccsr` section and load unchanged.
 
 use std::fs::{self, File};
 use std::io::Write as _;
 use std::path::Path;
 
 use crate::db::catalog::Database;
+use crate::db::ccsr::{CcsrHalf, CcsrIndex};
 use crate::db::csr::{CsrHalf, CsrIndex};
 use crate::db::index::{Backend, RelIx};
 use crate::db::schema::Schema;
@@ -275,6 +280,74 @@ fn decode_csr_into(payload: &[u8], db: &mut Database) -> Result<()> {
     }
     r.finish()?;
     db.install_indexes(ixs).map_err(|e| perr("csr", e.to_string()))
+}
+
+// ---------------------------------------------------------------- ccsr.bin
+
+fn encode_ccsr_half(w: &mut ByteWriter, h: &CcsrHalf) {
+    w.put_u32s(&h.offsets);
+    w.put_u32s(&h.blk_offsets);
+    w.put_u32s(&h.nbr_min);
+    w.put_u32s(&h.nbr_max);
+    w.put_u32s(&h.tid_min);
+    w.put_u8s(&h.nbr_width);
+    w.put_u8s(&h.tid_width);
+    w.put_u64s(&h.data_off);
+    w.put_u64s(&h.packed);
+}
+
+fn decode_ccsr_half(r: &mut ByteReader) -> Result<CcsrHalf> {
+    Ok(CcsrHalf {
+        offsets: r.get_u32s()?,
+        blk_offsets: r.get_u32s()?,
+        nbr_min: r.get_u32s()?,
+        nbr_max: r.get_u32s()?,
+        tid_min: r.get_u32s()?,
+        nbr_width: r.get_u8s()?,
+        tid_width: r.get_u8s()?,
+        data_off: r.get_u64s()?,
+        packed: r.get_u64s()?,
+    })
+}
+
+fn encode_ccsr(db: &Database) -> Result<Vec<u8>> {
+    let mut w = ByteWriter::new();
+    w.put_u32(db.rels.len() as u32);
+    for rel in 0..db.rels.len() {
+        let ix = db.index(rel)?;
+        let ccsr = ix.as_ccsr().ok_or_else(|| {
+            perr("ccsr", format!("index {rel} is not CCSR ({})", ix.backend().name()))
+        })?;
+        let (fwd, rev) = ccsr.halves().map_err(|e| perr("ccsr", e.to_string()))?;
+        encode_ccsr_half(&mut w, fwd);
+        encode_ccsr_half(&mut w, rev);
+    }
+    Ok(w.into_bytes())
+}
+
+/// Decode and install CCSR indexes onto `db` (whose backend must be
+/// CCSR).  [`CcsrIndex::from_halves`] re-validates the whole block
+/// structure, so a corrupt-but-checksummed payload surfaces as a typed
+/// error instead of a bad count.
+fn decode_ccsr_into(payload: &[u8], db: &mut Database) -> Result<()> {
+    let mut r = ByteReader::new(payload, "ccsr");
+    let n = r.get_u32()? as usize;
+    if n != db.rels.len() {
+        return Err(perr(
+            "ccsr",
+            format!("{n} indexes for {} relationship tables", db.rels.len()),
+        ));
+    }
+    let mut ixs = Vec::with_capacity(n);
+    for rel in 0..n {
+        let fwd = decode_ccsr_half(&mut r)?;
+        let rev = decode_ccsr_half(&mut r)?;
+        let ix = CcsrIndex::from_halves(fwd, rev)
+            .map_err(|e| perr("ccsr", format!("index {rel}: {e}")))?;
+        ixs.push(RelIx::Ccsr(ix));
+    }
+    r.finish()?;
+    db.install_indexes(ixs).map_err(|e| perr("ccsr", e.to_string()))
 }
 
 // ---------------------------------------------------------------- plan.bin
@@ -605,6 +678,9 @@ pub fn write_snapshot(dir: &Path, m: &MaintainedCounts, epoch: u64) -> Result<()
     if backend == Backend::Csr {
         sections.insert(1, ("csr", "csr.bin", encode_csr(db)?));
     }
+    if backend == Backend::Ccsr {
+        sections.insert(1, ("ccsr", "ccsr.bin", encode_ccsr(db)?));
+    }
 
     let mut section_json = Vec::new();
     for (name, file, payload) in &sections {
@@ -730,6 +806,11 @@ pub fn load_snapshot(dir: &Path) -> Result<SnapshotState> {
             let (_, file, bytes, crc) = man.section("csr")?;
             let payload = read_section(dir, "csr", file, *bytes, *crc)?;
             decode_csr_into(&payload, &mut db)?;
+        }
+        Backend::Ccsr => {
+            let (_, file, bytes, crc) = man.section("ccsr")?;
+            let payload = read_section(dir, "ccsr", file, *bytes, *crc)?;
+            decode_ccsr_into(&payload, &mut db)?;
         }
         Backend::Hash => {
             db.build_indexes().map_err(|e| perr("db", e.to_string()))?;

@@ -378,6 +378,39 @@ mod tests {
     }
 
     #[test]
+    fn custom_retention_threads_through_persist_snapshot() {
+        let root = std::env::temp_dir().join(format!(
+            "relcount-engine-retain-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&root);
+        // --snapshot-retain 3: the engine keeps three epochs on disk and
+        // the WAL prune cutoff trails the oldest of them
+        let dd = DataDir::with_retain(&root, 3).unwrap();
+        let mut e =
+            ServeEngine::build(university_db(), MaintainConfig::default()).unwrap();
+        e.attach_persistence(dd, 1).unwrap(); // snapshot on every publish
+        for i in 0..4u64 {
+            let b = crate::datagen::churn::churn_batch(e.db(), 0.05, 0xABBA + i);
+            e.apply_publish(&b).unwrap();
+        }
+        let dd = DataDir::open(&root).unwrap();
+        assert_eq!(dd.snapshot_epochs().unwrap(), vec![2, 3, 4]);
+        assert_eq!(
+            crate::persist::read_records(&dd.wal_path())
+                .unwrap()
+                .iter()
+                .map(|r| r.epoch)
+                .collect::<Vec<_>>(),
+            vec![3, 4]
+        );
+        let (r, epoch) = dd.recover(0).unwrap();
+        assert_eq!(epoch, 4);
+        assert_eq!(r.digest(), e.digest());
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    #[test]
     fn serve_batch_is_request_ordered_and_worker_count_invariant() {
         let e = ServeEngine::build(university_db(), MaintainConfig::default()).unwrap();
         let g = e.store().load();

@@ -592,28 +592,162 @@ fn prop_csr_overlay_then_compact_matches_rebuild() {
 }
 
 #[test]
-fn prop_csr_and_hash_backends_count_identically() {
+fn prop_backends_count_identically_under_both_kernels() {
     // identical ct-tables *and* identical JoinStats accounting on every
-    // lattice point, before and after random churn
+    // lattice point, after random churn, for csr x ccsr x hash under
+    // both join kernels (the `exp compress` gate's property)
     use relcount::db::index::Backend;
+    use relcount::db::wcoj::JoinKernel;
     for seed in 1700..1700 + DELTA_CASES {
         let mut rng = Rng::new(seed);
         let mut csr = random_db(&mut rng);
         random_churn(&mut rng, &mut csr, 15);
+        let mut ccsr = csr.clone();
+        ccsr.set_backend(Backend::Ccsr).unwrap();
         let mut hash = csr.clone();
         hash.set_backend(Backend::Hash).unwrap();
         let lattice = Lattice::build(&csr.schema, 3).unwrap();
-        for p in &lattice.points {
-            let mut s1 = JoinStats::default();
-            let mut s2 = JoinStats::default();
-            let a = positive_chain_ct(&csr, &p.rels, &p.attr_vars, &mut s1)
-                .unwrap_or_else(|e| panic!("seed {seed} csr: {e}"));
-            let b = positive_chain_ct(&hash, &p.rels, &p.attr_vars, &mut s2)
-                .unwrap_or_else(|e| panic!("seed {seed} hash: {e}"));
-            assert_eq!(s1, s2, "seed {seed} {:?}: stats diverged", p.rels);
-            assert_eq!(a.n_rows(), b.n_rows(), "seed {seed} {:?}", p.rels);
-            for (v, c) in a.iter_rows() {
-                assert_eq!(b.get(&v).unwrap(), c, "seed {seed} {:?} {v:?}", p.rels);
+        for kernel in [JoinKernel::Chain, JoinKernel::Wcoj] {
+            csr.set_kernel(kernel);
+            ccsr.set_kernel(kernel);
+            hash.set_kernel(kernel);
+            for p in &lattice.points {
+                let mut s1 = JoinStats::default();
+                let mut s2 = JoinStats::default();
+                let mut s3 = JoinStats::default();
+                let a = positive_chain_ct(&csr, &p.rels, &p.attr_vars, &mut s1)
+                    .unwrap_or_else(|e| panic!("seed {seed} csr: {e}"));
+                let b = positive_chain_ct(&ccsr, &p.rels, &p.attr_vars, &mut s2)
+                    .unwrap_or_else(|e| panic!("seed {seed} ccsr: {e}"));
+                let c = positive_chain_ct(&hash, &p.rels, &p.attr_vars, &mut s3)
+                    .unwrap_or_else(|e| panic!("seed {seed} hash: {e}"));
+                assert_eq!(s1, s2, "seed {seed} {kernel:?} {:?}: stats", p.rels);
+                assert_eq!(s2, s3, "seed {seed} {kernel:?} {:?}: stats", p.rels);
+                assert_eq!(a.digest(), b.digest(), "seed {seed} {kernel:?} {:?}", p.rels);
+                assert_eq!(b.digest(), c.digest(), "seed {seed} {kernel:?} {:?}", p.rels);
+                for (v, w) in a.iter_rows() {
+                    assert_eq!(b.get(&v).unwrap(), w, "seed {seed} {:?} {v:?}", p.rels);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_ccsr_overlay_then_compact_matches_rebuild() {
+    // the ccsr overlay path under random churn (applied op-for-op in
+    // lockstep with a csr twin): reads must match csr both while the
+    // overlay is pending and after compaction, and the compacted blocks
+    // must decode to exactly the runs a from-scratch ccsr rebuild packs
+    use relcount::db::index::Backend;
+    for seed in 2100..2100 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let mut csr = random_db(&mut rng);
+        let mut ccsr = csr.clone();
+        ccsr.set_backend(Backend::Ccsr).unwrap();
+        // identical mutation sequence on both: decisions depend only on
+        // the rng and the (identical) visible state
+        for _ in 0..25 {
+            let rel = rng.gen_range(csr.rels.len() as u64) as usize;
+            let r = csr.schema.relationships[rel].clone();
+            let (nf, nt) = (csr.entities[r.from].len(), csr.entities[r.to].len());
+            let from = rng.gen_u32(nf);
+            let to = rng.gen_u32(nt);
+            if csr.index(rel).unwrap().lookup(from, to).is_some() {
+                csr.delete_link(rel, from, to).unwrap();
+                ccsr.delete_link(rel, from, to).unwrap();
+            } else {
+                let values: Vec<u32> =
+                    r.attrs.iter().map(|a| rng.gen_u32(a.card)).collect();
+                csr.insert_link(rel, from, to, &values).unwrap();
+                ccsr.insert_link(rel, from, to, &values).unwrap();
+            }
+        }
+        let check_reads = |csr: &Database, ccsr: &Database| {
+            for rel in 0..csr.rels.len() {
+                let r = &csr.schema.relationships[rel];
+                let (a, b) = (csr.index(rel).unwrap(), ccsr.index(rel).unwrap());
+                assert_eq!(a.len(), b.len(), "seed {seed} rel {rel}");
+                assert_eq!(a.max_degree(), b.max_degree(), "seed {seed}");
+                for f in 0..csr.entities[r.from].len() {
+                    assert_eq!(a.degree_from(f), b.degree_from(f), "seed {seed}");
+                    for o in 0..csr.entities[r.to].len() {
+                        assert_eq!(a.lookup(f, o), b.lookup(f, o), "seed {seed}");
+                    }
+                }
+                for o in 0..csr.entities[r.to].len() {
+                    assert_eq!(a.degree_to(o), b.degree_to(o), "seed {seed}");
+                }
+            }
+        };
+        check_reads(&csr, &ccsr); // overlays still pending
+        csr.compact_indexes();
+        ccsr.compact_indexes();
+        assert_eq!(ccsr.index_overlay_len(), 0, "seed {seed}");
+        check_reads(&csr, &ccsr); // compacted
+        // a from-scratch ccsr rebuild packs the same runs the churned
+        // index decodes to
+        let mut fresh = Database::new(
+            ccsr.schema.clone(),
+            ccsr.entities.clone(),
+            ccsr.rels.clone(),
+        )
+        .unwrap();
+        fresh.set_backend(Backend::Ccsr).unwrap();
+        for rel in 0..ccsr.rels.len() {
+            let r = &ccsr.schema.relationships[rel];
+            let (a, b) = (ccsr.index(rel).unwrap(), fresh.index(rel).unwrap());
+            for f in 0..ccsr.entities[r.from].len() {
+                let (ra, rb) = (
+                    a.neighbor_run_from(f).expect("compacted ccsr row"),
+                    b.neighbor_run_from(f).expect("fresh ccsr row"),
+                );
+                assert_eq!(ra.len(), rb.len(), "seed {seed} rel {rel} row {f}");
+                for k in 0..ra.len() {
+                    assert_eq!(
+                        ra.pair_at(k),
+                        rb.pair_at(k),
+                        "seed {seed} rel {rel} row {f} entry {k}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_sampler_draw_order_is_backend_invariant() {
+    // the canonical-order walk contract: the k-th neighbor (and its
+    // tuple id) drawn by nth_from/nth_to is identical on every backend,
+    // so seeded estimator walks visit the same tuples everywhere
+    use relcount::db::index::Backend;
+    for seed in 2200..2200 + DELTA_CASES {
+        let mut rng = Rng::new(seed);
+        let mut csr = random_db(&mut rng);
+        random_churn(&mut rng, &mut csr, 12);
+        let mut ccsr = csr.clone();
+        ccsr.set_backend(Backend::Ccsr).unwrap();
+        let mut hash = csr.clone();
+        hash.set_backend(Backend::Hash).unwrap();
+        for rel in 0..csr.rels.len() {
+            let r = &csr.schema.relationships[rel];
+            let t = &csr.rels[rel];
+            let a = csr.index(rel).unwrap();
+            let b = ccsr.index(rel).unwrap();
+            let c = hash.index(rel).unwrap();
+            for f in 0..csr.entities[r.from].len() {
+                for k in 0..a.degree_from(f) {
+                    let want = a.nth_from(t, f, k);
+                    assert_eq!(want, b.nth_from(t, f, k), "seed {seed} rel {rel}");
+                    assert_eq!(want, c.nth_from(t, f, k), "seed {seed} rel {rel}");
+                }
+            }
+            for o in 0..csr.entities[r.to].len() {
+                for k in 0..a.degree_to(o) {
+                    let want = a.nth_to(t, o, k);
+                    assert_eq!(want, b.nth_to(t, o, k), "seed {seed} rel {rel}");
+                    assert_eq!(want, c.nth_to(t, o, k), "seed {seed} rel {rel}");
+                }
             }
         }
     }
@@ -622,32 +756,41 @@ fn prop_csr_and_hash_backends_count_identically() {
 #[test]
 fn prop_backend_cache_digests_match_across_strategies() {
     // the CI gate's property: every strategy's resident-cache digest is
-    // identical under --backend hash and --backend csr
+    // identical under --backend csr, --backend ccsr and --backend hash
     use relcount::db::index::Backend;
     for seed in 1750..1750 + DELTA_CASES {
         let mut rng = Rng::new(seed);
         let csr = random_db(&mut rng);
-        let mut hash = csr.clone();
-        hash.set_backend(Backend::Hash).unwrap();
+        let mut others = Vec::new();
+        for backend in [Backend::Ccsr, Backend::Hash] {
+            let mut db = csr.clone();
+            db.set_backend(backend).unwrap();
+            others.push(db);
+        }
         let (vars, ctx) = random_family(&mut rng, &csr);
         for kind in StrategyKind::ALL_WITH_ADAPTIVE {
             let mut a = kind.build(&csr, StrategyConfig::default()).unwrap();
-            let mut b = kind.build(&hash, StrategyConfig::default()).unwrap();
             a.prepare().unwrap_or_else(|e| panic!("seed {seed} {kind:?}: {e}"));
-            b.prepare().unwrap();
-            assert_eq!(
-                a.cache_digest(),
-                b.cache_digest(),
-                "seed {seed} {kind:?}: prepare digests diverged"
-            );
+            let prep_digest = a.cache_digest();
             let ta = a.ct_for_family(&vars, &ctx).unwrap();
-            let tb = b.ct_for_family(&vars, &ctx).unwrap();
-            assert_eq!(ta.digest(), tb.digest(), "seed {seed} {kind:?}");
-            assert_eq!(
-                a.cache_digest(),
-                b.cache_digest(),
-                "seed {seed} {kind:?}: serving digests diverged"
-            );
+            let serve_digest = a.cache_digest();
+            for other in &others {
+                let name = other.backend().name();
+                let mut b = kind.build(other, StrategyConfig::default()).unwrap();
+                b.prepare().unwrap();
+                assert_eq!(
+                    prep_digest,
+                    b.cache_digest(),
+                    "seed {seed} {kind:?} {name}: prepare digests diverged"
+                );
+                let tb = b.ct_for_family(&vars, &ctx).unwrap();
+                assert_eq!(ta.digest(), tb.digest(), "seed {seed} {kind:?} {name}");
+                assert_eq!(
+                    serve_digest,
+                    b.cache_digest(),
+                    "seed {seed} {kind:?} {name}: serving digests diverged"
+                );
+            }
         }
     }
 }
@@ -832,7 +975,11 @@ fn prop_snapshot_save_load_roundtrip_is_identity() {
     for seed in 1700..1700 + 12u64 {
         let mut rng = Rng::new(seed);
         let mut db = random_db(&mut rng);
-        let backend = if seed % 2 == 0 { Backend::Csr } else { Backend::Hash };
+        let backend = match seed % 3 {
+            0 => Backend::Csr,
+            1 => Backend::Hash,
+            _ => Backend::Ccsr,
+        };
         db.set_backend(backend).unwrap();
         let mem_budget = match rng.gen_range(3) {
             0 => None,          // everything resident
@@ -865,11 +1012,21 @@ fn prop_snapshot_save_load_roundtrip_is_identity() {
         assert_eq!(reloaded.digest(), m.digest(), "seed {seed}");
 
         write_snapshot(&d2, &reloaded, 3).unwrap();
-        for f in ["MANIFEST.json", "db.bin", "csr.bin", "plan.bin", "caches.bin"] {
+        let files =
+            ["MANIFEST.json", "db.bin", "csr.bin", "ccsr.bin", "plan.bin", "caches.bin"];
+        for f in files {
             let a = d1.join(f);
             if !a.exists() {
-                assert_ne!(backend, Backend::Csr, "seed {seed}: {f} missing");
-                continue; // csr.bin only exists on the CSR backend
+                // the index section is backend-specific: csr.bin only on
+                // the CSR backend, ccsr.bin only on CCSR
+                let owner = match f {
+                    "csr.bin" => Some(Backend::Csr),
+                    "ccsr.bin" => Some(Backend::Ccsr),
+                    _ => None,
+                };
+                assert_ne!(Some(backend), owner, "seed {seed}: {f} missing");
+                assert!(owner.is_some(), "seed {seed}: {f} missing");
+                continue;
             }
             assert_eq!(
                 std::fs::read(&a).unwrap(),

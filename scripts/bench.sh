@@ -101,4 +101,9 @@ echo "== exp wcoj (scale $SCALE, presets $PRESETS) =="
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --json "$ROOT/BENCH_wcoj.json"
 
-echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json, BENCH_persist.json, BENCH_estimator.json and BENCH_wcoj.json"
+echo "== exp compress (scale $SCALE, presets $PRESETS) =="
+./target/release/relcount exp compress \
+    --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
+    --json "$ROOT/BENCH_compress.json"
+
+echo "bench.sh: wrote BENCH_scaling.json, BENCH_planner.json, BENCH_churn.json, BENCH_serve.json, BENCH_persist.json, BENCH_estimator.json, BENCH_wcoj.json and BENCH_compress.json"

@@ -45,6 +45,10 @@ HEADLINES = {
         ("q_p50", "regret_saved_frac"),
     ),
     "BENCH_wcoj.json": (("database", "point"), ("speedup",)),
+    "BENCH_compress.json": (
+        ("database",),
+        ("bytes_per_pair_ccsr", "bytes_ratio"),
+    ),
 }
 
 

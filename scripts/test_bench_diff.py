@@ -34,6 +34,9 @@ ALL_FILES = {
     "BENCH_wcoj.json": [
         {"database": "tri_skew", "point": "R0+R1+R2", "speedup": 8.0}
     ],
+    "BENCH_compress.json": [
+        {"database": "tri_skew", "bytes_per_pair_ccsr": 5.0, "bytes_ratio": 3.2}
+    ],
 }
 
 
