@@ -52,7 +52,7 @@ fn main() -> relcount::Result<()> {
     for &workers in &workers_list {
         // serve_rows errors out on any in-protocol error or publish
         // failure, so a passing run IS the consistency claim
-        let rows = serve_rows(&cfg, workers, frac, steps, repeat)?;
+        let rows = serve_rows(&cfg, workers, frac, steps, repeat, 0, 1)?;
         print!("{}", render_serve(&rows));
         for preset in cfg.presets {
             let mine: Vec<&ServeRow> =

@@ -26,8 +26,10 @@ use crate::metrics::report::{
     ChurnRow, CompressRow, EstimatorRow, PersistRow, PlannerRow, RunRow,
     ScalingRow, ServeRow, Table4Row, Table5Row, WcojRow,
 };
+use crate::serve::replicate::{follow, ReplRecord};
 use crate::serve::{
-    enumerate_requests, run_serve, DeltaFeed, ServeEngine, ServeOptions,
+    enumerate_requests, run_router, run_serve, serve_listener, DeltaFeed,
+    ReplHandle, ReplLog, Replicator, ServeEngine, ServeOptions, ShardConfig,
 };
 use crate::strategies::adaptive::Adaptive;
 use crate::strategies::traits::StrategyConfig;
@@ -371,12 +373,23 @@ pub fn churn_rows(
 /// while a seeded churn stream publishes `churn_steps` generations
 /// concurrently.  Rows are per generation; any in-protocol error fails
 /// the experiment (served counts must never fail under churn).
+///
+/// With `shards > 0` a scale-out scenario runs per preset on top of the
+/// single-process rows: `shards` in-process shard listeners, one
+/// router, and `sessions` concurrent clients replaying the same
+/// workload through the router.  The routed responses are hard-checked
+/// byte-identical to the single-process reference, and the scenario
+/// rows carry the router-side columns (`shards`, `sessions`, p50/p99
+/// latency, `merge_overhead_s`) plus the peak `follower_lag` of a
+/// leader/follower replication replay (EXPERIMENTS.md §E18).
 pub fn serve_rows(
     cfg: &ExpConfig,
     workers: usize,
     churn_frac: f64,
     churn_steps: usize,
     repeat: usize,
+    shards: usize,
+    sessions: usize,
 ) -> Result<Vec<ServeRow>> {
     let workers = crate::coordinator::resolve_workers(workers);
     let mut rows = Vec::new();
@@ -425,6 +438,190 @@ pub fn serve_rows(
             )));
         }
         rows.extend(summary.rows);
+        if shards > 0 {
+            rows.extend(sharded_scenario_rows(
+                cfg,
+                name,
+                workers,
+                shards,
+                sessions.max(1),
+            )?);
+        }
+    }
+    Ok(rows)
+}
+
+/// The scale-out half of `exp serve` (see [`serve_rows`]): a full
+/// shard/router/replica topology on loopback, equivalence-gated against
+/// single-process serving.
+fn sharded_scenario_rows(
+    cfg: &ExpConfig,
+    name: &str,
+    workers: usize,
+    shards: usize,
+    sessions: usize,
+) -> Result<Vec<ServeRow>> {
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let base = MaintainConfig {
+        mem_budget: None,
+        workers,
+        max_chain_length: cfg.search.max_chain_length,
+        ..Default::default()
+    };
+    let fresh_db = || generate(&preset(name, cfg.scale, cfg.seed)?);
+    let shutdown_server = |addr: &str| -> Result<()> {
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(b"{\"op\": \"shutdown\", \"id\": 0}\n")?;
+        let mut ack = Vec::new();
+        std::io::BufReader::new(s).read_to_end(&mut ack)?;
+        Ok(())
+    };
+
+    // every shard loads the full database; the slice is per query
+    let mut addrs: Vec<String> = Vec::new();
+    let mut shard_threads = Vec::new();
+    for index in 0..shards {
+        let engine = ServeEngine::build(fresh_db()?, base)?;
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        addrs.push(listener.local_addr()?.to_string());
+        let opts = ServeOptions {
+            database: name.to_string(),
+            workers,
+            shard: Some(ShardConfig { index, of: shards }),
+            ..Default::default()
+        };
+        shard_threads.push(std::thread::spawn(move || {
+            serve_listener(engine, listener, &opts)
+        }));
+    }
+
+    let router_listener = TcpListener::bind("127.0.0.1:0")?;
+    let router_addr = router_listener.local_addr()?.to_string();
+    let router_db = fresh_db()?;
+    let router_opts =
+        ServeOptions { database: name.to_string(), ..Default::default() };
+    let router_shards = addrs.clone();
+    let router = std::thread::spawn(move || {
+        run_router(router_db, &router_shards, router_listener, &router_opts)
+    });
+
+    // single-process reference over the identical workload
+    let reqs = enumerate_requests(
+        &fresh_db()?,
+        cfg.search.max_chain_length,
+        usize::MAX,
+    )?;
+    let one_pass: String = reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+    let mut reference = Vec::new();
+    let ref_opts = ServeOptions {
+        database: name.to_string(),
+        workers,
+        ..Default::default()
+    };
+    run_serve(
+        ServeEngine::build(fresh_db()?, base)?,
+        std::io::Cursor::new(one_pass.clone()),
+        &mut reference,
+        &ref_opts,
+    )?;
+
+    let mut clients = Vec::new();
+    for _ in 0..sessions {
+        let input = one_pass.clone();
+        let addr = router_addr.clone();
+        clients.push(std::thread::spawn(move || -> std::io::Result<Vec<u8>> {
+            let mut s = TcpStream::connect(&addr)?;
+            s.write_all(input.as_bytes())?;
+            s.shutdown(std::net::Shutdown::Write)?;
+            let mut buf = Vec::new();
+            std::io::BufReader::new(s).read_to_end(&mut buf)?;
+            Ok(buf)
+        }));
+    }
+    for c in clients {
+        let got = c.join().expect("router client panicked")?;
+        if got != reference {
+            return Err(Error::Data(format!(
+                "exp serve: routed responses diverged from single-process \
+                 serving on {name} ({shards} shards)"
+            )));
+        }
+    }
+    shutdown_server(&router_addr)?;
+    let router_summary = router.join().expect("router thread panicked")?;
+    for a in &addrs {
+        shutdown_server(a)?;
+    }
+    for t in shard_threads {
+        let s = t.join().expect("shard thread panicked")?;
+        if s.errors > 0 {
+            return Err(Error::Data(format!(
+                "exp serve: {} partial-request errors on a {name} shard",
+                s.errors
+            )));
+        }
+    }
+    if router_summary.errors > 0 {
+        return Err(Error::Data(format!(
+            "exp serve: {} routed request errors on {name}",
+            router_summary.errors
+        )));
+    }
+
+    // replication replay: leader log -> follower, peak lag observed
+    let mut leader = ServeEngine::build(fresh_db()?, base)?;
+    let log = Arc::new(ReplLog::new());
+    for i in 0..3u64 {
+        let b = churn_batch(leader.db(), 0.05, cfg.seed ^ (i + 1));
+        leader.apply_publish(&b)?;
+        log.append(ReplRecord {
+            epoch: leader.epoch(),
+            digest: leader.digest(),
+            batch: b,
+        });
+    }
+    log.close();
+    let leader_listener = TcpListener::bind("127.0.0.1:0")?;
+    let leader_addr = leader_listener.local_addr()?.to_string();
+    let acceptor = Replicator::spawn(leader_listener, log)?;
+    let handle = Arc::new(ReplHandle::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let monitor = {
+        let handle = handle.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut peak = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                peak = peak.max(handle.lag());
+                std::thread::sleep(Duration::from_micros(200));
+            }
+            peak
+        })
+    };
+    let mut follower = ServeEngine::build(fresh_db()?, base)?;
+    let (applied, fails) = follow(
+        &leader_addr,
+        &mut follower,
+        Some(&handle),
+        Duration::from_millis(1),
+    );
+    stop.store(true, Ordering::Relaxed);
+    let peak_lag = monitor.join().expect("lag monitor panicked");
+    acceptor.shutdown();
+    if !fails.is_empty() || applied != 3 || follower.digest() != leader.digest() {
+        return Err(Error::Data(format!(
+            "exp serve: follower diverged from leader on {name}: applied \
+             {applied}/3, failures {fails:?}"
+        )));
+    }
+
+    let mut rows = router_summary.rows;
+    for r in &mut rows {
+        r.follower_lag = peak_lag as f64;
     }
     Ok(rows)
 }
@@ -891,7 +1088,7 @@ mod tests {
     #[test]
     fn serve_rows_shapes() {
         let cfg = ExpConfig { presets: &["uw"], ..tiny() };
-        let rows = serve_rows(&cfg, 2, 0.05, 1, 2).unwrap();
+        let rows = serve_rows(&cfg, 2, 0.05, 1, 2, 0, 1).unwrap();
         assert!(!rows.is_empty());
         let total: u64 = rows.iter().map(|r| r.requests).sum();
         assert!(total > 0);
@@ -899,11 +1096,27 @@ mod tests {
             assert_eq!(r.errors, 0, "{r:?}");
             assert_eq!(r.workers, 2);
             assert!(r.epoch <= 1);
+            assert_eq!(r.shards, 0, "unsharded rows carry shards = 0");
         }
         // static serving lands every request on generation 0
-        let quiet = serve_rows(&cfg, 1, 0.0, 0, 1).unwrap();
+        let quiet = serve_rows(&cfg, 1, 0.0, 0, 1, 0, 1).unwrap();
         assert_eq!(quiet.len(), 1);
         assert_eq!(quiet[0].epoch, 0);
+    }
+
+    #[test]
+    fn sharded_serve_scenario_rows_carry_scaleout_columns() {
+        let cfg = ExpConfig { presets: &["uw"], ..tiny() };
+        let rows = serve_rows(&cfg, 1, 0.0, 0, 1, 2, 2).unwrap();
+        // unsharded rows first, then the router scenario rows
+        let scenario: Vec<_> = rows.iter().filter(|r| r.shards == 2).collect();
+        assert!(!scenario.is_empty(), "{rows:?}");
+        for r in scenario {
+            assert_eq!(r.errors, 0, "{r:?}");
+            assert_eq!(r.epoch, 0, "static shards serve generation 0");
+            assert!(r.sessions >= 2, "{r:?}");
+            assert!(r.merge_overhead_s >= 0.0);
+        }
     }
 
     #[test]

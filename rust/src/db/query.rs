@@ -62,6 +62,29 @@ impl JoinStats {
 /// GROUP-BY counts over one entity table.  `vars` must all be
 /// `EntityAttr` of `et`.
 pub fn groupby_entity(db: &Database, et: usize, vars: &[RVar]) -> Result<CtTable> {
+    groupby_entity_filtered(db, et, vars, None)
+}
+
+/// Entity-hash shard assignment: which of `of` shards owns entity `id`
+/// of type `et`.  Deterministic and seed-free ([`shard_of`] over the
+/// unseeded `FxHasher`), so every process of a scale-out topology on the
+/// same platform computes the same ownership map without coordination.
+///
+/// [`shard_of`]: crate::coordinator::shard::shard_of
+pub fn entity_shard(et: usize, id: u32, of: usize) -> usize {
+    crate::coordinator::shard::shard_of(&(et, id), of)
+}
+
+/// [`groupby_entity`] restricted to the rows a shard owns: with
+/// `slice = Some((index, of))` only entities whose [`entity_shard`] is
+/// `index` contribute.  Summing the `of` partial tables reproduces the
+/// full GROUP-BY integer-exactly.
+pub fn groupby_entity_filtered(
+    db: &Database,
+    et: usize,
+    vars: &[RVar],
+    slice: Option<(usize, usize)>,
+) -> Result<CtTable> {
     for v in vars {
         match v {
             RVar::EntityAttr { et: e, .. } if *e == et => {}
@@ -71,6 +94,9 @@ pub fn groupby_entity(db: &Database, et: usize, vars: &[RVar]) -> Result<CtTable
                 )))
             }
         }
+    }
+    if let Some((index, of)) = slice {
+        check_slice(index, of)?;
     }
     let mut out = CtTable::new(&db.schema, vars.to_vec())?;
     let t = &db.entities[et];
@@ -83,12 +109,24 @@ pub fn groupby_entity(db: &Database, et: usize, vars: &[RVar]) -> Result<CtTable
         .collect();
     let mut vals = vec![0u32; attrs.len()];
     for i in 0..t.len() {
+        if let Some((index, of)) = slice {
+            if entity_shard(et, i, of) != index {
+                continue;
+            }
+        }
         for (j, &a) in attrs.iter().enumerate() {
             vals[j] = t.value(a, i);
         }
         out.add(&vals, 1)?;
     }
     Ok(out)
+}
+
+fn check_slice(index: usize, of: usize) -> Result<()> {
+    if of == 0 || index >= of {
+        return Err(Error::Ct(format!("bad shard slice {index}/{of}")));
+    }
+    Ok(())
 }
 
 /// Positive ct-table for a connected relationship chain over `vars`
@@ -106,11 +144,36 @@ pub fn positive_chain_ct(
     stats: &mut JoinStats,
 ) -> Result<CtTable> {
     match db.kernel() {
-        JoinKernel::Chain => chain_ct_bound(db, chain, vars, None, stats),
+        JoinKernel::Chain => chain_ct_bound(db, chain, vars, Restrict::All, stats),
         // the WCOJ twin: bit-identical counts and JoinStats, different
         // enumeration order (variable-at-a-time, DESIGN.md §3g)
         JoinKernel::Wcoj => crate::db::wcoj::wcoj_chain_ct(db, chain, vars, stats),
     }
+}
+
+/// The shard-`index`-of-`of` **partial** positive ct-table of a chain:
+/// GROUP-BY counts over exactly the join rows whose *anchor* entity —
+/// the chain's lowest-numbered population — is owned by shard `index`
+/// under [`entity_shard`].  Every join row of a connected chain grounds
+/// every population exactly once, so the anchor partitions the row set
+/// and summing the `of` partial tables reproduces
+/// [`positive_chain_ct`] integer-exactly (the scale-out router's merge
+/// invariant, DESIGN.md §3i).
+///
+/// Always runs the bound chain kernel regardless of `db.kernel()` (the
+/// WCOJ kernel has no anchor-bound variant); counts are kernel-identical
+/// by the project's bit-identity discipline, so merged results match
+/// single-process runs under either kernel.
+pub fn partial_chain_ct(
+    db: &Database,
+    chain: &[usize],
+    vars: &[RVar],
+    index: usize,
+    of: usize,
+    stats: &mut JoinStats,
+) -> Result<CtTable> {
+    check_slice(index, of)?;
+    chain_ct_bound(db, chain, vars, Restrict::Slice { index, of }, stats)
 }
 
 /// The positive-count **delta** of one tuple: GROUP-BY counts over
@@ -133,19 +196,35 @@ pub fn positive_chain_delta_ct(
             "delta rel {rel} not in chain {chain:?}"
         )));
     }
-    chain_ct_bound(db, chain, vars, Some((rel, tuple)), stats)
+    chain_ct_bound(db, chain, vars, Restrict::Tuple { rel, tuple }, stats)
 }
 
-/// Shared core of [`positive_chain_ct`] / [`positive_chain_delta_ct`]:
-/// when `bound` is set, the enumeration starts with that relationship's
-/// endpoints pinned to the given tuple, so only join rows through it are
-/// visited (the join reaches the pinned rel fully bound and the pair
-/// lookup confirms the single tuple).
+/// Which join rows one [`chain_ct_bound`] run visits.
+#[derive(Clone, Copy)]
+enum Restrict {
+    /// Every join row (the full positive table).
+    All,
+    /// Only rows through one pinned relationship tuple (delta counting).
+    Tuple { rel: usize, tuple: u32 },
+    /// Only rows whose anchor entity hashes to shard `index` of `of`
+    /// (partial counting; see [`partial_chain_ct`]).
+    Slice { index: usize, of: usize },
+}
+
+/// Shared core of [`positive_chain_ct`] / [`positive_chain_delta_ct`] /
+/// [`partial_chain_ct`]: a `Tuple` restriction starts the enumeration
+/// with that relationship's endpoints pinned to the given tuple, so only
+/// join rows through it are visited (the join reaches the pinned rel
+/// fully bound and the pair lookup confirms the single tuple); a `Slice`
+/// restriction loops the shard's owned anchor-entity ids through the
+/// same pinned-binding path.  Pinned bindings are exact: the count-only
+/// kernels never collapse an already-bound entity, and `enumerate_join`
+/// unsets only the bindings it set itself.
 fn chain_ct_bound(
     db: &Database,
     chain: &[usize],
     vars: &[RVar],
-    bound: Option<(usize, u32)>,
+    restrict: Restrict,
     stats: &mut JoinStats,
 ) -> Result<CtTable> {
     let plan = plan_chain(db, chain)?;
@@ -212,7 +291,7 @@ fn chain_ct_bound(
         }
     }
     let mut binding: Vec<Option<u32>> = vec![None; n_ets];
-    if let Some((rel, tuple)) = bound {
+    if let Restrict::Tuple { rel, tuple } = restrict {
         let t = &db.rels[rel];
         if tuple >= t.len() {
             return Err(Error::Ct(format!(
@@ -228,30 +307,38 @@ fn chain_ct_bound(
     let mut tuples: Vec<u32> = vec![0; plan.join_order.len()];
     let mut rows = 0u64;
     let cx = JoinCx { db, order: &plan.join_order, shape };
-    enumerate_join(
-        &cx,
-        0,
-        1,
-        &mut binding,
-        &mut tuples,
-        &mut |binding, tuples, mult| {
-            let mut key = base;
-            for a in &accesses {
-                key += match *a {
-                    Access::Ent { et, attr, stride } => {
-                        db.entities[et].value(attr, binding[et].expect("bound"))
-                            as u128
-                            * stride
-                    }
-                    Access::Rel { rel, jp, attr, stride } => {
-                        db.rels[rel].value(attr, tuples[jp]) as u128 * stride
-                    }
-                };
+    let mut emit = |binding: &[Option<u32>], tuples: &[u32], mult: i128| {
+        let mut key = base;
+        for a in &accesses {
+            key += match *a {
+                Access::Ent { et, attr, stride } => {
+                    db.entities[et].value(attr, binding[et].expect("bound"))
+                        as u128
+                        * stride
+                }
+                Access::Rel { rel, jp, attr, stride } => {
+                    db.rels[rel].value(attr, tuples[jp]) as u128 * stride
+                }
+            };
+        }
+        rows += mult as u64;
+        out.add_key(key, mult)
+    };
+    if let Restrict::Slice { index, of } = restrict {
+        // anchor = the chain's lowest-numbered population; every join
+        // row grounds it exactly once, so slicing by its owner shard
+        // partitions the row set (partial_chain_ct's merge invariant)
+        let anchor = plan.pops[0];
+        for id in 0..db.entities[anchor].len() {
+            if entity_shard(anchor, id, of) != index {
+                continue;
             }
-            rows += mult as u64;
-            out.add_key(key, mult)
-        },
-    )?;
+            binding[anchor] = Some(id);
+            enumerate_join(&cx, 0, 1, &mut binding, &mut tuples, &mut emit)?;
+        }
+    } else {
+        enumerate_join(&cx, 0, 1, &mut binding, &mut tuples, &mut emit)?;
+    }
     stats.rows_enumerated += rows;
     Ok(out)
 }
@@ -581,6 +668,86 @@ mod tests {
             assert_eq!(acc.n_rows(), full.n_rows(), "chain {chain:?}");
             for (v, c) in full.iter_rows() {
                 assert_eq!(acc.get(&v).unwrap(), c, "chain {chain:?} {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partials_sum_to_full_positive_ct() {
+        // summing the per-shard partial tables over every shard must
+        // reproduce the full chain count (each join row grounds the
+        // anchor population exactly once, so anchor ownership
+        // partitions the row set) — the scale-out router's merge
+        // invariant
+        let db = university_db();
+        let vars = vec![
+            RVar::EntityAttr { et: 1, attr: 0 },
+            RVar::RelAttr { rel: 0, attr: 1 },
+        ];
+        for chain in [vec![0usize], vec![0, 1]] {
+            for of in [1usize, 2, 3] {
+                let mut stats = JoinStats::default();
+                let full =
+                    positive_chain_ct(&db, &chain, &vars, &mut stats).unwrap();
+                let mut acc =
+                    crate::ct::cttable::CtTable::new(&db.schema, vars.clone())
+                        .unwrap();
+                for index in 0..of {
+                    let p = partial_chain_ct(
+                        &db, &chain, &vars, index, of, &mut stats,
+                    )
+                    .unwrap();
+                    acc.add_table(&p).unwrap();
+                }
+                assert_eq!(acc.n_rows(), full.n_rows(), "chain {chain:?} of {of}");
+                for (v, c) in full.iter_rows() {
+                    assert_eq!(
+                        acc.get(&v).unwrap(),
+                        c,
+                        "chain {chain:?} of {of} {v:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_partial_marginals_sum_to_full_groupby() {
+        let db = university_db();
+        let vars = vec![RVar::EntityAttr { et: 0, attr: 0 }];
+        let full = groupby_entity(&db, 0, &vars).unwrap();
+        for of in [1usize, 2, 4] {
+            let mut acc =
+                crate::ct::cttable::CtTable::new(&db.schema, vars.clone()).unwrap();
+            for index in 0..of {
+                let p = groupby_entity_filtered(&db, 0, &vars, Some((index, of)))
+                    .unwrap();
+                acc.add_table(&p).unwrap();
+            }
+            for (v, c) in full.iter_rows() {
+                assert_eq!(acc.get(&v).unwrap(), c, "of {of} {v:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn partial_rejects_bad_slices() {
+        let db = university_db();
+        let mut stats = JoinStats::default();
+        assert!(partial_chain_ct(&db, &[0], &[], 0, 0, &mut stats).is_err());
+        assert!(partial_chain_ct(&db, &[0], &[], 2, 2, &mut stats).is_err());
+        assert!(groupby_entity_filtered(&db, 0, &[], Some((3, 2))).is_err());
+    }
+
+    #[test]
+    fn entity_shard_is_stable_and_in_range() {
+        for of in [1usize, 2, 5] {
+            for et in 0..3usize {
+                for id in 0..50u32 {
+                    let s = entity_shard(et, id, of);
+                    assert!(s < of);
+                    assert_eq!(s, entity_shard(et, id, of), "deterministic");
+                }
             }
         }
     }

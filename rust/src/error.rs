@@ -46,6 +46,15 @@ pub enum Error {
     /// the corrupt artifact.
     Persist { section: String, msg: String },
 
+    /// The sharded-count router could not assemble an exact answer: a
+    /// shard connection died, a reconstructed partial table failed its
+    /// digest check, or shards disagreed on epoch/state.
+    Route(String),
+
+    /// Generation replication failed (leader stream ended abnormally or
+    /// a follower's published epoch digest diverged from the leader's).
+    Replicate(String),
+
     Io(std::io::Error),
 }
 
@@ -69,6 +78,8 @@ impl fmt::Display for Error {
             Error::Persist { section, msg } => {
                 write!(f, "persist error in section '{section}': {msg}")
             }
+            Error::Route(m) => write!(f, "route error: {m}"),
+            Error::Replicate(m) => write!(f, "replicate error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

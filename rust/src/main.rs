@@ -10,6 +10,9 @@
 //!              [--mode auto|delta|recount] [--workers N|auto] [--out <dir>]
 //!   serve      --preset <name>|--db <dir>|--data-dir <dir> [--port N]
 //!              [--data-dir <dir> --snapshot-every N --snapshot-retain N]
+//!              [--replicate-port N | --follow ADDR]
+//!   shard      --index I --of K + serve flags   (one partition slice)
+//!   route      --shards host:port,... [--port N]  (merge shard partials)
 //!   snapshot   save|verify|load                        (snapshot tooling)
 //!   exp        fig3|fig4|table4|table5|scaling|churn|serve|persist|estimator
 //!              |wcoj|compress --scale <f> --budget-s <n>
@@ -27,6 +30,7 @@
 use std::io::{BufRead, BufReader};
 use std::path::Path;
 use std::process::ExitCode;
+use std::sync::Arc;
 use std::time::Duration;
 
 use relcount::bench::driver::{
@@ -57,8 +61,9 @@ use relcount::metrics::report::{
 };
 use relcount::runtime::client::Runtime;
 use relcount::serve::{
-    enumerate_requests, parse_delta_stream, run_serve, serve_listener, DeltaFeed,
-    ServeEngine, ServeOptions,
+    enumerate_requests, parse_delta_stream, run_router, run_serve,
+    serve_listener, DeltaFeed, ReplHandle, ReplLog, Replicator, ServeEngine,
+    ServeOptions, ShardConfig,
 };
 use relcount::strategies::traits::{CountingStrategy, StrategyConfig};
 use relcount::strategies::StrategyKind;
@@ -80,10 +85,15 @@ USAGE:
                      [--workers N|auto] [--out <dir>]
   relcount serve     (--preset <name> | --db <dir> | --data-dir <dir>)
                      [--requests FILE | --port N]
-                     [--deltas FILE | --churn F --churn-steps K]
+                     [--deltas FILE | --churn F --churn-steps K
+                      | --follow ADDR] [--replicate-port N]
                      [--workers N|auto] [--mem-budget ...] [--batch-max N]
                      [--delta-pause-ms N] [--snapshot-every N]
                      [--snapshot-retain N] [--json FILE]
+  relcount shard     --index I --of K + the same flags as serve
+  relcount route     (--preset <name> | --db <dir>)
+                     --shards host:port[,host:port...] [--port N]
+                     [--batch-max N] [--json FILE]
   relcount snapshot  save (--preset <name> | --db <dir>) --out <dir>
                      | verify --dir <snapshot dir> | load --dir <snapshot dir>
   relcount gen-requests (--preset <name> | --db <dir>) [--limit N] [--out FILE]
@@ -134,6 +144,26 @@ USAGE:
   --snapshot-retain N (default 2, minimum 1) keeps the newest N
   snapshot epochs on disk; each save prunes older epochs and trims the
   WAL through the oldest retained epoch.
+  `shard` is `serve` for one slice of the entity-hash partition: the
+  process answers `pcount`/`pmarginal` partial-count requests for the
+  anchor entities it owns (--index I --of K) and recovers its slice
+  from its own --data-dir like any serve process.  `route` fans count
+  and score requests out to the shard processes, digest-checks every
+  partial table on the wire, sums the positive partials and runs the
+  Möbius/negative completion once at the router, so routed responses
+  are byte-identical to single-process `serve`; shards answering at
+  diverging epochs or state digests are a hard `route error`.
+  --replicate-port turns a serving leader into a replication source:
+  every published generation is streamed (epoch, digest, batch) to
+  followers.  `serve --follow ADDR` consumes that stream, independently
+  apply-publishes every batch, hard-checks each published digest
+  against the leader's, and reports lag/health through `stats` and a
+  final `replica:` summary line.
+  `exp serve --shards K --sessions S` additionally stands up a live
+  K-shard + router topology on localhost, byte-compares S concurrent
+  routed sessions against single-process serving, replays the publish
+  log through a follower (hard-failing on digest divergence) and
+  reports merge overhead and peak follower lag per row.
   `snapshot save/verify/load` manage standalone snapshot directories;
   `verify` proves a snapshot can reproduce its manifest digest and
   names the corrupt section otherwise.
@@ -408,8 +438,33 @@ fn run() -> Result<()> {
             }
             Ok(())
         }
-        Some("serve") => {
-            let feed = if let Some(path) = args.get("deltas") {
+        Some("serve") | Some("shard") => {
+            // `relcount shard` is `serve` plus a slice identity: the
+            // engine answers `pcount`/`pmarginal` over the anchor
+            // entities it owns and the router owns the merge.
+            let shard_cfg = if args.command.as_deref() == Some("shard") {
+                let of = args.get_usize("of", 0)?;
+                let index = args.get_usize("index", 0)?;
+                if of == 0 || index >= of {
+                    return Err(Error::Data(
+                        "shard needs --index I --of K with I < K".into(),
+                    ));
+                }
+                Some(ShardConfig { index, of })
+            } else {
+                None
+            };
+            let follow = args.get("follow").map(str::to_string);
+            let feed = if let Some(addr) = follow.clone() {
+                if args.get("deltas").is_some() || args.get("churn").is_some() {
+                    return Err(Error::Data(
+                        "--follow consumes the leader's delta stream: drop \
+                         --deltas/--churn"
+                            .into(),
+                    ));
+                }
+                DeltaFeed::Follow { addr }
+            } else if let Some(path) = args.get("deltas") {
                 let text = std::fs::read_to_string(path)?;
                 DeltaFeed::Batches(parse_delta_stream(&text)?)
             } else if args.get("churn").is_some() {
@@ -488,6 +543,35 @@ fn run() -> Result<()> {
                     root.display()
                 );
             }
+            // --replicate-port makes this process a replication
+            // leader: every published batch lands in a shared log that
+            // the acceptor thread streams to followers.
+            let (publish_log, replicator) = match args.get("replicate-port") {
+                Some(port) => {
+                    let port: u16 = port.parse().map_err(|_| {
+                        Error::Data(format!(
+                            "--replicate-port expects a TCP port, got {port:?}"
+                        ))
+                    })?;
+                    let listener =
+                        std::net::TcpListener::bind(("127.0.0.1", port))?;
+                    eprintln!(
+                        "replicating on {} (follow with --follow ADDR)",
+                        listener.local_addr()?
+                    );
+                    let log = Arc::new(ReplLog::new());
+                    let acceptor = Replicator::spawn(listener, log.clone())?;
+                    (Some(log), Some(acceptor))
+                }
+                None => (None, None),
+            };
+            let repl = follow.as_ref().map(|_| Arc::new(ReplHandle::new()));
+            if let Some(sc) = &shard_cfg {
+                eprintln!(
+                    "shard {}/{} of the entity-hash partition",
+                    sc.index, sc.of
+                );
+            }
             let opts = ServeOptions {
                 database: name.clone(),
                 workers: args.workers()?,
@@ -496,6 +580,9 @@ fn run() -> Result<()> {
                 delta_pause: Duration::from_millis(
                     args.get_usize("delta-pause-ms", 0)? as u64,
                 ),
+                shard: shard_cfg,
+                repl: repl.clone(),
+                publish_log,
             };
             let summary = if let Some(port) = args.get("port") {
                 let port: u16 = port.parse().map_err(|_| {
@@ -533,6 +620,64 @@ fn run() -> Result<()> {
                 summary.publishes,
                 summary.final_epoch,
                 summary.final_digest
+            );
+            if let Some(acceptor) = replicator {
+                acceptor.shutdown();
+            }
+            if let Some(h) = &repl {
+                eprintln!(
+                    "replica: applied epoch {} of leader epoch {} (lag {}, {})",
+                    h.applied_epoch(),
+                    h.leader_epoch(),
+                    h.lag(),
+                    if h.healthy() { "healthy" } else { "DIVERGED" }
+                );
+            }
+            write_json(&args, serve_rows_to_json(&summary.rows))?;
+            Ok(())
+        }
+        Some("route") => {
+            // The router never counts locally: it fans pcount/pmarginal
+            // out to the shards, digest-checks each partial, sums the
+            // positives and runs the Möbius completion once, so its
+            // responses are byte-identical to single-process serving.
+            let shards: Vec<String> = args
+                .get("shards")
+                .ok_or_else(|| {
+                    Error::Data(
+                        "route needs --shards host:port[,host:port...]".into(),
+                    )
+                })?
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            let (name, db) = load_db(&args)?;
+            let port: u16 = args.get_or("port", "0").parse().map_err(|_| {
+                Error::Data("--port expects a TCP port".into())
+            })?;
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+            eprintln!(
+                "routing {name} over {} shards on {} (send \
+                 {{\"op\":\"shutdown\"}} to stop)",
+                shards.len(),
+                listener.local_addr()?
+            );
+            let opts = ServeOptions {
+                database: name.clone(),
+                batch_max: args.get_usize("batch-max", 64)?,
+                ..Default::default()
+            };
+            let summary = run_router(db, &shards, listener, &opts)?;
+            eprint!("{}", render_serve(&summary.rows));
+            eprintln!(
+                "route: {} requests ({} errors) over {} sessions, merge \
+                 overhead {:.3} ms, final epoch {}",
+                summary.requests,
+                summary.errors,
+                summary.sessions,
+                summary.merge_wall.as_secs_f64() * 1e3,
+                summary.final_epoch
             );
             write_json(&args, serve_rows_to_json(&summary.rows))?;
             Ok(())
@@ -663,7 +808,10 @@ fn run() -> Result<()> {
                     let frac = args.get_f64("churn-frac", 0.05)?;
                     let steps = args.get_usize("churn-steps", 3)?;
                     let repeat = args.get_usize("repeat", 4)?;
-                    let rows = serve_rows(&cfg, workers, frac, steps, repeat)?;
+                    let shards = args.get_usize("shards", 0)?;
+                    let sessions = args.get_usize("sessions", 2)?;
+                    let rows =
+                        serve_rows(&cfg, workers, frac, steps, repeat, shards, sessions)?;
                     print!("{}", render_serve(&rows));
                     write_json(&args, serve_rows_to_json(&rows))?;
                 }

@@ -407,6 +407,20 @@ pub struct ServeRow {
     /// Requests per second over this generation's serving window.
     pub throughput_rps: f64,
     pub workers: usize,
+    /// Nearest-rank latency percentiles over the (capped) sample set.
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    /// Shard count of the topology the requests went through (0 =
+    /// unsharded single-process serving).
+    pub shards: usize,
+    /// Client sessions that contributed to this row (1 for stdin mode).
+    pub sessions: u64,
+    /// Mean per-request wall time the router spent reconstructing and
+    /// merging shard partials (0 when unsharded).
+    pub merge_overhead_s: f64,
+    /// Peak leader-minus-applied epoch gap observed on a follower
+    /// while it replayed the run (0 without replication).
+    pub follower_lag: f64,
 }
 
 /// Render a serve session's per-generation rows (`exp serve` and the
@@ -414,33 +428,41 @@ pub struct ServeRow {
 pub fn render_serve(rows: &[ServeRow]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:<16} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>10} {:>10} {:>10}\n",
+        "{:<16} {:>6} {:>6} {:>8} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>9} {:>9} {:>9} {:>10} {:>9}\n",
         "database",
         "epoch",
+        "shards",
+        "sessions",
         "requests",
         "counts",
         "scores",
         "errors",
         "batches",
         "queue",
-        "mean_ms",
-        "max_ms",
-        "req_per_s"
+        "p50_ms",
+        "p99_ms",
+        "merge_ms",
+        "req_per_s",
+        "lag"
     ));
     for r in rows {
         out.push_str(&format!(
-            "{:<16} {:>6} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>10.3} {:>10.3} {:>10.1}\n",
+            "{:<16} {:>6} {:>6} {:>8} {:>8} {:>7} {:>7} {:>7} {:>8} {:>7} {:>9.3} {:>9.3} {:>9.3} {:>10.1} {:>9.1}\n",
             r.database,
             r.epoch,
+            r.shards,
+            r.sessions,
             r.requests,
             r.count_requests,
             r.score_requests,
             r.errors,
             r.batches,
             r.max_queue_depth,
-            r.mean_latency.as_secs_f64() * 1e3,
-            r.max_latency.as_secs_f64() * 1e3,
-            r.throughput_rps
+            r.p50_latency_s * 1e3,
+            r.p99_latency_s * 1e3,
+            r.merge_overhead_s * 1e3,
+            r.throughput_rps,
+            r.follower_lag
         ));
     }
     out
@@ -464,8 +486,14 @@ pub fn serve_rows_to_json(rows: &[ServeRow]) -> Json {
                     ("max_queue_depth", Json::Num(r.max_queue_depth as f64)),
                     ("mean_latency_s", Json::Num(r.mean_latency.as_secs_f64())),
                     ("max_latency_s", Json::Num(r.max_latency.as_secs_f64())),
+                    ("p50_latency_s", Json::Num(r.p50_latency_s)),
+                    ("p99_latency_s", Json::Num(r.p99_latency_s)),
                     ("throughput_rps", Json::Num(r.throughput_rps)),
                     ("workers", Json::Num(r.workers as f64)),
+                    ("shards", Json::Num(r.shards as f64)),
+                    ("sessions", Json::Num(r.sessions as f64)),
+                    ("merge_overhead_s", Json::Num(r.merge_overhead_s)),
+                    ("follower_lag", Json::Num(r.follower_lag)),
                 ])
             })
             .collect(),
@@ -1020,6 +1048,12 @@ mod tests {
             max_latency: Duration::from_millis(2),
             throughput_rps: 1234.5,
             workers: 4,
+            p50_latency_s: 0.000_25,
+            p99_latency_s: 0.001_75,
+            shards: 2,
+            sessions: 3,
+            merge_overhead_s: 0.000_125,
+            follower_lag: 0.0,
         }
     }
 
@@ -1028,7 +1062,9 @@ mod tests {
         let s = render_serve(&[serve_row()]);
         assert!(s.contains("uw"));
         assert!(s.contains("1234.5"));
-        assert!(s.contains("0.250")); // mean latency in ms
+        assert!(s.contains("0.250")); // p50 latency in ms
+        assert!(s.contains("1.750")); // p99 latency in ms
+        assert!(s.contains("shards") && s.contains("sessions"));
     }
 
     #[test]
@@ -1040,6 +1076,11 @@ mod tests {
         assert_eq!(row.get("requests").unwrap().as_f64(), Some(40.0));
         assert_eq!(row.get("throughput_rps").unwrap().as_f64(), Some(1234.5));
         assert_eq!(row.get("workers").unwrap().as_f64(), Some(4.0));
+        assert_eq!(row.get("shards").unwrap().as_f64(), Some(2.0));
+        assert_eq!(row.get("sessions").unwrap().as_f64(), Some(3.0));
+        assert_eq!(row.get("p50_latency_s").unwrap().as_f64(), Some(0.000_25));
+        assert_eq!(row.get("merge_overhead_s").unwrap().as_f64(), Some(0.000_125));
+        assert_eq!(row.get("follower_lag").unwrap().as_f64(), Some(0.0));
     }
 
     fn estimator_row() -> EstimatorRow {

@@ -20,7 +20,19 @@
 //! - [`server`] — the threaded front-end: a request pump, a
 //!   micro-batching dispatch loop over the reader pool (one generation
 //!   load per batch — a batch never straddles a publish), and the
-//!   concurrent delta writer, on stdin or a TCP listener.
+//!   concurrent delta writer, on stdin or a TCP listener.  TCP mode is
+//!   a readiness-polled non-blocking event loop: many sessions on one
+//!   thread, per-session buffers, one session's failure isolated from
+//!   the rest;
+//! - [`shard`] / [`router`] — scale-out: `relcount shard` processes
+//!   answer `pcount`/`pmarginal` with entity-hash partial tables, and
+//!   `relcount route` merges the digest-checked partials (positives
+//!   sum; the Möbius/negative completion runs once at the router) into
+//!   responses byte-identical to single-process serving;
+//! - [`replicate`] — generation replication: a leader streams its
+//!   epoch-stamped publish log to followers, which independently
+//!   apply-publish each batch and hard-check the resulting digest
+//!   (divergence stops consumption and marks the follower unhealthy).
 //!
 //! The correctness contract extends the delta subsystem's differential
 //! one: every answer a reader ever observes is bit-identical to a
@@ -34,13 +46,19 @@
 
 pub mod engine;
 pub mod protocol;
+pub mod replicate;
+pub mod router;
 pub mod server;
+pub mod shard;
 pub mod snapshot;
 
 pub use engine::{serve_batch, ServeEngine};
 pub use protocol::{enumerate_requests, ServeRequest};
+pub use replicate::{ReplHandle, ReplLog, Replicator};
+pub use router::{run_router, Router, RouterSummary};
 pub use server::{
     parse_delta_stream, run_serve, serve_listener, DeltaFeed, ServeOptions,
     ServeSummary,
 };
+pub use shard::ShardConfig;
 pub use snapshot::{Generation, SnapshotStore};

@@ -49,6 +49,13 @@ pub enum ServeRequest {
     /// Ask the server to stop accepting sessions (TCP mode; on stdin
     /// the session simply ends at input EOF).
     Shutdown { id: u64 },
+    /// Shard-internal: the partial positive table of one chain (only
+    /// the join rows whose anchor entity the shard owns).  Answered by
+    /// `relcount shard` processes; the router merges the partials.
+    PCount { id: u64, chain: Vec<usize>, vars: Vec<RVar> },
+    /// Shard-internal: the partial entity GROUP-BY of one population
+    /// (only the entities the shard owns).
+    PMarginal { id: u64, et: usize, vars: Vec<RVar> },
 }
 
 impl ServeRequest {
@@ -57,7 +64,9 @@ impl ServeRequest {
             ServeRequest::Count { id, .. }
             | ServeRequest::Score { id, .. }
             | ServeRequest::Stats { id }
-            | ServeRequest::Shutdown { id } => id,
+            | ServeRequest::Shutdown { id }
+            | ServeRequest::PCount { id, .. }
+            | ServeRequest::PMarginal { id, .. } => id,
         }
     }
 
@@ -88,8 +97,22 @@ impl ServeRequest {
             }),
             "stats" => Ok(ServeRequest::Stats { id }),
             "shutdown" => Ok(ServeRequest::Shutdown { id }),
+            "pcount" => Ok(ServeRequest::PCount {
+                id,
+                chain: usize_arr(&j, "chain")?,
+                vars: vars_of(&j)?,
+            }),
+            "pmarginal" => Ok(ServeRequest::PMarginal {
+                id,
+                et: j
+                    .req("et")?
+                    .as_usize()
+                    .ok_or_else(|| Error::Data("`et` must be an entity id".into()))?,
+                vars: vars_of(&j)?,
+            }),
             other => Err(Error::Data(format!(
-                "unknown op {other:?} (count | score | stats | shutdown)"
+                "unknown op {other:?} (count | score | stats | shutdown | \
+                 pcount | pmarginal)"
             ))),
         }
     }
@@ -120,6 +143,18 @@ impl ServeRequest {
                 ("id", Json::num(*id as f64)),
                 ("op", Json::str("shutdown")),
             ]),
+            ServeRequest::PCount { id, chain, vars } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("pcount")),
+                ("chain", usizes_to_json(chain)),
+                ("vars", vars_to_json(vars)),
+            ]),
+            ServeRequest::PMarginal { id, et, vars } => Json::obj(vec![
+                ("id", Json::num(*id as f64)),
+                ("op", Json::str("pmarginal")),
+                ("et", Json::num(*et as f64)),
+                ("vars", vars_to_json(vars)),
+            ]),
         }
     }
 }
@@ -134,13 +169,18 @@ fn vars_of(j: &Json) -> Result<Vec<RVar>> {
 }
 
 fn ctx_of(j: &Json) -> Result<Vec<usize>> {
-    j.req("ctx")?
+    usize_arr(j, "ctx")
+}
+
+fn usize_arr(j: &Json, key: &str) -> Result<Vec<usize>> {
+    j.req(key)?
         .as_arr()
-        .ok_or_else(|| Error::Data("`ctx` must be an array".into()))?
+        .ok_or_else(|| Error::Data(format!("`{key}` must be an array")))?
         .iter()
         .map(|x| {
-            x.as_usize()
-                .ok_or_else(|| Error::Data("`ctx` entries must be entity ids".into()))
+            x.as_usize().ok_or_else(|| {
+                Error::Data(format!("`{key}` entries must be non-negative integers"))
+            })
         })
         .collect()
 }
@@ -197,30 +237,67 @@ fn usizes_to_json(xs: &[usize]) -> Json {
     Json::Arr(xs.iter().map(|&x| Json::num(x as f64)).collect())
 }
 
-/// Successful count response: sorted rows, exact-content digest, epoch.
-pub fn count_response(id: u64, epoch: u64, ct: &CtTable) -> Json {
+/// Sorted `[value codes..., count]` rows plus their total, the shared
+/// table payload of count and partial responses.  Counts are carried as
+/// JSON numbers (exact up to 2^53); the digest hashes the exact `i128`
+/// values, so a truncated count is detectable downstream.
+fn rows_json(ct: &CtTable) -> (Json, i128) {
     let mut rows: Vec<(Vec<u32>, i128)> = ct.iter_rows().collect();
     rows.sort();
     let total: i128 = rows.iter().map(|&(_, c)| c).sum();
+    let arr = Json::Arr(
+        rows.into_iter()
+            .map(|(vals, c)| {
+                let mut row: Vec<Json> =
+                    vals.into_iter().map(|v| Json::num(v as f64)).collect();
+                row.push(Json::num(c as f64));
+                Json::Arr(row)
+            })
+            .collect(),
+    );
+    (arr, total)
+}
+
+/// Successful count response: sorted rows, exact-content digest, epoch.
+pub fn count_response(id: u64, epoch: u64, ct: &CtTable) -> Json {
+    let (rows, total) = rows_json(ct);
     Json::obj(vec![
         ("digest", Json::str(format!("{:016x}", ct.digest()))),
         ("epoch", Json::num(epoch as f64)),
         ("id", Json::num(id as f64)),
         ("ok", Json::Bool(true)),
         ("op", Json::str("count")),
-        (
-            "rows",
-            Json::Arr(
-                rows.into_iter()
-                    .map(|(vals, c)| {
-                        let mut row: Vec<Json> =
-                            vals.into_iter().map(|v| Json::num(v as f64)).collect();
-                        row.push(Json::num(c as f64));
-                        Json::Arr(row)
-                    })
-                    .collect(),
-            ),
-        ),
+        ("rows", rows),
+        ("total", Json::num(total as f64)),
+    ])
+}
+
+/// Successful partial-count response from one shard: the shard's slice
+/// of a positive table (or entity marginal), its exact-content digest,
+/// the serving epoch, the shard coordinates, and the shard's generation
+/// digest (`state`) — the router re-derives the table digest from the
+/// reconstructed rows and cross-checks `epoch`/`state` across shards,
+/// so wire corruption and divergent replicas both surface as typed
+/// route errors instead of silently wrong merged counts.
+pub fn partial_response(
+    id: u64,
+    epoch: u64,
+    state: u64,
+    index: usize,
+    of: usize,
+    ct: &CtTable,
+) -> Json {
+    let (rows, total) = rows_json(ct);
+    Json::obj(vec![
+        ("digest", Json::str(format!("{:016x}", ct.digest()))),
+        ("epoch", Json::num(epoch as f64)),
+        ("id", Json::num(id as f64)),
+        ("of", Json::num(of as f64)),
+        ("ok", Json::Bool(true)),
+        ("op", Json::str("partial")),
+        ("rows", rows),
+        ("shard", Json::num(index as f64)),
+        ("state", Json::str(format!("{state:016x}"))),
         ("total", Json::num(total as f64)),
     ])
 }
@@ -238,14 +315,31 @@ pub fn score_response(id: u64, epoch: u64, score: f64) -> Json {
 
 /// Stats response for one generation.
 pub fn stats_response(id: u64, epoch: u64, resident_bytes: usize, digest: u64) -> Json {
-    Json::obj(vec![
+    stats_response_ext(id, epoch, resident_bytes, digest, Vec::new())
+}
+
+/// [`stats_response`] with role-specific fields appended (shard
+/// coordinates on shards; leader/follower epochs, lag and health on
+/// replicas).  Single-role servers emit no extra keys, so the plain
+/// stats wire shape — and every byte-identity test over it — is
+/// untouched.
+pub fn stats_response_ext(
+    id: u64,
+    epoch: u64,
+    resident_bytes: usize,
+    digest: u64,
+    extra: Vec<(&str, Json)>,
+) -> Json {
+    let mut fields = vec![
         ("digest", Json::str(format!("{digest:016x}"))),
         ("epoch", Json::num(epoch as f64)),
         ("id", Json::num(id as f64)),
         ("ok", Json::Bool(true)),
         ("op", Json::str("stats")),
         ("resident_bytes", Json::num(resident_bytes as f64)),
-    ])
+    ];
+    fields.extend(extra);
+    Json::obj(fields)
 }
 
 /// Shutdown acknowledgement.
@@ -331,11 +425,58 @@ mod tests {
                 n_prime: 2.0,
             },
             ServeRequest::Stats { id: 2 },
+            ServeRequest::PCount {
+                id: 3,
+                chain: vec![0, 1],
+                vars: vec![RVar::EntityAttr { et: 1, attr: 0 }],
+            },
+            ServeRequest::PMarginal {
+                id: 4,
+                et: 0,
+                vars: vec![RVar::EntityAttr { et: 0, attr: 0 }],
+            },
         ];
         for r in reqs {
             let line = r.to_json().dump();
             assert_eq!(ServeRequest::parse(&line).unwrap(), r, "{line}");
         }
+    }
+
+    #[test]
+    fn partial_response_carries_shard_coordinates_and_state() {
+        let s = university_schema();
+        let mut t = CtTable::new(&s, vec![RVar::EntityAttr { et: 1, attr: 0 }]).unwrap();
+        t.add(&[1], 4).unwrap();
+        let j = partial_response(7, 3, 0xabcd, 1, 2, &t);
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back.get("op").unwrap().as_str(), Some("partial"));
+        assert_eq!(back.get("shard").unwrap().as_f64(), Some(1.0));
+        assert_eq!(back.get("of").unwrap().as_f64(), Some(2.0));
+        assert_eq!(back.get("state").unwrap().as_str(), Some("000000000000abcd"));
+        assert_eq!(back.get("total").unwrap().as_f64(), Some(4.0));
+        assert_eq!(
+            back.get("digest").unwrap().as_str(),
+            Some(format!("{:016x}", t.digest()).as_str())
+        );
+    }
+
+    #[test]
+    fn extended_stats_appends_role_fields_without_reshaping_the_base() {
+        let plain = stats_response(1, 2, 64, 9).dump();
+        let ext = stats_response_ext(
+            1,
+            2,
+            64,
+            9,
+            vec![("role", Json::str("follower")), ("lag", Json::num(3.0))],
+        )
+        .dump();
+        assert_ne!(plain, ext);
+        let back = Json::parse(&ext).unwrap();
+        assert_eq!(back.get("role").unwrap().as_str(), Some("follower"));
+        assert_eq!(back.get("lag").unwrap().as_f64(), Some(3.0));
+        // no extra keys -> byte-identical to the plain response
+        assert_eq!(stats_response_ext(1, 2, 64, 9, Vec::new()).dump(), plain);
     }
 
     #[test]

@@ -1,0 +1,439 @@
+//! Generation replication: a leader streams every published
+//! [`DeltaBatch`] — epoch-stamped and digest-stamped — to followers,
+//! which independently apply-publish the same batches and must land on
+//! **bit-identical** generations (same epoch, same digest) or stop.
+//!
+//! The wire format wraps the existing `DeltaBatch` JSON array in an
+//! envelope object, one per line, terminated by an explicit eof marker
+//! (so a follower can tell a quiesced leader from a dead connection):
+//!
+//! ```json
+//! {"digest": "89abcdef01234567", "epoch": 1, "ops": [ ... ]}
+//! {"eof": true}
+//! ```
+//!
+//! The leader side is an in-memory [`ReplLog`] the delta writer appends
+//! to after each successful publish, plus a [`Replicator`] acceptor
+//! that streams the log to any number of followers, each from record
+//! zero — replication replays the *full* publish history, so a
+//! follower that connects late still converges on the leader's exact
+//! final digest.  The follower side ([`follow`]) is a [`DeltaFeed`]
+//! variant: it drives the follower's own engine, so recovery,
+//! persistence and serving compose unchanged.
+//!
+//! [`DeltaFeed`]: crate::serve::server::DeltaFeed
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::delta::DeltaBatch;
+use crate::error::{Error, Result};
+use crate::serve::engine::ServeEngine;
+use crate::util::json::Json;
+
+/// One published generation: the batch that produced it plus the
+/// epoch/digest the leader observed after publishing.
+#[derive(Clone, Debug)]
+pub struct ReplRecord {
+    pub epoch: u64,
+    pub digest: u64,
+    pub batch: DeltaBatch,
+}
+
+#[derive(Debug, Default)]
+struct LogState {
+    records: Vec<Arc<ReplRecord>>,
+    closed: bool,
+}
+
+/// Append-only in-memory publish log shared between the delta writer
+/// (appends, closes) and the acceptor's per-follower streamer threads
+/// (poll for new records by index).
+#[derive(Debug, Default)]
+pub struct ReplLog {
+    state: Mutex<LogState>,
+}
+
+impl ReplLog {
+    pub fn new() -> ReplLog {
+        ReplLog::default()
+    }
+
+    pub fn append(&self, rec: ReplRecord) {
+        let mut s = self.state.lock().expect("repl log poisoned");
+        debug_assert!(!s.closed, "append after close");
+        s.records.push(Arc::new(rec));
+    }
+
+    /// Mark the stream complete: streamers emit the eof marker once
+    /// they have drained every record.
+    pub fn close(&self) {
+        self.state.lock().expect("repl log poisoned").closed = true;
+    }
+
+    /// Records from `from` on, plus whether the log is closed (a
+    /// streamer that sees `(empty, true)` is fully drained).
+    pub fn read_from(&self, from: usize) -> (Vec<Arc<ReplRecord>>, bool) {
+        let s = self.state.lock().expect("repl log poisoned");
+        (s.records.get(from..).unwrap_or(&[]).to_vec(), s.closed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().expect("repl log poisoned").records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Follower-side lag/health gauges, surfaced through the stats
+/// response: the leader epoch most recently *seen* on the wire, the
+/// epoch most recently *applied* locally, and a health bit that drops
+/// on the first divergence or stream failure (and never recovers —
+/// a diverged replica must be rebuilt, not trusted).
+#[derive(Debug, Default)]
+pub struct ReplHandle {
+    leader_epoch: AtomicU64,
+    applied_epoch: AtomicU64,
+    unhealthy: AtomicBool,
+}
+
+impl ReplHandle {
+    pub fn new() -> ReplHandle {
+        ReplHandle::default()
+    }
+
+    pub fn leader_epoch(&self) -> u64 {
+        self.leader_epoch.load(Ordering::Acquire)
+    }
+
+    pub fn applied_epoch(&self) -> u64 {
+        self.applied_epoch.load(Ordering::Acquire)
+    }
+
+    /// Wire-observed leader epoch minus locally applied epoch.
+    pub fn lag(&self) -> u64 {
+        self.leader_epoch().saturating_sub(self.applied_epoch())
+    }
+
+    pub fn healthy(&self) -> bool {
+        !self.unhealthy.load(Ordering::Acquire)
+    }
+
+    fn note_leader(&self, epoch: u64) {
+        self.leader_epoch.store(epoch, Ordering::Release);
+    }
+
+    fn note_applied(&self, epoch: u64) {
+        self.applied_epoch.store(epoch, Ordering::Release);
+    }
+
+    fn mark_unhealthy(&self) {
+        self.unhealthy.store(true, Ordering::Release);
+    }
+}
+
+/// Wire envelope of one record.
+pub fn envelope_json(rec: &ReplRecord) -> Json {
+    Json::obj(vec![
+        ("digest", Json::str(format!("{:016x}", rec.digest))),
+        ("epoch", Json::num(rec.epoch as f64)),
+        ("ops", rec.batch.to_json()),
+    ])
+}
+
+/// The stream terminator.
+pub fn eof_json() -> Json {
+    Json::obj(vec![("eof", Json::Bool(true))])
+}
+
+/// Parse one stream line: `Ok(None)` is the eof marker, `Ok(Some(..))`
+/// one `(epoch, digest, batch)` record.
+pub fn parse_envelope(line: &str) -> Result<Option<(u64, u64, DeltaBatch)>> {
+    let j = Json::parse(line)?;
+    if matches!(j.get("eof"), Some(Json::Bool(true))) {
+        return Ok(None);
+    }
+    let epoch = j
+        .req("epoch")?
+        .as_usize()
+        .ok_or_else(|| Error::Replicate("`epoch` must be an integer".into()))?
+        as u64;
+    let digest_hex = j
+        .req("digest")?
+        .as_str()
+        .ok_or_else(|| Error::Replicate("`digest` must be a hex string".into()))?;
+    let digest = u64::from_str_radix(digest_hex, 16)
+        .map_err(|e| Error::Replicate(format!("bad digest {digest_hex:?}: {e}")))?;
+    let ops = j.req("ops")?;
+    let batch = DeltaBatch::parse_json(&ops.dump())
+        .map_err(|e| Error::Replicate(format!("epoch {epoch} ops: {e}")))?;
+    Ok(Some((epoch, digest, batch)))
+}
+
+/// Leader acceptor: accepts follower connections on `listener` (made
+/// non-blocking) until [`Replicator::shutdown`], streaming the full log
+/// and the eof marker to each.  One streamer thread per follower — the
+/// follower count is operator-controlled and tiny, unlike client
+/// sessions.
+pub struct Replicator {
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Replicator {
+    pub fn spawn(listener: TcpListener, log: Arc<ReplLog>) -> Result<Replicator> {
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let accept = std::thread::spawn(move || {
+            let mut streamers: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Acquire) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let log = Arc::clone(&log);
+                        streamers.push(std::thread::spawn(move || {
+                            // a follower that drops mid-stream only ends
+                            // its own streamer
+                            let _ = stream_log(stream, &log);
+                        }));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for s in streamers {
+                let _ = s.join();
+            }
+        });
+        Ok(Replicator { stop, accept: Some(accept) })
+    }
+
+    /// Stop accepting and wait for in-flight streamers to finish (they
+    /// terminate on their own once the log closes).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Stream every log record (then eof) to one follower, blocking writes.
+fn stream_log(stream: TcpStream, log: &ReplLog) -> Result<()> {
+    stream.set_nonblocking(false)?;
+    let mut w = std::io::BufWriter::new(stream);
+    let mut next = 0usize;
+    loop {
+        let (records, closed) = log.read_from(next);
+        for rec in &records {
+            writeln!(w, "{}", envelope_json(rec).dump())?;
+        }
+        next += records.len();
+        w.flush()?;
+        if closed && log.len() == next {
+            writeln!(w, "{}", eof_json().dump())?;
+            w.flush()?;
+            return Ok(());
+        }
+        if records.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+/// How long [`follow`] keeps retrying the initial connect (the leader
+/// may still be binding its replication port when the follower starts).
+const CONNECT_RETRIES: usize = 50;
+const CONNECT_PAUSE: Duration = Duration::from_millis(100);
+
+/// Follower side: consume the leader's stream at `addr`, apply-publish
+/// every batch through the follower's own engine, and hard-check each
+/// published `(epoch, digest)` against the leader's record — the
+/// first mismatch (or stream error) marks the replica unhealthy and
+/// stops consumption; a replica that cannot prove bit-identity must
+/// not keep publishing.  Returns `(publishes, failures)` in the shape
+/// the delta writer reports.
+pub fn follow(
+    addr: &str,
+    engine: &mut ServeEngine,
+    handle: Option<&ReplHandle>,
+    pause: Duration,
+) -> (u64, Vec<(usize, String)>) {
+    let mut publishes = 0u64;
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    let fail = |i: usize, msg: String, failures: &mut Vec<(usize, String)>| {
+        if let Some(h) = handle {
+            h.mark_unhealthy();
+        }
+        failures.push((i, msg));
+    };
+    let mut stream = None;
+    for attempt in 0..CONNECT_RETRIES {
+        match TcpStream::connect(addr) {
+            Ok(s) => {
+                stream = Some(s);
+                break;
+            }
+            Err(e) => {
+                if attempt + 1 == CONNECT_RETRIES {
+                    fail(0, format!("connect {addr}: {e}"), &mut failures);
+                    return (publishes, failures);
+                }
+                std::thread::sleep(CONNECT_PAUSE);
+            }
+        }
+    }
+    let stream = stream.expect("connected or returned");
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    let mut i = 0usize;
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => {
+                // stream died before the eof marker: a crashed leader,
+                // not a quiesced one
+                fail(i, "leader stream ended without eof".into(), &mut failures);
+                return (publishes, failures);
+            }
+            Ok(_) => {}
+            Err(e) => {
+                fail(i, format!("leader stream: {e}"), &mut failures);
+                return (publishes, failures);
+            }
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (epoch, digest, batch) = match parse_envelope(line.trim_end()) {
+            Ok(Some(rec)) => rec,
+            Ok(None) => return (publishes, failures), // clean eof
+            Err(e) => {
+                fail(i, e.to_string(), &mut failures);
+                return (publishes, failures);
+            }
+        };
+        if let Some(h) = handle {
+            h.note_leader(epoch);
+        }
+        if let Err(e) = engine.apply_publish(&batch) {
+            fail(i, format!("epoch {epoch}: {e}"), &mut failures);
+            return (publishes, failures);
+        }
+        if engine.epoch() != epoch || engine.digest() != digest {
+            fail(
+                i,
+                Error::Replicate(format!(
+                    "diverged at epoch {epoch}: leader digest {digest:016x}, \
+                     follower epoch {} digest {:016x}",
+                    engine.epoch(),
+                    engine.digest()
+                ))
+                .to_string(),
+                &mut failures,
+            );
+            return (publishes, failures);
+        }
+        publishes += 1;
+        if let Some(h) = handle {
+            h.note_applied(epoch);
+        }
+        if !pause.is_zero() {
+            std::thread::sleep(pause);
+        }
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::datagen::churn::churn_batch;
+    use crate::delta::MaintainConfig;
+
+    fn engine() -> ServeEngine {
+        ServeEngine::build(university_db(), MaintainConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn envelope_roundtrip_and_eof() {
+        let batch = churn_batch(engine().db(), 0.1, 7);
+        let rec = ReplRecord { epoch: 3, digest: 0xdead_beef, batch: batch.clone() };
+        let line = envelope_json(&rec).dump();
+        let (e, d, b) = parse_envelope(&line).unwrap().unwrap();
+        assert_eq!((e, d), (3, 0xdead_beef));
+        assert_eq!(b, batch);
+        assert_eq!(parse_envelope(&eof_json().dump()).unwrap(), None);
+        assert!(parse_envelope("{\"epoch\": 1}").is_err());
+    }
+
+    #[test]
+    fn follower_replays_to_the_leader_digest() {
+        // leader: publish two churn batches, logging each
+        let log = Arc::new(ReplLog::new());
+        let mut leader = engine();
+        for i in 0..2u64 {
+            let b = churn_batch(leader.db(), 0.2, 40 + i);
+            leader.apply_publish(&b).unwrap();
+            log.append(ReplRecord {
+                epoch: leader.epoch(),
+                digest: leader.digest(),
+                batch: b,
+            });
+        }
+        log.close();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let repl = Replicator::spawn(listener, Arc::clone(&log)).unwrap();
+
+        let mut follower = engine();
+        let handle = ReplHandle::new();
+        let (publishes, failures) =
+            follow(&addr, &mut follower, Some(&handle), Duration::ZERO);
+        repl.shutdown();
+        assert!(failures.is_empty(), "{failures:?}");
+        assert_eq!(publishes, 2);
+        assert_eq!(follower.epoch(), leader.epoch());
+        assert_eq!(follower.digest(), leader.digest());
+        assert!(handle.healthy());
+        assert_eq!(handle.lag(), 0);
+        assert_eq!(handle.applied_epoch(), 2);
+    }
+
+    #[test]
+    fn diverged_follower_goes_unhealthy_and_stops() {
+        let log = Arc::new(ReplLog::new());
+        let mut leader = engine();
+        let b = churn_batch(leader.db(), 0.2, 9);
+        leader.apply_publish(&b).unwrap();
+        log.append(ReplRecord {
+            epoch: leader.epoch(),
+            // corrupt digest: the follower must refuse to accept it
+            digest: leader.digest() ^ 1,
+            batch: b,
+        });
+        log.close();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let repl = Replicator::spawn(listener, Arc::clone(&log)).unwrap();
+
+        let mut follower = engine();
+        let handle = ReplHandle::new();
+        let (publishes, failures) =
+            follow(&addr, &mut follower, Some(&handle), Duration::ZERO);
+        repl.shutdown();
+        assert_eq!(publishes, 0);
+        assert_eq!(failures.len(), 1);
+        assert!(failures[0].1.contains("diverged"), "{failures:?}");
+        assert!(!handle.healthy());
+    }
+}

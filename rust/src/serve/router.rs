@@ -1,0 +1,705 @@
+//! Router role of scale-out serving: `relcount route` owns no counts of
+//! its own — it fans every positive-table need of a request out to the
+//! shard set as `pcount`/`pmarginal` partials, merges them, and runs the
+//! Möbius/negative completion **once** at the router.
+//!
+//! Exactness rests on three checks per fan-out (DESIGN.md §3i):
+//!
+//! - **partition** — anchor-entity ownership partitions a chain's join
+//!   rows, so the shard partials *sum* to the full positive table
+//!   integer-exactly (no row is counted twice, none is dropped);
+//! - **wire integrity** — the router re-derives each partial's content
+//!   digest from the reconstructed rows and compares it with the digest
+//!   the shard computed over its exact `i128` counts, so a corrupted or
+//!   lossy wire row (counts travel as JSON numbers, exact to 2^53) is a
+//!   typed [`Error::Route`], never a silently wrong merge;
+//! - **pinning** — the first partial of a request pins `(epoch, state
+//!   digest)`; every later partial of the *same request* must match, so
+//!   shards that diverged (or straddled a publish mid-request) surface
+//!   as a typed route error instead of a blended answer.
+//!
+//! With the checks green, the merged positive tables equal the
+//! single-process ones row for row, the completion is the same code
+//! path, and the routed `count`/`score` responses are **byte-identical**
+//! to `relcount serve` on the unsharded database — the equivalence CI
+//! lane (`scripts/scaleout_smoke.sh`) and
+//! `rust/tests/scaleout_equivalence.rs` hold it to that.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use crate::ct::cttable::CtTable;
+use crate::ct::mobius::{mobius_complete, ChainSource};
+use crate::db::catalog::Database;
+use crate::db::schema::Schema;
+use crate::error::{Error, Result};
+use crate::learn::score::bdeu_from_ct;
+use crate::metrics::report::ServeRow;
+use crate::meta::rvar::RVar;
+use crate::serve::protocol::{
+    count_response, error_response, score_response, shutdown_response,
+    stats_response_ext, ServeRequest,
+};
+use crate::serve::server::{event_loop, Envelope, ServeCounters, ServeOptions};
+use crate::util::json::Json;
+
+/// One persistent line-protocol connection to a shard, with one
+/// transparent reconnect per request — enough for a shard that was
+/// killed and restarted from its data directory to rejoin the topology
+/// without bouncing the router.
+pub struct ShardConn {
+    addr: String,
+    wire: Option<Wire>,
+}
+
+struct Wire {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl ShardConn {
+    pub fn new(addr: impl Into<String>) -> ShardConn {
+        ShardConn { addr: addr.into(), wire: None }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// One request/response exchange.  An I/O failure drops the cached
+    /// connection and retries once on a fresh connect; a second failure
+    /// — or an in-protocol `ok: false` from the shard — becomes a typed
+    /// [`Error::Route`] naming the shard.
+    pub fn request(&mut self, req: &ServeRequest) -> Result<Json> {
+        let line = req.to_json().dump();
+        let mut last_io = None;
+        for _ in 0..2 {
+            match self.try_exchange(&line) {
+                Ok(resp) => {
+                    if resp.get("ok") == Some(&Json::Bool(true)) {
+                        return Ok(resp);
+                    }
+                    let msg = resp
+                        .get("error")
+                        .and_then(Json::as_str)
+                        .unwrap_or("malformed error response");
+                    return Err(Error::Route(format!("shard {}: {msg}", self.addr)));
+                }
+                Err(e) => {
+                    self.wire = None;
+                    last_io = Some(e);
+                }
+            }
+        }
+        let e = last_io.expect("two attempts always set last_io on failure");
+        Err(Error::Route(format!("shard {}: {e}", self.addr)))
+    }
+
+    fn try_exchange(&mut self, line: &str) -> std::io::Result<Json> {
+        if self.wire.is_none() {
+            let writer = TcpStream::connect(&self.addr)?;
+            let reader = BufReader::new(writer.try_clone()?);
+            self.wire = Some(Wire { writer, reader });
+        }
+        let w = self.wire.as_mut().expect("wire just ensured");
+        w.writer.write_all(line.as_bytes())?;
+        w.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        if w.reader.read_line(&mut resp)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "shard closed the connection",
+            ));
+        }
+        Json::parse(resp.trim_end()).map_err(|e| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+        })
+    }
+}
+
+/// Numeric field of a shard response, or a typed route error naming it.
+fn field_u64(resp: &Json, key: &str, addr: &str) -> Result<u64> {
+    resp.get(key)
+        .and_then(Json::as_f64)
+        .map(|v| v as u64)
+        .ok_or_else(|| Error::Route(format!("shard {addr}: response lacks {key}")))
+}
+
+/// Hex-string digest field of a shard response.
+fn field_hex(resp: &Json, key: &str, addr: &str) -> Result<u64> {
+    resp.get(key)
+        .and_then(Json::as_str)
+        .and_then(|s| u64::from_str_radix(s, 16).ok())
+        .ok_or_else(|| {
+            Error::Route(format!("shard {addr}: response lacks hex {key}"))
+        })
+}
+
+/// The [`ChainSource`] of one routed request: every positive chain table
+/// and entity marginal the Möbius completion asks for is fanned out to
+/// the shard set and merged under the integrity checks of the module
+/// docs.  Lives for exactly one request — the pin must not outlast it.
+struct RouterSource<'a> {
+    db: &'a Database,
+    conns: &'a mut [ShardConn],
+    next_id: &'a mut u64,
+    /// `(epoch, state digest)` pinned by the first partial answered.
+    pin: Option<(u64, u64)>,
+    /// Marginals repeat across the subsets of one completion; one
+    /// fan-out each per request is enough.
+    marginals: BTreeMap<(usize, Vec<RVar>), CtTable>,
+    /// Wall time spent reconstructing and merging partials (the
+    /// router-side overhead the bench reports).
+    merge_wall: Duration,
+}
+
+/// Pin or cross-check the `(epoch, state)` a shard answered at.
+fn pin_check(
+    pin: &mut Option<(u64, u64)>,
+    addr: &str,
+    epoch: u64,
+    state: u64,
+) -> Result<()> {
+    match *pin {
+        None => {
+            *pin = Some((epoch, state));
+            Ok(())
+        }
+        Some((pe, ps)) if pe != epoch || ps != state => Err(Error::Route(format!(
+            "shards diverged: {addr} answered at epoch {epoch} state \
+             {state:016x}, but this request is pinned to epoch {pe} \
+             state {ps:016x}"
+        ))),
+        Some(_) => Ok(()),
+    }
+}
+
+/// Validate one shard's partial response and fold its rows into the
+/// accumulator (the integrity checks of the module docs).  `slice` is
+/// the `(index, of)` coordinates the router expects the shard to own.
+fn merge_partial(
+    schema: &Schema,
+    pin: &mut Option<(u64, u64)>,
+    resp: &Json,
+    addr: &str,
+    slice: (usize, usize),
+    vars: &[RVar],
+    acc: &mut CtTable,
+) -> Result<()> {
+    if resp.get("op").and_then(Json::as_str) != Some("partial") {
+        return Err(Error::Route(format!(
+            "shard {addr}: expected a partial response"
+        )));
+    }
+    let shard = field_u64(resp, "shard", addr)? as usize;
+    let claimed_of = field_u64(resp, "of", addr)? as usize;
+    if (shard, claimed_of) != slice {
+        return Err(Error::Route(format!(
+            "shard {addr} answered as slice {shard}/{claimed_of}, expected \
+             {}/{} — shard flags disagree with the router topology",
+            slice.0, slice.1
+        )));
+    }
+    let epoch = field_u64(resp, "epoch", addr)?;
+    let state = field_hex(resp, "state", addr)?;
+    pin_check(pin, addr, epoch, state)?;
+    // Reconstruct the partial in its own table first: its digest must
+    // reproduce the one the shard computed over exact counts.
+    let mut part = CtTable::new(schema, vars.to_vec())?;
+    let rows = resp
+        .get("rows")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Route(format!("shard {addr}: response lacks rows")))?;
+    for row in rows {
+        let cells = row.as_arr().unwrap_or(&[]);
+        if cells.len() != vars.len() + 1 {
+            return Err(Error::Route(format!(
+                "shard {addr}: row arity {} != {}",
+                cells.len(),
+                vars.len() + 1
+            )));
+        }
+        let mut vals = Vec::with_capacity(vars.len());
+        for c in &cells[..vars.len()] {
+            let v = c.as_f64().ok_or_else(|| {
+                Error::Route(format!("shard {addr}: non-numeric row cell"))
+            })?;
+            vals.push(v as u32);
+        }
+        let count = cells[vars.len()].as_f64().ok_or_else(|| {
+            Error::Route(format!("shard {addr}: non-numeric count"))
+        })? as i128;
+        part.add(&vals, count)?;
+    }
+    let claimed = field_hex(resp, "digest", addr)?;
+    if part.digest() != claimed {
+        return Err(Error::Route(format!(
+            "shard {addr}: partial table digest mismatch (reconstructed \
+             {:016x}, shard claimed {claimed:016x}) — wire corruption or \
+             a count beyond exact JSON range",
+            part.digest()
+        )));
+    }
+    for (vals, c) in part.iter_rows() {
+        acc.add(&vals, c)?;
+    }
+    Ok(())
+}
+
+impl<'a> RouterSource<'a> {
+    fn new(
+        db: &'a Database,
+        conns: &'a mut [ShardConn],
+        next_id: &'a mut u64,
+    ) -> RouterSource<'a> {
+        RouterSource {
+            db,
+            conns,
+            next_id,
+            pin: None,
+            marginals: BTreeMap::new(),
+            merge_wall: Duration::ZERO,
+        }
+    }
+
+    /// Fan one partial request out to every shard and merge the partial
+    /// tables (positives sum; the completion runs later, once, at the
+    /// router).
+    fn fan(
+        &mut self,
+        req_of: &dyn Fn(u64) -> ServeRequest,
+        vars: &[RVar],
+    ) -> Result<CtTable> {
+        let of = self.conns.len();
+        let mut acc = CtTable::new(&self.db.schema, vars.to_vec())?;
+        for (index, conn) in self.conns.iter_mut().enumerate() {
+            let id = *self.next_id;
+            *self.next_id += 1;
+            let addr = conn.addr().to_string();
+            let resp = conn.request(&req_of(id))?;
+            let t0 = Instant::now();
+            merge_partial(
+                &self.db.schema,
+                &mut self.pin,
+                &resp,
+                &addr,
+                (index, of),
+                vars,
+                &mut acc,
+            )?;
+            self.merge_wall += t0.elapsed();
+        }
+        Ok(acc)
+    }
+
+    /// Fan a stats request out and pin/cross-check the shard states;
+    /// returns `(epoch, state digest, summed resident bytes)`.
+    fn stats_fan(&mut self) -> Result<(u64, u64, usize)> {
+        let mut resident = 0usize;
+        for conn in self.conns.iter_mut() {
+            let id = *self.next_id;
+            *self.next_id += 1;
+            let addr = conn.addr().to_string();
+            let resp = conn.request(&ServeRequest::Stats { id })?;
+            let epoch = field_u64(&resp, "epoch", &addr)?;
+            let state = field_hex(&resp, "digest", &addr)?;
+            pin_check(&mut self.pin, &addr, epoch, state)?;
+            resident += field_u64(&resp, "resident_bytes", &addr)? as usize;
+        }
+        let (epoch, state) = self
+            .pin
+            .ok_or_else(|| Error::Route("router has no shards configured".into()))?;
+        Ok((epoch, state, resident))
+    }
+
+    /// The `(epoch, state)` this request is pinned to, pinning off a
+    /// stats fan-out if no partial was needed (a population-only count
+    /// never touches a shard, but its response must still carry the
+    /// topology's epoch).
+    fn pinned(&mut self) -> Result<(u64, u64)> {
+        if let Some(p) = self.pin {
+            return Ok(p);
+        }
+        self.stats_fan()?;
+        self.pin
+            .ok_or_else(|| Error::Route("router has no shards configured".into()))
+    }
+}
+
+impl ChainSource for RouterSource<'_> {
+    fn positive_chain_ct(&mut self, chain: &[usize], vars: &[RVar]) -> Result<CtTable> {
+        let chain = chain.to_vec();
+        let vars_v = vars.to_vec();
+        self.fan(
+            &|id| ServeRequest::PCount {
+                id,
+                chain: chain.clone(),
+                vars: vars_v.clone(),
+            },
+            vars,
+        )
+    }
+
+    fn entity_marginal(&mut self, et: usize, vars: &[RVar]) -> Result<CtTable> {
+        let key = (et, vars.to_vec());
+        if let Some(hit) = self.marginals.get(&key) {
+            return Ok(hit.clone());
+        }
+        let vars_v = vars.to_vec();
+        let ct = self
+            .fan(&|id| ServeRequest::PMarginal { id, et, vars: vars_v.clone() }, vars)?;
+        self.marginals.insert(key, ct.clone());
+        Ok(ct)
+    }
+
+    fn schema(&self) -> &Schema {
+        &self.db.schema
+    }
+
+    fn population(&self, et: usize) -> i128 {
+        self.db.population(et) as i128
+    }
+}
+
+/// The request-answering half of `relcount route`: holds the shard
+/// connections and the schema-bearing database (the router never counts
+/// from it — it only needs populations and ct-table coordinates).
+pub struct Router {
+    db: Database,
+    conns: Vec<ShardConn>,
+    next_id: u64,
+    /// Accumulated wall time spent merging partials, across requests.
+    pub merge_wall: Duration,
+    /// Last `(epoch, state)` any request pinned — stamps responses that
+    /// need no fan-out of their own (shutdown) and the metric rows.
+    epoch: u64,
+}
+
+impl Router {
+    pub fn new(db: Database, shard_addrs: &[String]) -> Router {
+        Router {
+            db,
+            conns: shard_addrs.iter().map(ShardConn::new).collect(),
+            next_id: 0,
+            merge_wall: Duration::ZERO,
+            epoch: 0,
+        }
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Answer one request end to end.  Every failure — unreachable
+    /// shard, digest mismatch, divergence — is an in-protocol error
+    /// response; the router session keeps serving.
+    pub(crate) fn answer(&mut self, env: &Envelope) -> Json {
+        match &env.req {
+            Err(e) => error_response(0, e),
+            Ok(req) => self.answer_req(req),
+        }
+    }
+
+    fn answer_req(&mut self, req: &ServeRequest) -> Json {
+        match req {
+            ServeRequest::Count { id, vars, ctx } => {
+                let mut src =
+                    RouterSource::new(&self.db, &mut self.conns, &mut self.next_id);
+                let out = mobius_complete(&mut src, vars, ctx)
+                    .and_then(|ct| src.pinned().map(|p| (ct, p)));
+                let resp = match out {
+                    Ok((ct, (epoch, _))) => {
+                        self.epoch = epoch;
+                        count_response(*id, epoch, &ct)
+                    }
+                    Err(e) => error_response(*id, &e),
+                };
+                self.merge_wall += src.merge_wall;
+                resp
+            }
+            ServeRequest::Score { id, vars, ctx, child, n_prime } => {
+                // mirror `Generation::score_family` exactly (message
+                // included) so routed and single-process responses stay
+                // byte-identical
+                if !vars.contains(child) {
+                    return error_response(
+                        *id,
+                        &Error::Learn(format!(
+                            "score child {child:?} is not among the family variables"
+                        )),
+                    );
+                }
+                let mut src =
+                    RouterSource::new(&self.db, &mut self.conns, &mut self.next_id);
+                let out = mobius_complete(&mut src, vars, ctx)
+                    .and_then(|ct| src.pinned().map(|p| (ct, p)))
+                    .and_then(|(ct, p)| {
+                        bdeu_from_ct(&ct, child, *n_prime).map(|s| (s, p))
+                    });
+                let resp = match out {
+                    Ok((s, (epoch, _))) => {
+                        self.epoch = epoch;
+                        score_response(*id, epoch, s)
+                    }
+                    Err(e) => error_response(*id, &e),
+                };
+                self.merge_wall += src.merge_wall;
+                resp
+            }
+            ServeRequest::Stats { id } => {
+                let shards = self.conns.len();
+                let mut src =
+                    RouterSource::new(&self.db, &mut self.conns, &mut self.next_id);
+                match src.stats_fan() {
+                    Ok((epoch, state, resident)) => {
+                        self.epoch = epoch;
+                        stats_response_ext(
+                            *id,
+                            epoch,
+                            resident,
+                            state,
+                            vec![
+                                ("role", Json::str("router")),
+                                ("shards", Json::num(shards as f64)),
+                            ],
+                        )
+                    }
+                    Err(e) => error_response(*id, &e),
+                }
+            }
+            ServeRequest::Shutdown { id } => shutdown_response(*id, self.epoch),
+            ServeRequest::PCount { id, .. } | ServeRequest::PMarginal { id, .. } => {
+                error_response(
+                    *id,
+                    &Error::Route(
+                        "partial ops are shard-internal; ask the router for \
+                         count or score"
+                            .into(),
+                    ),
+                )
+            }
+        }
+    }
+}
+
+/// Outcome of one router run.
+#[derive(Clone, Debug)]
+pub struct RouterSummary {
+    /// Per-epoch latency/throughput rows (`shards`, `sessions` and
+    /// `merge_overhead_s` filled in).
+    pub rows: Vec<ServeRow>,
+    pub requests: u64,
+    pub errors: u64,
+    pub sessions: u64,
+    /// `(session id, error)` for client sessions that died mid-stream.
+    pub session_failures: Vec<(u64, String)>,
+    /// Total wall time spent reconstructing and merging shard partials.
+    pub merge_wall: Duration,
+    /// Last epoch the shard set was observed at.
+    pub final_epoch: u64,
+}
+
+/// `relcount route`: accept clients on `listener` and answer each
+/// request by fanning partials out to `shard_addrs` (the same
+/// non-blocking multi-client [`event_loop`] as `relcount serve`).  Runs
+/// until a client sends `{"op": "shutdown"}` — shards are independent
+/// processes and keep running; the smoke topology shuts them down
+/// directly.
+pub fn run_router(
+    db: Database,
+    shard_addrs: &[String],
+    listener: TcpListener,
+    opts: &ServeOptions,
+) -> Result<RouterSummary> {
+    let shards = shard_addrs.len();
+    if shards == 0 {
+        return Err(Error::Route("router needs at least one shard address".into()));
+    }
+    let mut router = Router::new(db, shard_addrs);
+    let mut acc = BTreeMap::new();
+    let mut counters = ServeCounters::default();
+    event_loop(
+        &listener,
+        opts,
+        &mut |batch| {
+            let responses: Vec<Json> =
+                batch.iter().map(|env| router.answer(env)).collect();
+            (router.epoch(), responses)
+        },
+        &mut acc,
+        &mut counters,
+    )?;
+    let per_request = if counters.requests == 0 {
+        0.0
+    } else {
+        router.merge_wall.as_secs_f64() / counters.requests as f64
+    };
+    let rows = acc
+        .into_iter()
+        .map(|(epoch, a)| {
+            let mut r = a.into_row(&opts.database, epoch, 1);
+            r.shards = shards;
+            r.sessions = counters.sessions;
+            r.merge_overhead_s = per_request;
+            r
+        })
+        .collect();
+    Ok(RouterSummary {
+        rows,
+        requests: counters.requests,
+        errors: counters.errors,
+        sessions: counters.sessions,
+        session_failures: counters.session_failures,
+        merge_wall: router.merge_wall,
+        final_epoch: router.epoch(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fixtures::university_db;
+    use crate::delta::{DeltaBatch, DeltaOp, MaintainConfig};
+    use crate::serve::engine::ServeEngine;
+    use crate::serve::server::serve_listener;
+    use crate::serve::shard::ShardConfig;
+    use std::io::{BufRead, BufReader, Read, Write};
+
+    fn spawn_shard(
+        index: usize,
+        of: usize,
+        pre: Option<DeltaBatch>,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let mut engine =
+                ServeEngine::build(university_db(), MaintainConfig::default())
+                    .unwrap();
+            if let Some(b) = pre {
+                engine.apply_publish(&b).unwrap();
+            }
+            let opts = ServeOptions {
+                database: "uw".into(),
+                shard: Some(ShardConfig { index, of }),
+                ..Default::default()
+            };
+            serve_listener(engine, listener, &opts).unwrap();
+        });
+        (addr, handle)
+    }
+
+    fn shut_down(addr: &str) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        writeln!(s, "{}", ServeRequest::Shutdown { id: 0 }.to_json().dump())
+            .unwrap();
+        let mut line = String::new();
+        BufReader::new(&s).read_line(&mut line).unwrap();
+    }
+
+    #[test]
+    fn routed_responses_are_byte_identical_to_single_process() {
+        let (a0, h0) = spawn_shard(0, 2, None);
+        let (a1, h1) = spawn_shard(1, 2, None);
+        let addrs = vec![a0.clone(), a1.clone()];
+
+        let reqs =
+            crate::serve::protocol::enumerate_requests(&university_db(), 3, 8)
+                .unwrap();
+        let mut input: String =
+            reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+        input.push_str(&ServeRequest::Shutdown { id: 99 }.to_json().dump());
+        input.push('\n');
+
+        // single-process reference over the identical request stream
+        let mut reference = Vec::new();
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        crate::serve::server::run_serve(
+            ServeEngine::build(university_db(), MaintainConfig::default()).unwrap(),
+            std::io::Cursor::new(input.clone()),
+            &mut reference,
+            &opts,
+        )
+        .unwrap();
+
+        // the same stream through the 2-shard router
+        let rl = TcpListener::bind("127.0.0.1:0").unwrap();
+        let raddr = rl.local_addr().unwrap();
+        let ropts = ServeOptions { database: "uw".into(), ..Default::default() };
+        let router = std::thread::spawn(move || {
+            run_router(university_db(), &addrs, rl, &ropts).unwrap()
+        });
+        let mut client = TcpStream::connect(raddr).unwrap();
+        client.write_all(input.as_bytes()).unwrap();
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let mut routed = Vec::new();
+        BufReader::new(&client).read_to_end(&mut routed).unwrap();
+        let summary = router.join().unwrap();
+
+        assert_eq!(
+            String::from_utf8(routed).unwrap(),
+            String::from_utf8(reference).unwrap(),
+            "routed responses must be byte-identical to single-process serving"
+        );
+        assert_eq!(summary.requests, 9);
+        assert_eq!(summary.errors, 0);
+        assert_eq!(summary.final_epoch, 0);
+        assert!(summary.rows.iter().all(|r| r.shards == 2));
+
+        shut_down(&a0);
+        shut_down(&a1);
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+
+    #[test]
+    fn unreachable_shard_is_a_typed_route_error() {
+        // bind then drop: nothing listens on this address anymore
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut router = Router::new(university_db(), &[dead]);
+        let env = Envelope {
+            req: Ok(ServeRequest::Count {
+                id: 5,
+                vars: vec![RVar::EntityAttr { et: 0, attr: 0 }],
+                ctx: vec![0],
+            }),
+            t0: Instant::now(),
+        };
+        let resp = router.answer(&env);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let msg = resp.get("error").unwrap().as_str().unwrap();
+        assert!(msg.starts_with("route error: shard "), "{msg}");
+    }
+
+    #[test]
+    fn diverged_shards_are_a_typed_route_error() {
+        // shard 1 has applied a delta shard 0 never saw: epochs differ,
+        // so the pin check must refuse to blend them
+        let (a0, h0) = spawn_shard(0, 2, None);
+        let drift =
+            DeltaBatch::new(vec![DeltaOp::DeleteLink { rel: 0, from: 0, to: 0 }]);
+        let (a1, h1) = spawn_shard(1, 2, Some(drift));
+        let mut router = Router::new(university_db(), &[a0.clone(), a1.clone()]);
+        let env = Envelope {
+            req: Ok(ServeRequest::Count {
+                id: 1,
+                vars: vec![RVar::EntityAttr { et: 0, attr: 0 }],
+                ctx: vec![0],
+            }),
+            t0: Instant::now(),
+        };
+        let resp = router.answer(&env);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let msg = resp.get("error").unwrap().as_str().unwrap();
+        assert!(msg.contains("diverged"), "{msg}");
+        shut_down(&a0);
+        shut_down(&a1);
+        h0.join().unwrap();
+        h1.join().unwrap();
+    }
+}

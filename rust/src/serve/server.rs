@@ -26,10 +26,21 @@
 //! Latency, throughput and queue depth are accumulated **per epoch**
 //! ([`ServeRow`]) so a regression in publish behavior shows up in the
 //! metrics, not just in wall clock.
+//!
+//! TCP mode ([`serve_listener`]) runs a **readiness-polled, non-blocking
+//! event loop** ([`event_loop`]) instead of the stdin pump: every client
+//! socket is non-blocking with per-session read/write buffers, complete
+//! lines are micro-batched through the same dispatch path, and partial
+//! writes park in the session's buffer until the socket drains — many
+//! concurrent sessions on one thread, no thread-per-connection.  One
+//! session's failure (oversized line, mid-request disconnect, broken
+//! pipe) is recorded in [`ServeSummary::session_failures`] while every
+//! other session keeps serving.
 
 use std::collections::BTreeMap;
-use std::io::{BufRead, Write};
+use std::io::{BufRead, Read, Write};
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{pool, resolve_workers};
@@ -39,11 +50,18 @@ use crate::error::{Error, Result};
 use crate::metrics::report::ServeRow;
 use crate::serve::engine::{shard_for_family, ServeEngine};
 use crate::serve::protocol::{
-    count_response, error_response, score_response, shutdown_response, stats_response,
-    ServeRequest,
+    count_response, error_response, score_response, shutdown_response,
+    stats_response_ext, ServeRequest,
 };
+use crate::serve::replicate::{ReplHandle, ReplLog, ReplRecord};
+use crate::serve::shard::ShardConfig;
 use crate::serve::snapshot::{Generation, SnapshotStore};
 use crate::util::json::Json;
+
+/// Per-session request-line cap of the TCP event loop: a line that grows
+/// past this without a newline fails its session typed instead of
+/// buffering without bound.
+pub const MAX_LINE: usize = 1 << 20;
 
 /// Where the concurrent delta stream comes from.
 #[derive(Clone, Debug)]
@@ -57,6 +75,12 @@ pub enum DeltaFeed {
     /// generator as `exp churn`, so the final digest is deterministic
     /// for a given (db, frac, steps, seed) regardless of read traffic.
     Churn { frac: f64, steps: usize, seed: u64 },
+    /// Follower replication (`--follow ADDR`): consume the leader's
+    /// epoch-stamped `DeltaBatch` stream and independently apply-publish
+    /// each batch, hard-checking the published digest against the
+    /// leader's per-record digest (divergence stops consumption and is
+    /// reported in [`ServeSummary::publish_failures`]).
+    Follow { addr: String },
 }
 
 /// Session configuration.
@@ -72,6 +96,16 @@ pub struct ServeOptions {
     /// Pause between publishes, letting readers overlap generations
     /// (zero = apply as fast as possible).
     pub delta_pause: Duration,
+    /// Set on `relcount shard` processes: answer `pcount`/`pmarginal`
+    /// with this slice's partial tables (plain servers reject them).
+    pub shard: Option<ShardConfig>,
+    /// Follower lag/health gauges, surfaced through the stats response
+    /// when present (set alongside `DeltaFeed::Follow`).
+    pub repl: Option<Arc<ReplHandle>>,
+    /// Leader side of replication: every successful publish is appended
+    /// here (and the log closed at quiesce) for the acceptor to stream
+    /// to followers.
+    pub publish_log: Option<Arc<ReplLog>>,
 }
 
 impl Default for ServeOptions {
@@ -82,6 +116,9 @@ impl Default for ServeOptions {
             batch_max: 64,
             feed: DeltaFeed::None,
             delta_pause: Duration::ZERO,
+            shard: None,
+            repl: None,
+            publish_log: None,
         }
     }
 }
@@ -102,11 +139,17 @@ pub struct ServeSummary {
     /// Writer-state digest after the delta stream quiesced (equals the
     /// last published generation's digest).
     pub final_digest: u64,
+    /// Sessions accepted (1 for stdin/file serving).
+    pub sessions: u64,
+    /// `(session id, error)` for sessions that died mid-stream
+    /// (oversized line, disconnect, write failure) — everything they
+    /// served before failing is still counted above.
+    pub session_failures: Vec<(u64, String)>,
 }
 
 /// Per-epoch metric accumulator.
 #[derive(Default)]
-struct GenAccum {
+pub(crate) struct GenAccum {
     requests: u64,
     count_requests: u64,
     score_requests: u64,
@@ -115,16 +158,44 @@ struct GenAccum {
     max_queue_depth: u64,
     lat_sum: Duration,
     lat_max: Duration,
+    /// Capped reservoir of per-request latencies for the p50/p99
+    /// columns (first come, first kept — enough for the bench rows
+    /// without unbounded memory on long runs).
+    lat_samples: Vec<Duration>,
     first: Option<Instant>,
     last: Option<Instant>,
 }
 
+/// Cap on [`GenAccum::lat_samples`].
+const LAT_SAMPLE_CAP: usize = 65_536;
+
+/// Nearest-rank percentile over an unsorted sample set (sorts a copy).
+fn percentile_s(samples: &[Duration], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<Duration> = samples.to_vec();
+    s.sort_unstable();
+    let idx = ((s.len() - 1) as f64 * p).round() as usize;
+    s[idx.min(s.len() - 1)].as_secs_f64()
+}
+
 impl GenAccum {
-    fn into_row(self, database: &str, epoch: u64, workers: usize) -> ServeRow {
+    fn note_latency(&mut self, lat: Duration) {
+        self.lat_sum += lat;
+        self.lat_max = self.lat_max.max(lat);
+        if self.lat_samples.len() < LAT_SAMPLE_CAP {
+            self.lat_samples.push(lat);
+        }
+    }
+
+    pub(crate) fn into_row(self, database: &str, epoch: u64, workers: usize) -> ServeRow {
         let elapsed = match (self.first, self.last) {
             (Some(a), Some(b)) => b.duration_since(a),
             _ => Duration::ZERO,
         };
+        let p50_latency_s = percentile_s(&self.lat_samples, 0.50);
+        let p99_latency_s = percentile_s(&self.lat_samples, 0.99);
         ServeRow {
             database: database.to_string(),
             epoch,
@@ -151,15 +222,23 @@ impl GenAccum {
                 self.requests as f64 / elapsed.as_secs_f64()
             },
             workers,
+            p50_latency_s,
+            p99_latency_s,
+            // single-process defaults; the sharded bench scenario and
+            // serve_listener overwrite these on their rows
+            shards: 0,
+            sessions: 0,
+            merge_overhead_s: 0.0,
+            follower_lag: 0.0,
         }
     }
 }
 
 /// One in-flight request (parse errors ride along so responses keep
 /// input order).
-struct Envelope {
-    req: Result<ServeRequest>,
-    t0: Instant,
+pub(crate) struct Envelope {
+    pub(crate) req: Result<ServeRequest>,
+    pub(crate) t0: Instant,
 }
 
 /// Run a full serve session: `input` request lines answered onto `out`
@@ -178,13 +257,16 @@ where
     let store = engine.store();
     let feed = opts.feed.clone();
     let pause = opts.delta_pause;
+    let log = opts.publish_log.clone();
+    let repl = opts.repl.clone();
     let mut acc: BTreeMap<u64, GenAccum> = BTreeMap::new();
     let mut requests = 0u64;
     let mut errors = 0u64;
 
     let (engine, publishes, publish_failures, session) =
         std::thread::scope(|scope| {
-            let delta = scope.spawn(move || drive_deltas(engine, feed, pause));
+            let delta =
+                scope.spawn(move || drive_deltas(engine, feed, pause, log, repl));
             let session = session_loop(
                 &store,
                 input,
@@ -202,7 +284,12 @@ where
 
     let rows = acc
         .into_iter()
-        .map(|(epoch, a)| a.into_row(&opts.database, epoch, resolve_workers(opts.workers)))
+        .map(|(epoch, a)| {
+            let mut r =
+                a.into_row(&opts.database, epoch, resolve_workers(opts.workers));
+            r.sessions = 1;
+            r
+        })
         .collect();
     Ok(ServeSummary {
         rows,
@@ -212,6 +299,8 @@ where
         publish_failures,
         final_epoch: engine.epoch(),
         final_digest: engine.digest(),
+        sessions: 1,
+        session_failures: Vec::new(),
     })
 }
 
@@ -225,23 +314,24 @@ fn drive_deltas(
     mut engine: ServeEngine,
     feed: DeltaFeed,
     pause: Duration,
+    log: Option<Arc<ReplLog>>,
+    repl: Option<Arc<ReplHandle>>,
 ) -> (ServeEngine, u64, Vec<(usize, String)>) {
     let mut publishes = 0u64;
     let mut failures = Vec::new();
-    let mut publish = |engine: &mut ServeEngine, i: usize, batch: &DeltaBatch| {
-        match engine.apply_publish(batch) {
-            Ok(_) => publishes += 1,
-            Err(e) => failures.push((i, e.to_string())),
-        }
-        if !pause.is_zero() {
-            std::thread::sleep(pause);
-        }
-    };
     match feed {
         DeltaFeed::None => {}
         DeltaFeed::Batches(batches) => {
             for (i, b) in batches.iter().enumerate() {
-                publish(&mut engine, i, b);
+                publish_one(
+                    &mut engine,
+                    i,
+                    b,
+                    pause,
+                    &mut publishes,
+                    &mut failures,
+                    log.as_deref(),
+                );
             }
         }
         DeltaFeed::Churn { frac, steps, seed } => {
@@ -249,17 +339,69 @@ fn drive_deltas(
                 // generated against the *current* writer state, so every
                 // op is valid and the sequence is seed-deterministic
                 let b = churn_batch(engine.db(), frac, seed ^ (i as u64 + 1));
-                publish(&mut engine, i, &b);
+                publish_one(
+                    &mut engine,
+                    i,
+                    &b,
+                    pause,
+                    &mut publishes,
+                    &mut failures,
+                    log.as_deref(),
+                );
             }
         }
+        DeltaFeed::Follow { addr } => {
+            let (p, mut fails) = crate::serve::replicate::follow(
+                &addr,
+                &mut engine,
+                repl.as_deref(),
+                pause,
+            );
+            publishes += p;
+            failures.append(&mut fails);
+        }
     }
-    drop(publish);
+    // quiesced: followers waiting on the log get their eof marker even
+    // when the feed published nothing
+    if let Some(l) = &log {
+        l.close();
+    }
     if let Err(e) = engine.persist_snapshot() {
         // the WAL still holds every batch; recovery replays from the
         // previous snapshot, so this is reported, not fatal
         failures.push((usize::MAX, format!("shutdown snapshot: {e}")));
     }
     (engine, publishes, failures)
+}
+
+/// Apply-and-publish one batch, recording the outcome; on success the
+/// epoch-stamped record is appended to the replication log (if any) so
+/// followers replay the exact sequence the leader published.
+fn publish_one(
+    engine: &mut ServeEngine,
+    i: usize,
+    batch: &DeltaBatch,
+    pause: Duration,
+    publishes: &mut u64,
+    failures: &mut Vec<(usize, String)>,
+    log: Option<&ReplLog>,
+) {
+    match engine.apply_publish(batch) {
+        Ok(_) => {
+            *publishes += 1;
+            if let Some(l) = log {
+                l.append(ReplRecord {
+                    epoch: engine.epoch(),
+                    digest: engine.digest(),
+                    batch: batch.clone(),
+                });
+            }
+        }
+        Err(e) => failures.push((i, e.to_string())),
+    }
+    if !pause.is_zero() {
+        std::thread::sleep(pause);
+    }
 }
 
 /// The dispatch loop of one client session (see the module docs).
@@ -323,7 +465,7 @@ where
         // would report the write loop's elapsed time as the window
         // and wildly inflate throughput_rps
         let batch_start = Instant::now();
-        let responses = dispatch(&gen, &pending, workers);
+        let responses = dispatch(&gen, &pending, workers, opts);
 
         let a = acc.entry(gen.epoch).or_default();
         a.batches += 1;
@@ -343,9 +485,7 @@ where
                 *errors += 1;
                 a.errors += 1;
             }
-            let lat = env.t0.elapsed();
-            a.lat_sum += lat;
-            a.lat_max = a.lat_max.max(lat);
+            a.note_latency(env.t0.elapsed());
             writeln!(out, "{}", resp.dump())?;
         }
         a.last = Some(Instant::now());
@@ -357,11 +497,225 @@ where
     Ok(shutdown)
 }
 
-/// TCP mode: serve sessions from `listener` sequentially (one client at
-/// a time; every session shares the store, so later clients see the
-/// generations earlier ones advanced past).  Runs until a client sends
-/// `{"op": "shutdown"}`, then quiesces the delta stream and returns the
-/// summary.
+/// Counters an [`event_loop`] run accumulates across all its sessions.
+#[derive(Default)]
+pub(crate) struct ServeCounters {
+    pub requests: u64,
+    pub errors: u64,
+    pub sessions: u64,
+    pub session_failures: Vec<(u64, String)>,
+}
+
+/// One client of the event loop: a non-blocking socket with its own
+/// read/write buffers, so a slow peer parks bytes here instead of
+/// blocking the loop.
+struct Session {
+    stream: std::net::TcpStream,
+    id: u64,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    read_closed: bool,
+}
+
+/// Parse one raw request line into an envelope (empty lines skipped, so
+/// they cost nothing — matching the stdin pump).
+fn push_env(bytes: &[u8], envs: &mut Vec<Envelope>) {
+    let t0 = Instant::now();
+    let req = match std::str::from_utf8(bytes) {
+        Ok(s) if s.trim().is_empty() => return,
+        Ok(s) => ServeRequest::parse(s),
+        Err(e) => Err(Error::Data(format!("non-utf8 request line: {e}"))),
+    };
+    envs.push(Envelope { req, t0 });
+}
+
+/// Write as much of `buf` as the socket accepts right now; returns the
+/// bytes consumed (the rest stays queued for the next readiness pass).
+fn write_some(stream: &mut std::net::TcpStream, buf: &[u8]) -> std::io::Result<usize> {
+    let mut written = 0;
+    while written < buf.len() {
+        match stream.write(&buf[written..]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "socket accepted zero bytes",
+                ))
+            }
+            Ok(n) => written += n,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(written)
+}
+
+/// The readiness-polled multi-client loop behind [`serve_listener`] and
+/// the scale-out router: accept without blocking, drain each session's
+/// socket into its line buffer, micro-batch complete lines through
+/// `serve_batch` (which returns the serving epoch plus one response per
+/// envelope, in order), and flush responses back through per-session
+/// write buffers that tolerate partial writes.  Runs until a shutdown
+/// response has been issued and every surviving session's write buffer
+/// has drained (bounded by a grace period, so a shutdown requester that
+/// never reads its acknowledgement cannot wedge the server).
+///
+/// A failed session — oversized request line, non-utf8 bytes at a line
+/// boundary we can't parse past, mid-request disconnect, write error —
+/// is recorded in `counters.session_failures` and dropped; every other
+/// session keeps serving.
+pub(crate) fn event_loop(
+    listener: &std::net::TcpListener,
+    opts: &ServeOptions,
+    serve_batch: &mut dyn FnMut(&[Envelope]) -> (u64, Vec<Json>),
+    acc: &mut BTreeMap<u64, GenAccum>,
+    counters: &mut ServeCounters,
+) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let batch_max = opts.batch_max.max(1);
+    let mut sessions: Vec<Session> = Vec::new();
+    let mut next_id = 0u64;
+    let mut shutdown: Option<Instant> = None;
+    loop {
+        let mut progressed = false;
+        if shutdown.is_none() {
+            loop {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        stream.set_nonblocking(true)?;
+                        sessions.push(Session {
+                            stream,
+                            id: next_id,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            read_closed: false,
+                        });
+                        counters.sessions += 1;
+                        next_id += 1;
+                        progressed = true;
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(e) => return Err(e.into()),
+                }
+            }
+        }
+        let mut i = 0;
+        while i < sessions.len() {
+            let s = &mut sessions[i];
+            let mut fail: Option<String> = None;
+            if !s.read_closed && shutdown.is_none() {
+                let mut buf = [0u8; 4096];
+                loop {
+                    match s.stream.read(&mut buf) {
+                        Ok(0) => {
+                            s.read_closed = true;
+                            break;
+                        }
+                        Ok(n) => {
+                            s.rbuf.extend_from_slice(&buf[..n]);
+                            progressed = true;
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                        Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                            continue
+                        }
+                        Err(e) => {
+                            fail = Some(format!("read: {e}"));
+                            break;
+                        }
+                    }
+                }
+            }
+            let mut envs: Vec<Envelope> = Vec::new();
+            if fail.is_none() {
+                while let Some(pos) = s.rbuf.iter().position(|&b| b == b'\n') {
+                    let line: Vec<u8> = s.rbuf.drain(..=pos).collect();
+                    push_env(&line[..line.len() - 1], &mut envs);
+                }
+                if s.read_closed && !s.rbuf.is_empty() {
+                    // input ended without a trailing newline: the tail
+                    // is the final request line (BufRead::lines parity)
+                    let tail = std::mem::take(&mut s.rbuf);
+                    push_env(&tail, &mut envs);
+                }
+                if s.rbuf.len() > MAX_LINE {
+                    fail = Some(format!(
+                        "request line exceeds {MAX_LINE} bytes without a newline"
+                    ));
+                }
+            }
+            if fail.is_none() && !envs.is_empty() {
+                progressed = true;
+                for chunk in envs.chunks(batch_max) {
+                    let depth = chunk.len() as u64;
+                    let batch_start = Instant::now();
+                    let (epoch, responses) = serve_batch(chunk);
+                    let a = acc.entry(epoch).or_default();
+                    a.batches += 1;
+                    a.max_queue_depth = a.max_queue_depth.max(depth);
+                    a.first.get_or_insert(batch_start);
+                    for (env, resp) in chunk.iter().zip(responses) {
+                        let ok = matches!(resp.get("ok"), Some(Json::Bool(true)));
+                        counters.requests += 1;
+                        a.requests += 1;
+                        match &env.req {
+                            Ok(ServeRequest::Count { .. }) => a.count_requests += 1,
+                            Ok(ServeRequest::Score { .. }) => a.score_requests += 1,
+                            Ok(ServeRequest::Shutdown { .. }) => {
+                                shutdown.get_or_insert_with(Instant::now);
+                            }
+                            _ => {}
+                        }
+                        if !ok {
+                            counters.errors += 1;
+                            a.errors += 1;
+                        }
+                        a.note_latency(env.t0.elapsed());
+                        s.wbuf.extend_from_slice(resp.dump().as_bytes());
+                        s.wbuf.push(b'\n');
+                    }
+                    a.last = Some(Instant::now());
+                }
+            }
+            if fail.is_none() && !s.wbuf.is_empty() {
+                match write_some(&mut s.stream, &s.wbuf) {
+                    Ok(n) => {
+                        if n > 0 {
+                            s.wbuf.drain(..n);
+                            progressed = true;
+                        }
+                    }
+                    Err(e) => fail = Some(format!("write: {e}")),
+                }
+            }
+            if let Some(msg) = fail {
+                counters.session_failures.push((s.id, msg));
+                sessions.remove(i);
+                continue;
+            }
+            if s.read_closed && s.rbuf.is_empty() && s.wbuf.is_empty() {
+                sessions.remove(i);
+                continue;
+            }
+            i += 1;
+        }
+        if let Some(t) = shutdown {
+            let draining = sessions.iter().any(|s| !s.wbuf.is_empty());
+            if !draining || t.elapsed() > Duration::from_secs(5) {
+                return Ok(());
+            }
+        }
+        if !progressed {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+}
+
+/// TCP mode: serve every connected client concurrently through the
+/// non-blocking [`event_loop`] (all sessions share the store, so each
+/// micro-batch sees the newest published generation).  Runs until a
+/// client sends `{"op": "shutdown"}`, then quiesces the delta stream
+/// and returns the summary.
 pub fn serve_listener(
     engine: ServeEngine,
     listener: std::net::TcpListener,
@@ -370,45 +724,28 @@ pub fn serve_listener(
     let store = engine.store();
     let feed = opts.feed.clone();
     let pause = opts.delta_pause;
+    let log = opts.publish_log.clone();
+    let repl = opts.repl.clone();
+    let workers = resolve_workers(opts.workers);
     let mut acc: BTreeMap<u64, GenAccum> = BTreeMap::new();
-    let mut requests = 0u64;
-    let mut errors = 0u64;
+    let mut counters = ServeCounters::default();
 
     let (engine, publishes, publish_failures, session) =
         std::thread::scope(|scope| {
-            let delta = scope.spawn(move || drive_deltas(engine, feed, pause));
-            let session = (|| -> Result<()> {
-                loop {
-                    let (stream, peer) = listener.accept()?;
-                    // one client's I/O failure (disconnect mid-response,
-                    // broken clone) ends that session, not the server —
-                    // and the counters live outside the session, so
-                    // whatever it served before failing still counts
-                    let ended = (|| -> Result<bool> {
-                        let reader = std::io::BufReader::new(stream.try_clone()?);
-                        let mut writer = stream;
-                        session_loop(
-                            &store,
-                            reader,
-                            &mut writer,
-                            opts,
-                            &mut acc,
-                            &mut requests,
-                            &mut errors,
-                        )
-                    })();
-                    match ended {
-                        Ok(shutdown) => {
-                            if shutdown {
-                                return Ok(());
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("serve: session {peer} failed: {e}; still accepting");
-                        }
-                    }
-                }
-            })();
+            let delta =
+                scope.spawn(move || drive_deltas(engine, feed, pause, log, repl));
+            let session = event_loop(
+                &listener,
+                opts,
+                &mut |batch| {
+                    // one generation per micro-batch, same as stdin mode
+                    let gen = store.load();
+                    let responses = dispatch(&gen, batch, workers, opts);
+                    (gen.epoch, responses)
+                },
+                &mut acc,
+                &mut counters,
+            );
             let (engine, publishes, failures) =
                 delta.join().expect("delta writer panicked");
             (engine, publishes, failures, session)
@@ -417,23 +754,34 @@ pub fn serve_listener(
 
     let rows = acc
         .into_iter()
-        .map(|(epoch, a)| a.into_row(&opts.database, epoch, resolve_workers(opts.workers)))
+        .map(|(epoch, a)| {
+            let mut r = a.into_row(&opts.database, epoch, workers);
+            r.sessions = counters.sessions;
+            r
+        })
         .collect();
     Ok(ServeSummary {
         rows,
-        requests,
-        errors,
+        requests: counters.requests,
+        errors: counters.errors,
         publishes,
         publish_failures,
         final_epoch: engine.epoch(),
         final_digest: engine.digest(),
+        sessions: counters.sessions,
+        session_failures: counters.session_failures,
     })
 }
 
 /// Answer one micro-batch from one generation: requests fan out over
-/// the reader pool (families routed by cache-key hash, stats and parse
-/// errors answered on worker 0), responses in request order.
-fn dispatch(gen: &Generation, batch: &[Envelope], workers: usize) -> Vec<Json> {
+/// the reader pool (families routed by cache-key hash; stats, partials
+/// and parse errors answered on worker 0), responses in request order.
+fn dispatch(
+    gen: &Generation,
+    batch: &[Envelope],
+    workers: usize,
+    opts: &ServeOptions,
+) -> Vec<Json> {
     let mut assignment: Vec<Vec<usize>> = vec![Vec::new(); workers.max(1)];
     for (i, env) in batch.iter().enumerate() {
         let w = match &env.req {
@@ -445,16 +793,37 @@ fn dispatch(gen: &Generation, batch: &[Envelope], workers: usize) -> Vec<Json> {
         };
         assignment[w].push(i);
     }
-    let run = pool::run_shards(batch, &assignment, |_, env| Ok(answer(gen, env)));
+    let run =
+        pool::run_shards(batch, &assignment, |_, env| Ok(answer(gen, env, opts)));
     run.results
         .into_iter()
         .map(|r| r.expect("answer() is infallible"))
         .collect()
 }
 
+/// Role-specific stats fields: shard coordinates on shards, replication
+/// lag/health on followers.  Empty on a plain single-process server, so
+/// its stats responses keep the historical byte shape.
+fn stats_extras(opts: &ServeOptions) -> Vec<(&'static str, Json)> {
+    let mut extra = Vec::new();
+    if let Some(cfg) = opts.shard {
+        extra.push(("of", Json::num(cfg.of as f64)));
+        extra.push(("role", Json::str("shard")));
+        extra.push(("shard", Json::num(cfg.index as f64)));
+    }
+    if let Some(h) = &opts.repl {
+        extra.push(("applied_epoch", Json::num(h.applied_epoch() as f64)));
+        extra.push(("healthy", Json::Bool(h.healthy())));
+        extra.push(("lag", Json::num(h.lag() as f64)));
+        extra.push(("leader_epoch", Json::num(h.leader_epoch() as f64)));
+        extra.push(("role", Json::str("follower")));
+    }
+    extra
+}
+
 /// Serve one request from one generation; failures become in-protocol
 /// error responses (the session keeps going).
-fn answer(gen: &Generation, env: &Envelope) -> Json {
+fn answer(gen: &Generation, env: &Envelope, opts: &ServeOptions) -> Json {
     match &env.req {
         Err(e) => error_response(0, e),
         Ok(ServeRequest::Count { id, vars, ctx }) => {
@@ -469,10 +838,17 @@ fn answer(gen: &Generation, env: &Envelope) -> Json {
                 Err(e) => error_response(*id, &e),
             }
         }
-        Ok(ServeRequest::Stats { id }) => {
-            stats_response(*id, gen.epoch, gen.resident_bytes(), gen.digest())
-        }
+        Ok(ServeRequest::Stats { id }) => stats_response_ext(
+            *id,
+            gen.epoch,
+            gen.resident_bytes(),
+            gen.digest(),
+            stats_extras(opts),
+        ),
         Ok(ServeRequest::Shutdown { id }) => shutdown_response(*id, gen.epoch),
+        Ok(req @ (ServeRequest::PCount { .. } | ServeRequest::PMarginal { .. })) => {
+            crate::serve::shard::answer_partial(gen, opts.shard, req)
+        }
     }
 }
 
@@ -718,6 +1094,113 @@ mod tests {
         // ok stats, the parse error, and the response that hit the pipe
         assert_eq!(requests, 3);
         assert_eq!(errors, 1);
+    }
+
+    #[test]
+    fn adversarial_sessions_fail_typed_while_others_keep_serving() {
+        use std::io::{BufRead, BufReader, Read, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            // session 0: an oversized request line (no newline) — the
+            // event loop must drop the session, not the server.  The
+            // write may hit a broken pipe once the server gives up.
+            let mut bad = std::net::TcpStream::connect(addr).unwrap();
+            let blob = vec![b'x'; MAX_LINE + 4096];
+            let _ = bad.write_all(&blob);
+            let _ = bad.flush();
+            // wait for the server to close the session: EOF proves the
+            // failure was recorded before anything else happens
+            let mut sink = Vec::new();
+            let _ = bad.read_to_end(&mut sink);
+            assert!(sink.is_empty(), "a half line never gets a response");
+
+            // session 1: a truncated request, then disconnect
+            // mid-request — the tail is parsed, answered with a typed
+            // per-request error, and the session ends cleanly
+            let mut trunc = std::net::TcpStream::connect(addr).unwrap();
+            trunc.write_all(b"{\"op\": \"sta").unwrap();
+            trunc.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut line = String::new();
+            BufReader::new(&trunc).read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+
+            // session 2: valid / garbage / valid interleaved, then
+            // shutdown — every line is answered in order
+            let mut good = std::net::TcpStream::connect(addr).unwrap();
+            writeln!(good, "{}", ServeRequest::Stats { id: 1 }.to_json().dump())
+                .unwrap();
+            writeln!(good, "no json here").unwrap();
+            writeln!(good, "{}", ServeRequest::Stats { id: 2 }.to_json().dump())
+                .unwrap();
+            writeln!(good, "{}", ServeRequest::Shutdown { id: 3 }.to_json().dump())
+                .unwrap();
+            good.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut oks = Vec::new();
+            let mut r = BufReader::new(&good);
+            for _ in 0..4 {
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let j = Json::parse(&line).unwrap();
+                oks.push(j.get("ok") == Some(&Json::Bool(true)));
+            }
+            oks
+        });
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        let summary = serve_listener(engine(), listener, &opts).unwrap();
+        let oks = client.join().unwrap();
+        assert_eq!(oks, vec![true, false, true, true]);
+        assert_eq!(summary.sessions, 3, "every accepted session is accounted");
+        assert_eq!(summary.session_failures.len(), 1);
+        assert!(
+            summary.session_failures[0].1.contains("exceeds"),
+            "{:?}",
+            summary.session_failures
+        );
+        // truncated tail + garbage line are per-request errors, not
+        // session failures
+        assert_eq!(summary.requests, 5);
+        assert_eq!(summary.errors, 2);
+    }
+
+    #[test]
+    fn fragmented_request_lines_reassemble_across_reads() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = std::net::TcpStream::connect(addr).unwrap();
+            // one request drip-fed over three writes with pauses: the
+            // session buffer must splice it back together
+            let line = ServeRequest::Stats { id: 5 }.to_json().dump() + "\n";
+            let bytes = line.as_bytes();
+            for chunk in bytes.chunks(bytes.len() / 3 + 1) {
+                s.write_all(chunk).unwrap();
+                s.flush().unwrap();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            writeln!(s, "{}", ServeRequest::Shutdown { id: 6 }.to_json().dump())
+                .unwrap();
+            s.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut ids = Vec::new();
+            let mut r = BufReader::new(&s);
+            for _ in 0..2 {
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+                ids.push(j.get("id").unwrap().as_f64().unwrap() as u64);
+            }
+            ids
+        });
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        let summary = serve_listener(engine(), listener, &opts).unwrap();
+        assert_eq!(client.join().unwrap(), vec![5, 6]);
+        assert_eq!(summary.requests, 2);
+        assert_eq!(summary.errors, 0);
+        assert_eq!(summary.sessions, 1);
+        assert!(summary.session_failures.is_empty());
     }
 
     #[test]

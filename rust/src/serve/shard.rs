@@ -1,0 +1,146 @@
+//! Shard role of scale-out serving: a `relcount shard` process is a
+//! full serve engine (own generations, own `--data-dir` recovery) that
+//! additionally answers the shard-internal `pcount`/`pmarginal` ops
+//! with **partial tables** — only the join rows / entities whose anchor
+//! the shard owns under [`entity_shard`].  The router merges the `of`
+//! partials; positives sum integer-exactly because anchor ownership
+//! partitions every chain's join rows (DESIGN.md §3i).
+//!
+//! Every shard of a topology must be loaded from the **same database**
+//! (and fed the same deltas): the slice is a property of the query, not
+//! of the loaded data, so recovery, churn and replication all compose
+//! with sharding unchanged.
+
+use crate::db::query::{groupby_entity_filtered, partial_chain_ct, JoinStats};
+use crate::error::Error;
+use crate::serve::protocol::{error_response, partial_response, ServeRequest};
+use crate::serve::snapshot::Generation;
+use crate::util::json::Json;
+
+/// Which slice of the entity-hash partition this process owns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardConfig {
+    /// This shard's index, `0 <= index < of`.
+    pub index: usize,
+    /// Total shard count of the topology.
+    pub of: usize,
+}
+
+/// Answer a `pcount`/`pmarginal` request against one generation.  A
+/// process without a shard role rejects them typed (`Error::Route`), so
+/// a misrouted partial request can never be mistaken for a full count.
+/// The response carries the partial table's own digest plus the
+/// generation digest (`state`) the router cross-checks across shards.
+pub fn answer_partial(
+    gen: &Generation,
+    cfg: Option<ShardConfig>,
+    req: &ServeRequest,
+) -> Json {
+    let cfg = match cfg {
+        Some(c) => c,
+        None => {
+            return error_response(
+                req.id(),
+                &Error::Route(
+                    "this server is not a shard (start it with \
+                     `relcount shard --index I --of K`)"
+                        .into(),
+                ),
+            )
+        }
+    };
+    let db = gen.db();
+    match req {
+        ServeRequest::PCount { id, chain, vars } => {
+            let mut stats = JoinStats::default();
+            match partial_chain_ct(db, chain, vars, cfg.index, cfg.of, &mut stats) {
+                Ok(ct) => partial_response(
+                    *id,
+                    gen.epoch,
+                    gen.digest(),
+                    cfg.index,
+                    cfg.of,
+                    &ct,
+                ),
+                Err(e) => error_response(*id, &e),
+            }
+        }
+        ServeRequest::PMarginal { id, et, vars } => {
+            match groupby_entity_filtered(db, *et, vars, Some((cfg.index, cfg.of))) {
+                Ok(ct) => partial_response(
+                    *id,
+                    gen.epoch,
+                    gen.digest(),
+                    cfg.index,
+                    cfg.of,
+                    &ct,
+                ),
+                Err(e) => error_response(*id, &e),
+            }
+        }
+        other => error_response(
+            other.id(),
+            &Error::Route("answer_partial: not a partial request".into()),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ct::cttable::CtTable;
+    use crate::db::fixtures::university_db;
+    use crate::db::query::positive_chain_ct;
+    use crate::delta::MaintainConfig;
+    use crate::meta::rvar::RVar;
+    use crate::serve::engine::ServeEngine;
+
+    fn generation() -> std::sync::Arc<Generation> {
+        ServeEngine::build(university_db(), MaintainConfig::default())
+            .unwrap()
+            .store()
+            .load()
+    }
+
+    #[test]
+    fn non_shards_reject_partial_requests_typed() {
+        let gen = generation();
+        let req = ServeRequest::PCount { id: 3, chain: vec![0], vars: vec![] };
+        let resp = answer_partial(&gen, None, &req);
+        assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+        let msg = resp.get("error").unwrap().as_str().unwrap().to_string();
+        assert!(msg.starts_with("route error:"), "{msg}");
+    }
+
+    #[test]
+    fn shard_partials_reassemble_the_full_table() {
+        let gen = generation();
+        let db = university_db();
+        let vars = vec![RVar::EntityAttr { et: 1, attr: 0 }];
+        let mut stats = JoinStats::default();
+        let full = positive_chain_ct(&db, &[0, 1], &vars, &mut stats).unwrap();
+        let mut acc = CtTable::new(&db.schema, vars.clone()).unwrap();
+        for index in 0..2usize {
+            let req = ServeRequest::PCount {
+                id: index as u64,
+                chain: vec![0, 1],
+                vars: vars.clone(),
+            };
+            let cfg = ShardConfig { index, of: 2 };
+            let resp = answer_partial(&gen, Some(cfg), &req);
+            assert_eq!(resp.get("ok"), Some(&Json::Bool(true)), "{resp:?}");
+            assert_eq!(resp.get("shard").unwrap().as_f64(), Some(index as f64));
+            // rebuild the wire rows and fold them in, as the router does
+            for row in resp.get("rows").unwrap().as_arr().unwrap() {
+                let cells = row.as_arr().unwrap();
+                let vals: Vec<u32> = cells[..cells.len() - 1]
+                    .iter()
+                    .map(|v| v.as_f64().unwrap() as u32)
+                    .collect();
+                let count = cells[cells.len() - 1].as_f64().unwrap() as i128;
+                acc.add(&vals, count).unwrap();
+            }
+        }
+        assert_eq!(acc.digest(), full.digest());
+    }
+}

@@ -1,0 +1,339 @@
+//! The scale-out serving contract, end to end through the public API:
+//! a shard + router topology on localhost must answer every count and
+//! score request **byte-identically** to single-process `relcount
+//! serve` — for every index backend and join kernel — a dead shard must
+//! surface as a typed `route error` (never a wrong count), a restarted
+//! shard must be picked back up transparently, and a replication
+//! follower must publish the leader's epochs bit-identically (with
+//! digest tampering detected, not absorbed).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use relcount::datagen::{
+    churn::churn_batch, generator::generate, presets::preset,
+};
+use relcount::db::catalog::Database;
+use relcount::db::index::Backend;
+use relcount::db::wcoj::JoinKernel;
+use relcount::delta::{DeltaOp, MaintainConfig};
+use relcount::serve::replicate::{follow, ReplRecord};
+use relcount::serve::{
+    enumerate_requests, run_router, run_serve, serve_listener, ReplHandle,
+    ReplLog, Replicator, ServeEngine, ServeOptions, ServeRequest,
+    ShardConfig,
+};
+use relcount::util::json::Json;
+
+fn build_db(backend: Backend, kernel: JoinKernel) -> Database {
+    let mut db = generate(&preset("uw", 0.05, 42).unwrap()).unwrap();
+    db.set_backend(backend).unwrap();
+    db.set_kernel(kernel);
+    db
+}
+
+type ShardHandle =
+    std::thread::JoinHandle<relcount::Result<relcount::serve::ServeSummary>>;
+
+fn spawn_shard(
+    db: Database,
+    listener: TcpListener,
+    index: usize,
+    of: usize,
+    workers: usize,
+) -> ShardHandle {
+    std::thread::spawn(move || {
+        let engine = ServeEngine::build(db, MaintainConfig::default())?;
+        let opts = ServeOptions {
+            database: "uw".into(),
+            workers,
+            shard: Some(ShardConfig { index, of }),
+            ..Default::default()
+        };
+        serve_listener(engine, listener, &opts)
+    })
+}
+
+/// Send a shutdown request straight to a serving address and wait for
+/// the acknowledgement.
+fn shut_down(addr: &str) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    writeln!(s, "{}", ServeRequest::Shutdown { id: 0 }.to_json().dump()).unwrap();
+    let mut line = String::new();
+    BufReader::new(&s).read_line(&mut line).unwrap();
+}
+
+/// Stream `input` through a TCP session at `addr` and return the raw
+/// response bytes.
+fn stream_through(addr: &str, input: &str) -> Vec<u8> {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(input.as_bytes()).unwrap();
+    s.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = Vec::new();
+    std::io::Read::read_to_end(&mut BufReader::new(&s), &mut out).unwrap();
+    out
+}
+
+#[test]
+fn routed_serving_is_byte_identical_across_backends_and_kernels() {
+    for backend in [Backend::Csr, Backend::Ccsr] {
+        for kernel in [JoinKernel::Chain, JoinKernel::Wcoj] {
+            let db = build_db(backend, kernel);
+            let reqs = enumerate_requests(&db, 3, 12).unwrap();
+            let mut input: String =
+                reqs.iter().map(|r| r.to_json().dump() + "\n").collect();
+            input.push_str(
+                &(ServeRequest::Shutdown { id: 99 }.to_json().dump() + "\n"),
+            );
+
+            // single-process reference over the identical request stream
+            let engine =
+                ServeEngine::build(db.clone(), MaintainConfig::default())
+                    .unwrap();
+            let mut reference = Vec::new();
+            let opts =
+                ServeOptions { database: "uw".into(), ..Default::default() };
+            run_serve(
+                engine,
+                std::io::Cursor::new(input.clone()),
+                &mut reference,
+                &opts,
+            )
+            .unwrap();
+
+            // 2-shard + router topology on localhost
+            let shard_listeners: Vec<TcpListener> = (0..2)
+                .map(|_| TcpListener::bind("127.0.0.1:0").unwrap())
+                .collect();
+            let addrs: Vec<String> = shard_listeners
+                .iter()
+                .map(|l| l.local_addr().unwrap().to_string())
+                .collect();
+            let shards: Vec<ShardHandle> = shard_listeners
+                .into_iter()
+                .enumerate()
+                .map(|(i, l)| spawn_shard(db.clone(), l, i, 2, 1))
+                .collect();
+            let router_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let router_addr =
+                router_listener.local_addr().unwrap().to_string();
+            let router_db = db.clone();
+            let router_addrs = addrs.clone();
+            let router = std::thread::spawn(move || {
+                let opts = ServeOptions {
+                    database: "uw".into(),
+                    ..Default::default()
+                };
+                run_router(router_db, &router_addrs, router_listener, &opts)
+            });
+
+            let routed = stream_through(&router_addr, &input);
+            let summary = router.join().unwrap().unwrap();
+            for addr in &addrs {
+                shut_down(addr);
+            }
+            for h in shards {
+                let s = h.join().unwrap().unwrap();
+                assert_eq!(s.errors, 0, "{backend:?}/{kernel:?} shard errors");
+            }
+
+            assert_eq!(
+                routed, reference,
+                "routed responses diverged from single-process serving \
+                 ({backend:?}/{kernel:?})"
+            );
+            assert_eq!(summary.errors, 0);
+            assert_eq!(summary.requests as usize, reqs.len() + 1);
+            assert!(summary.rows.iter().all(|r| r.shards == 2));
+        }
+    }
+}
+
+#[test]
+fn dead_shard_is_a_typed_route_error_and_a_restart_recovers() {
+    let db = build_db(Backend::Csr, JoinKernel::Chain);
+    let req = enumerate_requests(&db, 3, 1).unwrap().remove(0);
+
+    let l0 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr0 = l0.local_addr().unwrap().to_string();
+    let l1 = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr1 = l1.local_addr().unwrap().to_string();
+    let shard0 = spawn_shard(db.clone(), l0, 0, 2, 1);
+    let shard1 = spawn_shard(db.clone(), l1, 1, 2, 1);
+
+    let router_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let router_addr = router_listener.local_addr().unwrap().to_string();
+    let router_db = db.clone();
+    let router_addrs = vec![addr0.clone(), addr1.clone()];
+    let router = std::thread::spawn(move || {
+        let opts = ServeOptions { database: "uw".into(), ..Default::default() };
+        run_router(router_db, &router_addrs, router_listener, &opts)
+    });
+
+    let mut client = TcpStream::connect(&router_addr).unwrap();
+    let mut reader = BufReader::new(client.try_clone().unwrap());
+    let ask = |client: &mut TcpStream,
+                   reader: &mut BufReader<TcpStream>,
+                   line: &str| {
+        writeln!(client, "{line}").unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        Json::parse(&resp).unwrap()
+    };
+    let line = req.to_json().dump();
+
+    // healthy topology answers
+    let before = ask(&mut client, &mut reader, &line);
+    assert_eq!(before.get("ok"), Some(&Json::Bool(true)));
+
+    // kill shard 0: the router must answer with a typed route error,
+    // not a partial (wrong) count
+    shut_down(&addr0);
+    shard0.join().unwrap().unwrap();
+    let during = ask(&mut client, &mut reader, &line);
+    assert_eq!(during.get("ok"), Some(&Json::Bool(false)));
+    let msg = during.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.starts_with("route error: shard "), "{msg}");
+
+    // restart the shard on the same address (fresh engine, same state):
+    // the router's per-request reconnect picks it back up
+    let l0b = TcpListener::bind(&addr0).unwrap();
+    let shard0b = spawn_shard(db.clone(), l0b, 0, 2, 1);
+    let after = ask(&mut client, &mut reader, &line);
+    assert_eq!(after.get("ok"), Some(&Json::Bool(true)), "{after:?}");
+    assert_eq!(after.get("digest"), before.get("digest"));
+    assert_eq!(after.get("rows"), before.get("rows"));
+
+    let shutdown_line = ServeRequest::Shutdown { id: 9 }.to_json().dump();
+    let done = ask(&mut client, &mut reader, &shutdown_line);
+    assert_eq!(done.get("ok"), Some(&Json::Bool(true)));
+    drop(client);
+    let summary = router.join().unwrap().unwrap();
+    shut_down(&addr0);
+    shut_down(&addr1);
+    shard0b.join().unwrap().unwrap();
+    shard1.join().unwrap().unwrap();
+
+    assert_eq!(summary.requests, 4);
+    assert_eq!(summary.errors, 1, "exactly the dead-shard request failed");
+}
+
+#[test]
+fn follower_publishes_the_leaders_epochs_bit_identically() {
+    let db = build_db(Backend::Csr, JoinKernel::Chain);
+    let mut leader =
+        ServeEngine::build(db.clone(), MaintainConfig::default()).unwrap();
+    let log = Arc::new(ReplLog::new());
+    for i in 0..3u64 {
+        let batch = churn_batch(leader.db(), 0.1, 7 ^ (i + 1));
+        leader.apply_publish(&batch).unwrap();
+        log.append(ReplRecord {
+            epoch: leader.epoch(),
+            digest: leader.digest(),
+            batch,
+        });
+    }
+    log.close();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let acceptor = Replicator::spawn(listener, log.clone()).unwrap();
+
+    let mut follower =
+        ServeEngine::build(db, MaintainConfig::default()).unwrap();
+    let handle = ReplHandle::new();
+    let (publishes, failures) =
+        follow(&addr, &mut follower, Some(&handle), Duration::from_millis(1));
+    acceptor.shutdown();
+
+    assert!(failures.is_empty(), "{failures:?}");
+    assert_eq!(publishes, 3);
+    assert_eq!(follower.epoch(), leader.epoch());
+    assert_eq!(
+        follower.digest(),
+        leader.digest(),
+        "follower must republish the leader's generations bit-identically"
+    );
+    assert_eq!(handle.applied_epoch(), 3);
+    assert_eq!(handle.lag(), 0);
+    assert!(handle.healthy());
+}
+
+#[test]
+fn follower_detects_a_tampered_leader_digest() {
+    let db = build_db(Backend::Csr, JoinKernel::Chain);
+    let mut leader =
+        ServeEngine::build(db.clone(), MaintainConfig::default()).unwrap();
+    let batch = churn_batch(leader.db(), 0.1, 13);
+    leader.apply_publish(&batch).unwrap();
+    let log = Arc::new(ReplLog::new());
+    log.append(ReplRecord {
+        epoch: leader.epoch(),
+        digest: leader.digest() ^ 1, // bit-flip the claimed digest
+        batch,
+    });
+    log.close();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let acceptor = Replicator::spawn(listener, log.clone()).unwrap();
+
+    let mut follower =
+        ServeEngine::build(db, MaintainConfig::default()).unwrap();
+    let handle = ReplHandle::new();
+    let (_publishes, failures) =
+        follow(&addr, &mut follower, Some(&handle), Duration::ZERO);
+    acceptor.shutdown();
+
+    assert!(!failures.is_empty(), "digest divergence must be reported");
+    assert!(!handle.healthy(), "divergence marks the follower unhealthy");
+}
+
+#[test]
+fn bad_partial_requests_are_rejected_typed() {
+    // a plain server (no shard role) must reject partial ops, and a
+    // shard must reject a slice identity that isn't its own
+    let db = build_db(Backend::Csr, JoinKernel::Chain);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let plain = std::thread::spawn({
+        let db = db.clone();
+        move || {
+            let engine =
+                ServeEngine::build(db, MaintainConfig::default()).unwrap();
+            let opts =
+                ServeOptions { database: "uw".into(), ..Default::default() };
+            serve_listener(engine, listener, &opts)
+        }
+    });
+    let req =
+        ServeRequest::PCount { id: 1, chain: vec![], vars: vec![] }.to_json();
+    let mut s = TcpStream::connect(&addr).unwrap();
+    writeln!(s, "{}", req.dump()).unwrap();
+    let mut line = String::new();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    r.read_line(&mut line).unwrap();
+    let resp = Json::parse(&line).unwrap();
+    assert_eq!(resp.get("ok"), Some(&Json::Bool(false)));
+    let msg = resp.get("error").and_then(Json::as_str).unwrap();
+    assert!(msg.contains("shard"), "{msg}");
+    writeln!(s, "{}", ServeRequest::Shutdown { id: 2 }.to_json().dump())
+        .unwrap();
+    line.clear();
+    r.read_line(&mut line).unwrap();
+    let summary = plain.join().unwrap().unwrap();
+    assert_eq!(summary.errors, 1);
+
+    // sanity: a delete that never existed still fails loudly end to end
+    // (the shard engines share the serve engine's publish machinery)
+    let mut engine =
+        ServeEngine::build(db, MaintainConfig::default()).unwrap();
+    let bogus = relcount::delta::DeltaBatch::new(vec![DeltaOp::DeleteLink {
+        rel: 0,
+        from: u32::MAX,
+        to: u32::MAX,
+    }]);
+    assert!(engine.apply_publish(&bogus).is_err());
+}

@@ -19,6 +19,8 @@
 #   RELCOUNT_WORKERS_LIST  scaling sweep worker list   (default 1,2)
 #   RELCOUNT_WORKERS       churn/serve worker count    (default 2)
 #   RELCOUNT_CHURN_FRACS   churn batch fractions       (default 0.01,0.05)
+#   RELCOUNT_SHARDS        exp serve shard count       (default 2)
+#   RELCOUNT_SESSIONS      exp serve client sessions   (default 2)
 #
 # Keep the defaults small: CI runs this on shared runners, and the goal
 # is a comparable trajectory, not absolute numbers.
@@ -37,15 +39,16 @@ cd "$ROOT/rust"
 # overridable by the RELCOUNT_* variables below.
 case "${RELCOUNT_BENCH_SCALE:-}" in
     ci)
-        D_SCALE=0.02 D_PRESETS=uw D_BUDGET=120 D_WLIST=1,2 D_WORKERS=2 D_CHURN=0.05
+        D_SCALE=0.02 D_PRESETS=uw D_BUDGET=120 D_WLIST=1,2 D_WORKERS=2 \
+            D_CHURN=0.05 D_SHARDS=2 D_SESSIONS=2
         ;;
     full)
         D_SCALE=0.1 D_PRESETS=uw,mondial,hepatitis D_BUDGET=300 D_WLIST=1,2,4 \
-            D_WORKERS=4 D_CHURN=0.01,0.05
+            D_WORKERS=4 D_CHURN=0.01,0.05 D_SHARDS=2 D_SESSIONS=4
         ;;
     "")
         D_SCALE=0.03 D_PRESETS=uw,mondial D_BUDGET=120 D_WLIST=1,2 D_WORKERS=2 \
-            D_CHURN=0.01,0.05
+            D_CHURN=0.01,0.05 D_SHARDS=2 D_SESSIONS=2
         ;;
     *)
         echo "bench.sh: RELCOUNT_BENCH_SCALE expects ci|full (or unset), got '${RELCOUNT_BENCH_SCALE}'" >&2
@@ -59,9 +62,12 @@ BUDGET_S="${RELCOUNT_BUDGET_S:-$D_BUDGET}"
 WORKERS_LIST="${RELCOUNT_WORKERS_LIST:-$D_WLIST}"
 WORKERS="${RELCOUNT_WORKERS:-$D_WORKERS}"
 CHURN_FRACS="${RELCOUNT_CHURN_FRACS:-$D_CHURN}"
+SHARDS="${RELCOUNT_SHARDS:-$D_SHARDS}"
+SESSIONS="${RELCOUNT_SESSIONS:-$D_SESSIONS}"
 
 echo "bench.sh: scale=$SCALE presets=$PRESETS budget=${BUDGET_S}s" \
-     "workers-list=$WORKERS_LIST workers=$WORKERS churn=$CHURN_FRACS"
+     "workers-list=$WORKERS_LIST workers=$WORKERS churn=$CHURN_FRACS" \
+     "shards=$SHARDS sessions=$SESSIONS"
 
 cargo build --release --quiet
 
@@ -84,6 +90,7 @@ echo "== exp serve (scale $SCALE, presets $PRESETS) =="
 ./target/release/relcount exp serve \
     --scale "$SCALE" --presets "$PRESETS" --budget-s "$BUDGET_S" \
     --workers "$WORKERS" --churn-frac 0.05 --churn-steps 3 \
+    --shards "$SHARDS" --sessions "$SESSIONS" \
     --json "$ROOT/BENCH_serve.json"
 
 echo "== exp persist (scale $SCALE, presets $PRESETS) =="

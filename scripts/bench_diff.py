@@ -38,7 +38,10 @@ HEADLINES = {
     "BENCH_scaling.json": (("database", "strategy", "workers"), ("wall_s",)),
     "BENCH_planner.json": (("database", "pre_fraction", "workers"), ("total_s",)),
     "BENCH_churn.json": (("database", "churn_frac", "workers"), ("speedup",)),
-    "BENCH_serve.json": (("database", "workers"), ("throughput_rps",)),
+    "BENCH_serve.json": (
+        ("database", "workers", "shards"),
+        ("throughput_rps",),
+    ),
     "BENCH_persist.json": (("database", "workers"), ("save_s", "load_s")),
     "BENCH_estimator.json": (
         ("database", "mode"),

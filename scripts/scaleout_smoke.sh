@@ -1,0 +1,234 @@
+#!/usr/bin/env bash
+# Scale-out serving smoke (the scaleout-smoke CI lane).
+#
+# Proves, on a live localhost topology of real processes:
+#
+#   1. Equivalence matrix — a 2-shard + router topology answers the
+#      deterministic request workload BYTE-IDENTICALLY to single-process
+#      `relcount serve`, for every {csr,ccsr} x {chain,wcoj} x {1,4
+#      workers} cell.  The router merges digest-checked partial counts
+#      (positives sum across shards; the Möbius completion runs once at
+#      the router), so a diff here is a partition or merge bug.
+#   2. Chaos — SIGKILL one shard mid-session: the very next routed
+#      request must answer a typed `route error` (never a wrong count),
+#      and a shard restarted from its --data-dir on the same port is
+#      picked back up by the router's per-request reconnect, answering
+#      bit-identically to before the kill.
+#   3. Replication — a follower consuming the leader's publish stream
+#      (--replicate-port / --follow) must publish every generation
+#      bit-identically: both processes report the same
+#      `final epoch N digest D` line and the follower reports lag 0,
+#      healthy.
+#
+#   scripts/scaleout_smoke.sh            # build + run everything
+set -euo pipefail
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "scaleout_smoke.sh: ERROR: cargo not found on PATH." >&2
+    exit 1
+fi
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$ROOT/rust"
+cargo build --release --quiet
+BIN=./target/release/relcount
+
+TMP="$(mktemp -d /tmp/scaleout.XXXXXX)"
+PIDS=()
+cleanup() {
+    for pid in "${PIDS[@]:-}"; do
+        kill -9 "$pid" 2>/dev/null || true
+    done
+    rm -rf "$TMP"
+}
+trap cleanup EXIT
+
+# Tiny socket client: everything the smoke needs to talk to the
+# topology (wait for a process to announce its port, stream a request
+# file through one session, one-shot request/response).
+cat > "$TMP/client.py" <<'PYEOF'
+import re
+import socket
+import sys
+import time
+
+
+def waitaddr(log, prefix):
+    """Print the host:port a process announced on stderr, waiting for
+    the line `<prefix>... on <host:port> ...` to appear."""
+    deadline = time.time() + 60
+    while time.time() < deadline:
+        try:
+            with open(log) as f:
+                for line in f:
+                    if line.startswith(prefix):
+                        m = re.search(r"on (\d+\.\d+\.\d+\.\d+:\d+)", line)
+                        if m:
+                            print(m.group(1))
+                            return 0
+        except FileNotFoundError:
+            pass
+        time.sleep(0.05)
+    sys.stderr.write(f"timed out waiting for {prefix!r} in {log}\n")
+    return 1
+
+
+def connect(addr):
+    host, port = addr.rsplit(":", 1)
+    return socket.create_connection((host, int(port)), timeout=60)
+
+
+def stream(addr, infile, outfile):
+    """One session: send every request line, half-close, read all
+    responses."""
+    with connect(addr) as s, open(infile, "rb") as f:
+        s.sendall(f.read())
+        s.shutdown(socket.SHUT_WR)
+        out = b""
+        while True:
+            chunk = s.recv(65536)
+            if not chunk:
+                break
+            out += chunk
+    with open(outfile, "wb") as f:
+        f.write(out)
+    return 0
+
+
+def ask(addr, line):
+    """One request, one response line, printed to stdout.  Never raises
+    on transport errors -- the caller greps the response."""
+    with connect(addr) as s:
+        s.sendall(line.encode() + b"\n")
+        r = s.makefile("rb")
+        resp = r.readline()
+    sys.stdout.write(resp.decode())
+    return 0
+
+
+cmd = sys.argv[1]
+if cmd == "waitaddr":
+    sys.exit(waitaddr(sys.argv[2], sys.argv[3]))
+elif cmd == "stream":
+    sys.exit(stream(sys.argv[2], sys.argv[3], sys.argv[4]))
+elif cmd == "ask":
+    sys.exit(ask(sys.argv[2], sys.argv[3]))
+sys.stderr.write(f"unknown command {cmd!r}\n")
+sys.exit(2)
+PYEOF
+CLIENT="python3 $TMP/client.py"
+
+SHUTDOWN='{"op": "shutdown", "id": 0}'
+
+echo "== setup: database + deterministic workload =="
+"$BIN" gen --preset uw --scale 0.02 --out "$TMP/db"
+"$BIN" gen-requests --db "$TMP/db" --limit 40 --out "$TMP/reqs.jsonl"
+cp "$TMP/reqs.jsonl" "$TMP/reqs_shut.jsonl"
+echo "$SHUTDOWN" >> "$TMP/reqs_shut.jsonl"
+
+echo "== 1. equivalence matrix: routed vs single-process =="
+for b in csr ccsr; do
+  for k in chain wcoj; do
+    # single-process reference for this backend/kernel cell (responses
+    # are worker-invariant; the serve-smoke lane proves that)
+    "$BIN" serve --db "$TMP/db" --backend "$b" --kernel "$k" \
+        --requests "$TMP/reqs_shut.jsonl" \
+        > "$TMP/single-$b-$k.jsonl" 2> /dev/null
+    for w in 1 4; do
+      cell="$b-$k-w$w"
+      for i in 0 1; do
+        "$BIN" shard --db "$TMP/db" --backend "$b" --kernel "$k" \
+            --workers "$w" --index "$i" --of 2 --port 0 \
+            > /dev/null 2> "$TMP/shard$i-$cell.log" &
+        PIDS+=($!)
+      done
+      A0="$($CLIENT waitaddr "$TMP/shard0-$cell.log" 'serving ')"
+      A1="$($CLIENT waitaddr "$TMP/shard1-$cell.log" 'serving ')"
+      "$BIN" route --db "$TMP/db" --backend "$b" --kernel "$k" \
+          --shards "$A0,$A1" --port 0 \
+          > /dev/null 2> "$TMP/router-$cell.log" &
+      ROUTER_PID=$!
+      PIDS+=($ROUTER_PID)
+      AR="$($CLIENT waitaddr "$TMP/router-$cell.log" 'routing ')"
+      $CLIENT stream "$AR" "$TMP/reqs_shut.jsonl" "$TMP/routed-$cell.jsonl"
+      wait "$ROUTER_PID"
+      $CLIENT ask "$A0" "$SHUTDOWN" > /dev/null
+      $CLIENT ask "$A1" "$SHUTDOWN" > /dev/null
+      diff "$TMP/single-$b-$k.jsonl" "$TMP/routed-$cell.jsonl"
+      grep -q ' requests (0 errors)' "$TMP/router-$cell.log"
+      echo "ok $cell: routed responses byte-identical to single-process"
+    done
+  done
+done
+
+echo "== 2. chaos: SIGKILL a shard, typed error, data-dir recovery =="
+DD="$TMP/shard0-data"
+"$BIN" shard --db "$TMP/db" --data-dir "$DD" --index 0 --of 2 --port 0 \
+    > /dev/null 2> "$TMP/chaos-shard0.log" &
+S0_PID=$!
+PIDS+=($S0_PID)
+"$BIN" shard --db "$TMP/db" --index 1 --of 2 --port 0 \
+    > /dev/null 2> "$TMP/chaos-shard1.log" &
+PIDS+=($!)
+A0="$($CLIENT waitaddr "$TMP/chaos-shard0.log" 'serving ')"
+A1="$($CLIENT waitaddr "$TMP/chaos-shard1.log" 'serving ')"
+"$BIN" route --db "$TMP/db" --shards "$A0,$A1" --port 0 \
+    > /dev/null 2> "$TMP/chaos-router.log" &
+PIDS+=($!)
+AR="$($CLIENT waitaddr "$TMP/chaos-router.log" 'routing ')"
+REQ="$(head -1 "$TMP/reqs.jsonl")"
+
+before="$($CLIENT ask "$AR" "$REQ")"
+echo "$before" | grep -q '"ok":true'
+
+kill -9 "$S0_PID"
+wait "$S0_PID" 2>/dev/null || true
+during="$($CLIENT ask "$AR" "$REQ")"
+echo "$during" | grep -q '"ok":false'
+echo "$during" | grep -q 'route error: shard'
+echo "ok chaos: dead shard answered as a typed route error"
+
+# restart shard 0 from its data-dir alone, on the same port the router
+# still dials
+PORT0="${A0##*:}"
+"$BIN" shard --data-dir "$DD" --index 0 --of 2 --port "$PORT0" \
+    > /dev/null 2> "$TMP/chaos-shard0b.log" &
+PIDS+=($!)
+$CLIENT waitaddr "$TMP/chaos-shard0b.log" 'serving ' > /dev/null
+grep -q 'recovering state from' "$TMP/chaos-shard0b.log"
+after="$($CLIENT ask "$AR" "$REQ")"
+test "$after" = "$before"
+echo "ok chaos: restarted shard recovered; answer bit-identical to pre-kill"
+$CLIENT ask "$AR" "$SHUTDOWN" > /dev/null
+$CLIENT ask "$A0" "$SHUTDOWN" > /dev/null
+$CLIENT ask "$A1" "$SHUTDOWN" > /dev/null
+
+echo "== 3. replication: follower republishes the leader bit-identically =="
+"$BIN" serve --db "$TMP/db" --port 0 --replicate-port 0 \
+    --churn 0.05 --churn-steps 3 --delta-pause-ms 10 --seed 7 \
+    > /dev/null 2> "$TMP/leader.log" &
+PIDS+=($!)
+AL="$($CLIENT waitaddr "$TMP/leader.log" 'serving ')"
+ALR="$($CLIENT waitaddr "$TMP/leader.log" 'replicating ')"
+"$BIN" serve --db "$TMP/db" --port 0 --follow "$ALR" \
+    > /dev/null 2> "$TMP/follower.log" &
+FOLLOWER_PID=$!
+PIDS+=($FOLLOWER_PID)
+AF="$($CLIENT waitaddr "$TMP/follower.log" 'serving ')"
+# shutting the follower down waits internally for the replication
+# stream to drain, so its summary always covers every leader epoch
+$CLIENT ask "$AF" "$SHUTDOWN" > /dev/null
+wait "$FOLLOWER_PID"
+$CLIENT ask "$AL" "$SHUTDOWN" > /dev/null
+
+leader_line="$(grep -o 'final epoch [0-9]* digest [0-9a-f]*' "$TMP/leader.log")"
+follower_line="$(grep -o 'final epoch [0-9]* digest [0-9a-f]*' "$TMP/follower.log")"
+echo "leader:   $leader_line"
+echo "follower: $follower_line"
+test -n "$leader_line"
+test "$leader_line" = "$follower_line"
+grep -q 'replica: applied epoch 3 of leader epoch 3 (lag 0, healthy)' \
+    "$TMP/follower.log"
+echo "ok replication: follower published the leader's epochs bit-identically"
+
+echo "scaleout_smoke.sh: all gates passed"

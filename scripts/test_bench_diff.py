@@ -26,7 +26,9 @@ ALL_FILES = {
     "BENCH_scaling.json": [{"database": "uw", "strategy": "HYBRID", "workers": 2, "wall_s": 1.0}],
     "BENCH_planner.json": [{"database": "uw", "pre_fraction": 0.5, "workers": 2, "total_s": 2.0}],
     "BENCH_churn.json": [{"database": "uw", "churn_frac": 0.01, "workers": 2, "speedup": 3.0}],
-    "BENCH_serve.json": [{"database": "uw", "workers": 2, "throughput_rps": 1000.0}],
+    "BENCH_serve.json": [
+        {"database": "uw", "workers": 2, "shards": 0, "throughput_rps": 1000.0}
+    ],
     "BENCH_persist.json": [{"database": "uw", "workers": 2, "save_s": 0.1, "load_s": 0.1}],
     "BENCH_estimator.json": [
         {"database": "uw", "mode": "default", "q_p50": 1.0, "regret_saved_frac": 0.0}
